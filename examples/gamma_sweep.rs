@@ -1,0 +1,46 @@
+//! Fig.-1 style inference-gamma sweep on an (optionally briefly trained)
+//! ViT: evaluates the family of ODE solvers `gamma in [-0.5, 0.5]` through
+//! the fused `model_infer` executable (gamma is a runtime input — one AOT
+//! artifact serves the whole sweep).
+//!
+//! ```bash
+//! cargo run --release --example gamma_sweep -- [train_steps]
+//! ```
+
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::Trainer;
+use bdia::experiments::dataset_for;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("steps"))
+        .unwrap_or(30);
+    for (label, mode) in [
+        ("ViT(vanilla)", TrainMode::Vanilla),
+        ("BDIA-ViT", TrainMode::BdiaReversible),
+    ] {
+        let cfg = TrainConfig {
+            model: "vit_s10".into(),
+            mode,
+            dataset: "synth_cifar10".into(),
+            steps,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(cfg.clone())?;
+        let ds = dataset_for(&tr.rt, &cfg)?;
+        for step in 0..steps {
+            let b = ds.train_batch(step);
+            tr.train_step(&b)?;
+        }
+        println!("\n{label} after {steps} steps — val acc by inference gamma:");
+        for g in [-0.5f32, -0.4, -0.3, -0.2, -0.1, 0.0, 0.1, 0.2, 0.3, 0.4, 0.5] {
+            let (_, acc) = tr.evaluate(ds.as_ref(), 2, g)?;
+            let bar = "#".repeat((acc * 60.0) as usize);
+            println!("  gamma {g:>4.1}  acc {acc:.3}  {bar}");
+        }
+    }
+    Ok(())
+}

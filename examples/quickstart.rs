@@ -1,0 +1,68 @@
+//! Quickstart: train a BDIA-ViT for a handful of steps with exact bit-level
+//! reversible (online) back-propagation, and show the memory story.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::Trainer;
+use bdia::experiments::dataset_for;
+use bdia::metrics::fmt_bytes;
+use bdia::metrics::memory::MemoryModel;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let cfg = TrainConfig {
+        model: "vit_s10".into(),
+        mode: TrainMode::BdiaReversible, // the paper's system
+        gamma_mag: 0.5,                  // gamma ~ Uniform{+0.5, -0.5}
+        dataset: "synth_cifar10".into(),
+        steps: 20,
+        eval_every: 10,
+        eval_batches: 2,
+        log_every: 1,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg.clone())?;
+    println!(
+        "BDIA-ViT: {} params, K={} blocks, batch={}",
+        trainer.n_params(),
+        trainer.rt.manifest.dims.n_blocks,
+        trainer.rt.manifest.dims.batch
+    );
+
+    // what reversibility buys (the paper's Table-1 comparison, analytically)
+    for mode in [TrainMode::Vanilla, TrainMode::BdiaReversible] {
+        let mm = MemoryModel::new(
+            mode,
+            trainer.family,
+            &trainer.rt.manifest.dims,
+            trainer.n_params() * 4,
+        );
+        println!(
+            "  peak training memory [{:>8}]: {:>10}  (activations {}, side info {})",
+            mode.name(),
+            fmt_bytes(mm.peak_total()),
+            fmt_bytes(mm.stored_activations()),
+            fmt_bytes(mm.side_info()),
+        );
+    }
+
+    let ds = dataset_for(&trainer.rt, &cfg)?;
+    for step in 0..cfg.steps {
+        let batch = ds.train_batch(step);
+        let stats = trainer.train_step(&batch)?;
+        println!(
+            "step {:>3}  loss {:.4}  acc {:.3}  |g| {:.3}  stored acts {}",
+            step,
+            stats.loss,
+            stats.acc,
+            stats.grad_norm,
+            fmt_bytes(stats.stored_activation_bytes)
+        );
+    }
+    let (vl, va) = trainer.evaluate(ds.as_ref(), 2, 0.0)?;
+    println!("validation (gamma=0, standard architecture): loss {vl:.4} acc {va:.3}");
+    Ok(())
+}

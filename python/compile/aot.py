@@ -1,0 +1,469 @@
+"""AOT export: lower L2 model components to HLO text bundles for Rust.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One bundle per ``ModelConfig``: ``artifacts/<name>/*.hlo.txt`` plus
+``manifest.json`` describing, for every executable, the parameter-group
+layout and data inputs/outputs, and for every parameter group the leaf
+(name, shape, init) list in flatten order.  The Rust ``model`` module mirrors
+this layout exactly — it is the ABI between the layers.
+
+Conventions (DESIGN.md §8):
+  * executable inputs = [param leaves in manifest order] ++ [data inputs]
+  * every executable returns a tuple (lowered with return_tuple=True)
+  * ``block_vjp`` returns (h, dx, dparams...) — the primal h is reused by the
+    coordinator for the eq.-24 reconstruction, saving a forward call.
+
+Incremental: a bundle is skipped when its manifest's ``source_hash`` matches
+the current config + compile-package sources (``make artifacts`` is a no-op
+on an unchanged tree).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.model import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Config registry — every config used by experiments/examples/tests.
+# ---------------------------------------------------------------------------
+# Scaled for the single-CPU PJRT testbed (DESIGN.md §5 records the
+# substitutions: paper depths kept, widths reduced).
+
+CONFIGS: Dict[str, ModelConfig] = {}
+
+
+def _reg(cfg: ModelConfig) -> ModelConfig:
+    CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+# Paper §5.1: ViT with K=6 blocks on CIFAR10/100 (batch 128 in the paper;
+# 64 here), Fig. 1 / Fig. 3 / Table 1 / Table 2.
+_reg(ModelConfig(name="vit_s10", family="vit", d_model=64, n_heads=4,
+                 n_blocks=6, mlp_ratio=2, batch=64, n_classes=10))
+_reg(ModelConfig(name="vit_s100", family="vit", d_model=64, n_heads=4,
+                 n_blocks=6, mlp_ratio=2, batch=64, n_classes=100))
+# Paper §5.3: (nano)GPT2 with 12 blocks, tiny-corpus overfitting (Fig. 5),
+# and the Fig.-2 float-reversibility error-accumulation demo.
+_reg(ModelConfig(name="gpt_tiny", family="gpt", d_model=64, n_heads=4,
+                 n_blocks=12, mlp_ratio=2, batch=16, seq=64, vocab=96))
+# Paper §5.2: en->fr translation, 6+6 encoder/decoder blocks (Fig. 4).
+_reg(ModelConfig(name="encdec_mt", family="encdec", d_model=64, n_heads=4,
+                 n_blocks=6, n_enc_blocks=6, mlp_ratio=2, batch=32,
+                 seq=24, seq_src=24, vocab=64))
+# End-to-end driver: largest feasible LM on this testbed (examples/e2e_train).
+_reg(ModelConfig(name="gpt_e2e", family="gpt", d_model=256, n_heads=8,
+                 n_blocks=8, mlp_ratio=4, batch=8, seq=128, vocab=96))
+# Tiny smoke configs for cargo integration tests (fast to build & run).
+_reg(ModelConfig(name="smoke_vit", family="vit", d_model=16, n_heads=2,
+                 n_blocks=3, mlp_ratio=2, batch=2, image_size=8, patch=4,
+                 n_classes=4))
+_reg(ModelConfig(name="smoke_gpt", family="gpt", d_model=16, n_heads=2,
+                 n_blocks=4, mlp_ratio=2, batch=2, seq=8, vocab=11))
+_reg(ModelConfig(name="smoke_encdec", family="encdec", d_model=16, n_heads=2,
+                 n_blocks=2, n_enc_blocks=2, mlp_ratio=2, batch=2, seq=6,
+                 seq_src=6, vocab=11))
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _leaf_sds(spec):
+    return [_sds(shape) for _, shape, _ in M.flatten_spec(spec)]
+
+
+def _dtype_str(d) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+class BundleWriter:
+    """Collects executables + manifest for one config."""
+
+    def __init__(self, cfg: ModelConfig, out_dir: pathlib.Path):
+        self.cfg = cfg
+        self.dir = out_dir / cfg.name
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.manifest = {
+            "name": cfg.name,
+            "family": cfg.family,
+            "dims": cfg.dims_dict(),
+            "param_groups": {},
+            "executables": {},
+        }
+
+    def add_group(self, group: str, spec) -> None:
+        self.manifest["param_groups"][group] = [
+            {"name": n, "shape": list(s), "init": i}
+            for n, s, i in M.flatten_spec(spec)]
+
+    def export(self, exec_name: str, fn, param_layout: List[List],
+               data_inputs: List, example_args: Sequence) -> None:
+        """param_layout: [[group, count], ...]; data_inputs: [(name, sds)]."""
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{exec_name}.hlo.txt"
+        (self.dir / fname).write_text(text)
+        outs = jax.eval_shape(fn, *example_args)
+        outs_flat = jax.tree_util.tree_leaves(outs)
+        self.manifest["executables"][exec_name] = {
+            "file": fname,
+            "param_layout": [[g, int(c)] for g, c in param_layout],
+            "data_inputs": [{"name": n, "dtype": _dtype_str(s.dtype),
+                             "shape": list(s.shape)} for n, s in data_inputs],
+            "outputs": [{"dtype": _dtype_str(o.dtype),
+                         "shape": list(o.shape)} for o in outs_flat],
+        }
+        print(f"  [{self.cfg.name}] {exec_name}: "
+              f"{len(text) // 1024}KB, {len(outs_flat)} outputs")
+
+    def finish(self, source_hash: str) -> None:
+        self.manifest["source_hash"] = source_hash
+        (self.dir / "manifest.json").write_text(
+            json.dumps(self.manifest, indent=1))
+
+
+# ---------------------------------------------------------------------------
+# Per-family export
+# ---------------------------------------------------------------------------
+
+def _inputs_sds(cfg: ModelConfig):
+    if cfg.family == "vit":
+        return _sds((cfg.batch, cfg.channels, cfg.image_size, cfg.image_size))
+    return _sds((cfg.batch, cfg.seq), jnp.int32)
+
+
+def _labels_sds(cfg: ModelConfig):
+    if cfg.family == "vit":
+        return _sds((cfg.batch,), jnp.int32)
+    return _sds((cfg.batch, cfg.seq), jnp.int32)
+
+
+def _x_sds(cfg: ModelConfig):
+    return _sds((cfg.batch, cfg.tokens, cfg.d_model))
+
+
+def export_bundle(cfg: ModelConfig, out_dir: pathlib.Path,
+                  source_hash: str) -> None:
+    w = BundleWriter(cfg, out_dir)
+    causal = M.is_causal(cfg)
+    cross = cfg.family == "encdec"
+
+    espec = M.embed_spec(cfg)
+    bspec = M.block_spec(cfg, cross=cross)
+    hspec = M.head_spec(cfg)
+    w.add_group("embed", espec)
+    w.add_group("block", bspec)
+    w.add_group("head", hspec)
+
+    ne = len(M.flatten_spec(espec))
+    nb = len(M.flatten_spec(bspec))
+    nh = len(M.flatten_spec(hspec))
+
+    x_s = _x_sds(cfg)
+    in_s = _inputs_sds(cfg)
+    lab_s = _labels_sds(cfg)
+    mem_s = None
+    if cross:
+        eespec = M.enc_embed_spec(cfg)
+        ebspec = M.block_spec(cfg, cross=False)
+        w.add_group("enc_embed", eespec)
+        w.add_group("enc_block", ebspec)
+        nee = len(M.flatten_spec(eespec))
+        neb = len(M.flatten_spec(ebspec))
+        mem_s = _sds((cfg.batch, cfg.seq_src, cfg.d_model))
+        src_s = _sds((cfg.batch, cfg.seq_src), jnp.int32)
+
+    # ---- embed ----
+    def embed_fwd(*args):
+        p = M.unflatten(espec, args[:ne])
+        return (M.embed_apply(p, args[ne], cfg),)
+
+    w.export("embed_fwd", embed_fwd, [["embed", 1]],
+             [("inputs", in_s)], [*_leaf_sds(espec), in_s])
+
+    def embed_vjp(*args):
+        leaves, inputs, g = args[:ne], args[ne], args[ne + 1]
+        def f(lv):
+            return M.embed_apply(M.unflatten(espec, lv), inputs, cfg)
+        _, pull = jax.vjp(f, leaves)
+        (dl,) = pull(g)
+        return tuple(dl)
+
+    w.export("embed_vjp", embed_vjp, [["embed", 1]],
+             [("inputs", in_s), ("g", x_s)],
+             [*_leaf_sds(espec), in_s, x_s])
+
+    # ---- block (decoder/self block) ----
+    def block_fwd(*args):
+        p = M.unflatten(bspec, args[:nb])
+        if cross:
+            return (M.block_h(p, args[nb], cfg, causal, mem=args[nb + 1]),)
+        return (M.block_h(p, args[nb], cfg, causal),)
+
+    bf_data = [("x", x_s)] + ([("mem", mem_s)] if cross else [])
+    w.export("block_fwd", block_fwd, [["block", 1]], bf_data,
+             [*_leaf_sds(bspec)] + [s for _, s in bf_data])
+
+    def block_vjp(*args):
+        leaves = args[:nb]
+        if cross:
+            x, mem, g = args[nb], args[nb + 1], args[nb + 2]
+            def f(lv, xx, mm):
+                return M.block_h(M.unflatten(bspec, lv), xx, cfg, causal, mm)
+            h, pull = jax.vjp(f, leaves, x, mem)
+            dl, dx, dmem = pull(g)
+            return (h, dx, dmem, *dl)
+        x, g = args[nb], args[nb + 1]
+        def f(lv, xx):
+            return M.block_h(M.unflatten(bspec, lv), xx, cfg, causal)
+        h, pull = jax.vjp(f, leaves, x)
+        dl, dx = pull(g)
+        return (h, dx, *dl)
+
+    bv_data = bf_data + [("g", x_s)]
+    w.export("block_vjp", block_vjp, [["block", 1]], bv_data,
+             [*_leaf_sds(bspec)] + [s for _, s in bv_data])
+
+    # ---- RevViT [19] sub-branch executables (vit/gpt families) ----
+    # Two-stream reversible baseline: F = attn(ln1(.)), G = ffn(ln2(.)).
+    # Same "block" param group (keep_unused pads the untouched leaves with
+    # zero grads), so the Rust side reuses the group layout unchanged.
+    if not cross:
+        def attn_fwd(*args):
+            p = M.unflatten(bspec, args[:nb])
+            xn = M.layer_norm(p["ln1"], args[nb])
+            return (M.attention(p["attn"], xn, xn, cfg.n_heads, causal),)
+
+        w.export("attn_fwd", attn_fwd, [["block", 1]], [("x", x_s)],
+                 [*_leaf_sds(bspec), x_s])
+
+        def attn_vjp(*args):
+            leaves, x, g = args[:nb], args[nb], args[nb + 1]
+            def f(lv, xx):
+                p = M.unflatten(bspec, lv)
+                xn = M.layer_norm(p["ln1"], xx)
+                return M.attention(p["attn"], xn, xn, cfg.n_heads, causal)
+            out, pull = jax.vjp(f, leaves, x)
+            dl, dx = pull(g)
+            return (out, dx, *dl)
+
+        w.export("attn_vjp", attn_vjp, [["block", 1]],
+                 [("x", x_s), ("g", x_s)], [*_leaf_sds(bspec), x_s, x_s])
+
+        def ffn_fwd(*args):
+            p = M.unflatten(bspec, args[:nb])
+            return (M.ffn(p["ffn"], M.layer_norm(p["ln2"], args[nb])),)
+
+        w.export("ffn_fwd", ffn_fwd, [["block", 1]], [("x", x_s)],
+                 [*_leaf_sds(bspec), x_s])
+
+        def ffn_vjp(*args):
+            leaves, x, g = args[:nb], args[nb], args[nb + 1]
+            def f(lv, xx):
+                p = M.unflatten(bspec, lv)
+                return M.ffn(p["ffn"], M.layer_norm(p["ln2"], xx))
+            out, pull = jax.vjp(f, leaves, x)
+            dl, dx = pull(g)
+            return (out, dx, *dl)
+
+        w.export("ffn_vjp", ffn_vjp, [["block", 1]],
+                 [("x", x_s), ("g", x_s)], [*_leaf_sds(bspec), x_s, x_s])
+
+    # ---- head + loss ----
+    def head_loss_fwd(*args):
+        p = M.unflatten(hspec, args[:nh])
+        return M.head_loss_apply(p, args[nh], args[nh + 1], cfg)
+
+    w.export("head_loss_fwd", head_loss_fwd, [["head", 1]],
+             [("x", x_s), ("labels", lab_s)],
+             [*_leaf_sds(hspec), x_s, lab_s])
+
+    def head_loss_vjp(*args):
+        leaves, x, labels = args[:nh], args[nh], args[nh + 1]
+        def f(lv, xx):
+            loss, _ = M.head_loss_apply(M.unflatten(hspec, lv), xx, labels, cfg)
+            return loss
+        _, pull = jax.vjp(f, leaves, x)
+        dl, dx = pull(jnp.float32(1.0))
+        return (dx, *dl)
+
+    w.export("head_loss_vjp", head_loss_vjp, [["head", 1]],
+             [("x", x_s), ("labels", lab_s)],
+             [*_leaf_sds(hspec), x_s, lab_s])
+
+    # ---- encoder side (encdec only) ----
+    if cross:
+        def enc_embed_fwd(*args):
+            p = M.unflatten(eespec, args[:nee])
+            return (M.embed_apply(p, args[nee], cfg),)
+
+        w.export("enc_embed_fwd", enc_embed_fwd, [["enc_embed", 1]],
+                 [("inputs", src_s)], [*_leaf_sds(eespec), src_s])
+
+        def enc_embed_vjp(*args):
+            leaves, inputs, g = args[:nee], args[nee], args[nee + 1]
+            def f(lv):
+                return M.embed_apply(M.unflatten(eespec, lv), inputs, cfg)
+            _, pull = jax.vjp(f, leaves)
+            (dl,) = pull(g)
+            return tuple(dl)
+
+        w.export("enc_embed_vjp", enc_embed_vjp, [["enc_embed", 1]],
+                 [("inputs", src_s), ("g", mem_s)],
+                 [*_leaf_sds(eespec), src_s, mem_s])
+
+        def enc_block_fwd(*args):
+            p = M.unflatten(ebspec, args[:neb])
+            return (M.block_h(p, args[neb], cfg, causal=False),)
+
+        w.export("enc_block_fwd", enc_block_fwd, [["enc_block", 1]],
+                 [("x", mem_s)], [*_leaf_sds(ebspec), mem_s])
+
+        def enc_block_vjp(*args):
+            leaves, x, g = args[:neb], args[neb], args[neb + 1]
+            def f(lv, xx):
+                return M.block_h(M.unflatten(ebspec, lv), xx, cfg, causal=False)
+            h, pull = jax.vjp(f, leaves, x)
+            dl, dx = pull(g)
+            return (h, dx, *dl)
+
+        w.export("enc_block_vjp", enc_block_vjp, [["enc_block", 1]],
+                 [("x", mem_s), ("g", mem_s)],
+                 [*_leaf_sds(ebspec), mem_s, mem_s])
+
+    # ---- fused quantized inference (eqs. 18-22; gamma is a runtime input) ----
+    K = cfg.n_blocks
+    gamma_s = _sds((), jnp.float32)
+
+    if cross:
+        Ke = cfg.n_enc_blocks
+        layout = [["enc_embed", 1], ["enc_block", Ke], ["embed", 1],
+                  ["block", K], ["head", 1]]
+
+        def model_infer(*args):
+            i = 0
+            pee = M.unflatten(eespec, args[i:i + nee]); i += nee
+            pebs = []
+            for _ in range(Ke):
+                pebs.append(M.unflatten(ebspec, args[i:i + neb])); i += neb
+            pe = M.unflatten(espec, args[i:i + ne]); i += ne
+            pbs = []
+            for _ in range(K):
+                pbs.append(M.unflatten(bspec, args[i:i + nb])); i += nb
+            ph = M.unflatten(hspec, args[i:i + nh]); i += nh
+            src, tgt, labels, gamma = (args[i], args[i + 1], args[i + 2],
+                                       args[i + 3])
+            params = {"enc_embed": pee, "enc_blocks": pebs, "embed": pe,
+                      "blocks": pbs, "head": ph}
+            return M.model_infer(params, (src, tgt), labels, gamma, cfg)
+
+        leaf_args = (_leaf_sds(eespec)
+                     + [s for _ in range(Ke) for s in _leaf_sds(ebspec)]
+                     + _leaf_sds(espec)
+                     + [s for _ in range(K) for s in _leaf_sds(bspec)]
+                     + _leaf_sds(hspec))
+        w.export("model_infer", model_infer, layout,
+                 [("src", src_s), ("tgt", in_s), ("labels", lab_s),
+                  ("gamma", gamma_s)],
+                 [*leaf_args, src_s, in_s, lab_s, gamma_s])
+    else:
+        layout = [["embed", 1], ["block", K], ["head", 1]]
+
+        def model_infer(*args):
+            i = 0
+            pe = M.unflatten(espec, args[i:i + ne]); i += ne
+            pbs = []
+            for _ in range(K):
+                pbs.append(M.unflatten(bspec, args[i:i + nb])); i += nb
+            ph = M.unflatten(hspec, args[i:i + nh]); i += nh
+            inputs, labels, gamma = args[i], args[i + 1], args[i + 2]
+            params = {"embed": pe, "blocks": pbs, "head": ph}
+            return M.model_infer(params, inputs, labels, gamma, cfg)
+
+        leaf_args = (_leaf_sds(espec)
+                     + [s for _ in range(K) for s in _leaf_sds(bspec)]
+                     + _leaf_sds(hspec))
+        w.export("model_infer", model_infer, layout,
+                 [("inputs", in_s), ("labels", lab_s), ("gamma", gamma_s)],
+                 [*leaf_args, in_s, lab_s, gamma_s])
+
+    w.finish(source_hash)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def compute_source_hash(cfg: ModelConfig) -> str:
+    h = hashlib.sha256()
+    h.update(json.dumps(cfg.dims_dict(), sort_keys=True).encode())
+    pkg = pathlib.Path(__file__).parent
+    for f in sorted(pkg.rglob("*.py")):
+        h.update(f.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def bundle_up_to_date(cfg: ModelConfig, out_dir: pathlib.Path,
+                      source_hash: str) -> bool:
+    mf = out_dir / cfg.name / "manifest.json"
+    if not mf.exists():
+        return False
+    try:
+        manifest = json.loads(mf.read_text())
+    except json.JSONDecodeError:
+        return False
+    if manifest.get("source_hash") != source_hash:
+        return False
+    return all((out_dir / cfg.name / e["file"]).exists()
+               for e in manifest["executables"].values())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-export HLO bundles")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default=None,
+                    help="export only this config (default: all)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    names = [args.config] if args.config else list(CONFIGS)
+    for name in names:
+        cfg = CONFIGS[name]
+        src_hash = compute_source_hash(cfg)
+        if not args.force and bundle_up_to_date(cfg, out_dir, src_hash):
+            print(f"  [{name}] up to date")
+            continue
+        print(f"  [{name}] exporting...")
+        export_bundle(cfg, out_dir, src_hash)
+    print("artifacts OK")
+
+
+if __name__ == "__main__":
+    main()

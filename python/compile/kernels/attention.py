@@ -1,0 +1,193 @@
+"""L1 Pallas kernel: fused multi-head attention (flash-style).
+
+The paper's compute hot-spot is the transformer block; its inner hot loop is
+``softmax(Q K^T / sqrt(d)) V``.  This module implements it as a Pallas kernel
+tiled for VMEM residency:
+
+  * grid = (BH, num_q_tiles): one program per (batch*head, q-tile),
+  * the q-tile (``block_q x d_head``) stays resident in VMEM,
+  * K/V are scanned in ``block_k``-sized tiles with a running
+    (max, denominator, accumulator) softmax — the flash-attention recurrence —
+    so the working set is O(block_q * d_head + block_k * d_head), never O(T^2).
+
+On a real TPU the two contractions map onto the MXU (bf16); in this repo the
+kernel runs under ``interpret=True`` so it lowers to plain HLO that the CPU
+PJRT client can execute (see DESIGN.md §3 Hardware adaptation).
+
+Autodiff: ``pallas_call`` has no automatic VJP, so ``mha`` carries a
+``jax.custom_vjp`` whose backward pass is the closed-form attention gradient
+(pure jnp, fused by XLA).  The backward runs inside the AOT ``block_vjp``
+executable, never in Python at train time.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float, causal: bool,
+                  block_k: int, seq_k: int):
+    """One (batch*head, q-tile) program of the flash-attention forward."""
+    q = q_ref[0, ...]  # (block_q, d)
+    block_q, d = q.shape
+    q_tile = pl.program_id(1)
+    q_off = q_tile * block_q
+
+    num_kv = pl.cdiv(seq_k, block_k)
+
+    def body(kv_i, carry):
+        o_acc, m_i, l_i = carry
+        k = pl.load(k_ref, (0, pl.dslice(kv_i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kv_i * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k.T) * sm_scale  # (block_q, block_k)
+        if causal:
+            # global row/col indices of this tile pair
+            rows = q_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kv_i * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        o_new = o_acc * alpha[:, None] + jnp.dot(p, v)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+
+    if causal:
+        # tiles strictly above the diagonal contribute nothing; skip them.
+        num_kv_here = jnp.minimum(
+            num_kv, pl.cdiv(q_off + block_q, block_k)).astype(jnp.int32)
+    else:
+        num_kv_here = num_kv
+
+    o, m, l = jax.lax.fori_loop(0, num_kv_here, body, (o0, m0, l0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (cannot happen causally)
+    o_ref[0, ...] = (o / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (keeps tiles aligned, no padding)."""
+    b = min(pref, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fused_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float, causal: bool):
+    """Single-program variant: the whole (BH, T, d) workload in one kernel.
+
+    Under interpret=True the tiled grid lowers to a `fori_loop` of tiny
+    dynamic-slice matmuls, which the CPU backend executes ~35x slower than
+    one batched contraction (measured; EXPERIMENTS.md §Perf).  This variant
+    keeps the kernel abstraction but lets XLA-CPU see fused batched einsums.
+    On a real TPU the tiled variant is the right choice (VMEM residency);
+    the AOT exporter picks per target — see DESIGN.md §Hardware-Adaptation.
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * sm_scale
+    if causal:
+        tq, tk = q.shape[1], k.shape[1]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        s = jnp.where((rows >= cols)[None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bqk,bkd->bqd", p, v) / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = False,
+                    block_q: int = 64, block_k: int = 64,
+                    interpret: bool = True, tiled: bool = False):
+    """Fused attention over folded heads.
+
+    Args:
+      q: (BH, Tq, d) float32.
+      k, v: (BH, Tk, d) float32.
+      causal: apply the autoregressive mask (requires Tq == Tk).
+      tiled: use the per-(head, q-tile) grid with the flash running-softmax
+        recurrence — the TPU/VMEM-shaped schedule.  False (default) runs the
+        single-program fused variant, which is what the CPU-PJRT AOT bundles
+        ship (see `_fused_kernel` for why).
+    Returns:
+      (BH, Tq, d) float32.
+    """
+    bh, tq, d = q.shape
+    _, tk, _ = k.shape
+    if causal and tq != tk:
+        raise ValueError("causal attention requires Tq == Tk")
+    sm_scale = 1.0 / math.sqrt(d)
+    if not tiled:
+        kernel = functools.partial(_fused_kernel, sm_scale=sm_scale, causal=causal)
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((bh, tq, d), jnp.float32),
+            interpret=interpret,
+        )(q, k, v)
+    bq = _pick_block(tq, block_q)
+    bk = _pick_block(tk, block_k)
+    kernel = functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                               block_k=bk, seq_k=tk)
+    grid = (bh, tq // bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tk, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, tk, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: forward = pallas kernel, backward = closed-form attention grad.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def mha(q, k, v, causal: bool = False):
+    """Differentiable fused attention. Shapes as ``flash_attention``."""
+    return flash_attention(q, k, v, causal=causal)
+
+
+def _mha_fwd(q, k, v, causal):
+    o = flash_attention(q, k, v, causal=causal)
+    return o, (q, k, v)
+
+
+def _mha_bwd(causal, res, do):
+    q, k, v = res
+    d = q.shape[-1]
+    sm_scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * sm_scale
+    if causal:
+        tq = q.shape[1]
+        mask = jnp.tril(jnp.ones((tq, tq), bool))
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bqk,bqd->bkd", p, do)
+    dp = jnp.einsum("bqd,bkd->bqk", do, v)
+    # softmax jacobian: dS = P * (dP - rowsum(dP * P))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = ds * sm_scale
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q)
+    return dq, dk, dv
+
+
+mha.defvjp(_mha_fwd, _mha_bwd)

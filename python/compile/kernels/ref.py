@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(``python/tests/test_kernel.py``) asserts allclose between kernel and oracle
+across shape/dtype sweeps (hypothesis).  This is the CORE correctness signal
+for Layer 1.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, causal: bool = False):
+    """softmax(Q K^T / sqrt(d)) V over folded heads: (BH, T, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / math.sqrt(d)
+    if causal:
+        tq, tk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((tq, tk), bool))
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def quantize_ref(y, lbits: int = 9):
+    """Q_l[y] (eq. 17), round-half-away-from-zero on the 2^-l grid."""
+    scale = 2.0 ** lbits
+    scaled = y * scale
+    r = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    return r / scale
+
+
+def residual_quant_update_ref(x, h, lbits: int = 9):
+    """x_{k+1} = Q_l[x + h] (eq. 22)."""
+    return quantize_ref(x + h, lbits)
+
+
+def bdia_quant_combine_ref(x_prev, x, h, gamma, lbits: int = 9):
+    """Constant-gamma quantized BDIA combine (inference form of eq. 21)."""
+    return (quantize_ref(gamma * x_prev, lbits)
+            + quantize_ref((1.0 - gamma) * x + (1.0 + gamma) * h, lbits))
+
+
+def parity_bits_ref(x, lbits: int = 9):
+    """s[m] = |x[m]/2^-l| mod 2 (eq. 20) for on-grid x."""
+    scale = 2.0 ** lbits
+    n = jnp.sign(x * scale) * jnp.floor(jnp.abs(x * scale) + 0.5)
+    return jnp.abs(jnp.mod(n, 2.0))

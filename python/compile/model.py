@@ -1,0 +1,314 @@
+"""L2: the paper's models in JAX — ViT, GPT-style LM, encoder-decoder.
+
+Everything here is *build-time only*.  ``aot.py`` lowers per-component
+functions (embed / block / head+loss, forward and VJP) to HLO text that the
+Rust coordinator executes at train time.  The unit of compilation is the
+transformer-block **residual branch**
+
+    h_k(x) = f_k(x) + g_k(x + f_k(x))                          (paper eq. 4)
+
+because the BDIA combine (eq. 10/21) — with its per-sample gamma randomness
+and exact fixed-point arithmetic — lives in the Rust coordinator, not in HLO
+(DESIGN.md §2).
+
+Parameters are nested dicts; ``flatten_spec`` fixes a deterministic leaf
+order (jax's sorted-dict-key traversal) that the manifest records and the
+Rust ``model::ParamStore`` mirrors.
+
+The attention hot loop is the Pallas kernel ``kernels.attention.mha`` (L1);
+the quantized inference update is ``kernels.bdia_update`` (eqs. 17/21/22).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import mha
+from compile.kernels.bdia_update import bdia_quant_combine, residual_quant_update
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/hyperparameter bundle; one AOT artifact set per config."""
+    name: str
+    family: str            # "vit" | "gpt" | "encdec"
+    d_model: int
+    n_heads: int
+    n_blocks: int          # K (decoder depth for encdec)
+    mlp_ratio: int = 4
+    batch: int = 32
+    lbits: int = 9         # fixed-point grid 2^-l (paper: l = 9)
+    # vit
+    image_size: int = 32
+    patch: int = 4
+    channels: int = 3
+    n_classes: int = 10
+    # lm / encdec
+    seq: int = 64          # decoder/LM sequence length
+    vocab: int = 96
+    # encdec
+    n_enc_blocks: int = 0
+    seq_src: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def tokens(self) -> int:
+        """Sequence length seen by the (decoder) blocks."""
+        if self.family == "vit":
+            return (self.image_size // self.patch) ** 2 + 1  # + cls token
+        return self.seq
+
+    def dims_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation specs
+# ---------------------------------------------------------------------------
+# Init happens in Rust (seeds owned by the coordinator); Python only records
+# the distribution of every leaf in the manifest: "normal:<std>", "zeros",
+# "ones".
+
+INIT_NORMAL = "normal:0.02"
+INIT_ZEROS = "zeros"
+INIT_ONES = "ones"
+
+
+def _ln_spec(d: int):
+    return {"scale": ((d,), INIT_ONES), "bias": ((d,), INIT_ZEROS)}
+
+
+def _attn_spec(d: int):
+    return {
+        "wq": ((d, d), INIT_NORMAL), "bq": ((d,), INIT_ZEROS),
+        "wk": ((d, d), INIT_NORMAL), "bk": ((d,), INIT_ZEROS),
+        "wv": ((d, d), INIT_NORMAL), "bv": ((d,), INIT_ZEROS),
+        "wo": ((d, d), INIT_NORMAL), "bo": ((d,), INIT_ZEROS),
+    }
+
+
+def _ffn_spec(d: int, ratio: int):
+    return {
+        "w1": ((d, d * ratio), INIT_NORMAL), "b1": ((d * ratio,), INIT_ZEROS),
+        "w2": ((d * ratio, d), INIT_NORMAL), "b2": ((d,), INIT_ZEROS),
+    }
+
+
+def block_spec(cfg: ModelConfig, cross: bool = False):
+    spec = {
+        "ln1": _ln_spec(cfg.d_model),
+        "attn": _attn_spec(cfg.d_model),
+        "ln2": _ln_spec(cfg.d_model),
+        "ffn": _ffn_spec(cfg.d_model, cfg.mlp_ratio),
+    }
+    if cross:
+        spec["lnx"] = _ln_spec(cfg.d_model)
+        spec["xattn"] = _attn_spec(cfg.d_model)
+    return spec
+
+
+def embed_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    if cfg.family == "vit":
+        pdim = cfg.patch * cfg.patch * cfg.channels
+        return {
+            "proj_w": ((pdim, d), INIT_NORMAL), "proj_b": ((d,), INIT_ZEROS),
+            "cls": ((1, 1, d), INIT_NORMAL),
+            "pos": ((cfg.tokens, d), INIT_NORMAL),
+        }
+    if cfg.family in ("gpt", "encdec"):
+        return {"wte": ((cfg.vocab, d), INIT_NORMAL),
+                "wpe": ((cfg.seq, d), INIT_NORMAL)}
+    raise ValueError(cfg.family)
+
+
+def enc_embed_spec(cfg: ModelConfig):
+    return {"wte": ((cfg.vocab, cfg.d_model), INIT_NORMAL),
+            "wpe": ((cfg.seq_src, cfg.d_model), INIT_NORMAL)}
+
+
+def head_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    out = cfg.n_classes if cfg.family == "vit" else cfg.vocab
+    return {"ln_f": _ln_spec(d),
+            "w": ((d, out), INIT_NORMAL), "b": ((out,), INIT_ZEROS)}
+
+
+def _is_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+            and isinstance(x[1], str))
+
+
+def flatten_spec(spec) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Deterministic (name, shape, init) list in jax flatten order."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(spec, is_leaf=_is_leaf)
+    out = []
+    for path, (shape, init) in leaves:
+        name = ".".join(str(getattr(p, "key", p)) for p in path)
+        out.append((name, shape, init))
+    return out
+
+
+def spec_treedef(spec):
+    _, treedef = jax.tree_util.tree_flatten_with_path(spec, is_leaf=_is_leaf)
+    return treedef
+
+
+def unflatten(spec, leaves):
+    return jax.tree_util.tree_unflatten(spec_treedef(spec), list(leaves))
+
+
+# ---------------------------------------------------------------------------
+# Components
+# ---------------------------------------------------------------------------
+
+def layer_norm(p, x, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def attention(p, x, kv, n_heads: int, causal: bool):
+    """Multi-head attention; inner loop is the L1 Pallas kernel."""
+    b, tq, d = x.shape
+    tk = kv.shape[1]
+    dh = d // n_heads
+    q = x @ p["wq"] + p["bq"]
+    k = kv @ p["wk"] + p["bk"]
+    v = kv @ p["wv"] + p["bv"]
+
+    def fold(t, tlen):
+        return (t.reshape(b, tlen, n_heads, dh).transpose(0, 2, 1, 3)
+                .reshape(b * n_heads, tlen, dh))
+
+    o = mha(fold(q, tq), fold(k, tk), fold(v, tk), causal)
+    o = (o.reshape(b, n_heads, tq, dh).transpose(0, 2, 1, 3)
+         .reshape(b, tq, d))
+    return o @ p["wo"] + p["bo"]
+
+
+def ffn(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def block_h(p, x, cfg: ModelConfig, causal: bool, mem=None):
+    """The residual branch h_k(x) = f_k(x) + g_k(x + f_k(x))  (eq. 4).
+
+    Decoder blocks (mem != None) compose three sub-residuals (self-attn,
+    cross-attn, FFN); the coordinator only ever sees the total h.
+    """
+    xn = layer_norm(p["ln1"], x)
+    a = attention(p["attn"], xn, xn, cfg.n_heads, causal)
+    u = x + a
+    if mem is not None:
+        c = attention(p["xattn"], layer_norm(p["lnx"], u), mem,
+                      cfg.n_heads, causal=False)
+        u = u + c
+    f = ffn(p["ffn"], layer_norm(p["ln2"], u))
+    return (u + f) - x
+
+
+# ---------------------------------------------------------------------------
+# Family-specific embed / head+loss
+# ---------------------------------------------------------------------------
+
+def patchify(images, patch: int):
+    """(B, C, H, W) -> (B, H/p * W/p, p*p*C)."""
+    b, c, h, w = images.shape
+    gh, gw = h // patch, w // patch
+    x = images.reshape(b, c, gh, patch, gw, patch)
+    x = x.transpose(0, 2, 4, 3, 5, 1)  # b, gh, gw, p, p, c
+    return x.reshape(b, gh * gw, patch * patch * c)
+
+
+def embed_apply(p, inputs, cfg: ModelConfig):
+    if cfg.family == "vit":
+        x = patchify(inputs, cfg.patch) @ p["proj_w"] + p["proj_b"]
+        cls = jnp.broadcast_to(p["cls"], (x.shape[0], 1, cfg.d_model))
+        x = jnp.concatenate([cls, x], axis=1)
+        return x + p["pos"][None]
+    # token embedding (gpt / encdec decoder / encdec encoder)
+    t = inputs.shape[1]
+    return p["wte"][inputs] + p["wpe"][:t][None]
+
+
+def head_loss_apply(p, x, labels, cfg: ModelConfig):
+    """Returns (mean CE loss, #correct) — both f32 scalars."""
+    z = layer_norm(p["ln_f"], x)
+    if cfg.family == "vit":
+        z = z[:, 0]  # cls token
+        logits = z @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+        ncorrect = jnp.sum(jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+        return loss, ncorrect
+    logits = z @ p["w"] + p["b"]  # (B, T, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    loss = -jnp.mean(picked)
+    ncorrect = jnp.sum(jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    return loss, ncorrect
+
+
+def is_causal(cfg: ModelConfig) -> bool:
+    return cfg.family in ("gpt", "encdec")
+
+
+# ---------------------------------------------------------------------------
+# Full-model quantized inference (the AOT `model_infer` executable)
+# ---------------------------------------------------------------------------
+# eqs. 18, 19, 21/22 with a *constant* gamma supplied at runtime: gamma = 0
+# is standard inference (E[gamma]; eq. 22); other values realise the Fig.-1
+# ODE-solver sweep.  Uses the fused L1 bdia_update kernels.
+
+def _quantize3(y, cfg: ModelConfig):
+    b, t, d = y.shape
+    return residual_quant_update(
+        y.reshape(b * t, d), jnp.zeros((b * t, d), jnp.float32),
+        lbits=cfg.lbits).reshape(b, t, d)
+
+
+def _stack_infer(blocks_p, x, gamma, cfg: ModelConfig, causal: bool, mem=None):
+    b, t, d = x.shape
+    x0 = _quantize3(x, cfg)  # eq. 18
+    h0 = block_h(blocks_p[0], x0, cfg, causal, mem)
+    x1 = x0 + _quantize3(h0, cfg)  # eq. 19
+    xprev, xcur = x0, x1
+    for k in range(1, len(blocks_p)):
+        h = block_h(blocks_p[k], xcur, cfg, causal, mem)
+        nxt = bdia_quant_combine(
+            xprev.reshape(b * t, d), xcur.reshape(b * t, d),
+            h.reshape(b * t, d), gamma, lbits=cfg.lbits).reshape(b, t, d)
+        xprev, xcur = xcur, nxt
+    return xcur
+
+
+def model_infer(params, inputs, labels, gamma, cfg: ModelConfig):
+    """params: dict with keys embed/blocks/head (+enc_embed/enc_blocks).
+
+    blocks are lists of per-block param dicts.  Returns (loss, ncorrect).
+    """
+    if cfg.family == "encdec":
+        src, tgt = inputs
+        xe = embed_apply(params["enc_embed"], src, cfg)
+        mem = _stack_infer(params["enc_blocks"], xe, gamma, cfg, causal=False)
+        xd = embed_apply(params["embed"], tgt, cfg)
+        xk = _stack_infer(params["blocks"], xd, gamma, cfg, causal=True,
+                          mem=mem)
+    else:
+        x = embed_apply(params["embed"], inputs, cfg)
+        xk = _stack_infer(params["blocks"], x, gamma, cfg,
+                          causal=is_causal(cfg))
+    return head_loss_apply(params["head"], xk, labels, cfg)

@@ -1,0 +1,115 @@
+"""AOT bundle integrity: manifests agree with HLO files and model specs.
+
+These tests validate the Python->Rust ABI without needing the Rust side:
+input counts, output counts, shape bookkeeping, incremental-export hashing.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+SMOKE = ["smoke_vit", "smoke_gpt", "smoke_encdec"]
+
+
+def _manifest(name):
+    p = ART / name / "manifest.json"
+    if not p.exists():
+        pytest.skip(f"artifacts for {name} not built (run `make artifacts`)")
+    return json.loads(p.read_text())
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_manifest_groups_match_specs(name):
+    mf = _manifest(name)
+    cfg = aot.CONFIGS[name]
+    cross = cfg.family == "encdec"
+    expect = {
+        "embed": M.embed_spec(cfg),
+        "block": M.block_spec(cfg, cross=cross),
+        "head": M.head_spec(cfg),
+    }
+    if cross:
+        expect["enc_embed"] = M.enc_embed_spec(cfg)
+        expect["enc_block"] = M.block_spec(cfg, cross=False)
+    assert set(mf["param_groups"]) == set(expect)
+    for grp, spec in expect.items():
+        flat = M.flatten_spec(spec)
+        got = mf["param_groups"][grp]
+        assert [g["name"] for g in got] == [n for n, _, _ in flat]
+        assert [tuple(g["shape"]) for g in got] == [s for _, s, _ in flat]
+        assert [g["init"] for g in got] == [i for _, _, i in flat]
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_hlo_files_exist_and_parse_header(name):
+    mf = _manifest(name)
+    for ename, e in mf["executables"].items():
+        path = ART / name / e["file"]
+        assert path.exists(), ename
+        head = path.read_text()[:200]
+        assert "HloModule" in head, f"{ename} not HLO text"
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_hlo_param_count_matches_manifest(name):
+    """ENTRY computation parameter count == param leaves + data inputs."""
+    mf = _manifest(name)
+    for ename, e in mf["executables"].items():
+        n_params = sum(len(mf["param_groups"][g]) * c
+                       for g, c in e["param_layout"])
+        expect = n_params + len(e["data_inputs"])
+        text = (ART / name / e["file"]).read_text()
+        # count parameter declarations inside the ENTRY computation only
+        # (nested fusion computations declare their own parameters)
+        lines = text.splitlines()
+        start = next(i for i, ln in enumerate(lines) if ln.startswith("ENTRY"))
+        got = 0
+        for ln in lines[start + 1:]:
+            if ln.startswith("}"):
+                break
+            if "= parameter(" in ln or " parameter(" in ln:
+                got += 1
+        assert got == expect, f"{name}/{ename}: {got} != {expect}"
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_block_vjp_output_layout(name):
+    """block_vjp returns (h, dx[, dmem], dparams...) per DESIGN.md §8."""
+    mf = _manifest(name)
+    cfg = aot.CONFIGS[name]
+    e = mf["executables"]["block_vjp"]
+    nb = len(mf["param_groups"]["block"])
+    extra = 1 if cfg.family == "encdec" else 0  # dmem
+    assert len(e["outputs"]) == 2 + extra + nb
+    x_shape = [cfg.batch, cfg.tokens, cfg.d_model]
+    assert e["outputs"][0]["shape"] == x_shape  # h
+    assert e["outputs"][1]["shape"] == x_shape  # dx
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_model_infer_scalar_outputs(name):
+    mf = _manifest(name)
+    e = mf["executables"]["model_infer"]
+    assert [o["shape"] for o in e["outputs"]] == [[], []]  # (loss, ncorrect)
+    assert e["data_inputs"][-1]["name"] == "gamma"
+
+
+def test_source_hash_stability():
+    cfg = aot.CONFIGS["smoke_gpt"]
+    assert aot.compute_source_hash(cfg) == aot.compute_source_hash(cfg)
+    assert aot.compute_source_hash(cfg) != aot.compute_source_hash(
+        aot.CONFIGS["smoke_vit"])
+
+
+def test_up_to_date_detection(tmp_path):
+    cfg = aot.CONFIGS["smoke_gpt"]
+    h = aot.compute_source_hash(cfg)
+    assert not aot.bundle_up_to_date(cfg, tmp_path, h)
+    if (ART / "smoke_gpt" / "manifest.json").exists():
+        assert aot.bundle_up_to_date(cfg, ART, h)
+        assert not aot.bundle_up_to_date(cfg, ART, "deadbeef")

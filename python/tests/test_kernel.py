@@ -1,0 +1,196 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal for Layer 1.  Hypothesis sweeps shapes; fixed
+cases pin the paper-relevant configurations (l=9 grid, gamma = +/-0.5).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention, mha
+from compile.kernels.bdia_update import (bdia_quant_combine, parity_bits,
+                                         quantize, residual_quant_update)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@given(bh=st.integers(1, 4), t=st.integers(1, 33), d=st.sampled_from([4, 8, 16]),
+       causal=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_mha_matches_ref(bh, t, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, bh, t, d) for _ in range(3))
+    out = flash_attention(q, k, v, causal=causal)
+    expect = ref.mha_ref(q, k, v, causal)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@given(tq=st.integers(1, 17), tk=st.integers(1, 29), seed=st.integers(0, 2**31 - 1))
+def test_mha_cross_shapes(tq, tk, seed):
+    """Cross-attention: Tq != Tk, no mask."""
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, 2, tq, 8)
+    k = _rand(rng, 2, tk, 8)
+    v = _rand(rng, 2, tk, 8)
+    out = flash_attention(q, k, v, causal=False)
+    expect = ref.mha_ref(q, k, v, False)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_mha_causal_first_row_is_v0():
+    """Causal row 0 attends only to position 0."""
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, 1, 8, 4) for _ in range(3))
+    out = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out[0, 0], v[0, 0], atol=1e-6)
+
+
+def test_mha_tiling_invariance():
+    """Different block sizes give the same result (flash recurrence exact)."""
+    rng = np.random.default_rng(1)
+    q, k, v = (_rand(rng, 2, 64, 8) for _ in range(3))
+    o1 = flash_attention(q, k, v, causal=True, tiled=True, block_q=64, block_k=64)
+    o2 = flash_attention(q, k, v, causal=True, tiled=True, block_q=16, block_k=8)
+    np.testing.assert_allclose(o1, o2, atol=2e-6, rtol=2e-6)
+
+
+@given(bh=st.integers(1, 3), t=st.integers(2, 40), causal=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_mha_tiled_path_matches_ref(bh, t, causal, seed):
+    """The TPU-shaped tiled grid (flash running-softmax) vs the oracle."""
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, bh, t, 8) for _ in range(3))
+    out = flash_attention(q, k, v, causal=causal, tiled=True,
+                          block_q=16, block_k=16)
+    np.testing.assert_allclose(out, ref.mha_ref(q, k, v, causal),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mha_fused_and_tiled_agree():
+    """Both kernel schedules compute the same function (CPU vs TPU shape)."""
+    rng = np.random.default_rng(5)
+    q, k, v = (_rand(rng, 4, 32, 8) for _ in range(3))
+    for causal in (False, True):
+        a = flash_attention(q, k, v, causal=causal, tiled=False)
+        b = flash_attention(q, k, v, causal=causal, tiled=True)
+        np.testing.assert_allclose(a, b, atol=2e-6, rtol=2e-6)
+
+
+def test_mha_large_logits_stable():
+    """Running-max softmax must not overflow with large scores."""
+    rng = np.random.default_rng(2)
+    q = _rand(rng, 1, 16, 8) * 100.0
+    k = _rand(rng, 1, 16, 8) * 100.0
+    v = _rand(rng, 1, 16, 8)
+    out = flash_attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, ref.mha_ref(q, k, v), atol=1e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), causal=st.booleans())
+def test_mha_custom_vjp_matches_ref_grad(seed, causal):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, 2, 12, 8) for _ in range(3))
+
+    def f(q, k, v):
+        return jnp.sum(jnp.tanh(mha(q, k, v, causal)))
+
+    def fr(q, k, v):
+        return jnp.sum(jnp.tanh(ref.mha_ref(q, k, v, causal)))
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantization / BDIA update kernels (eqs. 17-22)
+# ---------------------------------------------------------------------------
+
+@given(lbits=st.sampled_from([7, 9, 11]), seed=st.integers(0, 2**31 - 1))
+def test_quantize_on_grid(lbits, seed):
+    rng = np.random.default_rng(seed)
+    y = _rand(rng, 32) * 10
+    q = quantize(y, lbits)
+    scaled = np.asarray(q) * 2.0 ** lbits
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-3)
+    assert float(jnp.max(jnp.abs(q - y))) <= 2.0 ** (-lbits) / 2 + 1e-7
+
+
+def test_quantize_half_away_from_zero():
+    """Tie-break must match rust quant::Fixed: round half away from zero."""
+    l = 9
+    step = 2.0 ** -l
+    y = jnp.asarray([0.5 * step, -0.5 * step, 1.5 * step, -1.5 * step])
+    q = quantize(y, l)
+    np.testing.assert_allclose(q, [step, -step, 2 * step, -2 * step],
+                               atol=1e-9)
+
+
+@given(n=st.sampled_from([2, 6, 128]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_residual_quant_update(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x, h = _rand(rng, n, d), _rand(rng, n, d)
+    out = residual_quant_update(x, h)
+    np.testing.assert_allclose(out, ref.residual_quant_update_ref(x, h),
+                               atol=1e-7)
+
+
+@given(gamma=st.sampled_from([-0.5, -0.25, 0.0, 0.25, 0.5, 0.6]),
+       seed=st.integers(0, 2**31 - 1))
+def test_bdia_quant_combine(gamma, seed):
+    rng = np.random.default_rng(seed)
+    xp = ref.quantize_ref(_rand(rng, 6, 16))
+    x = ref.quantize_ref(_rand(rng, 6, 16))
+    h = _rand(rng, 6, 16)
+    out = bdia_quant_combine(xp, x, h, gamma)
+    np.testing.assert_allclose(out, ref.bdia_quant_combine_ref(xp, x, h, gamma),
+                               atol=1e-7)
+
+
+def test_bdia_combine_gamma0_equals_eq22():
+    """gamma=0 must reduce to the standard quantized update (eq. 22)."""
+    rng = np.random.default_rng(3)
+    xp = ref.quantize_ref(_rand(rng, 4, 8))
+    x = ref.quantize_ref(_rand(rng, 4, 8))
+    h = _rand(rng, 4, 8)
+    np.testing.assert_allclose(bdia_quant_combine(xp, x, h, 0.0),
+                               residual_quant_update(x, h), atol=1e-7)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_parity_bits(seed):
+    rng = np.random.default_rng(seed)
+    x = ref.quantize_ref(_rand(rng, 8, 8))
+    s = parity_bits(x)
+    np.testing.assert_allclose(s, ref.parity_bits_ref(x), atol=0)
+    assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+
+
+def test_parity_identity_eq23():
+    """eq. 23: Q_l[gamma (x + s 2^-l)] == gamma (x + s 2^-l) exactly for
+    gamma = +/-0.5 — the 1-bit side information fully absorbs the loss."""
+    rng = np.random.default_rng(4)
+    x = ref.quantize_ref(_rand(rng, 16, 16))
+    s = parity_bits(x)
+    step = 2.0 ** -9
+    for gamma in (0.5, -0.5):
+        y = gamma * (x + s * step)
+        np.testing.assert_array_equal(np.asarray(quantize(y, 9)),
+                                      np.asarray(y))

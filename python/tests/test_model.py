@@ -1,0 +1,219 @@
+"""L2 model tests: shapes, flatten determinism, BDIA inference semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+from compile.model import ModelConfig
+
+CFG_VIT = ModelConfig(name="t_vit", family="vit", d_model=16, n_heads=2,
+                      n_blocks=3, mlp_ratio=2, batch=2, image_size=8,
+                      patch=4, n_classes=4)
+CFG_GPT = ModelConfig(name="t_gpt", family="gpt", d_model=16, n_heads=2,
+                      n_blocks=4, mlp_ratio=2, batch=2, seq=8, vocab=11)
+CFG_ED = ModelConfig(name="t_ed", family="encdec", d_model=16, n_heads=2,
+                     n_blocks=2, n_enc_blocks=2, mlp_ratio=2, batch=2,
+                     seq=6, seq_src=6, vocab=11)
+
+
+def init_params(spec, rng):
+    flat = []
+    for name, shape, init in M.flatten_spec(spec):
+        if init == "zeros":
+            flat.append(jnp.zeros(shape, jnp.float32))
+        elif init == "ones":
+            flat.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = float(init.split(":")[1])
+            flat.append(jnp.asarray(rng.normal(0, std, shape), jnp.float32))
+    return M.unflatten(spec, flat)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def test_flatten_spec_deterministic():
+    s1 = M.flatten_spec(M.block_spec(CFG_GPT))
+    s2 = M.flatten_spec(M.block_spec(CFG_GPT))
+    assert s1 == s2
+    names = [n for n, _, _ in s1]
+    assert names == sorted(names)  # jax sorts dict keys
+    assert "attn.wq" in names and "ffn.w1" in names
+
+
+def test_flatten_unflatten_roundtrip(rng):
+    spec = M.block_spec(CFG_GPT, cross=True)
+    p = init_params(spec, rng)
+    leaves = [p[a][b] for a, b, _ in
+              [(n.split(".")[0], n.split(".")[1], None)
+               for n, _, _ in M.flatten_spec(spec)]]
+    p2 = M.unflatten(spec, leaves)
+    for grp in p:
+        for k in p[grp]:
+            np.testing.assert_array_equal(p[grp][k], p2[grp][k])
+
+
+def test_cross_block_has_more_params():
+    plain = len(M.flatten_spec(M.block_spec(CFG_ED, cross=False)))
+    cross = len(M.flatten_spec(M.block_spec(CFG_ED, cross=True)))
+    assert cross == plain + 10  # lnx (2) + xattn (8)
+
+
+def test_patchify_shape_and_content():
+    imgs = jnp.arange(2 * 3 * 8 * 8, dtype=jnp.float32).reshape(2, 3, 8, 8)
+    p = M.patchify(imgs, 4)
+    assert p.shape == (2, 4, 48)
+    # first patch of first image, channel-last layout
+    assert float(p[0, 0, 2]) == float(imgs[0, 2, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# block residual branch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg,causal", [(CFG_VIT, False), (CFG_GPT, True)])
+def test_block_h_shape(cfg, causal, rng):
+    p = init_params(M.block_spec(cfg), rng)
+    x = jnp.asarray(rng.normal(size=(cfg.batch, cfg.tokens, cfg.d_model)),
+                    jnp.float32)
+    h = M.block_h(p, x, cfg, causal)
+    assert h.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_block_h_is_residual_branch(rng):
+    """h = f(x) + g(x + f(x)) decomposition (paper eq. 4)."""
+    cfg = CFG_GPT
+    p = init_params(M.block_spec(cfg), rng)
+    x = jnp.asarray(rng.normal(size=(2, cfg.seq, cfg.d_model)), jnp.float32)
+    xn = M.layer_norm(p["ln1"], x)
+    f = M.attention(p["attn"], xn, xn, cfg.n_heads, True)
+    g = M.ffn(p["ffn"], M.layer_norm(p["ln2"], x + f))
+    np.testing.assert_allclose(M.block_h(p, x, cfg, True), f + g,
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_decoder_block_uses_memory(rng):
+    cfg = CFG_ED
+    p = init_params(M.block_spec(cfg, cross=True), rng)
+    x = jnp.asarray(rng.normal(size=(2, cfg.seq, cfg.d_model)), jnp.float32)
+    m1 = jnp.asarray(rng.normal(size=(2, cfg.seq_src, cfg.d_model)), jnp.float32)
+    m2 = m1 + 1.0
+    h1 = M.block_h(p, x, cfg, True, mem=m1)
+    h2 = M.block_h(p, x, cfg, True, mem=m2)
+    assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-6
+
+
+def test_causal_no_future_leak(rng):
+    """Perturbing position t must not change h at positions < t."""
+    cfg = CFG_GPT
+    p = init_params(M.block_spec(cfg), rng)
+    x = jnp.asarray(rng.normal(size=(1, cfg.seq, cfg.d_model)), jnp.float32)
+    h1 = M.block_h(p, x, cfg, causal=True)
+    x2 = x.at[0, -1].add(10.0)
+    h2 = M.block_h(p, x2, cfg, causal=True)
+    np.testing.assert_allclose(h1[0, :-1], h2[0, :-1], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# head / loss
+# ---------------------------------------------------------------------------
+
+def test_head_loss_vit_uniform_at_zero_logits(rng):
+    cfg = CFG_VIT
+    p = init_params(M.head_spec(cfg), rng)
+    p = {**p, "w": jnp.zeros_like(p["w"]), "b": jnp.zeros_like(p["b"])}
+    x = jnp.asarray(rng.normal(size=(cfg.batch, cfg.tokens, cfg.d_model)),
+                    jnp.float32)
+    labels = jnp.zeros((cfg.batch,), jnp.int32)
+    loss, _ = M.head_loss_apply(p, x, labels, cfg)
+    np.testing.assert_allclose(loss, np.log(cfg.n_classes), rtol=1e-5)
+
+
+def test_head_loss_gpt_counts_correct(rng):
+    cfg = CFG_GPT
+    p = init_params(M.head_spec(cfg), rng)
+    x = jnp.asarray(rng.normal(size=(cfg.batch, cfg.seq, cfg.d_model)),
+                    jnp.float32)
+    z = M.layer_norm(p["ln_f"], x)
+    logits = z @ p["w"] + p["b"]
+    labels = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, ncorrect = M.head_loss_apply(p, x, labels, cfg)
+    assert float(ncorrect) == cfg.batch * cfg.seq
+
+
+# ---------------------------------------------------------------------------
+# model_infer: BDIA inference semantics
+# ---------------------------------------------------------------------------
+
+def _full_params(cfg, rng):
+    params = {"embed": init_params(M.embed_spec(cfg), rng),
+              "blocks": [init_params(M.block_spec(cfg, cfg.family == "encdec"),
+                                     rng) for _ in range(cfg.n_blocks)],
+              "head": init_params(M.head_spec(cfg), rng)}
+    if cfg.family == "encdec":
+        params["enc_embed"] = init_params(M.enc_embed_spec(cfg), rng)
+        params["enc_blocks"] = [init_params(M.block_spec(cfg, False), rng)
+                                for _ in range(cfg.n_enc_blocks)]
+    return params
+
+
+def _ref_infer_gamma0(params, inputs, labels, cfg):
+    """eq. 22 reference: plain quantized residual forward."""
+    x = ref.quantize_ref(M.embed_apply(params["embed"], inputs, cfg))
+    h0 = M.block_h(params["blocks"][0], x, cfg, M.is_causal(cfg))
+    x = x + ref.quantize_ref(h0)
+    for k in range(1, cfg.n_blocks):
+        h = M.block_h(params["blocks"][k], x, cfg, M.is_causal(cfg))
+        x = ref.quantize_ref(x + h)
+    return M.head_loss_apply(params["head"], x, labels, cfg)
+
+
+@pytest.mark.parametrize("cfg", [CFG_VIT, CFG_GPT])
+def test_model_infer_gamma0_matches_eq22(cfg, rng):
+    params = _full_params(cfg, rng)
+    if cfg.family == "vit":
+        inputs = jnp.asarray(
+            rng.normal(size=(cfg.batch, 3, cfg.image_size, cfg.image_size)),
+            jnp.float32)
+        labels = jnp.zeros((cfg.batch,), jnp.int32)
+    else:
+        inputs = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)),
+                             jnp.int32)
+        labels = inputs
+    loss, nc = M.model_infer(params, inputs, labels, jnp.float32(0.0), cfg)
+    loss_ref, nc_ref = _ref_infer_gamma0(params, inputs, labels, cfg)
+    np.testing.assert_allclose(loss, loss_ref, atol=1e-5, rtol=1e-5)
+    assert float(nc) == float(nc_ref)
+
+
+def test_model_infer_gamma_sensitivity(rng):
+    """gamma != 0 changes the output (different ODE solver, Fig. 1)."""
+    cfg = CFG_GPT
+    params = _full_params(cfg, rng)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)),
+                         jnp.int32)
+    l0, _ = M.model_infer(params, tokens, tokens, jnp.float32(0.0), cfg)
+    l5, _ = M.model_infer(params, tokens, tokens, jnp.float32(0.5), cfg)
+    assert abs(float(l0) - float(l5)) > 1e-7
+
+
+def test_model_infer_encdec(rng):
+    cfg = CFG_ED
+    params = _full_params(cfg, rng)
+    src = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_src)),
+                      jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)),
+                      jnp.int32)
+    loss, nc = M.model_infer(params, (src, tgt), tgt, jnp.float32(0.0), cfg)
+    assert np.isfinite(float(loss))
+    assert 0 <= float(nc) <= cfg.batch * cfg.seq

@@ -1,0 +1,44 @@
+//! Host fixed-point BDIA combine (eq. 21 + parity extraction, eq. 20): the
+//! per-block host cost the coordinator adds over the HLO call.  Reported in
+//! elements/s; must stay a small fraction of block_fwd time.
+
+use bdia::bench::{bench, default_budget};
+use bdia::quant::{self, Fixed};
+use bdia::tensor::{Rng, Tensor};
+
+fn main() {
+    let f = Fixed::new(9);
+    for (b, t, d) in [(64usize, 65usize, 64usize), (16, 64, 64), (8, 128, 256)] {
+        let mut rng = Rng::new(0);
+        let mut xp = Tensor::normal(&[b, t * d], 2.0, &mut rng);
+        let mut x = Tensor::normal(&[b, t * d], 2.0, &mut rng);
+        let h = Tensor::normal(&[b, t * d], 1.0, &mut rng);
+        f.quantize_slice(xp.data_mut());
+        f.quantize_slice(x.data_mut());
+        let signs: Vec<i8> = (0..b).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let elems = (b * t * d) as f64;
+
+        let r = bench(
+            &format!("bdia_forward_quant B{b} T{t} D{d}"),
+            2,
+            200,
+            default_budget(),
+            || {
+                quant::bdia_forward_quant(&xp, &x, &h, &signs, f).unwrap();
+            },
+        );
+        println!("{}  ({:.1} Melem/s)", r.row(), r.per_sec(elems) / 1e6);
+
+        let gammas: Vec<f32> = signs.iter().map(|&s| 0.5 * s as f32).collect();
+        let r = bench(
+            &format!("bdia_forward_float B{b} T{t} D{d}"),
+            2,
+            200,
+            default_budget(),
+            || {
+                quant::bdia_forward_float(&xp, &x, &h, &gammas).unwrap();
+            },
+        );
+        println!("{}  ({:.1} Melem/s)", r.row(), r.per_sec(elems) / 1e6);
+    }
+}

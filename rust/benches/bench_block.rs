@@ -1,0 +1,41 @@
+//! Block executable latency: `block_fwd` / `block_vjp` per bundle — the L2
+//! kernel cost that every training strategy shares (baseline for the
+//! Table-1 step bench).
+
+use bdia::bench::{bench, default_budget};
+use bdia::model::ParamStore;
+use bdia::runtime::{ArgValue, Runtime};
+use bdia::tensor::{Rng, Tensor};
+use std::path::Path;
+
+fn main() {
+    let art = Path::new("artifacts");
+    for bundle in ["vit_s10", "gpt_tiny"] {
+        if !art.join(bundle).join("manifest.json").exists() {
+            eprintln!("skip {bundle}: artifacts missing (run `make artifacts`)");
+            continue;
+        }
+        let rt = Runtime::load(art, bundle).expect("load");
+        let dims = rt.manifest.dims.clone();
+        let tokens = dims.tokens(rt.manifest.family);
+        let ps = ParamStore::init(&rt.manifest, 0);
+        let mut rng = Rng::new(0);
+        let x = Tensor::normal(&[dims.batch, tokens, dims.d_model], 1.0, &mut rng);
+        let g = Tensor::normal(&[dims.batch, tokens, dims.d_model], 1.0, &mut rng);
+
+        let fwd = rt.exec("block_fwd").unwrap();
+        let refs = ps.refs_for(&fwd.spec, 0).unwrap();
+        let r = bench(&format!("{bundle}/block_fwd"), 2, 30, default_budget(), || {
+            fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap();
+        });
+        let toks = (dims.batch * tokens) as f64;
+        println!("{}  ({:.0} tok/s)", r.row(), r.per_sec(toks));
+
+        let vjp = rt.exec("block_vjp").unwrap();
+        let refs = ps.refs_for(&vjp.spec, 0).unwrap();
+        let r = bench(&format!("{bundle}/block_vjp"), 2, 30, default_budget(), || {
+            vjp.call(&refs, &[ArgValue::F32(&x), ArgValue::F32(&g)]).unwrap();
+        });
+        println!("{}  ({:.0} tok/s)", r.row(), r.per_sec(toks));
+    }
+}

@@ -1,0 +1,49 @@
+//! Synthetic-data substrate throughput: batch generation must never starve
+//! the trainer (compare against block_fwd latency in bench_block).
+
+use bdia::bench::{bench, default_budget};
+use bdia::config::TrainConfig;
+use bdia::data::make_dataset;
+use bdia::model::{Dims, Family};
+
+fn dims(family: Family) -> Dims {
+    Dims {
+        d_model: 64,
+        n_heads: 4,
+        n_blocks: 6,
+        n_enc_blocks: 6,
+        mlp_ratio: 2,
+        batch: 64,
+        lbits: 9,
+        image_size: 32,
+        patch: 4,
+        channels: 3,
+        n_classes: 10,
+        seq: if family == Family::EncDec { 24 } else { 64 },
+        seq_src: 24,
+        vocab: if family == Family::EncDec { 64 } else { 96 },
+    }
+}
+
+fn main() {
+    for (name, family) in [
+        ("synth_cifar10", Family::Vit),
+        ("tiny_corpus", Family::Gpt),
+        ("synth_translation", Family::EncDec),
+    ] {
+        let cfg = TrainConfig { dataset: name.into(), ..TrainConfig::default() };
+        let d = dims(family);
+        let ds = make_dataset(&cfg, &d, family).unwrap();
+        let mut step = 0usize;
+        let r = bench(&format!("train_batch[{name}]"), 2, 500, default_budget(), || {
+            let b = ds.train_batch(step);
+            std::hint::black_box(b);
+            step += 1;
+        });
+        println!(
+            "{}  ({:.1} examples/s)",
+            r.row(),
+            r.per_sec(d.batch as f64)
+        );
+    }
+}

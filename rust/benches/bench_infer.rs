@@ -1,0 +1,87 @@
+//! Inference-path latency: the fused `model_infer` executable (L1 Pallas
+//! quantized-update kernels inside one HLO) vs the per-block Rust pipeline —
+//! quantifies what fusing the whole forward buys at eval time.
+
+use bdia::bench::{bench, default_budget};
+use bdia::model::ParamStore;
+use bdia::quant;
+use bdia::runtime::{ArgValue, Runtime};
+use bdia::tensor::{IntTensor, Rng, Tensor};
+use std::path::Path;
+
+fn main() {
+    let art = Path::new("artifacts");
+    let bundle = "gpt_tiny";
+    if !art.join(bundle).join("manifest.json").exists() {
+        eprintln!("skip: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load(art, bundle).expect("load");
+    let dims = rt.manifest.dims.clone();
+    let f = quant::Fixed::new(dims.lbits);
+    let ps = ParamStore::init(&rt.manifest, 0);
+    let mut rng = Rng::new(0);
+    let toks: Vec<i32> = (0..dims.batch * dims.seq)
+        .map(|_| rng.below(dims.vocab) as i32)
+        .collect();
+    let tokens = IntTensor::from_vec(&[dims.batch, dims.seq], toks).unwrap();
+    let n_tok = (dims.batch * dims.seq) as f64;
+
+    // fused path
+    let infer = rt.exec("model_infer").unwrap();
+    let refs = ps.refs_for(&infer.spec, 0).unwrap();
+    let r = bench("model_infer (fused, gamma input)", 2, 30, default_budget(), || {
+        infer
+            .call(
+                &refs,
+                &[
+                    ArgValue::I32(&tokens),
+                    ArgValue::I32(&tokens),
+                    ArgValue::Scalar(0.0),
+                ],
+            )
+            .unwrap();
+    });
+    println!("{}  ({:.0} tok/s)", r.row(), r.per_sec(n_tok));
+
+    // per-block Rust pipeline (eqs. 18/19/22 on the host)
+    let embed = rt.exec("embed_fwd").unwrap();
+    let erefs = ps.refs_for(&embed.spec, 0).unwrap();
+    let fwd = rt.exec("block_fwd").unwrap();
+    let head = rt.exec("head_loss_fwd").unwrap();
+    let hrefs = ps.refs_for(&head.spec, 0).unwrap();
+    let r = bench("per-block pipeline (host quant)", 1, 20, default_budget(), || {
+        let mut x = embed.call(&erefs, &[ArgValue::I32(&tokens)]).unwrap().remove(0);
+        quant::quantize_activation(&mut x, f);
+        for k in 0..dims.n_blocks {
+            let refs = ps.refs_for(&fwd.spec, k).unwrap();
+            let h = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+            if k == 0 {
+                x = quant::first_step_quant(&x, &h, f).unwrap();
+            } else {
+                let mut nx = x.clone();
+                nx.add_assign(&h).unwrap();
+                quant::quantize_activation(&mut nx, f);
+                x = nx;
+            }
+        }
+        head.call(&hrefs, &[ArgValue::F32(&x), ArgValue::I32(&tokens)]).unwrap();
+    });
+    println!("{}  ({:.0} tok/s)", r.row(), r.per_sec(n_tok));
+
+    // Fig.-1 sweep cost: gamma is a runtime input, so the sweep reuses ONE
+    // compiled executable — bench a nonzero gamma to show parity.
+    let r = bench("model_infer (gamma=0.3)", 2, 30, default_budget(), || {
+        infer
+            .call(
+                &refs,
+                &[
+                    ArgValue::I32(&tokens),
+                    ArgValue::I32(&tokens),
+                    ArgValue::Scalar(0.3),
+                ],
+            )
+            .unwrap();
+    });
+    println!("{}  ({:.0} tok/s)", r.row(), r.per_sec(n_tok));
+}

@@ -1,0 +1,49 @@
+//! eq.-24 exact reconstruction throughput — the extra host work online
+//! backprop does per block in exchange for not storing activations.
+
+use bdia::bench::{bench, default_budget};
+use bdia::quant::{self, Fixed};
+use bdia::tensor::{Rng, Tensor};
+
+fn main() {
+    let f = Fixed::new(9);
+    for (b, t, d) in [(64usize, 65usize, 64usize), (16, 64, 64), (8, 128, 256)] {
+        let mut rng = Rng::new(0);
+        let mut xp = Tensor::normal(&[b, t * d], 2.0, &mut rng);
+        let mut x = Tensor::normal(&[b, t * d], 2.0, &mut rng);
+        let h = Tensor::normal(&[b, t * d], 1.0, &mut rng);
+        f.quantize_slice(xp.data_mut());
+        f.quantize_slice(x.data_mut());
+        let signs: Vec<i8> = (0..b).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+        let (xn, bits) = quant::bdia_forward_quant(&xp, &x, &h, &signs, f).unwrap();
+        let elems = (b * t * d) as f64;
+
+        let r = bench(
+            &format!("bdia_reconstruct_quant B{b} T{t} D{d}"),
+            2,
+            200,
+            default_budget(),
+            || {
+                let rec =
+                    quant::bdia_reconstruct_quant(&xn, &x, &h, &bits, &signs, f).unwrap();
+                std::hint::black_box(rec);
+            },
+        );
+        println!("{}  ({:.1} Melem/s)", r.row(), r.per_sec(elems) / 1e6);
+
+        // adjoint host ops that accompany it in the backward loop
+        let gammas: Vec<f32> = signs.iter().map(|&s| 0.5 * s as f32).collect();
+        let mut acc = Tensor::zeros(&[b, t * d]);
+        let r = bench(
+            &format!("adjoint scale+axpy  B{b} T{t} D{d}"),
+            2,
+            200,
+            default_budget(),
+            || {
+                let s = quant::scale_rows(&h, &gammas).unwrap();
+                quant::axpy_rows(&mut acc, &gammas, &s).unwrap();
+            },
+        );
+        println!("{}  ({:.1} Melem/s)", r.row(), r.per_sec(elems) / 1e6);
+    }
+}

@@ -1,0 +1,67 @@
+//! Table-1 systems comparison as a per-step microbench: full training-step
+//! latency + live stored-activation bytes for the three training systems
+//! (vanilla ViT, RevViT, BDIA-reversible) on the vit_s10 bundle.
+//!
+//! The paper's Table 1 reports accuracy (see `bdia repro table1`) and peak
+//! memory; this bench adds the runtime dimension: what online backprop
+//! costs per step in exchange for the memory reduction.
+
+use bdia::baseline::RevVitTrainer;
+use bdia::bench::bench;
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::Trainer;
+use bdia::experiments::dataset_for;
+use bdia::metrics::fmt_bytes;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    if !Path::new("artifacts/vit_s10/manifest.json").exists() {
+        eprintln!("skip: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    for mode in [TrainMode::Vanilla, TrainMode::RevVit, TrainMode::BdiaReversible] {
+        let cfg = TrainConfig {
+            model: "vit_s10".into(),
+            mode,
+            dataset: "synth_cifar10".into(),
+            steps: 1,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        let budget = Duration::from_secs(8);
+        if mode == TrainMode::RevVit {
+            let mut tr = RevVitTrainer::new(cfg.clone()).unwrap();
+            let ds = dataset_for(&tr.rt, &cfg).unwrap();
+            let b = ds.train_batch(0);
+            let stats = tr.train_step(&b).unwrap();
+            let r = bench("train_step[revvit]", 1, 12, budget, || {
+                tr.train_step(&b).unwrap();
+            });
+            println!(
+                "{}  stored acts {}",
+                r.row(),
+                fmt_bytes(stats.stored_activation_bytes)
+            );
+        } else {
+            let mut tr = Trainer::new(cfg.clone()).unwrap();
+            let ds = dataset_for(&tr.rt, &cfg).unwrap();
+            let b = ds.train_batch(0);
+            let stats = tr.train_step(&b).unwrap();
+            let r = bench(
+                &format!("train_step[{}]", mode.name()),
+                1,
+                12,
+                budget,
+                || {
+                    tr.train_step(&b).unwrap();
+                },
+            );
+            println!(
+                "{}  stored acts {}",
+                r.row(),
+                fmt_bytes(stats.stored_activation_bytes)
+            );
+        }
+    }
+}

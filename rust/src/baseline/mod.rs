@@ -1,0 +1,11 @@
+//! Baseline training systems the paper compares against (Table 1, Fig. 3):
+//!
+//! * the conventional store-all transformer lives in the main coordinator as
+//!   [`crate::config::TrainMode::Vanilla`] (gamma = 0 float path — exactly
+//!   the standard update),
+//! * [`revvit`] — the RevViT [19] two-stream reversible architecture with
+//!   float (non-exact) inversion.
+
+pub mod revvit;
+
+pub use revvit::RevVitTrainer;

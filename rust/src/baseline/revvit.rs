@@ -1,0 +1,282 @@
+//! RevViT [19] baseline: two-stream reversible transformer.
+//!
+//! The comparator the paper evaluates (Table 1, Fig. 3).  Each block couples
+//! two activation streams through the attention and FFN sub-branches
+//!
+//!   `y1 = x1 + F(x2)`   with `F = Attn(LN1(.))`
+//!   `y2 = x2 + G(y1)`   with `G = FFN(LN2(.))`
+//!
+//! which inverts in float arithmetic as `x2 = y2 - G(y1); x1 = y1 - F(x2)` —
+//! memory O(1) in depth like BDIA, but (a) the *architecture* differs from a
+//! standard transformer at inference (the paper's criticism), and (b) the
+//! inversion is float, not bit-exact (small drift accumulates; the
+//! `inversion_drift` diagnostic measures it, cf. Fig. 2's motivation).
+//!
+//! Streams are initialised by duplicating the embedding (`x1 = x2 = x0`) and
+//! fused by averaging before the head — the standard RevNet-style choice.
+//! Uses the `attn_*`/`ffn_*` sub-branch executables exported per bundle.
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::accumulate_leaves;
+use crate::data::{Batch, Dataset};
+use crate::metrics::{Record, TrainLog};
+use crate::model::{Family, ParamStore};
+use crate::optim::{clip_global_norm, Optimizer};
+use crate::runtime::{ArgValue, Exec, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+
+pub struct RevVitTrainer {
+    pub rt: Runtime,
+    pub params: ParamStore,
+    grads: ParamStore,
+    pub opt: Optimizer,
+    pub cfg: TrainConfig,
+    family: Family,
+    step: usize,
+    /// max |x - x_reconstructed| seen during the last backward (float drift)
+    pub inversion_drift: f32,
+}
+
+struct RevState {
+    y1: Tensor,
+    y2: Tensor,
+}
+
+impl RevVitTrainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)
+            .with_context(|| format!("loading bundle '{}'", cfg.model))?;
+        Self::with_runtime(cfg, rt)
+    }
+
+    pub fn with_runtime(cfg: TrainConfig, rt: Runtime) -> Result<Self> {
+        let family = rt.manifest.family;
+        if family == Family::EncDec {
+            bail!("RevViT baseline supports vit/gpt bundles only");
+        }
+        ensure!(
+            rt.has_exec("attn_fwd") && rt.has_exec("ffn_fwd"),
+            "bundle '{}' lacks the attn/ffn sub-branch executables",
+            cfg.model
+        );
+        let params = ParamStore::init(&rt.manifest, cfg.seed);
+        let grads = params.zeros_like();
+        let opt = Optimizer::new(&cfg, &params);
+        Ok(RevVitTrainer {
+            rt,
+            params,
+            grads,
+            opt,
+            cfg,
+            family,
+            step: 0,
+            inversion_drift: 0.0,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.n_params()
+    }
+
+    fn branch(&self, exec: &Exec, k: usize, x: &Tensor) -> Result<Tensor> {
+        let refs = self.params.refs_for(&exec.spec, k)?;
+        Ok(exec.call(&refs, &[ArgValue::F32(x)])?.remove(0))
+    }
+
+    /// (out, dx, dparams) from a sub-branch vjp.
+    fn branch_vjp(
+        &self,
+        exec: &Exec,
+        k: usize,
+        x: &Tensor,
+        g: &Tensor,
+    ) -> Result<(Tensor, Tensor, Vec<Tensor>)> {
+        let refs = self.params.refs_for(&exec.spec, k)?;
+        let mut outs = exec.call(&refs, &[ArgValue::F32(x), ArgValue::F32(g)])?;
+        let out = outs.remove(0);
+        let dx = outs.remove(0);
+        Ok((out, dx, outs))
+    }
+
+    fn embed(&self, batch: &Batch) -> Result<Tensor> {
+        let e = self.rt.exec("embed_fwd")?;
+        let refs = self.params.refs_for(&e.spec, 0)?;
+        let out = match (self.family, batch) {
+            (Family::Vit, Batch::Image { images, .. }) => {
+                e.call(&refs, &[ArgValue::F32(images)])?
+            }
+            (Family::Gpt, Batch::Lm { tokens, .. }) => {
+                e.call(&refs, &[ArgValue::I32(tokens)])?
+            }
+            _ => bail!("batch type does not match model family"),
+        };
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn forward(&self, batch: &Batch) -> Result<(RevState, f32, f32)> {
+        let attn = self.rt.exec("attn_fwd")?;
+        let ffn = self.rt.exec("ffn_fwd")?;
+        let x0 = self.embed(batch)?;
+        let mut x1 = x0.clone();
+        let mut x2 = x0;
+        for k in 0..self.rt.manifest.dims.n_blocks {
+            let f = self.branch(attn, k, &x2)?;
+            x1.add_assign(&f)?; // y1 = x1 + F(x2)
+            let g = self.branch(ffn, k, &x1)?;
+            x2.add_assign(&g)?; // y2 = x2 + G(y1)
+        }
+        // fuse streams, run head
+        let mut fused = x1.clone();
+        fused.add_assign(&x2)?;
+        fused.scale(0.5);
+        let head = self.rt.exec("head_loss_fwd")?;
+        let refs = self.params.refs_for(&head.spec, 0)?;
+        let labels = labels_of(batch);
+        let outs = head.call(&refs, &[ArgValue::F32(&fused), ArgValue::I32(labels)])?;
+        let loss = outs[0].scalar_value()?;
+        let ncorrect = outs[1].scalar_value()?;
+        Ok((RevState { y1: x1, y2: x2 }, loss, ncorrect))
+    }
+
+    fn backward(&mut self, batch: &Batch, state: RevState) -> Result<()> {
+        let attn = self.rt.exec("attn_vjp")?;
+        let ffn = self.rt.exec("ffn_vjp")?;
+        // head
+        let mut fused = state.y1.clone();
+        fused.add_assign(&state.y2)?;
+        fused.scale(0.5);
+        let hv = self.rt.exec("head_loss_vjp")?;
+        let refs = self.params.refs_for(&hv.spec, 0)?;
+        let labels = labels_of(batch);
+        let mut outs = hv.call(&refs, &[ArgValue::F32(&fused), ArgValue::I32(labels)])?;
+        let dfused = outs.remove(0);
+        accumulate_leaves(&mut self.grads, "head", 0, &outs)?;
+
+        let mut gy1 = dfused.clone();
+        gy1.scale(0.5);
+        let mut gy2 = dfused;
+        gy2.scale(0.5);
+
+        let (mut y1, mut y2) = (state.y1, state.y2);
+        for k in (0..self.rt.manifest.dims.n_blocks).rev() {
+            // invert: x2 = y2 - G(y1); grads of G at y1 with seed gy2
+            let (g_out, dg_y1, dgp) = self.branch_vjp(ffn, k, &y1, &gy2)?;
+            accumulate_leaves(&mut self.grads, "block", k, &dgp)?;
+            let mut x2 = y2;
+            x2.axpy(-1.0, &g_out)?;
+            let mut gz1 = gy1;
+            gz1.add_assign(&dg_y1)?; // gz1 = gy1 + JG^T gy2
+
+            // invert: x1 = y1 - F(x2); grads of F at x2 with seed gz1
+            let (f_out, df_x2, dfp) = self.branch_vjp(attn, k, &x2, &gz1)?;
+            accumulate_leaves(&mut self.grads, "block", k, &dfp)?;
+            let mut x1 = y1;
+            x1.axpy(-1.0, &f_out)?;
+            let mut gx2 = gy2;
+            gx2.add_assign(&df_x2)?; // gx2 = gy2 + JF^T gz1
+
+            y1 = x1;
+            y2 = x2;
+            gy1 = gz1;
+            gy2 = gx2;
+        }
+        // streams were duplicated from x0: dx0 = gx1 + gx2
+        let mut dx0 = gy1;
+        dx0.add_assign(&gy2)?;
+        // drift diagnostic: reconstructed x1 vs x2 should both equal x0
+        self.inversion_drift = y1.max_abs_diff(&y2).unwrap_or(f32::NAN);
+
+        let ev = self.rt.exec("embed_vjp")?;
+        let refs = self.params.refs_for(&ev.spec, 0)?;
+        let douts = match (self.family, batch) {
+            (Family::Vit, Batch::Image { images, .. }) => {
+                ev.call(&refs, &[ArgValue::F32(images), ArgValue::F32(&dx0)])?
+            }
+            (Family::Gpt, Batch::Lm { tokens, .. }) => {
+                ev.call(&refs, &[ArgValue::I32(tokens), ArgValue::F32(&dx0)])?
+            }
+            _ => bail!("batch type mismatch"),
+        };
+        accumulate_leaves(&mut self.grads, "embed", 0, &douts)?;
+        Ok(())
+    }
+
+    pub fn train_step(&mut self, batch: &Batch) -> Result<crate::coordinator::StepStats> {
+        self.grads.zero();
+        let (state, loss, ncorrect) = self.forward(batch)?;
+        let stored = state.y1.nbytes() + state.y2.nbytes();
+        let acc = ncorrect / batch.n_predictions() as f32;
+        self.backward(batch, state)?;
+        let grad_norm = match self.cfg.grad_clip {
+            Some(c) => clip_global_norm(&mut self.grads, c),
+            None => self.grads.global_norm(),
+        };
+        ensure!(grad_norm.is_finite(), "RevViT grad diverged at step {}", self.step);
+        self.opt.step(&mut self.params, &self.grads)?;
+        self.step += 1;
+        Ok(crate::coordinator::StepStats {
+            loss,
+            acc,
+            grad_norm,
+            stored_activation_bytes: stored,
+        })
+    }
+
+    /// Validation with the RevViT architecture itself (it has no standard-
+    /// transformer inference form — the paper's core criticism).
+    pub fn evaluate(&self, data: &dyn Dataset, n_batches: usize) -> Result<(f32, f32)> {
+        let n = n_batches.min(data.n_val_batches()).max(1);
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut total = 0usize;
+        for i in 0..n {
+            let batch = data.val_batch(i);
+            let (_, loss, nc) = self.forward(&batch)?;
+            loss_sum += loss as f64;
+            correct += nc as f64;
+            total += batch.n_predictions();
+        }
+        Ok(((loss_sum / n as f64) as f32, (correct / total.max(1) as f64) as f32))
+    }
+
+    pub fn run(&mut self, data: &dyn Dataset, run_name: &str) -> Result<TrainLog> {
+        let mut log = TrainLog::new(run_name);
+        let steps = self.cfg.steps;
+        for step in 0..steps {
+            let batch = data.train_batch(step);
+            let t0 = std::time::Instant::now();
+            let stats = self.train_step(&batch)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let eval_due = self.cfg.eval_every > 0
+                && (step % self.cfg.eval_every == self.cfg.eval_every - 1
+                    || step + 1 == steps);
+            let (val_loss, val_acc) = if eval_due {
+                let (l, a) = self.evaluate(data, self.cfg.eval_batches)?;
+                (Some(l), Some(a))
+            } else {
+                (None, None)
+            };
+            if step % self.cfg.log_every == 0 || eval_due || step + 1 == steps {
+                log.push(Record {
+                    step,
+                    train_loss: stats.loss,
+                    train_acc: stats.acc,
+                    val_loss,
+                    val_acc,
+                    grad_norm: stats.grad_norm,
+                    ms_per_step: ms,
+                });
+            }
+        }
+        Ok(log)
+    }
+}
+
+fn labels_of(batch: &Batch) -> &crate::tensor::IntTensor {
+    match batch {
+        Batch::Image { labels, .. } => labels,
+        Batch::Lm { labels, .. } => labels,
+        Batch::Seq2Seq { labels, .. } => labels,
+    }
+}

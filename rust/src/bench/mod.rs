@@ -1,0 +1,73 @@
+//! Minimal micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warms up, runs timed iterations until a wall budget or count is hit, and
+//! reports mean / p50 / p95 like a criterion one-liner.  Bench binaries in
+//! `rust/benches/` use this and print one row per paper table they back.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        )
+    }
+
+    /// Throughput helper: units per second given units-per-iteration.
+    pub fn per_sec(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured, then up to `max_iters` or until
+/// `budget` wall time elapses (at least 3 measured iterations).
+pub fn bench(name: &str, warmup: usize, max_iters: usize, budget: Duration,
+             mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(max_iters);
+    let start = Instant::now();
+    while samples.len() < max_iters
+        && (samples.len() < 3 || start.elapsed() < budget)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    BenchResult { name: name.into(), iters: samples.len(), mean, p50, p95 }
+}
+
+/// Standard budget for exec-heavy benches.
+pub fn default_budget() -> Duration {
+    Duration::from_secs(5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 50, Duration::from_millis(200), || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.p50 <= r.p95);
+        assert!(r.row().contains("spin"));
+    }
+}

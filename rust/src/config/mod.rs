@@ -1,0 +1,231 @@
+//! Configuration system: JSON config files + `key=value` CLI overrides.
+//!
+//! A training run is fully specified by a [`TrainConfig`]; experiment drivers
+//! construct them programmatically, the CLI loads them from `configs/*.json`.
+
+pub mod json;
+
+pub use json::Json;
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which training coordinator to use (the paper's three compared systems).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// BDIA-transformer, exact bit-level reversible (quantized, side info).
+    BdiaReversible,
+    /// BDIA regularization only: float eq. 10, store-all activations
+    /// (Table-2 ablation: "w.o. quantization, w.o. online back-propagation").
+    BdiaFloat,
+    /// Conventional transformer, store-all activations (the "ViT" baseline).
+    Vanilla,
+    /// RevViT-style two-stream reversible baseline [19].
+    RevVit,
+}
+
+impl TrainMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "bdia" | "bdia_reversible" => TrainMode::BdiaReversible,
+            "bdia_float" => TrainMode::BdiaFloat,
+            "vanilla" => TrainMode::Vanilla,
+            "revvit" => TrainMode::RevVit,
+            _ => bail!("unknown mode '{s}' (bdia|bdia_float|vanilla|revvit)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainMode::BdiaReversible => "bdia",
+            TrainMode::BdiaFloat => "bdia_float",
+            TrainMode::Vanilla => "vanilla",
+            TrainMode::RevVit => "revvit",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimKind {
+    Adam,
+    /// SET-Adam [31]: Adam with suppressed adaptive-stepsize range (the
+    /// paper's training configuration).
+    SetAdam,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "adam" => OptimKind::Adam,
+            "setadam" | "set_adam" => OptimKind::SetAdam,
+            _ => bail!("unknown optimizer '{s}' (adam|setadam)"),
+        })
+    }
+}
+
+/// Complete specification of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Artifact bundle name (must exist under `artifacts_dir`).
+    pub model: String,
+    pub mode: TrainMode,
+    /// |gamma| drawn with random sign per sample per block (paper: 0.5).
+    /// 0.0 disables BDIA (reduces to vanilla update even in bdia_float mode).
+    pub gamma_mag: f32,
+    pub dataset: String,
+    pub steps: usize,
+    /// optimizer
+    pub optimizer: OptimKind,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub grad_clip: Option<f32>,
+    /// bookkeeping
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    /// number of held-out batches per evaluation pass
+    pub eval_batches: usize,
+    pub artifacts_dir: PathBuf,
+    /// dataset size knobs (synthetic generators honor these)
+    pub train_examples: usize,
+    pub val_examples: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        // Paper §5.1: SET-Adam (1e-4, 0.9, 0.999, 1e-18).
+        TrainConfig {
+            model: "vit_s10".into(),
+            mode: TrainMode::BdiaReversible,
+            gamma_mag: 0.5,
+            dataset: "synth_cifar10".into(),
+            steps: 200,
+            optimizer: OptimKind::SetAdam,
+            lr: 1e-4,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-18,
+            grad_clip: Some(1.0),
+            seed: 0,
+            log_every: 20,
+            eval_every: 100,
+            eval_batches: 4,
+            artifacts_dir: PathBuf::from("artifacts"),
+            train_examples: 2048,
+            val_examples: 512,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = TrainConfig::default();
+        let obj = j.as_obj()?;
+        for (k, v) in obj {
+            c.apply(k, v).with_context(|| format!("config key '{k}'"))?;
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    fn apply(&mut self, key: &str, v: &Json) -> Result<()> {
+        match key {
+            "model" => self.model = v.as_str()?.into(),
+            "mode" => self.mode = TrainMode::parse(v.as_str()?)?,
+            "gamma_mag" => self.gamma_mag = v.as_f64()? as f32,
+            "dataset" => self.dataset = v.as_str()?.into(),
+            "steps" => self.steps = v.as_usize()?,
+            "optimizer" => self.optimizer = OptimKind::parse(v.as_str()?)?,
+            "lr" => self.lr = v.as_f64()? as f32,
+            "beta1" => self.beta1 = v.as_f64()? as f32,
+            "beta2" => self.beta2 = v.as_f64()? as f32,
+            "eps" => self.eps = v.as_f64()? as f32,
+            "grad_clip" => {
+                self.grad_clip = match v {
+                    Json::Null => None,
+                    _ => Some(v.as_f64()? as f32),
+                }
+            }
+            "seed" => self.seed = v.as_i64()? as u64,
+            "log_every" => self.log_every = v.as_usize()?,
+            "eval_every" => self.eval_every = v.as_usize()?,
+            "eval_batches" => self.eval_batches = v.as_usize()?,
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(v.as_str()?),
+            "train_examples" => self.train_examples = v.as_usize()?,
+            "val_examples" => self.val_examples = v.as_usize()?,
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+
+    /// Apply a `key=value` CLI override (values parsed as JSON when
+    /// possible, else treated as strings).
+    pub fn override_kv(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override must be key=value: '{kv}'"))?;
+        let j = Json::parse(v).unwrap_or_else(|_| Json::Str(v.to_string()));
+        self.apply(k, &j).with_context(|| format!("override '{kv}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.lr, 1e-4);
+        assert_eq!(c.beta1, 0.9);
+        assert_eq!(c.beta2, 0.999);
+        assert_eq!(c.eps, 1e-18);
+        assert_eq!(c.gamma_mag, 0.5);
+        assert_eq!(c.optimizer, OptimKind::SetAdam);
+    }
+
+    #[test]
+    fn from_json_and_overrides() {
+        let j = Json::parse(
+            r#"{"model": "gpt_tiny", "mode": "vanilla", "steps": 50,
+                "lr": 0.001, "grad_clip": null}"#,
+        )
+        .unwrap();
+        let mut c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "gpt_tiny");
+        assert_eq!(c.mode, TrainMode::Vanilla);
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.grad_clip, None);
+        c.override_kv("mode=bdia_float").unwrap();
+        assert_eq!(c.mode, TrainMode::BdiaFloat);
+        c.override_kv("gamma_mag=0.25").unwrap();
+        assert_eq!(c.gamma_mag, 0.25);
+        assert!(c.override_kv("nonsense=1").is_err());
+        assert!(c.override_kv("noequals").is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"modle": "typo"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [
+            TrainMode::BdiaReversible,
+            TrainMode::BdiaFloat,
+            TrainMode::Vanilla,
+            TrainMode::RevVit,
+        ] {
+            assert_eq!(TrainMode::parse(m.name()).unwrap(), m);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's system contribution: the BDIA reversible training coordinator.
+//!
+//! * [`stack`] — the per-tower engine: BDIA forward recorder (eqs. 18-21),
+//!   exact eq.-24 reconstruction, online-backprop adjoint scheduler.
+//! * [`trainer`] — the full training loop (embed/head plumbing, gradient
+//!   accumulation, optimizer, fused-inference evaluation with runtime gamma).
+//!
+//! Modes (see [`crate::config::TrainMode`]):
+//! * `BdiaReversible` — the paper's headline system: quantized activations,
+//!   1-bit side info, O(1)-in-depth activation memory.
+//! * `BdiaFloat` — BDIA regularization only (Table-2 ablation; stores all).
+//! * `Vanilla` — conventional transformer (gamma = 0, stores all).
+//! * RevViT lives in [`crate::baseline::revvit`].
+
+pub mod stack;
+pub mod trainer;
+
+pub use stack::{GammaPlan, Stack, StackKind, StackState};
+pub use trainer::{evaluate_params, ForwardState, StepStats, Trainer};

@@ -1,0 +1,469 @@
+//! Stack engine: BDIA forward/backward over one tower of transformer blocks.
+//!
+//! This is the paper's system contribution (§4): the *online back-propagation
+//! scheduler*.  The forward pass stores only the two boundary activations
+//! `(x_{K-1}, x_K)` plus 1-bit side information per block (quantized mode);
+//! the backward pass walks blocks top-down, reconstructing `x_{k-1}` exactly
+//! (eq. 24) while propagating the two-term BDIA adjoint recursion
+//!
+//!   `dL/dx_k     += (1-gamma_k) dL/dx_{k+1} + J_h^T [(1+gamma_k) dL/dx_{k+1}]`
+//!   `dL/dx_{k-1} += gamma_k dL/dx_{k+1}`
+//!
+//! with the straight-through convention through `Q_l` (the paper's implicit
+//! choice).  The `block_vjp` executable returns `(h, dx, [dmem], dparams...)`
+//! so one call per block serves both the reconstruction (h) and the adjoint.
+//!
+//! Float mode (quantization off, store-all) implements eq. 10 and the same
+//! adjoint — it is both the Table-2 ablation path and, with gamma = 0, the
+//! exact conventional-transformer baseline.
+
+use crate::quant::{self, BitVec, Fixed, SideInfoStore};
+use crate::runtime::{ArgValue, Exec, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+
+/// Identifies which tower of blocks we operate on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StackKind {
+    /// decoder / self stack: "block_fwd"/"block_vjp", group "block"
+    Main,
+    /// encoder stack (encdec only): "enc_block_fwd"/"enc_block_vjp"
+    Encoder,
+}
+
+impl StackKind {
+    pub fn fwd_exec(&self) -> &'static str {
+        match self {
+            StackKind::Main => "block_fwd",
+            StackKind::Encoder => "enc_block_fwd",
+        }
+    }
+
+    pub fn vjp_exec(&self) -> &'static str {
+        match self {
+            StackKind::Main => "block_vjp",
+            StackKind::Encoder => "enc_block_vjp",
+        }
+    }
+
+    pub fn group(&self) -> &'static str {
+        match self {
+            StackKind::Main => "block",
+            StackKind::Encoder => "enc_block",
+        }
+    }
+}
+
+/// Per-step BDIA randomness for one stack: `gammas[k][b]` for blocks
+/// `k = 1..K-1` (block 0 uses the plain Euler step, eq. 19/6).
+#[derive(Clone, Debug)]
+pub struct GammaPlan {
+    /// per-block, per-sample gamma values (0.0 => plain residual)
+    pub gammas: Vec<Vec<f32>>,
+}
+
+impl GammaPlan {
+    /// Draw signs * magnitude per sample per block (paper §4.2).
+    pub fn draw(rng: &mut crate::tensor::Rng, n_blocks: usize, batch: usize,
+                magnitude: f32) -> Self {
+        let gammas = (0..n_blocks)
+            .map(|k| {
+                (0..batch)
+                    .map(|_| if k == 0 || magnitude == 0.0 {
+                        0.0
+                    } else {
+                        magnitude * rng.sign() as f32
+                    })
+                    .collect()
+            })
+            .collect();
+        GammaPlan { gammas }
+    }
+
+    /// Constant gamma across blocks and samples (Fig.-1 inference sweep).
+    pub fn constant(n_blocks: usize, batch: usize, gamma: f32) -> Self {
+        let mut gammas = vec![vec![gamma; batch]; n_blocks];
+        gammas[0] = vec![0.0; batch];
+        GammaPlan { gammas }
+    }
+
+    /// Signs (+1/-1) for the quantized path; errors if |gamma| != 0.5.
+    pub fn signs(&self, k: usize) -> Result<Vec<i8>> {
+        self.gammas[k]
+            .iter()
+            .map(|&g| {
+                ensure!(
+                    g == 0.5 || g == -0.5,
+                    "exact reversibility requires gamma = +/-0.5, got {g} \
+                     (use float mode for other magnitudes)"
+                );
+                Ok(if g > 0.0 { 1i8 } else { -1 })
+            })
+            .collect()
+    }
+}
+
+/// What the forward pass keeps for the backward pass.
+pub enum StackState {
+    /// Quantized reversible mode: boundaries + side info (eq. 20-21).
+    Reversible {
+        x_last: Tensor,
+        x_prev: Tensor,
+        side: SideInfoStore,
+    },
+    /// Float mode: all inter-block activations x_0..x_K (store-all).
+    Full { xs: Vec<Tensor> },
+}
+
+impl StackState {
+    /// Persistent activation bytes actually held (live accounting).
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            StackState::Reversible { x_last, x_prev, side } => {
+                x_last.nbytes() + x_prev.nbytes() + side.nbytes()
+            }
+            StackState::Full { xs } => xs.iter().map(Tensor::nbytes).sum(),
+        }
+    }
+
+    pub fn output(&self) -> &Tensor {
+        match self {
+            StackState::Reversible { x_last, .. } => x_last,
+            StackState::Full { xs } => xs.last().expect("nonempty stack"),
+        }
+    }
+}
+
+/// Gradients produced by a stack backward.
+pub struct StackGrads {
+    /// dL/dx_0 (flows into the embedding vjp)
+    pub dx0: Tensor,
+    /// dL/dmem accumulated over blocks (encdec decoder only)
+    pub dmem: Option<Tensor>,
+    /// per-block parameter grads, `[block][leaf]`
+    pub dparams: Vec<Vec<Tensor>>,
+}
+
+pub struct Stack<'rt> {
+    pub kind: StackKind,
+    pub n_blocks: usize,
+    pub has_mem: bool,
+    fwd: &'rt Exec,
+    vjp: &'rt Exec,
+    #[allow(dead_code)]
+    rt: &'rt Runtime,
+    pub fixed: Fixed,
+}
+
+impl<'rt> Stack<'rt> {
+    pub fn new(rt: &'rt Runtime, kind: StackKind) -> Result<Self> {
+        let n_blocks = match kind {
+            StackKind::Main => rt.manifest.dims.n_blocks,
+            StackKind::Encoder => rt.manifest.dims.n_enc_blocks,
+        };
+        ensure!(n_blocks >= 2, "BDIA stack needs >= 2 blocks, got {n_blocks}");
+        let has_mem = kind == StackKind::Main
+            && rt.manifest.family == crate::model::Family::EncDec;
+        Ok(Stack {
+            kind,
+            n_blocks,
+            has_mem,
+            fwd: rt.exec(kind.fwd_exec())?,
+            vjp: rt.exec(kind.vjp_exec())?,
+            rt,
+            fixed: Fixed::new(rt.manifest.dims.lbits),
+        })
+    }
+
+    /// Public access to the block-forward executable (experiment drivers,
+    /// Fig.-2 reconstruction probes, tests).
+    pub fn debug_call_fwd(
+        &self,
+        params: &crate::model::ParamStore,
+        k: usize,
+        x: &Tensor,
+        mem: Option<&Tensor>,
+    ) -> Result<Tensor> {
+        self.call_fwd(params, k, x, mem)
+    }
+
+    fn call_fwd(
+        &self,
+        params: &crate::model::ParamStore,
+        k: usize,
+        x: &Tensor,
+        mem: Option<&Tensor>,
+    ) -> Result<Tensor> {
+        let refs = params.refs_for(&self.fwd.spec, k)?;
+        let mut data = vec![ArgValue::F32(x)];
+        if let Some(m) = mem {
+            data.push(ArgValue::F32(m));
+        }
+        Ok(self
+            .fwd
+            .call(&refs, &data)
+            .with_context(|| format!("{} block {k}", self.kind.fwd_exec()))?
+            .remove(0))
+    }
+
+    /// (h, dx, dmem?, dparams...) from the fused vjp executable.
+    fn call_vjp(
+        &self,
+        params: &crate::model::ParamStore,
+        k: usize,
+        x: &Tensor,
+        mem: Option<&Tensor>,
+        seed: &Tensor,
+    ) -> Result<(Tensor, Tensor, Option<Tensor>, Vec<Tensor>)> {
+        let refs = params.refs_for(&self.vjp.spec, k)?;
+        let mut data = vec![ArgValue::F32(x)];
+        if let Some(m) = mem {
+            data.push(ArgValue::F32(m));
+        }
+        data.push(ArgValue::F32(seed));
+        let mut outs = self
+            .vjp
+            .call(&refs, &data)
+            .with_context(|| format!("{} block {k}", self.kind.vjp_exec()))?;
+        let h = outs.remove(0);
+        let dx = outs.remove(0);
+        let dmem = if self.has_mem { Some(outs.remove(0)) } else { None };
+        Ok((h, dx, dmem, outs))
+    }
+
+    // -----------------------------------------------------------------
+    // forward
+    // -----------------------------------------------------------------
+
+    /// Quantized reversible forward (eqs. 18-21). `x0` is quantized in
+    /// place-of-copy (eq. 18) before the first block.
+    pub fn forward_quant(
+        &self,
+        params: &crate::model::ParamStore,
+        mut x0: Tensor,
+        mem: Option<&Tensor>,
+        plan: &GammaPlan,
+    ) -> Result<StackState> {
+        quant::quantize_activation(&mut x0, self.fixed); // eq. 18
+        let h0 = self.call_fwd(params, 0, &x0, mem)?;
+        let x1 = quant::first_step_quant(&x0, &h0, self.fixed)?; // eq. 19
+        let mut side = SideInfoStore::new(self.n_blocks);
+        let (mut x_prev, mut x_cur) = (x0, x1);
+        for k in 1..self.n_blocks {
+            let h = self.call_fwd(params, k, &x_cur, mem)?;
+            let signs = plan.signs(k)?;
+            let (x_next, bits) =
+                quant::bdia_forward_quant(&x_prev, &x_cur, &h, &signs, self.fixed)?;
+            side.put(k, bits); // s_{k-1}, consumed when backward visits k
+            x_prev = x_cur;
+            x_cur = x_next;
+        }
+        Ok(StackState::Reversible { x_last: x_cur, x_prev, side })
+    }
+
+    /// Float forward (eq. 10), storing all activations.  With all gammas 0
+    /// this is exactly the conventional transformer forward.
+    pub fn forward_float(
+        &self,
+        params: &crate::model::ParamStore,
+        x0: Tensor,
+        mem: Option<&Tensor>,
+        plan: &GammaPlan,
+    ) -> Result<StackState> {
+        let mut xs = Vec::with_capacity(self.n_blocks + 1);
+        let h0 = self.call_fwd(params, 0, &x0, mem)?;
+        let mut x1 = x0.clone();
+        x1.add_assign(&h0)?;
+        xs.push(x0);
+        xs.push(x1);
+        for k in 1..self.n_blocks {
+            let h = self.call_fwd(params, k, &xs[k], mem)?;
+            let x_next =
+                quant::bdia_forward_float(&xs[k - 1], &xs[k], &h, &plan.gammas[k])?;
+            xs.push(x_next);
+        }
+        Ok(StackState::Full { xs })
+    }
+
+    // -----------------------------------------------------------------
+    // backward
+    // -----------------------------------------------------------------
+
+    /// Online backward over the stack.  `gx_last` = dL/dx_K from the head
+    /// (or the accumulated dmem for an encoder stack).
+    ///
+    /// In `Reversible` mode activations are *reconstructed* (eq. 24) — the
+    /// memory story of the paper; in `Full` mode they are read from storage.
+    /// Both modes propagate the identical adjoint, so their gradients agree
+    /// bit-for-bit when fed the same activations (asserted by tests).
+    pub fn backward(
+        &self,
+        params: &crate::model::ParamStore,
+        state: StackState,
+        mem: Option<&Tensor>,
+        plan: &GammaPlan,
+        gx_last: Tensor,
+    ) -> Result<StackGrads> {
+        match state {
+            StackState::Reversible { x_last, x_prev, mut side } => self
+                .backward_reversible(params, x_last, x_prev, &mut side, mem, plan, gx_last),
+            StackState::Full { xs } => self.backward_full(params, &xs, mem, plan, gx_last),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn backward_reversible(
+        &self,
+        params: &crate::model::ParamStore,
+        x_last: Tensor,
+        x_prev: Tensor,
+        side: &mut SideInfoStore,
+        mem: Option<&Tensor>,
+        plan: &GammaPlan,
+        gx_last: Tensor,
+    ) -> Result<StackGrads> {
+        let k_total = self.n_blocks;
+        let mut dparams: Vec<Vec<Tensor>> = vec![Vec::new(); k_total];
+        let mut dmem_acc: Option<Tensor> = None;
+
+        // window: x_next = x_{k+1}, x_cur = x_k while visiting block step k
+        let mut x_next = x_last;
+        let mut x_cur = x_prev;
+        // gx = dL/dx_{k+1}; gx_mid = partial dL/dx_k
+        let mut gx = gx_last;
+        let mut gx_mid = Tensor::zeros(gx.shape());
+
+        for k in (1..k_total).rev() {
+            let gammas = &plan.gammas[k];
+            let coeff_seed: Vec<f32> = gammas.iter().map(|g| 1.0 + g).collect();
+            let coeff_skip: Vec<f32> = gammas.iter().map(|g| 1.0 - g).collect();
+
+            let seed = quant::scale_rows(&gx, &coeff_seed)?;
+            let (h, dx, dmem, dp) = self.call_vjp(params, k, &x_cur, mem, &seed)?;
+            dparams[k] = dp;
+            if let Some(dm) = dmem {
+                match &mut dmem_acc {
+                    Some(acc) => acc.add_assign(&dm)?,
+                    None => dmem_acc = Some(dm),
+                }
+            }
+
+            // adjoint recursion
+            quant::axpy_rows(&mut gx_mid, &coeff_skip, &gx)?;
+            gx_mid.add_assign(&dx)?;
+            let gx_prev = quant::scale_rows(&gx, gammas)?;
+
+            // exact reconstruction of x_{k-1} (eq. 24)
+            let bits: BitVec = side
+                .take(k)
+                .ok_or_else(|| anyhow::anyhow!("missing side info for block {k}"))?;
+            let signs = plan.signs(k)?;
+            let x_rec = quant::bdia_reconstruct_quant(
+                &x_next, &x_cur, &h, &bits, &signs, self.fixed,
+            )?;
+
+            x_next = x_cur;
+            x_cur = x_rec;
+            gx = gx_mid;
+            gx_mid = gx_prev;
+        }
+
+        // block 0: x_1 = x_0 + Q[h_0(x_0)] — STE through Q
+        let (_h0, dx0, dmem0, dp0) = self.call_vjp(params, 0, &x_cur, mem, &gx)?;
+        dparams[0] = dp0;
+        if let Some(dm) = dmem0 {
+            match &mut dmem_acc {
+                Some(acc) => acc.add_assign(&dm)?,
+                None => dmem_acc = Some(dm),
+            }
+        }
+        let mut dx_total = gx; // dL/dx_1 passes straight through the residual
+        dx_total.add_assign(&gx_mid)?; // gamma contribution from step 1
+        dx_total.add_assign(&dx0)?;
+        Ok(StackGrads { dx0: dx_total, dmem: dmem_acc, dparams })
+    }
+
+    fn backward_full(
+        &self,
+        params: &crate::model::ParamStore,
+        xs: &[Tensor],
+        mem: Option<&Tensor>,
+        plan: &GammaPlan,
+        gx_last: Tensor,
+    ) -> Result<StackGrads> {
+        let k_total = self.n_blocks;
+        ensure!(xs.len() == k_total + 1, "activation store mismatch");
+        let mut dparams: Vec<Vec<Tensor>> = vec![Vec::new(); k_total];
+        let mut dmem_acc: Option<Tensor> = None;
+        let mut gx = gx_last;
+        let mut gx_mid = Tensor::zeros(gx.shape());
+
+        for k in (1..k_total).rev() {
+            let gammas = &plan.gammas[k];
+            let coeff_seed: Vec<f32> = gammas.iter().map(|g| 1.0 + g).collect();
+            let coeff_skip: Vec<f32> = gammas.iter().map(|g| 1.0 - g).collect();
+            let seed = quant::scale_rows(&gx, &coeff_seed)?;
+            let (_h, dx, dmem, dp) = self.call_vjp(params, k, &xs[k], mem, &seed)?;
+            dparams[k] = dp;
+            if let Some(dm) = dmem {
+                match &mut dmem_acc {
+                    Some(acc) => acc.add_assign(&dm)?,
+                    None => dmem_acc = Some(dm),
+                }
+            }
+            quant::axpy_rows(&mut gx_mid, &coeff_skip, &gx)?;
+            gx_mid.add_assign(&dx)?;
+            let gx_prev = quant::scale_rows(&gx, gammas)?;
+            gx = gx_mid;
+            gx_mid = gx_prev;
+        }
+
+        let (_h0, dx0, dmem0, dp0) = self.call_vjp(params, 0, &xs[0], mem, &gx)?;
+        dparams[0] = dp0;
+        if let Some(dm) = dmem0 {
+            match &mut dmem_acc {
+                Some(acc) => acc.add_assign(&dm)?,
+                None => dmem_acc = Some(dm),
+            }
+        }
+        let mut dx_total = gx;
+        dx_total.add_assign(&gx_mid)?;
+        dx_total.add_assign(&dx0)?;
+        Ok(StackGrads { dx0: dx_total, dmem: dmem_acc, dparams })
+    }
+
+    /// Reconstruct every activation from boundaries + side info WITHOUT
+    /// back-propagating — used by the Fig.-2 analogue and exactness tests.
+    /// Returns `xs[0..=K]` (reconstructed where k < K-1).
+    pub fn reconstruct_all(
+        &self,
+        params: &crate::model::ParamStore,
+        state: &StackState,
+        mem: Option<&Tensor>,
+        plan: &GammaPlan,
+    ) -> Result<Vec<Tensor>> {
+        match state {
+            StackState::Full { xs } => Ok(xs.clone()),
+            StackState::Reversible { x_last, x_prev, side } => {
+                let mut rev = vec![x_last.clone(), x_prev.clone()];
+                let mut x_next = x_last.clone();
+                let mut x_cur = x_prev.clone();
+                for k in (1..self.n_blocks).rev() {
+                    let h = self.call_fwd(params, k, &x_cur, mem)?;
+                    let bits = side
+                        .get(k)
+                        .ok_or_else(|| anyhow::anyhow!("missing side info {k}"))?;
+                    let signs = plan.signs(k)?;
+                    let x_rec = quant::bdia_reconstruct_quant(
+                        &x_next, &x_cur, &h, bits, &signs, self.fixed,
+                    )?;
+                    rev.push(x_rec.clone());
+                    x_next = x_cur;
+                    x_cur = x_rec;
+                }
+                rev.reverse();
+                Ok(rev)
+            }
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! The BDIA training coordinator: full training loop over AOT executables.
+//!
+//! Composes embed -> stack(s) -> head around the [`Stack`] engine, owns the
+//! parameters/optimizer/gradient accumulators, and exposes the evaluation
+//! path (fused `model_infer`, gamma as a runtime input).  Python is never on
+//! this path.
+
+use super::stack::{GammaPlan, Stack, StackKind, StackState};
+use crate::config::{TrainConfig, TrainMode};
+use crate::data::{Batch, Dataset};
+use crate::metrics::{Record, TrainLog};
+use crate::model::{Family, ParamStore};
+use crate::optim::{clip_global_norm, Optimizer};
+use crate::runtime::{ArgValue, Runtime};
+use crate::tensor::{Rng, Tensor};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Everything the forward pass hands to the backward pass.
+pub struct ForwardState {
+    pub main: StackState,
+    pub enc: Option<StackState>,
+    /// encoder output = cross-attention memory (encdec only)
+    pub mem: Option<Tensor>,
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub main_plan: GammaPlan,
+    pub enc_plan: Option<GammaPlan>,
+}
+
+impl ForwardState {
+    /// Persistent activation bytes held for backward (live Table-1 number).
+    pub fn stored_bytes(&self) -> usize {
+        self.main.stored_bytes()
+            + self.enc.as_ref().map_or(0, StackState::stored_bytes)
+            + self.mem.as_ref().map_or(0, Tensor::nbytes)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    pub acc: f32,
+    pub grad_norm: f32,
+    pub stored_activation_bytes: usize,
+}
+
+pub struct Trainer {
+    pub rt: Runtime,
+    pub params: ParamStore,
+    grads: ParamStore,
+    pub opt: Optimizer,
+    pub cfg: TrainConfig,
+    pub family: Family,
+    rng_gamma: Rng,
+    step: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)
+            .with_context(|| format!("loading bundle '{}'", cfg.model))?;
+        Self::with_runtime(cfg, rt)
+    }
+
+    pub fn with_runtime(cfg: TrainConfig, rt: Runtime) -> Result<Self> {
+        if cfg.mode == TrainMode::RevVit {
+            bail!("RevViT uses baseline::revvit::RevVitTrainer");
+        }
+        if cfg.mode == TrainMode::BdiaReversible {
+            ensure!(
+                cfg.gamma_mag == 0.5,
+                "exact bit-level reversibility requires |gamma| = 0.5 \
+                 (paper §4.3); got {} — use mode=bdia_float for the ablation",
+                cfg.gamma_mag
+            );
+        }
+        let family = rt.manifest.family;
+        let params = ParamStore::init(&rt.manifest, cfg.seed);
+        let grads = params.zeros_like();
+        let opt = Optimizer::new(&cfg, &params);
+        let rng_gamma = Rng::new(cfg.seed ^ 0xbd1a_bd1a);
+        Ok(Trainer { rt, params, grads, opt, cfg, family, rng_gamma, step: 0 })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.n_params()
+    }
+
+    fn effective_gamma(&self) -> f32 {
+        match self.cfg.mode {
+            TrainMode::Vanilla => 0.0,
+            _ => self.cfg.gamma_mag,
+        }
+    }
+
+    fn draw_plan(&mut self, n_blocks: usize) -> GammaPlan {
+        let mag = self.effective_gamma();
+        GammaPlan::draw(&mut self.rng_gamma, n_blocks, self.rt.manifest.dims.batch, mag)
+    }
+
+    // ------------------------------------------------------------------
+    // embed / head plumbing (family-specific)
+    // ------------------------------------------------------------------
+
+    fn embed_forward(&self, batch: &Batch) -> Result<Tensor> {
+        let e = self.rt.exec("embed_fwd")?;
+        let refs = self.params.refs_for(&e.spec, 0)?;
+        let out = match (self.family, batch) {
+            (Family::Vit, Batch::Image { images, .. }) => {
+                e.call(&refs, &[ArgValue::F32(images)])?
+            }
+            (Family::Gpt, Batch::Lm { tokens, .. }) => {
+                e.call(&refs, &[ArgValue::I32(tokens)])?
+            }
+            (Family::EncDec, Batch::Seq2Seq { tgt_in, .. }) => {
+                e.call(&refs, &[ArgValue::I32(tgt_in)])?
+            }
+            _ => bail!("batch type does not match model family"),
+        };
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn enc_embed_forward(&self, batch: &Batch) -> Result<Tensor> {
+        let e = self.rt.exec("enc_embed_fwd")?;
+        let refs = self.params.refs_for(&e.spec, 0)?;
+        let Batch::Seq2Seq { src, .. } = batch else {
+            bail!("encoder needs a seq2seq batch")
+        };
+        Ok(e.call(&refs, &[ArgValue::I32(src)])?.remove(0))
+    }
+
+    fn head_loss(&self, x: &Tensor, batch: &Batch) -> Result<(f32, f32)> {
+        let e = self.rt.exec("head_loss_fwd")?;
+        let refs = self.params.refs_for(&e.spec, 0)?;
+        let labels = batch_labels(batch);
+        let outs = e.call(&refs, &[ArgValue::F32(x), ArgValue::I32(labels)])?;
+        Ok((outs[0].scalar_value()?, outs[1].scalar_value()?))
+    }
+
+    /// (dL/dx_K, head grads)
+    fn head_vjp(&self, x: &Tensor, batch: &Batch) -> Result<(Tensor, Vec<Tensor>)> {
+        let e = self.rt.exec("head_loss_vjp")?;
+        let refs = self.params.refs_for(&e.spec, 0)?;
+        let labels = batch_labels(batch);
+        let mut outs = e.call(&refs, &[ArgValue::F32(x), ArgValue::I32(labels)])?;
+        let dx = outs.remove(0);
+        Ok((dx, outs))
+    }
+
+    fn embed_vjp(&self, exec: &str, batch: &Batch, g: &Tensor) -> Result<Vec<Tensor>> {
+        let e = self.rt.exec(exec)?;
+        let refs = self.params.refs_for(&e.spec, 0)?;
+        let outs = match (self.family, batch, exec) {
+            (Family::Vit, Batch::Image { images, .. }, _) => {
+                e.call(&refs, &[ArgValue::F32(images), ArgValue::F32(g)])?
+            }
+            (Family::Gpt, Batch::Lm { tokens, .. }, _) => {
+                e.call(&refs, &[ArgValue::I32(tokens), ArgValue::F32(g)])?
+            }
+            (Family::EncDec, Batch::Seq2Seq { tgt_in, .. }, "embed_vjp") => {
+                e.call(&refs, &[ArgValue::I32(tgt_in), ArgValue::F32(g)])?
+            }
+            (Family::EncDec, Batch::Seq2Seq { src, .. }, "enc_embed_vjp") => {
+                e.call(&refs, &[ArgValue::I32(src), ArgValue::F32(g)])?
+            }
+            _ => bail!("batch type does not match model family"),
+        };
+        Ok(outs)
+    }
+
+    // ------------------------------------------------------------------
+    // forward / backward / step
+    // ------------------------------------------------------------------
+
+    pub fn forward(&mut self, batch: &Batch) -> Result<ForwardState> {
+        let quantized = self.cfg.mode == TrainMode::BdiaReversible;
+        let (enc, mem, enc_plan) = if self.family == Family::EncDec {
+            let plan = self.draw_plan(self.rt.manifest.dims.n_enc_blocks);
+            let enc_stack = Stack::new(&self.rt, StackKind::Encoder)?;
+            let xe = self.enc_embed_forward(batch)?;
+            let state = if quantized {
+                enc_stack.forward_quant(&self.params, xe, None, &plan)?
+            } else {
+                enc_stack.forward_float(&self.params, xe, None, &plan)?
+            };
+            let mem = state.output().clone();
+            (Some(state), Some(mem), Some(plan))
+        } else {
+            (None, None, None)
+        };
+
+        let plan = self.draw_plan(self.rt.manifest.dims.n_blocks);
+        let stack = Stack::new(&self.rt, StackKind::Main)?;
+        let x0 = self.embed_forward(batch)?;
+        let state = if quantized {
+            stack.forward_quant(&self.params, x0, mem.as_ref(), &plan)?
+        } else {
+            stack.forward_float(&self.params, x0, mem.as_ref(), &plan)?
+        };
+        let (loss, ncorrect) = self.head_loss(state.output(), batch)?;
+        Ok(ForwardState {
+            main: state,
+            enc,
+            mem,
+            loss,
+            ncorrect,
+            main_plan: plan,
+            enc_plan,
+        })
+    }
+
+    /// Backward + gradient accumulation into `self.grads`.
+    pub fn backward(&mut self, batch: &Batch, fs: ForwardState) -> Result<()> {
+        // head
+        let (gx_last, dhead) = self.head_vjp(fs.main.output(), batch)?;
+        accumulate_leaves(&mut self.grads, "head", 0, &dhead)?;
+
+        // main stack (online reconstruction in reversible mode)
+        let stack = Stack::new(&self.rt, StackKind::Main)?;
+        let sg = stack.backward(
+            &self.params,
+            fs.main,
+            fs.mem.as_ref(),
+            &fs.main_plan,
+            gx_last,
+        )?;
+        for (k, dp) in sg.dparams.iter().enumerate() {
+            accumulate_leaves(&mut self.grads, "block", k, dp)?;
+        }
+        let dembed = self.embed_vjp("embed_vjp", batch, &sg.dx0)?;
+        accumulate_leaves(&mut self.grads, "embed", 0, &dembed)?;
+
+        // encoder stack driven by the accumulated cross-attention grads
+        if let Some(enc_state) = fs.enc {
+            let dmem = sg
+                .dmem
+                .ok_or_else(|| anyhow::anyhow!("decoder produced no dmem"))?;
+            let enc_stack = Stack::new(&self.rt, StackKind::Encoder)?;
+            let esg = enc_stack.backward(
+                &self.params,
+                enc_state,
+                None,
+                fs.enc_plan.as_ref().expect("enc plan"),
+                dmem,
+            )?;
+            for (k, dp) in esg.dparams.iter().enumerate() {
+                accumulate_leaves(&mut self.grads, "enc_block", k, dp)?;
+            }
+            let deemb = self.embed_vjp("enc_embed_vjp", batch, &esg.dx0)?;
+            accumulate_leaves(&mut self.grads, "enc_embed", 0, &deemb)?;
+        }
+        Ok(())
+    }
+
+    /// One full optimization step. Returns the step's statistics.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<StepStats> {
+        self.grads.zero();
+        let fs = self.forward(batch)?;
+        let loss = fs.loss;
+        let acc = fs.ncorrect / batch.n_predictions() as f32;
+        let stored = fs.stored_bytes();
+        self.backward(batch, fs)?;
+        let grad_norm = match self.cfg.grad_clip {
+            Some(c) => clip_global_norm(&mut self.grads, c),
+            None => self.grads.global_norm(),
+        };
+        ensure!(grad_norm.is_finite(), "gradient norm diverged at step {}", self.step);
+        self.opt.step(&mut self.params, &self.grads)?;
+        self.step += 1;
+        Ok(StepStats { loss, acc, grad_norm, stored_activation_bytes: stored })
+    }
+
+    /// Borrow the gradient accumulator (tests compare grads across modes).
+    pub fn grads(&self) -> &ParamStore {
+        &self.grads
+    }
+
+    // ------------------------------------------------------------------
+    // evaluation (fused quantized inference, eqs. 18-22; Fig.-1 sweep)
+    // ------------------------------------------------------------------
+
+    /// Mean (val_loss, val_acc) over `n_batches` held-out batches with a
+    /// constant inference gamma (0 = the paper's standard inference).
+    pub fn evaluate(&self, data: &dyn Dataset, n_batches: usize, gamma: f32)
+        -> Result<(f32, f32)> {
+        evaluate_params(&self.rt, &self.params, data, n_batches, gamma)
+    }
+
+    /// Full training loop with periodic evaluation; returns the log.
+    pub fn run(&mut self, data: &dyn Dataset, run_name: &str) -> Result<TrainLog> {
+        let mut log = TrainLog::new(run_name);
+        let steps = self.cfg.steps;
+        for step in 0..steps {
+            let batch = data.train_batch(step);
+            let t0 = std::time::Instant::now();
+            let stats = self.train_step(&batch)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let eval_due = self.cfg.eval_every > 0
+                && (step % self.cfg.eval_every == self.cfg.eval_every - 1
+                    || step + 1 == steps);
+            let (val_loss, val_acc) = if eval_due {
+                let (l, a) = self.evaluate(data, self.cfg.eval_batches, 0.0)?;
+                (Some(l), Some(a))
+            } else {
+                (None, None)
+            };
+            if step % self.cfg.log_every == 0 || eval_due || step + 1 == steps {
+                log.push(Record {
+                    step,
+                    train_loss: stats.loss,
+                    train_acc: stats.acc,
+                    val_loss,
+                    val_acc,
+                    grad_norm: stats.grad_norm,
+                    ms_per_step: ms,
+                });
+            }
+        }
+        Ok(log)
+    }
+}
+
+/// Shared fused-inference evaluation (used by Trainer and RevVit's probes).
+pub fn evaluate_params(
+    rt: &Runtime,
+    params: &ParamStore,
+    data: &dyn Dataset,
+    n_batches: usize,
+    gamma: f32,
+) -> Result<(f32, f32)> {
+    let e = rt.exec("model_infer")?;
+    let refs = params.refs_for(&e.spec, 0)?;
+    let n = n_batches.min(data.n_val_batches()).max(1);
+    let mut loss_sum = 0f64;
+    let mut correct = 0f64;
+    let mut total = 0usize;
+    for i in 0..n {
+        let batch = data.val_batch(i);
+        let outs = match &batch {
+            Batch::Image { images, labels } => e.call(
+                &refs,
+                &[ArgValue::F32(images), ArgValue::I32(labels), ArgValue::Scalar(gamma)],
+            )?,
+            Batch::Lm { tokens, labels } => e.call(
+                &refs,
+                &[ArgValue::I32(tokens), ArgValue::I32(labels), ArgValue::Scalar(gamma)],
+            )?,
+            Batch::Seq2Seq { src, tgt_in, labels } => e.call(
+                &refs,
+                &[
+                    ArgValue::I32(src),
+                    ArgValue::I32(tgt_in),
+                    ArgValue::I32(labels),
+                    ArgValue::Scalar(gamma),
+                ],
+            )?,
+        };
+        loss_sum += outs[0].scalar_value()? as f64;
+        correct += outs[1].scalar_value()? as f64;
+        total += batch.n_predictions();
+    }
+    Ok(((loss_sum / n as f64) as f32, (correct / total.max(1) as f64) as f32))
+}
+
+fn batch_labels(batch: &Batch) -> &crate::tensor::IntTensor {
+    match batch {
+        Batch::Image { labels, .. } => labels,
+        Batch::Lm { labels, .. } => labels,
+        Batch::Seq2Seq { labels, .. } => labels,
+    }
+}
+
+/// grads[group][instance][leaf] += deltas[leaf]
+pub fn accumulate_leaves(
+    grads: &mut ParamStore,
+    group: &str,
+    instance: usize,
+    deltas: &[Tensor],
+) -> Result<()> {
+    let inst = grads.leaves_mut(group, instance);
+    ensure!(
+        inst.len() == deltas.len(),
+        "grad leaf count mismatch for {group}[{instance}]: {} vs {}",
+        inst.len(),
+        deltas.len()
+    );
+    for (t, d) in inst.iter_mut().zip(deltas) {
+        t.add_assign(d)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Class-conditional synthetic image dataset (CIFAR10/100 stand-in).
+//!
+//! Each class owns a deterministic low-frequency "texture prototype" — a sum
+//! of random 2-D sinusoids per channel — and a sample is `prototype +
+//! sigma * N(0,1)` pixel noise plus a random circular shift (so the task
+//! needs more than a single template match but remains learnable by a small
+//! ViT).  Labels are balanced; every example is a pure function of
+//! `(seed, split, index)`.
+
+use super::{Batch, Dataset};
+use crate::model::{Dims, Family};
+use crate::tensor::{IntTensor, Rng, Tensor};
+
+const NOISE_SIGMA: f32 = 2.5;
+const N_WAVES: usize = 5;
+
+pub struct SynthImage {
+    dims: Dims,
+    seed: u64,
+    train_examples: usize,
+    val_examples: usize,
+    /// per-class sinusoid banks: (freq_x, freq_y, phase, amp) per channel
+    protos: Vec<Vec<[f32; 4]>>,
+    name: String,
+}
+
+impl SynthImage {
+    pub fn new(dims: Dims, seed: u64, train_examples: usize, val_examples: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5159_1a9e);
+        let mut protos = Vec::with_capacity(dims.n_classes);
+        for _ in 0..dims.n_classes {
+            let mut waves = Vec::with_capacity(dims.channels * N_WAVES);
+            for _ in 0..dims.channels * N_WAVES {
+                waves.push([
+                    rng.uniform() * 0.9 + 0.1, // freq x (cycles / image)
+                    rng.uniform() * 0.9 + 0.1, // freq y
+                    rng.uniform() * std::f32::consts::TAU,
+                    rng.normal() * 0.5,
+                ]);
+            }
+            protos.push(waves);
+        }
+        let name = format!("synth_image(c{})", dims.n_classes);
+        SynthImage { dims, seed, train_examples, val_examples, protos, name }
+    }
+
+    fn proto_pixel(&self, class: usize, ch: usize, x: f32, y: f32) -> f32 {
+        let mut v = 0.0;
+        for w in &self.protos[class][ch * N_WAVES..(ch + 1) * N_WAVES] {
+            let [fx, fy, ph, amp] = *w;
+            v += amp * (std::f32::consts::TAU * (fx * x + fy * y) + ph).sin();
+        }
+        v
+    }
+
+    fn example(&self, split: u64, index: usize) -> (Vec<f32>, i32) {
+        let s = self.dims.image_size;
+        let c = self.dims.channels;
+        let class = index % self.dims.n_classes;
+        let mut rng = Rng::new(
+            self.seed
+                ^ split.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (index as u64).wrapping_mul(0xD134_2543_DE82_EF95),
+        );
+        // random circular shift
+        let (dx, dy) = (rng.below(s), rng.below(s));
+        let mut img = vec![0f32; c * s * s];
+        for ch in 0..c {
+            for yy in 0..s {
+                for xx in 0..s {
+                    let fx = ((xx + dx) % s) as f32 / s as f32;
+                    let fy = ((yy + dy) % s) as f32 / s as f32;
+                    let v = self.proto_pixel(class, ch, fx, fy)
+                        + 0.7 * self.proto_pixel(0, ch, fy, fx) // shared clutter
+                        + NOISE_SIGMA * rng.normal();
+                    img[ch * s * s + yy * s + xx] = v;
+                }
+            }
+        }
+        (img, class as i32)
+    }
+
+    fn batch(&self, split: u64, base: usize, n_examples: usize) -> Batch {
+        let b = self.dims.batch;
+        let s = self.dims.image_size;
+        let c = self.dims.channels;
+        let mut images = Vec::with_capacity(b * c * s * s);
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            let (img, lab) = self.example(split, (base + i) % n_examples.max(1));
+            images.extend_from_slice(&img);
+            labels.push(lab);
+        }
+        Batch::Image {
+            images: Tensor::from_vec(&[b, c, s, s], images).expect("image batch"),
+            labels: IntTensor::from_vec(&[b], labels).expect("labels"),
+        }
+    }
+}
+
+impl Dataset for SynthImage {
+    fn family(&self) -> Family {
+        Family::Vit
+    }
+
+    fn train_batch(&self, step: usize) -> Batch {
+        // epoch-free streaming: a step consumes batch-size fresh indices
+        self.batch(0, step * self.dims.batch, self.train_examples)
+    }
+
+    fn val_batch(&self, idx: usize) -> Batch {
+        self.batch(1, idx * self.dims.batch, self.val_examples)
+    }
+
+    fn n_val_batches(&self) -> usize {
+        (self.val_examples / self.dims.batch).max(1)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(classes: usize) -> Dims {
+        Dims {
+            d_model: 16,
+            n_heads: 2,
+            n_blocks: 2,
+            n_enc_blocks: 0,
+            mlp_ratio: 2,
+            batch: 8,
+            lbits: 9,
+            image_size: 8,
+            patch: 4,
+            channels: 3,
+            n_classes: classes,
+            seq: 0,
+            seq_src: 0,
+            vocab: 0,
+        }
+    }
+
+    #[test]
+    fn deterministic_and_split_disjoint() {
+        let d1 = SynthImage::new(dims(4), 7, 64, 32);
+        let d2 = SynthImage::new(dims(4), 7, 64, 32);
+        let (Batch::Image { images: a, .. }, Batch::Image { images: b, .. }) =
+            (d1.train_batch(3), d2.train_batch(3))
+        else {
+            panic!()
+        };
+        assert_eq!(a, b);
+        // val and train examples differ (different split stream)
+        let (Batch::Image { images: tr, .. }, Batch::Image { images: va, .. }) =
+            (d1.train_batch(0), d1.val_batch(0))
+        else {
+            panic!()
+        };
+        assert!(tr.max_abs_diff(&va).unwrap() > 0.1);
+    }
+
+    #[test]
+    fn labels_balanced_and_in_range() {
+        let d = SynthImage::new(dims(4), 1, 64, 32);
+        let Batch::Image { labels, .. } = d.train_batch(0) else { panic!() };
+        for (i, &l) in labels.data().iter().enumerate() {
+            assert_eq!(l, (i % 4) as i32);
+        }
+    }
+
+    #[test]
+    fn classes_statistically_distinct() {
+        // prototype pixels of different classes should differ
+        let d = SynthImage::new(dims(4), 1, 64, 32);
+        let p0 = d.proto_pixel(0, 0, 0.3, 0.6);
+        let p1 = d.proto_pixel(1, 0, 0.3, 0.6);
+        assert!((p0 - p1).abs() > 1e-4);
+    }
+
+    #[test]
+    fn hundred_class_variant() {
+        let d = SynthImage::new(dims(100), 1, 256, 128);
+        let Batch::Image { labels, .. } = d.train_batch(5) else { panic!() };
+        assert!(labels.data().iter().all(|&l| (0..100).contains(&l)));
+    }
+}

@@ -1,0 +1,234 @@
+//! Deterministic tiny character corpus (openwebtext-0.05% stand-in, Fig. 5).
+//!
+//! A second-order Markov chain over a synthetic English-like lexicon emits a
+//! ~200 KB text; character-level tokens index into a 96-symbol vocabulary
+//! (printable ASCII).  The paper's §5.3 point — GPT2 badly overfits a very
+//! small corpus while BDIA-GPT2 overfits less — only needs a corpus that is
+//! (a) small and (b) has learnable nontrivial statistics; a Markov text has
+//! both, with the bonus that the achievable cross-entropy floor is roughly
+//! the chain's entropy rate.
+
+use super::{Batch, Dataset};
+use crate::model::{Dims, Family};
+use crate::tensor::{IntTensor, Rng};
+
+const CORPUS_CHARS: usize = 200_000;
+const LEXICON: usize = 120;
+
+pub struct TinyCorpus {
+    dims: Dims,
+    corpus: Vec<i32>,
+    /// [0, train_end) is the training region; [train_end, len) validation.
+    train_end: usize,
+    seed: u64,
+    train_examples: usize,
+    val_examples: usize,
+}
+
+fn synth_lexicon(rng: &mut Rng) -> Vec<String> {
+    const ONSETS: &[&str] = &[
+        "b", "c", "d", "f", "g", "h", "l", "m", "n", "p", "r", "s", "t", "v",
+        "st", "tr", "ch", "th", "qu", "",
+    ];
+    const NUCLEI: &[&str] = &["a", "e", "i", "o", "u", "ai", "ou", "ea"];
+    const CODAS: &[&str] = &["", "n", "r", "s", "t", "l", "nd", "st", "m"];
+    let mut words = Vec::with_capacity(LEXICON);
+    while words.len() < LEXICON {
+        let syllables = 1 + rng.below(3);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push_str(ONSETS[rng.below(ONSETS.len())]);
+            w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+            w.push_str(CODAS[rng.below(CODAS.len())]);
+        }
+        if !words.contains(&w) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// Map a char into the 96-symbol vocab (printable ASCII 32..=126 + newline).
+fn char_token(c: char, vocab: usize) -> i32 {
+    let idx = match c {
+        '\n' => 95,
+        c if (' '..='~').contains(&c) => c as usize - 32,
+        _ => 0,
+    };
+    (idx % vocab) as i32
+}
+
+impl TinyCorpus {
+    pub fn new(dims: Dims, seed: u64, train_examples: usize, val_examples: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0x7c0_5e_ed);
+        let words = synth_lexicon(&mut rng);
+        // sparse bigram transition table: each word allows ~8 successors
+        let succ: Vec<Vec<usize>> = (0..LEXICON)
+            .map(|_| (0..8).map(|_| rng.below(LEXICON)).collect())
+            .collect();
+        let mut text = String::with_capacity(CORPUS_CHARS + 64);
+        let mut w = 0usize;
+        let mut sentence_len = 0usize;
+        while text.len() < CORPUS_CHARS {
+            text.push_str(&words[w]);
+            sentence_len += 1;
+            if sentence_len >= 6 + rng.below(9) {
+                text.push('.');
+                text.push(if rng.below(5) == 0 { '\n' } else { ' ' });
+                sentence_len = 0;
+            } else {
+                text.push(' ');
+            }
+            w = succ[w][rng.below(8)];
+        }
+        let vocab = dims.vocab;
+        let corpus: Vec<i32> = text.chars().map(|c| char_token(c, vocab)).collect();
+        let train_end = corpus.len() * 9 / 10;
+        TinyCorpus { dims, corpus, train_end, seed, train_examples, val_examples }
+    }
+
+    pub fn corpus_len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    fn window_batch(&self, region: (usize, usize), base_seed: u64, n_windows: usize,
+                    index: usize) -> Batch {
+        let (start, end) = region;
+        let t = self.dims.seq;
+        let b = self.dims.batch;
+        let span = end - start - t - 1;
+        let mut tokens = Vec::with_capacity(b * t);
+        let mut labels = Vec::with_capacity(b * t);
+        for i in 0..b {
+            // window offset is a pure function of (seed, window id)
+            let wid = (index * b + i) % n_windows.max(1);
+            let mut r = Rng::new(base_seed ^ (wid as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+            let off = start + r.below(span);
+            for j in 0..t {
+                tokens.push(self.corpus[off + j]);
+                labels.push(self.corpus[off + j + 1]);
+            }
+        }
+        Batch::Lm {
+            tokens: IntTensor::from_vec(&[b, t], tokens).expect("tokens"),
+            labels: IntTensor::from_vec(&[b, t], labels).expect("labels"),
+        }
+    }
+}
+
+impl Dataset for TinyCorpus {
+    fn family(&self) -> Family {
+        Family::Gpt
+    }
+
+    fn train_batch(&self, step: usize) -> Batch {
+        // fixed pool of train_examples windows — *small* on purpose so the
+        // model can overfit it (the Fig.-5 phenomenon under study)
+        self.window_batch((0, self.train_end), self.seed ^ 0x11, self.train_examples, step)
+    }
+
+    fn val_batch(&self, idx: usize) -> Batch {
+        self.window_batch(
+            (self.train_end, self.corpus.len()),
+            self.seed ^ 0x22,
+            self.val_examples,
+            idx,
+        )
+    }
+
+    fn n_val_batches(&self) -> usize {
+        (self.val_examples / self.dims.batch).max(1)
+    }
+
+    fn name(&self) -> &str {
+        "tiny_corpus"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims {
+            d_model: 16,
+            n_heads: 2,
+            n_blocks: 2,
+            n_enc_blocks: 0,
+            mlp_ratio: 2,
+            batch: 4,
+            lbits: 9,
+            image_size: 0,
+            patch: 1,
+            channels: 0,
+            n_classes: 0,
+            seq: 16,
+            seq_src: 0,
+            vocab: 96,
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_sized() {
+        let a = TinyCorpus::new(dims(), 3, 64, 16);
+        let b = TinyCorpus::new(dims(), 3, 64, 16);
+        assert_eq!(a.corpus, b.corpus);
+        assert!(a.corpus_len() >= CORPUS_CHARS);
+        assert!(a.corpus.iter().all(|&t| (0..96).contains(&t)));
+    }
+
+    #[test]
+    fn labels_are_shifted_tokens() {
+        let d = TinyCorpus::new(dims(), 3, 64, 16);
+        let Batch::Lm { tokens, labels } = d.train_batch(0) else { panic!() };
+        // label[i] is token[i+1] within each row
+        for b in 0..4 {
+            for j in 0..15 {
+                assert_eq!(labels.data()[b * 16 + j], tokens.data()[b * 16 + j + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn train_pool_is_finite_and_repeats() {
+        // train_examples=4 with batch=4 -> step 0 and step 1 reuse windows
+        let mut dd = dims();
+        dd.batch = 4;
+        let d = TinyCorpus::new(dd, 3, 4, 16);
+        let Batch::Lm { tokens: t0, .. } = d.train_batch(0) else { panic!() };
+        let Batch::Lm { tokens: t1, .. } = d.train_batch(1) else { panic!() };
+        assert_eq!(t0, t1, "pool of 4 windows must cycle");
+    }
+
+    #[test]
+    fn val_and_train_regions_disjoint() {
+        let d = TinyCorpus::new(dims(), 3, 64, 16);
+        assert!(d.train_end < d.corpus_len());
+        let Batch::Lm { tokens: tv, .. } = d.val_batch(0) else { panic!() };
+        // all val windows start past train_end (checked indirectly: the
+        // generator draws offsets in [train_end, len-T-1))
+        assert_eq!(tv.shape(), &[4, 16]);
+    }
+
+    #[test]
+    fn corpus_has_nontrivial_statistics() {
+        let d = TinyCorpus::new(dims(), 3, 64, 16);
+        let mut counts = [0usize; 96];
+        for &t in &d.corpus {
+            counts[t as usize] += 1;
+        }
+        let used = counts.iter().filter(|&&c| c > 0).count();
+        assert!(used > 15, "alphabet too small: {used}");
+        // entropy strictly between 0 and log2(96)
+        let n = d.corpus.len() as f64;
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum();
+        assert!(h > 2.0 && h < 6.6, "unigram entropy {h}");
+    }
+}

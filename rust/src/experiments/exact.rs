@@ -1,0 +1,84 @@
+//! Exactness audit — the paper's *title* claim, verified on a real bundle:
+//! forward (eqs. 18-21) → reconstruct (eq. 24) must be bit-identical, with
+//! side information costing exactly 1 bit per activation element per block.
+
+use super::{emit_summary, ExpOpts};
+use crate::coordinator::{GammaPlan, Stack, StackKind, StackState};
+use crate::metrics::fmt_bytes;
+use crate::model::ParamStore;
+use crate::quant;
+use crate::runtime::Runtime;
+use crate::tensor::{Rng, Tensor};
+use anyhow::{ensure, Result};
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let rt = Runtime::load(&opts.artifacts_dir, "gpt_tiny")?;
+    let dims = rt.manifest.dims.clone();
+    let params = ParamStore::init(&rt.manifest, 0);
+    let stack = Stack::new(&rt, StackKind::Main)?;
+    let mut rng = Rng::new(42);
+    let x0 = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+    let plan = GammaPlan::draw(&mut rng, stack.n_blocks, dims.batch, 0.5);
+
+    // record-all oracle
+    let mut x0q = x0.clone();
+    quant::quantize_activation(&mut x0q, stack.fixed);
+    let mut xs = vec![x0q];
+    {
+        let h0 = stack.debug_call_fwd(&params, 0, &xs[0], None)?;
+        xs.push(quant::first_step_quant(&xs[0], &h0, stack.fixed)?);
+        for k in 1..stack.n_blocks {
+            let h = stack.debug_call_fwd(&params, k, &xs[k], None)?;
+            let signs = plan.signs(k)?;
+            let (nx, _) =
+                quant::bdia_forward_quant(&xs[k - 1], &xs[k], &h, &signs, stack.fixed)?;
+            xs.push(nx);
+        }
+    }
+
+    // production path
+    let state = stack.forward_quant(&params, x0, None, &plan)?;
+    let rec = stack.reconstruct_all(&params, &state, None, &plan)?;
+    let mut max_diff = 0f32;
+    let mut exact_blocks = 0usize;
+    for (a, b) in xs.iter().zip(&rec) {
+        let d = a.max_abs_diff(b)?;
+        max_diff = max_diff.max(d);
+        if d == 0.0 {
+            exact_blocks += 1;
+        }
+    }
+    ensure!(max_diff == 0.0, "NOT bit-exact: max |drift| = {max_diff}");
+
+    let StackState::Reversible { x_last, x_prev, side } = &state else {
+        unreachable!()
+    };
+    let act_bytes = x_last.nbytes() + x_prev.nbytes();
+    let side_bytes = side.nbytes();
+    let elems = dims.batch * dims.seq * dims.d_model;
+    let expect_side = (stack.n_blocks - 1) * elems.div_ceil(64) * 8;
+    ensure!(side_bytes == expect_side, "side-info not 1 bit/element/block");
+
+    let store_all = (stack.n_blocks + 1) * x_last.nbytes();
+    let body = format!(
+        "bundle `gpt_tiny` (K={}, batch={}, T={}, D={}, l={}):\n\n\
+         - reconstruction drift over {} activations: **0.0 (bit-exact)** \
+           ({} / {} tensors byte-identical)\n\
+         - stored boundaries: {} | side info: {} (1 bit/elem/block) | \
+           store-all would need: {}\n\
+         - activation-memory ratio reversible/store-all: **{:.3}**\n",
+        stack.n_blocks,
+        dims.batch,
+        dims.seq,
+        dims.d_model,
+        dims.lbits,
+        xs.len(),
+        exact_blocks,
+        xs.len(),
+        fmt_bytes(act_bytes),
+        fmt_bytes(side_bytes),
+        fmt_bytes(store_all),
+        (act_bytes + side_bytes) as f64 / store_all as f64,
+    );
+    emit_summary(opts, "Exactness audit (title claim)", &body)
+}

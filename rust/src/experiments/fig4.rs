@@ -1,0 +1,50 @@
+//! Figure 4: encoder-decoder translation — conventional transformer vs
+//! BDIA-transformer train/val loss curves on the synthetic transduction
+//! grammar (the en→fr stand-in).  BDIA is applied in both stacks, exactly as
+//! the paper describes.
+
+use super::{arm_config, emit_summary, run_arm, write_series_csv, ExpOpts};
+use crate::config::TrainMode;
+use anyhow::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let seed = *opts.seeds.first().unwrap_or(&0);
+    let mut finals = Vec::new();
+    for (label, mode) in [
+        ("transformer", TrainMode::Vanilla),
+        ("BDIA-transformer", TrainMode::BdiaReversible),
+    ] {
+        let mut cfg = arm_config(opts, "encdec_mt", "synth_translation", mode, seed);
+        // small training pool so the generalization gap is visible
+        cfg.train_examples = 512;
+        let name = format!("fig4_{label}");
+        let (log, acc, _) = run_arm(&cfg, &name)?;
+        let rows: Vec<Vec<String>> = log
+            .records
+            .iter()
+            .map(|r| {
+                vec![
+                    r.step.to_string(),
+                    r.train_loss.to_string(),
+                    r.val_loss.map_or(String::new(), |v| v.to_string()),
+                ]
+            })
+            .collect();
+        write_series_csv(
+            &opts.out_dir.join(format!("{name}.csv")),
+            &["step", "train_loss", "val_loss"],
+            &rows,
+        )?;
+        finals.push((label, log.final_val_loss().unwrap_or(f32::NAN), acc));
+    }
+    let body = format!(
+        "6+6 encoder/decoder blocks, {} steps, synthetic transduction task.\n\n\
+         | model | final val loss | final val token acc |\n|---|---|---|\n\
+         | {} | {:.4} | {:.3} |\n| {} | {:.4} | {:.3} |\n\n\
+         Shape check vs paper Fig. 4: BDIA's val loss ends at or below the \
+         conventional transformer's. Curves: `fig4_*.csv`.",
+        opts.steps, finals[0].0, finals[0].1, finals[0].2, finals[1].0,
+        finals[1].1, finals[1].2
+    );
+    emit_summary(opts, "Figure 4 — translation (encoder-decoder)", &body)
+}

@@ -1,0 +1,166 @@
+//! Experiment drivers: one per table/figure in the paper's evaluation
+//! (DESIGN.md §6 maps each to its modules).  Every driver writes CSV series
+//! + a markdown summary under `results/` and returns the summary string.
+//!
+//! | driver   | paper artifact | what it regenerates                        |
+//! |----------|----------------|--------------------------------------------|
+//! | [`fig1`] | Figure 1       | val-acc vs constant inference gamma         |
+//! | [`fig2`] | Figure 2       | float-inversion error accumulation by depth |
+//! | [`fig3`] | Figure 3 + Table 1 | ViT/RevViT/BDIA curves, acc, memory    |
+//! | [`table2`] | Table 2      | gamma-magnitude ablation                    |
+//! | [`fig4`] | Figure 4       | translation train/val curves                |
+//! | [`fig5`] | Figure 5       | tiny-corpus GPT overfitting curves          |
+//! | [`exact`]| (title claim)  | bit-exactness + side-info audit             |
+
+pub mod exact;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table2;
+
+use crate::baseline::RevVitTrainer;
+use crate::config::{TrainConfig, TrainMode};
+use crate::coordinator::Trainer;
+use crate::data::{make_dataset, Dataset};
+use crate::metrics::TrainLog;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Common experiment options (CLI-overridable; defaults sized for the
+/// single-CPU testbed — EXPERIMENTS.md records the exact values used).
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    pub steps: usize,
+    pub seeds: Vec<u64>,
+    pub out_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            steps: 150,
+            seeds: vec![0, 1],
+            out_dir: PathBuf::from("results"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            eval_every: 25,
+            eval_batches: 4,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn quick() -> Self {
+        ExpOpts { steps: 6, seeds: vec![0], eval_every: 3, eval_batches: 1, ..Default::default() }
+    }
+
+    pub fn ensure_out(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("creating {}", self.out_dir.display()))
+    }
+}
+
+/// Base TrainConfig for a (bundle, mode, seed) arm.
+pub fn arm_config(
+    opts: &ExpOpts,
+    bundle: &str,
+    dataset: &str,
+    mode: TrainMode,
+    seed: u64,
+) -> TrainConfig {
+    TrainConfig {
+        model: bundle.into(),
+        mode,
+        dataset: dataset.into(),
+        steps: opts.steps,
+        seed,
+        eval_every: opts.eval_every,
+        eval_batches: opts.eval_batches,
+        log_every: (opts.steps / 20).max(1),
+        artifacts_dir: opts.artifacts_dir.clone(),
+        ..TrainConfig::default()
+    }
+}
+
+/// Train one arm end to end; returns (log, final val acc, live stored bytes).
+pub fn run_arm(cfg: &TrainConfig, run_name: &str) -> Result<(TrainLog, f32, usize)> {
+    let stored;
+    let log;
+    if cfg.mode == TrainMode::RevVit {
+        let mut tr = RevVitTrainer::new(cfg.clone())?;
+        let ds = dataset_for(&tr.rt, cfg)?;
+        log = tr.run(ds.as_ref(), run_name)?;
+        let b = ds.train_batch(0);
+        stored = tr.train_step(&b)?.stored_activation_bytes;
+    } else {
+        let mut tr = Trainer::new(cfg.clone())?;
+        let ds = dataset_for(&tr.rt, cfg)?;
+        log = tr.run(ds.as_ref(), run_name)?;
+        let b = ds.train_batch(0);
+        stored = tr.train_step(&b)?.stored_activation_bytes;
+    }
+    let acc = log.last_eval().map(|(_, a)| a).unwrap_or(0.0);
+    Ok((log, acc, stored))
+}
+
+pub fn dataset_for(
+    rt: &crate::runtime::Runtime,
+    cfg: &TrainConfig,
+) -> Result<Box<dyn Dataset>> {
+    make_dataset(cfg, &rt.manifest.dims, rt.manifest.family)
+}
+
+/// Write a CSV of (x, series...) rows.
+pub fn write_series_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut text = header.join(",");
+    text.push('\n');
+    for r in rows {
+        text.push_str(&r.join(","));
+        text.push('\n');
+    }
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Append a section to results/SUMMARY.md and echo it.
+pub fn emit_summary(opts: &ExpOpts, title: &str, body: &str) -> Result<String> {
+    opts.ensure_out()?;
+    let text = format!("\n## {title}\n\n{body}\n");
+    let path = opts.out_dir.join("SUMMARY.md");
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+    f.write_all(text.as_bytes())?;
+    println!("{text}");
+    Ok(text)
+}
+
+/// Dispatch by experiment id ("fig1".."fig5", "table1", "table2", "exact",
+/// "all").
+pub fn run_experiment(id: &str, opts: &ExpOpts) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(opts).map(|_| ()),
+        "fig2" => fig2::run(opts).map(|_| ()),
+        "fig3" | "table1" => fig3::run(opts).map(|_| ()),
+        "table2" => table2::run(opts).map(|_| ()),
+        "fig4" => fig4::run(opts).map(|_| ()),
+        "fig5" => fig5::run(opts).map(|_| ()),
+        "exact" => exact::run(opts).map(|_| ()),
+        "all" => {
+            for id in ["exact", "fig2", "fig1", "table2", "fig3", "fig4", "fig5"] {
+                run_experiment(id, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+}

@@ -1,0 +1,24 @@
+//! # bdia — exact bit-level reversible transformer training
+//!
+//! Reproduction of "On Exact Bit-level Reversible Transformers Without
+//! Changing Architectures" (Zhang, Lewis, Kleijn, 2024) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! - [`runtime`]: PJRT client executing AOT HLO artifacts (L2/L1 outputs)
+//! - [`coordinator`]: the paper's contribution — BDIA reversible training
+//! - [`quant`]: exact fixed-point BDIA arithmetic (eqs. 17-24)
+//! - [`baseline`]: vanilla + RevViT comparators
+pub mod config;
+pub mod tensor;
+pub mod quant;
+pub mod runtime;
+pub mod model;
+pub mod coordinator;
+pub mod baseline;
+pub mod optim;
+pub mod data;
+pub mod metrics;
+pub mod experiments;
+pub mod bench;

@@ -1,0 +1,261 @@
+//! `bdia` — CLI for the reversible-transformer training framework.
+//!
+//! ```text
+//! bdia train  --config configs/vit_s10_bdia.json [key=value ...]
+//! bdia eval   --model vit_s10 --gamma 0.0 [key=value ...]
+//! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
+//!             [--steps N] [--seeds 0,1,2] [--quick]
+//! bdia info   --model vit_s10       # bundle inventory
+//! ```
+//!
+//! (Argument parsing is in-repo — no clap offline — see `parse_flags`.)
+
+use anyhow::{bail, Context, Result};
+use bdia::baseline::RevVitTrainer;
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::Trainer;
+use bdia::experiments::{run_experiment, ExpOpts};
+use bdia::metrics::fmt_bytes;
+use bdia::metrics::memory::MemoryModel;
+use bdia::runtime::Runtime;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Split argv into (`--flag value` map, bare `key=value` overrides, rest).
+fn parse_flags(
+    args: &[String],
+) -> (BTreeMap<String, String>, Vec<String>, Vec<String>) {
+    let mut flags = BTreeMap::new();
+    let mut overrides = Vec::new();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".into());
+                i += 1;
+            }
+        } else if a.contains('=') {
+            overrides.push(a.clone());
+            i += 1;
+        } else {
+            rest.push(a.clone());
+            i += 1;
+        }
+    }
+    (flags, overrides, rest)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let (flags, overrides, rest) = parse_flags(&argv[1..]);
+
+    match cmd.as_str() {
+        "train" => cmd_train(&flags, &overrides),
+        "eval" => cmd_eval(&flags, &overrides),
+        "repro" => cmd_repro(&flags, &rest),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `bdia help`)"),
+    }
+}
+
+fn load_config(
+    flags: &BTreeMap<String, String>,
+    overrides: &[String],
+) -> Result<TrainConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => TrainConfig::load(std::path::Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    for kv in overrides {
+        cfg.override_kv(kv)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<()> {
+    let cfg = load_config(flags, overrides)?;
+    println!(
+        "training {} | mode={} | dataset={} | steps={} | seed={}",
+        cfg.model,
+        cfg.mode.name(),
+        cfg.dataset,
+        cfg.steps,
+        cfg.seed
+    );
+    let run_name = flags
+        .get("name")
+        .cloned()
+        .unwrap_or_else(|| format!("{}_{}", cfg.model, cfg.mode.name()));
+
+    let log = if cfg.mode == TrainMode::RevVit {
+        let mut tr = RevVitTrainer::new(cfg.clone())?;
+        println!("params: {}", tr.n_params());
+        let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
+        let log = tr.run(ds.as_ref(), &run_name)?;
+        report_live(&log);
+        log
+    } else {
+        let mut tr = Trainer::new(cfg.clone())?;
+        println!("params: {}", tr.n_params());
+        let mm = MemoryModel::new(
+            cfg.mode,
+            tr.family,
+            &tr.rt.manifest.dims,
+            tr.n_params() * 4,
+        );
+        println!("peak training memory (analytic): {}", fmt_bytes(mm.peak_total()));
+        let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
+        let log = tr.run(ds.as_ref(), &run_name)?;
+        report_live(&log);
+        log
+    };
+    let out = PathBuf::from("results").join(format!("{run_name}.csv"));
+    log.write_csv(&out)?;
+    println!("log written to {}", out.display());
+    Ok(())
+}
+
+fn report_live(log: &bdia::metrics::TrainLog) {
+    if let Some(r) = log.last() {
+        println!(
+            "final: step {} train_loss {:.4} val_loss {} val_acc {} ({:.0} ms/step)",
+            r.step,
+            r.train_loss,
+            r.val_loss.map_or("-".into(), |v| format!("{v:.4}")),
+            r.val_acc.map_or("-".into(), |v| format!("{v:.3}")),
+            log.mean_ms_per_step()
+        );
+    }
+}
+
+fn cmd_eval(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<()> {
+    let cfg = load_config(flags, overrides)?;
+    let gamma: f32 = flags
+        .get("gamma")
+        .map(|g| g.parse())
+        .transpose()
+        .context("--gamma must be a float")?
+        .unwrap_or(0.0);
+    let n_batches: usize = flags
+        .get("batches")
+        .map(|b| b.parse())
+        .transpose()
+        .context("--batches must be an integer")?
+        .unwrap_or(cfg.eval_batches);
+    let tr = Trainer::new(cfg.clone())?;
+    let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
+    let (loss, acc) = tr.evaluate(ds.as_ref(), n_batches, gamma)?;
+    println!(
+        "{} @ gamma={gamma}: val_loss {loss:.4} val_acc {acc:.4} (params seed {})",
+        cfg.model, cfg.seed
+    );
+    Ok(())
+}
+
+fn cmd_repro(flags: &BTreeMap<String, String>, rest: &[String]) -> Result<()> {
+    let Some(id) = rest.first() else {
+        bail!("usage: bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>")
+    };
+    let mut opts = if flags.contains_key("quick") {
+        ExpOpts::quick()
+    } else {
+        ExpOpts::default()
+    };
+    if let Some(s) = flags.get("steps") {
+        opts.steps = s.parse().context("--steps")?;
+    }
+    if let Some(s) = flags.get("seeds") {
+        opts.seeds = s
+            .split(',')
+            .map(|x| x.parse().context("--seeds"))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(d) = flags.get("out") {
+        opts.out_dir = PathBuf::from(d);
+    }
+    if let Some(d) = flags.get("artifacts") {
+        opts.artifacts_dir = PathBuf::from(d);
+    }
+    println!(
+        "repro {id}: steps={} seeds={:?} out={}",
+        opts.steps,
+        opts.seeds,
+        opts.out_dir.display()
+    );
+    run_experiment(id, &opts)
+}
+
+fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
+    let model = flags
+        .get("model")
+        .cloned()
+        .unwrap_or_else(|| "vit_s10".into());
+    let dir = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let rt = Runtime::load(&dir, &model)?;
+    let m = &rt.manifest;
+    println!("bundle {} (family {:?})", m.name, m.family);
+    println!(
+        "  dims: d_model={} heads={} K={} K_enc={} batch={} l={}",
+        m.dims.d_model, m.dims.n_heads, m.dims.n_blocks, m.dims.n_enc_blocks,
+        m.dims.batch, m.dims.lbits
+    );
+    println!("  params: {}", m.n_params());
+    println!("  executables:");
+    for name in rt.exec_names() {
+        println!("    {name}");
+    }
+    for mode in [
+        TrainMode::Vanilla,
+        TrainMode::BdiaReversible,
+        TrainMode::RevVit,
+    ] {
+        let mm = MemoryModel::new(mode, m.family, &m.dims, m.n_params() * 4);
+        println!(
+            "  peak training memory [{}]: {}",
+            mode.name(),
+            fmt_bytes(mm.peak_total())
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "bdia — exact bit-level reversible transformer training (BDIA)\n\n\
+         USAGE:\n  bdia train --config configs/<f>.json [key=value ...]\n  \
+         bdia eval  --model <bundle> --gamma <g>\n  \
+         bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
+         [--quick] [--steps N] [--seeds 0,1]\n  \
+         bdia info  --model <bundle>\n\n\
+         Config keys (key=value overrides): model, mode \
+         (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, lr, \
+         optimizer (adam|setadam), seed, eval_every, eval_batches, \
+         train_examples, val_examples, artifacts_dir"
+    );
+}

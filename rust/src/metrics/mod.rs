@@ -1,0 +1,202 @@
+//! Metrics: training logs, CSV/markdown emitters, and the byte-exact
+//! training-memory accounting behind the paper's Table 1.
+
+pub mod memory;
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// One logged training step (evaluation fields present when measured).
+#[derive(Clone, Debug, Default)]
+pub struct Record {
+    pub step: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub val_loss: Option<f32>,
+    pub val_acc: Option<f32>,
+    pub grad_norm: f32,
+    pub ms_per_step: f64,
+}
+
+/// Append-only training log with CSV/markdown export.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub run_name: String,
+    pub records: Vec<Record>,
+}
+
+impl TrainLog {
+    pub fn new(run_name: impl Into<String>) -> Self {
+        TrainLog { run_name: run_name.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&Record> {
+        self.records.last()
+    }
+
+    /// Latest evaluation result (val_loss, val_acc).
+    pub fn last_eval(&self) -> Option<(f32, f32)> {
+        self.records
+            .iter()
+            .rev()
+            .find_map(|r| Some((r.val_loss?, r.val_acc?)))
+    }
+
+    /// Best validation accuracy seen.
+    pub fn best_val_acc(&self) -> Option<f32> {
+        self.records
+            .iter()
+            .filter_map(|r| r.val_acc)
+            .fold(None, |m, v| Some(m.map_or(v, |m: f32| m.max(v))))
+    }
+
+    /// Final-k mean validation loss (curve endpoint for figures).
+    pub fn final_val_loss(&self) -> Option<f32> {
+        self.records.iter().rev().find_map(|r| r.val_loss)
+    }
+
+    pub fn mean_ms_per_step(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .map(|r| r.ms_per_step)
+            .filter(|&m| m > 0.0)
+            .collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "step,train_loss,train_acc,val_loss,val_acc,grad_norm,ms_per_step")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{}",
+                r.step,
+                r.train_loss,
+                r.train_acc,
+                r.val_loss.map_or(String::new(), |v| v.to_string()),
+                r.val_acc.map_or(String::new(), |v| v.to_string()),
+                r.grad_norm,
+                r.ms_per_step
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// mean ± std over repetition results (Table-1 style "86.22±0.42").
+pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs
+        .iter()
+        .map(|&x| (x as f64 - mean).powi(2))
+        .sum::<f64>()
+        / n.max(1.0);
+    (mean as f32, var.sqrt() as f32)
+}
+
+/// Render a markdown table: header row + aligned data rows.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&headers.join(" | "));
+    out.push_str(" |\n|");
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1}MB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1}KB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_eval_tracking() {
+        let mut log = TrainLog::new("t");
+        log.push(Record { step: 0, train_loss: 2.0, ..Default::default() });
+        log.push(Record {
+            step: 10,
+            train_loss: 1.5,
+            val_loss: Some(1.8),
+            val_acc: Some(0.4),
+            ..Default::default()
+        });
+        log.push(Record {
+            step: 20,
+            train_loss: 1.2,
+            val_loss: Some(1.6),
+            val_acc: Some(0.55),
+            ..Default::default()
+        });
+        assert_eq!(log.last_eval(), Some((1.6, 0.55)));
+        assert_eq!(log.best_val_acc(), Some(0.55));
+        assert_eq!(log.final_val_loss(), Some(1.6));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut log = TrainLog::new("t");
+        log.push(Record { step: 1, train_loss: 1.0, ..Default::default() });
+        let dir = std::env::temp_dir().join("bdia_test_metrics");
+        let path = dir.join("log.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,train_loss"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-6);
+        assert!((s - (2.0f32 / 3.0).sqrt()).abs() < 1e-5);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn markdown_and_bytes() {
+        let md = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KB");
+        assert_eq!(fmt_bytes(3 << 20), "3.0MB");
+    }
+}

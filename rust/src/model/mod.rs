@@ -1,0 +1,511 @@
+//! Model metadata + parameter storage, mirroring the AOT manifest ABI.
+//!
+//! The manifest (DESIGN.md §8) is the contract with `python/compile/aot.py`:
+//! parameter groups ("embed", "block", "head", plus "enc_embed"/"enc_block"
+//! for encoder-decoder) each list their leaves (name, shape, init) in flatten
+//! order; every executable declares which groups (and how many instances) it
+//! consumes followed by its data inputs.
+//!
+//! [`ParamStore`] owns the actual weights: `group -> instances -> leaves`
+//! ("block" has `n_blocks` instances).  Initialisation runs in Rust from the
+//! manifest's init specs so experiment seeds are fully coordinator-owned.
+
+use crate::config::json::Json;
+use crate::tensor::{Rng, Tensor};
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Init {
+    Normal(f32),
+    Zeros,
+    Ones,
+}
+
+impl Init {
+    fn parse(s: &str) -> Result<Self> {
+        if s == "zeros" {
+            Ok(Init::Zeros)
+        } else if s == "ones" {
+            Ok(Init::Ones)
+        } else if let Some(std) = s.strip_prefix("normal:") {
+            Ok(Init::Normal(std.parse()?))
+        } else {
+            bail!("unknown init spec '{s}'")
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub file: String,
+    /// [(group, instance count)] — input leaves in this order.
+    pub param_layout: Vec<(String, usize)>,
+    pub data_inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// Static model dimensions from the manifest (subset the runtime needs).
+#[derive(Clone, Debug)]
+pub struct Dims {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub n_enc_blocks: usize,
+    pub mlp_ratio: usize,
+    pub batch: usize,
+    pub lbits: u32,
+    pub image_size: usize,
+    pub patch: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    pub seq: usize,
+    pub seq_src: usize,
+    pub vocab: usize,
+}
+
+impl Dims {
+    /// Sequence length seen by the (decoder) blocks.
+    pub fn tokens(&self, family: Family) -> usize {
+        match family {
+            Family::Vit => (self.image_size / self.patch).pow(2) + 1,
+            _ => self.seq,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Vit,
+    Gpt,
+    EncDec,
+}
+
+impl Family {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "vit" => Ok(Family::Vit),
+            "gpt" => Ok(Family::Gpt),
+            "encdec" => Ok(Family::EncDec),
+            _ => bail!("unknown family '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub family: Family,
+    pub dims: Dims,
+    pub param_groups: BTreeMap<String, Vec<LeafSpec>>,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+impl Manifest {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let dims_j = j.get("dims")?;
+        let u = |k: &str| -> Result<usize> { dims_j.get(k)?.as_usize() };
+        let dims = Dims {
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            n_blocks: u("n_blocks")?,
+            n_enc_blocks: u("n_enc_blocks")?,
+            mlp_ratio: u("mlp_ratio")?,
+            batch: u("batch")?,
+            lbits: u("lbits")? as u32,
+            image_size: u("image_size")?,
+            patch: u("patch")?,
+            channels: u("channels")?,
+            n_classes: u("n_classes")?,
+            seq: u("seq")?,
+            seq_src: u("seq_src")?,
+            vocab: u("vocab")?,
+        };
+        let mut param_groups = BTreeMap::new();
+        for (g, leaves) in j.get("param_groups")?.as_obj()? {
+            let mut v = Vec::new();
+            for leaf in leaves.as_arr()? {
+                v.push(LeafSpec {
+                    name: leaf.get("name")?.as_str()?.to_string(),
+                    shape: leaf.get("shape")?.usize_vec()?,
+                    init: Init::parse(leaf.get("init")?.as_str()?)?,
+                });
+            }
+            param_groups.insert(g.clone(), v);
+        }
+        let mut executables = BTreeMap::new();
+        for (name, e) in j.get("executables")?.as_obj()? {
+            let mut layout = Vec::new();
+            for pair in e.get("param_layout")?.as_arr()? {
+                let pair = pair.as_arr()?;
+                ensure!(pair.len() == 2, "bad param_layout entry");
+                layout.push((pair[0].as_str()?.to_string(), pair[1].as_usize()?));
+            }
+            let parse_args = |key: &str| -> Result<Vec<ArgSpec>> {
+                let mut v = Vec::new();
+                for (i, a) in e.get(key)?.as_arr()?.iter().enumerate() {
+                    v.push(ArgSpec {
+                        name: a
+                            .opt("name")
+                            .map(|n| n.as_str().map(String::from))
+                            .transpose()?
+                            .unwrap_or_else(|| format!("out{i}")),
+                        dtype: DType::parse(a.get("dtype")?.as_str()?)?,
+                        shape: a.get("shape")?.usize_vec()?,
+                    });
+                }
+                Ok(v)
+            };
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    param_layout: layout,
+                    data_inputs: parse_args("data_inputs")?,
+                    outputs: parse_args("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            family: Family::parse(j.get("family")?.as_str()?)?,
+            dims,
+            param_groups,
+            executables,
+        })
+    }
+
+    /// Number of weight instances a group has in the full model.
+    pub fn group_instances(&self, group: &str) -> usize {
+        match group {
+            "block" => self.dims.n_blocks,
+            "enc_block" => self.dims.n_enc_blocks,
+            _ => 1,
+        }
+    }
+
+    /// Total trainable parameter count.
+    pub fn n_params(&self) -> usize {
+        self.param_groups
+            .iter()
+            .map(|(g, leaves)| {
+                self.group_instances(g)
+                    * leaves
+                        .iter()
+                        .map(|l| l.shape.iter().product::<usize>())
+                        .sum::<usize>()
+            })
+            .sum()
+    }
+}
+
+/// Owned model weights: `group -> instances -> leaves` (flatten order).
+#[derive(Clone)]
+pub struct ParamStore {
+    pub groups: BTreeMap<String, Vec<Vec<Tensor>>>,
+}
+
+impl ParamStore {
+    /// Initialise from the manifest's init specs with a coordinator seed.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut groups = BTreeMap::new();
+        for (g, leaves) in &manifest.param_groups {
+            let n = manifest.group_instances(g);
+            let mut instances = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut inst = Vec::with_capacity(leaves.len());
+                for leaf in leaves {
+                    inst.push(match leaf.init {
+                        Init::Zeros => Tensor::zeros(&leaf.shape),
+                        Init::Ones => Tensor::ones(&leaf.shape),
+                        Init::Normal(std) => Tensor::normal(&leaf.shape, std, &mut rng),
+                    });
+                }
+                instances.push(inst);
+            }
+            groups.insert(g.clone(), instances);
+        }
+        ParamStore { groups }
+    }
+
+    /// Same structure, all zeros (gradient accumulators, optimizer moments).
+    pub fn zeros_like(&self) -> Self {
+        let groups = self
+            .groups
+            .iter()
+            .map(|(g, insts)| {
+                (
+                    g.clone(),
+                    insts
+                        .iter()
+                        .map(|inst| inst.iter().map(|t| Tensor::zeros(t.shape())).collect())
+                        .collect(),
+                )
+            })
+            .collect();
+        ParamStore { groups }
+    }
+
+    pub fn leaves(&self, group: &str, instance: usize) -> &[Tensor] {
+        &self.groups[group][instance]
+    }
+
+    pub fn leaves_mut(&mut self, group: &str, instance: usize) -> &mut Vec<Tensor> {
+        self.groups.get_mut(group).unwrap().get_mut(instance).unwrap()
+    }
+
+    /// Flat references for an executable whose layout references a *single*
+    /// instance per group entry (fwd/vjp component calls).  `block_instance`
+    /// selects which block's weights to bind for count-1 "block"/"enc_block"
+    /// entries.
+    pub fn refs_for(
+        &self,
+        spec: &ExecSpec,
+        block_instance: usize,
+    ) -> Result<Vec<&Tensor>> {
+        let mut out = Vec::new();
+        for (group, count) in &spec.param_layout {
+            let insts = self
+                .groups
+                .get(group)
+                .ok_or_else(|| anyhow::anyhow!("no param group '{group}'"))?;
+            if *count == 1 && insts.len() > 1 {
+                ensure!(
+                    block_instance < insts.len(),
+                    "block instance {} out of range ({})",
+                    block_instance,
+                    insts.len()
+                );
+                out.extend(insts[block_instance].iter());
+            } else {
+                ensure!(
+                    *count == insts.len() || (*count == 1 && insts.len() == 1),
+                    "layout wants {} instances of '{group}', store has {}",
+                    count,
+                    insts.len()
+                );
+                for inst in insts.iter().take(*count) {
+                    out.extend(inst.iter());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Visit every tensor with a stable ordering (optimizer state pairing).
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(&mut Tensor)) {
+        for insts in self.groups.values_mut() {
+            for inst in insts {
+                for t in inst {
+                    f(t);
+                }
+            }
+        }
+    }
+
+    /// Zip-visit two stores with identical structure (p, g) -> ().
+    pub fn zip2_mut(
+        &mut self,
+        other: &mut ParamStore,
+        mut f: impl FnMut(&mut Tensor, &mut Tensor),
+    ) {
+        for (insts_a, insts_b) in self.groups.values_mut().zip(other.groups.values_mut()) {
+            for (ia, ib) in insts_a.iter_mut().zip(insts_b.iter_mut()) {
+                for (ta, tb) in ia.iter_mut().zip(ib.iter_mut()) {
+                    f(ta, tb);
+                }
+            }
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        let mut n = 0;
+        for insts in self.groups.values() {
+            for inst in insts {
+                for t in inst {
+                    n += t.len();
+                }
+            }
+        }
+        n
+    }
+
+    /// Payload bytes (memory accounting: params, grads, moments).
+    pub fn nbytes(&self) -> usize {
+        self.n_params() * std::mem::size_of::<f32>()
+    }
+
+    /// Accumulate `other` into `self` (gradient accumulation).
+    pub fn accumulate(&mut self, other: &ParamStore) -> Result<()> {
+        for (g, insts) in &mut self.groups {
+            let oinsts = other
+                .groups
+                .get(g)
+                .ok_or_else(|| anyhow::anyhow!("missing group '{g}'"))?;
+            for (inst, oinst) in insts.iter_mut().zip(oinsts) {
+                for (t, ot) in inst.iter_mut().zip(oinst) {
+                    t.add_assign(ot)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Set all tensors to zero (reset grad accumulators between steps).
+    pub fn zero(&mut self) {
+        self.for_each_mut(|t| t.fill(0.0));
+    }
+
+    /// Global L2 norm over all leaves (grad-clip).
+    pub fn global_norm(&self) -> f32 {
+        let mut sq = 0.0f64;
+        for insts in self.groups.values() {
+            for inst in insts {
+                for t in inst {
+                    for &v in t.data() {
+                        sq += (v as f64) * (v as f64);
+                    }
+                }
+            }
+        }
+        sq.sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        let text = r#"{
+          "name": "toy", "family": "gpt",
+          "dims": {"d_model": 4, "n_heads": 2, "n_blocks": 3,
+                   "n_enc_blocks": 0, "mlp_ratio": 2, "batch": 2, "lbits": 9,
+                   "image_size": 32, "patch": 4, "channels": 3,
+                   "n_classes": 10, "seq": 8, "seq_src": 0, "vocab": 16},
+          "param_groups": {
+            "embed": [{"name": "wte", "shape": [16, 4], "init": "normal:0.02"},
+                       {"name": "wpe", "shape": [8, 4], "init": "normal:0.02"}],
+            "block": [{"name": "ln.scale", "shape": [4], "init": "ones"},
+                       {"name": "ln.bias", "shape": [4], "init": "zeros"}],
+            "head": [{"name": "w", "shape": [4, 16], "init": "normal:0.02"}]
+          },
+          "executables": {
+            "block_fwd": {"file": "block_fwd.hlo.txt",
+              "param_layout": [["block", 1]],
+              "data_inputs": [{"name": "x", "dtype": "f32", "shape": [2, 8, 4]}],
+              "outputs": [{"dtype": "f32", "shape": [2, 8, 4]}]},
+            "model_infer": {"file": "model_infer.hlo.txt",
+              "param_layout": [["embed", 1], ["block", 3], ["head", 1]],
+              "data_inputs": [{"name": "gamma", "dtype": "f32", "shape": []}],
+              "outputs": [{"dtype": "f32", "shape": []}]}
+          },
+          "source_hash": "x"
+        }"#;
+        Manifest::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let m = toy_manifest();
+        assert_eq!(m.family, Family::Gpt);
+        assert_eq!(m.dims.n_blocks, 3);
+        assert_eq!(m.group_instances("block"), 3);
+        assert_eq!(m.group_instances("embed"), 1);
+        // wte 64 + wpe 32 + 3*(4+4) + head 64 = 184
+        assert_eq!(m.n_params(), 184);
+        let e = &m.executables["block_fwd"];
+        assert_eq!(e.param_layout, vec![("block".to_string(), 1)]);
+        assert_eq!(e.data_inputs[0].dtype, DType::F32);
+    }
+
+    #[test]
+    fn param_store_init_and_refs() {
+        let m = toy_manifest();
+        let ps = ParamStore::init(&m, 1);
+        assert_eq!(ps.n_params(), m.n_params());
+        // ones/zeros init honored
+        assert_eq!(ps.leaves("block", 0)[0].data(), &[1.0; 4]); // ln.scale
+        assert_eq!(ps.leaves("block", 0)[1].data(), &[0.0; 4]); // ln.bias
+        // refs for single-block exec bind the requested instance
+        let spec = &m.executables["block_fwd"];
+        let refs = ps.refs_for(spec, 2).unwrap();
+        assert_eq!(refs.len(), 2);
+        // refs for full-model exec bind everything in layout order
+        let spec = &m.executables["model_infer"];
+        let refs = ps.refs_for(spec, 0).unwrap();
+        assert_eq!(refs.len(), 2 + 3 * 2 + 1);
+    }
+
+    #[test]
+    fn init_seed_reproducible() {
+        let m = toy_manifest();
+        let a = ParamStore::init(&m, 7);
+        let b = ParamStore::init(&m, 7);
+        let c = ParamStore::init(&m, 8);
+        assert_eq!(a.leaves("embed", 0)[0], b.leaves("embed", 0)[0]);
+        assert_ne!(a.leaves("embed", 0)[0], c.leaves("embed", 0)[0]);
+    }
+
+    #[test]
+    fn zeros_like_and_accumulate() {
+        let m = toy_manifest();
+        let ps = ParamStore::init(&m, 1);
+        let mut g = ps.zeros_like();
+        assert_eq!(g.n_params(), ps.n_params());
+        assert_eq!(g.global_norm(), 0.0);
+        g.accumulate(&ps).unwrap();
+        g.accumulate(&ps).unwrap();
+        let mut expect = 0.0f64;
+        for insts in ps.groups.values() {
+            for inst in insts {
+                for t in inst {
+                    for &v in t.data() {
+                        expect += 4.0 * (v as f64) * (v as f64);
+                    }
+                }
+            }
+        }
+        assert!((g.global_norm() as f64 - expect.sqrt()).abs() < 1e-4);
+        g.zero();
+        assert_eq!(g.global_norm(), 0.0);
+    }
+
+    #[test]
+    fn dims_tokens() {
+        let m = toy_manifest();
+        assert_eq!(m.dims.tokens(Family::Gpt), 8);
+        assert_eq!(m.dims.tokens(Family::Vit), 65); // (32/4)^2 + 1
+    }
+}

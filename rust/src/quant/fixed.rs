@@ -1,0 +1,168 @@
+//! Fixed-point grid arithmetic (paper eq. 17): `Q_l[y] = round(y/2^-l) 2^-l`.
+//!
+//! All persistent activations in BDIA training live on the grid `2^-l`
+//! (l = 9 in the paper).  f32 represents `n * 2^-l` exactly for |n| < 2^24,
+//! so grid values round-trip f32 <-> i64 *losslessly*; the BDIA combine and
+//! the eq.-24 reconstruction are computed in i64 grid units, which is what
+//! makes the reversibility claim *bit-level* rather than approximate.
+//!
+//! Rounding rule: half away from zero — matching the Pallas kernel
+//! (`python/compile/kernels/bdia_update.py::quantize`) bit for bit.
+
+use anyhow::{bail, Result};
+
+/// Grid descriptor for precision `2^-l`.
+///
+/// `scale`/`step` are cached at construction: computing `2^l` via `powi`
+/// per element made the hot combine ~25x slower than the float path
+/// (EXPERIMENTS.md §Perf L3 iteration 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fixed {
+    pub lbits: u32,
+    scale_cached: f64,
+    step_cached: f64,
+}
+
+impl Fixed {
+    pub const fn new(lbits: u32) -> Self {
+        // 2^l / 2^-l as const-constructible IEEE-754 bit patterns
+        let scale = f64::from_bits(((1023 + lbits as u64) & 0x7ff) << 52);
+        let step = f64::from_bits(((1023 - lbits as u64) & 0x7ff) << 52);
+        Fixed { lbits, scale_cached: scale, step_cached: step }
+    }
+
+    /// Grid step `2^-l`.
+    #[inline]
+    pub fn step(&self) -> f64 {
+        self.step_cached
+    }
+
+    /// Grid scale `2^l`.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        self.scale_cached
+    }
+
+    /// Round a real value to grid units (round half away from zero).
+    #[inline]
+    pub fn to_units(&self, y: f64) -> i64 {
+        let scaled = y * self.scale();
+        let r = scaled.abs() + 0.5;
+        let m = r.floor() as i64;
+        if scaled < 0.0 {
+            -m
+        } else {
+            m
+        }
+    }
+
+    /// Exact unit count of an on-grid f32 (errors if off-grid).
+    #[inline]
+    pub fn units_of_exact(&self, x: f32) -> Result<i64> {
+        let scaled = x as f64 * self.scale();
+        let n = scaled.round() as i64;
+        if n as f64 != scaled {
+            bail!("value {} is not on the 2^-{} grid", x, self.lbits);
+        }
+        Ok(n)
+    }
+
+    /// Grid units -> f32 (exact for |n| < 2^24).
+    #[inline]
+    pub fn from_units(&self, n: i64) -> f32 {
+        (n as f64 * self.step()) as f32
+    }
+
+    /// Q_l[y] as f32 (eq. 17).
+    #[inline]
+    pub fn quantize(&self, y: f32) -> f32 {
+        self.from_units(self.to_units(y as f64))
+    }
+
+    /// Parity bit of an on-grid value (eq. 20): |n| mod 2, via rem_euclid so
+    /// negative unit counts behave (parity(n) = parity(-n)).
+    #[inline]
+    pub fn parity_units(n: i64) -> u8 {
+        (n.rem_euclid(2)) as u8
+    }
+
+    /// Whether an f32 lies exactly on the grid.
+    pub fn is_on_grid(&self, x: f32) -> bool {
+        self.units_of_exact(x).is_ok()
+    }
+
+    /// Quantize a whole slice in place (eq. 18 `x0 <- Q_l[x0]`).
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F: Fixed = Fixed::new(9);
+
+    #[test]
+    fn step_scale() {
+        assert_eq!(F.step(), 1.0 / 512.0);
+        assert_eq!(F.scale(), 512.0);
+    }
+
+    #[test]
+    fn round_half_away_from_zero() {
+        // 0.5 units -> 1 unit; -0.5 units -> -1 unit (matches the kernel)
+        let half = F.step() / 2.0;
+        assert_eq!(F.to_units(half), 1);
+        assert_eq!(F.to_units(-half), -1);
+        assert_eq!(F.to_units(3.0 * half), 2);
+        assert_eq!(F.to_units(-3.0 * half), -2);
+    }
+
+    #[test]
+    fn quantize_error_bound() {
+        let mut rng = crate::tensor::Rng::new(0);
+        for _ in 0..10_000 {
+            let y = rng.normal() * 10.0;
+            let q = F.quantize(y);
+            assert!((q - y).abs() <= F.step() as f32 / 2.0 + 1e-9);
+            assert!(F.is_on_grid(q));
+        }
+    }
+
+    #[test]
+    fn units_roundtrip_exact() {
+        for n in [-(1 << 23), -12345, -1, 0, 1, 777, (1 << 23)] {
+            let x = F.from_units(n);
+            assert_eq!(F.units_of_exact(x).unwrap(), n);
+        }
+        assert!(F.units_of_exact(0.001).is_err()); // off grid
+    }
+
+    #[test]
+    fn parity_of_negatives() {
+        assert_eq!(Fixed::parity_units(-3), 1);
+        assert_eq!(Fixed::parity_units(-2), 0);
+        assert_eq!(Fixed::parity_units(3), 1);
+        assert_eq!(Fixed::parity_units(0), 0);
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let mut rng = crate::tensor::Rng::new(1);
+        for _ in 0..1000 {
+            let q = F.quantize(rng.normal() * 5.0);
+            assert_eq!(F.quantize(q), q);
+        }
+    }
+
+    #[test]
+    fn other_lbits() {
+        // Remark 2: gamma = +/-0.25 wants 2 side bits; grid still exact
+        let f7 = Fixed::new(7);
+        assert_eq!(f7.to_units(1.0), 128);
+        assert_eq!(f7.quantize(0.5), 0.5);
+    }
+}

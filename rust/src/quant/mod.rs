@@ -1,0 +1,395 @@
+//! Exact bit-level reversible BDIA arithmetic (paper §4.3, eqs. 17-24).
+//!
+//! This module is the numerical core of the paper's claim: with activations
+//! on the fixed-point grid `2^-l` and gamma in {+0.5, -0.5}, the BDIA update
+//!
+//!   `x_{k+1} = Q_l[gamma (x_{k-1} + s_{k-1} 2^-l)]
+//!            + Q_l[(1-gamma) x_k + (1+gamma) h_k(x_k)]`          (eq. 21)
+//!
+//! is *losslessly* invertible given the 1-bit parity side information
+//! `s_{k-1}` (eq. 20), because `gamma (x_{k-1} + s 2^-l)` is already on-grid
+//! (eq. 23).  Everything here runs in i64 grid units: the forward combine and
+//! the eq.-24 reconstruction are exact integer arithmetic, not float ops.
+//!
+//! The second quantized term `Q_l[(1-gamma) x_k + (1+gamma) h_k]` only needs
+//! to be *deterministic*: the backward pass recomputes the byte-identical
+//! f64 expression from the identical `x_k` and the HLO-recomputed `h_k`
+//! (forward and reconstruction share the exact same formula below).
+//!
+//! Per-sample gamma: each batch row carries its own sign (the paper draws
+//! gamma per training sample per block), so all entry points take
+//! `signs: &[i8]` of length `batch` and tensors shaped `(batch, ...)`.
+//!
+//! The float (non-quantized) path — eq. 10 forward / eq. 16 inversion — is
+//! also here; it reproduces the paper's Fig.-2 error accumulation and serves
+//! the Table-2 ablation (|gamma| != 0.5, quantization off).
+
+pub mod fixed;
+pub mod sideinfo;
+
+pub use fixed::Fixed;
+pub use sideinfo::{BitVec, SideInfoStore};
+
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Per-sample BDIA coefficients gamma_b = signs[b] * 0.5.
+#[inline]
+pub fn gamma_of_sign(sign: i8) -> f64 {
+    0.5 * sign as f64
+}
+
+/// f32 represents integers exactly only below 2^24: any on-grid activation
+/// must satisfy `|x| < 2^(24-l)` or the stored f32 silently drops the low
+/// bit and bit-exactness is lost.  The combine checks this and fails loudly
+/// instead (found by `prop_single_step_roundtrip_bit_exact`).
+pub const UNIT_HEADROOM: i64 = 1 << 24;
+
+#[inline]
+fn check_headroom(n: i64) -> Result<i64> {
+    ensure!(
+        n.abs() < UNIT_HEADROOM,
+        "activation magnitude {} grid units exceeds the f32 exact-integer \
+         headroom 2^24; lower lbits or normalise activations",
+        n
+    );
+    Ok(n)
+}
+
+fn per_sample(x: &Tensor, signs: &[i8]) -> Result<usize> {
+    let b = *x
+        .shape()
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("batched tensor required"))?;
+    ensure!(b == signs.len(), "batch {} != signs {}", b, signs.len());
+    ensure!(x.len() % b == 0, "ragged batch");
+    Ok(x.len() / b)
+}
+
+/// eq. 18: clamp the embedding output onto the grid, `x0 <- Q_l[x0]`.
+pub fn quantize_activation(x: &mut Tensor, f: Fixed) {
+    f.quantize_slice(x.data_mut());
+}
+
+/// eq. 19: `x1 = x0 + Q_l[h0(x0)]` (x0 already on-grid).
+pub fn first_step_quant(x0: &Tensor, h0: &Tensor, f: Fixed) -> Result<Tensor> {
+    ensure!(x0.shape() == h0.shape(), "shape mismatch");
+    let mut data = Vec::with_capacity(x0.len());
+    for (&x, &h) in x0.data().iter().zip(h0.data()) {
+        let n = check_headroom(f.to_units(x as f64) + f.to_units(h as f64))?;
+        data.push(f.from_units(n));
+    }
+    Tensor::from_vec(x0.shape(), data)
+}
+
+/// eqs. 20-21 forward: returns `(x_{k+1}, s_{k-1})`.
+///
+/// `x_prev = x_{k-1}`, `x = x_k` (both on-grid), `h = h_k(x_k)` from the HLO
+/// block executable; `signs[b]` is the gamma sign for batch row b.
+pub fn bdia_forward_quant(
+    x_prev: &Tensor,
+    x: &Tensor,
+    h: &Tensor,
+    signs: &[i8],
+    f: Fixed,
+) -> Result<(Tensor, BitVec)> {
+    ensure!(x_prev.shape() == x.shape() && x.shape() == h.shape(), "shape mismatch");
+    let per = per_sample(x, signs)?;
+    let mut out = vec![0f32; x.len()];
+    let mut parities = vec![0u8; x.len()];
+    let (xp, xc, hc) = (x_prev.data(), x.data(), h.data());
+    let scale = f.scale();
+    let step = f.step();
+    let mut max_mag = 0i64;
+    // branch-free inner loop (hot path: this runs per element per block per
+    // step); overflow is OR-accumulated and checked once at the end.
+    for (b, &sign) in signs.iter().enumerate() {
+        let gamma = gamma_of_sign(sign);
+        let s64 = sign as i64;
+        let (c_skip, c_h) = (1.0 - gamma, 1.0 + gamma);
+        let base = b * per;
+        for i in base..base + per {
+            let sp = xp[i] as f64 * scale;
+            let n_prev = (sp.abs() + 0.5).floor().copysign(sp) as i64;
+            debug_assert_eq!(f.from_units(n_prev), xp[i], "x_prev off-grid");
+            let s = n_prev & 1; // two's-complement parity == rem_euclid(2)
+            parities[i] = s as u8;
+            // eq. 23: gamma (x_{k-1} + s 2^-l) is on-grid; integer-exact.
+            // (n_prev + s) is even; arithmetic shift divides exactly.
+            let t1 = s64 * ((n_prev + s) >> 1);
+            let s2 = (c_skip * xc[i] as f64 + c_h * hc[i] as f64) * scale;
+            let t2 = (s2.abs() + 0.5).floor().copysign(s2) as i64;
+            let n = t1 + t2;
+            max_mag |= n.abs();
+            out[i] = (n as f64 * step) as f32;
+        }
+    }
+    check_headroom(max_mag)?;
+    let bits = BitVec::from_parities(parities.into_iter());
+    Ok((Tensor::from_vec(x.shape(), out)?, bits))
+}
+
+/// eq. 24 reconstruction: `x_{k-1}` from `(x_{k+1}, x_k, h_k, s_{k-1})`.
+///
+/// Exact inverse of [`bdia_forward_quant`] by integer arithmetic; `h` must be
+/// the block output recomputed from the *same* `x_k` by the *same*
+/// executable (deterministic), which the coordinator guarantees.
+pub fn bdia_reconstruct_quant(
+    x_next: &Tensor,
+    x: &Tensor,
+    h: &Tensor,
+    s_prev: &BitVec,
+    signs: &[i8],
+    f: Fixed,
+) -> Result<Tensor> {
+    ensure!(x_next.shape() == x.shape() && x.shape() == h.shape(), "shape mismatch");
+    ensure!(s_prev.len() == x.len(), "side info length mismatch");
+    let per = per_sample(x, signs)?;
+    let mut out = vec![0f32; x.len()];
+    let (xn, xc, hc) = (x_next.data(), x.data(), h.data());
+    let scale = f.scale();
+    let step = f.step();
+    // NOTE on integrity: `n_prev = 2*sign*(n_next - t2) - s` has parity `s`
+    // *identically* (the first term is even), so parity cannot detect
+    // corrupted inputs — a flipped side bit silently shifts the element by
+    // one grid step (see prop_bit_flip_shifts_one_element_one_step).
+    // End-to-end integrity is therefore asserted by the bitwise round-trip
+    // tests, not by a runtime check here.
+    for (b, &sign) in signs.iter().enumerate() {
+        let gamma = gamma_of_sign(sign);
+        let s64 = sign as i64;
+        let (c_skip, c_h) = (1.0 - gamma, 1.0 + gamma);
+        let base = b * per;
+        for i in base..base + per {
+            let sn = xn[i] as f64 * scale;
+            let n_next = (sn.abs() + 0.5).floor().copysign(sn) as i64;
+            let s2 = (c_skip * xc[i] as f64 + c_h * hc[i] as f64) * scale;
+            let t2 = (s2.abs() + 0.5).floor().copysign(s2) as i64;
+            let s = s_prev.get(i) as i64;
+            // invert eq. 21: n_prev = 2*sign*(n_next - t2) - s
+            let n_prev = 2 * s64 * (n_next - t2) - s;
+            out[i] = (n_prev as f64 * step) as f32;
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+// ---------------------------------------------------------------------------
+// Float (non-quantized) path: eq. 10 / eq. 16
+// ---------------------------------------------------------------------------
+
+/// eq. 10: `x_{k+1} = gamma x_{k-1} + (1-gamma) x_k + (1+gamma) h_k` in f32.
+/// `gammas[b]` may be any magnitude (Table-2 ablation: 0, ±0.25, ±0.5, ±0.6).
+pub fn bdia_forward_float(
+    x_prev: &Tensor,
+    x: &Tensor,
+    h: &Tensor,
+    gammas: &[f32],
+) -> Result<Tensor> {
+    ensure!(x_prev.shape() == x.shape() && x.shape() == h.shape(), "shape mismatch");
+    let per = per_sample(x, &vec![0i8; gammas.len()])
+        .or_else(|_| per_sample(x, &vec![0i8; gammas.len()]))?;
+    let mut out = vec![0f32; x.len()];
+    let (xp, xc, hc) = (x_prev.data(), x.data(), h.data());
+    for (b, &g) in gammas.iter().enumerate() {
+        let base = b * per;
+        for i in base..base + per {
+            out[i] = g * xp[i] + (1.0 - g) * xc[i] + (1.0 + g) * hc[i];
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// eq. 16: float inversion `x_{k-1} = x_{k+1}/gamma - (1-gamma)/gamma x_k -
+/// (1+gamma)/gamma h_k`.  NOT exact — the 1/gamma = ±2 factor amplifies f32
+/// rounding error multiplicatively down the stack (the paper's Fig. 2);
+/// [`bdia_reconstruct_quant`] exists precisely to eliminate this.
+pub fn bdia_invert_float(
+    x_next: &Tensor,
+    x: &Tensor,
+    h: &Tensor,
+    gammas: &[f32],
+) -> Result<Tensor> {
+    ensure!(x_next.shape() == x.shape() && x.shape() == h.shape(), "shape mismatch");
+    ensure!(gammas.iter().all(|&g| g != 0.0), "eq. 16 undefined for gamma = 0");
+    let per = per_sample(x, &vec![0i8; gammas.len()])?;
+    let mut out = vec![0f32; x.len()];
+    let (xn, xc, hc) = (x_next.data(), x.data(), h.data());
+    for (b, &g) in gammas.iter().enumerate() {
+        let base = b * per;
+        for i in base..base + per {
+            out[i] = xn[i] / g - (1.0 - g) / g * xc[i] - (1.0 + g) / g * hc[i];
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// Per-sample row scaling: `out[b, ...] = coeffs[b] * t[b, ...]` — used by
+/// the backward recursion for the (1±gamma_b) gradient coefficients.
+pub fn scale_rows(t: &Tensor, coeffs: &[f32]) -> Result<Tensor> {
+    let b = coeffs.len();
+    ensure!(!t.shape().is_empty() && t.shape()[0] == b, "batch mismatch");
+    let per = t.len() / b;
+    let mut out = vec![0f32; t.len()];
+    for (bi, &c) in coeffs.iter().enumerate() {
+        let base = bi * per;
+        for i in base..base + per {
+            out[i] = c * t.data()[i];
+        }
+    }
+    Tensor::from_vec(t.shape(), out)
+}
+
+/// In-place fused: `acc[b,...] += c1[b] * g[b,...]` (backward hot path).
+pub fn axpy_rows(acc: &mut Tensor, coeffs: &[f32], g: &Tensor) -> Result<()> {
+    ensure!(acc.shape() == g.shape(), "shape mismatch");
+    let b = coeffs.len();
+    ensure!(acc.shape()[0] == b, "batch mismatch");
+    let per = acc.len() / b;
+    let gd = g.data();
+    let ad = acc.data_mut();
+    for (bi, &c) in coeffs.iter().enumerate() {
+        let base = bi * per;
+        for i in base..base + per {
+            ad[i] += c * gd[i];
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    const F: Fixed = Fixed::new(9);
+
+    fn grid_tensor(shape: &[usize], rng: &mut Rng, scale: f32) -> Tensor {
+        let mut t = Tensor::normal(shape, scale, rng);
+        F.quantize_slice(t.data_mut());
+        t
+    }
+
+    #[test]
+    fn forward_output_on_grid() {
+        let mut rng = Rng::new(0);
+        let xp = grid_tensor(&[2, 8], &mut rng, 3.0);
+        let x = grid_tensor(&[2, 8], &mut rng, 3.0);
+        let h = Tensor::normal(&[2, 8], 1.0, &mut rng); // h arbitrary f32
+        let (out, _) = bdia_forward_quant(&xp, &x, &h, &[1, -1], F).unwrap();
+        assert!(out.data().iter().all(|&v| F.is_on_grid(v)));
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        // THE paper claim: forward (eq. 21) then reconstruct (eq. 24) is the
+        // identity, bit for bit, for both gamma signs.
+        let mut rng = Rng::new(1);
+        for trial in 0..50 {
+            let xp = grid_tensor(&[4, 16], &mut rng, 5.0);
+            let x = grid_tensor(&[4, 16], &mut rng, 5.0);
+            let h = Tensor::normal(&[4, 16], 2.0, &mut rng);
+            let signs = [1i8, -1, 1, -1];
+            let (xn, s) = bdia_forward_quant(&xp, &x, &h, &signs, F).unwrap();
+            let rec = bdia_reconstruct_quant(&xn, &x, &h, &s, &signs, F).unwrap();
+            assert_eq!(rec.data(), xp.data(), "trial {trial}: drift detected");
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact_with_large_magnitudes() {
+        // headroom: |x| up to ~2^14 still exact on the l=9 grid in f32
+        let mut rng = Rng::new(2);
+        let xp = grid_tensor(&[1, 32], &mut rng, 10_000.0);
+        let x = grid_tensor(&[1, 32], &mut rng, 10_000.0);
+        let h = Tensor::normal(&[1, 32], 100.0, &mut rng);
+        let (xn, s) = bdia_forward_quant(&xp, &x, &h, &[1], F).unwrap();
+        let rec = bdia_reconstruct_quant(&xn, &x, &h, &s, &[1], F).unwrap();
+        assert_eq!(rec.data(), xp.data());
+    }
+
+    #[test]
+    fn side_bits_match_parity() {
+        let mut rng = Rng::new(3);
+        let xp = grid_tensor(&[2, 8], &mut rng, 2.0);
+        let x = grid_tensor(&[2, 8], &mut rng, 2.0);
+        let h = Tensor::normal(&[2, 8], 1.0, &mut rng);
+        let (_, s) = bdia_forward_quant(&xp, &x, &h, &[1, 1], F).unwrap();
+        for (i, &v) in xp.data().iter().enumerate() {
+            let n = F.units_of_exact(v).unwrap();
+            assert_eq!(s.get(i), Fixed::parity_units(n) == 1);
+        }
+    }
+
+    #[test]
+    fn corrupted_side_info_changes_reconstruction() {
+        let mut rng = Rng::new(4);
+        let xp = grid_tensor(&[1, 16], &mut rng, 2.0);
+        let x = grid_tensor(&[1, 16], &mut rng, 2.0);
+        let h = Tensor::normal(&[1, 16], 1.0, &mut rng);
+        let (xn, mut s) = bdia_forward_quant(&xp, &x, &h, &[1], F).unwrap();
+        s.flip(5);
+        let rec = bdia_reconstruct_quant(&xn, &x, &h, &s, &[1], F).unwrap();
+        // flipped parity shifts element 5 by exactly one grid step
+        assert!((rec.data()[5] - xp.data()[5]).abs() > 0.0);
+        assert_eq!(
+            (rec.data()[5] - xp.data()[5]).abs(),
+            F.step() as f32
+        );
+    }
+
+    #[test]
+    fn float_invert_matches_forward_approximately() {
+        let mut rng = Rng::new(5);
+        let xp = Tensor::normal(&[2, 8], 1.0, &mut rng);
+        let x = Tensor::normal(&[2, 8], 1.0, &mut rng);
+        let h = Tensor::normal(&[2, 8], 1.0, &mut rng);
+        let gammas = [0.5f32, -0.5];
+        let xn = bdia_forward_float(&xp, &x, &h, &gammas).unwrap();
+        let rec = bdia_invert_float(&xn, &x, &h, &gammas).unwrap();
+        // float path is approximately invertible (one step) ...
+        assert!(rec.max_abs_diff(&xp).unwrap() < 1e-5);
+        // ... but NOT exactly, in general (that's Fig. 2's point; the exact
+        // path's test asserts == instead).
+    }
+
+    #[test]
+    fn float_invert_rejects_gamma_zero() {
+        let t = Tensor::zeros(&[1, 4]);
+        assert!(bdia_invert_float(&t, &t, &t, &[0.0]).is_err());
+    }
+
+    #[test]
+    fn first_step_matches_eq19() {
+        let mut rng = Rng::new(6);
+        let x0 = grid_tensor(&[1, 8], &mut rng, 1.0);
+        let h0 = Tensor::normal(&[1, 8], 1.0, &mut rng);
+        let x1 = first_step_quant(&x0, &h0, F).unwrap();
+        for i in 0..8 {
+            let expect = x0.data()[i] + F.quantize(h0.data()[i]);
+            assert_eq!(x1.data()[i], expect);
+        }
+    }
+
+    #[test]
+    fn scale_axpy_rows() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let s = scale_rows(&t, &[2.0, -1.0]).unwrap();
+        assert_eq!(s.data(), &[2.0, 4.0, -3.0, -4.0]);
+        let mut acc = Tensor::zeros(&[2, 2]);
+        axpy_rows(&mut acc, &[1.0, 0.5], &t).unwrap();
+        assert_eq!(acc.data(), &[1.0, 2.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn gamma0_float_forward_is_plain_residual() {
+        let mut rng = Rng::new(7);
+        let xp = Tensor::normal(&[1, 4], 1.0, &mut rng);
+        let x = Tensor::normal(&[1, 4], 1.0, &mut rng);
+        let h = Tensor::normal(&[1, 4], 1.0, &mut rng);
+        let out = bdia_forward_float(&xp, &x, &h, &[0.0]).unwrap();
+        for i in 0..4 {
+            assert!((out.data()[i] - (x.data()[i] + h.data()[i])).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Packed side-information bitsets (paper eq. 20).
+//!
+//! BDIA with gamma = +/-0.5 loses exactly 1 bit per activation element per
+//! block (the parity of `x_{k-1}/2^-l`); the forward pass stores it here and
+//! the backward pass consumes it in the eq.-24 reconstruction.  Packing is
+//! 64 elements/word, so the memory cost is `B*T*D/8` bytes per block — the
+//! "lightweight side information" the paper's Table 1 accounts for.
+
+/// A fixed-length packed bit vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        BitVec { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Bytes occupied by the packed payload (memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Flip bit i (failure-injection tests corrupt side info through this).
+    pub fn flip(&mut self, i: usize) {
+        let cur = self.get(i);
+        self.set(i, !cur);
+    }
+
+    /// Build from element parities in one pass.
+    pub fn from_parities(parities: impl Iterator<Item = u8>) -> Self {
+        let mut words: Vec<u64> = Vec::new();
+        let mut cur = 0u64;
+        let mut nbits = 0usize;
+        let mut len = 0usize;
+        for p in parities {
+            if p & 1 == 1 {
+                cur |= 1u64 << nbits;
+            }
+            nbits += 1;
+            len += 1;
+            if nbits == 64 {
+                words.push(cur);
+                cur = 0;
+                nbits = 0;
+            }
+        }
+        if nbits > 0 {
+            words.push(cur);
+        }
+        BitVec { words, len }
+    }
+}
+
+/// Side information for a whole training step: one `BitVec` per transformer
+/// block index that required it (`k = 1..K-1` stores `s_{k-1}`).
+#[derive(Clone, Debug, Default)]
+pub struct SideInfoStore {
+    bits: Vec<Option<BitVec>>,
+}
+
+impl SideInfoStore {
+    pub fn new(n_blocks: usize) -> Self {
+        SideInfoStore { bits: vec![None; n_blocks] }
+    }
+
+    pub fn put(&mut self, block: usize, bv: BitVec) {
+        self.bits[block] = Some(bv);
+    }
+
+    pub fn take(&mut self, block: usize) -> Option<BitVec> {
+        self.bits[block].take()
+    }
+
+    pub fn get(&self, block: usize) -> Option<&BitVec> {
+        self.bits[block].as_ref()
+    }
+
+    pub fn get_mut(&mut self, block: usize) -> Option<&mut BitVec> {
+        self.bits[block].as_mut()
+    }
+
+    /// Total packed bytes currently held (Table-1 accounting).
+    pub fn nbytes(&self) -> usize {
+        self.bits.iter().flatten().map(BitVec::nbytes).sum()
+    }
+
+    pub fn clear(&mut self) {
+        for b in &mut self.bits {
+            *b = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut bv = BitVec::zeros(130);
+        bv.set(0, true);
+        bv.set(64, true);
+        bv.set(129, true);
+        assert!(bv.get(0) && bv.get(64) && bv.get(129));
+        assert!(!bv.get(1) && !bv.get(63) && !bv.get(128));
+        assert_eq!(bv.count_ones(), 3);
+        bv.set(64, false);
+        assert_eq!(bv.count_ones(), 2);
+    }
+
+    #[test]
+    fn from_parities_matches_set() {
+        let ps: Vec<u8> = (0..200).map(|i| (i % 3 == 0) as u8).collect();
+        let bv = BitVec::from_parities(ps.iter().copied());
+        assert_eq!(bv.len(), 200);
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(bv.get(i), p == 1, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn nbytes_is_packed() {
+        // 1 bit per element: 512 elements -> 64 bytes, not 512
+        assert_eq!(BitVec::zeros(512).nbytes(), 64);
+        assert_eq!(BitVec::zeros(65).nbytes(), 16);
+    }
+
+    #[test]
+    fn flip_inverts() {
+        let mut bv = BitVec::zeros(10);
+        bv.flip(3);
+        assert!(bv.get(3));
+        bv.flip(3);
+        assert!(!bv.get(3));
+    }
+
+    #[test]
+    fn store_put_take() {
+        let mut st = SideInfoStore::new(4);
+        st.put(2, BitVec::zeros(128));
+        assert_eq!(st.nbytes(), 16);
+        assert!(st.get(2).is_some());
+        let bv = st.take(2).unwrap();
+        assert_eq!(bv.len(), 128);
+        assert!(st.get(2).is_none());
+        assert_eq!(st.nbytes(), 0);
+    }
+}

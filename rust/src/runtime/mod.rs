@@ -1,0 +1,212 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! training hot loop.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client):
+//! `PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
+//! execute`.  Python is never on this path — the bundle produced by
+//! `make artifacts` is all the Rust binary needs.
+//!
+//! Calling convention (must mirror `python/compile/aot.py`):
+//! inputs = [param leaves in manifest order] ++ [data inputs]; outputs are a
+//! tuple, unpacked here into host [`Tensor`]s using the manifest shapes.
+
+use crate::config::json::Json;
+use crate::model::{ArgSpec, DType, ExecSpec, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A data argument for an executable call.
+pub enum ArgValue<'a> {
+    F32(&'a Tensor),
+    I32(&'a IntTensor),
+    /// f32 scalar (e.g. the runtime `gamma` input of `model_infer`).
+    Scalar(f32),
+}
+
+impl ArgValue<'_> {
+    fn matches(&self, spec: &ArgSpec) -> bool {
+        match (self, spec.dtype) {
+            (ArgValue::F32(t), DType::F32) => t.shape() == &spec.shape[..],
+            (ArgValue::I32(t), DType::I32) => t.shape() == &spec.shape[..],
+            (ArgValue::Scalar(_), DType::F32) => spec.shape.is_empty(),
+            _ => false,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            ArgValue::F32(t) => tensor_literal(t),
+            ArgValue::I32(t) => {
+                let lit = xla::Literal::vec1(t.data());
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+            ArgValue::Scalar(v) => Ok(xla::Literal::from(*v)),
+        }
+    }
+}
+
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// One compiled executable plus its ABI spec.
+pub struct Exec {
+    pub name: String,
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// flop/byte estimate hooks could live here later
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl Exec {
+    /// Execute with `params` (flat leaf tensors, manifest order) and `data`.
+    /// Returns the output tuple as host tensors (shapes from the manifest).
+    pub fn call(&self, params: &[&Tensor], data: &[ArgValue]) -> Result<Vec<Tensor>> {
+        ensure!(
+            data.len() == self.spec.data_inputs.len(),
+            "{}: expected {} data inputs, got {}",
+            self.name,
+            self.spec.data_inputs.len(),
+            data.len()
+        );
+        for (d, spec) in data.iter().zip(&self.spec.data_inputs) {
+            ensure!(
+                d.matches(spec),
+                "{}: data input '{}' shape/dtype mismatch (want {:?} {:?})",
+                self.name,
+                spec.name,
+                spec.dtype,
+                spec.shape
+            );
+        }
+        let mut lits = Vec::with_capacity(params.len() + data.len());
+        for p in params {
+            lits.push(tensor_literal(p)?);
+        }
+        for d in data {
+            lits.push(d.to_literal()?);
+        }
+        self.calls.set(self.calls.get() + 1);
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        self.unpack(result)
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<Vec<Tensor>> {
+        let parts = result.to_tuple()?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.spec.outputs.len(),
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
+            ensure!(
+                spec.dtype == DType::F32,
+                "{}: only f32 outputs supported, got {:?}",
+                self.name,
+                spec.dtype
+            );
+            let v = lit.to_vec::<f32>()?;
+            out.push(Tensor::from_vec(&spec.shape, v)?);
+        }
+        Ok(out)
+    }
+}
+
+/// The per-bundle runtime: a PJRT client plus all compiled executables.
+pub struct Runtime {
+    pub manifest: Manifest,
+    execs: BTreeMap<String, Exec>,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Load `artifacts/<name>/` — parse the manifest, compile every HLO.
+    pub fn load(artifacts_dir: &Path, bundle: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(bundle);
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let manifest = Manifest::from_json(&Json::parse(&text)?)?;
+        Self::from_manifest(manifest, &dir)
+    }
+
+    pub fn from_manifest(manifest: Manifest, dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut execs = BTreeMap::new();
+        for (name, spec) in &manifest.executables {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            execs.insert(
+                name.clone(),
+                Exec {
+                    name: name.clone(),
+                    spec: spec.clone(),
+                    exe,
+                    calls: std::cell::Cell::new(0),
+                },
+            );
+        }
+        Ok(Runtime { manifest, execs, client })
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&Exec> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no executable '{name}' in bundle"))
+    }
+
+    pub fn has_exec(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    pub fn exec_names(&self) -> impl Iterator<Item = &str> {
+        self.execs.keys().map(String::as_str)
+    }
+
+    /// Total executable invocations (profiling).
+    pub fn total_calls(&self) -> u64 {
+        self.execs.values().map(|e| e.calls.get()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argvalue_shape_check() {
+        let spec = ArgSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 3],
+        };
+        let good = Tensor::zeros(&[2, 3]);
+        let bad = Tensor::zeros(&[3, 2]);
+        assert!(ArgValue::F32(&good).matches(&spec));
+        assert!(!ArgValue::F32(&bad).matches(&spec));
+        let scalar_spec = ArgSpec { name: "g".into(), dtype: DType::F32, shape: vec![] };
+        assert!(ArgValue::Scalar(0.5).matches(&scalar_spec));
+        assert!(!ArgValue::Scalar(0.5).matches(&spec));
+    }
+}

@@ -1,0 +1,347 @@
+//! System-level correctness of the BDIA coordinator — the paper's claims:
+//!
+//! 1. **Exact bit-level reversibility** (§4.3): activations reconstructed by
+//!    eq. 24 during online backprop equal the forward activations *bitwise*.
+//! 2. **Gradient equivalence**: online (reconstructing) backward produces
+//!    the same gradients as a store-all backward over the same quantized
+//!    forward — reconstruction adds zero gradient drift.
+//! 3. Float inversion (eq. 16) drifts and the drift *grows with depth*
+//!    (Fig. 2's phenomenon), while the quantized path is drift-free.
+//! 4. Training works end-to-end for all three families + RevViT baseline.
+//!
+//! Uses the smoke bundles (run `make artifacts` first).
+
+use bdia::baseline::RevVitTrainer;
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::{GammaPlan, Stack, StackKind, StackState, Trainer};
+use bdia::data::{make_dataset, Batch};
+use bdia::model::ParamStore;
+use bdia::quant;
+use bdia::runtime::Runtime;
+use bdia::tensor::{Rng, Tensor};
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(bundle: &str) -> bool {
+    artifacts().join(bundle).join("manifest.json").exists()
+}
+
+fn cfg_for(bundle: &str, mode: TrainMode) -> TrainConfig {
+    TrainConfig {
+        model: bundle.into(),
+        mode,
+        dataset: match bundle {
+            "smoke_vit" => "synth_cifar10".into(),
+            "smoke_gpt" => "tiny_corpus".into(),
+            "smoke_encdec" => "synth_translation".into(),
+            _ => unreachable!(),
+        },
+        steps: 4,
+        eval_every: 0,
+        log_every: 1,
+        artifacts_dir: artifacts(),
+        train_examples: 64,
+        val_examples: 16,
+        lr: 1e-3,
+        ..TrainConfig::default()
+    }
+}
+
+/// Reference quantized forward that stores EVERY activation (test-only).
+fn forward_quant_storing_all(
+    stack: &Stack,
+    params: &ParamStore,
+    x0: Tensor,
+    plan: &GammaPlan,
+) -> Vec<Tensor> {
+    let mut x0q = x0;
+    quant::quantize_activation(&mut x0q, stack.fixed);
+    stack.forward_float_like_quant(params, x0q, plan)
+}
+
+trait QuantRecorder {
+    fn forward_float_like_quant(
+        &self,
+        params: &ParamStore,
+        x0q: Tensor,
+        plan: &GammaPlan,
+    ) -> Vec<Tensor>;
+}
+
+impl QuantRecorder for Stack<'_> {
+    /// Independent re-implementation of eqs. 18-21 used only as the test
+    /// oracle: tracks all activations with the same fixed-point combine.
+    fn forward_float_like_quant(
+        &self,
+        params: &ParamStore,
+        x0q: Tensor,
+        plan: &GammaPlan,
+    ) -> Vec<Tensor> {
+        let f = self.fixed;
+        let h0 = self.debug_call_fwd(params, 0, &x0q, None).unwrap();
+        let x1 = quant::first_step_quant(&x0q, &h0, f).unwrap();
+        let mut xs = vec![x0q, x1];
+        for k in 1..self.n_blocks {
+            let h = self.debug_call_fwd(params, k, &xs[k], None).unwrap();
+            let signs = plan.signs(k).unwrap();
+            let (x_next, _bits) =
+                quant::bdia_forward_quant(&xs[k - 1], &xs[k], &h, &signs, f).unwrap();
+            xs.push(x_next);
+        }
+        xs
+    }
+}
+
+#[test]
+fn reversible_reconstruction_is_bitwise_exact() {
+    if !have("smoke_gpt") {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let params = ParamStore::init(&rt.manifest, 5);
+    let stack = Stack::new(&rt, StackKind::Main).unwrap();
+    let dims = &rt.manifest.dims;
+    let mut rng = Rng::new(1);
+    let x0 = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+    let plan = GammaPlan::draw(&mut rng, stack.n_blocks, dims.batch, 0.5);
+
+    // oracle record of all activations
+    let xs_ref = forward_quant_storing_all(&stack, &params, x0.clone(), &plan);
+
+    // production path: boundaries + side info only, then reconstruct
+    let state = stack.forward_quant(&params, x0, None, &plan).unwrap();
+    let xs_rec = stack.reconstruct_all(&params, &state, None, &plan).unwrap();
+
+    assert_eq!(xs_ref.len(), xs_rec.len());
+    for (k, (a, b)) in xs_ref.iter().zip(&xs_rec).enumerate() {
+        assert_eq!(a.data(), b.data(), "activation x_{k} reconstruction drifted");
+    }
+}
+
+#[test]
+fn online_backward_gradients_match_store_all_bitwise() {
+    if !have("smoke_gpt") {
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let params = ParamStore::init(&rt.manifest, 6);
+    let stack = Stack::new(&rt, StackKind::Main).unwrap();
+    let dims = &rt.manifest.dims;
+    let mut rng = Rng::new(2);
+    let x0 = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+    let plan = GammaPlan::draw(&mut rng, stack.n_blocks, dims.batch, 0.5);
+    let gx = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+
+    // path A: reversible (reconstructing) backward
+    let state = stack.forward_quant(&params, x0.clone(), None, &plan).unwrap();
+    let ga = stack
+        .backward(&params, state, None, &plan, gx.clone())
+        .unwrap();
+
+    // path B: store-all backward over the same quantized activations
+    let mut x0q = x0;
+    quant::quantize_activation(&mut x0q, stack.fixed);
+    let xs = stack.forward_float_like_quant(&params, x0q, &plan);
+    let gb = stack
+        .backward(&params, StackState::Full { xs }, None, &plan, gx)
+        .unwrap();
+
+    assert_eq!(ga.dx0.data(), gb.dx0.data(), "dx0 must match bitwise");
+    for (k, (da, db)) in ga.dparams.iter().zip(&gb.dparams).enumerate() {
+        for (i, (a, b)) in da.iter().zip(db).enumerate() {
+            assert_eq!(a.data(), b.data(), "dparams[{k}][{i}] drifted");
+        }
+    }
+}
+
+#[test]
+fn float_inversion_drift_grows_with_depth() {
+    // the Fig.-2 phenomenon: eq.-16 float inversion error amplifies ~2x per
+    // block, while the quantized path is exactly zero (previous tests).
+    if !have("smoke_gpt") {
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let params = ParamStore::init(&rt.manifest, 7);
+    let stack = Stack::new(&rt, StackKind::Main).unwrap();
+    let dims = &rt.manifest.dims;
+    let mut rng = Rng::new(3);
+    let x0 = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+    let plan = GammaPlan::draw(&mut rng, stack.n_blocks, dims.batch, 0.5);
+
+    let StackState::Full { xs } = stack
+        .forward_float(&params, x0, None, &plan)
+        .unwrap()
+    else {
+        panic!()
+    };
+    // invert top-down in float (eq. 16) re-using the stored x_k (so drift
+    // comes purely from the inversion arithmetic, like Fig. 2)
+    let k_total = stack.n_blocks;
+    let mut x_next = xs[k_total].clone();
+    let mut x_cur = xs[k_total - 1].clone();
+    let mut drifts = Vec::new();
+    for k in (1..k_total).rev() {
+        let h = stack.debug_call_fwd(&params, k, &x_cur, None).unwrap();
+        let rec = quant::bdia_invert_float(&x_next, &x_cur, &h, &plan.gammas[k]).unwrap();
+        let drift = rec.max_abs_diff(&xs[k - 1]).unwrap();
+        drifts.push(drift);
+        x_next = x_cur;
+        x_cur = rec; // propagate the drifted value, like real online backprop
+    }
+    let first = drifts.first().copied().unwrap();
+    let last = drifts.last().copied().unwrap();
+    assert!(last > first, "drift must accumulate: {drifts:?}");
+    assert!(last > 1e-6, "deep drift should be visible: {drifts:?}");
+}
+
+#[test]
+fn trainers_descend_all_families() {
+    for bundle in ["smoke_vit", "smoke_gpt", "smoke_encdec"] {
+        if !have(bundle) {
+            continue;
+        }
+        for mode in [TrainMode::BdiaReversible, TrainMode::Vanilla] {
+            let cfg = cfg_for(bundle, mode);
+            let mut tr = Trainer::new(cfg.clone()).unwrap();
+            let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family).unwrap();
+            let mut losses = Vec::new();
+            for step in 0..cfg.steps {
+                let b = ds.train_batch(step);
+                let stats = tr.train_step(&b).unwrap();
+                assert!(stats.loss.is_finite(), "{bundle}/{mode:?} loss blew up");
+                losses.push(stats.loss);
+            }
+            // same batch pool: after a few steps the loss on batch 0 drops
+            let b0 = ds.train_batch(0);
+            let fs = tr.forward(&b0).unwrap();
+            assert!(
+                fs.loss < losses[0] + 0.05,
+                "{bundle}/{mode:?}: no descent ({} -> {})",
+                losses[0],
+                fs.loss
+            );
+        }
+    }
+}
+
+#[test]
+fn reversible_stores_less_than_vanilla_live() {
+    if !have("smoke_gpt") {
+        return;
+    }
+    let run = |mode| {
+        let cfg = cfg_for("smoke_gpt", mode);
+        let mut tr = Trainer::new(cfg.clone()).unwrap();
+        let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family).unwrap();
+        let b = ds.train_batch(0);
+        tr.train_step(&b).unwrap().stored_activation_bytes
+    };
+    let rev = run(TrainMode::BdiaReversible);
+    let van = run(TrainMode::Vanilla);
+    // smoke_gpt: K=4 blocks -> store-all keeps 5 tensors, reversible keeps 2
+    // (+ side bits). Live numbers, not the analytic model.
+    assert!(rev < van, "reversible {rev} vs vanilla {van}");
+    let dims = Runtime::load(&artifacts(), "smoke_gpt").unwrap().manifest.dims;
+    let btd = dims.batch * dims.seq * dims.d_model * 4;
+    assert_eq!(van, (dims.n_blocks + 1) * btd);
+    let side = (dims.n_blocks - 1) * (btd / 4).div_ceil(64) * 8;
+    assert_eq!(rev, 2 * btd + side);
+}
+
+#[test]
+fn revvit_trains_and_inversion_drift_is_small_but_nonzero() {
+    if !have("smoke_vit") {
+        return;
+    }
+    let cfg = cfg_for("smoke_vit", TrainMode::RevVit);
+    let mut tr = RevVitTrainer::new(cfg.clone()).unwrap();
+    let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), bdia::model::Family::Vit)
+        .unwrap();
+    let mut first = None;
+    for step in 0..cfg.steps {
+        let b = ds.train_batch(step);
+        let s = tr.train_step(&b).unwrap();
+        assert!(s.loss.is_finite());
+        first.get_or_insert(s.loss);
+    }
+    // float inversion: drift exists in principle but stays tiny on 3 blocks
+    assert!(tr.inversion_drift.is_finite());
+    assert!(tr.inversion_drift < 1e-3, "drift {}", tr.inversion_drift);
+    let (vl, va) = tr.evaluate(ds.as_ref(), 2).unwrap();
+    assert!(vl.is_finite() && (0.0..=1.0).contains(&va));
+}
+
+#[test]
+fn bdia_reversible_rejects_non_half_gamma() {
+    if !have("smoke_gpt") {
+        return;
+    }
+    let mut cfg = cfg_for("smoke_gpt", TrainMode::BdiaReversible);
+    cfg.gamma_mag = 0.25;
+    assert!(Trainer::new(cfg).is_err(), "|gamma| != 0.5 must be rejected");
+}
+
+#[test]
+fn bdia_float_supports_ablation_gammas() {
+    if !have("smoke_gpt") {
+        return;
+    }
+    for mag in [0.0f32, 0.25, 0.5, 0.6] {
+        let mut cfg = cfg_for("smoke_gpt", TrainMode::BdiaFloat);
+        cfg.gamma_mag = mag;
+        cfg.steps = 2;
+        let mut tr = Trainer::new(cfg.clone()).unwrap();
+        let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family).unwrap();
+        let b = ds.train_batch(0);
+        let s = tr.train_step(&b).unwrap();
+        assert!(s.loss.is_finite(), "gamma_mag {mag}");
+    }
+}
+
+#[test]
+fn eval_gamma_sweep_runs() {
+    if !have("smoke_vit") {
+        return;
+    }
+    let cfg = cfg_for("smoke_vit", TrainMode::Vanilla);
+    let tr = Trainer::new(cfg.clone()).unwrap();
+    let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family).unwrap();
+    for gamma in [-0.5f32, 0.0, 0.5] {
+        let (l, a) = tr.evaluate(ds.as_ref(), 1, gamma).unwrap();
+        assert!(l.is_finite() && (0.0..=1.0).contains(&a), "gamma {gamma}");
+    }
+}
+
+#[test]
+fn corrupted_side_info_detected_or_changes_grads() {
+    // failure injection: the quant layer already unit-tests bit flips; at
+    // system level we check a *missing* side-info entry fails loudly.
+    if !have("smoke_gpt") {
+        return;
+    }
+    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let params = ParamStore::init(&rt.manifest, 8);
+    let stack = Stack::new(&rt, StackKind::Main).unwrap();
+    let dims = &rt.manifest.dims;
+    let mut rng = Rng::new(4);
+    let x0 = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+    let plan = GammaPlan::draw(&mut rng, stack.n_blocks, dims.batch, 0.5);
+    let state = stack.forward_quant(&params, x0, None, &plan).unwrap();
+    let StackState::Reversible { x_last, x_prev, mut side } = state else {
+        panic!()
+    };
+    side.take(stack.n_blocks - 1); // lose one block's side info
+    let res = stack.backward(
+        &params,
+        StackState::Reversible { x_last, x_prev, side },
+        None,
+        &plan,
+        Tensor::zeros(&[dims.batch, dims.seq, dims.d_model]),
+    );
+    assert!(res.is_err(), "missing side info must be a hard error");
+}

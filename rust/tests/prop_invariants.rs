@@ -1,0 +1,356 @@
+//! Property-based tests (in-repo harness; proptest unavailable offline).
+//!
+//! Each property runs across hundreds of seeded random cases; a failure
+//! reports the seed for replay.  These are pure-host properties — no PJRT —
+//! so they run in milliseconds and cover far more cases than the
+//! integration tests.
+
+use bdia::config::json::Json;
+use bdia::coordinator::GammaPlan;
+use bdia::metrics::memory::MemoryModel;
+use bdia::model::{Dims, Family};
+use bdia::quant::{self, BitVec, Fixed};
+use bdia::tensor::{Rng, Tensor};
+
+/// Run `f(case_rng)` for `n` seeded cases; panic with the failing seed.
+fn for_cases(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xabcd);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn grid_tensor(f: Fixed, shape: &[usize], rng: &mut Rng, scale: f32) -> Tensor {
+    let mut t = Tensor::normal(shape, scale, rng);
+    f.quantize_slice(t.data_mut());
+    t
+}
+
+fn rand_signs(rng: &mut Rng, b: usize) -> Vec<i8> {
+    (0..b).map(|_| rng.sign()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// eq. 21 <-> eq. 24 single-step properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_single_step_roundtrip_bit_exact() {
+    for_cases(300, |rng| {
+        let lbits = [7u32, 9, 11][rng.below(3)];
+        let f = Fixed::new(lbits);
+        let b = 1 + rng.below(4);
+        let per = 1 + rng.below(64);
+        // stay within the documented headroom |x| < 2^(24-l); the guard
+        // behaviour above it is tested separately below
+        let max_scale = (quant::UNIT_HEADROOM as f64 * f.step() / 16.0) as f32;
+        let scale = [0.5f32, 2.0, 50.0, max_scale][rng.below(4)];
+        let xp = grid_tensor(f, &[b, per], rng, scale);
+        let x = grid_tensor(f, &[b, per], rng, scale);
+        let h = Tensor::normal(&[b, per], scale, rng);
+        let signs = rand_signs(rng, b);
+        let (xn, bits) = quant::bdia_forward_quant(&xp, &x, &h, &signs, f).unwrap();
+        let rec = quant::bdia_reconstruct_quant(&xn, &x, &h, &bits, &signs, f).unwrap();
+        assert_eq!(rec.data(), xp.data());
+    });
+}
+
+#[test]
+fn prop_headroom_overflow_fails_loudly_not_silently() {
+    // beyond 2^(24-l) the f32 grid drops bits; the combine must error, never
+    // return silently-wrong values (regression for the case the roundtrip
+    // property originally caught at lbits=11, scale=2000).
+    let f = Fixed::new(11);
+    let huge = (quant::UNIT_HEADROOM as f64 * f.step()) as f32 * 0.9;
+    let xp = Tensor::from_vec(&[1, 2], vec![f.quantize(huge), 0.0]).unwrap();
+    let x = Tensor::from_vec(&[1, 2], vec![f.quantize(huge), 0.0]).unwrap();
+    let h = Tensor::from_vec(&[1, 2], vec![huge, 0.0]).unwrap();
+    let res = quant::bdia_forward_quant(&xp, &x, &h, &[1], f);
+    assert!(res.is_err(), "overflow must be a hard error");
+}
+
+#[test]
+fn prop_forward_output_always_on_grid() {
+    for_cases(200, |rng| {
+        let f = Fixed::new(9);
+        let b = 1 + rng.below(3);
+        let xp = grid_tensor(f, &[b, 32], rng, 3.0);
+        let x = grid_tensor(f, &[b, 32], rng, 3.0);
+        let h = Tensor::normal(&[b, 32], 1.5, rng);
+        let signs = rand_signs(rng, b);
+        let (xn, _) = quant::bdia_forward_quant(&xp, &x, &h, &signs, f).unwrap();
+        for &v in xn.data() {
+            assert!(f.is_on_grid(v), "off-grid output {v}");
+        }
+    });
+}
+
+#[test]
+fn prop_side_bits_equal_parity() {
+    for_cases(200, |rng| {
+        let f = Fixed::new(9);
+        let xp = grid_tensor(f, &[2, 16], rng, 4.0);
+        let x = grid_tensor(f, &[2, 16], rng, 4.0);
+        let h = Tensor::normal(&[2, 16], 1.0, rng);
+        let signs = rand_signs(rng, 2);
+        let (_, bits) = quant::bdia_forward_quant(&xp, &x, &h, &signs, f).unwrap();
+        for (i, &v) in xp.data().iter().enumerate() {
+            let n = f.units_of_exact(v).unwrap();
+            assert_eq!(bits.get(i), Fixed::parity_units(n) == 1);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// multi-step chain: depth does not accumulate error (the paper's whole point)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_deep_chain_roundtrip_exact_any_depth() {
+    // Simulate a K-deep BDIA stack with random residuals h_k (no HLO): the
+    // quantized inversion must be exact at EVERY depth, unlike Fig. 2.
+    for_cases(60, |rng| {
+        let f = Fixed::new(9);
+        let k_total = 2 + rng.below(63); // up to 64 "blocks"
+        let b = 1 + rng.below(3);
+        let per = 8 + rng.below(24);
+        let x0 = grid_tensor(f, &[b, per], rng, 2.0);
+        let h: Vec<Tensor> = (0..k_total)
+            .map(|_| Tensor::normal(&[b, per], 1.0, rng))
+            .collect();
+        let signs: Vec<Vec<i8>> = (0..k_total).map(|_| rand_signs(rng, b)).collect();
+
+        // forward chain (eqs. 19, 21), recording everything
+        let x1 = quant::first_step_quant(&x0, &h[0], f).unwrap();
+        let mut xs = vec![x0, x1];
+        let mut side = Vec::new();
+        for k in 1..k_total {
+            let (nx, bits) =
+                quant::bdia_forward_quant(&xs[k - 1], &xs[k], &h[k], &signs[k], f)
+                    .unwrap();
+            xs.push(nx);
+            side.push(bits);
+        }
+
+        // backward walk using ONLY the top two + side info
+        let mut x_next = xs[k_total].clone();
+        let mut x_cur = xs[k_total - 1].clone();
+        for k in (1..k_total).rev() {
+            let rec = quant::bdia_reconstruct_quant(
+                &x_next, &x_cur, &h[k], &side[k - 1], &signs[k], f,
+            )
+            .unwrap();
+            assert_eq!(rec.data(), xs[k - 1].data(), "drift at depth {k}");
+            x_next = x_cur;
+            x_cur = rec;
+        }
+    });
+}
+
+#[test]
+fn prop_float_chain_drifts_quant_chain_does_not() {
+    // deep float inversion accumulates error in f32 while quant stays exact
+    for_cases(20, |rng| {
+        let k_total = 24;
+        let b = 2;
+        let per = 16;
+        let f = Fixed::new(9);
+        let gammas: Vec<Vec<f32>> = (0..k_total)
+            .map(|_| (0..b).map(|_| 0.5 * rng.sign() as f32).collect())
+            .collect();
+        let h: Vec<Tensor> = (0..k_total)
+            .map(|_| Tensor::normal(&[b, per], 1.0, rng))
+            .collect();
+
+        // float chain
+        let x0 = Tensor::normal(&[b, per], 1.0, rng);
+        let mut x1 = x0.clone();
+        x1.add_assign(&h[0]).unwrap();
+        let mut xs = vec![x0, x1];
+        for k in 1..k_total {
+            xs.push(
+                quant::bdia_forward_float(&xs[k - 1], &xs[k], &h[k], &gammas[k])
+                    .unwrap(),
+            );
+        }
+        let mut x_next = xs[k_total].clone();
+        let mut x_cur = xs[k_total - 1].clone();
+        let mut max_drift = 0f32;
+        for k in (1..k_total).rev() {
+            let rec =
+                quant::bdia_invert_float(&x_next, &x_cur, &h[k], &gammas[k]).unwrap();
+            max_drift = max_drift.max(rec.max_abs_diff(&xs[k - 1]).unwrap());
+            x_next = x_cur;
+            x_cur = rec;
+        }
+        // f32 eq.-16 inversion over 24 blocks essentially always drifts;
+        // (the quantized counterpart is asserted exactly 0 in the test above)
+        assert!(max_drift > 0.0, "float chain unexpectedly exact");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// side-info corruption: every flipped bit changes exactly one element by one
+// grid step (failure-injection semantics)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bit_flip_shifts_one_element_one_step() {
+    for_cases(100, |rng| {
+        let f = Fixed::new(9);
+        let b = 1 + rng.below(2);
+        let per = 8 + rng.below(16);
+        let xp = grid_tensor(f, &[b, per], rng, 2.0);
+        let x = grid_tensor(f, &[b, per], rng, 2.0);
+        let h = Tensor::normal(&[b, per], 1.0, rng);
+        let signs = rand_signs(rng, b);
+        let (xn, mut bits) = quant::bdia_forward_quant(&xp, &x, &h, &signs, f).unwrap();
+        let victim = rng.below(b * per);
+        bits.flip(victim);
+        let rec = quant::bdia_reconstruct_quant(&xn, &x, &h, &bits, &signs, f).unwrap();
+        for i in 0..b * per {
+            let diff = (rec.data()[i] - xp.data()[i]).abs();
+            if i == victim {
+                assert_eq!(diff, f.step() as f32, "victim must shift one step");
+            } else {
+                assert_eq!(diff, 0.0, "non-victim {i} changed");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// BitVec / JSON / GammaPlan / memory-model properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bitvec_roundtrip_random_patterns() {
+    for_cases(200, |rng| {
+        let len = 1 + rng.below(300);
+        let pattern: Vec<u8> = (0..len).map(|_| (rng.below(2)) as u8).collect();
+        let bv = BitVec::from_parities(pattern.iter().copied());
+        assert_eq!(bv.len(), len);
+        let ones = pattern.iter().filter(|&&p| p == 1).count();
+        assert_eq!(bv.count_ones(), ones);
+        for (i, &p) in pattern.iter().enumerate() {
+            assert_eq!(bv.get(i), p == 1);
+        }
+    });
+}
+
+#[test]
+fn prop_json_display_parse_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0) as f64),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from(b' ' + rng.below(94) as u8))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases(300, |rng| {
+        let j = gen(rng, 3);
+        let text = j.to_string();
+        let j2 = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        match (&j, &j2) {
+            (Json::Num(a), Json::Num(b)) => assert!((a - b).abs() < 1e-9),
+            _ => assert_eq!(j, j2, "text: {text}"),
+        }
+    });
+}
+
+#[test]
+fn prop_gamma_plan_draw_is_balanced_and_block0_zero() {
+    let mut rng = Rng::new(0);
+    let plan = GammaPlan::draw(&mut rng, 8, 4096, 0.5);
+    assert!(plan.gammas[0].iter().all(|&g| g == 0.0), "block 0 has no BDIA");
+    for k in 1..8 {
+        let pos = plan.gammas[k].iter().filter(|&&g| g > 0.0).count();
+        let frac = pos as f64 / 4096.0;
+        assert!((frac - 0.5).abs() < 0.05, "block {k} biased: {frac}");
+        assert!(plan.gammas[k].iter().all(|&g| g.abs() == 0.5));
+    }
+    // signs() contract
+    assert!(plan.signs(1).is_ok());
+    let bad = GammaPlan::constant(4, 2, 0.3);
+    assert!(bad.signs(1).is_err(), "non-half gamma must be rejected");
+    let zero = GammaPlan::draw(&mut rng, 4, 8, 0.0);
+    assert!(zero.gammas.iter().flatten().all(|&g| g == 0.0));
+}
+
+#[test]
+fn prop_memory_model_scaling_laws() {
+    let base = Dims {
+        d_model: 64,
+        n_heads: 4,
+        n_blocks: 6,
+        n_enc_blocks: 0,
+        mlp_ratio: 2,
+        batch: 32,
+        lbits: 9,
+        image_size: 32,
+        patch: 4,
+        channels: 3,
+        n_classes: 10,
+        seq: 0,
+        seq_src: 0,
+        vocab: 0,
+    };
+    use bdia::config::TrainMode;
+    for k in [2usize, 4, 8, 16, 32, 64] {
+        let d = Dims { n_blocks: k, ..base.clone() };
+        let van = MemoryModel::new(TrainMode::Vanilla, Family::Vit, &d, 0);
+        let rev = MemoryModel::new(TrainMode::BdiaReversible, Family::Vit, &d, 0);
+        // vanilla activations grow linearly in depth ...
+        assert!(van.stored_activations() > k * van.stored_activations() / (k + 1));
+        // ... reversible boundary storage is depth-independent
+        assert_eq!(
+            rev.stored_activations(),
+            MemoryModel::new(TrainMode::BdiaReversible, Family::Vit, &base, 0)
+                .stored_activations()
+        );
+        // side info is the only depth-linear reversible term, at 1/32 the
+        // f32 activation rate
+        assert!(rev.side_info() < van.stored_activations() / 8);
+    }
+}
+
+#[test]
+fn prop_scale_axpy_rows_agree_with_naive() {
+    for_cases(100, |rng| {
+        let b = 1 + rng.below(5);
+        let per = 1 + rng.below(40);
+        let t = Tensor::normal(&[b, per], 1.0, rng);
+        let coeffs: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let scaled = quant::scale_rows(&t, &coeffs).unwrap();
+        let mut acc = Tensor::normal(&[b, per], 1.0, rng);
+        let acc0 = acc.clone();
+        quant::axpy_rows(&mut acc, &coeffs, &t).unwrap();
+        for bi in 0..b {
+            for i in 0..per {
+                let idx = bi * per + i;
+                assert_eq!(scaled.data()[idx], coeffs[bi] * t.data()[idx]);
+                assert_eq!(
+                    acc.data()[idx],
+                    acc0.data()[idx] + coeffs[bi] * t.data()[idx]
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,217 @@
+//! Integration: load a real AOT bundle, execute components, check shapes and
+//! cross-layer semantics (Rust quant vs HLO-side Pallas quantization).
+//!
+//! Requires `make artifacts` (skips gracefully if missing).
+
+use bdia::model::Family;
+use bdia::model::ParamStore;
+use bdia::runtime::{ArgValue, Runtime};
+use bdia::tensor::{IntTensor, Rng, Tensor};
+use std::path::Path;
+
+fn load(bundle: &str) -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join(bundle).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/{bundle} not built");
+        return None;
+    }
+    Some(Runtime::load(&dir, bundle).expect("load bundle"))
+}
+
+#[test]
+fn smoke_gpt_block_fwd_and_vjp() {
+    let Some(rt) = load("smoke_gpt") else { return };
+    assert_eq!(rt.manifest.family, Family::Gpt);
+    let dims = &rt.manifest.dims;
+    let ps = ParamStore::init(&rt.manifest, 42);
+    let mut rng = Rng::new(0);
+    let x = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+
+    let fwd = rt.exec("block_fwd").unwrap();
+    let refs = ps.refs_for(&fwd.spec, 0).unwrap();
+    let outs = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let h = &outs[0];
+    assert_eq!(h.shape(), x.shape());
+    assert!(h.data().iter().all(|v| v.is_finite()));
+    assert!(h.max_abs() > 0.0);
+
+    // determinism: the reversibility contract requires identical recompute
+    let outs2 = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap();
+    assert_eq!(h.data(), outs2[0].data(), "block_fwd must be deterministic");
+
+    // vjp returns (h, dx, dparams...) with h matching block_fwd exactly
+    let vjp = rt.exec("block_vjp").unwrap();
+    let refs = ps.refs_for(&vjp.spec, 0).unwrap();
+    let g = Tensor::ones(&[dims.batch, dims.seq, dims.d_model]);
+    let vouts = vjp
+        .call(&refs, &[ArgValue::F32(&x), ArgValue::F32(&g)])
+        .unwrap();
+    let nb = rt.manifest.param_groups["block"].len();
+    assert_eq!(vouts.len(), 2 + nb);
+    assert_eq!(vouts[0].data(), h.data(), "vjp primal == fwd");
+    assert_eq!(vouts[1].shape(), x.shape()); // dx
+}
+
+#[test]
+fn smoke_gpt_end_to_end_pipeline() {
+    let Some(rt) = load("smoke_gpt") else { return };
+    let dims = rt.manifest.dims.clone();
+    let ps = ParamStore::init(&rt.manifest, 1);
+    let mut rng = Rng::new(3);
+    let toks: Vec<i32> = (0..dims.batch * dims.seq)
+        .map(|_| rng.below(dims.vocab) as i32)
+        .collect();
+    let tokens = IntTensor::from_vec(&[dims.batch, dims.seq], toks).unwrap();
+
+    // embed -> blocks (plain residual) -> head_loss
+    let embed = rt.exec("embed_fwd").unwrap();
+    let refs = ps.refs_for(&embed.spec, 0).unwrap();
+    let x0 = embed.call(&refs, &[ArgValue::I32(&tokens)]).unwrap().remove(0);
+    assert_eq!(x0.shape(), &[dims.batch, dims.seq, dims.d_model]);
+
+    let fwd = rt.exec("block_fwd").unwrap();
+    let mut x = x0;
+    for k in 0..dims.n_blocks {
+        let refs = ps.refs_for(&fwd.spec, k).unwrap();
+        let h = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+        x.add_assign(&h).unwrap();
+    }
+
+    let head = rt.exec("head_loss_fwd").unwrap();
+    let refs = ps.refs_for(&head.spec, 0).unwrap();
+    let outs = head
+        .call(&refs, &[ArgValue::F32(&x), ArgValue::I32(&tokens)])
+        .unwrap();
+    let loss = outs[0].scalar_value().unwrap();
+    let ncorrect = outs[1].scalar_value().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // random init: loss near ln(vocab)
+    let uniform = (dims.vocab as f32).ln();
+    assert!((loss - uniform).abs() < 1.5, "loss {loss} vs ln(V) {uniform}");
+    assert!((0.0..=(dims.batch * dims.seq) as f32).contains(&ncorrect));
+}
+
+#[test]
+fn smoke_model_infer_gamma_zero_vs_rust_quant_pipeline() {
+    // Cross-layer exactness: the fused HLO inference path (Pallas quantize
+    // kernels) must agree with the Rust-side per-block quantized pipeline.
+    let Some(rt) = load("smoke_gpt") else { return };
+    let dims = rt.manifest.dims.clone();
+    let f = bdia::quant::Fixed::new(dims.lbits);
+    let ps = ParamStore::init(&rt.manifest, 9);
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> = (0..dims.batch * dims.seq)
+        .map(|_| rng.below(dims.vocab) as i32)
+        .collect();
+    let tokens = IntTensor::from_vec(&[dims.batch, dims.seq], toks).unwrap();
+
+    // fused path
+    let infer = rt.exec("model_infer").unwrap();
+    let refs = ps.refs_for(&infer.spec, 0).unwrap();
+    let outs = infer
+        .call(
+            &refs,
+            &[
+                ArgValue::I32(&tokens),
+                ArgValue::I32(&tokens),
+                ArgValue::Scalar(0.0),
+            ],
+        )
+        .unwrap();
+    let loss_fused = outs[0].scalar_value().unwrap();
+
+    // rust per-block path (eq. 18/19/22)
+    let embed = rt.exec("embed_fwd").unwrap();
+    let refs = ps.refs_for(&embed.spec, 0).unwrap();
+    let mut x = embed.call(&refs, &[ArgValue::I32(&tokens)]).unwrap().remove(0);
+    bdia::quant::quantize_activation(&mut x, f); // eq. 18
+    let fwd = rt.exec("block_fwd").unwrap();
+    for k in 0..dims.n_blocks {
+        let refs = ps.refs_for(&fwd.spec, k).unwrap();
+        let h = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+        if k == 0 {
+            x = bdia::quant::first_step_quant(&x, &h, f).unwrap(); // eq. 19
+        } else {
+            // eq. 22: x <- Q[x + h]
+            let mut nx = x.clone();
+            nx.add_assign(&h).unwrap();
+            bdia::quant::quantize_activation(&mut nx, f);
+            x = nx;
+        }
+    }
+    let head = rt.exec("head_loss_fwd").unwrap();
+    let refs = ps.refs_for(&head.spec, 0).unwrap();
+    let outs = head
+        .call(&refs, &[ArgValue::F32(&x), ArgValue::I32(&tokens)])
+        .unwrap();
+    let loss_rust = outs[0].scalar_value().unwrap();
+
+    assert!(
+        (loss_fused - loss_rust).abs() < 1e-5,
+        "fused {loss_fused} vs rust-pipeline {loss_rust}"
+    );
+}
+
+#[test]
+fn smoke_vit_pipeline() {
+    let Some(rt) = load("smoke_vit") else { return };
+    let dims = rt.manifest.dims.clone();
+    let tokens = dims.tokens(Family::Vit);
+    let ps = ParamStore::init(&rt.manifest, 2);
+    let mut rng = Rng::new(7);
+    let images = Tensor::normal(
+        &[dims.batch, dims.channels, dims.image_size, dims.image_size],
+        1.0,
+        &mut rng,
+    );
+    let labels = IntTensor::from_vec(
+        &[dims.batch],
+        (0..dims.batch).map(|i| (i % dims.n_classes) as i32).collect(),
+    )
+    .unwrap();
+
+    let embed = rt.exec("embed_fwd").unwrap();
+    let refs = ps.refs_for(&embed.spec, 0).unwrap();
+    let x = embed.call(&refs, &[ArgValue::F32(&images)]).unwrap().remove(0);
+    assert_eq!(x.shape(), &[dims.batch, tokens, dims.d_model]);
+
+    let infer = rt.exec("model_infer").unwrap();
+    let refs = ps.refs_for(&infer.spec, 0).unwrap();
+    let outs = infer
+        .call(
+            &refs,
+            &[
+                ArgValue::F32(&images),
+                ArgValue::I32(&labels),
+                ArgValue::Scalar(0.0),
+            ],
+        )
+        .unwrap();
+    let loss = outs[0].scalar_value().unwrap();
+    assert!((loss - (dims.n_classes as f32).ln()).abs() < 1.0);
+}
+
+#[test]
+fn smoke_encdec_block_vjp_returns_dmem() {
+    let Some(rt) = load("smoke_encdec") else { return };
+    let dims = rt.manifest.dims.clone();
+    let ps = ParamStore::init(&rt.manifest, 11);
+    let mut rng = Rng::new(13);
+    let x = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+    let mem = Tensor::normal(&[dims.batch, dims.seq_src, dims.d_model], 1.0, &mut rng);
+    let g = Tensor::ones(&[dims.batch, dims.seq, dims.d_model]);
+
+    let vjp = rt.exec("block_vjp").unwrap();
+    let refs = ps.refs_for(&vjp.spec, 0).unwrap();
+    let outs = vjp
+        .call(
+            &refs,
+            &[ArgValue::F32(&x), ArgValue::F32(&mem), ArgValue::F32(&g)],
+        )
+        .unwrap();
+    let nb = rt.manifest.param_groups["block"].len();
+    assert_eq!(outs.len(), 3 + nb); // h, dx, dmem, dparams
+    assert_eq!(outs[2].shape(), mem.shape());
+    assert!(outs[2].max_abs() > 0.0, "cross-attention must feed dmem");
+}
