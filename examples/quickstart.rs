@@ -1,9 +1,14 @@
 //! Quickstart: train a BDIA-ViT for a handful of steps with exact bit-level
 //! reversible (online) back-propagation, and show the memory story.
 //!
+//! Runs on the pure-Rust native backend — no artifacts, no XLA:
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! (Pass `backend=pjrt` semantics via TrainConfig when built with the
+//! `pjrt` feature and `make artifacts` has been run.)
 
 use bdia::config::{TrainConfig, TrainMode};
 use bdia::coordinator::Trainer;
@@ -26,10 +31,11 @@ fn main() -> Result<()> {
     };
     let mut trainer = Trainer::new(cfg.clone())?;
     println!(
-        "BDIA-ViT: {} params, K={} blocks, batch={}",
+        "BDIA-ViT: {} params, K={} blocks, batch={} [{} backend]",
         trainer.n_params(),
         trainer.rt.manifest.dims.n_blocks,
-        trainer.rt.manifest.dims.batch
+        trainer.rt.manifest.dims.batch,
+        trainer.rt.backend.name()
     );
 
     // what reversibility buys (the paper's Table-1 comparison, analytically)

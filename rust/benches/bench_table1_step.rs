@@ -12,14 +12,10 @@ use bdia::config::{TrainConfig, TrainMode};
 use bdia::coordinator::Trainer;
 use bdia::experiments::dataset_for;
 use bdia::metrics::fmt_bytes;
-use std::path::Path;
 use std::time::Duration;
 
 fn main() {
-    if !Path::new("artifacts/vit_s10/manifest.json").exists() {
-        eprintln!("skip: artifacts missing (run `make artifacts`)");
-        return;
-    }
+    // runs on the native backend out of the box; artifacts are optional
     for mode in [TrainMode::Vanilla, TrainMode::RevVit, TrainMode::BdiaReversible] {
         let cfg = TrainConfig {
             model: "vit_s10".into(),

@@ -7,6 +7,7 @@ pub mod json;
 
 pub use json::Json;
 
+use crate::runtime::BackendKind;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -66,8 +67,11 @@ impl OptimKind {
 /// Complete specification of one training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
-    /// Artifact bundle name (must exist under `artifacts_dir`).
+    /// Bundle name (a native-registry config, or an AOT bundle under
+    /// `artifacts_dir`).
     pub model: String,
+    /// Execution backend: `native` (default, pure Rust) or `pjrt`.
+    pub backend: BackendKind,
     pub mode: TrainMode,
     /// |gamma| drawn with random sign per sample per block (paper: 0.5).
     /// 0.0 disables BDIA (reduces to vanilla update even in bdia_float mode).
@@ -98,6 +102,7 @@ impl Default for TrainConfig {
         // Paper §5.1: SET-Adam (1e-4, 0.9, 0.999, 1e-18).
         TrainConfig {
             model: "vit_s10".into(),
+            backend: BackendKind::default(),
             mode: TrainMode::BdiaReversible,
             gamma_mag: 0.5,
             dataset: "synth_cifar10".into(),
@@ -138,6 +143,7 @@ impl TrainConfig {
     fn apply(&mut self, key: &str, v: &Json) -> Result<()> {
         match key {
             "model" => self.model = v.as_str()?.into(),
+            "backend" => self.backend = BackendKind::parse(v.as_str()?)?,
             "mode" => self.mode = TrainMode::parse(v.as_str()?)?,
             "gamma_mag" => self.gamma_mag = v.as_f64()? as f32,
             "dataset" => self.dataset = v.as_str()?.into(),
@@ -209,6 +215,18 @@ mod tests {
         assert_eq!(c.gamma_mag, 0.25);
         assert!(c.override_kv("nonsense=1").is_err());
         assert!(c.override_kv("noequals").is_err());
+    }
+
+    #[test]
+    fn backend_defaults_native_and_overrides() {
+        let c = TrainConfig::default();
+        assert_eq!(c.backend, BackendKind::Native);
+        let mut c = TrainConfig::default();
+        c.override_kv("backend=pjrt").unwrap();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        c.override_kv("backend=native").unwrap();
+        assert_eq!(c.backend, BackendKind::Native);
+        assert!(c.override_kv("backend=tpu").is_err());
     }
 
     #[test]

@@ -57,8 +57,10 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
-        let rt = Runtime::load(&cfg.artifacts_dir, &cfg.model)
-            .with_context(|| format!("loading bundle '{}'", cfg.model))?;
+        let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
+            .with_context(|| {
+                format!("loading bundle '{}' ({})", cfg.model, cfg.backend.name())
+            })?;
         Self::with_runtime(cfg, rt)
     }
 

@@ -1,12 +1,13 @@
 //! # bdia — exact bit-level reversible transformer training
 //!
 //! Reproduction of "On Exact Bit-level Reversible Transformers Without
-//! Changing Architectures" (Zhang, Lewis, Kleijn, 2024) as a three-layer
-//! Rust + JAX + Pallas system. See DESIGN.md for the architecture and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Changing Architectures" (Zhang, Lewis, Kleijn, 2024).  See `rust/README.md`
+//! for the layer map, backend selection and how to run the tier-1 suite.
 //!
 //! Layer map:
-//! - [`runtime`]: PJRT client executing AOT HLO artifacts (L2/L1 outputs)
+//! - [`runtime`]: pluggable execution backends behind one ABI — the default
+//!   pure-Rust `native` interpreter (no deps, no artifacts) and the
+//!   feature-gated `pjrt` PJRT/XLA executor for AOT HLO bundles
 //! - [`coordinator`]: the paper's contribution — BDIA reversible training
 //! - [`quant`]: exact fixed-point BDIA arithmetic (eqs. 17-24)
 //! - [`baseline`]: vanilla + RevViT comparators

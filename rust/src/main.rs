@@ -1,12 +1,17 @@
 //! `bdia` — CLI for the reversible-transformer training framework.
 //!
 //! ```text
-//! bdia train  --config configs/vit_s10_bdia.json [key=value ...]
+//! bdia train  --config configs/vit_s10_bdia.json [--backend native|pjrt]
+//!             [key=value ...]
 //! bdia eval   --model vit_s10 --gamma 0.0 [key=value ...]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
 //!             [--steps N] [--seeds 0,1,2] [--quick]
 //! bdia info   --model vit_s10       # bundle inventory
 //! ```
+//!
+//! The default backend is the dependency-free pure-Rust `native`
+//! interpreter; `--backend pjrt` selects the AOT-HLO/XLA path (requires the
+//! `pjrt` cargo feature and `make artifacts`).
 //!
 //! (Argument parsing is in-repo — no clap offline — see `parse_flags`.)
 
@@ -17,7 +22,7 @@ use bdia::coordinator::Trainer;
 use bdia::experiments::{run_experiment, ExpOpts};
 use bdia::metrics::fmt_bytes;
 use bdia::metrics::memory::MemoryModel;
-use bdia::runtime::Runtime;
+use bdia::runtime::{BackendKind, Runtime};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
@@ -89,6 +94,9 @@ fn load_config(
     if let Some(m) = flags.get("model") {
         cfg.model = m.clone();
     }
+    if let Some(b) = flags.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
     for kv in overrides {
         cfg.override_kv(kv)?;
     }
@@ -98,8 +106,9 @@ fn load_config(
 fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<()> {
     let cfg = load_config(flags, overrides)?;
     println!(
-        "training {} | mode={} | dataset={} | steps={} | seed={}",
+        "training {} | backend={} | mode={} | dataset={} | steps={} | seed={}",
         cfg.model,
+        cfg.backend.name(),
         cfg.mode.name(),
         cfg.dataset,
         cfg.steps,
@@ -217,9 +226,19 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"));
-    let rt = Runtime::load(&dir, &model)?;
+    let backend = flags
+        .get("backend")
+        .map(|b| BackendKind::parse(b))
+        .transpose()?
+        .unwrap_or_default();
+    let rt = Runtime::load_with(&dir, &model, backend)?;
     let m = &rt.manifest;
-    println!("bundle {} (family {:?})", m.name, m.family);
+    println!(
+        "bundle {} (family {:?}, backend {})",
+        m.name,
+        m.family,
+        rt.backend.name()
+    );
     println!(
         "  dims: d_model={} heads={} K={} K_enc={} batch={} l={}",
         m.dims.d_model, m.dims.n_heads, m.dims.n_blocks, m.dims.n_enc_blocks,
@@ -248,14 +267,17 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
 fn print_help() {
     println!(
         "bdia — exact bit-level reversible transformer training (BDIA)\n\n\
-         USAGE:\n  bdia train --config configs/<f>.json [key=value ...]\n  \
+         USAGE:\n  bdia train --config configs/<f>.json \
+         [--backend native|pjrt] [key=value ...]\n  \
          bdia eval  --model <bundle> --gamma <g>\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
          [--quick] [--steps N] [--seeds 0,1]\n  \
-         bdia info  --model <bundle>\n\n\
-         Config keys (key=value overrides): model, mode \
-         (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, lr, \
-         optimizer (adam|setadam), seed, eval_every, eval_batches, \
-         train_examples, val_examples, artifacts_dir"
+         bdia info  --model <bundle> [--backend native|pjrt]\n\n\
+         Config keys (key=value overrides): model, backend (native|pjrt), \
+         mode (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, \
+         lr, optimizer (adam|setadam), seed, eval_every, eval_batches, \
+         train_examples, val_examples, artifacts_dir\n\n\
+         The native backend is pure Rust and needs no artifacts; pjrt needs \
+         the `pjrt` cargo feature plus `make artifacts`."
     );
 }

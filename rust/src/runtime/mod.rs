@@ -1,19 +1,33 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
-//! training hot loop.
+//! Execution-backend subsystem: compile a bundle's executables once, execute
+//! them from the training hot loop.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU client):
-//! `PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
-//! execute`.  Python is never on this path — the bundle produced by
-//! `make artifacts` is all the Rust binary needs.
-//!
-//! Calling convention (must mirror `python/compile/aot.py`):
+//! The coordinator is backend-agnostic.  Every executable is described by an
+//! [`ExecSpec`] (the manifest ABI shared with `python/compile/aot.py`):
 //! inputs = [param leaves in manifest order] ++ [data inputs]; outputs are a
-//! tuple, unpacked here into host [`Tensor`]s using the manifest shapes.
+//! tuple of host [`Tensor`]s.  A [`Backend`] turns specs into
+//! [`CompiledExec`]s; [`Runtime`] owns the compiled set and dispatches by
+//! name.
+//!
+//! Two backends exist:
+//!
+//! * [`native`] (default) — a pure-Rust interpreter implementing the
+//!   transformer forward and VJP math directly on the host tensor type.
+//!   Needs no artifacts on disk: bundle manifests are synthesized from the
+//!   in-crate config registry (mirroring `python/compile/aot.py::CONFIGS`).
+//! * [`pjrt`] (cargo feature `pjrt`) — the original AOT-HLO path: load
+//!   `artifacts/<name>/*.hlo.txt`, compile via the PJRT CPU client, execute.
+//!
+//! Both backends honour the same calling convention, so `Stack`, `Trainer`
+//! and the experiment drivers run unchanged on either.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use crate::config::json::Json;
 use crate::model::{ArgSpec, DType, ExecSpec, Manifest};
 use crate::tensor::{IntTensor, Tensor};
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -34,31 +48,64 @@ impl ArgValue<'_> {
             _ => false,
         }
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
+/// Which execution backend drives a [`Runtime`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust interpreter (no external deps, no artifacts required).
+    #[default]
+    Native,
+    /// PJRT/XLA executor over AOT HLO artifacts (cargo feature `pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => BackendKind::Native,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            _ => bail!("unknown backend '{s}' (native|pjrt)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
         match self {
-            ArgValue::F32(t) => tensor_literal(t),
-            ArgValue::I32(t) => {
-                let lit = xla::Literal::vec1(t.data());
-                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-                Ok(lit.reshape(&dims)?)
-            }
-            ArgValue::Scalar(v) => Ok(xla::Literal::from(*v)),
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
         }
     }
 }
 
-pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(t.data());
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
+/// One compiled executable, ready to run.
+pub trait CompiledExec {
+    /// Execute with `params` (flat leaf tensors, manifest order) and `data`
+    /// inputs; returns the output tuple as host tensors.
+    fn execute(&self, params: &[&Tensor], data: &[ArgValue]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution backend: compiles every [`ExecSpec`] of a bundle manifest
+/// into a [`CompiledExec`].
+pub trait Backend {
+    fn kind(&self) -> BackendKind;
+
+    /// Compile one executable.  `dir` is the bundle's artifact directory —
+    /// artifact-backed backends read HLO files from it; the native backend
+    /// ignores it.
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        exec_name: &str,
+        spec: &ExecSpec,
+        dir: &Path,
+    ) -> Result<Box<dyn CompiledExec>>;
 }
 
 /// One compiled executable plus its ABI spec.
 pub struct Exec {
     pub name: String,
     pub spec: ExecSpec,
-    exe: xla::PjRtLoadedExecutable,
+    imp: Box<dyn CompiledExec>,
     /// flop/byte estimate hooks could live here later
     pub calls: std::cell::Cell<u64>,
 }
@@ -84,90 +131,120 @@ impl Exec {
                 spec.shape
             );
         }
-        let mut lits = Vec::with_capacity(params.len() + data.len());
-        for p in params {
-            lits.push(tensor_literal(p)?);
-        }
-        for d in data {
-            lits.push(d.to_literal()?);
-        }
         self.calls.set(self.calls.get() + 1);
-        let bufs = self
-            .exe
-            .execute::<xla::Literal>(&lits)
+        let outs = self
+            .imp
+            .execute(params, data)
             .with_context(|| format!("executing {}", self.name))?;
-        let result = bufs[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching {} output", self.name))?;
-        self.unpack(result)
-    }
-
-    fn unpack(&self, result: xla::Literal) -> Result<Vec<Tensor>> {
-        let parts = result.to_tuple()?;
         ensure!(
-            parts.len() == self.spec.outputs.len(),
+            outs.len() == self.spec.outputs.len(),
             "{}: expected {} outputs, got {}",
             self.name,
             self.spec.outputs.len(),
-            parts.len()
+            outs.len()
         );
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
-            ensure!(
-                spec.dtype == DType::F32,
-                "{}: only f32 outputs supported, got {:?}",
-                self.name,
-                spec.dtype
-            );
-            let v = lit.to_vec::<f32>()?;
-            out.push(Tensor::from_vec(&spec.shape, v)?);
-        }
-        Ok(out)
+        Ok(outs)
     }
 }
 
-/// The per-bundle runtime: a PJRT client plus all compiled executables.
+/// The per-bundle runtime: a backend plus all compiled executables.
 pub struct Runtime {
     pub manifest: Manifest,
+    pub backend: BackendKind,
     execs: BTreeMap<String, Exec>,
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
 }
 
 impl Runtime {
-    /// Load `artifacts/<name>/` — parse the manifest, compile every HLO.
+    /// Load `artifacts/<bundle>/` with the default (native) backend.
+    ///
+    /// The native backend prefers an on-disk `manifest.json` (so it can run
+    /// bundles exported by `make artifacts`) and falls back to the in-crate
+    /// config registry when the artifact directory does not exist — a clean
+    /// checkout needs no artifacts at all.
     pub fn load(artifacts_dir: &Path, bundle: &str) -> Result<Self> {
-        let dir = artifacts_dir.join(bundle);
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let manifest = Manifest::from_json(&Json::parse(&text)?)?;
-        Self::from_manifest(manifest, &dir)
+        Self::load_with(artifacts_dir, bundle, BackendKind::default())
     }
 
-    pub fn from_manifest(manifest: Manifest, dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    /// Load a bundle with an explicit backend choice.
+    pub fn load_with(
+        artifacts_dir: &Path,
+        bundle: &str,
+        kind: BackendKind,
+    ) -> Result<Self> {
+        // the most actionable error first: asking for pjrt on a build
+        // without the feature should not send the user to `make artifacts`
+        #[cfg(not(feature = "pjrt"))]
+        if kind == BackendKind::Pjrt {
+            bail!(
+                "this binary was built without the 'pjrt' cargo feature; \
+                 rebuild with `--features pjrt` (and the xla dependency \
+                 enabled in rust/Cargo.toml) or use --backend native"
+            );
+        }
+        let dir = artifacts_dir.join(bundle);
+        let manifest_path = dir.join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading manifest in {}", dir.display()))?;
+            Manifest::from_json(&Json::parse(&text)?)?
+        } else {
+            match kind {
+                BackendKind::Native => native::registry::manifest_for(bundle)
+                    .with_context(|| {
+                        format!(
+                            "bundle '{bundle}': no artifacts at {} and no native \
+                             registry entry",
+                            dir.display()
+                        )
+                    })?,
+                BackendKind::Pjrt => bail!(
+                    "pjrt backend needs AOT artifacts: {} not found (run `make \
+                     artifacts`)",
+                    manifest_path.display()
+                ),
+            }
+        };
+        Self::from_manifest_with(manifest, &dir, kind)
+    }
+
+    /// Build a native runtime directly from a manifest (no filesystem).
+    /// Used by tests that synthesize ad-hoc model shapes.
+    pub fn from_native_manifest(manifest: Manifest) -> Result<Self> {
+        Self::from_manifest_with(manifest, Path::new("."), BackendKind::Native)
+    }
+
+    pub fn from_manifest_with(
+        manifest: Manifest,
+        dir: &Path,
+        kind: BackendKind,
+    ) -> Result<Self> {
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Native => Box::new(native::NativeBackend),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => Box::new(pjrt::PjrtBackend::new()?),
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => bail!(
+                "this binary was built without the 'pjrt' cargo feature; \
+                 rebuild with `--features pjrt` (and the xla dependency \
+                 enabled in rust/Cargo.toml) or use --backend native"
+            ),
+        };
         let mut execs = BTreeMap::new();
         for (name, spec) in &manifest.executables {
-            let path = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
+            let imp = backend
+                .compile(&manifest, name, spec, dir)
+                .with_context(|| format!("compiling {name} ({})", kind.name()))?;
             execs.insert(
                 name.clone(),
                 Exec {
                     name: name.clone(),
                     spec: spec.clone(),
-                    exe,
+                    imp,
                     calls: std::cell::Cell::new(0),
                 },
             );
         }
-        Ok(Runtime { manifest, execs, client })
+        Ok(Runtime { manifest, backend: kind, execs })
     }
 
     pub fn exec(&self, name: &str) -> Result<&Exec> {
@@ -208,5 +285,42 @@ mod tests {
         let scalar_spec = ArgSpec { name: "g".into(), dtype: DType::F32, shape: vec![] };
         assert!(ArgValue::Scalar(0.5).matches(&scalar_spec));
         assert!(!ArgValue::Scalar(0.5).matches(&spec));
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+        assert_eq!(BackendKind::Native.name(), "native");
+        assert_eq!(BackendKind::Pjrt.name(), "pjrt");
+    }
+
+    #[test]
+    fn native_runtime_loads_without_artifacts() {
+        // a clean checkout has no artifacts/ directory at all
+        let rt = Runtime::load(Path::new("/nonexistent/artifacts"), "smoke_gpt")
+            .expect("native fallback");
+        assert_eq!(rt.backend, BackendKind::Native);
+        assert!(rt.has_exec("block_fwd"));
+        assert!(rt.has_exec("block_vjp"));
+        assert!(rt.has_exec("model_infer"));
+        assert!(rt.exec("nope").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_is_a_clear_error() {
+        let err = Runtime::load_with(
+            Path::new("/nonexistent/artifacts"),
+            "smoke_gpt",
+            BackendKind::Pjrt,
+        )
+        .unwrap_err();
+        // must point at the missing cargo feature, not at `make artifacts`
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt") && msg.contains("feature"), "{msg}");
     }
 }

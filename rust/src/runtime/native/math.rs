@@ -1,0 +1,677 @@
+//! Slice-level math primitives for the native backend: matmul, layernorm,
+//! GELU and multi-head attention, each with a hand-written VJP.
+//!
+//! Semantics mirror the JAX model exactly (`python/compile/model.py` and
+//! `python/compile/kernels/attention.py`): layernorm uses population
+//! variance with eps 1e-5, GELU is the tanh approximation (jax.nn.gelu's
+//! default), attention is `softmax(Q K^T / sqrt(d_head)) V` with a -1e30
+//! causal mask and max-subtracted softmax.  All buffers are row-major f32
+//! slices; shapes are passed explicitly so callers can flatten (B, T, D)
+//! activations to (B*T, D) rows.
+
+#![allow(clippy::too_many_arguments)]
+
+pub const NEG_INF: f32 = -1e30;
+const LN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// elementwise helpers
+// ---------------------------------------------------------------------------
+
+/// a += b
+pub fn add_into(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += *y;
+    }
+}
+
+/// out = a + b
+pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Column sums of a (rows, cols) matrix — bias gradients.
+pub fn col_sum(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += *v;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// matmul family
+// ---------------------------------------------------------------------------
+
+/// c(m,n) = a(m,k) @ b(k,n)
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// c(k,n) = a(m,k)^T @ b(m,n)
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut c = vec![0.0f32; k * n];
+    for i in 0..m {
+        let brow = &b[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av != 0.0 {
+                let crow = &mut c[p * n..(p + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// c(m,k) = a(m,n) @ b(k,n)^T
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (p, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            let mut s = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                s += *av * *bv;
+            }
+            *cv = s;
+        }
+    }
+    c
+}
+
+/// y(rows, d_out) = x(rows, d_in) @ w(d_in, d_out) + bias
+pub fn linear(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+) -> Vec<f32> {
+    let mut y = matmul(x, w, rows, d_in, d_out);
+    for r in 0..rows {
+        let row = &mut y[r * d_out..(r + 1) * d_out];
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += *b;
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------------
+// layer norm
+// ---------------------------------------------------------------------------
+
+pub struct LnCache {
+    /// normalised activations (rows, d)
+    pub xhat: Vec<f32>,
+    /// per-row 1/sqrt(var + eps)
+    pub inv: Vec<f32>,
+}
+
+/// y = (x - mean) / sqrt(var + eps) * scale + bias, per row of length d.
+pub fn ln_fwd(
+    scale: &[f32],
+    bias: &[f32],
+    x: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, LnCache) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        inv[r] = iv;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            let h = (xr[j] - mu) * iv;
+            xh[j] = h;
+            yr[j] = h * scale[j] + bias[j];
+        }
+    }
+    (y, LnCache { xhat, inv })
+}
+
+/// Backward of [`ln_fwd`]: returns (dx, dscale, dbias).
+pub fn ln_bwd(
+    scale: &[f32],
+    cache: &LnCache,
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dscale = vec![0.0f32; d];
+    let mut dbias = vec![0.0f32; d];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xh = &cache.xhat[r * d..(r + 1) * d];
+        let iv = cache.inv[r];
+        // dxhat = dy * scale; two row means close the LN jacobian
+        let mut mean_dxh = 0.0f32;
+        let mut mean_dxh_xh = 0.0f32;
+        for j in 0..d {
+            let dxh = dyr[j] * scale[j];
+            mean_dxh += dxh;
+            mean_dxh_xh += dxh * xh[j];
+            dscale[j] += dyr[j] * xh[j];
+            dbias[j] += dyr[j];
+        }
+        mean_dxh /= d as f32;
+        mean_dxh_xh /= d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            let dxh = dyr[j] * scale[j];
+            dxr[j] = iv * (dxh - mean_dxh - xh[j] * mean_dxh_xh);
+        }
+    }
+    (dx, dscale, dbias)
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation — jax.nn.gelu default)
+// ---------------------------------------------------------------------------
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044_715;
+
+#[inline]
+pub fn gelu(u: f32) -> f32 {
+    let t = (GELU_C * (u + GELU_A * u * u * u)).tanh();
+    0.5 * u * (1.0 + t)
+}
+
+#[inline]
+pub fn gelu_grad(u: f32) -> f32 {
+    let w = GELU_C * (u + GELU_A * u * u * u);
+    let t = w.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * u * sech2 * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+// ---------------------------------------------------------------------------
+// multi-head attention
+// ---------------------------------------------------------------------------
+
+/// Attention projection weights, views into parameter leaves.
+pub struct AttnW<'a> {
+    pub wq: &'a [f32],
+    pub bq: &'a [f32],
+    pub wk: &'a [f32],
+    pub bk: &'a [f32],
+    pub wv: &'a [f32],
+    pub bv: &'a [f32],
+    pub wo: &'a [f32],
+    pub bo: &'a [f32],
+}
+
+/// Parameter gradients, same shapes as [`AttnW`].
+pub struct AttnGrads {
+    pub wq: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub bo: Vec<f32>,
+}
+
+/// Forward residuals needed by [`attn_bwd`].
+pub struct AttnCache {
+    /// projected q/k/v, (b*tq, d) / (b*tk, d)
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// pre-output-projection context, (b*tq, d)
+    pub o: Vec<f32>,
+    /// softmax weights, (b*heads, tq, tk)
+    pub att: Vec<f32>,
+}
+
+/// Copy one head's rows into a contiguous (t, dh) buffer.
+fn gather_head(
+    src: &[f32],
+    bi: usize,
+    hi: usize,
+    t: usize,
+    d: usize,
+    dh: usize,
+    out: &mut [f32],
+) {
+    for i in 0..t {
+        let base = (bi * t + i) * d + hi * dh;
+        out[i * dh..(i + 1) * dh].copy_from_slice(&src[base..base + dh]);
+    }
+}
+
+/// Accumulate a contiguous (t, dh) head buffer back into (b*t, d) rows.
+fn scatter_head_add(
+    dst: &mut [f32],
+    src: &[f32],
+    bi: usize,
+    hi: usize,
+    t: usize,
+    d: usize,
+    dh: usize,
+) {
+    for i in 0..t {
+        let base = (bi * t + i) * d + hi * dh;
+        for j in 0..dh {
+            dst[base + j] += src[i * dh + j];
+        }
+    }
+}
+
+/// Multi-head attention forward.
+///
+/// `x`: (b*tq, d) queries input; `kv`: (b*tk, d) key/value input (== `x` for
+/// self-attention).  Returns the (b*tq, d) output and the backward cache.
+pub fn attn_fwd(
+    w: &AttnW,
+    x: &[f32],
+    kv: &[f32],
+    b: usize,
+    tq: usize,
+    tk: usize,
+    d: usize,
+    heads: usize,
+    causal: bool,
+) -> (Vec<f32>, AttnCache) {
+    debug_assert_eq!(d % heads, 0);
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nq = b * tq;
+    let nk = b * tk;
+
+    let q = linear(x, w.wq, w.bq, nq, d, d);
+    let k = linear(kv, w.wk, w.bk, nk, d, d);
+    let v = linear(kv, w.wv, w.bv, nk, d, d);
+
+    let mut o = vec![0.0f32; nq * d];
+    let mut att = vec![0.0f32; b * heads * tq * tk];
+
+    let mut qh = vec![0.0f32; tq * dh];
+    let mut kh = vec![0.0f32; tk * dh];
+    let mut vh = vec![0.0f32; tk * dh];
+    for bi in 0..b {
+        for hi in 0..heads {
+            gather_head(&q, bi, hi, tq, d, dh, &mut qh);
+            gather_head(&k, bi, hi, tk, d, dh, &mut kh);
+            gather_head(&v, bi, hi, tk, d, dh, &mut vh);
+            let abase = (bi * heads + hi) * tq * tk;
+            // scores + masked softmax, one query row at a time
+            let mut oh = vec![0.0f32; tq * dh];
+            for i in 0..tq {
+                let qr = &qh[i * dh..(i + 1) * dh];
+                let arow = &mut att[abase + i * tk..abase + (i + 1) * tk];
+                let mut m = NEG_INF;
+                for jj in 0..tk {
+                    let mut s = 0.0f32;
+                    let kr = &kh[jj * dh..(jj + 1) * dh];
+                    for (qv, kvv) in qr.iter().zip(kr) {
+                        s += *qv * *kvv;
+                    }
+                    s *= scale;
+                    if causal && jj > i {
+                        s = NEG_INF;
+                    }
+                    arow[jj] = s;
+                    if s > m {
+                        m = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for a in arow.iter_mut() {
+                    *a = (*a - m).exp();
+                    denom += *a;
+                }
+                let or = &mut oh[i * dh..(i + 1) * dh];
+                for jj in 0..tk {
+                    let p = arow[jj] / denom;
+                    arow[jj] = p;
+                    if p != 0.0 {
+                        let vr = &vh[jj * dh..(jj + 1) * dh];
+                        for (ov, vv) in or.iter_mut().zip(vr) {
+                            *ov += p * *vv;
+                        }
+                    }
+                }
+            }
+            scatter_head_add(&mut o, &oh, bi, hi, tq, d, dh);
+        }
+    }
+
+    let out = linear(&o, w.wo, w.bo, nq, d, d);
+    (out, AttnCache { q, k, v, o, att })
+}
+
+/// Backward of [`attn_fwd`].  Returns (dx, dkv, param grads); for
+/// self-attention the caller adds dx + dkv.
+pub fn attn_bwd(
+    w: &AttnW,
+    x: &[f32],
+    kv: &[f32],
+    cache: &AttnCache,
+    dout: &[f32],
+    b: usize,
+    tq: usize,
+    tk: usize,
+    d: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>, AttnGrads) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nq = b * tq;
+    let nk = b * tk;
+
+    // output projection
+    let dbo = col_sum(dout, nq, d);
+    let dwo = matmul_tn(&cache.o, dout, nq, d, d);
+    let do_ = matmul_nt(dout, w.wo, nq, d, d);
+
+    let mut dq = vec![0.0f32; nq * d];
+    let mut dk = vec![0.0f32; nk * d];
+    let mut dv = vec![0.0f32; nk * d];
+
+    let mut qh = vec![0.0f32; tq * dh];
+    let mut kh = vec![0.0f32; tk * dh];
+    let mut vh = vec![0.0f32; tk * dh];
+    let mut doh = vec![0.0f32; tq * dh];
+    for bi in 0..b {
+        for hi in 0..heads {
+            gather_head(&cache.q, bi, hi, tq, d, dh, &mut qh);
+            gather_head(&cache.k, bi, hi, tk, d, dh, &mut kh);
+            gather_head(&cache.v, bi, hi, tk, d, dh, &mut vh);
+            gather_head(&do_, bi, hi, tq, d, dh, &mut doh);
+            let abase = (bi * heads + hi) * tq * tk;
+            let att = &cache.att[abase..abase + tq * tk];
+
+            // dv_h = att^T @ do_h ; datt = do_h @ v_h^T
+            let mut dvh = vec![0.0f32; tk * dh];
+            let mut dqh = vec![0.0f32; tq * dh];
+            let mut dkh = vec![0.0f32; tk * dh];
+            for i in 0..tq {
+                let arow = &att[i * tk..(i + 1) * tk];
+                let dor = &doh[i * dh..(i + 1) * dh];
+                // datt row + softmax jacobian row
+                let mut datt = vec![0.0f32; tk];
+                let mut rowdot = 0.0f32;
+                for jj in 0..tk {
+                    let p = arow[jj];
+                    if p != 0.0 {
+                        let vr = &vh[jj * dh..(jj + 1) * dh];
+                        let mut s = 0.0f32;
+                        for (dov, vv) in dor.iter().zip(vr) {
+                            s += *dov * *vv;
+                        }
+                        datt[jj] = s;
+                        rowdot += s * p;
+                        // dv accumulation: dv[jj] += p * do[i]
+                        let dvr = &mut dvh[jj * dh..(jj + 1) * dh];
+                        for (dvv, dov) in dvr.iter_mut().zip(dor) {
+                            *dvv += p * *dov;
+                        }
+                    }
+                }
+                let dqr = &mut dqh[i * dh..(i + 1) * dh];
+                for jj in 0..tk {
+                    let p = arow[jj];
+                    if p != 0.0 {
+                        let ds = p * (datt[jj] - rowdot) * scale;
+                        if ds != 0.0 {
+                            let kr = &kh[jj * dh..(jj + 1) * dh];
+                            for (dqv, kvv) in dqr.iter_mut().zip(kr) {
+                                *dqv += ds * *kvv;
+                            }
+                            let qr = &qh[i * dh..(i + 1) * dh];
+                            let dkr = &mut dkh[jj * dh..(jj + 1) * dh];
+                            for (dkv_, qv) in dkr.iter_mut().zip(qr) {
+                                *dkv_ += ds * *qv;
+                            }
+                        }
+                    }
+                }
+            }
+            scatter_head_add(&mut dq, &dqh, bi, hi, tq, d, dh);
+            scatter_head_add(&mut dk, &dkh, bi, hi, tk, d, dh);
+            scatter_head_add(&mut dv, &dvh, bi, hi, tk, d, dh);
+        }
+    }
+
+    // input projections
+    let dwq = matmul_tn(x, &dq, nq, d, d);
+    let dbq = col_sum(&dq, nq, d);
+    let dx = matmul_nt(&dq, w.wq, nq, d, d);
+
+    let dwk = matmul_tn(kv, &dk, nk, d, d);
+    let dbk = col_sum(&dk, nk, d);
+    let mut dkv = matmul_nt(&dk, w.wk, nk, d, d);
+
+    let dwv = matmul_tn(kv, &dv, nk, d, d);
+    let dbv = col_sum(&dv, nk, d);
+    let dkv_v = matmul_nt(&dv, w.wv, nk, d, d);
+    add_into(&mut dkv, &dkv_v);
+
+    (
+        dx,
+        dkv,
+        AttnGrads {
+            wq: dwq,
+            bq: dbq,
+            wk: dwk,
+            bk: dbk,
+            wv: dwv,
+            bv: dbv,
+            wo: dwo,
+            bo: dbo,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * s).collect()
+    }
+
+    #[test]
+    fn matmul_identity_and_transpose_agree() {
+        // a (2,3) @ b (3,2)
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![4.0, 5.0, 10.0, 11.0]);
+        // a^T @ a via matmul_tn equals explicit transpose product
+        let ata = matmul_tn(&a, &a, 2, 3, 3);
+        let at = vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0];
+        let ata2 = matmul(&at, &a, 3, 2, 3);
+        assert_eq!(ata, ata2);
+        // a @ b^T with b (2,3)
+        let abt = matmul_nt(&a, &a, 2, 3, 2);
+        assert_eq!(abt, vec![14.0, 32.0, 32.0, 77.0]);
+    }
+
+    #[test]
+    fn ln_normalises_rows() {
+        let mut rng = Rng::new(0);
+        let d = 8;
+        let x = randv(&mut rng, 2 * d, 3.0);
+        let scale = vec![1.0; d];
+        let bias = vec![0.0; d];
+        let (y, _) = ln_fwd(&scale, &bias, &x, 2, d);
+        for r in 0..2 {
+            let row = &y[r * d..(r + 1) * d];
+            let mu: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>()
+                / d as f32;
+            assert!(mu.abs() < 1e-5, "mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn ln_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let d = 6;
+        let rows = 2;
+        let x = randv(&mut rng, rows * d, 1.0);
+        let scale = randv(&mut rng, d, 0.5);
+        let bias = randv(&mut rng, d, 0.5);
+        let dy = randv(&mut rng, rows * d, 1.0);
+        let (_, cache) = ln_fwd(&scale, &bias, &x, rows, d);
+        let (dx, dscale, dbias) = ln_bwd(&scale, &cache, &dy, rows, d);
+
+        // probe L = sum(dy * y): dL/dx == dx
+        let eps = 1e-2f32;
+        let probe = |xs: &[f32]| -> f64 {
+            let (y, _) = ln_fwd(&scale, &bias, xs, rows, d);
+            y.iter().zip(&dy).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        for idx in [0usize, 3, 7, rows * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = ((probe(&xp) - probe(&xm)) / (2.0 * eps as f64)) as f32;
+            let an = dx[idx];
+            assert!(
+                (fd - an).abs() < 2e-2 * an.abs().max(1.0),
+                "dx[{idx}]: fd {fd} vs {an}"
+            );
+        }
+        // dbias is just col-sum of dy
+        let cs = col_sum(&dy, rows, d);
+        for j in 0..d {
+            assert!((dbias[j] - cs[j]).abs() < 1e-6);
+        }
+        assert_eq!(dscale.len(), d);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for u in [-3.0f32, -1.0, -0.1, 0.0, 0.1, 1.0, 3.0] {
+            let eps = 1e-3f32;
+            let fd = (gelu(u + eps) - gelu(u - eps)) / (2.0 * eps);
+            assert!(
+                (fd - gelu_grad(u)).abs() < 1e-3,
+                "u={u}: fd {fd} vs {}",
+                gelu_grad(u)
+            );
+        }
+        assert!((gelu(0.0)).abs() < 1e-7);
+        // large positive ~ identity, large negative ~ 0
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn attention_rows_sum_to_one_and_causal_masks() {
+        let mut rng = Rng::new(2);
+        let (b, t, d, heads) = (2usize, 4usize, 8usize, 2usize);
+        let w_ = randv(&mut rng, d * d, 0.2);
+        let bias0 = vec![0.0f32; d];
+        let w = AttnW {
+            wq: &w_, bq: &bias0, wk: &w_, bk: &bias0, wv: &w_, bv: &bias0,
+            wo: &w_, bo: &bias0,
+        };
+        let x = randv(&mut rng, b * t * d, 1.0);
+        let (_, cache) = attn_fwd(&w, &x, &x, b, t, t, d, heads, true);
+        for bh in 0..b * heads {
+            for i in 0..t {
+                let row = &cache.att[bh * t * t + i * t..bh * t * t + (i + 1) * t];
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "softmax row sum {s}");
+                for (jj, &p) in row.iter().enumerate() {
+                    if jj > i {
+                        assert_eq!(p, 0.0, "causal leak at ({i},{jj})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attn_bwd_matches_finite_difference_on_x() {
+        let mut rng = Rng::new(3);
+        let (b, t, d, heads) = (1usize, 3usize, 4usize, 2usize);
+        let mk = |rng: &mut Rng| randv(rng, d * d, 0.3);
+        let (wq, wk, wv, wo) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let (bq, bk, bv, bo) = (
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+        );
+        let w = AttnW { wq: &wq, bq: &bq, wk: &wk, bk: &bk, wv: &wv, bv: &bv,
+                        wo: &wo, bo: &bo };
+        let x = randv(&mut rng, b * t * d, 1.0);
+        let g = randv(&mut rng, b * t * d, 1.0);
+        let (_, cache) = attn_fwd(&w, &x, &x, b, t, t, d, heads, false);
+        let (dx, dkv, _) = attn_bwd(&w, &x, &x, &cache, &g, b, t, t, d, heads);
+
+        let probe = |xs: &[f32]| -> f64 {
+            let (y, _) = attn_fwd(&w, xs, xs, b, t, t, d, heads, false);
+            y.iter().zip(&g).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let eps = 1e-2f32;
+        for idx in 0..b * t * d {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = ((probe(&xp) - probe(&xm)) / (2.0 * eps as f64)) as f32;
+            let an = dx[idx] + dkv[idx]; // self-attention: both paths
+            assert!(
+                (fd - an).abs() < 3e-2 * an.abs().max(1.0),
+                "d/dx[{idx}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+}

@@ -1,0 +1,592 @@
+//! Pure-Rust native execution backend.
+//!
+//! Implements every executable of the manifest ABI (embed / block / head /
+//! RevViT sub-branches / fused quantized inference, forward and VJP)
+//! directly on the host [`Tensor`] type — no XLA, no PJRT, no artifacts.
+//! Bundle manifests come from [`registry`] (mirroring
+//! `python/compile/aot.py::CONFIGS`) or from an on-disk `manifest.json`.
+//!
+//! Determinism: every op is straight-line f32 arithmetic with a fixed
+//! reduction order, so repeated calls are bit-identical — the property the
+//! BDIA reversibility contract (eq. 24 reconstruction) depends on.
+
+pub mod math;
+pub mod model;
+pub mod registry;
+
+use anyhow::{bail, ensure, Context, Result};
+use crate::model::{Dims, ExecSpec, Family, Manifest};
+use crate::quant::{self, Fixed};
+use crate::tensor::{IntTensor, Tensor};
+use self::model::{BlockDims, BlockW};
+use std::collections::BTreeMap;
+use std::path::Path;
+use super::{ArgValue, Backend, BackendKind, CompiledExec};
+
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        exec_name: &str,
+        spec: &ExecSpec,
+        _dir: &Path,
+    ) -> Result<Box<dyn CompiledExec>> {
+        let group_leaves: BTreeMap<String, usize> = manifest
+            .param_groups
+            .iter()
+            .map(|(g, leaves)| (g.clone(), leaves.len()))
+            .collect();
+        // fail at compile time, not call time, for unknown executables
+        known_exec(exec_name)?;
+        Ok(Box::new(NativeExec {
+            name: exec_name.to_string(),
+            family: manifest.family,
+            dims: manifest.dims.clone(),
+            spec: spec.clone(),
+            group_leaves,
+        }))
+    }
+}
+
+fn known_exec(name: &str) -> Result<()> {
+    const KNOWN: &[&str] = &[
+        "embed_fwd",
+        "embed_vjp",
+        "block_fwd",
+        "block_vjp",
+        "attn_fwd",
+        "attn_vjp",
+        "ffn_fwd",
+        "ffn_vjp",
+        "head_loss_fwd",
+        "head_loss_vjp",
+        "enc_embed_fwd",
+        "enc_embed_vjp",
+        "enc_block_fwd",
+        "enc_block_vjp",
+        "model_infer",
+    ];
+    ensure!(
+        KNOWN.contains(&name),
+        "native backend has no implementation for executable '{name}'"
+    );
+    Ok(())
+}
+
+struct NativeExec {
+    name: String,
+    family: Family,
+    dims: Dims,
+    spec: ExecSpec,
+    group_leaves: BTreeMap<String, usize>,
+}
+
+fn want_f32<'a>(data: &'a [ArgValue], i: usize, what: &str) -> Result<&'a Tensor> {
+    match data.get(i) {
+        Some(ArgValue::F32(t)) => Ok(*t),
+        _ => bail!("expected f32 tensor for data input {i} ({what})"),
+    }
+}
+
+fn want_i32<'a>(data: &'a [ArgValue], i: usize, what: &str) -> Result<&'a IntTensor> {
+    match data.get(i) {
+        Some(ArgValue::I32(t)) => Ok(*t),
+        _ => bail!("expected i32 tensor for data input {i} ({what})"),
+    }
+}
+
+fn want_scalar(data: &[ArgValue], i: usize, what: &str) -> Result<f32> {
+    match data.get(i) {
+        Some(ArgValue::Scalar(v)) => Ok(*v),
+        Some(ArgValue::F32(t)) if t.len() == 1 => t.scalar_value(),
+        _ => bail!("expected f32 scalar for data input {i} ({what})"),
+    }
+}
+
+impl NativeExec {
+    fn is_cross(&self) -> bool {
+        self.family == Family::EncDec
+    }
+
+    fn causal(&self) -> bool {
+        matches!(self.family, Family::Gpt | Family::EncDec)
+    }
+
+    /// Shape bundle for the decoder/self ("block") tower.
+    fn main_block_dims(&self) -> BlockDims {
+        BlockDims {
+            b: self.dims.batch,
+            t: self.dims.tokens(self.family),
+            t_src: self.dims.seq_src,
+            d: self.dims.d_model,
+            heads: self.dims.n_heads,
+            ratio: self.dims.mlp_ratio,
+            causal: self.causal(),
+        }
+    }
+
+    /// Shape bundle for the encoder ("enc_block") tower.
+    fn enc_block_dims(&self) -> BlockDims {
+        BlockDims {
+            b: self.dims.batch,
+            t: self.dims.seq_src,
+            t_src: 0,
+            d: self.dims.d_model,
+            heads: self.dims.n_heads,
+            ratio: self.dims.mlp_ratio,
+            causal: false,
+        }
+    }
+
+    fn n_out(&self) -> usize {
+        if self.family == Family::Vit {
+            self.dims.n_classes
+        } else {
+            self.dims.vocab
+        }
+    }
+}
+
+impl CompiledExec for NativeExec {
+    fn execute(&self, params: &[&Tensor], data: &[ArgValue]) -> Result<Vec<Tensor>> {
+        let expected: usize = self
+            .spec
+            .param_layout
+            .iter()
+            .map(|(g, c)| c * self.group_leaves.get(g).copied().unwrap_or(0))
+            .sum();
+        ensure!(
+            params.len() == expected,
+            "{}: expected {expected} param leaves, got {}",
+            self.name,
+            params.len()
+        );
+        let d = self.dims.d_model;
+        let b = self.dims.batch;
+        match self.name.as_str() {
+            // ---- embeddings ----
+            "embed_fwd" => match self.family {
+                Family::Vit => {
+                    let images = want_f32(data, 0, "images")?;
+                    let x = model::embed_fwd_vit(
+                        params, images, b, self.dims.channels, self.dims.image_size,
+                        self.dims.patch, d,
+                    )?;
+                    Ok(vec![x])
+                }
+                _ => {
+                    let toks = want_i32(data, 0, "tokens")?;
+                    let x = model::embed_fwd_tok(
+                        params, toks, b, self.dims.seq, d, self.dims.vocab,
+                    )?;
+                    Ok(vec![x])
+                }
+            },
+            "embed_vjp" => match self.family {
+                Family::Vit => {
+                    let images = want_f32(data, 0, "images")?;
+                    let g = want_f32(data, 1, "g")?;
+                    model::embed_vjp_vit(
+                        params, images, g, b, self.dims.channels,
+                        self.dims.image_size, self.dims.patch, d,
+                    )
+                }
+                _ => {
+                    let toks = want_i32(data, 0, "tokens")?;
+                    let g = want_f32(data, 1, "g")?;
+                    model::embed_vjp_tok(
+                        params, toks, g, b, self.dims.seq, d, self.dims.vocab,
+                    )
+                }
+            },
+            "enc_embed_fwd" => {
+                let toks = want_i32(data, 0, "src tokens")?;
+                let x = model::embed_fwd_tok(
+                    params, toks, b, self.dims.seq_src, d, self.dims.vocab,
+                )?;
+                Ok(vec![x])
+            }
+            "enc_embed_vjp" => {
+                let toks = want_i32(data, 0, "src tokens")?;
+                let g = want_f32(data, 1, "g")?;
+                model::embed_vjp_tok(
+                    params, toks, g, b, self.dims.seq_src, d, self.dims.vocab,
+                )
+            }
+
+            // ---- blocks ----
+            "block_fwd" => {
+                let bd = self.main_block_dims();
+                let w = BlockW::from_leaves(params, self.is_cross())?;
+                let x = want_f32(data, 0, "x")?;
+                let mem = if self.is_cross() {
+                    Some(want_f32(data, 1, "mem")?)
+                } else {
+                    None
+                };
+                let h = model::block_h(&w, x.data(), mem.map(|m| m.data()), bd);
+                Ok(vec![Tensor::from_vec(x.shape(), h)?])
+            }
+            "block_vjp" => {
+                let bd = self.main_block_dims();
+                let w = BlockW::from_leaves(params, self.is_cross())?;
+                let x = want_f32(data, 0, "x")?;
+                let (mem, g) = if self.is_cross() {
+                    (Some(want_f32(data, 1, "mem")?), want_f32(data, 2, "g")?)
+                } else {
+                    (None, want_f32(data, 1, "g")?)
+                };
+                let (h, dx, dmem, grads) =
+                    model::block_vjp(&w, x.data(), mem.map(|m| m.data()), g.data(), bd)?;
+                let mut outs = vec![
+                    Tensor::from_vec(x.shape(), h)?,
+                    Tensor::from_vec(x.shape(), dx)?,
+                ];
+                if let Some(m) = mem {
+                    let dm = dmem.context("cross block produced no dmem")?;
+                    outs.push(Tensor::from_vec(m.shape(), dm)?);
+                }
+                outs.extend(grads.into_leaf_tensors(d, self.dims.mlp_ratio)?);
+                Ok(outs)
+            }
+            "enc_block_fwd" => {
+                let bd = self.enc_block_dims();
+                let w = BlockW::from_leaves(params, false)?;
+                let x = want_f32(data, 0, "x")?;
+                let h = model::block_h(&w, x.data(), None, bd);
+                Ok(vec![Tensor::from_vec(x.shape(), h)?])
+            }
+            "enc_block_vjp" => {
+                let bd = self.enc_block_dims();
+                let w = BlockW::from_leaves(params, false)?;
+                let x = want_f32(data, 0, "x")?;
+                let g = want_f32(data, 1, "g")?;
+                let (h, dx, _, grads) =
+                    model::block_vjp(&w, x.data(), None, g.data(), bd)?;
+                let mut outs = vec![
+                    Tensor::from_vec(x.shape(), h)?,
+                    Tensor::from_vec(x.shape(), dx)?,
+                ];
+                outs.extend(grads.into_leaf_tensors(d, self.dims.mlp_ratio)?);
+                Ok(outs)
+            }
+
+            // ---- RevViT sub-branches ----
+            "attn_fwd" => {
+                let bd = self.main_block_dims();
+                let w = BlockW::from_leaves(params, false)?;
+                let x = want_f32(data, 0, "x")?;
+                let out = model::attn_branch_fwd(&w, x.data(), bd);
+                Ok(vec![Tensor::from_vec(x.shape(), out)?])
+            }
+            "attn_vjp" => {
+                let bd = self.main_block_dims();
+                let w = BlockW::from_leaves(params, false)?;
+                let x = want_f32(data, 0, "x")?;
+                let g = want_f32(data, 1, "g")?;
+                let (out, dx, grads) =
+                    model::attn_branch_vjp(&w, x.data(), g.data(), bd)?;
+                let mut outs = vec![
+                    Tensor::from_vec(x.shape(), out)?,
+                    Tensor::from_vec(x.shape(), dx)?,
+                ];
+                outs.extend(grads.into_leaf_tensors(d, self.dims.mlp_ratio)?);
+                Ok(outs)
+            }
+            "ffn_fwd" => {
+                let bd = self.main_block_dims();
+                let w = BlockW::from_leaves(params, false)?;
+                let x = want_f32(data, 0, "x")?;
+                let out = model::ffn_branch_fwd(&w, x.data(), bd);
+                Ok(vec![Tensor::from_vec(x.shape(), out)?])
+            }
+            "ffn_vjp" => {
+                let bd = self.main_block_dims();
+                let w = BlockW::from_leaves(params, false)?;
+                let x = want_f32(data, 0, "x")?;
+                let g = want_f32(data, 1, "g")?;
+                let (out, dx, grads) =
+                    model::ffn_branch_vjp(&w, x.data(), g.data(), bd)?;
+                let mut outs = vec![
+                    Tensor::from_vec(x.shape(), out)?,
+                    Tensor::from_vec(x.shape(), dx)?,
+                ];
+                outs.extend(grads.into_leaf_tensors(d, self.dims.mlp_ratio)?);
+                Ok(outs)
+            }
+
+            // ---- head ----
+            "head_loss_fwd" => {
+                let x = want_f32(data, 0, "x")?;
+                let labels = want_i32(data, 1, "labels")?;
+                model::head_loss_fwd(
+                    params, x, labels, self.family, b,
+                    self.dims.tokens(self.family), d, self.n_out(),
+                )
+            }
+            "head_loss_vjp" => {
+                let x = want_f32(data, 0, "x")?;
+                let labels = want_i32(data, 1, "labels")?;
+                model::head_loss_vjp(
+                    params, x, labels, self.family, b,
+                    self.dims.tokens(self.family), d, self.n_out(),
+                )
+            }
+
+            // ---- fused quantized inference ----
+            "model_infer" => self.run_model_infer(params, data),
+
+            other => bail!("native backend: unknown executable '{other}'"),
+        }
+    }
+}
+
+impl NativeExec {
+    /// Quantized stack inference (eqs. 18, 19, 21/22) with constant gamma.
+    #[allow(clippy::too_many_arguments)]
+    fn stack_infer(
+        &self,
+        blocks: &[&[&Tensor]],
+        x0: Tensor,
+        gamma: f32,
+        bd: BlockDims,
+        cross: bool,
+        mem: Option<&Tensor>,
+        f: Fixed,
+    ) -> Result<Tensor> {
+        let shape = x0.shape().to_vec();
+        let mut x = x0;
+        quant::quantize_activation(&mut x, f); // eq. 18
+        let w0 = BlockW::from_leaves(blocks[0], cross)?;
+        let h0 = model::block_h(&w0, x.data(), mem.map(|m| m.data()), bd);
+        let h0t = Tensor::from_vec(&shape, h0)?;
+        let x1 = quant::first_step_quant(&x, &h0t, f)?; // eq. 19
+        let (mut x_prev, mut x_cur) = (x, x1);
+        for leaves in blocks.iter().skip(1) {
+            let wk = BlockW::from_leaves(leaves, cross)?;
+            let h = model::block_h(&wk, x_cur.data(), mem.map(|m| m.data()), bd);
+            // eq. 21 with constant gamma (gamma = 0 collapses to eq. 22)
+            let xp = x_prev.data();
+            let xc = x_cur.data();
+            let mut nxt = vec![0.0f32; h.len()];
+            for i in 0..h.len() {
+                // NOTE: t1 uses plain round-half-away quantization, matching
+                // the inference kernel (`kernels/bdia_update.py::_bdia_kernel`)
+                // — NOT the training combine's eq.-23 parity division, which
+                // needs the side bit that only exists during training.  At
+                // gamma = +/-0.5 the two can differ by one grid step on odd
+                // negative unit counts; this is the paper's intended
+                // inference semantics (eq. 22 at gamma = 0 is unaffected).
+                let t1 = f.quantize(gamma * xp[i]);
+                let t2 = f.quantize((1.0 - gamma) * xc[i] + (1.0 + gamma) * h[i]);
+                nxt[i] = t1 + t2;
+            }
+            x_prev = x_cur;
+            x_cur = Tensor::from_vec(&shape, nxt)?;
+        }
+        Ok(x_cur)
+    }
+
+    fn run_model_infer(
+        &self,
+        params: &[&Tensor],
+        data: &[ArgValue],
+    ) -> Result<Vec<Tensor>> {
+        let d = self.dims.d_model;
+        let b = self.dims.batch;
+        let f = Fixed::new(self.dims.lbits);
+        let nb = self.group_leaves["block"];
+        let ne = self.group_leaves["embed"];
+        let nh = self.group_leaves["head"];
+        let k_main = self.dims.n_blocks;
+
+        if self.is_cross() {
+            let nee = self.group_leaves["enc_embed"];
+            let neb = self.group_leaves["enc_block"];
+            let k_enc = self.dims.n_enc_blocks;
+            let src = want_i32(data, 0, "src")?;
+            let tgt = want_i32(data, 1, "tgt")?;
+            let labels = want_i32(data, 2, "labels")?;
+            let gamma = want_scalar(data, 3, "gamma")?;
+
+            let mut cur = 0usize;
+            let ee = &params[cur..cur + nee];
+            cur += nee;
+            let mut enc_blocks: Vec<&[&Tensor]> = Vec::with_capacity(k_enc);
+            for _ in 0..k_enc {
+                enc_blocks.push(&params[cur..cur + neb]);
+                cur += neb;
+            }
+            let em = &params[cur..cur + ne];
+            cur += ne;
+            let mut dec_blocks: Vec<&[&Tensor]> = Vec::with_capacity(k_main);
+            for _ in 0..k_main {
+                dec_blocks.push(&params[cur..cur + nb]);
+                cur += nb;
+            }
+            let hd = &params[cur..cur + nh];
+
+            let xe =
+                model::embed_fwd_tok(ee, src, b, self.dims.seq_src, d, self.dims.vocab)?;
+            let mem = self.stack_infer(
+                &enc_blocks, xe, gamma, self.enc_block_dims(), false, None, f,
+            )?;
+            let xd =
+                model::embed_fwd_tok(em, tgt, b, self.dims.seq, d, self.dims.vocab)?;
+            let xk = self.stack_infer(
+                &dec_blocks, xd, gamma, self.main_block_dims(), true, Some(&mem), f,
+            )?;
+            model::head_loss_fwd(
+                hd, &xk, labels, self.family, b, self.dims.tokens(self.family), d,
+                self.n_out(),
+            )
+        } else {
+            let labels = want_i32(data, 1, "labels")?;
+            let gamma = want_scalar(data, 2, "gamma")?;
+            let mut cur = 0usize;
+            let em = &params[cur..cur + ne];
+            cur += ne;
+            let mut blocks: Vec<&[&Tensor]> = Vec::with_capacity(k_main);
+            for _ in 0..k_main {
+                blocks.push(&params[cur..cur + nb]);
+                cur += nb;
+            }
+            let hd = &params[cur..cur + nh];
+
+            let x0 = match self.family {
+                Family::Vit => {
+                    let images = want_f32(data, 0, "images")?;
+                    model::embed_fwd_vit(
+                        em, images, b, self.dims.channels, self.dims.image_size,
+                        self.dims.patch, d,
+                    )?
+                }
+                _ => {
+                    let toks = want_i32(data, 0, "tokens")?;
+                    model::embed_fwd_tok(em, toks, b, self.dims.seq, d, self.dims.vocab)?
+                }
+            };
+            let xk = self.stack_infer(
+                &blocks, x0, gamma, self.main_block_dims(), false, None, f,
+            )?;
+            model::head_loss_fwd(
+                hd, &xk, labels, self.family, b, self.dims.tokens(self.family), d,
+                self.n_out(),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamStore;
+    use crate::runtime::Runtime;
+    use crate::tensor::Rng;
+
+    fn native(bundle: &str) -> Runtime {
+        Runtime::from_native_manifest(registry::manifest_for(bundle).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn block_fwd_shapes_and_determinism() {
+        let rt = native("smoke_gpt");
+        let dims = rt.manifest.dims.clone();
+        let ps = ParamStore::init(&rt.manifest, 3);
+        let mut rng = Rng::new(0);
+        let x = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+        let fwd = rt.exec("block_fwd").unwrap();
+        let refs = ps.refs_for(&fwd.spec, 0).unwrap();
+        let h1 = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+        let h2 = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+        assert_eq!(h1.shape(), x.shape());
+        assert_eq!(h1.data(), h2.data(), "native block_fwd must be deterministic");
+        assert!(h1.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn block_vjp_primal_matches_fwd_and_emits_all_grads() {
+        let rt = native("smoke_gpt");
+        let dims = rt.manifest.dims.clone();
+        let ps = ParamStore::init(&rt.manifest, 4);
+        let mut rng = Rng::new(1);
+        let x = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+        let g = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+        let fwd = rt.exec("block_fwd").unwrap();
+        let vjp = rt.exec("block_vjp").unwrap();
+        let refs = ps.refs_for(&fwd.spec, 1).unwrap();
+        let h = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+        let refs = ps.refs_for(&vjp.spec, 1).unwrap();
+        let outs = vjp
+            .call(&refs, &[ArgValue::F32(&x), ArgValue::F32(&g)])
+            .unwrap();
+        assert_eq!(outs.len(), 2 + model::BLOCK_LEAVES);
+        assert_eq!(outs[0].data(), h.data(), "vjp primal == fwd");
+        // grads come back with the leaf shapes of the manifest
+        for (leaf, gt) in rt.manifest.param_groups["block"].iter().zip(&outs[2..]) {
+            assert_eq!(gt.shape(), &leaf.shape[..], "leaf {}", leaf.name);
+        }
+    }
+
+    #[test]
+    fn causal_mask_blocks_future_information() {
+        // changing a future token must not change past block outputs (gpt)
+        let rt = native("smoke_gpt");
+        let dims = rt.manifest.dims.clone();
+        let ps = ParamStore::init(&rt.manifest, 5);
+        let mut rng = Rng::new(2);
+        let mut xv: Vec<f32> = (0..dims.batch * dims.seq * dims.d_model)
+            .map(|_| rng.normal())
+            .collect();
+        let x = Tensor::from_vec(&[dims.batch, dims.seq, dims.d_model], xv.clone())
+            .unwrap();
+        let fwd = rt.exec("block_fwd").unwrap();
+        let refs = ps.refs_for(&fwd.spec, 0).unwrap();
+        let h = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+        // perturb the LAST token of batch row 0
+        let off = (dims.seq - 1) * dims.d_model;
+        for j in 0..dims.d_model {
+            xv[off + j] += 1.0;
+        }
+        let x2 = Tensor::from_vec(&[dims.batch, dims.seq, dims.d_model], xv).unwrap();
+        let h2 = fwd.call(&refs, &[ArgValue::F32(&x2)]).unwrap().remove(0);
+        for t in 0..dims.seq - 1 {
+            let a = &h.data()[t * dims.d_model..(t + 1) * dims.d_model];
+            let b = &h2.data()[t * dims.d_model..(t + 1) * dims.d_model];
+            assert_eq!(a, b, "token {t} saw the future");
+        }
+    }
+
+    #[test]
+    fn model_infer_gamma_zero_finite_loss() {
+        let rt = native("smoke_gpt");
+        let dims = rt.manifest.dims.clone();
+        let ps = ParamStore::init(&rt.manifest, 6);
+        let mut rng = Rng::new(3);
+        let toks: Vec<i32> = (0..dims.batch * dims.seq)
+            .map(|_| rng.below(dims.vocab) as i32)
+            .collect();
+        let tokens = IntTensor::from_vec(&[dims.batch, dims.seq], toks).unwrap();
+        let infer = rt.exec("model_infer").unwrap();
+        let refs = ps.refs_for(&infer.spec, 0).unwrap();
+        let outs = infer
+            .call(
+                &refs,
+                &[
+                    ArgValue::I32(&tokens),
+                    ArgValue::I32(&tokens),
+                    ArgValue::Scalar(0.0),
+                ],
+            )
+            .unwrap();
+        let loss = outs[0].scalar_value().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((loss - (dims.vocab as f32).ln()).abs() < 1.5);
+    }
+}

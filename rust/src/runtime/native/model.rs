@@ -1,0 +1,874 @@
+//! Model-level native ops: transformer block, embeddings and head+loss,
+//! forward and VJP, assembled from the [`super::math`] primitives.
+//!
+//! Parameter leaves arrive as flat `&[&Tensor]` slices in manifest flatten
+//! order (see `registry::block_leaves` — attn, ffn, ln1, ln2 [, lnx, xattn],
+//! each sub-dict's keys sorted); gradients are emitted in the identical
+//! order, which is the executable ABI the coordinator relies on.
+
+// shape parameters are passed individually on purpose: these signatures
+// mirror the executable ABI, not an internal convenience struct
+#![allow(clippy::too_many_arguments)]
+
+use super::math::{
+    add, add_into, attn_bwd, attn_fwd, col_sum, gelu, gelu_grad, linear, ln_bwd,
+    ln_fwd, matmul_nt, matmul_tn, AttnCache, AttnGrads, AttnW, LnCache,
+};
+use crate::model::Family;
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{ensure, Result};
+
+// ---------------------------------------------------------------------------
+// parameter views
+// ---------------------------------------------------------------------------
+
+/// Leaf counts for one block parameter group.
+pub const BLOCK_LEAVES: usize = 16;
+pub const BLOCK_LEAVES_CROSS: usize = 26;
+
+// leaf indices within a block group (flatten order)
+const I_ATTN: usize = 0; // bk,bo,bq,bv,wk,wo,wq,wv
+const I_FFN_B1: usize = 8;
+const I_FFN_B2: usize = 9;
+const I_FFN_W1: usize = 10;
+const I_FFN_W2: usize = 11;
+const I_LN1_BIAS: usize = 12;
+const I_LN1_SCALE: usize = 13;
+const I_LN2_BIAS: usize = 14;
+const I_LN2_SCALE: usize = 15;
+const I_LNX_BIAS: usize = 16;
+const I_LNX_SCALE: usize = 17;
+const I_XATTN: usize = 18;
+
+fn attn_view<'a>(leaves: &[&'a Tensor], base: usize) -> AttnW<'a> {
+    AttnW {
+        bk: leaves[base].data(),
+        bo: leaves[base + 1].data(),
+        bq: leaves[base + 2].data(),
+        bv: leaves[base + 3].data(),
+        wk: leaves[base + 4].data(),
+        wo: leaves[base + 5].data(),
+        wq: leaves[base + 6].data(),
+        wv: leaves[base + 7].data(),
+    }
+}
+
+/// Borrowed view of one block's parameters.
+pub struct BlockW<'a> {
+    pub attn: AttnW<'a>,
+    pub ffn_b1: &'a [f32],
+    pub ffn_b2: &'a [f32],
+    pub ffn_w1: &'a [f32],
+    pub ffn_w2: &'a [f32],
+    pub ln1_bias: &'a [f32],
+    pub ln1_scale: &'a [f32],
+    pub ln2_bias: &'a [f32],
+    pub ln2_scale: &'a [f32],
+    pub lnx_bias: Option<&'a [f32]>,
+    pub lnx_scale: Option<&'a [f32]>,
+    pub xattn: Option<AttnW<'a>>,
+}
+
+impl<'a> BlockW<'a> {
+    pub fn from_leaves(leaves: &[&'a Tensor], cross: bool) -> Result<Self> {
+        let want = if cross { BLOCK_LEAVES_CROSS } else { BLOCK_LEAVES };
+        ensure!(
+            leaves.len() == want,
+            "block param group: expected {want} leaves, got {}",
+            leaves.len()
+        );
+        Ok(BlockW {
+            attn: attn_view(leaves, I_ATTN),
+            ffn_b1: leaves[I_FFN_B1].data(),
+            ffn_b2: leaves[I_FFN_B2].data(),
+            ffn_w1: leaves[I_FFN_W1].data(),
+            ffn_w2: leaves[I_FFN_W2].data(),
+            ln1_bias: leaves[I_LN1_BIAS].data(),
+            ln1_scale: leaves[I_LN1_SCALE].data(),
+            ln2_bias: leaves[I_LN2_BIAS].data(),
+            ln2_scale: leaves[I_LN2_SCALE].data(),
+            lnx_bias: cross.then(|| leaves[I_LNX_BIAS].data()),
+            lnx_scale: cross.then(|| leaves[I_LNX_SCALE].data()),
+            xattn: if cross { Some(attn_view(leaves, I_XATTN)) } else { None },
+        })
+    }
+}
+
+/// Static shape info for one block invocation.
+#[derive(Clone, Copy)]
+pub struct BlockDims {
+    pub b: usize,
+    /// decoder/self sequence length (tokens)
+    pub t: usize,
+    /// memory sequence length (cross-attention; 0 when unused)
+    pub t_src: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub ratio: usize,
+    pub causal: bool,
+}
+
+// ---------------------------------------------------------------------------
+// FFN
+// ---------------------------------------------------------------------------
+
+struct FfnCache {
+    /// pre-GELU hidden, (rows, d*ratio)
+    u1: Vec<f32>,
+    /// post-GELU hidden
+    a: Vec<f32>,
+}
+
+fn ffn_fwd(
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    dr: usize,
+) -> (Vec<f32>, FfnCache) {
+    let u1 = linear(x, w1, b1, rows, d, dr);
+    let a: Vec<f32> = u1.iter().map(|&u| gelu(u)).collect();
+    let y = linear(&a, w2, b2, rows, dr, d);
+    (y, FfnCache { u1, a })
+}
+
+/// Returns (dx, dw1, db1, dw2, db2).
+fn ffn_bwd(
+    w1: &[f32],
+    w2: &[f32],
+    x: &[f32],
+    cache: &FfnCache,
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    dr: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let dw2 = matmul_tn(&cache.a, dy, rows, dr, d);
+    let db2 = col_sum(dy, rows, d);
+    let mut du1 = matmul_nt(dy, w2, rows, d, dr);
+    for (du, &u) in du1.iter_mut().zip(&cache.u1) {
+        *du *= gelu_grad(u);
+    }
+    let dw1 = matmul_tn(x, &du1, rows, d, dr);
+    let db1 = col_sum(&du1, rows, dr);
+    let dx = matmul_nt(&du1, w1, rows, dr, d);
+    (dx, dw1, db1, dw2, db2)
+}
+
+// ---------------------------------------------------------------------------
+// transformer block: h(x) = f(x) + g(x + f(x))  (paper eq. 4)
+// ---------------------------------------------------------------------------
+
+struct BlockCache {
+    xn: Vec<f32>,
+    ln1: LnCache,
+    attn: AttnCache,
+    /// cross-attention residuals (encdec decoder blocks)
+    cross: Option<CrossCache>,
+    zn: Vec<f32>,
+    ln2: LnCache,
+    ffn: FfnCache,
+}
+
+struct CrossCache {
+    un: Vec<f32>,
+    lnx: LnCache,
+    xattn: AttnCache,
+}
+
+fn block_fwd_cached(
+    w: &BlockW,
+    x: &[f32],
+    mem: Option<&[f32]>,
+    dims: BlockDims,
+) -> (Vec<f32>, BlockCache) {
+    let rows = dims.b * dims.t;
+    let d = dims.d;
+    let dr = d * dims.ratio;
+
+    let (xn, ln1) = ln_fwd(w.ln1_scale, w.ln1_bias, x, rows, d);
+    let (a, attn) = attn_fwd(
+        &w.attn, &xn, &xn, dims.b, dims.t, dims.t, d, dims.heads, dims.causal,
+    );
+    let u = add(x, &a);
+
+    let (u2, cross) = if let Some(m) = mem {
+        let lnx_scale = w.lnx_scale.expect("cross block without lnx");
+        let lnx_bias = w.lnx_bias.expect("cross block without lnx");
+        let xw = w.xattn.as_ref().expect("cross block without xattn");
+        let (un, lnx) = ln_fwd(lnx_scale, lnx_bias, &u, rows, d);
+        let (c, xattn) = attn_fwd(
+            xw, &un, m, dims.b, dims.t, dims.t_src, d, dims.heads, false,
+        );
+        (add(&u, &c), Some(CrossCache { un, lnx, xattn }))
+    } else {
+        (u, None)
+    };
+
+    let (zn, ln2) = ln_fwd(w.ln2_scale, w.ln2_bias, &u2, rows, d);
+    let (f, ffn) = ffn_fwd(w.ffn_w1, w.ffn_b1, w.ffn_w2, w.ffn_b2, &zn, rows, d, dr);
+
+    // h = u2 + f - x
+    let mut h = u2;
+    add_into(&mut h, &f);
+    for (hv, xv) in h.iter_mut().zip(x) {
+        *hv -= *xv;
+    }
+    (h, BlockCache { xn, ln1, attn, cross, zn, ln2, ffn })
+}
+
+/// Forward only (model_infer / reconstruction probes).
+pub fn block_h(w: &BlockW, x: &[f32], mem: Option<&[f32]>, dims: BlockDims) -> Vec<f32> {
+    block_fwd_cached(w, x, mem, dims).0
+}
+
+/// Per-leaf parameter gradients of one block, emitted in flatten order.
+pub struct BlockGrads {
+    attn: AttnGrads,
+    ffn_b1: Vec<f32>,
+    ffn_b2: Vec<f32>,
+    ffn_w1: Vec<f32>,
+    ffn_w2: Vec<f32>,
+    ln1_bias: Vec<f32>,
+    ln1_scale: Vec<f32>,
+    ln2_bias: Vec<f32>,
+    ln2_scale: Vec<f32>,
+    cross: Option<(Vec<f32>, Vec<f32>, AttnGrads)>, // (lnx_bias, lnx_scale, xattn)
+}
+
+fn attn_grad_tensors(g: AttnGrads, d: usize) -> Result<Vec<Tensor>> {
+    Ok(vec![
+        Tensor::from_vec(&[d], g.bk)?,
+        Tensor::from_vec(&[d], g.bo)?,
+        Tensor::from_vec(&[d], g.bq)?,
+        Tensor::from_vec(&[d], g.bv)?,
+        Tensor::from_vec(&[d, d], g.wk)?,
+        Tensor::from_vec(&[d, d], g.wo)?,
+        Tensor::from_vec(&[d, d], g.wq)?,
+        Tensor::from_vec(&[d, d], g.wv)?,
+    ])
+}
+
+impl BlockGrads {
+    /// Tensors in block leaf order (the block_vjp output tail).
+    pub fn into_leaf_tensors(self, d: usize, ratio: usize) -> Result<Vec<Tensor>> {
+        let dr = d * ratio;
+        let mut out = attn_grad_tensors(self.attn, d)?;
+        out.push(Tensor::from_vec(&[dr], self.ffn_b1)?);
+        out.push(Tensor::from_vec(&[d], self.ffn_b2)?);
+        out.push(Tensor::from_vec(&[d, dr], self.ffn_w1)?);
+        out.push(Tensor::from_vec(&[dr, d], self.ffn_w2)?);
+        out.push(Tensor::from_vec(&[d], self.ln1_bias)?);
+        out.push(Tensor::from_vec(&[d], self.ln1_scale)?);
+        out.push(Tensor::from_vec(&[d], self.ln2_bias)?);
+        out.push(Tensor::from_vec(&[d], self.ln2_scale)?);
+        if let Some((lnx_bias, lnx_scale, xattn)) = self.cross {
+            out.push(Tensor::from_vec(&[d], lnx_bias)?);
+            out.push(Tensor::from_vec(&[d], lnx_scale)?);
+            out.extend(attn_grad_tensors(xattn, d)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Fused block VJP: recompute the forward, then back-propagate `g`.
+/// Returns `(h, dx, dmem, grads)` — the `block_vjp` executable contract.
+pub fn block_vjp(
+    w: &BlockW,
+    x: &[f32],
+    mem: Option<&[f32]>,
+    g: &[f32],
+    dims: BlockDims,
+) -> Result<(Vec<f32>, Vec<f32>, Option<Vec<f32>>, BlockGrads)> {
+    let rows = dims.b * dims.t;
+    let d = dims.d;
+    let dr = d * dims.ratio;
+    let (h, cache) = block_fwd_cached(w, x, mem, dims);
+
+    // h = u2 + f - x ;   df = g
+    let (dzn, ffn_w1_g, ffn_b1_g, ffn_w2_g, ffn_b2_g) = ffn_bwd(
+        w.ffn_w1, w.ffn_w2, &cache.zn, &cache.ffn, g, rows, d, dr,
+    );
+    let (du2_ln, ln2_bias_dscale) = {
+        let (dx2, dscale, dbias) = ln_bwd(w.ln2_scale, &cache.ln2, &dzn, rows, d);
+        (dx2, (dbias, dscale))
+    };
+    // du2 = g (residual term) + LN2 chain
+    let mut du2 = g.to_vec();
+    add_into(&mut du2, &du2_ln);
+
+    let (mut du, dmem, cross_grads) = if let Some(cc) = &cache.cross {
+        let xw = w.xattn.as_ref().expect("xattn");
+        let m = mem.expect("mem");
+        let (dun, dm, xattn_g) = attn_bwd(
+            xw, &cc.un, m, &cc.xattn, &du2, dims.b, dims.t, dims.t_src, d,
+            dims.heads,
+        );
+        let (du_ln, lnx_dscale, lnx_dbias) = {
+            let (dxl, dscale, dbias) =
+                ln_bwd(w.lnx_scale.expect("lnx"), &cc.lnx, &dun, rows, d);
+            (dxl, dscale, dbias)
+        };
+        // u2 = u + c: c-path through lnx, plus the direct residual du2
+        let mut du = du2.clone();
+        add_into(&mut du, &du_ln);
+        (du, Some(dm), Some((lnx_dbias, lnx_dscale, xattn_g)))
+    } else {
+        // no cross branch: du == du2, move it (hot path — one full
+        // activation buffer per block per backward step)
+        (du2, None, None)
+    };
+
+    // u = x + a ;  da = du
+    let (dxn_q, dxn_kv, attn_g) = attn_bwd(
+        &w.attn, &cache.xn, &cache.xn, &cache.attn, &du, dims.b, dims.t, dims.t,
+        d, dims.heads,
+    );
+    let mut dxn = dxn_q;
+    add_into(&mut dxn, &dxn_kv);
+    let (dx_ln1, ln1_dscale, ln1_dbias) = {
+        let (dxl, dscale, dbias) = ln_bwd(w.ln1_scale, &cache.ln1, &dxn, rows, d);
+        (dxl, dscale, dbias)
+    };
+
+    // dx = du (u = x + a)  +  ln1 chain  -  g (the explicit -x in h)
+    let mut dx = std::mem::take(&mut du);
+    add_into(&mut dx, &dx_ln1);
+    for (dv, gv) in dx.iter_mut().zip(g) {
+        *dv -= *gv;
+    }
+
+    let (ln2_dbias, ln2_dscale) = ln2_bias_dscale;
+    let grads = BlockGrads {
+        attn: attn_g,
+        ffn_b1: ffn_b1_g,
+        ffn_b2: ffn_b2_g,
+        ffn_w1: ffn_w1_g,
+        ffn_w2: ffn_w2_g,
+        ln1_bias: ln1_dbias,
+        ln1_scale: ln1_dscale,
+        ln2_bias: ln2_dbias,
+        ln2_scale: ln2_dscale,
+        cross: cross_grads,
+    };
+    Ok((h, dx, dmem, grads))
+}
+
+// ---------------------------------------------------------------------------
+// RevViT sub-branches: F = attn(ln1(.)), G = ffn(ln2(.))
+// ---------------------------------------------------------------------------
+
+/// attn_fwd executable: attention over ln1-normalised input.
+pub fn attn_branch_fwd(w: &BlockW, x: &[f32], dims: BlockDims) -> Vec<f32> {
+    let rows = dims.b * dims.t;
+    let (xn, _) = ln_fwd(w.ln1_scale, w.ln1_bias, x, rows, dims.d);
+    let (out, _) = attn_fwd(
+        &w.attn, &xn, &xn, dims.b, dims.t, dims.t, dims.d, dims.heads,
+        dims.causal,
+    );
+    out
+}
+
+/// attn_vjp executable: (out, dx, grads over ALL block leaves — zeros for
+/// the untouched ffn/ln2 leaves, mirroring jax `keep_unused`).
+pub fn attn_branch_vjp(
+    w: &BlockW,
+    x: &[f32],
+    g: &[f32],
+    dims: BlockDims,
+) -> Result<(Vec<f32>, Vec<f32>, BlockGrads)> {
+    let rows = dims.b * dims.t;
+    let d = dims.d;
+    let dr = d * dims.ratio;
+    let (xn, ln1) = ln_fwd(w.ln1_scale, w.ln1_bias, x, rows, d);
+    let (out, cache) = attn_fwd(
+        &w.attn, &xn, &xn, dims.b, dims.t, dims.t, d, dims.heads, dims.causal,
+    );
+    let (dxn_q, dxn_kv, attn_g) =
+        attn_bwd(&w.attn, &xn, &xn, &cache, g, dims.b, dims.t, dims.t, d, dims.heads);
+    let mut dxn = dxn_q;
+    add_into(&mut dxn, &dxn_kv);
+    let (dx, ln1_dscale, ln1_dbias) = ln_bwd(w.ln1_scale, &ln1, &dxn, rows, d);
+    let grads = BlockGrads {
+        attn: attn_g,
+        ffn_b1: vec![0.0; dr],
+        ffn_b2: vec![0.0; d],
+        ffn_w1: vec![0.0; d * dr],
+        ffn_w2: vec![0.0; dr * d],
+        ln1_bias: ln1_dbias,
+        ln1_scale: ln1_dscale,
+        ln2_bias: vec![0.0; d],
+        ln2_scale: vec![0.0; d],
+        cross: None,
+    };
+    Ok((out, dx, grads))
+}
+
+/// ffn_fwd executable: FFN over ln2-normalised input.
+pub fn ffn_branch_fwd(w: &BlockW, x: &[f32], dims: BlockDims) -> Vec<f32> {
+    let rows = dims.b * dims.t;
+    let dr = dims.d * dims.ratio;
+    let (zn, _) = ln_fwd(w.ln2_scale, w.ln2_bias, x, rows, dims.d);
+    let (out, _) =
+        ffn_fwd(w.ffn_w1, w.ffn_b1, w.ffn_w2, w.ffn_b2, &zn, rows, dims.d, dr);
+    out
+}
+
+/// ffn_vjp executable (zeros for attn/ln1 leaves).
+pub fn ffn_branch_vjp(
+    w: &BlockW,
+    x: &[f32],
+    g: &[f32],
+    dims: BlockDims,
+) -> Result<(Vec<f32>, Vec<f32>, BlockGrads)> {
+    let rows = dims.b * dims.t;
+    let d = dims.d;
+    let dr = d * dims.ratio;
+    let (zn, ln2) = ln_fwd(w.ln2_scale, w.ln2_bias, x, rows, d);
+    let (out, cache) =
+        ffn_fwd(w.ffn_w1, w.ffn_b1, w.ffn_w2, w.ffn_b2, &zn, rows, d, dr);
+    let (dzn, dw1, db1, dw2, db2) =
+        ffn_bwd(w.ffn_w1, w.ffn_w2, &zn, &cache, g, rows, d, dr);
+    let (dx, ln2_dscale, ln2_dbias) = ln_bwd(w.ln2_scale, &ln2, &dzn, rows, d);
+    let grads = BlockGrads {
+        attn: AttnGrads {
+            wq: vec![0.0; d * d],
+            bq: vec![0.0; d],
+            wk: vec![0.0; d * d],
+            bk: vec![0.0; d],
+            wv: vec![0.0; d * d],
+            bv: vec![0.0; d],
+            wo: vec![0.0; d * d],
+            bo: vec![0.0; d],
+        },
+        ffn_b1: db1,
+        ffn_b2: db2,
+        ffn_w1: dw1,
+        ffn_w2: dw2,
+        ln1_bias: vec![0.0; d],
+        ln1_scale: vec![0.0; d],
+        ln2_bias: ln2_dbias,
+        ln2_scale: ln2_dscale,
+        cross: None,
+    };
+    Ok((out, dx, grads))
+}
+
+// ---------------------------------------------------------------------------
+// embeddings
+// ---------------------------------------------------------------------------
+
+/// ViT patchify: (B, C, H, W) -> (B*np, p*p*C) rows, np = (H/p)*(W/p).
+/// Patch-vector element order matches the JAX transpose (b,gh,gw,py,px,c).
+fn patchify(images: &[f32], b: usize, c: usize, hw: usize, p: usize) -> Vec<f32> {
+    let gside = hw / p;
+    let np = gside * gside;
+    let pdim = p * p * c;
+    let mut out = vec![0.0f32; b * np * pdim];
+    for bi in 0..b {
+        for ghi in 0..gside {
+            for gwi in 0..gside {
+                let patch_row = (bi * np + ghi * gside + gwi) * pdim;
+                for py in 0..p {
+                    for px in 0..p {
+                        for ch in 0..c {
+                            let src = ((bi * c + ch) * hw + ghi * p + py) * hw
+                                + gwi * p
+                                + px;
+                            out[patch_row + (py * p + px) * c + ch] = images[src];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// ViT embed forward.  Leaves: [cls (1,1,d), pos (tokens,d), proj_b (d),
+/// proj_w (pdim,d)].
+pub fn embed_fwd_vit(
+    leaves: &[&Tensor],
+    images: &Tensor,
+    b: usize,
+    c: usize,
+    hw: usize,
+    p: usize,
+    d: usize,
+) -> Result<Tensor> {
+    ensure!(leaves.len() == 4, "vit embed expects 4 leaves");
+    let (cls, pos, proj_b, proj_w) =
+        (leaves[0].data(), leaves[1].data(), leaves[2].data(), leaves[3].data());
+    let gside = hw / p;
+    let np = gside * gside;
+    let tokens = np + 1;
+    let pdim = p * p * c;
+    let patches = patchify(images.data(), b, c, hw, p);
+    let z = linear(&patches, proj_w, proj_b, b * np, pdim, d);
+    let mut out = vec![0.0f32; b * tokens * d];
+    for bi in 0..b {
+        let row0 = bi * tokens * d;
+        for j in 0..d {
+            out[row0 + j] = cls[j] + pos[j];
+        }
+        for t in 0..np {
+            let dst = row0 + (t + 1) * d;
+            let src = (bi * np + t) * d;
+            let posr = &pos[(t + 1) * d..(t + 2) * d];
+            for j in 0..d {
+                out[dst + j] = z[src + j] + posr[j];
+            }
+        }
+    }
+    Tensor::from_vec(&[b, tokens, d], out)
+}
+
+/// ViT embed VJP (parameter grads only, matching the AOT executable).
+pub fn embed_vjp_vit(
+    leaves: &[&Tensor],
+    images: &Tensor,
+    g: &Tensor,
+    b: usize,
+    c: usize,
+    hw: usize,
+    p: usize,
+    d: usize,
+) -> Result<Vec<Tensor>> {
+    ensure!(leaves.len() == 4, "vit embed expects 4 leaves");
+    let gside = hw / p;
+    let np = gside * gside;
+    let tokens = np + 1;
+    let pdim = p * p * c;
+    let gd = g.data();
+
+    let mut dcls = vec![0.0f32; d];
+    let mut dpos = vec![0.0f32; tokens * d];
+    // dz rows (b*np, d) = g[:, 1:, :]
+    let mut dz = vec![0.0f32; b * np * d];
+    for bi in 0..b {
+        let row0 = bi * tokens * d;
+        for j in 0..d {
+            dcls[j] += gd[row0 + j];
+            dpos[j] += gd[row0 + j];
+        }
+        for t in 0..np {
+            let src = row0 + (t + 1) * d;
+            let dst = (bi * np + t) * d;
+            for j in 0..d {
+                let v = gd[src + j];
+                dpos[(t + 1) * d + j] += v;
+                dz[dst + j] = v;
+            }
+        }
+    }
+    let patches = patchify(images.data(), b, c, hw, p);
+    let dproj_w = matmul_tn(&patches, &dz, b * np, pdim, d);
+    let dproj_b = col_sum(&dz, b * np, d);
+    Ok(vec![
+        Tensor::from_vec(&[1, 1, d], dcls)?,
+        Tensor::from_vec(&[tokens, d], dpos)?,
+        Tensor::from_vec(&[d], dproj_b)?,
+        Tensor::from_vec(&[pdim, d], dproj_w)?,
+    ])
+}
+
+/// Token embed forward (gpt / encdec decoder / encoder).  Leaves:
+/// [wpe (t_max,d), wte (V,d)].
+pub fn embed_fwd_tok(
+    leaves: &[&Tensor],
+    tokens: &IntTensor,
+    b: usize,
+    t: usize,
+    d: usize,
+    vocab: usize,
+) -> Result<Tensor> {
+    ensure!(leaves.len() == 2, "token embed expects 2 leaves");
+    let (wpe, wte) = (leaves[0].data(), leaves[1].data());
+    ensure!(wpe.len() >= t * d, "wpe too small for sequence length {t}");
+    let ids = tokens.data();
+    let mut out = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let id = ids[bi * t + ti];
+            ensure!(
+                (0..vocab as i32).contains(&id),
+                "token id {id} out of vocab range {vocab}"
+            );
+            let dst = (bi * t + ti) * d;
+            let te = &wte[id as usize * d..(id as usize + 1) * d];
+            let pe = &wpe[ti * d..(ti + 1) * d];
+            for j in 0..d {
+                out[dst + j] = te[j] + pe[j];
+            }
+        }
+    }
+    Tensor::from_vec(&[b, t, d], out)
+}
+
+/// Token embed VJP (parameter grads only).
+pub fn embed_vjp_tok(
+    leaves: &[&Tensor],
+    tokens: &IntTensor,
+    g: &Tensor,
+    b: usize,
+    t: usize,
+    d: usize,
+    vocab: usize,
+) -> Result<Vec<Tensor>> {
+    ensure!(leaves.len() == 2, "token embed expects 2 leaves");
+    let t_max = leaves[0].shape()[0];
+    let gd = g.data();
+    let ids = tokens.data();
+    let mut dwpe = vec![0.0f32; t_max * d];
+    let mut dwte = vec![0.0f32; vocab * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let src = (bi * t + ti) * d;
+            let id = ids[bi * t + ti] as usize;
+            for j in 0..d {
+                let v = gd[src + j];
+                dwpe[ti * d + j] += v;
+                dwte[id * d + j] += v;
+            }
+        }
+    }
+    Ok(vec![
+        Tensor::from_vec(&[t_max, d], dwpe)?,
+        Tensor::from_vec(&[vocab, d], dwte)?,
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// head + loss
+// ---------------------------------------------------------------------------
+
+/// Leaves: [b (out), ln_f.bias (d), ln_f.scale (d), w (d,out)].
+struct HeadW<'a> {
+    b: &'a [f32],
+    ln_bias: &'a [f32],
+    ln_scale: &'a [f32],
+    w: &'a [f32],
+}
+
+fn head_view<'a>(leaves: &[&'a Tensor]) -> Result<HeadW<'a>> {
+    ensure!(leaves.len() == 4, "head expects 4 leaves");
+    Ok(HeadW {
+        b: leaves[0].data(),
+        ln_bias: leaves[1].data(),
+        ln_scale: leaves[2].data(),
+        w: leaves[3].data(),
+    })
+}
+
+/// Softmax cross-entropy over logits rows; returns (loss, ncorrect,
+/// per-row softmax) — softmax retained for the VJP.
+fn ce_rows(
+    logits: &[f32],
+    labels: &[i32],
+    rows: usize,
+    n_out: usize,
+) -> (f32, f32, Vec<f32>) {
+    let mut probs = vec![0.0f32; rows * n_out];
+    let mut loss = 0.0f64;
+    let mut ncorrect = 0.0f32;
+    for r in 0..rows {
+        let lr = &logits[r * n_out..(r + 1) * n_out];
+        let mut m = lr[0];
+        let mut argmax = 0usize;
+        for (c, &v) in lr.iter().enumerate() {
+            if v > m {
+                m = v;
+                argmax = c;
+            }
+        }
+        let mut denom = 0.0f32;
+        let pr = &mut probs[r * n_out..(r + 1) * n_out];
+        for (p, &v) in pr.iter_mut().zip(lr) {
+            *p = (v - m).exp();
+            denom += *p;
+        }
+        for p in pr.iter_mut() {
+            *p /= denom;
+        }
+        let y = labels[r] as usize;
+        let logp = (lr[y] - m) - denom.ln();
+        loss -= logp as f64;
+        if argmax == y {
+            ncorrect += 1.0;
+        }
+    }
+    ((loss / rows as f64) as f32, ncorrect, probs)
+}
+
+/// head_loss_fwd: (mean CE loss, #correct), both scalars.
+pub fn head_loss_fwd(
+    leaves: &[&Tensor],
+    x: &Tensor,
+    labels: &IntTensor,
+    family: Family,
+    b: usize,
+    t: usize,
+    d: usize,
+    n_out: usize,
+) -> Result<Vec<Tensor>> {
+    let w = head_view(leaves)?;
+    let rows_all = b * t;
+    let (z, _) = ln_fwd(w.ln_scale, w.ln_bias, x.data(), rows_all, d);
+    let (zc, rows): (Vec<f32>, usize) = if family == Family::Vit {
+        // cls token only
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            out[bi * d..(bi + 1) * d]
+                .copy_from_slice(&z[bi * t * d..bi * t * d + d]);
+        }
+        (out, b)
+    } else {
+        (z, rows_all)
+    };
+    let logits = linear(&zc, w.w, w.b, rows, d, n_out);
+    let (loss, ncorrect, _) = ce_rows(&logits, labels.data(), rows, n_out);
+    Ok(vec![Tensor::scalar(loss), Tensor::scalar(ncorrect)])
+}
+
+/// head_loss_vjp: (dL/dx, db, dln_bias, dln_scale, dw) with loss seed 1.
+pub fn head_loss_vjp(
+    leaves: &[&Tensor],
+    x: &Tensor,
+    labels: &IntTensor,
+    family: Family,
+    b: usize,
+    t: usize,
+    d: usize,
+    n_out: usize,
+) -> Result<Vec<Tensor>> {
+    let w = head_view(leaves)?;
+    let rows_all = b * t;
+    let (z, ln_cache) = ln_fwd(w.ln_scale, w.ln_bias, x.data(), rows_all, d);
+    let (zc, rows): (Vec<f32>, usize) = if family == Family::Vit {
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            out[bi * d..(bi + 1) * d]
+                .copy_from_slice(&z[bi * t * d..bi * t * d + d]);
+        }
+        (out, b)
+    } else {
+        (z, rows_all)
+    };
+    let logits = linear(&zc, w.w, w.b, rows, d, n_out);
+    let (_, _, probs) = ce_rows(&logits, labels.data(), rows, n_out);
+
+    // dlogits = (softmax - onehot) / rows
+    let mut dlogits = probs;
+    let inv_n = 1.0 / rows as f32;
+    for (r, &y) in labels.data().iter().enumerate() {
+        let row = &mut dlogits[r * n_out..(r + 1) * n_out];
+        row[y as usize] -= 1.0;
+        for v in row.iter_mut() {
+            *v *= inv_n;
+        }
+    }
+    let dw = matmul_tn(&zc, &dlogits, rows, d, n_out);
+    let db = col_sum(&dlogits, rows, n_out);
+    let dzc = matmul_nt(&dlogits, w.w, rows, n_out, d);
+
+    // scatter back to full (b*t, d) rows for the ln_f backward
+    let dz: Vec<f32> = if family == Family::Vit {
+        let mut out = vec![0.0f32; rows_all * d];
+        for bi in 0..b {
+            out[bi * t * d..bi * t * d + d]
+                .copy_from_slice(&dzc[bi * d..(bi + 1) * d]);
+        }
+        out
+    } else {
+        dzc
+    };
+    let (dx, dln_scale, dln_bias) = ln_bwd(w.ln_scale, &ln_cache, &dz, rows_all, d);
+
+    Ok(vec![
+        Tensor::from_vec(x.shape(), dx)?,
+        Tensor::from_vec(&[n_out], db)?,
+        Tensor::from_vec(&[d], dln_bias)?,
+        Tensor::from_vec(&[d], dln_scale)?,
+        Tensor::from_vec(&[d, n_out], dw)?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn patchify_layout_matches_jax_transpose() {
+        // 1 image, 1 channel, 4x4, patch 2 -> 4 patches of 4 pixels
+        let images: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let p = patchify(&images, 1, 1, 4, 2);
+        // patch (0,0) = rows 0-1, cols 0-1 in row-major (py,px,c) order
+        assert_eq!(&p[0..4], &[0.0, 1.0, 4.0, 5.0]);
+        // patch (0,1) = rows 0-1, cols 2-3
+        assert_eq!(&p[4..8], &[2.0, 3.0, 6.0, 7.0]);
+        // patch (1,0) = rows 2-3, cols 0-1
+        assert_eq!(&p[8..12], &[8.0, 9.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn ce_loss_uniform_logits_is_log_n() {
+        let n_out = 8;
+        let logits = vec![0.0f32; 2 * n_out];
+        let (loss, _, probs) = ce_rows(&logits, &[3, 5], 2, n_out);
+        assert!((loss - (n_out as f32).ln()).abs() < 1e-5);
+        for &p in &probs {
+            assert!((p - 1.0 / n_out as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ffn_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(4);
+        let (rows, d, dr) = (3usize, 4usize, 8usize);
+        let rv = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() * 0.5).collect()
+        };
+        let w1 = rv(&mut rng, d * dr);
+        let b1 = rv(&mut rng, dr);
+        let w2 = rv(&mut rng, dr * d);
+        let b2 = rv(&mut rng, d);
+        let x = rv(&mut rng, rows * d);
+        let g = rv(&mut rng, rows * d);
+        let (_, cache) = ffn_fwd(&w1, &b1, &w2, &b2, &x, rows, d, dr);
+        let (dx, dw1, _, _, _) = ffn_bwd(&w1, &w2, &x, &cache, &g, rows, d, dr);
+
+        let probe = |xs: &[f32], w1s: &[f32]| -> f64 {
+            let (y, _) = ffn_fwd(w1s, &b1, &w2, &b2, xs, rows, d, dr);
+            y.iter().zip(&g).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let eps = 1e-2f32;
+        for idx in [0usize, 5, rows * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = ((probe(&xp, &w1) - probe(&xm, &w1)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - dx[idx]).abs() < 2e-2 * dx[idx].abs().max(0.5),
+                "dx[{idx}] fd {fd} vs {}",
+                dx[idx]
+            );
+        }
+        for idx in [0usize, 7, d * dr - 1] {
+            let mut wp = w1.clone();
+            wp[idx] += eps;
+            let mut wm = w1.clone();
+            wm[idx] -= eps;
+            let fd = ((probe(&x, &wp) - probe(&x, &wm)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - dw1[idx]).abs() < 2e-2 * dw1[idx].abs().max(0.5),
+                "dw1[{idx}] fd {fd} vs {}",
+                dw1[idx]
+            );
+        }
+    }
+}

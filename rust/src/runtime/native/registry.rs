@@ -1,0 +1,540 @@
+//! Native bundle registry: synthesize manifests without AOT artifacts.
+//!
+//! Mirrors `python/compile/aot.py::CONFIGS` (names, dims) and the manifest
+//! leaf order produced by JAX's `tree_flatten_with_path` (dict keys sorted
+//! lexicographically at every level).  Keeping the two in lockstep means a
+//! `ParamStore` initialised against a native manifest binds correctly to a
+//! PJRT bundle of the same config and vice versa — the manifest *is* the
+//! cross-backend ABI.
+
+use crate::model::{ArgSpec, DType, Dims, ExecSpec, Family, Init, LeafSpec, Manifest};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+const INIT_STD: f32 = 0.02;
+
+/// Bundle names the native backend can materialise from thin air.
+pub fn config_names() -> &'static [&'static str] {
+    &[
+        "vit_s10",
+        "vit_s100",
+        "gpt_tiny",
+        "encdec_mt",
+        "gpt_e2e",
+        "smoke_vit",
+        "smoke_gpt",
+        "smoke_encdec",
+    ]
+}
+
+/// Dims shared defaults (mirrors `ModelConfig`'s field defaults).
+fn base_dims() -> Dims {
+    Dims {
+        d_model: 64,
+        n_heads: 4,
+        n_blocks: 6,
+        n_enc_blocks: 0,
+        mlp_ratio: 4,
+        batch: 32,
+        lbits: 9,
+        image_size: 32,
+        patch: 4,
+        channels: 3,
+        n_classes: 10,
+        seq: 64,
+        seq_src: 0,
+        vocab: 96,
+    }
+}
+
+/// Synthesize the manifest for a registered bundle name.
+pub fn manifest_for(name: &str) -> Result<Manifest> {
+    let b = base_dims();
+    let (family, dims) = match name {
+        // Paper §5.1: ViT with K=6 blocks on CIFAR10/100 stand-ins.
+        "vit_s10" => (
+            Family::Vit,
+            Dims { mlp_ratio: 2, batch: 64, ..b },
+        ),
+        "vit_s100" => (
+            Family::Vit,
+            Dims { mlp_ratio: 2, batch: 64, n_classes: 100, ..b },
+        ),
+        // Paper §5.3: (nano)GPT2 with 12 blocks, tiny-corpus overfitting.
+        "gpt_tiny" => (
+            Family::Gpt,
+            Dims { n_blocks: 12, mlp_ratio: 2, batch: 16, ..b },
+        ),
+        // Paper §5.2: en->fr translation, 6+6 encoder/decoder blocks.
+        "encdec_mt" => (
+            Family::EncDec,
+            Dims {
+                n_blocks: 6,
+                n_enc_blocks: 6,
+                mlp_ratio: 2,
+                seq: 24,
+                seq_src: 24,
+                vocab: 64,
+                ..b
+            },
+        ),
+        // End-to-end driver: largest feasible LM on this testbed.
+        "gpt_e2e" => (
+            Family::Gpt,
+            Dims {
+                d_model: 256,
+                n_heads: 8,
+                n_blocks: 8,
+                batch: 8,
+                seq: 128,
+                ..b
+            },
+        ),
+        // Tiny smoke configs for cargo integration tests.
+        "smoke_vit" => (
+            Family::Vit,
+            Dims {
+                d_model: 16,
+                n_heads: 2,
+                n_blocks: 3,
+                mlp_ratio: 2,
+                batch: 2,
+                image_size: 8,
+                n_classes: 4,
+                ..b
+            },
+        ),
+        "smoke_gpt" => (
+            Family::Gpt,
+            Dims {
+                d_model: 16,
+                n_heads: 2,
+                n_blocks: 4,
+                mlp_ratio: 2,
+                batch: 2,
+                seq: 8,
+                vocab: 11,
+                ..b
+            },
+        ),
+        "smoke_encdec" => (
+            Family::EncDec,
+            Dims {
+                d_model: 16,
+                n_heads: 2,
+                n_blocks: 2,
+                n_enc_blocks: 2,
+                mlp_ratio: 2,
+                batch: 2,
+                seq: 6,
+                seq_src: 6,
+                vocab: 11,
+                ..b
+            },
+        ),
+        _ => bail!(
+            "unknown native bundle '{name}' (known: {})",
+            config_names().join(", ")
+        ),
+    };
+    Ok(manifest_from_dims(name, family, dims))
+}
+
+// ---------------------------------------------------------------------------
+// Leaf specs (flatten order = JAX sorted-dict-key traversal)
+// ---------------------------------------------------------------------------
+
+fn leaf(name: String, shape: Vec<usize>, init: Init) -> LeafSpec {
+    LeafSpec { name, shape, init }
+}
+
+fn ln_leaves(prefix: &str, d: usize) -> Vec<LeafSpec> {
+    vec![
+        leaf(format!("{prefix}.bias"), vec![d], Init::Zeros),
+        leaf(format!("{prefix}.scale"), vec![d], Init::Ones),
+    ]
+}
+
+fn attn_leaves(prefix: &str, d: usize) -> Vec<LeafSpec> {
+    vec![
+        leaf(format!("{prefix}.bk"), vec![d], Init::Zeros),
+        leaf(format!("{prefix}.bo"), vec![d], Init::Zeros),
+        leaf(format!("{prefix}.bq"), vec![d], Init::Zeros),
+        leaf(format!("{prefix}.bv"), vec![d], Init::Zeros),
+        leaf(format!("{prefix}.wk"), vec![d, d], Init::Normal(INIT_STD)),
+        leaf(format!("{prefix}.wo"), vec![d, d], Init::Normal(INIT_STD)),
+        leaf(format!("{prefix}.wq"), vec![d, d], Init::Normal(INIT_STD)),
+        leaf(format!("{prefix}.wv"), vec![d, d], Init::Normal(INIT_STD)),
+    ]
+}
+
+fn ffn_leaves(d: usize, ratio: usize) -> Vec<LeafSpec> {
+    let dr = d * ratio;
+    vec![
+        leaf("ffn.b1".into(), vec![dr], Init::Zeros),
+        leaf("ffn.b2".into(), vec![d], Init::Zeros),
+        leaf("ffn.w1".into(), vec![d, dr], Init::Normal(INIT_STD)),
+        leaf("ffn.w2".into(), vec![dr, d], Init::Normal(INIT_STD)),
+    ]
+}
+
+/// Block leaves: attn(8), ffn(4), ln1(2), ln2(2) [+ lnx(2), xattn(8)].
+pub fn block_leaves(d: usize, ratio: usize, cross: bool) -> Vec<LeafSpec> {
+    let mut v = attn_leaves("attn", d);
+    v.extend(ffn_leaves(d, ratio));
+    v.extend(ln_leaves("ln1", d));
+    v.extend(ln_leaves("ln2", d));
+    if cross {
+        v.extend(ln_leaves("lnx", d));
+        v.extend(attn_leaves("xattn", d));
+    }
+    v
+}
+
+fn embed_leaves(family: Family, dims: &Dims) -> Vec<LeafSpec> {
+    let d = dims.d_model;
+    match family {
+        Family::Vit => {
+            let pdim = dims.patch * dims.patch * dims.channels;
+            let tokens = dims.tokens(Family::Vit);
+            vec![
+                leaf("cls".into(), vec![1, 1, d], Init::Normal(INIT_STD)),
+                leaf("pos".into(), vec![tokens, d], Init::Normal(INIT_STD)),
+                leaf("proj_b".into(), vec![d], Init::Zeros),
+                leaf("proj_w".into(), vec![pdim, d], Init::Normal(INIT_STD)),
+            ]
+        }
+        Family::Gpt | Family::EncDec => vec![
+            leaf("wpe".into(), vec![dims.seq, d], Init::Normal(INIT_STD)),
+            leaf("wte".into(), vec![dims.vocab, d], Init::Normal(INIT_STD)),
+        ],
+    }
+}
+
+fn enc_embed_leaves(dims: &Dims) -> Vec<LeafSpec> {
+    vec![
+        leaf("wpe".into(), vec![dims.seq_src, dims.d_model], Init::Normal(INIT_STD)),
+        leaf("wte".into(), vec![dims.vocab, dims.d_model], Init::Normal(INIT_STD)),
+    ]
+}
+
+fn head_leaves(family: Family, dims: &Dims) -> Vec<LeafSpec> {
+    let d = dims.d_model;
+    let out = if family == Family::Vit { dims.n_classes } else { dims.vocab };
+    vec![
+        leaf("b".into(), vec![out], Init::Zeros),
+        leaf("ln_f.bias".into(), vec![d], Init::Zeros),
+        leaf("ln_f.scale".into(), vec![d], Init::Ones),
+        leaf("w".into(), vec![d, out], Init::Normal(INIT_STD)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Executable specs
+// ---------------------------------------------------------------------------
+
+fn f32_arg(name: &str, shape: Vec<usize>) -> ArgSpec {
+    ArgSpec { name: name.into(), dtype: DType::F32, shape }
+}
+
+fn i32_arg(name: &str, shape: Vec<usize>) -> ArgSpec {
+    ArgSpec { name: name.into(), dtype: DType::I32, shape }
+}
+
+fn leaf_outputs(leaves: &[LeafSpec]) -> Vec<ArgSpec> {
+    leaves
+        .iter()
+        .map(|l| f32_arg(&l.name, l.shape.clone()))
+        .collect()
+}
+
+fn exec(
+    param_layout: Vec<(String, usize)>,
+    data_inputs: Vec<ArgSpec>,
+    outputs: Vec<ArgSpec>,
+) -> ExecSpec {
+    ExecSpec { file: "native".into(), param_layout, data_inputs, outputs }
+}
+
+fn layout(entries: &[(&str, usize)]) -> Vec<(String, usize)> {
+    entries.iter().map(|(g, c)| (g.to_string(), *c)).collect()
+}
+
+/// Build the full manifest (param groups + executable ABI) for one config.
+pub fn manifest_from_dims(name: &str, family: Family, dims: Dims) -> Manifest {
+    let d = dims.d_model;
+    let cross = family == Family::EncDec;
+    let tokens = dims.tokens(family);
+
+    let e_leaves = embed_leaves(family, &dims);
+    let b_leaves = block_leaves(d, dims.mlp_ratio, cross);
+    let h_leaves = head_leaves(family, &dims);
+
+    let mut param_groups = BTreeMap::new();
+    param_groups.insert("embed".to_string(), e_leaves.clone());
+    param_groups.insert("block".to_string(), b_leaves.clone());
+    param_groups.insert("head".to_string(), h_leaves.clone());
+    if cross {
+        param_groups.insert("enc_embed".to_string(), enc_embed_leaves(&dims));
+        param_groups
+            .insert("enc_block".to_string(), block_leaves(d, dims.mlp_ratio, false));
+    }
+
+    let x_shape = vec![dims.batch, tokens, d];
+    let mem_shape = vec![dims.batch, dims.seq_src, d];
+    let inputs_arg = match family {
+        Family::Vit => f32_arg(
+            "inputs",
+            vec![dims.batch, dims.channels, dims.image_size, dims.image_size],
+        ),
+        _ => i32_arg("inputs", vec![dims.batch, dims.seq]),
+    };
+    let labels_arg = match family {
+        Family::Vit => i32_arg("labels", vec![dims.batch]),
+        _ => i32_arg("labels", vec![dims.batch, dims.seq]),
+    };
+    let scalar_out = f32_arg("out", vec![]);
+
+    let mut executables = BTreeMap::new();
+
+    // ---- embed ----
+    executables.insert(
+        "embed_fwd".to_string(),
+        exec(
+            layout(&[("embed", 1)]),
+            vec![inputs_arg.clone()],
+            vec![f32_arg("x", x_shape.clone())],
+        ),
+    );
+    executables.insert(
+        "embed_vjp".to_string(),
+        exec(
+            layout(&[("embed", 1)]),
+            vec![inputs_arg.clone(), f32_arg("g", x_shape.clone())],
+            leaf_outputs(&e_leaves),
+        ),
+    );
+
+    // ---- block (decoder/self block) ----
+    let mut bf_data = vec![f32_arg("x", x_shape.clone())];
+    if cross {
+        bf_data.push(f32_arg("mem", mem_shape.clone()));
+    }
+    executables.insert(
+        "block_fwd".to_string(),
+        exec(
+            layout(&[("block", 1)]),
+            bf_data.clone(),
+            vec![f32_arg("h", x_shape.clone())],
+        ),
+    );
+    let mut bv_data = bf_data.clone();
+    bv_data.push(f32_arg("g", x_shape.clone()));
+    let mut bv_outs = vec![
+        f32_arg("h", x_shape.clone()),
+        f32_arg("dx", x_shape.clone()),
+    ];
+    if cross {
+        bv_outs.push(f32_arg("dmem", mem_shape.clone()));
+    }
+    bv_outs.extend(leaf_outputs(&b_leaves));
+    executables.insert(
+        "block_vjp".to_string(),
+        exec(layout(&[("block", 1)]), bv_data, bv_outs),
+    );
+
+    // ---- RevViT sub-branch executables (vit/gpt families) ----
+    if !cross {
+        for (fwd, vjp) in [("attn_fwd", "attn_vjp"), ("ffn_fwd", "ffn_vjp")] {
+            executables.insert(
+                fwd.to_string(),
+                exec(
+                    layout(&[("block", 1)]),
+                    vec![f32_arg("x", x_shape.clone())],
+                    vec![f32_arg("out", x_shape.clone())],
+                ),
+            );
+            let mut outs = vec![
+                f32_arg("out", x_shape.clone()),
+                f32_arg("dx", x_shape.clone()),
+            ];
+            outs.extend(leaf_outputs(&b_leaves));
+            executables.insert(
+                vjp.to_string(),
+                exec(
+                    layout(&[("block", 1)]),
+                    vec![f32_arg("x", x_shape.clone()), f32_arg("g", x_shape.clone())],
+                    outs,
+                ),
+            );
+        }
+    }
+
+    // ---- head + loss ----
+    executables.insert(
+        "head_loss_fwd".to_string(),
+        exec(
+            layout(&[("head", 1)]),
+            vec![f32_arg("x", x_shape.clone()), labels_arg.clone()],
+            vec![scalar_out.clone(), scalar_out.clone()],
+        ),
+    );
+    let mut hv_outs = vec![f32_arg("dx", x_shape.clone())];
+    hv_outs.extend(leaf_outputs(&h_leaves));
+    executables.insert(
+        "head_loss_vjp".to_string(),
+        exec(
+            layout(&[("head", 1)]),
+            vec![f32_arg("x", x_shape.clone()), labels_arg.clone()],
+            hv_outs,
+        ),
+    );
+
+    // ---- encoder side (encdec only) ----
+    if cross {
+        let src_arg = i32_arg("src", vec![dims.batch, dims.seq_src]);
+        let ee_leaves = enc_embed_leaves(&dims);
+        let eb_leaves = block_leaves(d, dims.mlp_ratio, false);
+        executables.insert(
+            "enc_embed_fwd".to_string(),
+            exec(
+                layout(&[("enc_embed", 1)]),
+                vec![src_arg.clone()],
+                vec![f32_arg("x", mem_shape.clone())],
+            ),
+        );
+        executables.insert(
+            "enc_embed_vjp".to_string(),
+            exec(
+                layout(&[("enc_embed", 1)]),
+                vec![src_arg.clone(), f32_arg("g", mem_shape.clone())],
+                leaf_outputs(&ee_leaves),
+            ),
+        );
+        executables.insert(
+            "enc_block_fwd".to_string(),
+            exec(
+                layout(&[("enc_block", 1)]),
+                vec![f32_arg("x", mem_shape.clone())],
+                vec![f32_arg("h", mem_shape.clone())],
+            ),
+        );
+        let mut ebv_outs = vec![
+            f32_arg("h", mem_shape.clone()),
+            f32_arg("dx", mem_shape.clone()),
+        ];
+        ebv_outs.extend(leaf_outputs(&eb_leaves));
+        executables.insert(
+            "enc_block_vjp".to_string(),
+            exec(
+                layout(&[("enc_block", 1)]),
+                vec![f32_arg("x", mem_shape.clone()), f32_arg("g", mem_shape.clone())],
+                ebv_outs,
+            ),
+        );
+    }
+
+    // ---- fused quantized inference (gamma is a runtime input) ----
+    let infer_layout = if cross {
+        layout(&[
+            ("enc_embed", 1),
+            ("enc_block", dims.n_enc_blocks),
+            ("embed", 1),
+            ("block", dims.n_blocks),
+            ("head", 1),
+        ])
+    } else {
+        layout(&[("embed", 1), ("block", dims.n_blocks), ("head", 1)])
+    };
+    let infer_data = if cross {
+        vec![
+            i32_arg("src", vec![dims.batch, dims.seq_src]),
+            i32_arg("tgt", vec![dims.batch, dims.seq]),
+            labels_arg.clone(),
+            f32_arg("gamma", vec![]),
+        ]
+    } else {
+        vec![inputs_arg, labels_arg, f32_arg("gamma", vec![])]
+    };
+    executables.insert(
+        "model_infer".to_string(),
+        exec(infer_layout, infer_data, vec![scalar_out.clone(), scalar_out]),
+    );
+
+    Manifest {
+        name: name.to_string(),
+        family,
+        dims,
+        param_groups,
+        executables,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_registered_configs_build() {
+        for name in config_names() {
+            let m = manifest_for(name).unwrap();
+            assert_eq!(&m.name, name);
+            assert!(m.n_params() > 0, "{name}");
+            for e in ["embed_fwd", "block_fwd", "block_vjp", "head_loss_fwd",
+                      "head_loss_vjp", "model_infer"] {
+                assert!(m.executables.contains_key(e), "{name} missing {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_order_matches_jax_sorted_flatten() {
+        // the ABI contract with python/compile/aot.py: dict keys sorted at
+        // every nesting level
+        let m = manifest_for("smoke_gpt").unwrap();
+        let names: Vec<&str> = m.param_groups["block"]
+            .iter()
+            .map(|l| l.name.as_str())
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                "attn.bk", "attn.bo", "attn.bq", "attn.bv", "attn.wk",
+                "attn.wo", "attn.wq", "attn.wv", "ffn.b1", "ffn.b2",
+                "ffn.w1", "ffn.w2", "ln1.bias", "ln1.scale", "ln2.bias",
+                "ln2.scale",
+            ]
+        );
+        let head: Vec<&str> =
+            m.param_groups["head"].iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(head, vec!["b", "ln_f.bias", "ln_f.scale", "w"]);
+        let embed: Vec<&str> =
+            m.param_groups["embed"].iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(embed, vec!["wpe", "wte"]);
+    }
+
+    #[test]
+    fn encdec_manifest_has_cross_leaves_and_enc_side() {
+        let m = manifest_for("smoke_encdec").unwrap();
+        assert_eq!(m.param_groups["block"].len(), 26);
+        assert_eq!(m.param_groups["enc_block"].len(), 16);
+        assert!(m.executables.contains_key("enc_block_vjp"));
+        assert!(!m.executables.contains_key("attn_fwd"));
+        // decoder block_vjp emits h, dx, dmem, then 26 leaf grads
+        assert_eq!(m.executables["block_vjp"].outputs.len(), 3 + 26);
+    }
+
+    #[test]
+    fn vit_embed_shapes() {
+        let m = manifest_for("smoke_vit").unwrap();
+        let tokens = m.dims.tokens(Family::Vit);
+        assert_eq!(tokens, 5); // (8/4)^2 + 1
+        let embed = &m.param_groups["embed"];
+        assert_eq!(embed[0].name, "cls");
+        assert_eq!(embed[1].shape, vec![tokens, 16]); // pos
+        assert_eq!(embed[3].shape, vec![4 * 4 * 3, 16]); // proj_w
+        // RevViT sub-branches exist for non-cross families
+        assert!(m.executables.contains_key("attn_vjp"));
+        assert_eq!(m.executables["attn_vjp"].outputs.len(), 2 + 16);
+    }
+}

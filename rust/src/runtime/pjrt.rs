@@ -1,0 +1,122 @@
+//! PJRT/XLA backend (cargo feature `pjrt`): load AOT HLO-text artifacts,
+//! compile once via the PJRT CPU client, execute from the hot loop.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client):
+//! `PjRtClient::cpu() -> HloModuleProto::from_text_file -> compile ->
+//! execute`.  Python is never on this path — the bundle produced by
+//! `make artifacts` is all the Rust binary needs.
+
+use super::{ArgValue, Backend, BackendKind, CompiledExec};
+use crate::model::{DType, ExecSpec, Manifest};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+fn arg_literal(arg: &ArgValue) -> Result<xla::Literal> {
+    match arg {
+        ArgValue::F32(t) => tensor_literal(t),
+        ArgValue::I32(t) => {
+            let lit = xla::Literal::vec1(t.data());
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+        ArgValue::Scalar(v) => Ok(xla::Literal::from(*v)),
+    }
+}
+
+/// The backend: one PJRT CPU client shared by every compiled executable.
+pub struct PjrtBackend {
+    client: Rc<xla::PjRtClient>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client: Rc::new(client) })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn compile(
+        &self,
+        _manifest: &Manifest,
+        exec_name: &str,
+        spec: &ExecSpec,
+        dir: &Path,
+    ) -> Result<Box<dyn CompiledExec>> {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {exec_name}"))?;
+        Ok(Box::new(PjrtExec {
+            name: exec_name.to_string(),
+            spec: spec.clone(),
+            exe,
+            _client: Rc::clone(&self.client),
+        }))
+    }
+}
+
+struct PjrtExec {
+    name: String,
+    spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Keeps the PJRT client alive as long as any executable is.
+    _client: Rc<xla::PjRtClient>,
+}
+
+impl CompiledExec for PjrtExec {
+    fn execute(&self, params: &[&Tensor], data: &[ArgValue]) -> Result<Vec<Tensor>> {
+        let mut lits = Vec::with_capacity(params.len() + data.len());
+        for p in params {
+            lits.push(tensor_literal(p)?);
+        }
+        for d in data {
+            lits.push(arg_literal(d)?);
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        let parts = result.to_tuple()?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.spec.outputs.len(),
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
+            ensure!(
+                spec.dtype == DType::F32,
+                "{}: only f32 outputs supported, got {:?}",
+                self.name,
+                spec.dtype
+            );
+            let v = lit.to_vec::<f32>()?;
+            out.push(Tensor::from_vec(&spec.shape, v)?);
+        }
+        Ok(out)
+    }
+}

@@ -9,12 +9,13 @@
 //!    (Fig. 2's phenomenon), while the quantized path is drift-free.
 //! 4. Training works end-to-end for all three families + RevViT baseline.
 //!
-//! Uses the smoke bundles (run `make artifacts` first).
+//! Runs on the native backend: the smoke bundles are synthesized from the
+//! in-crate registry, so no artifacts are needed.
 
 use bdia::baseline::RevVitTrainer;
 use bdia::config::{TrainConfig, TrainMode};
 use bdia::coordinator::{GammaPlan, Stack, StackKind, StackState, Trainer};
-use bdia::data::{make_dataset, Batch};
+use bdia::data::make_dataset;
 use bdia::model::ParamStore;
 use bdia::quant;
 use bdia::runtime::Runtime;
@@ -25,8 +26,8 @@ fn artifacts() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn have(bundle: &str) -> bool {
-    artifacts().join(bundle).join("manifest.json").exists()
+fn load(bundle: &str) -> Runtime {
+    Runtime::load(&artifacts(), bundle).expect("native bundle")
 }
 
 fn cfg_for(bundle: &str, mode: TrainMode) -> TrainConfig {
@@ -97,11 +98,7 @@ impl QuantRecorder for Stack<'_> {
 
 #[test]
 fn reversible_reconstruction_is_bitwise_exact() {
-    if !have("smoke_gpt") {
-        eprintln!("skipping: artifacts missing");
-        return;
-    }
-    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let rt = load("smoke_gpt");
     let params = ParamStore::init(&rt.manifest, 5);
     let stack = Stack::new(&rt, StackKind::Main).unwrap();
     let dims = &rt.manifest.dims;
@@ -124,10 +121,7 @@ fn reversible_reconstruction_is_bitwise_exact() {
 
 #[test]
 fn online_backward_gradients_match_store_all_bitwise() {
-    if !have("smoke_gpt") {
-        return;
-    }
-    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let rt = load("smoke_gpt");
     let params = ParamStore::init(&rt.manifest, 6);
     let stack = Stack::new(&rt, StackKind::Main).unwrap();
     let dims = &rt.manifest.dims;
@@ -162,10 +156,7 @@ fn online_backward_gradients_match_store_all_bitwise() {
 fn float_inversion_drift_grows_with_depth() {
     // the Fig.-2 phenomenon: eq.-16 float inversion error amplifies ~2x per
     // block, while the quantized path is exactly zero (previous tests).
-    if !have("smoke_gpt") {
-        return;
-    }
-    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let rt = load("smoke_gpt");
     let params = ParamStore::init(&rt.manifest, 7);
     let stack = Stack::new(&rt, StackKind::Main).unwrap();
     let dims = &rt.manifest.dims;
@@ -193,18 +184,18 @@ fn float_inversion_drift_grows_with_depth() {
         x_next = x_cur;
         x_cur = rec; // propagate the drifted value, like real online backprop
     }
+    // the 1/gamma = 2 factor amplifies f32 rounding multiplicatively, so
+    // the deepest reconstruction must be strictly worse than the first and
+    // clearly above single-op rounding noise (~1e-7 at these magnitudes)
     let first = drifts.first().copied().unwrap();
     let last = drifts.last().copied().unwrap();
     assert!(last > first, "drift must accumulate: {drifts:?}");
-    assert!(last > 1e-6, "deep drift should be visible: {drifts:?}");
+    assert!(last > 2e-7, "deep drift should be visible: {drifts:?}");
 }
 
 #[test]
 fn trainers_descend_all_families() {
     for bundle in ["smoke_vit", "smoke_gpt", "smoke_encdec"] {
-        if !have(bundle) {
-            continue;
-        }
         for mode in [TrainMode::BdiaReversible, TrainMode::Vanilla] {
             let cfg = cfg_for(bundle, mode);
             let mut tr = Trainer::new(cfg.clone()).unwrap();
@@ -231,9 +222,6 @@ fn trainers_descend_all_families() {
 
 #[test]
 fn reversible_stores_less_than_vanilla_live() {
-    if !have("smoke_gpt") {
-        return;
-    }
     let run = |mode| {
         let cfg = cfg_for("smoke_gpt", mode);
         let mut tr = Trainer::new(cfg.clone()).unwrap();
@@ -246,7 +234,7 @@ fn reversible_stores_less_than_vanilla_live() {
     // smoke_gpt: K=4 blocks -> store-all keeps 5 tensors, reversible keeps 2
     // (+ side bits). Live numbers, not the analytic model.
     assert!(rev < van, "reversible {rev} vs vanilla {van}");
-    let dims = Runtime::load(&artifacts(), "smoke_gpt").unwrap().manifest.dims;
+    let dims = load("smoke_gpt").manifest.dims;
     let btd = dims.batch * dims.seq * dims.d_model * 4;
     assert_eq!(van, (dims.n_blocks + 1) * btd);
     let side = (dims.n_blocks - 1) * (btd / 4).div_ceil(64) * 8;
@@ -255,9 +243,6 @@ fn reversible_stores_less_than_vanilla_live() {
 
 #[test]
 fn revvit_trains_and_inversion_drift_is_small_but_nonzero() {
-    if !have("smoke_vit") {
-        return;
-    }
     let cfg = cfg_for("smoke_vit", TrainMode::RevVit);
     let mut tr = RevVitTrainer::new(cfg.clone()).unwrap();
     let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), bdia::model::Family::Vit)
@@ -278,9 +263,6 @@ fn revvit_trains_and_inversion_drift_is_small_but_nonzero() {
 
 #[test]
 fn bdia_reversible_rejects_non_half_gamma() {
-    if !have("smoke_gpt") {
-        return;
-    }
     let mut cfg = cfg_for("smoke_gpt", TrainMode::BdiaReversible);
     cfg.gamma_mag = 0.25;
     assert!(Trainer::new(cfg).is_err(), "|gamma| != 0.5 must be rejected");
@@ -288,9 +270,6 @@ fn bdia_reversible_rejects_non_half_gamma() {
 
 #[test]
 fn bdia_float_supports_ablation_gammas() {
-    if !have("smoke_gpt") {
-        return;
-    }
     for mag in [0.0f32, 0.25, 0.5, 0.6] {
         let mut cfg = cfg_for("smoke_gpt", TrainMode::BdiaFloat);
         cfg.gamma_mag = mag;
@@ -305,9 +284,6 @@ fn bdia_float_supports_ablation_gammas() {
 
 #[test]
 fn eval_gamma_sweep_runs() {
-    if !have("smoke_vit") {
-        return;
-    }
     let cfg = cfg_for("smoke_vit", TrainMode::Vanilla);
     let tr = Trainer::new(cfg.clone()).unwrap();
     let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family).unwrap();
@@ -321,10 +297,7 @@ fn eval_gamma_sweep_runs() {
 fn corrupted_side_info_detected_or_changes_grads() {
     // failure injection: the quant layer already unit-tests bit flips; at
     // system level we check a *missing* side-info entry fails loudly.
-    if !have("smoke_gpt") {
-        return;
-    }
-    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let rt = load("smoke_gpt");
     let params = ParamStore::init(&rt.manifest, 8);
     let stack = Stack::new(&rt, StackKind::Main).unwrap();
     let dims = &rt.manifest.dims;

@@ -1,0 +1,452 @@
+//! Native-backend property tests for the paper's two headline claims, plus
+//! finite-difference validation of the hand-written VJPs.
+//!
+//! 1. **Bit-exact reversibility** (title claim): `forward_quant` →
+//!    `reconstruct_all` recovers every intermediate activation bit-for-bit
+//!    from the two boundary activations + 1-bit side info, across random
+//!    seeds, gamma plans and block counts (eqs. 18-21 / 24).
+//! 2. **Ensemble/inference claim** (§4.2): with E[gamma] = 0 at inference,
+//!    the BDIA stack collapses to the vanilla transformer forward up to the
+//!    documented activation-quantization tolerance (grid step 2^-l).
+//! 3. The native executables' VJPs agree with central finite differences —
+//!    the gradient math has no JAX oracle here, so the tests carry one.
+//!
+//! Everything runs on synthesized manifests: no artifacts, no XLA.
+
+use bdia::coordinator::{GammaPlan, Stack, StackKind};
+use bdia::model::{Dims, Family, ParamStore};
+use bdia::quant;
+use bdia::runtime::native::registry::manifest_from_dims;
+use bdia::runtime::{ArgValue, Runtime};
+use bdia::tensor::{IntTensor, Rng, Tensor};
+
+fn tiny_gpt_dims(n_blocks: usize) -> Dims {
+    Dims {
+        d_model: 8,
+        n_heads: 2,
+        n_blocks,
+        n_enc_blocks: 0,
+        mlp_ratio: 2,
+        batch: 2,
+        lbits: 9,
+        image_size: 32,
+        patch: 4,
+        channels: 3,
+        n_classes: 10,
+        seq: 4,
+        seq_src: 0,
+        vocab: 7,
+    }
+}
+
+fn gpt_runtime(n_blocks: usize) -> Runtime {
+    let m = manifest_from_dims("prop_gpt", Family::Gpt, tiny_gpt_dims(n_blocks));
+    Runtime::from_native_manifest(m).expect("native runtime")
+}
+
+/// Store-all oracle of the quantized forward (eqs. 18, 19, 21).
+fn quant_forward_oracle(
+    stack: &Stack,
+    params: &ParamStore,
+    x0: &Tensor,
+    plan: &GammaPlan,
+) -> Vec<Tensor> {
+    let f = stack.fixed;
+    let mut x0q = x0.clone();
+    quant::quantize_activation(&mut x0q, f);
+    let h0 = stack.debug_call_fwd(params, 0, &x0q, None).unwrap();
+    let x1 = quant::first_step_quant(&x0q, &h0, f).unwrap();
+    let mut xs = vec![x0q, x1];
+    for k in 1..stack.n_blocks {
+        let h = stack.debug_call_fwd(params, k, &xs[k], None).unwrap();
+        let signs = plan.signs(k).unwrap();
+        let (nx, _) =
+            quant::bdia_forward_quant(&xs[k - 1], &xs[k], &h, &signs, f).unwrap();
+        xs.push(nx);
+    }
+    xs
+}
+
+// ---------------------------------------------------------------------------
+// 1. bit-exact reversibility across seeds, plans, block counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_forward_quant_reconstructs_bit_identically_across_depths_and_seeds() {
+    for n_blocks in [2usize, 3, 5, 8] {
+        let rt = gpt_runtime(n_blocks);
+        let dims = rt.manifest.dims.clone();
+        let stack = Stack::new(&rt, StackKind::Main).unwrap();
+        for seed in 0..6u64 {
+            let params = ParamStore::init(&rt.manifest, seed ^ 0x5eed);
+            let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15));
+            let x0 = Tensor::normal(
+                &[dims.batch, dims.seq, dims.d_model],
+                1.0 + seed as f32 * 0.5,
+                &mut rng,
+            );
+            let plan = GammaPlan::draw(&mut rng, n_blocks, dims.batch, 0.5);
+
+            let oracle = quant_forward_oracle(&stack, &params, &x0, &plan);
+            let state = stack.forward_quant(&params, x0, None, &plan).unwrap();
+            let rec = stack.reconstruct_all(&params, &state, None, &plan).unwrap();
+
+            assert_eq!(oracle.len(), rec.len(), "K={n_blocks} seed={seed}");
+            for (k, (a, b)) in oracle.iter().zip(&rec).enumerate() {
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "x_{k} drifted (K={n_blocks}, seed={seed})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_online_backward_equals_store_all_across_depths() {
+    use bdia::coordinator::StackState;
+    for n_blocks in [2usize, 4, 6] {
+        let rt = gpt_runtime(n_blocks);
+        let dims = rt.manifest.dims.clone();
+        let stack = Stack::new(&rt, StackKind::Main).unwrap();
+        for seed in 0..3u64 {
+            let params = ParamStore::init(&rt.manifest, seed + 100);
+            let mut rng = Rng::new(seed + 7);
+            let x0 = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+            let plan = GammaPlan::draw(&mut rng, n_blocks, dims.batch, 0.5);
+            let gx = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+
+            let state = stack.forward_quant(&params, x0.clone(), None, &plan).unwrap();
+            let ga = stack.backward(&params, state, None, &plan, gx.clone()).unwrap();
+
+            let xs = quant_forward_oracle(&stack, &params, &x0, &plan);
+            let gb = stack
+                .backward(&params, StackState::Full { xs }, None, &plan, gx)
+                .unwrap();
+
+            assert_eq!(ga.dx0.data(), gb.dx0.data(), "K={n_blocks} seed={seed}");
+            for (da, db) in ga.dparams.iter().zip(&gb.dparams) {
+                for (a, b) in da.iter().zip(db) {
+                    assert_eq!(a.data(), b.data(), "K={n_blocks} seed={seed}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. ensemble claim: E[gamma] = 0 inference == vanilla forward (+- Q_l)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gamma_zero_inference_matches_vanilla_forward_within_quant_tolerance() {
+    let rt = gpt_runtime(4);
+    let dims = rt.manifest.dims.clone();
+    let params = ParamStore::init(&rt.manifest, 11);
+    let mut rng = Rng::new(9);
+    let toks: Vec<i32> = (0..dims.batch * dims.seq)
+        .map(|_| rng.below(dims.vocab) as i32)
+        .collect();
+    let tokens = IntTensor::from_vec(&[dims.batch, dims.seq], toks).unwrap();
+
+    // vanilla float forward: embed -> plain residual blocks -> head
+    let embed = rt.exec("embed_fwd").unwrap();
+    let refs = params.refs_for(&embed.spec, 0).unwrap();
+    let mut x_f = embed.call(&refs, &[ArgValue::I32(&tokens)]).unwrap().remove(0);
+    let fwd = rt.exec("block_fwd").unwrap();
+    for k in 0..dims.n_blocks {
+        let refs = params.refs_for(&fwd.spec, k).unwrap();
+        let h = fwd.call(&refs, &[ArgValue::F32(&x_f)]).unwrap().remove(0);
+        x_f.add_assign(&h).unwrap();
+    }
+    let head = rt.exec("head_loss_fwd").unwrap();
+    let hrefs = params.refs_for(&head.spec, 0).unwrap();
+    let outs = head
+        .call(&hrefs, &[ArgValue::F32(&x_f), ArgValue::I32(&tokens)])
+        .unwrap();
+    let loss_float = outs[0].scalar_value().unwrap();
+
+    // quantized E[gamma]=0 inference: same architecture + Q_l only
+    let f = quant::Fixed::new(dims.lbits);
+    let refs = params.refs_for(&embed.spec, 0).unwrap();
+    let mut x_q = embed.call(&refs, &[ArgValue::I32(&tokens)]).unwrap().remove(0);
+    quant::quantize_activation(&mut x_q, f);
+    for k in 0..dims.n_blocks {
+        let refs = params.refs_for(&fwd.spec, k).unwrap();
+        let h = fwd.call(&refs, &[ArgValue::F32(&x_q)]).unwrap().remove(0);
+        if k == 0 {
+            x_q = quant::first_step_quant(&x_q, &h, f).unwrap();
+        } else {
+            let mut nx = x_q.clone();
+            nx.add_assign(&h).unwrap();
+            quant::quantize_activation(&mut nx, f);
+            x_q = nx;
+        }
+    }
+    // documented tolerance: one grid step per quantization event, amplified
+    // by the (locally ~Lipschitz-1) blocks; (K+1) events in total.
+    let step = f.step() as f32;
+    let tol_act = (dims.n_blocks + 1) as f32 * step * 8.0;
+    let act_diff = x_f.max_abs_diff(&x_q).unwrap();
+    assert!(
+        act_diff < tol_act,
+        "activation divergence {act_diff} exceeds quant tolerance {tol_act}"
+    );
+
+    let outs = head
+        .call(&hrefs, &[ArgValue::F32(&x_q), ArgValue::I32(&tokens)])
+        .unwrap();
+    let loss_quant = outs[0].scalar_value().unwrap();
+    assert!(
+        (loss_float - loss_quant).abs() < 0.05,
+        "loss diverged: float {loss_float} vs quantized {loss_quant}"
+    );
+
+    // and the fused model_infer executable agrees with the per-block path
+    let infer = rt.exec("model_infer").unwrap();
+    let irefs = params.refs_for(&infer.spec, 0).unwrap();
+    let outs = infer
+        .call(
+            &irefs,
+            &[
+                ArgValue::I32(&tokens),
+                ArgValue::I32(&tokens),
+                ArgValue::Scalar(0.0),
+            ],
+        )
+        .unwrap();
+    let loss_fused = outs[0].scalar_value().unwrap();
+    assert!(
+        (loss_fused - loss_quant).abs() < 1e-5,
+        "fused {loss_fused} vs per-block {loss_quant}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. finite-difference validation of the native VJPs
+// ---------------------------------------------------------------------------
+
+/// <g, h(x)> with f64 accumulation (reduces fd noise).
+fn dot(g: &Tensor, h: &Tensor) -> f64 {
+    g.data()
+        .iter()
+        .zip(h.data())
+        .map(|(a, b)| (*a as f64) * (*b as f64))
+        .sum()
+}
+
+fn fd_close(fd: f32, an: f32, what: &str) {
+    let tol = 3e-3 + 0.03 * an.abs();
+    assert!(
+        (fd - an).abs() < tol,
+        "{what}: finite difference {fd} vs analytic {an}"
+    );
+}
+
+#[test]
+fn block_vjp_input_grad_matches_finite_difference() {
+    let rt = gpt_runtime(2);
+    let dims = rt.manifest.dims.clone();
+    let ps = ParamStore::init(&rt.manifest, 31);
+    let mut rng = Rng::new(13);
+    let shape = [dims.batch, dims.seq, dims.d_model];
+    let x = Tensor::normal(&shape, 1.0, &mut rng);
+    let g = Tensor::normal(&shape, 1.0, &mut rng);
+
+    let vjp = rt.exec("block_vjp").unwrap();
+    let refs = ps.refs_for(&vjp.spec, 0).unwrap();
+    let outs = vjp
+        .call(&refs, &[ArgValue::F32(&x), ArgValue::F32(&g)])
+        .unwrap();
+    let dx = &outs[1];
+
+    let fwd = rt.exec("block_fwd").unwrap();
+    let frefs = ps.refs_for(&fwd.spec, 0).unwrap();
+    let probe = |xs: &Tensor| -> f64 {
+        let h = fwd.call(&frefs, &[ArgValue::F32(xs)]).unwrap().remove(0);
+        dot(&g, &h)
+    };
+    let eps = 1e-2f32;
+    let n = x.len();
+    for idx in [0usize, 7, n / 2, n - 1] {
+        let mut xp = x.clone();
+        xp.data_mut()[idx] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[idx] -= eps;
+        let fd = ((probe(&xp) - probe(&xm)) / (2.0 * eps as f64)) as f32;
+        fd_close(fd, dx.data()[idx], &format!("block dx[{idx}]"));
+    }
+}
+
+#[test]
+fn block_vjp_param_grads_match_finite_difference() {
+    let rt = gpt_runtime(2);
+    let dims = rt.manifest.dims.clone();
+    let mut ps = ParamStore::init(&rt.manifest, 37);
+    let mut rng = Rng::new(17);
+    let shape = [dims.batch, dims.seq, dims.d_model];
+    let x = Tensor::normal(&shape, 1.0, &mut rng);
+    let g = Tensor::normal(&shape, 1.0, &mut rng);
+
+    let vjp = rt.exec("block_vjp").unwrap();
+    let fwd = rt.exec("block_fwd").unwrap();
+    let grads: Vec<Tensor> = {
+        let refs = ps.refs_for(&vjp.spec, 1).unwrap();
+        let mut outs = vjp
+            .call(&refs, &[ArgValue::F32(&x), ArgValue::F32(&g)])
+            .unwrap();
+        outs.drain(0..2); // h, dx
+        outs
+    };
+
+    // leaf indices in the block group: attn.wq = 6, ffn.w1 = 10,
+    // ln1.scale = 13, attn.bv = 3 (flatten order)
+    for (leaf_idx, probe_elem) in [(6usize, 5usize), (10, 3), (13, 2), (3, 1)] {
+        let eps = 1e-2f32;
+        let mut run = |delta: f32| -> f64 {
+            ps.leaves_mut("block", 1)[leaf_idx].data_mut()[probe_elem] += delta;
+            let refs = ps.refs_for(&fwd.spec, 1).unwrap();
+            let h = fwd.call(&refs, &[ArgValue::F32(&x)]).unwrap().remove(0);
+            ps.leaves_mut("block", 1)[leaf_idx].data_mut()[probe_elem] -= delta;
+            dot(&g, &h)
+        };
+        let fd = ((run(eps) - run(-eps)) / (2.0 * eps as f64)) as f32;
+        let an = grads[leaf_idx].data()[probe_elem];
+        fd_close(fd, an, &format!("block leaf {leaf_idx}[{probe_elem}]"));
+    }
+}
+
+#[test]
+fn head_loss_vjp_matches_finite_difference() {
+    let rt = gpt_runtime(2);
+    let dims = rt.manifest.dims.clone();
+    let mut ps = ParamStore::init(&rt.manifest, 41);
+    let mut rng = Rng::new(19);
+    let shape = [dims.batch, dims.seq, dims.d_model];
+    let x = Tensor::normal(&shape, 1.0, &mut rng);
+    let labels = IntTensor::from_vec(
+        &[dims.batch, dims.seq],
+        (0..dims.batch * dims.seq)
+            .map(|i| (i % dims.vocab) as i32)
+            .collect(),
+    )
+    .unwrap();
+
+    let vjp = rt.exec("head_loss_vjp").unwrap();
+    let refs = ps.refs_for(&vjp.spec, 0).unwrap();
+    let outs = vjp
+        .call(&refs, &[ArgValue::F32(&x), ArgValue::I32(&labels)])
+        .unwrap();
+    let dx = outs[0].clone();
+    let dw = outs[4].clone(); // head leaf order: b, ln_f.bias, ln_f.scale, w
+
+    let fwd = rt.exec("head_loss_fwd").unwrap();
+    let eps = 1e-2f32;
+    // input gradient
+    {
+        let refs = ps.refs_for(&fwd.spec, 0).unwrap();
+        let probe = |xs: &Tensor| -> f64 {
+            fwd.call(&refs, &[ArgValue::F32(xs), ArgValue::I32(&labels)])
+                .unwrap()[0]
+                .scalar_value()
+                .unwrap() as f64
+        };
+        let n = x.len();
+        for idx in [0usize, n / 3, n - 1] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let fd = ((probe(&xp) - probe(&xm)) / (2.0 * eps as f64)) as f32;
+            fd_close(fd, dx.data()[idx], &format!("head dx[{idx}]"));
+        }
+    }
+    // w gradient (leaf 3)
+    for elem in [0usize, 9, 20] {
+        let mut run = |delta: f32| -> f64 {
+            ps.leaves_mut("head", 0)[3].data_mut()[elem] += delta;
+            let refs = ps.refs_for(&fwd.spec, 0).unwrap();
+            let l = fwd
+                .call(&refs, &[ArgValue::F32(&x), ArgValue::I32(&labels)])
+                .unwrap()[0]
+                .scalar_value()
+                .unwrap() as f64;
+            ps.leaves_mut("head", 0)[3].data_mut()[elem] -= delta;
+            l
+        };
+        let fd = ((run(eps) - run(-eps)) / (2.0 * eps as f64)) as f32;
+        fd_close(fd, dw.data()[elem], &format!("head dw[{elem}]"));
+    }
+}
+
+#[test]
+fn embed_vjp_matches_finite_difference() {
+    let rt = gpt_runtime(2);
+    let dims = rt.manifest.dims.clone();
+    let mut ps = ParamStore::init(&rt.manifest, 43);
+    let mut rng = Rng::new(23);
+    let toks: Vec<i32> = (0..dims.batch * dims.seq)
+        .map(|_| rng.below(dims.vocab) as i32)
+        .collect();
+    let tokens = IntTensor::from_vec(&[dims.batch, dims.seq], toks.clone()).unwrap();
+    let g = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+
+    let vjp = rt.exec("embed_vjp").unwrap();
+    let refs = ps.refs_for(&vjp.spec, 0).unwrap();
+    let outs = vjp
+        .call(&refs, &[ArgValue::I32(&tokens), ArgValue::F32(&g)])
+        .unwrap();
+    assert_eq!(outs.len(), 2); // dwpe, dwte
+    let dwte = outs[1].clone();
+
+    // probe a wte row that is actually used
+    let used_id = toks[0] as usize;
+    let fwd = rt.exec("embed_fwd").unwrap();
+    let eps = 1e-2f32;
+    for j in 0..dims.d_model {
+        let elem = used_id * dims.d_model + j;
+        let mut run = |delta: f32| -> f64 {
+            ps.leaves_mut("embed", 0)[1].data_mut()[elem] += delta;
+            let refs = ps.refs_for(&fwd.spec, 0).unwrap();
+            let x = fwd.call(&refs, &[ArgValue::I32(&tokens)]).unwrap().remove(0);
+            ps.leaves_mut("embed", 0)[1].data_mut()[elem] -= delta;
+            dot(&g, &x)
+        };
+        let fd = ((run(eps) - run(-eps)) / (2.0 * eps as f64)) as f32;
+        fd_close(fd, dwte.data()[elem], &format!("dwte[{elem}]"));
+    }
+}
+
+#[test]
+fn encdec_native_train_step_descends_and_routes_dmem() {
+    // one end-to-end encdec step on the native backend exercises the
+    // cross-attention vjp + dmem accumulation path
+    use bdia::config::{TrainConfig, TrainMode};
+    use bdia::coordinator::Trainer;
+    use bdia::data::make_dataset;
+    let cfg = TrainConfig {
+        model: "smoke_encdec".into(),
+        mode: TrainMode::BdiaReversible,
+        dataset: "synth_translation".into(),
+        steps: 3,
+        eval_every: 0,
+        log_every: 1,
+        train_examples: 32,
+        val_examples: 8,
+        lr: 1e-3,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(cfg.clone()).unwrap();
+    let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family).unwrap();
+    let mut first = None;
+    for step in 0..cfg.steps {
+        let b = ds.train_batch(step);
+        let s = tr.train_step(&b).unwrap();
+        assert!(s.loss.is_finite() && s.grad_norm > 0.0);
+        first.get_or_insert(s.loss);
+    }
+    let b0 = ds.train_batch(0);
+    let fs = tr.forward(&b0).unwrap();
+    assert!(fs.loss < first.unwrap() + 0.1, "encdec did not descend");
+}
