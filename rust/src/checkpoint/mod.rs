@@ -1,0 +1,523 @@
+//! Checkpoint persistence: a versioned, checksummed, dependency-free binary
+//! format for trained state.
+//!
+//! A checkpoint carries everything needed to either *serve* a model (the
+//! [`ParamStore`]) or *resume* training bit-exactly (optimizer moments +
+//! step counter + the per-sample gamma RNG state).  The paper's point is
+//! that BDIA inference is a standard transformer (eqs. 18–22); this module
+//! is what lets `bdia eval`/`bdia serve` run the weights `bdia train`
+//! produced instead of a fresh seed.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic  "BDIACKPT"              8 bytes
+//! version u32                    format revision (currently 1)
+//! crc32   u32                    IEEE CRC-32 over the body
+//! body_len u64                   byte length of the body
+//! body    ...                    model name, step, rng, stores
+//! ```
+//!
+//! f32 payloads are written as raw IEEE-754 bit patterns, so a save→load
+//! round trip is bit-exact (including negative zero and NaN payloads).
+//! Truncation is caught by `body_len`, corruption by the CRC; both produce
+//! a clear error instead of silently-wrong weights.
+
+use crate::model::ParamStore;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"BDIACKPT";
+pub const VERSION: u32 = 1;
+/// magic + version + crc32 + body_len
+const HEADER_LEN: usize = 8 + 4 + 4 + 8;
+
+/// Snapshot of a [`crate::tensor::Rng`] (state word + cached Box–Muller
+/// spare), so resumed training draws the exact gamma sequence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RngSnapshot {
+    pub state: u64,
+    pub spare: Option<f32>,
+}
+
+/// Optimizer state: step count plus first/second moment stores.
+pub struct OptState {
+    pub t: u64,
+    pub m: ParamStore,
+    pub v: ParamStore,
+}
+
+/// A loaded checkpoint (owned).
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub rng_gamma: RngSnapshot,
+    pub params: ParamStore,
+    /// Absent for inference-only exports.
+    pub opt: Option<OptState>,
+}
+
+/// Borrowed view for saving (avoids cloning multi-MB stores).
+pub struct CheckpointRef<'a> {
+    pub model: &'a str,
+    pub step: u64,
+    pub rng_gamma: RngSnapshot,
+    pub params: &'a ParamStore,
+    pub opt: Option<(u64, &'a ParamStore, &'a ParamStore)>,
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected) — no external crates offline
+// ---------------------------------------------------------------------------
+
+fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, e) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *e = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// little-endian body writer / reader
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_store(out: &mut Vec<u8>, store: &ParamStore) {
+    put_u32(out, store.groups.len() as u32);
+    for (name, insts) in &store.groups {
+        put_str(out, name);
+        put_u32(out, insts.len() as u32);
+        let leaves = insts.first().map_or(0, Vec::len);
+        put_u32(out, leaves as u32);
+        if let Some(first) = insts.first() {
+            for t in first {
+                put_u32(out, t.shape().len() as u32);
+                for &d in t.shape() {
+                    put_u64(out, d as u64);
+                }
+            }
+        }
+        for inst in insts {
+            debug_assert_eq!(inst.len(), leaves);
+            for t in inst {
+                for &v in t.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated checkpoint body (wanted {n} bytes at offset {}, {} left)",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= 1 << 20, "unreasonable string length {n} in checkpoint");
+        Ok(std::str::from_utf8(self.take(n)?)
+            .context("non-utf8 string in checkpoint")?
+            .to_string())
+    }
+
+    fn store(&mut self) -> Result<ParamStore> {
+        let n_groups = self.u32()? as usize;
+        ensure!(n_groups <= 1 << 16, "unreasonable group count {n_groups}");
+        let mut groups = BTreeMap::new();
+        for _ in 0..n_groups {
+            let name = self.str()?;
+            let n_inst = self.u32()? as usize;
+            let n_leaves = self.u32()? as usize;
+            ensure!(
+                n_inst <= 1 << 20 && n_leaves <= 1 << 20,
+                "unreasonable store geometry ({n_inst} instances, {n_leaves} leaves)"
+            );
+            let mut shapes = Vec::with_capacity(n_leaves);
+            for _ in 0..n_leaves {
+                let ndim = self.u32()? as usize;
+                ensure!(ndim <= 8, "unreasonable tensor rank {ndim}");
+                let mut shape = Vec::with_capacity(ndim);
+                for _ in 0..ndim {
+                    shape.push(self.u64()? as usize);
+                }
+                ensure!(
+                    shape.iter().product::<usize>() <= 1 << 32,
+                    "unreasonable tensor size in checkpoint"
+                );
+                shapes.push(shape);
+            }
+            let mut insts = Vec::with_capacity(n_inst);
+            for _ in 0..n_inst {
+                let mut inst = Vec::with_capacity(n_leaves);
+                for shape in &shapes {
+                    let n: usize = shape.iter().product();
+                    let raw = self.take(n * 4)?;
+                    let data: Vec<f32> = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    inst.push(Tensor::from_vec(shape, data)?);
+                }
+                insts.push(inst);
+            }
+            groups.insert(name, insts);
+        }
+        Ok(ParamStore { groups })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode / decode
+// ---------------------------------------------------------------------------
+
+/// Serialize to the framed byte format (header + checksummed body).
+pub fn to_bytes(ckpt: &CheckpointRef) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_str(&mut body, ckpt.model);
+    put_u64(&mut body, ckpt.step);
+    put_u64(&mut body, ckpt.rng_gamma.state);
+    match ckpt.rng_gamma.spare {
+        Some(v) => {
+            body.push(1);
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        None => {
+            body.push(0);
+            body.extend_from_slice(&0f32.to_le_bytes());
+        }
+    }
+    put_store(&mut body, ckpt.params);
+    match ckpt.opt {
+        Some((t, m, v)) => {
+            body.push(1);
+            put_u64(&mut body, t);
+            put_store(&mut body, m);
+            put_store(&mut body, v);
+        }
+        None => body.push(0),
+    }
+
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, crc32(&body));
+    put_u64(&mut out, body.len() as u64);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Parse the framed byte format, verifying magic, version, length and CRC.
+pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "not a bdia checkpoint: {} bytes is shorter than the header",
+        bytes.len()
+    );
+    ensure!(
+        &bytes[..8] == MAGIC,
+        "not a bdia checkpoint (bad magic; expected {:?})",
+        std::str::from_utf8(MAGIC).unwrap()
+    );
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    ensure!(
+        version == VERSION,
+        "unsupported checkpoint version {version} (this build reads {VERSION})"
+    );
+    let crc_stored = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let body_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let body = &bytes[HEADER_LEN..];
+    ensure!(
+        body.len() == body_len,
+        "truncated checkpoint: header promises {body_len} body bytes, file has {}",
+        body.len()
+    );
+    let crc_actual = crc32(body);
+    ensure!(
+        crc_actual == crc_stored,
+        "checkpoint checksum mismatch (stored {crc_stored:#010x}, computed \
+         {crc_actual:#010x}) — the file is corrupted"
+    );
+
+    let mut r = Reader { buf: body, pos: 0 };
+    let model = r.str()?;
+    let step = r.u64()?;
+    let rng_state = r.u64()?;
+    let has_spare = r.take(1)?[0];
+    let spare_bits = r.f32()?;
+    let rng_gamma = RngSnapshot {
+        state: rng_state,
+        spare: (has_spare != 0).then_some(spare_bits),
+    };
+    let params = r.store()?;
+    let opt = match r.take(1)?[0] {
+        0 => None,
+        1 => {
+            let t = r.u64()?;
+            let m = r.store()?;
+            let v = r.store()?;
+            Some(OptState { t, m, v })
+        }
+        other => bail!("bad optimizer-state flag {other} in checkpoint"),
+    };
+    ensure!(r.pos == body.len(), "trailing garbage after checkpoint body");
+    Ok(Checkpoint { model, step, rng_gamma, params, opt })
+}
+
+/// Write a checkpoint atomically: tmp file, fsync, rename, directory fsync
+/// — so a crash mid-write never leaves a torn checkpoint at `path`, and a
+/// crash right after the rename cannot roll back to the old inode with the
+/// new name (the rolling `-latest.ckpt` overwrite depends on this).
+pub fn save(path: &Path, ckpt: &CheckpointRef) -> Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let bytes = to_bytes(ckpt);
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            // best-effort: persist the rename itself (POSIX allows fsync on
+            // a read-only directory handle; harmless where unsupported)
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read and verify a checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::Json;
+    use crate::model::Manifest;
+
+    fn toy_store(seed: u64) -> ParamStore {
+        let text = r#"{
+          "name": "toy", "family": "gpt",
+          "dims": {"d_model": 4, "n_heads": 2, "n_blocks": 2,
+                   "n_enc_blocks": 0, "mlp_ratio": 2, "batch": 2, "lbits": 9,
+                   "image_size": 32, "patch": 4, "channels": 3,
+                   "n_classes": 10, "seq": 8, "seq_src": 0, "vocab": 16},
+          "param_groups": {
+            "embed": [{"name": "wte", "shape": [16, 4], "init": "normal:0.02"}],
+            "block": [{"name": "w", "shape": [4, 4], "init": "normal:1.0"},
+                      {"name": "b", "shape": [4], "init": "zeros"}]
+          },
+          "executables": {}, "source_hash": "x"
+        }"#;
+        let m = Manifest::from_json(&Json::parse(text).unwrap()).unwrap();
+        ParamStore::init(&m, seed)
+    }
+
+    fn bit_equal(a: &ParamStore, b: &ParamStore) -> bool {
+        if !a.same_structure(b) {
+            return false;
+        }
+        a.groups.values().zip(b.groups.values()).all(|(ia, ib)| {
+            ia.iter().zip(ib).all(|(la, lb)| {
+                la.iter().zip(lb).all(|(ta, tb)| {
+                    ta.data()
+                        .iter()
+                        .zip(tb.data())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+                })
+            })
+        })
+    }
+
+    fn refr<'a>(
+        params: &'a ParamStore,
+        opt: Option<(u64, &'a ParamStore, &'a ParamStore)>,
+    ) -> CheckpointRef<'a> {
+        CheckpointRef {
+            model: "toy",
+            step: 17,
+            rng_gamma: RngSnapshot { state: 0xDEAD_BEEF, spare: Some(-0.5) },
+            params,
+            opt,
+        }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_with_and_without_opt() {
+        let params = toy_store(3);
+        let m = toy_store(4);
+        let v = toy_store(5);
+        for opt in [None, Some((9u64, &m, &v))] {
+            let bytes = to_bytes(&refr(&params, opt));
+            let ck = from_bytes(&bytes).unwrap();
+            assert_eq!(ck.model, "toy");
+            assert_eq!(ck.step, 17);
+            assert_eq!(
+                ck.rng_gamma,
+                RngSnapshot { state: 0xDEAD_BEEF, spare: Some(-0.5) }
+            );
+            assert!(bit_equal(&ck.params, &params));
+            match (&ck.opt, opt) {
+                (None, None) => {}
+                (Some(o), Some((t, em, ev))) => {
+                    assert_eq!(o.t, t);
+                    assert!(bit_equal(&o.m, em));
+                    assert!(bit_equal(&o.v, ev));
+                }
+                _ => panic!("opt presence mismatch"),
+            }
+            // re-save of the load is byte-identical (canonical encoding)
+            let ck_opt = ck.opt.as_ref().map(|o| (o.t, &o.m, &o.v));
+            let again = to_bytes(&CheckpointRef {
+                model: &ck.model,
+                step: ck.step,
+                rng_gamma: ck.rng_gamma,
+                params: &ck.params,
+                opt: ck_opt,
+            });
+            assert_eq!(bytes, again);
+        }
+    }
+
+    #[test]
+    fn nan_and_negative_zero_survive() {
+        let mut params = toy_store(1);
+        params.for_each_mut(|t| {
+            let d = t.data_mut();
+            d[0] = f32::NAN;
+            if d.len() > 1 {
+                d[1] = -0.0;
+            }
+        });
+        let bytes = to_bytes(&refr(&params, None));
+        let ck = from_bytes(&bytes).unwrap();
+        assert!(bit_equal(&ck.params, &params));
+    }
+
+    #[test]
+    fn truncation_is_rejected_with_clear_error() {
+        let params = toy_store(2);
+        let bytes = to_bytes(&refr(&params, None));
+        for cut in [bytes.len() - 1, bytes.len() / 2, HEADER_LEN, 5] {
+            let err = from_bytes(&bytes[..cut]).unwrap_err();
+            let msg = format!("{err:#}").to_lowercase();
+            assert!(
+                msg.contains("truncated") || msg.contains("shorter"),
+                "cut {cut}: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected_with_checksum_error() {
+        let params = toy_store(2);
+        let bytes = to_bytes(&refr(&params, None));
+        // flip one payload bit deep in the body
+        let mut bad = bytes.clone();
+        let idx = HEADER_LEN + bytes.len() / 2;
+        bad[idx] ^= 0x40;
+        let err = from_bytes(&bad).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum"),
+            "expected checksum error, got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let params = toy_store(2);
+        let bytes = to_bytes(&refr(&params, None));
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(format!("{:#}", from_bytes(&bad).unwrap_err()).contains("magic"));
+        let mut bad = bytes;
+        bad[8] = 99; // version
+        assert!(format!("{:#}", from_bytes(&bad).unwrap_err()).contains("version"));
+    }
+
+    #[test]
+    fn file_roundtrip_and_atomic_write() {
+        let dir = std::env::temp_dir().join("bdia_ckpt_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.ckpt");
+        let params = toy_store(7);
+        save(&path, &refr(&params, None)).unwrap();
+        assert!(!path.with_extension("ckpt.tmp").exists(), "tmp not renamed");
+        let ck = load(&path).unwrap();
+        assert!(bit_equal(&ck.params, &params));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

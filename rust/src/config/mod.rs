@@ -95,6 +95,9 @@ pub struct TrainConfig {
     /// dataset size knobs (synthetic generators honor these)
     pub train_examples: usize,
     pub val_examples: usize,
+    /// checkpointing: save every K steps (0 disables) into `ckpt_dir`
+    pub save_every: usize,
+    pub ckpt_dir: PathBuf,
 }
 
 impl Default for TrainConfig {
@@ -120,6 +123,8 @@ impl Default for TrainConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             train_examples: 2048,
             val_examples: 512,
+            save_every: 0,
+            ckpt_dir: PathBuf::from("checkpoints"),
         }
     }
 }
@@ -166,6 +171,8 @@ impl TrainConfig {
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(v.as_str()?),
             "train_examples" => self.train_examples = v.as_usize()?,
             "val_examples" => self.val_examples = v.as_usize()?,
+            "save_every" => self.save_every = v.as_usize()?,
+            "ckpt_dir" => self.ckpt_dir = PathBuf::from(v.as_str()?),
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -227,6 +234,16 @@ mod tests {
         c.override_kv("backend=native").unwrap();
         assert_eq!(c.backend, BackendKind::Native);
         assert!(c.override_kv("backend=tpu").is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_parse() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.save_every, 0);
+        c.override_kv("save_every=50").unwrap();
+        c.override_kv("ckpt_dir=ckpts/run1").unwrap();
+        assert_eq!(c.save_every, 50);
+        assert_eq!(c.ckpt_dir, PathBuf::from("ckpts/run1"));
     }
 
     #[test]

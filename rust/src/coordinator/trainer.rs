@@ -6,6 +6,7 @@
 //! this path.
 
 use super::stack::{GammaPlan, Stack, StackKind, StackState};
+use crate::checkpoint::{self, CheckpointRef, RngSnapshot};
 use crate::config::{TrainConfig, TrainMode};
 use crate::data::{Batch, Dataset};
 use crate::metrics::{Record, TrainLog};
@@ -14,6 +15,7 @@ use crate::optim::{clip_global_norm, Optimizer};
 use crate::runtime::{ArgValue, Runtime};
 use crate::tensor::{Rng, Tensor};
 use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
 
 /// Everything the forward pass hands to the backward pass.
 pub struct ForwardState {
@@ -86,6 +88,61 @@ impl Trainer {
 
     pub fn n_params(&self) -> usize {
         self.params.n_params()
+    }
+
+    /// Completed optimization steps (nonzero after a checkpoint resume).
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    // ------------------------------------------------------------------
+    // checkpointing
+    // ------------------------------------------------------------------
+
+    /// Write the full training state — parameters, optimizer moments, step
+    /// counter and the gamma RNG — so a resumed run is bit-identical to an
+    /// uninterrupted one.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let (state, spare) = self.rng_gamma.state();
+        let (t, m, v) = self.opt.state();
+        checkpoint::save(
+            path,
+            &CheckpointRef {
+                model: &self.cfg.model,
+                step: self.step as u64,
+                rng_gamma: RngSnapshot { state, spare },
+                params: &self.params,
+                opt: Some((t, m, v)),
+            },
+        )
+        .with_context(|| format!("saving checkpoint {}", path.display()))
+    }
+
+    /// Restore state saved by [`Trainer::save_checkpoint`]: parameters
+    /// always; optimizer moments only when present, so inference-only
+    /// exports still load for evaluation.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let ck = checkpoint::load(path)?;
+        ensure!(
+            ck.model == self.cfg.model,
+            "checkpoint {} was written for model '{}' but this run uses '{}'",
+            path.display(),
+            ck.model,
+            self.cfg.model
+        );
+        ensure!(
+            self.params.same_structure(&ck.params),
+            "checkpoint {} parameter structure does not match bundle '{}'",
+            path.display(),
+            self.cfg.model
+        );
+        self.params = ck.params;
+        self.step = ck.step as usize;
+        self.rng_gamma = Rng::restore(ck.rng_gamma.state, ck.rng_gamma.spare);
+        if let Some(o) = ck.opt {
+            self.opt.restore(o.t, o.m, o.v)?;
+        }
+        Ok(())
     }
 
     fn effective_gamma(&self) -> f32 {
@@ -289,10 +346,17 @@ impl Trainer {
     }
 
     /// Full training loop with periodic evaluation; returns the log.
+    ///
+    /// Resume-aware: after [`Trainer::load_checkpoint`] the loop continues
+    /// from the restored step (training batches are pure functions of the
+    /// step index, so the replayed schedule is identical).  With
+    /// `cfg.save_every > 0`, a step-stamped checkpoint plus a rolling
+    /// `<run_name>-latest.ckpt` land in `cfg.ckpt_dir`.
     pub fn run(&mut self, data: &dyn Dataset, run_name: &str) -> Result<TrainLog> {
         let mut log = TrainLog::new(run_name);
         let steps = self.cfg.steps;
-        for step in 0..steps {
+        while self.step < steps {
+            let step = self.step;
             let batch = data.train_batch(step);
             let t0 = std::time::Instant::now();
             let stats = self.train_step(&batch)?;
@@ -316,6 +380,18 @@ impl Trainer {
                     grad_norm: stats.grad_norm,
                     ms_per_step: ms,
                 });
+            }
+            if self.cfg.save_every > 0
+                && (self.step % self.cfg.save_every == 0 || self.step == steps)
+            {
+                let stamped = self
+                    .cfg
+                    .ckpt_dir
+                    .join(format!("{run_name}-step{}.ckpt", self.step));
+                self.save_checkpoint(&stamped)?;
+                let latest =
+                    self.cfg.ckpt_dir.join(format!("{run_name}-latest.ckpt"));
+                self.save_checkpoint(&latest)?;
             }
         }
         Ok(log)

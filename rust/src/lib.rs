@@ -11,6 +11,10 @@
 //! - [`coordinator`]: the paper's contribution — BDIA reversible training
 //! - [`quant`]: exact fixed-point BDIA arithmetic (eqs. 17-24)
 //! - [`baseline`]: vanilla + RevViT comparators
+//! - [`checkpoint`]: versioned, checksummed binary persistence of trained
+//!   state (params + optimizer + step), bit-exact round trips
+//! - [`serve`]: concurrent inference serving over `std::net` — dynamic
+//!   micro-batching, worker pool, `/healthz` + `/stats`, load generator
 pub mod config;
 pub mod tensor;
 pub mod quant;
@@ -23,3 +27,5 @@ pub mod data;
 pub mod metrics;
 pub mod experiments;
 pub mod bench;
+pub mod checkpoint;
+pub mod serve;

@@ -2,11 +2,15 @@
 //!
 //! ```text
 //! bdia train  --config configs/vit_s10_bdia.json [--backend native|pjrt]
-//!             [key=value ...]
-//! bdia eval   --model vit_s10 --gamma 0.0 [key=value ...]
+//!             [--save-every K] [--ckpt-dir D] [--resume ckpt] [key=value ...]
+//! bdia eval   --model vit_s10 --gamma 0.0 [--ckpt path] [key=value ...]
+//! bdia serve  --model vit_s10 --ckpt path [--port P] [--workers N]
+//!             [--batch-window-us U]
+//! bdia bench-serve --model vit_s10 [--requests N] [--concurrency C]
+//!             [--workers N] [--addr host:port] [--ckpt path]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
 //!             [--steps N] [--seeds 0,1,2] [--quick]
-//! bdia info   --model vit_s10       # bundle inventory
+//! bdia info   --model vit_s10       # bundle inventory + call counts
 //! ```
 //!
 //! The default backend is the dependency-free pure-Rust `native`
@@ -15,7 +19,7 @@
 //!
 //! (Argument parsing is in-repo — no clap offline — see `parse_flags`.)
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use bdia::baseline::RevVitTrainer;
 use bdia::config::{TrainConfig, TrainMode};
 use bdia::coordinator::Trainer;
@@ -23,8 +27,11 @@ use bdia::experiments::{run_experiment, ExpOpts};
 use bdia::metrics::fmt_bytes;
 use bdia::metrics::memory::MemoryModel;
 use bdia::runtime::{BackendKind, Runtime};
+use bdia::serve::bench::BenchOpts;
+use bdia::serve::{ServeConfig, Server};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
 fn main() {
     if let Err(e) = run() {
@@ -73,6 +80,8 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&flags, &overrides),
         "eval" => cmd_eval(&flags, &overrides),
+        "serve" => cmd_serve(&flags),
+        "bench-serve" => cmd_bench_serve(&flags),
         "repro" => cmd_repro(&flags, &rest),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
@@ -97,6 +106,12 @@ fn load_config(
     if let Some(b) = flags.get("backend") {
         cfg.backend = BackendKind::parse(b)?;
     }
+    if let Some(k) = flags.get("save-every") {
+        cfg.save_every = k.parse().context("--save-every must be an integer")?;
+    }
+    if let Some(d) = flags.get("ckpt-dir") {
+        cfg.ckpt_dir = PathBuf::from(d);
+    }
     for kv in overrides {
         cfg.override_kv(kv)?;
     }
@@ -118,8 +133,20 @@ fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<(
         .get("name")
         .cloned()
         .unwrap_or_else(|| format!("{}_{}", cfg.model, cfg.mode.name()));
+    if cfg.save_every > 0 {
+        println!(
+            "checkpoints: every {} steps into {}",
+            cfg.save_every,
+            cfg.ckpt_dir.display()
+        );
+    }
 
     let log = if cfg.mode == TrainMode::RevVit {
+        ensure!(
+            cfg.save_every == 0 && !flags.contains_key("resume"),
+            "checkpointing is supported by the BDIA/vanilla trainer only \
+             (RevViT baseline has no persistence)"
+        );
         let mut tr = RevVitTrainer::new(cfg.clone())?;
         println!("params: {}", tr.n_params());
         let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
@@ -128,6 +155,10 @@ fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<(
         log
     } else {
         let mut tr = Trainer::new(cfg.clone())?;
+        if let Some(path) = flags.get("resume") {
+            tr.load_checkpoint(std::path::Path::new(path))?;
+            println!("resumed from {} at step {}", path, tr.step());
+        }
         println!("params: {}", tr.n_params());
         let mm = MemoryModel::new(
             cfg.mode,
@@ -174,12 +205,146 @@ fn cmd_eval(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<()
         .transpose()
         .context("--batches must be an integer")?
         .unwrap_or(cfg.eval_batches);
-    let tr = Trainer::new(cfg.clone())?;
+    let mut tr = Trainer::new(cfg.clone())?;
+    let provenance = match flags.get("ckpt") {
+        Some(path) => {
+            tr.load_checkpoint(std::path::Path::new(path))?;
+            format!("checkpoint {path}, step {}", tr.step())
+        }
+        None => {
+            eprintln!(
+                "warning: no --ckpt given — scoring FRESHLY-SEEDED (untrained) \
+                 parameters.\nwarning: pass --ckpt <file> to evaluate weights \
+                 produced by `bdia train save_every=K`."
+            );
+            format!("untrained seed {}", cfg.seed)
+        }
+    };
     let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
     let (loss, acc) = tr.evaluate(ds.as_ref(), n_batches, gamma)?;
     println!(
-        "{} @ gamma={gamma}: val_loss {loss:.4} val_acc {acc:.4} (params seed {})",
-        cfg.model, cfg.seed
+        "{} @ gamma={gamma}: val_loss {loss:.4} val_acc {acc:.4} ({provenance})",
+        cfg.model
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    let cfg = ServeConfig {
+        model: flags.get("model").cloned().unwrap_or_else(|| "vit_s10".into()),
+        backend: flags
+            .get("backend")
+            .map(|b| BackendKind::parse(b))
+            .transpose()?
+            .unwrap_or_default(),
+        artifacts_dir: flags
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts")),
+        ckpt: flags.get("ckpt").map(PathBuf::from),
+        port: flags
+            .get("port")
+            .map(|p| p.parse())
+            .transpose()
+            .context("--port must be an integer")?
+            .unwrap_or(7878),
+        workers: flags
+            .get("workers")
+            .map(|w| w.parse())
+            .transpose()
+            .context("--workers must be an integer")?
+            .unwrap_or(4),
+        batch_window: Duration::from_micros(
+            flags
+                .get("batch-window-us")
+                .map(|w| w.parse())
+                .transpose()
+                .context("--batch-window-us must be an integer")?
+                .unwrap_or(2000),
+        ),
+    };
+    if cfg.ckpt.is_none() {
+        eprintln!(
+            "warning: no --ckpt given — serving FRESHLY-SEEDED (untrained) \
+             parameters."
+        );
+    }
+    let model = cfg.model.clone();
+    let workers = cfg.workers;
+    let window = cfg.batch_window;
+    let server = Server::start(cfg)?;
+    println!(
+        "bdia serve: {model} on http://{} ({workers} workers, batch window \
+         {window:?})",
+        server.addr()
+    );
+    println!("endpoints: POST /infer  GET /healthz  GET /stats  POST /shutdown");
+    server.join()
+}
+
+/// Resolve `host:port` (hostnames included, e.g. `localhost:7878`) to a
+/// socket address.
+fn resolve_addr(s: &str) -> Result<std::net::SocketAddr> {
+    use std::net::ToSocketAddrs;
+    s.to_socket_addrs()
+        .with_context(|| format!("--addr '{s}' must be host:port"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("--addr '{s}' resolved to no address"))
+}
+
+fn cmd_bench_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    let defaults = BenchOpts::default();
+    let opts = BenchOpts {
+        model: flags.get("model").cloned().unwrap_or(defaults.model),
+        backend: flags
+            .get("backend")
+            .map(|b| BackendKind::parse(b))
+            .transpose()?
+            .unwrap_or_default(),
+        artifacts_dir: flags
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or(defaults.artifacts_dir),
+        ckpt: flags.get("ckpt").map(PathBuf::from),
+        addr: flags.get("addr").map(|a| resolve_addr(a)).transpose()?,
+        workers: flags
+            .get("workers")
+            .map(|w| w.parse())
+            .transpose()
+            .context("--workers")?
+            .unwrap_or(defaults.workers),
+        requests: flags
+            .get("requests")
+            .map(|r| r.parse())
+            .transpose()
+            .context("--requests")?
+            .unwrap_or(defaults.requests),
+        concurrency: flags
+            .get("concurrency")
+            .map(|c| c.parse())
+            .transpose()
+            .context("--concurrency")?
+            .unwrap_or(defaults.concurrency),
+        gamma: flags
+            .get("gamma")
+            .map(|g| g.parse())
+            .transpose()
+            .context("--gamma")?
+            .unwrap_or(defaults.gamma),
+        batch_window: flags
+            .get("batch-window-us")
+            .map(|w| w.parse().map(Duration::from_micros))
+            .transpose()
+            .context("--batch-window-us")?
+            .unwrap_or(defaults.batch_window),
+        verify: !flags.contains_key("no-verify"),
+    };
+    let summary = bdia::serve::bench::run(&opts)?;
+    ensure!(summary.errors == 0, "{} requests failed", summary.errors);
+    ensure!(
+        summary.mismatches == 0,
+        "{} responses were NOT bit-identical to direct inference",
+        summary.mismatches
     );
     Ok(())
 }
@@ -245,9 +410,9 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
         m.dims.batch, m.dims.lbits
     );
     println!("  params: {}", m.n_params());
-    println!("  executables:");
-    for name in rt.exec_names() {
-        println!("    {name}");
+    println!("  executables (calls this process):");
+    for (name, calls) in rt.call_counts() {
+        println!("    {name}  calls={calls}");
     }
     for mode in [
         TrainMode::Vanilla,
@@ -268,15 +433,30 @@ fn print_help() {
     println!(
         "bdia — exact bit-level reversible transformer training (BDIA)\n\n\
          USAGE:\n  bdia train --config configs/<f>.json \
-         [--backend native|pjrt] [key=value ...]\n  \
-         bdia eval  --model <bundle> --gamma <g>\n  \
+         [--backend native|pjrt] [--save-every K] [--ckpt-dir D] \
+         [--resume <ckpt>] [key=value ...]\n  \
+         bdia eval  --model <bundle> --gamma <g> [--ckpt <file>]\n  \
+         bdia serve --model <bundle> --ckpt <file> [--port P] [--workers N] \
+         [--batch-window-us U]\n  \
+         bdia bench-serve --model <bundle> [--requests N] [--concurrency C] \
+         [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
+         [--no-verify]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
          [--quick] [--steps N] [--seeds 0,1]\n  \
          bdia info  --model <bundle> [--backend native|pjrt]\n\n\
          Config keys (key=value overrides): model, backend (native|pjrt), \
          mode (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, \
          lr, optimizer (adam|setadam), seed, eval_every, eval_batches, \
-         train_examples, val_examples, artifacts_dir\n\n\
+         train_examples, val_examples, artifacts_dir, save_every, ckpt_dir\n\n\
+         Checkpoints: `train save_every=K` writes <run>-step<N>.ckpt + \
+         <run>-latest.ckpt under ckpt_dir (versioned, CRC-checked, bit-exact \
+         round trip); `eval --ckpt` / `serve --ckpt` load them.\n\
+         Serving: `serve` exposes POST /infer (binary example -> 8-byte \
+         loss/correct), GET /healthz, GET /stats, POST /shutdown, with \
+         dynamic micro-batching across concurrent requests; `bench-serve` \
+         load-tests a server (self-hosted on an ephemeral port unless --addr \
+         is given) and verifies responses are bit-identical to direct \
+         inference.\n\n\
          The native backend is pure Rust and needs no artifacts; pjrt needs \
          the `pjrt` cargo feature plus `make artifacts`."
     );

@@ -366,6 +366,43 @@ impl ParamStore {
         self.n_params() * std::mem::size_of::<f32>()
     }
 
+    /// True when this store has exactly the groups, instance counts and
+    /// leaf shapes the manifest prescribes — cheap checkpoint validation
+    /// (no throwaway parameter initialisation).
+    pub fn matches_manifest(&self, manifest: &Manifest) -> bool {
+        if self.groups.len() != manifest.param_groups.len() {
+            return false;
+        }
+        manifest.param_groups.iter().all(|(g, leaves)| {
+            self.groups.get(g).is_some_and(|insts| {
+                insts.len() == manifest.group_instances(g)
+                    && insts.iter().all(|inst| {
+                        inst.len() == leaves.len()
+                            && inst
+                                .iter()
+                                .zip(leaves)
+                                .all(|(t, l)| t.shape() == &l.shape[..])
+                    })
+            })
+        })
+    }
+
+    /// True when `other` has identical groups, instance counts and leaf
+    /// shapes (checkpoint-load validation).
+    pub fn same_structure(&self, other: &ParamStore) -> bool {
+        if self.groups.len() != other.groups.len() {
+            return false;
+        }
+        self.groups.iter().zip(&other.groups).all(|((ga, ia), (gb, ib))| {
+            ga == gb
+                && ia.len() == ib.len()
+                && ia.iter().zip(ib).all(|(la, lb)| {
+                    la.len() == lb.len()
+                        && la.iter().zip(lb).all(|(ta, tb)| ta.shape() == tb.shape())
+                })
+        })
+    }
+
     /// Accumulate `other` into `self` (gradient accumulation).
     pub fn accumulate(&mut self, other: &ParamStore) -> Result<()> {
         for (g, insts) in &mut self.groups {
@@ -476,6 +513,23 @@ mod tests {
         let c = ParamStore::init(&m, 8);
         assert_eq!(a.leaves("embed", 0)[0], b.leaves("embed", 0)[0]);
         assert_ne!(a.leaves("embed", 0)[0], c.leaves("embed", 0)[0]);
+    }
+
+    #[test]
+    fn structure_checks() {
+        let m = toy_manifest();
+        let ps = ParamStore::init(&m, 1);
+        assert!(ps.matches_manifest(&m));
+        assert!(ps.same_structure(&ps.zeros_like()));
+        let mut other = ps.zeros_like();
+        other.groups.get_mut("head").unwrap()[0][0] =
+            Tensor::zeros(&[5, 5]); // wrong leaf shape
+        assert!(!ps.same_structure(&other));
+        assert!(!other.matches_manifest(&m));
+        let mut missing = ps.zeros_like();
+        missing.groups.remove("head");
+        assert!(!ps.same_structure(&missing));
+        assert!(!missing.matches_manifest(&m));
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use crate::config::{OptimKind, TrainConfig};
 use crate::model::ParamStore;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 pub struct Optimizer {
     kind: OptimKind,
@@ -48,6 +48,24 @@ impl Optimizer {
 
     pub fn step_count(&self) -> u64 {
         self.t
+    }
+
+    /// Borrow the full optimizer state `(t, m, v)` for checkpointing.
+    pub fn state(&self) -> (u64, &ParamStore, &ParamStore) {
+        (self.t, &self.m, &self.v)
+    }
+
+    /// Restore state saved by [`Optimizer::state`].  The moment stores must
+    /// structurally match the parameters this optimizer was built for.
+    pub fn restore(&mut self, t: u64, m: ParamStore, v: ParamStore) -> Result<()> {
+        ensure!(
+            self.m.same_structure(&m) && self.v.same_structure(&v),
+            "optimizer state structure does not match the model parameters"
+        );
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
     }
 
     /// Payload bytes of optimizer state (2x params) — memory accounting.

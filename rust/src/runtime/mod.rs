@@ -30,6 +30,7 @@ use crate::tensor::{IntTensor, Tensor};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A data argument for an executable call.
 pub enum ArgValue<'a> {
@@ -78,7 +79,12 @@ impl BackendKind {
 }
 
 /// One compiled executable, ready to run.
-pub trait CompiledExec {
+///
+/// `Send + Sync` is part of the contract: a [`Runtime`] is shared across the
+/// serving worker pool behind an `Arc`, so every backend's executables must
+/// be safe to call from multiple threads (the native interpreter is pure;
+/// calls carry no mutable state).
+pub trait CompiledExec: Send + Sync {
     /// Execute with `params` (flat leaf tensors, manifest order) and `data`
     /// inputs; returns the output tuple as host tensors.
     fn execute(&self, params: &[&Tensor], data: &[ArgValue]) -> Result<Vec<Tensor>>;
@@ -106,8 +112,9 @@ pub struct Exec {
     pub name: String,
     pub spec: ExecSpec,
     imp: Box<dyn CompiledExec>,
-    /// flop/byte estimate hooks could live here later
-    pub calls: std::cell::Cell<u64>,
+    /// Invocation counter (relaxed atomic: concurrent serving workers bump
+    /// it; exact ordering does not matter, only the totals).
+    pub calls: AtomicU64,
 }
 
 impl Exec {
@@ -131,7 +138,7 @@ impl Exec {
                 spec.shape
             );
         }
-        self.calls.set(self.calls.get() + 1);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let outs = self
             .imp
             .execute(params, data)
@@ -240,7 +247,7 @@ impl Runtime {
                     name: name.clone(),
                     spec: spec.clone(),
                     imp,
-                    calls: std::cell::Cell::new(0),
+                    calls: AtomicU64::new(0),
                 },
             );
         }
@@ -263,9 +270,28 @@ impl Runtime {
 
     /// Total executable invocations (profiling).
     pub fn total_calls(&self) -> u64 {
-        self.execs.values().map(|e| e.calls.get()).sum()
+        self.execs
+            .values()
+            .map(|e| e.calls.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Per-executable invocation counts, sorted by name (`bdia info`,
+    /// `/stats`).
+    pub fn call_counts(&self) -> Vec<(String, u64)> {
+        self.execs
+            .iter()
+            .map(|(n, e)| (n.clone(), e.calls.load(Ordering::Relaxed)))
+            .collect()
     }
 }
+
+// The serving worker pool shares one `Arc<Runtime>` across threads; keep the
+// bound a compile-time fact rather than a convention.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Runtime>()
+};
 
 #[cfg(test)]
 mod tests {
@@ -296,6 +322,37 @@ mod tests {
         assert_eq!(BackendKind::default(), BackendKind::Native);
         assert_eq!(BackendKind::Native.name(), "native");
         assert_eq!(BackendKind::Pjrt.name(), "pjrt");
+    }
+
+    #[test]
+    fn call_counts_are_atomic_and_shared() {
+        let rt = std::sync::Arc::new(
+            Runtime::load(Path::new("/nonexistent/artifacts"), "smoke_gpt").unwrap(),
+        );
+        let tokens = IntTensor::zeros(&[2, 8]);
+        let ps = crate::model::ParamStore::init(&rt.manifest, 0);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let rt = std::sync::Arc::clone(&rt);
+                let ps = ps.clone();
+                let tokens = tokens.clone();
+                std::thread::spawn(move || {
+                    let e = rt.exec("embed_fwd").unwrap();
+                    let refs = ps.refs_for(&e.spec, 0).unwrap();
+                    for _ in 0..5 {
+                        e.call(&refs, &[ArgValue::I32(&tokens)]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(rt.total_calls(), 20);
+        let counts = rt.call_counts();
+        let embed = counts.iter().find(|(n, _)| n == "embed_fwd").unwrap();
+        assert_eq!(embed.1, 20);
+        assert!(counts.iter().any(|(n, c)| n == "block_fwd" && *c == 0));
     }
 
     #[test]

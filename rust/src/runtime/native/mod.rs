@@ -71,6 +71,7 @@ fn known_exec(name: &str) -> Result<()> {
         "enc_block_fwd",
         "enc_block_vjp",
         "model_infer",
+        "model_infer_ex",
     ];
     ensure!(
         KNOWN.contains(&name),
@@ -340,7 +341,8 @@ impl CompiledExec for NativeExec {
             }
 
             // ---- fused quantized inference ----
-            "model_infer" => self.run_model_infer(params, data),
+            "model_infer" => self.run_model_infer(params, data, false),
+            "model_infer_ex" => self.run_model_infer(params, data, true),
 
             other => bail!("native backend: unknown executable '{other}'"),
         }
@@ -393,10 +395,14 @@ impl NativeExec {
         Ok(x_cur)
     }
 
+    /// `model_infer` (scalar mean loss / total correct) and its per-example
+    /// sibling `model_infer_ex` (loss/correct kept per batch slot) share one
+    /// forward; only the head reduction differs.
     fn run_model_infer(
         &self,
         params: &[&Tensor],
         data: &[ArgValue],
+        per_example: bool,
     ) -> Result<Vec<Tensor>> {
         let d = self.dims.d_model;
         let b = self.dims.batch;
@@ -442,10 +448,7 @@ impl NativeExec {
             let xk = self.stack_infer(
                 &dec_blocks, xd, gamma, self.main_block_dims(), true, Some(&mem), f,
             )?;
-            model::head_loss_fwd(
-                hd, &xk, labels, self.family, b, self.dims.tokens(self.family), d,
-                self.n_out(),
-            )
+            self.head_reduce(hd, &xk, labels, per_example)
         } else {
             let labels = want_i32(data, 1, "labels")?;
             let gamma = want_scalar(data, 2, "gamma")?;
@@ -475,9 +478,26 @@ impl NativeExec {
             let xk = self.stack_infer(
                 &blocks, x0, gamma, self.main_block_dims(), false, None, f,
             )?;
+            self.head_reduce(hd, &xk, labels, per_example)
+        }
+    }
+
+    fn head_reduce(
+        &self,
+        head: &[&Tensor],
+        xk: &Tensor,
+        labels: &IntTensor,
+        per_example: bool,
+    ) -> Result<Vec<Tensor>> {
+        let (b, d) = (self.dims.batch, self.dims.d_model);
+        let t = self.dims.tokens(self.family);
+        if per_example {
+            model::head_loss_fwd_ex(
+                head, xk, labels, self.family, b, t, d, self.n_out(),
+            )
+        } else {
             model::head_loss_fwd(
-                hd, &xk, labels, self.family, b, self.dims.tokens(self.family), d,
-                self.n_out(),
+                head, xk, labels, self.family, b, t, d, self.n_out(),
             )
         }
     }
@@ -560,6 +580,69 @@ mod tests {
             let a = &h.data()[t * dims.d_model..(t + 1) * dims.d_model];
             let b = &h2.data()[t * dims.d_model..(t + 1) * dims.d_model];
             assert_eq!(a, b, "token {t} saw the future");
+        }
+    }
+
+    #[test]
+    fn model_infer_ex_slot_invariant_and_consistent_with_scalar() {
+        // the serving batcher's contract: an example's per-slot (loss,
+        // correct) must not depend on its batch slot or on its neighbours
+        let rt = native("smoke_gpt");
+        let dims = rt.manifest.dims.clone();
+        assert_eq!(dims.batch, 2);
+        let ps = ParamStore::init(&rt.manifest, 8);
+        let mut rng = Rng::new(9);
+        let draw = |rng: &mut Rng| -> Vec<i32> {
+            (0..dims.seq).map(|_| rng.below(dims.vocab) as i32).collect()
+        };
+        let (ea, eb, ec) = (draw(&mut rng), draw(&mut rng), draw(&mut rng));
+        let pack = |s0: &[i32], s1: &[i32]| {
+            let mut v = s0.to_vec();
+            v.extend_from_slice(s1);
+            IntTensor::from_vec(&[dims.batch, dims.seq], v).unwrap()
+        };
+        let ex = rt.exec("model_infer_ex").unwrap();
+        let refs = ps.refs_for(&ex.spec, 0).unwrap();
+        for gamma in [0.0f32, 0.5] {
+            // ea in slot 0 next to eb, vs ea in slot 1 next to ec
+            let t_ab = pack(&ea, &eb);
+            let t_ca = pack(&ec, &ea);
+            let o1 = ex
+                .call(
+                    &refs,
+                    &[ArgValue::I32(&t_ab), ArgValue::I32(&t_ab), ArgValue::Scalar(gamma)],
+                )
+                .unwrap();
+            let o2 = ex
+                .call(
+                    &refs,
+                    &[ArgValue::I32(&t_ca), ArgValue::I32(&t_ca), ArgValue::Scalar(gamma)],
+                )
+                .unwrap();
+            assert_eq!(o1[0].shape(), &[dims.batch]);
+            assert_eq!(
+                o1[0].data()[0].to_bits(),
+                o2[0].data()[1].to_bits(),
+                "per-example loss must be slot/neighbour invariant (gamma {gamma})"
+            );
+            assert_eq!(o1[1].data()[0].to_bits(), o2[1].data()[1].to_bits());
+
+            // consistency with the scalar executable on the same batch
+            let sc = rt.exec("model_infer").unwrap();
+            let srefs = ps.refs_for(&sc.spec, 0).unwrap();
+            let so = sc
+                .call(
+                    &srefs,
+                    &[ArgValue::I32(&t_ab), ArgValue::I32(&t_ab), ArgValue::Scalar(gamma)],
+                )
+                .unwrap();
+            let mean_ex = (o1[0].data()[0] + o1[0].data()[1]) / 2.0;
+            assert!(
+                (so[0].scalar_value().unwrap() - mean_ex).abs() < 1e-5,
+                "scalar loss vs per-example mean (gamma {gamma})"
+            );
+            let correct_sum = o1[1].data()[0] + o1[1].data()[1];
+            assert_eq!(so[1].scalar_value().unwrap(), correct_sum);
         }
     }
 

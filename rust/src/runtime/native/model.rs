@@ -663,6 +663,33 @@ fn head_view<'a>(leaves: &[&'a Tensor]) -> Result<HeadW<'a>> {
     })
 }
 
+/// CE of one logits row, filling `probs` with the row's softmax: returns
+/// `(-log p[y], argmax == y)`.  This is THE per-row scoring kernel — the
+/// scalar head ([`ce_rows`]) and the per-example serving head
+/// ([`head_loss_fwd_ex`]) both call it, which is what makes their per-row
+/// values bit-identical by construction (the serving batcher's
+/// bit-exactness contract).
+fn ce_row(lr: &[f32], y: usize, probs: &mut [f32]) -> (f64, bool) {
+    let mut m = lr[0];
+    let mut argmax = 0usize;
+    for (c, &v) in lr.iter().enumerate() {
+        if v > m {
+            m = v;
+            argmax = c;
+        }
+    }
+    let mut denom = 0.0f32;
+    for (p, &v) in probs.iter_mut().zip(lr) {
+        *p = (v - m).exp();
+        denom += *p;
+    }
+    for p in probs.iter_mut() {
+        *p /= denom;
+    }
+    let logp = (lr[y] - m) - denom.ln();
+    (-(logp as f64), argmax == y)
+}
+
 /// Softmax cross-entropy over logits rows; returns (loss, ncorrect,
 /// per-row softmax) — softmax retained for the VJP.
 fn ce_rows(
@@ -676,31 +703,42 @@ fn ce_rows(
     let mut ncorrect = 0.0f32;
     for r in 0..rows {
         let lr = &logits[r * n_out..(r + 1) * n_out];
-        let mut m = lr[0];
-        let mut argmax = 0usize;
-        for (c, &v) in lr.iter().enumerate() {
-            if v > m {
-                m = v;
-                argmax = c;
-            }
-        }
-        let mut denom = 0.0f32;
-        let pr = &mut probs[r * n_out..(r + 1) * n_out];
-        for (p, &v) in pr.iter_mut().zip(lr) {
-            *p = (v - m).exp();
-            denom += *p;
-        }
-        for p in pr.iter_mut() {
-            *p /= denom;
-        }
-        let y = labels[r] as usize;
-        let logp = (lr[y] - m) - denom.ln();
-        loss -= logp as f64;
-        if argmax == y {
+        let (l, hit) =
+            ce_row(lr, labels[r] as usize, &mut probs[r * n_out..(r + 1) * n_out]);
+        loss += l;
+        if hit {
             ncorrect += 1.0;
         }
     }
     ((loss / rows as f64) as f32, ncorrect, probs)
+}
+
+/// Shared head prefix: LN → (ViT: cls-token select) → projection.  Both
+/// the scalar and per-example heads score these identical logits, so their
+/// per-row results can only differ in the final reduction.
+fn head_logits(
+    w: &HeadW,
+    x: &Tensor,
+    family: Family,
+    b: usize,
+    t: usize,
+    d: usize,
+    n_out: usize,
+) -> (Vec<f32>, usize) {
+    let rows_all = b * t;
+    let (z, _) = ln_fwd(w.ln_scale, w.ln_bias, x.data(), rows_all, d);
+    let (zc, rows): (Vec<f32>, usize) = if family == Family::Vit {
+        // cls token only
+        let mut out = vec![0.0f32; b * d];
+        for bi in 0..b {
+            out[bi * d..(bi + 1) * d]
+                .copy_from_slice(&z[bi * t * d..bi * t * d + d]);
+        }
+        (out, b)
+    } else {
+        (z, rows_all)
+    };
+    (linear(&zc, w.w, w.b, rows, d, n_out), rows)
 }
 
 /// head_loss_fwd: (mean CE loss, #correct), both scalars.
@@ -715,22 +753,54 @@ pub fn head_loss_fwd(
     n_out: usize,
 ) -> Result<Vec<Tensor>> {
     let w = head_view(leaves)?;
-    let rows_all = b * t;
-    let (z, _) = ln_fwd(w.ln_scale, w.ln_bias, x.data(), rows_all, d);
-    let (zc, rows): (Vec<f32>, usize) = if family == Family::Vit {
-        // cls token only
-        let mut out = vec![0.0f32; b * d];
-        for bi in 0..b {
-            out[bi * d..(bi + 1) * d]
-                .copy_from_slice(&z[bi * t * d..bi * t * d + d]);
-        }
-        (out, b)
-    } else {
-        (z, rows_all)
-    };
-    let logits = linear(&zc, w.w, w.b, rows, d, n_out);
+    let (logits, rows) = head_logits(&w, x, family, b, t, d, n_out);
     let (loss, ncorrect, _) = ce_rows(&logits, labels.data(), rows, n_out);
     Ok(vec![Tensor::scalar(loss), Tensor::scalar(ncorrect)])
+}
+
+/// head_loss_fwd_ex: per-example (mean CE loss, #correct), each of shape
+/// `[b]`.  Every output element is a function of that example's rows alone
+/// (LayerNorm, the head projection and softmax are all row-local), so the
+/// result is invariant to which batch slot the example occupies and to what
+/// the other slots contain — the bit-exactness contract the serving
+/// micro-batcher relies on.
+pub fn head_loss_fwd_ex(
+    leaves: &[&Tensor],
+    x: &Tensor,
+    labels: &IntTensor,
+    family: Family,
+    b: usize,
+    t: usize,
+    d: usize,
+    n_out: usize,
+) -> Result<Vec<Tensor>> {
+    let w = head_view(leaves)?;
+    let (logits, rows) = head_logits(&w, x, family, b, t, d, n_out);
+    let rows_per_ex = rows / b;
+    let lab = labels.data();
+    ensure!(lab.len() == rows, "labels/rows mismatch: {} vs {rows}", lab.len());
+    let mut loss = vec![0.0f32; b];
+    let mut correct = vec![0.0f32; b];
+    let mut probs_scratch = vec![0.0f32; n_out];
+    for bi in 0..b {
+        let mut lsum = 0.0f64;
+        let mut ncorrect = 0.0f32;
+        for ri in 0..rows_per_ex {
+            let r = bi * rows_per_ex + ri;
+            let lr = &logits[r * n_out..(r + 1) * n_out];
+            let (l, hit) = ce_row(lr, lab[r] as usize, &mut probs_scratch);
+            lsum += l;
+            if hit {
+                ncorrect += 1.0;
+            }
+        }
+        loss[bi] = (lsum / rows_per_ex as f64) as f32;
+        correct[bi] = ncorrect;
+    }
+    Ok(vec![
+        Tensor::from_vec(&[b], loss)?,
+        Tensor::from_vec(&[b], correct)?,
+    ])
 }
 
 /// head_loss_vjp: (dL/dx, db, dln_bias, dln_scale, dw) with loss seed 1.

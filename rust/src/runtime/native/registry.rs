@@ -458,7 +458,28 @@ pub fn manifest_from_dims(name: &str, family: Family, dims: Dims) -> Manifest {
     };
     executables.insert(
         "model_infer".to_string(),
-        exec(infer_layout, infer_data, vec![scalar_out.clone(), scalar_out]),
+        exec(
+            infer_layout.clone(),
+            infer_data.clone(),
+            vec![scalar_out.clone(), scalar_out],
+        ),
+    );
+    // Per-example variant for the serving path: identical inputs, but the
+    // loss/correct outputs keep the batch dimension so a coalesced batch can
+    // be split back into per-request responses.  Every per-example value
+    // depends only on that example's own slot (attention, LayerNorm and the
+    // quantized BDIA update never mix batch rows), which is what makes
+    // micro-batched serving bit-identical to direct calls.
+    executables.insert(
+        "model_infer_ex".to_string(),
+        exec(
+            infer_layout,
+            infer_data,
+            vec![
+                f32_arg("loss", vec![dims.batch]),
+                f32_arg("correct", vec![dims.batch]),
+            ],
+        ),
     );
 
     Manifest {

@@ -11,7 +11,7 @@ use crate::model::{DType, ExecSpec, Manifest};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(t.data());
@@ -33,13 +33,13 @@ fn arg_literal(arg: &ArgValue) -> Result<xla::Literal> {
 
 /// The backend: one PJRT CPU client shared by every compiled executable.
 pub struct PjrtBackend {
-    client: Rc<xla::PjRtClient>,
+    client: Arc<xla::PjRtClient>,
 }
 
 impl PjrtBackend {
     pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtBackend { client: Rc::new(client) })
+        Ok(PjrtBackend { client: Arc::new(client) })
     }
 }
 
@@ -69,7 +69,7 @@ impl Backend for PjrtBackend {
             name: exec_name.to_string(),
             spec: spec.clone(),
             exe,
-            _client: Rc::clone(&self.client),
+            _client: Arc::clone(&self.client),
         }))
     }
 }
@@ -79,8 +79,15 @@ struct PjrtExec {
     spec: ExecSpec,
     exe: xla::PjRtLoadedExecutable,
     /// Keeps the PJRT client alive as long as any executable is.
-    _client: Rc<xla::PjRtClient>,
+    _client: Arc<xla::PjRtClient>,
 }
+
+// `CompiledExec` requires Send + Sync (the serving worker pool shares the
+// runtime across threads).  The PJRT CPU client serializes execution behind
+// its own locks; the xla wrapper types do not declare it, so we assert it
+// here at the FFI boundary.
+unsafe impl Send for PjrtExec {}
+unsafe impl Sync for PjrtExec {}
 
 impl CompiledExec for PjrtExec {
     fn execute(&self, params: &[&Tensor], data: &[ArgValue]) -> Result<Vec<Tensor>> {

@@ -1,0 +1,232 @@
+//! Dynamic micro-batching queue.
+//!
+//! Requests enqueue as [`Job`]s; workers pull with [`BatchQueue::next_batch`]
+//! which coalesces the head-of-line job with queued neighbours that share
+//! its gamma (the executable takes one scalar gamma per call) up to the
+//! manifest batch dimension, waiting at most `window` for stragglers.  Under
+//! concurrent load the queue is rarely empty and batches fill immediately;
+//! an idle server degenerates to latency-optimal singleton batches after
+//! one window.
+
+use super::wire::Example;
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued request plus its response channel.
+pub struct Job {
+    pub example: Example,
+    pub gamma: f32,
+    pub enqueued: Instant,
+    pub resp: Sender<Result<(f32, f32), String>>,
+}
+
+pub struct BatchQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+struct Inner {
+    q: VecDeque<Job>,
+    shutdown: bool,
+}
+
+impl Default for BatchQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchQueue {
+    pub fn new() -> Self {
+        BatchQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job; returns false (job dropped) after shutdown.
+    pub fn push(&self, job: Job) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutdown {
+            return false;
+        }
+        g.q.push_back(job);
+        drop(g);
+        self.cv.notify_all();
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Wake all waiters; subsequent `next_batch` calls drain the backlog
+    /// (without waiting out the window) and then return `None`.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until work arrives, then coalesce up to `max` same-gamma jobs,
+    /// waiting at most `window` past the first pop for the batch to fill.
+    /// Returns `None` only at shutdown with an empty queue.
+    pub fn next_batch(&self, max: usize, window: Duration) -> Option<Vec<Job>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.q.is_empty() {
+                break;
+            }
+            if g.shutdown {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        let first = g.q.pop_front().unwrap();
+        let gkey = first.gamma.to_bits();
+        let mut batch = vec![first];
+        let deadline = Instant::now() + window;
+        loop {
+            while batch.len() < max {
+                match g.q.front() {
+                    Some(j) if j.gamma.to_bits() == gkey => {
+                        batch.push(g.q.pop_front().unwrap());
+                    }
+                    _ => break,
+                }
+            }
+            if batch.len() >= max || g.shutdown {
+                break;
+            }
+            if !g.q.is_empty() {
+                // head-of-line job has a different gamma: flush this batch
+                // now so the next one can start immediately
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, _timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn job(gamma: f32) -> (Job, mpsc::Receiver<Result<(f32, f32), String>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Job {
+                example: Example::Tok { tokens: vec![0; 4], labels: vec![0; 4] },
+                gamma,
+                enqueued: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn coalesces_queued_same_gamma_jobs() {
+        let q = BatchQueue::new();
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let (j, rx) = job(0.0);
+            assert!(q.push(j));
+            rxs.push(rx);
+        }
+        let batch = q.next_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let q = BatchQueue::new();
+        let rxs: Vec<_> = (0..5).map(|_| {
+            let (j, rx) = job(0.5);
+            q.push(j);
+            rx
+        }).collect();
+        assert_eq!(q.next_batch(2, Duration::ZERO).unwrap().len(), 2);
+        assert_eq!(q.next_batch(2, Duration::ZERO).unwrap().len(), 2);
+        assert_eq!(q.next_batch(2, Duration::ZERO).unwrap().len(), 1);
+        drop(rxs);
+    }
+
+    #[test]
+    fn gamma_mismatch_splits_batches() {
+        let q = BatchQueue::new();
+        let (j1, _r1) = job(0.0);
+        let (j2, _r2) = job(0.5);
+        let (j3, _r3) = job(0.5);
+        q.push(j1);
+        q.push(j2);
+        q.push(j3);
+        let b1 = q.next_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b1.len(), 1);
+        assert_eq!(b1[0].gamma.to_bits(), 0.0f32.to_bits());
+        let b2 = q.next_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b2.len(), 2);
+        assert_eq!(b2[0].gamma.to_bits(), 0.5f32.to_bits());
+    }
+
+    #[test]
+    fn window_waits_for_stragglers() {
+        let q = std::sync::Arc::new(BatchQueue::new());
+        let (j1, _r1) = job(0.0);
+        q.push(j1);
+        let q2 = std::sync::Arc::clone(&q);
+        let feeder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let (j2, r2) = job(0.0);
+            q2.push(j2);
+            r2
+        });
+        // generous window: the straggler lands inside it
+        let batch = q.next_batch(4, Duration::from_millis(500)).unwrap();
+        assert_eq!(batch.len(), 2, "straggler should join the open batch");
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_then_stops() {
+        let q = BatchQueue::new();
+        let (j, _r) = job(0.0);
+        q.push(j);
+        q.shutdown();
+        let (j2, _r2) = job(0.0);
+        assert!(!q.push(j2), "push after shutdown must be rejected");
+        // drain without waiting out any window
+        let t0 = Instant::now();
+        assert_eq!(q.next_batch(4, Duration::from_secs(5)).unwrap().len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        assert!(q.next_batch(4, Duration::from_secs(5)).is_none());
+    }
+
+    #[test]
+    fn blocks_until_work_arrives() {
+        let q = std::sync::Arc::new(BatchQueue::new());
+        let q2 = std::sync::Arc::clone(&q);
+        let feeder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let (j, rx) = job(0.25);
+            q2.push(j);
+            rx
+        });
+        let batch = q.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        feeder.join().unwrap();
+    }
+}

@@ -1,0 +1,250 @@
+//! `bdia bench-serve`: load generator + verifier for the serving path.
+//!
+//! Self-hosts a server on an ephemeral port (or targets `--addr`), fires
+//! `requests` inference calls from `concurrency` client threads over real
+//! `TcpStream`s, then reports throughput, client-side latency percentiles,
+//! the server's mean coalesced batch size (is dynamic batching engaging?),
+//! and — the important part — verifies every response is bit-identical to a
+//! direct local `model_infer_ex` call on the same parameters.
+
+use super::{client, stats, wire, ServeConfig, Server};
+use crate::checkpoint;
+use crate::config::json::Json;
+use crate::config::TrainConfig;
+use crate::data::make_dataset;
+use crate::model::{Family, ParamStore};
+use crate::runtime::{BackendKind, Runtime};
+use anyhow::{ensure, Context, Result};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub model: String,
+    pub backend: BackendKind,
+    pub artifacts_dir: PathBuf,
+    pub ckpt: Option<PathBuf>,
+    /// Target an already-running server; `None` self-hosts one.
+    pub addr: Option<SocketAddr>,
+    /// Worker pool size for the self-hosted server.
+    pub workers: usize,
+    pub requests: usize,
+    pub concurrency: usize,
+    pub gamma: f32,
+    pub batch_window: Duration,
+    /// Compare responses against local inference (assumes the server runs
+    /// the same params: same --ckpt, or both seed-initialized).
+    pub verify: bool,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            model: "vit_s10".into(),
+            backend: BackendKind::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            ckpt: None,
+            addr: None,
+            workers: 4,
+            requests: 256,
+            concurrency: 8,
+            gamma: 0.0,
+            batch_window: Duration::from_millis(2),
+            verify: true,
+        }
+    }
+}
+
+/// Headline numbers, returned so tests/CLI can assert on them.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSummary {
+    pub requests: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    pub mismatches: usize,
+}
+
+/// Synthetic dataset that matches a model family (bench payloads).
+pub fn default_dataset(family: Family) -> &'static str {
+    match family {
+        Family::Vit => "synth_cifar10",
+        Family::Gpt => "tiny_corpus",
+        Family::EncDec => "synth_translation",
+    }
+}
+
+pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
+    ensure!(opts.requests > 0 && opts.concurrency > 0, "need requests > 0");
+    // local reference runtime: payload generation + verification
+    let rt =
+        Runtime::load_with(&opts.artifacts_dir, &opts.model, opts.backend)?;
+    let family = rt.manifest.family;
+    let params = match &opts.ckpt {
+        Some(p) => {
+            let ck = checkpoint::load(p)?;
+            ensure!(ck.model == opts.model, "checkpoint/model mismatch");
+            ensure!(
+                ck.params.matches_manifest(&rt.manifest),
+                "checkpoint {} does not match bundle '{}'",
+                p.display(),
+                opts.model
+            );
+            ck.params
+        }
+        None => ParamStore::init(&rt.manifest, 0),
+    };
+
+    // build a pool of distinct payloads from the held-out split
+    let cfg = TrainConfig {
+        model: opts.model.clone(),
+        dataset: default_dataset(family).into(),
+        ..TrainConfig::default()
+    };
+    let ds = make_dataset(&cfg, &rt.manifest.dims, family)?;
+    let pool_target = opts.requests.min(64);
+    let nvb = ds.n_val_batches().max(1);
+    let mut pool = Vec::new();
+    let mut bi = 0usize;
+    while pool.len() < pool_target {
+        pool.extend(wire::examples_from_batch(&ds.val_batch(bi % nvb)));
+        bi += 1;
+    }
+    pool.truncate(pool_target);
+    let bodies: Arc<Vec<Vec<u8>>> = Arc::new(
+        pool.iter().map(|e| wire::encode(e, opts.gamma)).collect(),
+    );
+
+    // self-host unless pointed at an external server
+    let (server, addr) = match opts.addr {
+        Some(a) => (None, a),
+        None => {
+            let srv = Server::start(ServeConfig {
+                model: opts.model.clone(),
+                backend: opts.backend,
+                artifacts_dir: opts.artifacts_dir.clone(),
+                ckpt: opts.ckpt.clone(),
+                port: 0,
+                workers: opts.workers,
+                batch_window: opts.batch_window,
+            })?;
+            let a = srv.addr();
+            println!(
+                "bench-serve: self-hosted {} on {a} ({} workers, window {:?})",
+                opts.model, opts.workers, opts.batch_window
+            );
+            (Some(srv), a)
+        }
+    };
+
+    // fire the load
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for tid in 0..opts.concurrency {
+        let bodies = Arc::clone(&bodies);
+        let (requests, conc) = (opts.requests, opts.concurrency);
+        handles.push(std::thread::spawn(move || {
+            let mut out: Vec<(usize, u64, Result<(f32, f32), String>)> =
+                Vec::new();
+            let mut i = tid;
+            while i < requests {
+                let body = &bodies[i % bodies.len()];
+                let t = Instant::now();
+                let res = client::infer(addr, body).map_err(|e| format!("{e:#}"));
+                out.push((i, t.elapsed().as_micros() as u64, res));
+                i += conc;
+            }
+            out
+        }));
+    }
+    let mut results = Vec::with_capacity(opts.requests);
+    for h in handles {
+        results.extend(h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // server-side stats (before shutdown)
+    let (_, stats_body) = client::get(addr, "/stats")?;
+    let stats_json = String::from_utf8_lossy(&stats_body).to_string();
+    let mean_batch = Json::parse(&stats_json)
+        .ok()
+        .and_then(|j| j.get("mean_batch").ok().and_then(|v| v.as_f64().ok()))
+        .unwrap_or(0.0);
+
+    if let Some(srv) = server {
+        client::shutdown(addr).context("graceful shutdown")?;
+        srv.join()?;
+    }
+
+    // client-side latency summary
+    let mut lat: Vec<u64> = results.iter().map(|(_, us, _)| *us).collect();
+    lat.sort_unstable();
+    let errors = results.iter().filter(|(_, _, r)| r.is_err()).count();
+    if let Some((i, _, Err(e))) = results.iter().find(|(_, _, r)| r.is_err()) {
+        eprintln!("first error (request {i}): {e}");
+    }
+
+    // bit-exactness verification against direct local inference
+    let mut mismatches = 0usize;
+    if opts.verify {
+        let expected: Vec<(f32, f32)> = pool
+            .iter()
+            .map(|e| wire::infer_one(&rt, &params, e, opts.gamma))
+            .collect::<Result<_>>()?;
+        for (i, _, r) in &results {
+            if let Ok((loss, correct)) = r {
+                let (el, ec) = expected[i % expected.len()];
+                if loss.to_bits() != el.to_bits() || correct.to_bits() != ec.to_bits()
+                {
+                    mismatches += 1;
+                }
+            }
+        }
+    }
+
+    let ok = results.len() - errors;
+    let summary = BenchSummary {
+        requests: results.len(),
+        errors,
+        wall_s,
+        throughput_rps: ok as f64 / wall_s.max(1e-9),
+        mean_batch,
+        mismatches,
+    };
+
+    println!(
+        "bench-serve: {} requests ({} errors) in {:.2}s -> {:.1} req/s",
+        summary.requests, summary.errors, summary.wall_s, summary.throughput_rps
+    );
+    if !lat.is_empty() {
+        println!(
+            "  latency ms: mean {:.2}  p50 {:.2}  p90 {:.2}  p99 {:.2}",
+            lat.iter().sum::<u64>() as f64 / lat.len() as f64 / 1e3,
+            stats::percentile_us(&lat, 0.50) as f64 / 1e3,
+            stats::percentile_us(&lat, 0.90) as f64 / 1e3,
+            stats::percentile_us(&lat, 0.99) as f64 / 1e3,
+        );
+    }
+    println!(
+        "  mean coalesced batch {:.2} ({})",
+        summary.mean_batch,
+        if summary.mean_batch > 1.0 {
+            "dynamic batching engaged"
+        } else {
+            "no coalescing observed"
+        }
+    );
+    if opts.verify {
+        println!(
+            "  verification: {}/{} responses bit-identical to direct \
+             model_infer_ex",
+            ok - summary.mismatches,
+            ok
+        );
+    }
+    println!("  server stats: {stats_json}");
+    Ok(summary)
+}

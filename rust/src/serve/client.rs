@@ -1,0 +1,57 @@
+//! Minimal blocking HTTP client for the serving endpoints — used by
+//! `bdia bench-serve`, the smoke tests, and anyone driving a `bdia serve`
+//! instance from Rust.  One connection per request (`Connection: close`).
+
+use super::http;
+use anyhow::{ensure, Context, Result};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+const IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    stream.set_nodelay(true).ok();
+    http::write_request(&stream, method, path, body)?;
+    http::read_response(&stream)
+}
+
+pub fn get(addr: SocketAddr, path: &str) -> Result<(u16, Vec<u8>)> {
+    request(addr, "GET", path, b"")
+}
+
+pub fn post(addr: SocketAddr, path: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+    request(addr, "POST", path, body)
+}
+
+/// POST an encoded example to `/infer`; returns the per-example
+/// (loss, correct) pair, decoded from its raw little-endian bit patterns.
+pub fn infer(addr: SocketAddr, body: &[u8]) -> Result<(f32, f32)> {
+    let (status, resp) = post(addr, "/infer", body)?;
+    ensure!(
+        status == 200,
+        "server returned {status}: {}",
+        String::from_utf8_lossy(&resp)
+    );
+    ensure!(resp.len() == 8, "bad /infer response length {}", resp.len());
+    Ok((
+        f32::from_le_bytes(resp[0..4].try_into().unwrap()),
+        f32::from_le_bytes(resp[4..8].try_into().unwrap()),
+    ))
+}
+
+/// Ask the server to shut down gracefully.
+pub fn shutdown(addr: SocketAddr) -> Result<()> {
+    let (status, _) = post(addr, "/shutdown", b"")?;
+    ensure!(status == 200, "shutdown returned {status}");
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Minimal HTTP/1.1 framing over `std::net` — just enough protocol for the
+//! inference server and its load generator: one request per connection
+//! (`Connection: close`), `Content-Length` bodies, no chunked encoding, no
+//! keep-alive.  No external crates, by construction.
+
+use anyhow::{ensure, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on accepted bodies — a full ViT image is ~12KB, so 16MB is
+/// generous headroom for any registered bundle.
+const MAX_BODY: usize = 16 << 20;
+/// Start line / header line length cap (bounds per-connection memory).
+const MAX_LINE: u64 = 8 << 10;
+/// Header count cap.
+const MAX_HEADERS: usize = 64;
+
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Read one `\n`-terminated line of at most `MAX_LINE` bytes — a client
+/// streaming an endless unterminated line gets an error, not an OOM.
+fn read_line_capped(r: &mut impl BufRead) -> Result<String> {
+    let mut line = String::new();
+    let n = r
+        .take(MAX_LINE)
+        .read_line(&mut line)
+        .context("reading protocol line")?;
+    ensure!(n > 0, "connection closed mid-request");
+    ensure!(
+        line.ends_with('\n') || (n as u64) < MAX_LINE,
+        "protocol line exceeds {MAX_LINE} bytes"
+    );
+    Ok(line)
+}
+
+/// Read one request (start line + headers + `Content-Length` body).
+pub fn read_request(stream: &TcpStream) -> Result<Request> {
+    let mut r = BufReader::new(stream);
+    let line = read_line_capped(&mut r)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts.next().context("request line missing path")?.to_string();
+    let content_len = read_headers(&mut r)?;
+    ensure!(content_len <= MAX_BODY, "request body too large ({content_len})");
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body).context("reading request body")?;
+    Ok(Request { method, path, body })
+}
+
+/// Consume header lines until the blank separator; returns Content-Length.
+fn read_headers(r: &mut impl BufRead) -> Result<usize> {
+    let mut content_len = 0usize;
+    for _ in 0..MAX_HEADERS {
+        let h = read_line_capped(r)?;
+        let h = h.trim();
+        if h.is_empty() {
+            return Ok(content_len);
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    anyhow::bail!("too many headers (> {MAX_HEADERS})")
+}
+
+/// Write a response with status, content type and body.
+pub fn write_response(
+    stream: &TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    let mut s = stream;
+    write!(
+        s,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    s.write_all(body)?;
+    s.flush()?;
+    Ok(())
+}
+
+/// Client side: write one request.
+pub fn write_request(
+    stream: &TcpStream,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<()> {
+    let mut s = stream;
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: bdia\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    )?;
+    s.write_all(body)?;
+    s.flush()?;
+    Ok(())
+}
+
+/// Client side: read one response; returns (status, body).
+pub fn read_response(stream: &TcpStream) -> Result<(u16, Vec<u8>)> {
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line).context("reading status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .context("malformed status line")?
+        .parse()
+        .context("non-numeric status")?;
+    let content_len = read_headers(&mut r)?;
+    ensure!(content_len <= MAX_BODY, "response body too large");
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body).context("reading response body")?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn request_response_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let req = read_request(&stream).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/echo");
+            write_response(&stream, 200, "OK", "application/octet-stream", &req.body)
+                .unwrap();
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        write_request(&stream, "POST", "/echo", b"\x01\x02\x03").unwrap();
+        let (status, body) = read_response(&stream).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"\x01\x02\x03");
+        server.join().unwrap();
+    }
+}

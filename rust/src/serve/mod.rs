@@ -1,0 +1,389 @@
+//! Concurrent inference serving over `std::net` — the deployment half of
+//! the paper's story: BDIA training produces a *standard* transformer at
+//! inference (eqs. 18–22), so trained checkpoints can serve traffic from a
+//! plain HTTP endpoint with no Python and no external crates.
+//!
+//! Architecture:
+//!
+//! ```text
+//! TcpListener ──accept──► handler thread (per connection)
+//!                              │ decode body → Job{example, gamma, resp}
+//!                              ▼
+//!                        [BatchQueue]  ◄─ dynamic micro-batching:
+//!                              │           coalesce same-gamma jobs up to
+//!                              ▼           dims.batch within batch_window
+//!                      worker pool (N threads, one Arc<Runtime>)
+//!                              │ model_infer_ex → per-slot (loss, correct)
+//!                              ▼
+//!                        resp channels ──► handler writes 8-byte response
+//! ```
+//!
+//! Endpoints: `POST /infer` (binary example → 8-byte result), `GET /healthz`,
+//! `GET /stats` (JSON counters + per-exec call counts + latency
+//! percentiles), `POST /shutdown` (graceful drain).
+//!
+//! Bit-exactness: per-example outputs are slot/neighbour-invariant in the
+//! native backend, so a response from a coalesced batch is bit-identical to
+//! a direct single-example `model_infer_ex` call (`tests/serve_smoke.rs`
+//! asserts this over real sockets).
+
+pub mod batcher;
+pub mod bench;
+pub mod client;
+pub mod http;
+pub mod stats;
+pub mod wire;
+
+use crate::checkpoint;
+use crate::model::ParamStore;
+use crate::runtime::{BackendKind, Runtime};
+use anyhow::{ensure, Context, Result};
+use self::batcher::{BatchQueue, Job};
+use self::stats::ServeStats;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a handler holds an idle client connection before giving up.
+const CONN_READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Latency reservoir size for `/stats` percentiles.
+const LATENCY_RESERVOIR: usize = 8192;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    pub backend: BackendKind,
+    pub artifacts_dir: PathBuf,
+    /// Checkpoint with trained weights; `None` serves seed-initialized
+    /// params (the CLI warns loudly).
+    pub ckpt: Option<PathBuf>,
+    /// 0 picks an ephemeral port (tests / bench self-hosting).
+    pub port: u16,
+    pub workers: usize,
+    /// How long an under-filled batch waits for stragglers.
+    pub batch_window: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "vit_s10".into(),
+            backend: BackendKind::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            ckpt: None,
+            port: 7878,
+            workers: 4,
+            batch_window: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Shared {
+    rt: Runtime,
+    params: ParamStore,
+    queue: BatchQueue,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    workers: usize,
+    batch_window: Duration,
+}
+
+/// A running server: worker pool + listener, shut down via [`Server::stop`]
+/// (or a client `POST /shutdown`), then reaped with [`Server::join`].
+pub struct Server {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load the bundle (+ optional checkpoint), bind, and spawn the pool.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        ensure!(cfg.workers > 0, "need at least one worker");
+        let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
+            .with_context(|| format!("loading bundle '{}'", cfg.model))?;
+        ensure!(
+            rt.has_exec("model_infer_ex"),
+            "bundle '{}' has no model_infer_ex executable (re-export artifacts \
+             or use a native-registry bundle)",
+            cfg.model
+        );
+        let params = match &cfg.ckpt {
+            Some(path) => {
+                let ck = checkpoint::load(path)?;
+                ensure!(
+                    ck.model == cfg.model,
+                    "checkpoint {} was written for model '{}', serving '{}'",
+                    path.display(),
+                    ck.model,
+                    cfg.model
+                );
+                ensure!(
+                    ck.params.matches_manifest(&rt.manifest),
+                    "checkpoint {} parameter structure does not match bundle \
+                     '{}'",
+                    path.display(),
+                    cfg.model
+                );
+                ck.params
+            }
+            None => ParamStore::init(&rt.manifest, 0),
+        };
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            rt,
+            params,
+            queue: BatchQueue::new(),
+            stats: ServeStats::new(LATENCY_RESERVOIR),
+            shutdown: AtomicBool::new(false),
+            addr,
+            workers: cfg.workers,
+            batch_window: cfg.batch_window,
+        });
+        let mut threads = Vec::with_capacity(cfg.workers + 1);
+        for wi in 0..cfg.workers {
+            let sh = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("bdia-worker-{wi}"))
+                    .spawn(move || worker_loop(&sh))?,
+            );
+        }
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("bdia-listener".into())
+                .spawn(move || listener_loop(listener, &sh))?,
+        );
+        Ok(Server { shared, threads })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Begin graceful shutdown: stop accepting, drain the queue, stop
+    /// workers.  Idempotent; `join` afterwards to wait it out.
+    pub fn stop(&self) {
+        initiate_shutdown(&self.shared);
+    }
+
+    /// Wait for the listener and all workers to exit.
+    pub fn join(self) -> Result<()> {
+        for t in self.threads {
+            t.join().map_err(|_| anyhow::anyhow!("server thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// `stop` + `join`.
+    pub fn shutdown(self) -> Result<()> {
+        self.stop();
+        self.join()
+    }
+}
+
+fn initiate_shutdown(shared: &Shared) {
+    if shared.shutdown.swap(true, Ordering::SeqCst) {
+        return; // already shutting down
+    }
+    shared.queue.shutdown();
+    // poke the blocking accept() so the listener observes the flag
+    let _ = TcpStream::connect(shared.addr);
+}
+
+fn listener_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let sh = Arc::clone(shared);
+                // thread-per-connection: connections are short (one request,
+                // Connection: close) and the real concurrency limit is the
+                // worker pool behind the queue
+                let _ = std::thread::Builder::new()
+                    .name("bdia-conn".into())
+                    .spawn(move || handle_conn(&s, &sh));
+            }
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    let max_batch = shared.rt.manifest.dims.batch;
+    while let Some(batch) =
+        shared.queue.next_batch(max_batch, shared.batch_window)
+    {
+        let gamma = batch[0].gamma;
+        let examples: Vec<wire::Example> =
+            batch.iter().map(|j| j.example.clone()).collect();
+        let result =
+            wire::infer_batch(&shared.rt, &shared.params, &examples, gamma);
+        shared.stats.record_batch(batch.len());
+        match result {
+            Ok(per_ex) => {
+                for (job, r) in batch.iter().zip(per_ex) {
+                    let _ = job.resp.send(Ok(r));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for job in &batch {
+                    let _ = job.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: &TcpStream, shared: &Arc<Shared>) {
+    stream.set_read_timeout(Some(CONN_READ_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let req = match http::read_request(stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = http::write_response(
+                stream,
+                400,
+                "Bad Request",
+                "text/plain",
+                format!("{e:#}\n").as_bytes(),
+            );
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/infer") => handle_infer(stream, shared, &req.body),
+        ("GET", "/healthz") => {
+            let body = format!(
+                "{{\"status\": \"ok\", \"model\": \"{}\", \"backend\": \"{}\"}}",
+                shared.rt.manifest.name,
+                shared.rt.backend.name()
+            );
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "application/json",
+                body.as_bytes(),
+            );
+        }
+        ("GET", "/stats") => {
+            let body = shared
+                .stats
+                .to_json(&shared.rt.call_counts(), shared.workers);
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "application/json",
+                body.as_bytes(),
+            );
+        }
+        ("POST", "/shutdown") => {
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "text/plain",
+                b"shutting down\n",
+            );
+            initiate_shutdown(shared);
+        }
+        (_, path) => {
+            let _ = http::write_response(
+                stream,
+                404,
+                "Not Found",
+                "text/plain",
+                format!("no such endpoint: {path}\n").as_bytes(),
+            );
+        }
+    }
+}
+
+fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
+    let t0 = Instant::now();
+    let m = &shared.rt.manifest;
+    let (example, gamma) = match wire::decode(m.family, &m.dims, body) {
+        Ok(v) => v,
+        Err(e) => {
+            shared.stats.record_error();
+            let _ = http::write_response(
+                stream,
+                400,
+                "Bad Request",
+                "text/plain",
+                format!("{e:#}\n").as_bytes(),
+            );
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::channel();
+    let accepted = shared.queue.push(Job {
+        example,
+        gamma,
+        enqueued: t0,
+        resp: tx,
+    });
+    if !accepted {
+        let _ = http::write_response(
+            stream,
+            503,
+            "Service Unavailable",
+            "text/plain",
+            b"server is shutting down\n",
+        );
+        return;
+    }
+    match rx.recv() {
+        Ok(Ok((loss, correct))) => {
+            let mut out = [0u8; 8];
+            out[..4].copy_from_slice(&loss.to_le_bytes());
+            out[4..].copy_from_slice(&correct.to_le_bytes());
+            shared.stats.record_request();
+            shared
+                .stats
+                .record_latency_us(t0.elapsed().as_micros() as u64);
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "application/octet-stream",
+                &out,
+            );
+        }
+        Ok(Err(msg)) => {
+            shared.stats.record_error();
+            let _ = http::write_response(
+                stream,
+                500,
+                "Internal Server Error",
+                "text/plain",
+                format!("{msg}\n").as_bytes(),
+            );
+        }
+        Err(_) => {
+            shared.stats.record_error();
+            let _ = http::write_response(
+                stream,
+                500,
+                "Internal Server Error",
+                "text/plain",
+                b"worker pool unavailable\n",
+            );
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Serving statistics: request/batch/error counters plus a fixed-capacity
+//! latency reservoir with percentile summaries.  Counters are relaxed
+//! atomics (the handlers and workers run on many threads); the reservoir is
+//! a small mutex-guarded ring.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct ServeStats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    batched_examples: AtomicU64,
+    lat_us: Mutex<Ring>,
+}
+
+struct Ring {
+    buf: Vec<u64>,
+    next: usize,
+    len: usize,
+}
+
+/// Latency summary in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Nearest-rank percentile over a sorted sample, `q` in [0, 1].
+pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl ServeStats {
+    pub fn new(reservoir: usize) -> Self {
+        ServeStats {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_examples: AtomicU64::new(0),
+            lat_us: Mutex::new(Ring {
+                buf: vec![0; reservoir.max(1)],
+                next: 0,
+                len: 0,
+            }),
+        }
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One coalesced executable call covering `n` requests.
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_examples.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency_us(&self, us: u64) {
+        let mut r = self.lat_us.lock().unwrap();
+        let cap = r.buf.len();
+        let slot = r.next;
+        r.buf[slot] = us;
+        r.next = (slot + 1) % cap;
+        r.len = (r.len + 1).min(cap);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean number of requests served per executable call — the headline
+    /// "is dynamic batching engaging" number.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_examples.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn latency(&self) -> Option<LatencySummary> {
+        let r = self.lat_us.lock().unwrap();
+        if r.len == 0 {
+            return None;
+        }
+        let mut xs: Vec<u64> = r.buf[..r.len].to_vec();
+        drop(r);
+        xs.sort_unstable();
+        let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+        Some(LatencySummary {
+            mean_ms: mean / 1e3,
+            p50_ms: percentile_us(&xs, 0.50) as f64 / 1e3,
+            p90_ms: percentile_us(&xs, 0.90) as f64 / 1e3,
+            p99_ms: percentile_us(&xs, 0.99) as f64 / 1e3,
+        })
+    }
+
+    /// Render the `/stats` JSON document (hand-rolled — no serde offline).
+    pub fn to_json(&self, exec_calls: &[(String, u64)], workers: usize) -> String {
+        let lat = self.latency();
+        let fmt_lat = |l: Option<LatencySummary>| match l {
+            Some(l) => format!(
+                "{{\"mean\": {:.3}, \"p50\": {:.3}, \"p90\": {:.3}, \"p99\": {:.3}}}",
+                l.mean_ms, l.p50_ms, l.p90_ms, l.p99_ms
+            ),
+            None => "null".to_string(),
+        };
+        let calls: Vec<String> = exec_calls
+            .iter()
+            .map(|(n, c)| format!("\"{n}\": {c}"))
+            .collect();
+        format!(
+            "{{\"requests\": {}, \"errors\": {}, \"batches\": {}, \
+             \"mean_batch\": {:.4}, \"workers\": {workers}, \
+             \"latency_ms\": {}, \"exec_calls\": {{{}}}}}",
+            self.requests(),
+            self.errors(),
+            self.batches(),
+            self.mean_batch(),
+            fmt_lat(lat),
+            calls.join(", ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::Json;
+
+    #[test]
+    fn counters_and_mean_batch() {
+        let s = ServeStats::new(16);
+        assert_eq!(s.mean_batch(), 0.0);
+        s.record_batch(1);
+        s.record_batch(3);
+        for _ in 0..4 {
+            s.record_request();
+        }
+        assert_eq!(s.requests(), 4);
+        assert_eq!(s.batches(), 2);
+        assert!((s.mean_batch() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles_and_ring_wrap() {
+        let s = ServeStats::new(8);
+        assert!(s.latency().is_none());
+        for us in 1..=100u64 {
+            s.record_latency_us(us * 1000);
+        }
+        let l = s.latency().unwrap();
+        // ring keeps the last 8 samples: 93..=100 ms
+        assert!(l.p50_ms >= 93.0 && l.p99_ms <= 100.0, "{l:?}");
+        assert!(l.mean_ms >= 93.0 && l.mean_ms <= 100.0);
+    }
+
+    #[test]
+    fn stats_json_parses_with_in_repo_parser() {
+        let s = ServeStats::new(4);
+        s.record_request();
+        s.record_batch(2);
+        s.record_latency_us(1500);
+        let j = s.to_json(&[("model_infer_ex".into(), 1)], 4);
+        let parsed = Json::parse(&j).expect("valid json");
+        assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            parsed
+                .get("exec_calls")
+                .unwrap()
+                .get("model_infer_ex")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            1
+        );
+        assert!(parsed.get("mean_batch").unwrap().as_f64().unwrap() > 1.9);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile_us(&[], 0.5), 0);
+        assert_eq!(percentile_us(&[7], 0.99), 7);
+        let xs: Vec<u64> = (0..100).collect();
+        assert_eq!(percentile_us(&xs, 0.0), 0);
+        assert_eq!(percentile_us(&xs, 1.0), 99);
+    }
+}

@@ -1,0 +1,381 @@
+//! Wire format + batch assembly for the serving path.
+//!
+//! A request carries **one example** (plus its labels and the inference
+//! gamma) as raw little-endian binary — f32 values travel as IEEE-754 bit
+//! patterns, never through decimal text, so the server's response can be
+//! bit-identical to a local `model_infer_ex` call.  The batcher packs up to
+//! `dims.batch` decoded examples into one executable invocation; unused
+//! slots are zero-filled (token id 0 and label 0 are always in range), which
+//! is sound because per-example outputs are slot- and neighbour-invariant
+//! (see `model::head_loss_fwd_ex`).
+
+use crate::data::Batch;
+use crate::model::{Dims, Family, ParamStore};
+use crate::runtime::{ArgValue, Runtime};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{bail, ensure, Result};
+
+/// One decoded inference request, shaped for the model family.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Example {
+    /// ViT: one image (c*h*w f32) + class label.
+    Vit { image: Vec<f32>, label: i32 },
+    /// GPT: token sequence + per-position labels.
+    Tok { tokens: Vec<i32>, labels: Vec<i32> },
+    /// Encoder-decoder: source, shifted target, per-position labels.
+    Seq { src: Vec<i32>, tgt_in: Vec<i32>, labels: Vec<i32> },
+}
+
+/// Exact request-body length for a family/dims (gamma trailer included).
+pub fn body_len(family: Family, dims: &Dims) -> usize {
+    4 * match family {
+        Family::Vit => dims.channels * dims.image_size * dims.image_size + 1 + 1,
+        Family::Gpt => dims.seq + dims.seq + 1,
+        Family::EncDec => dims.seq_src + dims.seq + dims.seq + 1,
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode one example + gamma into a request body.
+pub fn encode(example: &Example, gamma: f32) -> Vec<u8> {
+    let mut out = Vec::new();
+    match example {
+        Example::Vit { image, label } => {
+            for &v in image {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&label.to_le_bytes());
+        }
+        Example::Tok { tokens, labels } => {
+            put_i32s(&mut out, tokens);
+            put_i32s(&mut out, labels);
+        }
+        Example::Seq { src, tgt_in, labels } => {
+            put_i32s(&mut out, src);
+            put_i32s(&mut out, tgt_in);
+            put_i32s(&mut out, labels);
+        }
+    }
+    out.extend_from_slice(&gamma.to_le_bytes());
+    out
+}
+
+struct BodyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl BodyReader<'_> {
+    fn f32(&mut self) -> f32 {
+        let v = f32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        v
+    }
+
+    fn i32s(&mut self, n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(i32::from_le_bytes(
+                self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+            ));
+            self.pos += 4;
+        }
+        out
+    }
+
+    fn f32s(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32()).collect()
+    }
+}
+
+fn check_ids(what: &str, ids: &[i32], bound: usize) -> Result<()> {
+    for &id in ids {
+        ensure!(
+            (0..bound as i32).contains(&id),
+            "{what} value {id} out of range [0, {bound})"
+        );
+    }
+    Ok(())
+}
+
+/// Decode and validate a request body against the bundle's family/dims.
+pub fn decode(family: Family, dims: &Dims, body: &[u8]) -> Result<(Example, f32)> {
+    let want = body_len(family, dims);
+    ensure!(
+        body.len() == want,
+        "bad request body: expected {want} bytes for family {family:?}, got {}",
+        body.len()
+    );
+    let mut r = BodyReader { buf: body, pos: 0 };
+    let example = match family {
+        Family::Vit => {
+            let image =
+                r.f32s(dims.channels * dims.image_size * dims.image_size);
+            ensure!(
+                image.iter().all(|v| v.is_finite()),
+                "image contains non-finite values"
+            );
+            let label = r.i32s(1)[0];
+            check_ids("label", &[label], dims.n_classes)?;
+            Example::Vit { image, label }
+        }
+        Family::Gpt => {
+            let tokens = r.i32s(dims.seq);
+            let labels = r.i32s(dims.seq);
+            check_ids("token", &tokens, dims.vocab)?;
+            check_ids("label", &labels, dims.vocab)?;
+            Example::Tok { tokens, labels }
+        }
+        Family::EncDec => {
+            let src = r.i32s(dims.seq_src);
+            let tgt_in = r.i32s(dims.seq);
+            let labels = r.i32s(dims.seq);
+            check_ids("src token", &src, dims.vocab)?;
+            check_ids("tgt token", &tgt_in, dims.vocab)?;
+            check_ids("label", &labels, dims.vocab)?;
+            Example::Seq { src, tgt_in, labels }
+        }
+    };
+    let gamma = r.f32();
+    ensure!(gamma.is_finite(), "gamma must be finite");
+    Ok((example, gamma))
+}
+
+/// Owned input tensors for one coalesced `model_infer_ex` call.
+pub enum AssembledBatch {
+    Vit { images: Tensor, labels: IntTensor },
+    Tok { tokens: IntTensor, labels: IntTensor },
+    Seq { src: IntTensor, tgt_in: IntTensor, labels: IntTensor },
+}
+
+impl AssembledBatch {
+    /// Data arguments in `model_infer`/`model_infer_ex` ABI order.
+    pub fn args(&self, gamma: f32) -> Vec<ArgValue<'_>> {
+        match self {
+            AssembledBatch::Vit { images, labels } => vec![
+                ArgValue::F32(images),
+                ArgValue::I32(labels),
+                ArgValue::Scalar(gamma),
+            ],
+            AssembledBatch::Tok { tokens, labels } => vec![
+                ArgValue::I32(tokens),
+                ArgValue::I32(labels),
+                ArgValue::Scalar(gamma),
+            ],
+            AssembledBatch::Seq { src, tgt_in, labels } => vec![
+                ArgValue::I32(src),
+                ArgValue::I32(tgt_in),
+                ArgValue::I32(labels),
+                ArgValue::Scalar(gamma),
+            ],
+        }
+    }
+}
+
+/// Pack up to `dims.batch` examples into full batch tensors (zero-filled
+/// tail slots).
+pub fn assemble(
+    family: Family,
+    dims: &Dims,
+    examples: &[Example],
+) -> Result<AssembledBatch> {
+    let b = dims.batch;
+    ensure!(
+        !examples.is_empty() && examples.len() <= b,
+        "batch of {} examples does not fit manifest batch {b}",
+        examples.len()
+    );
+    match family {
+        Family::Vit => {
+            let px = dims.channels * dims.image_size * dims.image_size;
+            let mut images = vec![0.0f32; b * px];
+            let mut labels = vec![0i32; b];
+            for (i, e) in examples.iter().enumerate() {
+                let Example::Vit { image, label } = e else {
+                    bail!("example/family mismatch (want vit)")
+                };
+                ensure!(image.len() == px, "image size mismatch");
+                images[i * px..(i + 1) * px].copy_from_slice(image);
+                labels[i] = *label;
+            }
+            Ok(AssembledBatch::Vit {
+                images: Tensor::from_vec(
+                    &[b, dims.channels, dims.image_size, dims.image_size],
+                    images,
+                )?,
+                labels: IntTensor::from_vec(&[b], labels)?,
+            })
+        }
+        Family::Gpt => {
+            let t = dims.seq;
+            let mut toks = vec![0i32; b * t];
+            let mut labs = vec![0i32; b * t];
+            for (i, e) in examples.iter().enumerate() {
+                let Example::Tok { tokens, labels } = e else {
+                    bail!("example/family mismatch (want gpt)")
+                };
+                ensure!(tokens.len() == t && labels.len() == t, "seq len mismatch");
+                toks[i * t..(i + 1) * t].copy_from_slice(tokens);
+                labs[i * t..(i + 1) * t].copy_from_slice(labels);
+            }
+            Ok(AssembledBatch::Tok {
+                tokens: IntTensor::from_vec(&[b, t], toks)?,
+                labels: IntTensor::from_vec(&[b, t], labs)?,
+            })
+        }
+        Family::EncDec => {
+            let (ts, t) = (dims.seq_src, dims.seq);
+            let mut srcs = vec![0i32; b * ts];
+            let mut tgts = vec![0i32; b * t];
+            let mut labs = vec![0i32; b * t];
+            for (i, e) in examples.iter().enumerate() {
+                let Example::Seq { src, tgt_in, labels } = e else {
+                    bail!("example/family mismatch (want encdec)")
+                };
+                ensure!(
+                    src.len() == ts && tgt_in.len() == t && labels.len() == t,
+                    "seq len mismatch"
+                );
+                srcs[i * ts..(i + 1) * ts].copy_from_slice(src);
+                tgts[i * t..(i + 1) * t].copy_from_slice(tgt_in);
+                labs[i * t..(i + 1) * t].copy_from_slice(labels);
+            }
+            Ok(AssembledBatch::Seq {
+                src: IntTensor::from_vec(&[b, ts], srcs)?,
+                tgt_in: IntTensor::from_vec(&[b, t], tgts)?,
+                labels: IntTensor::from_vec(&[b, t], labs)?,
+            })
+        }
+    }
+}
+
+/// Run one coalesced batch through `model_infer_ex`; returns the per-example
+/// (loss, correct) pairs for the occupied slots, in request order.
+pub fn infer_batch(
+    rt: &Runtime,
+    params: &ParamStore,
+    examples: &[Example],
+    gamma: f32,
+) -> Result<Vec<(f32, f32)>> {
+    let e = rt.exec("model_infer_ex")?;
+    let refs = params.refs_for(&e.spec, 0)?;
+    let packed = assemble(rt.manifest.family, &rt.manifest.dims, examples)?;
+    let outs = e.call(&refs, &packed.args(gamma))?;
+    let (loss, correct) = (outs[0].data(), outs[1].data());
+    Ok(examples
+        .iter()
+        .enumerate()
+        .map(|(i, _)| (loss[i], correct[i]))
+        .collect())
+}
+
+/// Reference path: score a single example exactly as the server would.
+pub fn infer_one(
+    rt: &Runtime,
+    params: &ParamStore,
+    example: &Example,
+    gamma: f32,
+) -> Result<(f32, f32)> {
+    Ok(infer_batch(rt, params, std::slice::from_ref(example), gamma)?[0])
+}
+
+/// Split a dataset batch into per-slot examples (bench/test payloads).
+pub fn examples_from_batch(batch: &Batch) -> Vec<Example> {
+    match batch {
+        Batch::Image { images, labels } => {
+            let b = labels.len();
+            let px = images.len() / b;
+            (0..b)
+                .map(|i| Example::Vit {
+                    image: images.data()[i * px..(i + 1) * px].to_vec(),
+                    label: labels.data()[i],
+                })
+                .collect()
+        }
+        Batch::Lm { tokens, labels } => {
+            let b = tokens.shape()[0];
+            let t = tokens.shape()[1];
+            (0..b)
+                .map(|i| Example::Tok {
+                    tokens: tokens.data()[i * t..(i + 1) * t].to_vec(),
+                    labels: labels.data()[i * t..(i + 1) * t].to_vec(),
+                })
+                .collect()
+        }
+        Batch::Seq2Seq { src, tgt_in, labels } => {
+            let b = src.shape()[0];
+            let ts = src.shape()[1];
+            let t = tgt_in.shape()[1];
+            (0..b)
+                .map(|i| Example::Seq {
+                    src: src.data()[i * ts..(i + 1) * ts].to_vec(),
+                    tgt_in: tgt_in.data()[i * t..(i + 1) * t].to_vec(),
+                    labels: labels.data()[i * t..(i + 1) * t].to_vec(),
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::registry;
+
+    fn gpt_dims() -> Dims {
+        registry::manifest_for("smoke_gpt").unwrap().dims
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_gpt() {
+        let dims = gpt_dims();
+        let ex = Example::Tok {
+            tokens: (0..dims.seq as i32).map(|i| i % dims.vocab as i32).collect(),
+            labels: vec![1; dims.seq],
+        };
+        let body = encode(&ex, 0.5);
+        assert_eq!(body.len(), body_len(Family::Gpt, &dims));
+        let (back, gamma) = decode(Family::Gpt, &dims, &body).unwrap();
+        assert_eq!(back, ex);
+        assert_eq!(gamma.to_bits(), 0.5f32.to_bits());
+    }
+
+    #[test]
+    fn decode_rejects_bad_lengths_and_ranges() {
+        let dims = gpt_dims();
+        let ex = Example::Tok {
+            tokens: vec![0; dims.seq],
+            labels: vec![0; dims.seq],
+        };
+        let body = encode(&ex, 0.0);
+        assert!(decode(Family::Gpt, &dims, &body[..body.len() - 1]).is_err());
+        let bad = Example::Tok {
+            tokens: vec![dims.vocab as i32; dims.seq], // out of range
+            labels: vec![0; dims.seq],
+        };
+        let err = decode(Family::Gpt, &dims, &encode(&bad, 0.0)).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"));
+    }
+
+    #[test]
+    fn assemble_zero_fills_tail_slots() {
+        let dims = gpt_dims();
+        let ex = Example::Tok {
+            tokens: vec![3; dims.seq],
+            labels: vec![4; dims.seq],
+        };
+        let packed = assemble(Family::Gpt, &dims, &[ex]).unwrap();
+        let AssembledBatch::Tok { tokens, labels } = packed else {
+            panic!("family")
+        };
+        assert_eq!(tokens.shape(), &[dims.batch, dims.seq]);
+        assert!(tokens.data()[..dims.seq].iter().all(|&v| v == 3));
+        assert!(tokens.data()[dims.seq..].iter().all(|&v| v == 0));
+        assert!(labels.data()[dims.seq..].iter().all(|&v| v == 0));
+    }
+}

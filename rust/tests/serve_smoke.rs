@@ -1,0 +1,234 @@
+//! Serving integration over real sockets: concurrent requests coalesce into
+//! micro-batches, every response is bit-identical to a direct
+//! `model_infer_ex` call, the health/stats endpoints answer, shutdown is
+//! graceful, and malformed requests get 4xx instead of a worker panic.
+
+use bdia::config::json::Json;
+use bdia::model::ParamStore;
+use bdia::runtime::Runtime;
+use bdia::serve::wire::Example;
+use bdia::serve::{client, wire, ServeConfig, Server};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn start(model: &str, workers: usize, window: Duration) -> Server {
+    Server::start(ServeConfig {
+        model: model.into(),
+        artifacts_dir: artifacts(),
+        port: 0,
+        workers,
+        batch_window: window,
+        ..ServeConfig::default()
+    })
+    .expect("server start")
+}
+
+/// Local reference runtime + the same seed-0 params the ckpt-less server
+/// initializes.
+fn reference(model: &str) -> (Runtime, ParamStore) {
+    let rt = Runtime::load(&artifacts(), model).unwrap();
+    let params = ParamStore::init(&rt.manifest, 0);
+    (rt, params)
+}
+
+fn gpt_example(i: usize, seq: usize, vocab: usize) -> Example {
+    let tokens: Vec<i32> =
+        (0..seq).map(|j| ((i * 7 + j * 3 + 1) % vocab) as i32).collect();
+    let labels: Vec<i32> =
+        (0..seq).map(|j| ((i * 5 + j * 2 + 2) % vocab) as i32).collect();
+    Example::Tok { tokens, labels }
+}
+
+#[test]
+fn concurrent_requests_are_bit_identical_to_direct_inference() {
+    let (rt, params) = reference("smoke_gpt");
+    let dims = rt.manifest.dims.clone();
+    let server = start("smoke_gpt", 4, Duration::from_millis(30));
+    let addr = server.addr();
+
+    let n = 12usize;
+    let examples: Vec<Example> =
+        (0..n).map(|i| gpt_example(i, dims.seq, dims.vocab)).collect();
+    let expected: Vec<(f32, f32)> = examples
+        .iter()
+        .map(|e| wire::infer_one(&rt, &params, e, 0.0).unwrap())
+        .collect();
+
+    // fire all requests concurrently over real TcpStreams
+    let handles: Vec<_> = examples
+        .iter()
+        .map(|e| {
+            let body = wire::encode(e, 0.0);
+            std::thread::spawn(move || client::infer(addr, &body).unwrap())
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&expected) {
+        let (loss, correct) = h.join().unwrap();
+        assert_eq!(
+            loss.to_bits(),
+            want.0.to_bits(),
+            "served loss differs from direct model_infer_ex"
+        );
+        assert_eq!(correct.to_bits(), want.1.to_bits());
+    }
+
+    // health + stats endpoints
+    let (status, body) = client::get(addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    let health = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(health.get("model").unwrap().as_str().unwrap(), "smoke_gpt");
+
+    let (status, body) = client::get(addr, "/stats").unwrap();
+    assert_eq!(status, 200);
+    let stats = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), n);
+    assert_eq!(stats.get("errors").unwrap().as_usize().unwrap(), 0);
+    let batches = stats.get("batches").unwrap().as_usize().unwrap();
+    assert!(batches >= 1 && batches <= n, "batches {batches}");
+    // per-exec call counts surface through /stats
+    assert_eq!(
+        stats
+            .get("exec_calls")
+            .unwrap()
+            .get("model_infer_ex")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        batches
+    );
+
+    // graceful shutdown: server drains and the port closes
+    client::shutdown(addr).unwrap();
+    server.join().unwrap();
+    assert!(client::get(addr, "/healthz").is_err(), "port should be closed");
+}
+
+#[test]
+fn single_worker_under_load_coalesces_batches() {
+    // one worker + a wide window: concurrent requests must share
+    // executable calls (smoke_gpt's manifest batch is 2, so 8 requests
+    // need at most 4 + first-pop singleton batches, strictly < 8)
+    let server = start("smoke_gpt", 1, Duration::from_millis(300));
+    let addr = server.addr();
+    let (rt, _) = reference("smoke_gpt");
+    let dims = rt.manifest.dims.clone();
+
+    let n = 8usize;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let body = wire::encode(&gpt_example(i, dims.seq, dims.vocab), 0.5);
+            std::thread::spawn(move || client::infer(addr, &body).unwrap())
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let (_, body) = client::get(addr, "/stats").unwrap();
+    let stats = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    let batches = stats.get("batches").unwrap().as_usize().unwrap();
+    let mean_batch = stats.get("mean_batch").unwrap().as_f64().unwrap();
+    assert!(
+        batches < n,
+        "8 concurrent requests through 1 worker should coalesce, got \
+         {batches} batches"
+    );
+    assert!(mean_batch > 1.0, "mean batch {mean_batch} — batching never engaged");
+
+    client::shutdown(addr).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn vit_and_encdec_families_serve_bit_exactly() {
+    // ViT
+    {
+        let (rt, params) = reference("smoke_vit");
+        let d = rt.manifest.dims.clone();
+        let server = start("smoke_vit", 2, Duration::from_millis(5));
+        let px = d.channels * d.image_size * d.image_size;
+        let ex = Example::Vit {
+            image: (0..px).map(|i| (i as f32 * 0.37).sin() * 0.5).collect(),
+            label: 1,
+        };
+        let want = wire::infer_one(&rt, &params, &ex, 0.0).unwrap();
+        let got = client::infer(server.addr(), &wire::encode(&ex, 0.0)).unwrap();
+        assert_eq!(got.0.to_bits(), want.0.to_bits());
+        assert_eq!(got.1.to_bits(), want.1.to_bits());
+        server.shutdown().unwrap();
+    }
+    // encoder-decoder
+    {
+        let (rt, params) = reference("smoke_encdec");
+        let d = rt.manifest.dims.clone();
+        let server = start("smoke_encdec", 2, Duration::from_millis(5));
+        let ex = Example::Seq {
+            src: (0..d.seq_src).map(|j| ((j * 3 + 1) % d.vocab) as i32).collect(),
+            tgt_in: (0..d.seq).map(|j| ((j * 2 + 2) % d.vocab) as i32).collect(),
+            labels: (0..d.seq).map(|j| ((j + 3) % d.vocab) as i32).collect(),
+        };
+        let want = wire::infer_one(&rt, &params, &ex, 0.5).unwrap();
+        let got = client::infer(server.addr(), &wire::encode(&ex, 0.5)).unwrap();
+        assert_eq!(got.0.to_bits(), want.0.to_bits());
+        assert_eq!(got.1.to_bits(), want.1.to_bits());
+        server.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn malformed_requests_get_4xx_not_a_crash() {
+    let server = start("smoke_gpt", 1, Duration::from_millis(1));
+    let addr = server.addr();
+
+    // wrong body length
+    let (status, _) = client::post(addr, "/infer", b"\x00\x01").unwrap();
+    assert_eq!(status, 400);
+    // out-of-range token ids
+    let (rt, _) = reference("smoke_gpt");
+    let d = rt.manifest.dims.clone();
+    let bad = Example::Tok {
+        tokens: vec![d.vocab as i32 + 5; d.seq],
+        labels: vec![0; d.seq],
+    };
+    let (status, body) = client::post(addr, "/infer", &wire::encode(&bad, 0.0)).unwrap();
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&body).contains("out of range"));
+    // unknown endpoint
+    let (status, _) = client::get(addr, "/nope").unwrap();
+    assert_eq!(status, 404);
+
+    // the server is still healthy after all that abuse
+    let ok = gpt_example(0, d.seq, d.vocab);
+    client::infer(addr, &wire::encode(&ok, 0.0)).unwrap();
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn bench_serve_self_hosted_end_to_end() {
+    // the acceptance-criteria path: 4-worker server, concurrent load,
+    // batching engaged, responses verified bit-identical
+    let opts = bdia::serve::bench::BenchOpts {
+        model: "smoke_gpt".into(),
+        artifacts_dir: artifacts(),
+        workers: 4,
+        requests: 24,
+        concurrency: 8,
+        batch_window: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let summary = bdia::serve::bench::run(&opts).unwrap();
+    assert_eq!(summary.requests, 24);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.mismatches, 0, "serving must be bit-exact");
+    assert!(
+        summary.mean_batch > 1.0,
+        "dynamic batching should engage under concurrent load \
+         (mean batch {})",
+        summary.mean_batch
+    );
+}
