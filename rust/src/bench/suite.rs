@@ -1,0 +1,265 @@
+//! `bdia bench`: the per-family performance suite behind BENCH_3.json.
+//!
+//! Times the three hot paths — training forward (`fwd`), a full training
+//! step (`step` = forward + online backward + optimizer), and fused
+//! quantized inference (`infer`) — for each model family, at 1 thread and
+//! at the configured thread count, on the native backend.  The contrast
+//! is the headline number for the deterministic parallel compute core:
+//! same bits, less wall time.
+//!
+//! The report prints as rows and lands in a JSON file (default
+//! `BENCH_3.json`) so successive PRs can track the perf trajectory.
+
+use super::{bench, BenchResult};
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::data::Dataset;
+use crate::kernels::pool;
+use crate::runtime::Runtime;
+use crate::serve::bench::default_dataset;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+#[derive(Clone, Debug)]
+pub struct SuiteOpts {
+    /// Bundle names to time (one per family by default).
+    pub families: Vec<String>,
+    /// Parallel thread count to compare against 1 (0 = auto-detect).
+    pub threads: usize,
+    /// Where the JSON report lands.
+    pub out: PathBuf,
+    /// Quick mode: smoke bundles + short budgets (the CI smoke step).
+    pub quick: bool,
+    /// Wall budget per measurement.
+    pub budget: Duration,
+    /// Iteration cap per measurement.
+    pub max_iters: usize,
+}
+
+impl SuiteOpts {
+    pub fn new(quick: bool) -> Self {
+        if quick {
+            SuiteOpts {
+                families: vec![
+                    "smoke_vit".into(),
+                    "smoke_gpt".into(),
+                    "smoke_encdec".into(),
+                ],
+                threads: 0,
+                out: PathBuf::from("BENCH_3.json"),
+                quick,
+                budget: Duration::from_millis(250),
+                max_iters: 4,
+            }
+        } else {
+            SuiteOpts {
+                families: vec![
+                    "vit_s10".into(),
+                    "gpt_tiny".into(),
+                    "encdec_mt".into(),
+                ],
+                threads: 0,
+                out: PathBuf::from("BENCH_3.json"),
+                quick,
+                budget: Duration::from_millis(1500),
+                max_iters: 10,
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FamilyTimings {
+    pub bundle: String,
+    pub family: String,
+    pub threads: usize,
+    pub fwd_ms: f64,
+    pub step_ms: f64,
+    pub infer_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SuiteReport {
+    pub threads_baseline: usize,
+    pub threads_parallel: usize,
+    pub rows: Vec<FamilyTimings>,
+}
+
+impl SuiteReport {
+    pub fn all_finite(&self) -> bool {
+        self.rows.iter().all(|r| {
+            r.fwd_ms.is_finite() && r.step_ms.is_finite() && r.infer_ms.is_finite()
+        })
+    }
+
+    /// step-time speedup of the parallel run over the 1-thread run.
+    pub fn step_speedup(&self, bundle: &str) -> Option<f64> {
+        let at = |t: usize| {
+            self.rows
+                .iter()
+                .find(|r| r.bundle == bundle && r.threads == t)
+                .map(|r| r.step_ms)
+        };
+        match (at(self.threads_baseline), at(self.threads_parallel)) {
+            (Some(base), Some(par)) if par > 0.0 => Some(base / par),
+            _ => None,
+        }
+    }
+
+    fn to_json(&self, quick: bool) -> String {
+        let rows: Vec<String> = self
+            .rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"bundle\": \"{}\", \"family\": \"{}\", \
+                     \"threads\": {}, \"fwd_ms\": {:.3}, \"step_ms\": {:.3}, \
+                     \"infer_ms\": {:.3}}}",
+                    r.bundle, r.family, r.threads, r.fwd_ms, r.step_ms,
+                    r.infer_ms
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"bench\": \"BENCH_3\",\n  \"quick\": {},\n  \
+             \"threads_baseline\": {},\n  \"threads_parallel\": {},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            quick,
+            self.threads_baseline,
+            self.threads_parallel,
+            rows.join(",\n")
+        )
+    }
+}
+
+fn ms(r: &BenchResult) -> f64 {
+    r.mean.as_secs_f64() * 1e3
+}
+
+/// Run the suite and write the JSON report.
+pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
+    let par = if opts.threads == 0 { pool::auto_threads() } else { opts.threads };
+    let mut counts = vec![1usize];
+    if par > 1 {
+        counts.push(par);
+    }
+    println!(
+        "bdia bench: families {:?}, threads {counts:?}, budget {:?}/measurement",
+        opts.families, opts.budget
+    );
+
+    let mut rows = Vec::new();
+    for bundle in &opts.families {
+        let rt = Runtime::load(Path::new("artifacts"), bundle)
+            .with_context(|| format!("loading bundle '{bundle}'"))?;
+        let family = rt.manifest.family;
+        let cfg = TrainConfig {
+            model: bundle.clone(),
+            dataset: default_dataset(family).into(),
+            eval_every: 0,
+            log_every: usize::MAX,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::with_runtime(cfg.clone(), rt)?;
+        let ds = crate::experiments::dataset_for(&tr.rt, &cfg)?;
+        let batch = ds.train_batch(0);
+
+        for &t in &counts {
+            pool::set_threads(t);
+            let fwd = bench(
+                &format!("{bundle} fwd t={t}"),
+                1,
+                opts.max_iters,
+                opts.budget,
+                || {
+                    tr.forward(&batch).expect("forward");
+                },
+            );
+            let step = bench(
+                &format!("{bundle} step t={t}"),
+                1,
+                opts.max_iters,
+                opts.budget,
+                || {
+                    tr.train_step(&batch).expect("train_step");
+                },
+            );
+            let infer = bench(
+                &format!("{bundle} infer t={t}"),
+                1,
+                opts.max_iters,
+                opts.budget,
+                || {
+                    tr.evaluate(ds.as_ref(), 1, 0.0).expect("model_infer");
+                },
+            );
+            println!("{}", fwd.row());
+            println!("{}", step.row());
+            println!("{}", infer.row());
+            rows.push(FamilyTimings {
+                bundle: bundle.clone(),
+                family: format!("{family:?}"),
+                threads: t,
+                fwd_ms: ms(&fwd),
+                step_ms: ms(&step),
+                infer_ms: ms(&infer),
+            });
+        }
+    }
+    pool::set_threads(par);
+
+    let report = SuiteReport {
+        threads_baseline: 1,
+        threads_parallel: *counts.last().unwrap(),
+        rows,
+    };
+    for bundle in &opts.families {
+        if let Some(s) = report.step_speedup(bundle) {
+            println!(
+                "{bundle}: step speedup x{s:.2} ({} -> {} threads)",
+                report.threads_baseline, report.threads_parallel
+            );
+        }
+    }
+    std::fs::write(&opts.out, report.to_json(opts.quick))
+        .with_context(|| format!("writing {}", opts.out.display()))?;
+    println!("report written to {}", opts.out.display());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_suite_runs_and_writes_report() {
+        let dir = std::env::temp_dir().join(format!(
+            "bdia_bench_suite_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_3.json");
+        let opts = SuiteOpts {
+            families: vec!["smoke_gpt".into()],
+            threads: 2,
+            out: out.clone(),
+            budget: Duration::from_millis(40),
+            max_iters: 3,
+            ..SuiteOpts::new(true)
+        };
+        let report = run(&opts).unwrap();
+        assert!(report.all_finite());
+        assert_eq!(report.threads_parallel, 2);
+        // one row per thread count
+        assert_eq!(report.rows.len(), 2);
+        let text = std::fs::read_to_string(&out).unwrap();
+        let parsed = crate::config::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("bench").unwrap().as_str().unwrap(),
+            "BENCH_3"
+        );
+        assert!(report.step_speedup("smoke_gpt").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

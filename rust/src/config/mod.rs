@@ -98,6 +98,9 @@ pub struct TrainConfig {
     /// checkpointing: save every K steps (0 disables) into `ckpt_dir`
     pub save_every: usize,
     pub ckpt_dir: PathBuf,
+    /// kernel thread-pool parallelism (0 = auto-detect).  Results are
+    /// bit-identical at any value; this is purely a speed knob.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -125,6 +128,7 @@ impl Default for TrainConfig {
             val_examples: 512,
             save_every: 0,
             ckpt_dir: PathBuf::from("checkpoints"),
+            threads: 0,
         }
     }
 }
@@ -173,6 +177,7 @@ impl TrainConfig {
             "val_examples" => self.val_examples = v.as_usize()?,
             "save_every" => self.save_every = v.as_usize()?,
             "ckpt_dir" => self.ckpt_dir = PathBuf::from(v.as_str()?),
+            "threads" => self.threads = v.as_usize()?,
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -244,6 +249,16 @@ mod tests {
         c.override_kv("ckpt_dir=ckpts/run1").unwrap();
         assert_eq!(c.save_every, 50);
         assert_eq!(c.ckpt_dir, PathBuf::from("ckpts/run1"));
+    }
+
+    #[test]
+    fn threads_key_parses_and_defaults_to_auto() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.threads, 0); // 0 = auto-detect
+        c.override_kv("threads=4").unwrap();
+        assert_eq!(c.threads, 4);
+        let j = Json::parse(r#"{"threads": 2}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&j).unwrap().threads, 2);
     }
 
     #[test]

@@ -1,0 +1,601 @@
+//! Multi-head attention, forward and backward, parallel across
+//! (batch, head) pairs.
+//!
+//! Semantics mirror `python/compile/kernels/attention.py`:
+//! `softmax(Q K^T / sqrt(d_head)) V`, causal mask at -1e30, max-subtracted
+//! softmax.  Every (batch, head) pair is an independent unit of work whose
+//! outputs live in disjoint buffer regions, so the pairs are partitioned
+//! across pool tasks; within a pair, the instruction stream is identical
+//! to the serial code — bit-identical results at any thread count.
+//!
+//! Unlike the seed interpreter, no `p != 0.0` fast paths: masked softmax
+//! zeros are accumulated like any other value (adding `±0.0` to a finite
+//! accumulator is a bit-exact no-op, and non-finite values now propagate
+//! faithfully instead of being silently dropped).
+//!
+//! Head gather/scatter scratch comes from the thread-local workspace
+//! arena, so steady-state calls allocate only the buffers that escape
+//! into the cache.
+
+use super::elementwise::{add_into, col_sum};
+use super::matmul::{linear, matmul_nt, matmul_tn, row_grain};
+use super::pool;
+use super::workspace;
+
+pub const NEG_INF: f32 = -1e30;
+
+/// Attention projection weights, views into parameter leaves.
+pub struct AttnW<'a> {
+    pub wq: &'a [f32],
+    pub bq: &'a [f32],
+    pub wk: &'a [f32],
+    pub bk: &'a [f32],
+    pub wv: &'a [f32],
+    pub bv: &'a [f32],
+    pub wo: &'a [f32],
+    pub bo: &'a [f32],
+}
+
+/// Parameter gradients, same shapes as [`AttnW`].
+pub struct AttnGrads {
+    pub wq: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub bo: Vec<f32>,
+}
+
+/// Forward residuals needed by [`attn_bwd`].
+pub struct AttnCache {
+    /// projected q/k/v, (b*tq, d) / (b*tk, d)
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// pre-output-projection context, (b*tq, d)
+    pub o: Vec<f32>,
+    /// softmax weights, (b*heads, tq, tk)
+    pub att: Vec<f32>,
+}
+
+impl AttnCache {
+    /// Hand the residual buffers back to the workspace arena.
+    pub fn recycle(self) {
+        workspace::give(self.q);
+        workspace::give(self.k);
+        workspace::give(self.v);
+        workspace::give(self.o);
+        workspace::give(self.att);
+    }
+}
+
+/// Copy one head's rows into a contiguous (t, dh) buffer.
+fn gather_head(
+    src: &[f32],
+    bi: usize,
+    hi: usize,
+    t: usize,
+    d: usize,
+    dh: usize,
+    out: &mut [f32],
+) {
+    for i in 0..t {
+        let base = (bi * t + i) * d + hi * dh;
+        out[i * dh..(i + 1) * dh].copy_from_slice(&src[base..base + dh]);
+    }
+}
+
+/// Accumulate a contiguous (t, dh) head buffer back into (b*t, d) rows.
+fn scatter_head_add(
+    dst: &mut [f32],
+    src: &[f32],
+    bi: usize,
+    hi: usize,
+    t: usize,
+    d: usize,
+    dh: usize,
+) {
+    for i in 0..t {
+        let base = (bi * t + i) * d + hi * dh;
+        for j in 0..dh {
+            dst[base + j] += src[i * dh + j];
+        }
+    }
+}
+
+/// Task count over `b * heads` independent pairs, sized so each task
+/// amortizes the fan-out cost.
+fn head_tasks(b: usize, heads: usize, tq: usize, tk: usize, dh: usize) -> usize {
+    pool::n_tasks(b * heads, row_grain(2 * tq * tk * dh))
+}
+
+/// One (batch, head) pair of the forward: scores, masked softmax, and the
+/// per-head context, written into this pair's disjoint `att`/`oh` rows.
+#[allow(clippy::too_many_arguments)]
+fn attn_fwd_head(
+    qh: &[f32],
+    kh: &[f32],
+    vh: &[f32],
+    att: &mut [f32],
+    oh: &mut [f32],
+    tq: usize,
+    tk: usize,
+    dh: usize,
+    scale: f32,
+    causal: bool,
+) {
+    for i in 0..tq {
+        let qr = &qh[i * dh..(i + 1) * dh];
+        let arow = &mut att[i * tk..(i + 1) * tk];
+        let mut m = NEG_INF;
+        for (jj, a) in arow.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            let kr = &kh[jj * dh..(jj + 1) * dh];
+            for (qv, kvv) in qr.iter().zip(kr) {
+                s += *qv * *kvv;
+            }
+            s *= scale;
+            if causal && jj > i {
+                s = NEG_INF;
+            }
+            *a = s;
+            if s > m {
+                m = s;
+            }
+        }
+        let mut denom = 0.0f32;
+        for a in arow.iter_mut() {
+            *a = (*a - m).exp();
+            denom += *a;
+        }
+        let or = &mut oh[i * dh..(i + 1) * dh];
+        for (jj, a) in arow.iter_mut().enumerate() {
+            let p = *a / denom;
+            *a = p;
+            let vr = &vh[jj * dh..(jj + 1) * dh];
+            for (ov, vv) in or.iter_mut().zip(vr) {
+                *ov += p * *vv;
+            }
+        }
+    }
+}
+
+/// Multi-head attention forward.
+///
+/// `x`: (b*tq, d) queries input; `kv`: (b*tk, d) key/value input (== `x`
+/// for self-attention).  Returns the (b*tq, d) output and the backward
+/// cache.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_fwd(
+    w: &AttnW,
+    x: &[f32],
+    kv: &[f32],
+    b: usize,
+    tq: usize,
+    tk: usize,
+    d: usize,
+    heads: usize,
+    causal: bool,
+) -> (Vec<f32>, AttnCache) {
+    debug_assert_eq!(d % heads, 0);
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nq = b * tq;
+    let nk = b * tk;
+
+    let q = linear(x, w.wq, w.bq, nq, d, d);
+    let k = linear(kv, w.wk, w.bk, nk, d, d);
+    let v = linear(kv, w.wv, w.bv, nk, d, d);
+
+    let bh = b * heads;
+    let mut att = workspace::take(bh * tq * tk);
+    let mut oh_all = workspace::take(bh * tq * dh);
+
+    let parts = head_tasks(b, heads, tq, tk, dh);
+    {
+        let atts = pool::split_rows_mut(&mut att, tq * tk, parts);
+        let ohs = pool::split_rows_mut(&mut oh_all, tq * dh, parts);
+        let (q, k, v) = (&q, &k, &v);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = atts
+            .into_iter()
+            .zip(ohs)
+            .map(|(mut ca, mut co)| {
+                Box::new(move || {
+                    let mut qh = workspace::take(tq * dh);
+                    let mut kh = workspace::take(tk * dh);
+                    let mut vh = workspace::take(tk * dh);
+                    let n_pairs = ca.rows.len() / (tq * tk);
+                    for li in 0..n_pairs {
+                        let bhi = ca.row0 + li;
+                        let (bi, hi) = (bhi / heads, bhi % heads);
+                        gather_head(q, bi, hi, tq, d, dh, &mut qh);
+                        gather_head(k, bi, hi, tk, d, dh, &mut kh);
+                        gather_head(v, bi, hi, tk, d, dh, &mut vh);
+                        attn_fwd_head(
+                            &qh,
+                            &kh,
+                            &vh,
+                            &mut ca.rows[li * tq * tk..(li + 1) * tq * tk],
+                            &mut co.rows[li * tq * dh..(li + 1) * tq * dh],
+                            tq,
+                            tk,
+                            dh,
+                            scale,
+                            causal,
+                        );
+                    }
+                    workspace::give(qh);
+                    workspace::give(kh);
+                    workspace::give(vh);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_tasks(tasks);
+    }
+
+    // combine heads: disjoint element sets per (bi, hi), any order
+    let mut o = workspace::take(nq * d);
+    for bhi in 0..bh {
+        let (bi, hi) = (bhi / heads, bhi % heads);
+        scatter_head_add(
+            &mut o,
+            &oh_all[bhi * tq * dh..(bhi + 1) * tq * dh],
+            bi,
+            hi,
+            tq,
+            d,
+            dh,
+        );
+    }
+    workspace::give(oh_all);
+
+    let out = linear(&o, w.wo, w.bo, nq, d, d);
+    (out, AttnCache { q, k, v, o, att })
+}
+
+/// One (batch, head) pair of the backward: softmax jacobian and the
+/// dq/dk/dv head gradients, written into this pair's disjoint rows.
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_head(
+    qh: &[f32],
+    kh: &[f32],
+    vh: &[f32],
+    doh: &[f32],
+    att: &[f32],
+    dqh: &mut [f32],
+    dkh: &mut [f32],
+    dvh: &mut [f32],
+    datt: &mut [f32],
+    tq: usize,
+    tk: usize,
+    dh: usize,
+    scale: f32,
+) {
+    for i in 0..tq {
+        let arow = &att[i * tk..(i + 1) * tk];
+        let dor = &doh[i * dh..(i + 1) * dh];
+        // datt row + softmax jacobian row
+        let mut rowdot = 0.0f32;
+        for jj in 0..tk {
+            let p = arow[jj];
+            let vr = &vh[jj * dh..(jj + 1) * dh];
+            let mut s = 0.0f32;
+            for (dov, vv) in dor.iter().zip(vr) {
+                s += *dov * *vv;
+            }
+            datt[jj] = s;
+            rowdot += s * p;
+            // dv accumulation: dv[jj] += p * do[i]
+            let dvr = &mut dvh[jj * dh..(jj + 1) * dh];
+            for (dvv, dov) in dvr.iter_mut().zip(dor) {
+                *dvv += p * *dov;
+            }
+        }
+        let dqr = &mut dqh[i * dh..(i + 1) * dh];
+        for jj in 0..tk {
+            let p = arow[jj];
+            let ds = p * (datt[jj] - rowdot) * scale;
+            let kr = &kh[jj * dh..(jj + 1) * dh];
+            for (dqv, kvv) in dqr.iter_mut().zip(kr) {
+                *dqv += ds * *kvv;
+            }
+            let qr = &qh[i * dh..(i + 1) * dh];
+            let dkr = &mut dkh[jj * dh..(jj + 1) * dh];
+            for (dkv_, qv) in dkr.iter_mut().zip(qr) {
+                *dkv_ += ds * *qv;
+            }
+        }
+    }
+}
+
+/// Backward of [`attn_fwd`].  Returns (dx, dkv, param grads); for
+/// self-attention the caller adds dx + dkv.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_bwd(
+    w: &AttnW,
+    x: &[f32],
+    kv: &[f32],
+    cache: &AttnCache,
+    dout: &[f32],
+    b: usize,
+    tq: usize,
+    tk: usize,
+    d: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>, AttnGrads) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let nq = b * tq;
+    let nk = b * tk;
+
+    // output projection
+    let dbo = col_sum(dout, nq, d);
+    let dwo = matmul_tn(&cache.o, dout, nq, d, d);
+    let do_ = matmul_nt(dout, w.wo, nq, d, d);
+
+    let bh = b * heads;
+    let mut dqh_all = workspace::take(bh * tq * dh);
+    let mut dkh_all = workspace::take(bh * tk * dh);
+    let mut dvh_all = workspace::take(bh * tk * dh);
+
+    let parts = head_tasks(b, heads, tq, tk, dh);
+    {
+        let dqs = pool::split_rows_mut(&mut dqh_all, tq * dh, parts);
+        let dks = pool::split_rows_mut(&mut dkh_all, tk * dh, parts);
+        let dvs = pool::split_rows_mut(&mut dvh_all, tk * dh, parts);
+        let do_ref = &do_;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = dqs
+            .into_iter()
+            .zip(dks)
+            .zip(dvs)
+            .map(|((mut cq, mut ck), mut cv)| {
+                Box::new(move || {
+                    let mut qh = workspace::take(tq * dh);
+                    let mut kh = workspace::take(tk * dh);
+                    let mut vh = workspace::take(tk * dh);
+                    let mut doh = workspace::take(tq * dh);
+                    let mut datt = workspace::take(tk);
+                    let n_pairs = cq.rows.len() / (tq * dh);
+                    for li in 0..n_pairs {
+                        let bhi = cq.row0 + li;
+                        let (bi, hi) = (bhi / heads, bhi % heads);
+                        gather_head(&cache.q, bi, hi, tq, d, dh, &mut qh);
+                        gather_head(&cache.k, bi, hi, tk, d, dh, &mut kh);
+                        gather_head(&cache.v, bi, hi, tk, d, dh, &mut vh);
+                        gather_head(do_ref, bi, hi, tq, d, dh, &mut doh);
+                        let att =
+                            &cache.att[bhi * tq * tk..(bhi + 1) * tq * tk];
+                        attn_bwd_head(
+                            &qh,
+                            &kh,
+                            &vh,
+                            &doh,
+                            att,
+                            &mut cq.rows[li * tq * dh..(li + 1) * tq * dh],
+                            &mut ck.rows[li * tk * dh..(li + 1) * tk * dh],
+                            &mut cv.rows[li * tk * dh..(li + 1) * tk * dh],
+                            &mut datt,
+                            tq,
+                            tk,
+                            dh,
+                            scale,
+                        );
+                    }
+                    workspace::give(qh);
+                    workspace::give(kh);
+                    workspace::give(vh);
+                    workspace::give(doh);
+                    workspace::give(datt);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_tasks(tasks);
+    }
+
+    let mut dq = workspace::take(nq * d);
+    let mut dk = workspace::take(nk * d);
+    let mut dv = workspace::take(nk * d);
+    for bhi in 0..bh {
+        let (bi, hi) = (bhi / heads, bhi % heads);
+        scatter_head_add(
+            &mut dq,
+            &dqh_all[bhi * tq * dh..(bhi + 1) * tq * dh],
+            bi,
+            hi,
+            tq,
+            d,
+            dh,
+        );
+        scatter_head_add(
+            &mut dk,
+            &dkh_all[bhi * tk * dh..(bhi + 1) * tk * dh],
+            bi,
+            hi,
+            tk,
+            d,
+            dh,
+        );
+        scatter_head_add(
+            &mut dv,
+            &dvh_all[bhi * tk * dh..(bhi + 1) * tk * dh],
+            bi,
+            hi,
+            tk,
+            d,
+            dh,
+        );
+    }
+    workspace::give(dqh_all);
+    workspace::give(dkh_all);
+    workspace::give(dvh_all);
+
+    // input projections
+    let dwq = matmul_tn(x, &dq, nq, d, d);
+    let dbq = col_sum(&dq, nq, d);
+    let dx = matmul_nt(&dq, w.wq, nq, d, d);
+
+    let dwk = matmul_tn(kv, &dk, nk, d, d);
+    let dbk = col_sum(&dk, nk, d);
+    let mut dkv = matmul_nt(&dk, w.wk, nk, d, d);
+
+    let dwv = matmul_tn(kv, &dv, nk, d, d);
+    let dbv = col_sum(&dv, nk, d);
+    let dkv_v = matmul_nt(&dv, w.wv, nk, d, d);
+    add_into(&mut dkv, &dkv_v);
+    workspace::give(dq);
+    workspace::give(dk);
+    workspace::give(dv);
+    workspace::give(dkv_v);
+    workspace::give(do_);
+
+    (
+        dx,
+        dkv,
+        AttnGrads {
+            wq: dwq,
+            bq: dbq,
+            wk: dwk,
+            bk: dbk,
+            wv: dwv,
+            bv: dbv,
+            wo: dwo,
+            bo: dbo,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::set_threads;
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * s).collect()
+    }
+
+    #[test]
+    fn attention_rows_sum_to_one_and_causal_masks() {
+        let mut rng = Rng::new(2);
+        let (b, t, d, heads) = (2usize, 4usize, 8usize, 2usize);
+        let w_ = randv(&mut rng, d * d, 0.2);
+        let bias0 = vec![0.0f32; d];
+        let w = AttnW {
+            wq: &w_,
+            bq: &bias0,
+            wk: &w_,
+            bk: &bias0,
+            wv: &w_,
+            bv: &bias0,
+            wo: &w_,
+            bo: &bias0,
+        };
+        let x = randv(&mut rng, b * t * d, 1.0);
+        let (_, cache) = attn_fwd(&w, &x, &x, b, t, t, d, heads, true);
+        for bh in 0..b * heads {
+            for i in 0..t {
+                let row = &cache.att[bh * t * t + i * t..bh * t * t + (i + 1) * t];
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "softmax row sum {s}");
+                for (jj, &p) in row.iter().enumerate() {
+                    if jj > i {
+                        assert_eq!(p, 0.0, "causal leak at ({i},{jj})");
+                    }
+                }
+            }
+        }
+        cache.recycle();
+    }
+
+    #[test]
+    fn attn_bwd_matches_finite_difference_on_x() {
+        let mut rng = Rng::new(3);
+        let (b, t, d, heads) = (1usize, 3usize, 4usize, 2usize);
+        let mk = |rng: &mut Rng| randv(rng, d * d, 0.3);
+        let (wq, wk, wv, wo) =
+            (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let (bq, bk, bv, bo) = (
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+        );
+        let w = AttnW {
+            wq: &wq,
+            bq: &bq,
+            wk: &wk,
+            bk: &bk,
+            wv: &wv,
+            bv: &bv,
+            wo: &wo,
+            bo: &bo,
+        };
+        let x = randv(&mut rng, b * t * d, 1.0);
+        let g = randv(&mut rng, b * t * d, 1.0);
+        let (_, cache) = attn_fwd(&w, &x, &x, b, t, t, d, heads, false);
+        let (dx, dkv, _) = attn_bwd(&w, &x, &x, &cache, &g, b, t, t, d, heads);
+
+        let probe = |xs: &[f32]| -> f64 {
+            let (y, c) = attn_fwd(&w, xs, xs, b, t, t, d, heads, false);
+            let s = y.iter().zip(&g).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            c.recycle();
+            s
+        };
+        let eps = 1e-2f32;
+        for idx in 0..b * t * d {
+            let mut xp = x.to_vec();
+            xp[idx] += eps;
+            let mut xm = x.to_vec();
+            xm[idx] -= eps;
+            let fd = ((probe(&xp) - probe(&xm)) / (2.0 * eps as f64)) as f32;
+            let an = dx[idx] + dkv[idx]; // self-attention: both paths
+            assert!(
+                (fd - an).abs() < 3e-2 * an.abs().max(1.0),
+                "d/dx[{idx}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn attention_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(7);
+        // big enough that head_tasks() exceeds 1 at multi-thread counts
+        let (b, t, d, heads) = (4usize, 24usize, 32usize, 4usize);
+        let mk = |rng: &mut Rng| randv(rng, d * d, 0.2);
+        let (wq, wk, wv, wo) =
+            (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let bias0 = vec![0.0f32; d];
+        let w = AttnW {
+            wq: &wq,
+            bq: &bias0,
+            wk: &wk,
+            bk: &bias0,
+            wv: &wv,
+            bv: &bias0,
+            wo: &wo,
+            bo: &bias0,
+        };
+        let x = randv(&mut rng, b * t * d, 1.0);
+        let g = randv(&mut rng, b * t * d, 1.0);
+        set_threads(1);
+        let (y1, c1) = attn_fwd(&w, &x, &x, b, t, t, d, heads, true);
+        let (dx1, dkv1, g1) = attn_bwd(&w, &x, &x, &c1, &g, b, t, t, d, heads);
+        for threads in [2usize, 4, 7] {
+            set_threads(threads);
+            let (y, c) = attn_fwd(&w, &x, &x, b, t, t, d, heads, true);
+            let (dx, dkv, gr) = attn_bwd(&w, &x, &x, &c, &g, b, t, t, d, heads);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&y1), bits(&y), "fwd at {threads} threads");
+            assert_eq!(bits(&c1.att), bits(&c.att), "att at {threads} threads");
+            assert_eq!(bits(&dx1), bits(&dx), "dx at {threads} threads");
+            assert_eq!(bits(&dkv1), bits(&dkv), "dkv at {threads} threads");
+            assert_eq!(bits(&g1.wq), bits(&gr.wq), "dwq at {threads} threads");
+            assert_eq!(bits(&g1.bo), bits(&gr.bo), "dbo at {threads} threads");
+            c.recycle();
+        }
+        c1.recycle();
+        set_threads(0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Elementwise helpers and column reductions.
+//!
+//! Elementwise maps parallelize freely (each output element depends on one
+//! input element).  Column reductions (`col_sum`) sum over rows in
+//! ascending order, which is order-sensitive in f32 — they stay serial so
+//! the grouping never depends on the thread count.
+
+use super::pool;
+use super::workspace;
+
+/// Elements per task for cheap memory-bound maps.
+const MAP_GRAIN: usize = 1 << 12;
+
+/// a += b
+pub fn add_into(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += *y;
+    }
+}
+
+/// out = a + b
+pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    let mut out = workspace::take(a.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = *x + *y;
+    }
+    out
+}
+
+/// Column sums of a (rows, cols) matrix — bias gradients.  Serial on
+/// purpose: the row-sum order (`r` ascending) is part of the bit contract.
+pub fn col_sum(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = workspace::take(cols);
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += *v;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation — jax.nn.gelu default)
+// ---------------------------------------------------------------------------
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044_715;
+
+#[inline]
+pub fn gelu(u: f32) -> f32 {
+    let t = (GELU_C * (u + GELU_A * u * u * u)).tanh();
+    0.5 * u * (1.0 + t)
+}
+
+#[inline]
+pub fn gelu_grad(u: f32) -> f32 {
+    let w = GELU_C * (u + GELU_A * u * u * u);
+    let t = w.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * u * sech2 * GELU_C * (1.0 + 3.0 * GELU_A * u * u)
+}
+
+/// out\[i\] = gelu(u\[i\]), row-parallel.
+pub fn map_gelu(u: &[f32]) -> Vec<f32> {
+    let mut out = workspace::take(u.len());
+    pool::for_rows(&mut out, 1, MAP_GRAIN, |i0, chunk| {
+        for (o, v) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
+            *o = gelu(*v);
+        }
+    });
+    out
+}
+
+/// du\[i\] *= gelu'(u\[i\]), row-parallel (the FFN backward chain).
+pub fn scale_by_gelu_grad(du: &mut [f32], u: &[f32]) {
+    debug_assert_eq!(du.len(), u.len());
+    pool::for_rows(du, 1, MAP_GRAIN, |i0, chunk| {
+        for (d, v) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
+            *d *= gelu_grad(*v);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for u in [-3.0f32, -1.0, -0.1, 0.0, 0.1, 1.0, 3.0] {
+            let eps = 1e-3f32;
+            let fd = (gelu(u + eps) - gelu(u - eps)) / (2.0 * eps);
+            assert!(
+                (fd - gelu_grad(u)).abs() < 1e-3,
+                "u={u}: fd {fd} vs {}",
+                gelu_grad(u)
+            );
+        }
+        assert!((gelu(0.0)).abs() < 1e-7);
+        // large positive ~ identity, large negative ~ 0
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn map_gelu_matches_scalar_gelu() {
+        let u: Vec<f32> = (0..10_000).map(|i| (i as f32 - 5000.0) / 997.0).collect();
+        let out = map_gelu(&u);
+        for (o, v) in out.iter().zip(&u) {
+            assert_eq!(o.to_bits(), gelu(*v).to_bits());
+        }
+        let mut du = vec![1.0f32; u.len()];
+        scale_by_gelu_grad(&mut du, &u);
+        for (d, v) in du.iter().zip(&u) {
+            assert_eq!(d.to_bits(), gelu_grad(*v).to_bits());
+        }
+    }
+
+    #[test]
+    fn col_sum_sums_rows_in_order() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(col_sum(&a, 3, 2), vec![9.0, 12.0]);
+        assert_eq!(add(&[1.0, 2.0], &[3.0, 4.0]), vec![4.0, 6.0]);
+    }
+}

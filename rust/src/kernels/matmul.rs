@@ -1,0 +1,258 @@
+//! Cache-blocked, row-parallel matmul family.
+//!
+//! Every variant partitions work across **output rows only** (the m-dim of
+//! `c`): each output element is produced by exactly one task, and its
+//! reduction runs in the same ascending index order as the scalar
+//! reference loop, so results are bit-identical for any thread count and
+//! any block size.
+//!
+//! IEEE faithfulness: the seed interpreter skipped `a == 0.0` terms, which
+//! silently dropped `0.0 * inf = NaN` and signed-zero contributions.  The
+//! kernels here have **no value-dependent control flow** — every term is
+//! accumulated — so they are bit-faithful to the plain summation (and
+//! branch-predictable, which is also what the auto-vectorizer wants).
+
+use super::pool;
+use super::workspace;
+
+/// k-dimension panel height: one panel of `b` (`KC x n`) stays hot in L2
+/// while it is swept over all rows of a task's chunk.  Tiling only groups
+/// iterations — the per-element accumulation order stays `0..k` ascending.
+const KC: usize = 64;
+
+/// Target work (multiply-adds) per parallel task; below this, fan-out
+/// overhead beats the win and the kernels run inline.
+const GRAIN_FLOP: usize = 1 << 14;
+
+/// Minimum rows per task so each task amortizes `GRAIN_FLOP`.
+pub(crate) fn row_grain(work_per_row: usize) -> usize {
+    (GRAIN_FLOP / work_per_row.max(1)).max(1)
+}
+
+/// Shared core: `c(m,n) = a(m,k) @ b(k,n) [+ bias]`, bias added per row
+/// after the full k-reduction (same per-element order as matmul-then-add).
+fn mm_bias(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = workspace::take(m * n);
+    pool::for_rows(&mut c, n, row_grain(k * n), |i0, rows| {
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for (ri, crow) in rows.chunks_exact_mut(n).enumerate() {
+                let arow = &a[(i0 + ri) * k..(i0 + ri) * k + k];
+                for p in kb..kend {
+                    let av = arow[p];
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * *bv;
+                    }
+                }
+            }
+        }
+        if let Some(bs) = bias {
+            for crow in rows.chunks_exact_mut(n) {
+                for (cv, bv) in crow.iter_mut().zip(bs) {
+                    *cv += *bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// c(m,n) = a(m,k) @ b(k,n)
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    mm_bias(a, b, None, m, k, n)
+}
+
+/// y(rows, d_out) = x(rows, d_in) @ w(d_in, d_out) + bias
+pub fn linear(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(bias.len(), d_out);
+    mm_bias(x, w, Some(bias), rows, d_in, d_out)
+}
+
+/// c(k,n) = a(m,k)^T @ b(m,n)
+///
+/// The reduction runs over m; each task owns a contiguous band of output
+/// rows and performs its own full `i = 0..m` sweep, so per-element order
+/// is `i` ascending regardless of the thread count.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut c = workspace::take(k * n);
+    pool::for_rows(&mut c, n, row_grain(m * n), |p0, rows| {
+        debug_assert!(p0 + rows.len() / n <= k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (pr, crow) in rows.chunks_exact_mut(n).enumerate() {
+                let av = arow[p0 + pr];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// c(m,k) = a(m,n) @ b(k,n)^T
+///
+/// `b` is transposed once into a workspace buffer (the "cached weight
+/// transpose"), turning the inner loop into a vectorizable axpy while
+/// keeping the per-element reduction order identical to the dot-product
+/// form: `jj = 0..n` ascending.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut bt = workspace::take(n * k);
+    for p in 0..k {
+        let brow = &b[p * n..(p + 1) * n];
+        for (jj, bv) in brow.iter().enumerate() {
+            bt[jj * k + p] = *bv;
+        }
+    }
+    let mut c = workspace::take(m * k);
+    pool::for_rows(&mut c, k, row_grain(n * k), |i0, rows| {
+        for (ri, crow) in rows.chunks_exact_mut(k).enumerate() {
+            let arow = &a[(i0 + ri) * n..(i0 + ri) * n + n];
+            for (jj, av) in arow.iter().enumerate() {
+                let btrow = &bt[jj * k..(jj + 1) * k];
+                for (cv, bv) in crow.iter_mut().zip(btrow) {
+                    *cv += *av * *bv;
+                }
+            }
+        }
+    });
+    workspace::give(bt);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pool::set_threads;
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_identity_and_transpose_agree() {
+        // a (2,3) @ b (3,2)
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![4.0, 5.0, 10.0, 11.0]);
+        // a^T @ a via matmul_tn equals explicit transpose product
+        let ata = matmul_tn(&a, &a, 2, 3, 3);
+        let at = vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0];
+        let ata2 = matmul(&at, &a, 3, 2, 3);
+        assert_eq!(ata, ata2);
+        // a @ b^T with b (2,3)
+        let abt = matmul_nt(&a, &a, 2, 3, 2);
+        assert_eq!(abt, vec![14.0, 32.0, 32.0, 77.0]);
+    }
+
+    #[test]
+    fn blocked_parallel_matmul_bit_matches_naive_across_thread_counts() {
+        let mut rng = Rng::new(0);
+        // sizes straddling the KC panel and the parallel grain
+        for (m, k, n) in [(1usize, 3usize, 5usize), (17, 70, 9), (64, 130, 33)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let want = naive(&a, &b, m, k, n);
+            for t in [1usize, 2, 4, 7] {
+                set_threads(t);
+                let got = matmul(&a, &b, m, k, n);
+                assert_eq!(
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "matmul {m}x{k}x{n} at {t} threads"
+                );
+            }
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn matmul_is_ieee_faithful_to_plain_summation() {
+        // the seed skipped a == 0.0 terms, silently turning 0 * inf into 0;
+        // the blocked kernels must propagate the NaN like plain summation
+        let a = vec![0.0f32, 1.0];
+        let b = vec![f32::INFINITY, 2.0, 1.0, 3.0]; // (2,2)
+        let c = matmul(&a, &b, 1, 2, 2);
+        assert!(c[0].is_nan(), "0 * inf must produce NaN, got {}", c[0]);
+        assert_eq!(c[1], 0.0 * 2.0 + 1.0 * 3.0);
+
+        // a(1,2)^T @ [inf, 3]: c[0][*] = 0.0 * row -> NaN in column 0
+        let b2 = vec![f32::INFINITY, 3.0];
+        let ct = matmul_tn(&a, &b2, 1, 2, 2);
+        assert!(ct[0].is_nan(), "matmul_tn dropped the 0 * inf term");
+        assert_eq!(ct[2], f32::INFINITY);
+        assert_eq!(ct[3], 3.0);
+    }
+
+    #[test]
+    fn linear_adds_bias_after_full_reduction() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let w = vec![1.0f32, 0.0, 0.0, 1.0];
+        let bias = vec![10.0f32, 20.0];
+        let y = linear(&x, &w, &bias, 2, 2, 2);
+        assert_eq!(y, vec![11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn matmul_nt_transpose_cache_matches_dot_form() {
+        let mut rng = Rng::new(3);
+        let (m, n, k) = (13usize, 41usize, 19usize);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        // dot-product reference: s += a[i][jj] * b[p][jj], jj ascending
+        let mut want = vec![0.0f32; m * k];
+        for i in 0..m {
+            for p in 0..k {
+                let mut s = 0.0f32;
+                for jj in 0..n {
+                    s += a[i * n + jj] * b[p * n + jj];
+                }
+                want[i * k + p] = s;
+            }
+        }
+        for t in [1usize, 3] {
+            set_threads(t);
+            let got = matmul_nt(&a, &b, m, n, k);
+            assert_eq!(
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "matmul_nt at {t} threads"
+            );
+        }
+        set_threads(0);
+    }
+}

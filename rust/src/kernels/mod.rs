@@ -1,0 +1,51 @@
+//! Deterministic parallel compute core.
+//!
+//! Cache-blocked, multi-threaded CPU kernels for the native backend:
+//! matmul/linear, layer norm, GELU and multi-head attention, each with a
+//! hand-written VJP counterpart one layer up (`runtime::native::blocks`).
+//!
+//! ## The determinism-by-construction rule
+//!
+//! The paper's whole value proposition is *exact bit-level* reversibility
+//! (eq. 24 reconstruction from 1 bit of side info per element), so this
+//! layer obeys one invariant everywhere:
+//!
+//! > **Parallelism partitions output rows / examples only.**  Every output
+//! > element is produced by exactly one task, and its reduction runs in
+//! > the same ascending index order as the scalar reference loop.  No
+//! > partial sums are ever combined across tasks.
+//!
+//! Consequently every result is bit-identical for any thread count
+//! (`threads = 1, 2, 4, 7, ...` — asserted by `tests/determinism.rs`),
+//! and the blocked loops are bit-identical to the naive triple loop
+//! (tiling only regroups iterations, never reorders a reduction).
+//!
+//! There is also **no value-dependent control flow**: the seed
+//! interpreter's `a != 0.0` skip dropped `0.0 * inf = NaN` contributions
+//! and is gone — kernels are IEEE-faithful to the plain summation.
+//!
+//! ## Layout
+//!
+//! * [`pool`] — persistent `std::thread` worker pool; the `threads`
+//!   config/CLI knob; row-partitioning helpers
+//! * [`workspace`] — thread-local buffer arena: steady-state calls reuse
+//!   scratch and output buffers instead of allocating
+//! * [`matmul`] — blocked matmul / linear / transposed variants
+//! * [`norm`] — layer norm forward/backward
+//! * [`elementwise`] — add / column sums / GELU maps
+//! * [`attention`] — multi-head attention forward/backward, parallel
+//!   across (batch, head) pairs
+
+pub mod attention;
+pub mod elementwise;
+pub mod matmul;
+pub mod norm;
+pub mod pool;
+pub mod workspace;
+
+pub use attention::{attn_bwd, attn_fwd, AttnCache, AttnGrads, AttnW, NEG_INF};
+pub use elementwise::{
+    add, add_into, col_sum, gelu, gelu_grad, map_gelu, scale_by_gelu_grad,
+};
+pub use matmul::{linear, matmul, matmul_nt, matmul_tn};
+pub use norm::{ln_bwd, ln_fwd, LnCache};

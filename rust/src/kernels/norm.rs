@@ -1,0 +1,245 @@
+//! Row-parallel layer norm, forward and backward.
+//!
+//! Semantics mirror the JAX model exactly (`python/compile/model.py`):
+//! population variance, eps 1e-5.  Each row is normalised independently,
+//! so the forward and the `dx` backward partition cleanly across rows; the
+//! `dscale` / `dbias` column reductions stay serial because their row-sum
+//! order is part of the bit contract.
+
+use super::pool;
+use super::workspace;
+
+const LN_EPS: f32 = 1e-5;
+
+/// Approximate flops per row for the grain calculation (several sweeps).
+fn ln_grain(d: usize) -> usize {
+    super::matmul::row_grain(6 * d)
+}
+
+pub struct LnCache {
+    /// normalised activations (rows, d)
+    pub xhat: Vec<f32>,
+    /// per-row 1/sqrt(var + eps)
+    pub inv: Vec<f32>,
+}
+
+/// One contiguous band of rows of the LN forward.
+fn ln_fwd_rows(
+    scale: &[f32],
+    bias: &[f32],
+    x: &[f32],
+    y: &mut [f32],
+    xhat: &mut [f32],
+    inv: &mut [f32],
+    d: usize,
+) {
+    for (r, iv_out) in inv.iter_mut().enumerate() {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let iv = 1.0 / (var + LN_EPS).sqrt();
+        *iv_out = iv;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            let h = (xr[j] - mu) * iv;
+            xh[j] = h;
+            yr[j] = h * scale[j] + bias[j];
+        }
+    }
+}
+
+/// y = (x - mean) / sqrt(var + eps) * scale + bias, per row of length d.
+pub fn ln_fwd(
+    scale: &[f32],
+    bias: &[f32],
+    x: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, LnCache) {
+    debug_assert_eq!(x.len(), rows * d);
+    let mut y = workspace::take(rows * d);
+    let mut xhat = workspace::take(rows * d);
+    let mut inv = workspace::take(rows);
+    let parts = pool::n_tasks(rows, ln_grain(d));
+    if parts <= 1 {
+        ln_fwd_rows(scale, bias, x, &mut y, &mut xhat, &mut inv, d);
+    } else {
+        let ys = pool::split_rows_mut(&mut y, d, parts);
+        let xhs = pool::split_rows_mut(&mut xhat, d, parts);
+        let invs = pool::split_rows_mut(&mut inv, 1, parts);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ys
+            .into_iter()
+            .zip(xhs)
+            .zip(invs)
+            .map(|((cy, cxh), cinv)| {
+                let r0 = cy.row0;
+                let nrows = cinv.rows.len();
+                let xs = &x[r0 * d..(r0 + nrows) * d];
+                Box::new(move || {
+                    ln_fwd_rows(scale, bias, xs, cy.rows, cxh.rows, cinv.rows, d)
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_tasks(tasks);
+    }
+    (y, LnCache { xhat, inv })
+}
+
+/// Backward of [`ln_fwd`]: returns (dx, dscale, dbias).
+pub fn ln_bwd(
+    scale: &[f32],
+    cache: &LnCache,
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), rows * d);
+    let mut dx = workspace::take(rows * d);
+    pool::for_rows(&mut dx, d, ln_grain(d), |r0, chunk| {
+        for (ri, dxr) in chunk.chunks_exact_mut(d).enumerate() {
+            let r = r0 + ri;
+            let dyr = &dy[r * d..(r + 1) * d];
+            let xh = &cache.xhat[r * d..(r + 1) * d];
+            let iv = cache.inv[r];
+            // dxhat = dy * scale; two row means close the LN jacobian
+            let mut mean_dxh = 0.0f32;
+            let mut mean_dxh_xh = 0.0f32;
+            for j in 0..d {
+                let dxh = dyr[j] * scale[j];
+                mean_dxh += dxh;
+                mean_dxh_xh += dxh * xh[j];
+            }
+            mean_dxh /= d as f32;
+            mean_dxh_xh /= d as f32;
+            for j in 0..d {
+                let dxh = dyr[j] * scale[j];
+                dxr[j] = iv * (dxh - mean_dxh - xh[j] * mean_dxh_xh);
+            }
+        }
+    });
+    // parameter grads: serial row sweep, r ascending (bit contract)
+    let mut dscale = workspace::take(d);
+    let mut dbias = workspace::take(d);
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xh = &cache.xhat[r * d..(r + 1) * d];
+        for j in 0..d {
+            dscale[j] += dyr[j] * xh[j];
+            dbias[j] += dyr[j];
+        }
+    }
+    (dx, dscale, dbias)
+}
+
+impl LnCache {
+    /// Hand the cache buffers back to the workspace arena.
+    pub fn recycle(self) {
+        workspace::give(self.xhat);
+        workspace::give(self.inv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::elementwise::col_sum;
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * s).collect()
+    }
+
+    #[test]
+    fn ln_normalises_rows() {
+        let mut rng = Rng::new(0);
+        let d = 8;
+        let x = randv(&mut rng, 2 * d, 3.0);
+        let scale = vec![1.0; d];
+        let bias = vec![0.0; d];
+        let (y, _) = ln_fwd(&scale, &bias, &x, 2, d);
+        for r in 0..2 {
+            let row = &y[r * d..(r + 1) * d];
+            let mu: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 =
+                row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            assert!(mu.abs() < 1e-5, "mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn ln_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let d = 6;
+        let rows = 2;
+        let x = randv(&mut rng, rows * d, 1.0);
+        let scale = randv(&mut rng, d, 0.5);
+        let bias = randv(&mut rng, d, 0.5);
+        let dy = randv(&mut rng, rows * d, 1.0);
+        let (_, cache) = ln_fwd(&scale, &bias, &x, rows, d);
+        let (dx, dscale, dbias) = ln_bwd(&scale, &cache, &dy, rows, d);
+
+        // probe L = sum(dy * y): dL/dx == dx
+        let eps = 1e-2f32;
+        let probe = |xs: &[f32]| -> f64 {
+            let (y, _) = ln_fwd(&scale, &bias, xs, rows, d);
+            y.iter().zip(&dy).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        for idx in [0usize, 3, 7, rows * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = ((probe(&xp) - probe(&xm)) / (2.0 * eps as f64)) as f32;
+            let an = dx[idx];
+            assert!(
+                (fd - an).abs() < 2e-2 * an.abs().max(1.0),
+                "dx[{idx}]: fd {fd} vs {an}"
+            );
+        }
+        // dbias is just col-sum of dy
+        let cs = col_sum(&dy, rows, d);
+        for j in 0..d {
+            assert!((dbias[j] - cs[j]).abs() < 1e-6);
+        }
+        assert_eq!(dscale.len(), d);
+    }
+
+    #[test]
+    fn ln_fwd_bit_identical_across_thread_counts() {
+        use super::super::pool::set_threads;
+        let mut rng = Rng::new(5);
+        // rows large enough that the parallel path actually engages
+        let (rows, d) = (2048usize, 33usize);
+        let x = randv(&mut rng, rows * d, 2.0);
+        let scale = randv(&mut rng, d, 0.5);
+        let bias = randv(&mut rng, d, 0.5);
+        set_threads(1);
+        let (y1, c1) = ln_fwd(&scale, &bias, &x, rows, d);
+        for t in [2usize, 4, 7] {
+            set_threads(t);
+            let (y, c) = ln_fwd(&scale, &bias, &x, rows, d);
+            assert_eq!(
+                y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                c1.inv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                c.inv.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            c.recycle();
+        }
+        c1.recycle();
+        set_threads(0);
+    }
+}

@@ -1,0 +1,380 @@
+//! Deterministic persistent thread pool for the compute kernels.
+//!
+//! The pool parallelizes **only across output rows / examples**: work is
+//! split into contiguous row ranges, each range is produced by exactly one
+//! task, and every output element is computed with the identical sequential
+//! instruction stream (same reduction order) as the single-threaded code.
+//! Results are therefore bit-identical for *any* configured thread count —
+//! the property the BDIA reversibility contract (eq. 24 reconstruction)
+//! and the checkpoint/serving bit-exactness guarantees depend on.
+//!
+//! Design:
+//!
+//! * one process-wide pool (`set_threads` / `threads`), shared by the
+//!   training loop and the serving worker path — workers are spawned
+//!   lazily up to `threads() - 1` and persist for the process lifetime;
+//! * [`run_tasks`] dispatches boxed closures to the workers, runs the
+//!   first one on the calling thread, and blocks until every task has
+//!   finished — which is what makes handing non-`'static` borrows to the
+//!   persistent workers sound (see the SAFETY note);
+//! * [`for_rows`] / [`split_rows_mut`] are the partitioning helpers: the
+//!   split depends only on the row count and the configured thread count,
+//!   never on data values.
+//!
+//! Rule: tasks must not call [`run_tasks`] themselves (no nested
+//! parallel sections).  Kernels compose sequentially at the model layer
+//! and parallelize only at the leaves, so this never happens in-tree; a
+//! nested call could deadlock the fixed-size worker set.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool parallelism (a safety rail, not a tuning knob).
+pub const MAX_THREADS: usize = 64;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    tx: Mutex<mpsc::Sender<Task>>,
+    rx: Mutex<mpsc::Receiver<Task>>,
+    /// Configured parallelism (>= 1).  Work is split into at most this
+    /// many ranges; the calling thread always processes the first range.
+    threads: AtomicUsize,
+    /// Workers spawned so far (grown on demand, never shrunk).
+    spawned: Mutex<usize>,
+}
+
+fn state() -> &'static PoolState {
+    static S: OnceLock<PoolState> = OnceLock::new();
+    S.get_or_init(|| {
+        let (tx, rx) = mpsc::channel();
+        PoolState {
+            tx: Mutex::new(tx),
+            rx: Mutex::new(rx),
+            threads: AtomicUsize::new(auto_threads()),
+            spawned: Mutex::new(0),
+        }
+    })
+}
+
+/// Default parallelism: every hardware thread the host offers.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS)
+}
+
+/// Configure pool parallelism (the `threads` config/CLI knob).
+/// `0` selects [`auto_threads`].  Safe to call at any time: kernels read
+/// the count per call, and results do not depend on it.
+pub fn set_threads(n: usize) {
+    let n = if n == 0 { auto_threads() } else { n.min(MAX_THREADS) };
+    state().threads.store(n.max(1), Ordering::SeqCst);
+}
+
+/// Currently configured parallelism.
+pub fn threads() -> usize {
+    state().threads.load(Ordering::SeqCst)
+}
+
+/// Workers actually spawned so far (surfaced by `bdia info`).
+pub fn spawned_workers() -> usize {
+    *state().spawned.lock().unwrap()
+}
+
+fn ensure_workers(need: usize) {
+    let s = state();
+    let mut spawned = s.spawned.lock().unwrap();
+    while *spawned < need {
+        std::thread::Builder::new()
+            .name(format!("bdia-kernel-{}", *spawned))
+            .spawn(worker_loop)
+            .expect("spawning kernel pool worker");
+        *spawned += 1;
+    }
+}
+
+fn worker_loop() {
+    loop {
+        // hold the receiver lock only while dequeuing, not while running
+        let task = {
+            let rx = state().rx.lock().unwrap();
+            rx.recv()
+        };
+        match task {
+            Ok(t) => t(), // wrapped: catches panics, always signals done
+            Err(_) => break,
+        }
+    }
+}
+
+struct TaskSync {
+    left: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Decrements the remaining-task counter on drop, so a panicking task
+/// still signals completion and `run_tasks` cannot hang.
+struct DoneGuard(Arc<TaskSync>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let mut left = self.0.left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.0.cv.notify_all();
+        }
+    }
+}
+
+/// Blocks until all remote tasks finished — runs on unwind too, which is
+/// what keeps `run_tasks`' borrow-lifetime argument airtight even if the
+/// inline task panics.
+struct WaitGuard<'a>(&'a TaskSync);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut left = self.0.left.lock().unwrap();
+        while *left > 0 {
+            left = self.0.cv.wait(left).unwrap();
+        }
+    }
+}
+
+/// Run a batch of independent tasks: task 0 on the calling thread, the
+/// rest on the persistent workers.  Returns (or unwinds) only after every
+/// task has completed, so tasks may borrow from the caller's stack.
+pub fn run_tasks<'scope>(mut tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    match tasks.len() {
+        0 => return,
+        1 => {
+            (tasks.pop().unwrap())();
+            return;
+        }
+        _ => {}
+    }
+    let n_remote = tasks.len() - 1;
+    ensure_workers(n_remote.min(MAX_THREADS - 1));
+    let sync = Arc::new(TaskSync {
+        left: Mutex::new(n_remote),
+        cv: Condvar::new(),
+        panicked: AtomicBool::new(false),
+    });
+    let inline = tasks.remove(0);
+    // Wrap every remote task up front.  Each wrapper OWNS its DoneGuard
+    // (captured by value), so the counter is decremented exactly once per
+    // wrapper — when the task finishes running, when it unwinds, or when
+    // the wrapper is dropped unexecuted (e.g. a panic mid-dispatch drops
+    // the rest of this Vec).  That makes WaitGuard's wait terminate on
+    // every path.
+    let wrapped_tasks: Vec<Task> = tasks
+        .into_iter()
+        .map(|t| {
+            let s = Arc::clone(&sync);
+            let done = DoneGuard(Arc::clone(&sync));
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> =
+                Box::new(move || {
+                    let _done = done;
+                    if catch_unwind(AssertUnwindSafe(t)).is_err() {
+                        s.panicked.store(true, Ordering::SeqCst);
+                    }
+                });
+            // SAFETY: the closure borrows data living at least for
+            // 'scope.  `run_tasks` does not return — not even by
+            // unwinding, thanks to the WaitGuard armed before any task
+            // is sent — until every wrapper's DoneGuard has signalled,
+            // so the erased lifetime can never be observed dangling.
+            unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(wrapped)
+            }
+        })
+        .collect();
+    {
+        // armed BEFORE the first send: an unwind out of this block waits
+        // for everything already queued (the unsent remainder drops and
+        // self-signals via its owned guards)
+        let _wait = WaitGuard(&sync);
+        {
+            let tx = state().tx.lock().unwrap();
+            for w in wrapped_tasks {
+                tx.send(w).expect("kernel pool queue closed");
+            }
+        }
+        inline();
+        // _wait drops here: blocks until all remote tasks are done
+    }
+    debug_assert_eq!(*sync.left.lock().unwrap(), 0);
+    if sync.panicked.load(Ordering::SeqCst) {
+        panic!("kernel pool task panicked");
+    }
+}
+
+/// How many parallel tasks to use for `items` work items when each task
+/// should own at least `grain` of them.  Depends only on the configured
+/// thread count and the item count — never on data values — and the
+/// per-item arithmetic is identical either way, so any return value
+/// yields bit-identical results.
+pub fn n_tasks(items: usize, grain: usize) -> usize {
+    if items == 0 {
+        return 1;
+    }
+    (items / grain.max(1)).clamp(1, threads())
+}
+
+/// A contiguous range of rows handed to one task.
+pub struct RowChunk<'a, T> {
+    /// Global index of the first row in `rows`.
+    pub row0: usize,
+    pub rows: &'a mut [T],
+}
+
+/// Split `data` (row-major, `row_len` elements per row) into `parts`
+/// contiguous row ranges.  Requires `parts <= rows` (guaranteed when
+/// `parts` comes from [`n_tasks`]).
+pub fn split_rows_mut<T>(
+    data: &mut [T],
+    row_len: usize,
+    parts: usize,
+) -> Vec<RowChunk<'_, T>> {
+    let rl = row_len.max(1);
+    let rows = data.len() / rl;
+    let base = rows / parts;
+    let extra = rows % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut rest = data;
+    let mut row0 = 0usize;
+    for p in 0..parts {
+        let take_rows = base + usize::from(p < extra);
+        let (head, tail) =
+            std::mem::take(&mut rest).split_at_mut(take_rows * rl);
+        out.push(RowChunk { row0, rows: head });
+        rest = tail;
+        row0 += take_rows;
+    }
+    out
+}
+
+/// Row-parallel driver: split `data` into at most [`threads`] contiguous
+/// row ranges (each with at least `grain` rows) and run
+/// `f(first_row_index, range)` on each.  `f` must derive everything it
+/// writes from `first_row_index` and shared immutable state, which makes
+/// the result independent of the split.
+pub fn for_rows<T, F>(data: &mut [T], row_len: usize, grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let rows = data.len() / row_len.max(1);
+    let parts = n_tasks(rows, grain);
+    if parts <= 1 {
+        f(0, data);
+        return;
+    }
+    let fref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+        split_rows_mut(data, row_len, parts)
+            .into_iter()
+            .map(|c| {
+                Box::new(move || fref(c.row0, c.rows))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+    run_tasks(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_all_rows_contiguously() {
+        let mut v: Vec<u32> = (0..23 * 3).collect();
+        let chunks = split_rows_mut(&mut v, 3, 4);
+        assert_eq!(chunks.len(), 4);
+        let mut next = 0usize;
+        let mut total = 0usize;
+        for c in &chunks {
+            assert_eq!(c.row0, next);
+            assert_eq!(c.rows.len() % 3, 0);
+            assert_eq!(c.rows[0], (c.row0 * 3) as u32);
+            next += c.rows.len() / 3;
+            total += c.rows.len();
+        }
+        assert_eq!(next, 23);
+        assert_eq!(total, 23 * 3);
+    }
+
+    #[test]
+    fn n_tasks_respects_grain_and_threads() {
+        assert_eq!(n_tasks(0, 8), 1);
+        assert_eq!(n_tasks(7, 8), 1); // below grain -> serial
+        // race-free bounds only: sibling tests mutate the global thread
+        // count concurrently, so never compare against a second read of
+        // threads().  The items/grain quotient caps n_tasks regardless.
+        assert!(n_tasks(1 << 20, 1 << 18) <= 4); // 2^20 / 2^18 = 4
+        assert!(n_tasks(1 << 20, 1) >= 1);
+        assert!(n_tasks(5, 1) <= 5); // never more tasks than items
+    }
+
+    #[test]
+    fn for_rows_writes_every_row_once() {
+        set_threads(4);
+        let rows = 101usize;
+        let d = 7usize;
+        let mut out = vec![0.0f32; rows * d];
+        for_rows(&mut out, d, 1, |r0, chunk| {
+            for (ri, row) in chunk.chunks_exact_mut(d).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = ((r0 + ri) * d + j) as f32;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn run_tasks_borrows_stack_data_and_propagates_panics() {
+        set_threads(4);
+        let data = vec![1u64, 2, 3, 4, 5, 6, 7, 8];
+        let mut partials = vec![0u64; 4];
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = partials
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    let d = &data;
+                    Box::new(move || *slot = d[2 * i] + d[2 * i + 1])
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_tasks(tasks);
+        }
+        assert_eq!(partials, vec![3, 7, 11, 15]);
+
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 1 {
+                            panic!("boom");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_tasks(tasks);
+        }));
+        assert!(caught.is_err(), "task panic must propagate to the caller");
+        // pool still works afterwards
+        let mut x = 0u32;
+        run_tasks(vec![Box::new(|| x = 7)]);
+        assert_eq!(x, 7);
+    }
+}

@@ -1,0 +1,117 @@
+//! Workspace arena: per-thread recycling of f32 scratch buffers.
+//!
+//! Every kernel allocates its outputs and scratch through [`take`] and
+//! hands short-lived buffers back with [`give`].  The free lists are
+//! thread-local, so the trainer thread, each serving worker and each pool
+//! worker reuse their own buffers call after call — in steady state the
+//! hot path performs no fresh heap allocation for recurring shapes (the
+//! buffers stay resident, avoiding both allocator traffic and first-touch
+//! page faults).
+//!
+//! [`take`] zero-fills the returned buffer, so a recycled buffer is
+//! indistinguishable from `vec![0.0; len]` — reuse can never change
+//! results.  Buffers that escape into caches or tensors simply drop
+//! normally; recycling is an optimization, never a requirement.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-thread free-list bound — beyond this, [`give`] lets buffers drop.
+const MAX_CACHED: usize = 48;
+
+thread_local! {
+    static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// A zeroed `Vec<f32>` of length `len`, recycled when possible.
+pub fn take(len: usize) -> Vec<f32> {
+    let reused = FREE.with(|f| {
+        let mut free = f.borrow_mut();
+        // best fit: the smallest cached buffer that already has capacity
+        let mut best: Option<usize> = None;
+        for (i, v) in free.iter().enumerate() {
+            if v.capacity() >= len
+                && best.is_none_or(|b| v.capacity() < free[b].capacity())
+            {
+                best = Some(i);
+            }
+        }
+        best.map(|i| free.swap_remove(i))
+    });
+    match reused {
+        Some(mut v) => {
+            HITS.fetch_add(1, Ordering::Relaxed);
+            v.clear();
+            v.resize(len, 0.0);
+            v
+        }
+        None => {
+            MISSES.fetch_add(1, Ordering::Relaxed);
+            vec![0.0f32; len]
+        }
+    }
+}
+
+/// Return a buffer to this thread's free list for reuse.
+pub fn give(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    FREE.with(|f| {
+        let mut free = f.borrow_mut();
+        if free.len() < MAX_CACHED {
+            free.push(v);
+        }
+    });
+}
+
+/// Process-wide arena counters (surfaced by `bdia info` and `/stats`).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkspaceStats {
+    /// take() calls served from a recycled buffer
+    pub hits: u64,
+    /// take() calls that had to allocate
+    pub misses: u64,
+}
+
+pub fn stats() -> WorkspaceStats {
+    WorkspaceStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuses_capacity() {
+        // a size no other test uses, so best-fit must find exactly this
+        // buffer again even if the thread's free list is shared
+        let n = 123_457usize;
+        let mut v = take(n);
+        assert!(v.iter().all(|&x| x == 0.0));
+        v.iter_mut().for_each(|x| *x = 1.5);
+        let ptr = v.as_ptr();
+        give(v);
+        let v2 = take(n);
+        assert_eq!(v2.len(), n);
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled buffer not zeroed");
+        assert_eq!(v2.as_ptr(), ptr, "expected the recycled allocation");
+        give(v2);
+    }
+
+    #[test]
+    fn oversized_requests_fall_through_to_fresh_allocation() {
+        give(take(4));
+        let big = take(1 << 16);
+        assert_eq!(big.len(), 1 << 16);
+        assert!(big.iter().all(|&x| x == 0.0));
+        let s = stats();
+        assert!(s.hits + s.misses > 0);
+    }
+}

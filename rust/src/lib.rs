@@ -5,6 +5,10 @@
 //! for the layer map, backend selection and how to run the tier-1 suite.
 //!
 //! Layer map:
+//! - [`kernels`]: deterministic parallel compute core — cache-blocked,
+//!   multi-threaded matmul/layernorm/attention kernels (row-partitioned
+//!   parallelism only, bit-identical at any thread count), persistent
+//!   thread pool and thread-local workspace arena
 //! - [`runtime`]: pluggable execution backends behind one ABI — the default
 //!   pure-Rust `native` interpreter (no deps, no artifacts) and the
 //!   feature-gated `pjrt` PJRT/XLA executor for AOT HLO bundles
@@ -18,6 +22,7 @@
 pub mod config;
 pub mod tensor;
 pub mod quant;
+pub mod kernels;
 pub mod runtime;
 pub mod model;
 pub mod coordinator;

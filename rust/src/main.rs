@@ -2,12 +2,15 @@
 //!
 //! ```text
 //! bdia train  --config configs/vit_s10_bdia.json [--backend native|pjrt]
-//!             [--save-every K] [--ckpt-dir D] [--resume ckpt] [key=value ...]
+//!             [--threads N] [--save-every K] [--ckpt-dir D]
+//!             [--resume ckpt] [key=value ...]
 //! bdia eval   --model vit_s10 --gamma 0.0 [--ckpt path] [key=value ...]
 //! bdia serve  --model vit_s10 --ckpt path [--port P] [--workers N]
-//!             [--batch-window-us U]
+//!             [--threads N] [--batch-window-us U]
 //! bdia bench-serve --model vit_s10 [--requests N] [--concurrency C]
 //!             [--workers N] [--addr host:port] [--ckpt path]
+//! bdia bench  [--families vit_s10,gpt_tiny,encdec_mt] [--threads N]
+//!             [--quick] [--out BENCH_3.json]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
 //!             [--steps N] [--seeds 0,1,2] [--quick]
 //! bdia info   --model vit_s10       # bundle inventory + call counts
@@ -15,7 +18,8 @@
 //!
 //! The default backend is the dependency-free pure-Rust `native`
 //! interpreter; `--backend pjrt` selects the AOT-HLO/XLA path (requires the
-//! `pjrt` cargo feature and `make artifacts`).
+//! `pjrt` cargo feature and `make artifacts`).  `--threads` sizes the
+//! deterministic kernel pool — results are bit-identical at any value.
 //!
 //! (Argument parsing is in-repo — no clap offline — see `parse_flags`.)
 
@@ -82,6 +86,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&flags, &overrides),
         "serve" => cmd_serve(&flags),
         "bench-serve" => cmd_bench_serve(&flags),
+        "bench" => cmd_bench(&flags),
         "repro" => cmd_repro(&flags, &rest),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
@@ -112,10 +117,26 @@ fn load_config(
     if let Some(d) = flags.get("ckpt-dir") {
         cfg.ckpt_dir = PathBuf::from(d);
     }
+    if let Some(t) = flags.get("threads") {
+        cfg.threads = t.parse().context("--threads must be an integer")?;
+    }
     for kv in overrides {
         cfg.override_kv(kv)?;
     }
+    // size the deterministic kernel pool (0 = auto); bit-identical results
+    // at any value, so this is purely a speed knob
+    bdia::kernels::pool::set_threads(cfg.threads);
     Ok(cfg)
+}
+
+/// Parse a standalone `--threads` flag (commands without a TrainConfig).
+fn parse_threads(flags: &BTreeMap<String, String>) -> Result<usize> {
+    flags
+        .get("threads")
+        .map(|t| t.parse())
+        .transpose()
+        .context("--threads must be an integer")
+        .map(|t| t.unwrap_or(0))
 }
 
 fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<()> {
@@ -262,6 +283,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                 .context("--batch-window-us must be an integer")?
                 .unwrap_or(2000),
         ),
+        threads: parse_threads(flags)?,
     };
     if cfg.ckpt.is_none() {
         eprintln!(
@@ -337,6 +359,7 @@ fn cmd_bench_serve(flags: &BTreeMap<String, String>) -> Result<()> {
             .transpose()
             .context("--batch-window-us")?
             .unwrap_or(defaults.batch_window),
+        threads: parse_threads(flags)?,
         verify: !flags.contains_key("no-verify"),
     };
     let summary = bdia::serve::bench::run(&opts)?;
@@ -345,6 +368,24 @@ fn cmd_bench_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         summary.mismatches == 0,
         "{} responses were NOT bit-identical to direct inference",
         summary.mismatches
+    );
+    Ok(())
+}
+
+fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
+    let quick = flags.contains_key("quick");
+    let mut opts = bdia::bench::suite::SuiteOpts::new(quick);
+    if let Some(f) = flags.get("families") {
+        opts.families = f.split(',').map(str::to_string).collect();
+    }
+    opts.threads = parse_threads(flags)?;
+    if let Some(o) = flags.get("out") {
+        opts.out = PathBuf::from(o);
+    }
+    let report = bdia::bench::suite::run(&opts)?;
+    ensure!(
+        report.all_finite(),
+        "bench produced non-finite timings — kernel regression?"
     );
     Ok(())
 }
@@ -396,6 +437,7 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
         .map(|b| BackendKind::parse(b))
         .transpose()?
         .unwrap_or_default();
+    bdia::kernels::pool::set_threads(parse_threads(flags)?);
     let rt = Runtime::load_with(&dir, &model, backend)?;
     let m = &rt.manifest;
     println!(
@@ -403,6 +445,16 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
         m.name,
         m.family,
         rt.backend.name()
+    );
+    let ws = bdia::kernels::workspace::stats();
+    println!(
+        "  kernels: threads={} (auto={}, workers spawned={}), workspace \
+         hits={} misses={}",
+        bdia::kernels::pool::threads(),
+        bdia::kernels::pool::auto_threads(),
+        bdia::kernels::pool::spawned_workers(),
+        ws.hits,
+        ws.misses
     );
     println!(
         "  dims: d_model={} heads={} K={} K_enc={} batch={} l={}",
@@ -433,21 +485,27 @@ fn print_help() {
     println!(
         "bdia — exact bit-level reversible transformer training (BDIA)\n\n\
          USAGE:\n  bdia train --config configs/<f>.json \
-         [--backend native|pjrt] [--save-every K] [--ckpt-dir D] \
-         [--resume <ckpt>] [key=value ...]\n  \
+         [--backend native|pjrt] [--threads N] [--save-every K] \
+         [--ckpt-dir D] [--resume <ckpt>] [key=value ...]\n  \
          bdia eval  --model <bundle> --gamma <g> [--ckpt <file>]\n  \
          bdia serve --model <bundle> --ckpt <file> [--port P] [--workers N] \
-         [--batch-window-us U]\n  \
+         [--threads N] [--batch-window-us U]\n  \
          bdia bench-serve --model <bundle> [--requests N] [--concurrency C] \
          [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
          [--no-verify]\n  \
+         bdia bench [--families a,b,c] [--threads N] [--quick] \
+         [--out BENCH_3.json]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
          [--quick] [--steps N] [--seeds 0,1]\n  \
          bdia info  --model <bundle> [--backend native|pjrt]\n\n\
          Config keys (key=value overrides): model, backend (native|pjrt), \
          mode (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, \
          lr, optimizer (adam|setadam), seed, eval_every, eval_batches, \
-         train_examples, val_examples, artifacts_dir, save_every, ckpt_dir\n\n\
+         train_examples, val_examples, artifacts_dir, save_every, ckpt_dir, \
+         threads\n\n\
+         Threads: the native backend runs on a deterministic kernel pool \
+         (row-partitioned parallelism only) — losses, gradients and served \
+         bytes are bit-identical at any --threads value; 0 = auto.\n\
          Checkpoints: `train save_every=K` writes <run>-step<N>.ckpt + \
          <run>-latest.ckpt under ckpt_dir (versioned, CRC-checked, bit-exact \
          round trip); `eval --ckpt` / `serve --ckpt` load them.\n\
@@ -456,7 +514,9 @@ fn print_help() {
          dynamic micro-batching across concurrent requests; `bench-serve` \
          load-tests a server (self-hosted on an ephemeral port unless --addr \
          is given) and verifies responses are bit-identical to direct \
-         inference.\n\n\
+         inference.\n\
+         Benchmarks: `bench` times fwd/bwd/infer per model family at 1 and \
+         N threads and writes BENCH_3.json.\n\n\
          The native backend is pure Rust and needs no artifacts; pjrt needs \
          the `pjrt` cargo feature plus `make artifacts`."
     );

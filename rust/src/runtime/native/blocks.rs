@@ -1,20 +1,24 @@
-//! Model-level native ops: transformer block, embeddings and head+loss,
-//! forward and VJP, assembled from the [`super::math`] primitives.
+//! Shared block-level machinery of the native backend: the transformer
+//! block (forward + fused VJP), the RevViT sub-branches, the head + loss,
+//! and the fused quantized BDIA stack inference — all assembled from the
+//! [`crate::kernels`] compute core.
 //!
 //! Parameter leaves arrive as flat `&[&Tensor]` slices in manifest flatten
-//! order (see `registry::block_leaves` — attn, ffn, ln1, ln2 [, lnx, xattn],
-//! each sub-dict's keys sorted); gradients are emitted in the identical
-//! order, which is the executable ABI the coordinator relies on.
+//! order (see `registry::block_leaves` — attn, ffn, ln1, ln2 [, lnx,
+//! xattn], each sub-dict's keys sorted); gradients are emitted in the
+//! identical order, which is the executable ABI the coordinator relies on.
 
 // shape parameters are passed individually on purpose: these signatures
 // mirror the executable ABI, not an internal convenience struct
 #![allow(clippy::too_many_arguments)]
 
-use super::math::{
-    add, add_into, attn_bwd, attn_fwd, col_sum, gelu, gelu_grad, linear, ln_bwd,
-    ln_fwd, matmul_nt, matmul_tn, AttnCache, AttnGrads, AttnW, LnCache,
+use crate::kernels::{
+    add, add_into, attn_bwd, attn_fwd, col_sum, linear, ln_bwd, ln_fwd,
+    map_gelu, matmul_nt, matmul_tn, scale_by_gelu_grad, workspace, AttnCache,
+    AttnGrads, AttnW, LnCache,
 };
 use crate::model::Family;
+use crate::quant::{self, Fixed};
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{ensure, Result};
 
@@ -119,6 +123,13 @@ struct FfnCache {
     a: Vec<f32>,
 }
 
+impl FfnCache {
+    fn recycle(self) {
+        workspace::give(self.u1);
+        workspace::give(self.a);
+    }
+}
+
 fn ffn_fwd(
     w1: &[f32],
     b1: &[f32],
@@ -130,7 +141,7 @@ fn ffn_fwd(
     dr: usize,
 ) -> (Vec<f32>, FfnCache) {
     let u1 = linear(x, w1, b1, rows, d, dr);
-    let a: Vec<f32> = u1.iter().map(|&u| gelu(u)).collect();
+    let a = map_gelu(&u1);
     let y = linear(&a, w2, b2, rows, dr, d);
     (y, FfnCache { u1, a })
 }
@@ -149,12 +160,11 @@ fn ffn_bwd(
     let dw2 = matmul_tn(&cache.a, dy, rows, dr, d);
     let db2 = col_sum(dy, rows, d);
     let mut du1 = matmul_nt(dy, w2, rows, d, dr);
-    for (du, &u) in du1.iter_mut().zip(&cache.u1) {
-        *du *= gelu_grad(u);
-    }
+    scale_by_gelu_grad(&mut du1, &cache.u1);
     let dw1 = matmul_tn(x, &du1, rows, d, dr);
     let db1 = col_sum(&du1, rows, dr);
     let dx = matmul_nt(&du1, w1, rows, dr, d);
+    workspace::give(du1);
     (dx, dw1, db1, dw2, db2)
 }
 
@@ -171,6 +181,22 @@ struct BlockCache {
     zn: Vec<f32>,
     ln2: LnCache,
     ffn: FfnCache,
+}
+
+impl BlockCache {
+    fn recycle(self) {
+        workspace::give(self.xn);
+        self.ln1.recycle();
+        self.attn.recycle();
+        if let Some(c) = self.cross {
+            workspace::give(c.un);
+            c.lnx.recycle();
+            c.xattn.recycle();
+        }
+        workspace::give(self.zn);
+        self.ln2.recycle();
+        self.ffn.recycle();
+    }
 }
 
 struct CrossCache {
@@ -194,6 +220,7 @@ fn block_fwd_cached(
         &w.attn, &xn, &xn, dims.b, dims.t, dims.t, d, dims.heads, dims.causal,
     );
     let u = add(x, &a);
+    workspace::give(a);
 
     let (u2, cross) = if let Some(m) = mem {
         let lnx_scale = w.lnx_scale.expect("cross block without lnx");
@@ -203,7 +230,10 @@ fn block_fwd_cached(
         let (c, xattn) = attn_fwd(
             xw, &un, m, dims.b, dims.t, dims.t_src, d, dims.heads, false,
         );
-        (add(&u, &c), Some(CrossCache { un, lnx, xattn }))
+        let u2 = add(&u, &c);
+        workspace::give(c);
+        workspace::give(u);
+        (u2, Some(CrossCache { un, lnx, xattn }))
     } else {
         (u, None)
     };
@@ -214,6 +244,7 @@ fn block_fwd_cached(
     // h = u2 + f - x
     let mut h = u2;
     add_into(&mut h, &f);
+    workspace::give(f);
     for (hv, xv) in h.iter_mut().zip(x) {
         *hv -= *xv;
     }
@@ -222,7 +253,9 @@ fn block_fwd_cached(
 
 /// Forward only (model_infer / reconstruction probes).
 pub fn block_h(w: &BlockW, x: &[f32], mem: Option<&[f32]>, dims: BlockDims) -> Vec<f32> {
-    block_fwd_cached(w, x, mem, dims).0
+    let (h, cache) = block_fwd_cached(w, x, mem, dims);
+    cache.recycle();
+    h
 }
 
 /// Per-leaf parameter gradients of one block, emitted in flatten order.
@@ -296,9 +329,11 @@ pub fn block_vjp(
         let (dx2, dscale, dbias) = ln_bwd(w.ln2_scale, &cache.ln2, &dzn, rows, d);
         (dx2, (dbias, dscale))
     };
+    workspace::give(dzn);
     // du2 = g (residual term) + LN2 chain
     let mut du2 = g.to_vec();
     add_into(&mut du2, &du2_ln);
+    workspace::give(du2_ln);
 
     let (mut du, dmem, cross_grads) = if let Some(cc) = &cache.cross {
         let xw = w.xattn.as_ref().expect("xattn");
@@ -312,9 +347,11 @@ pub fn block_vjp(
                 ln_bwd(w.lnx_scale.expect("lnx"), &cc.lnx, &dun, rows, d);
             (dxl, dscale, dbias)
         };
+        workspace::give(dun);
         // u2 = u + c: c-path through lnx, plus the direct residual du2
         let mut du = du2.clone();
         add_into(&mut du, &du_ln);
+        workspace::give(du_ln);
         (du, Some(dm), Some((lnx_dbias, lnx_dscale, xattn_g)))
     } else {
         // no cross branch: du == du2, move it (hot path — one full
@@ -329,17 +366,21 @@ pub fn block_vjp(
     );
     let mut dxn = dxn_q;
     add_into(&mut dxn, &dxn_kv);
+    workspace::give(dxn_kv);
     let (dx_ln1, ln1_dscale, ln1_dbias) = {
         let (dxl, dscale, dbias) = ln_bwd(w.ln1_scale, &cache.ln1, &dxn, rows, d);
         (dxl, dscale, dbias)
     };
+    workspace::give(dxn);
 
     // dx = du (u = x + a)  +  ln1 chain  -  g (the explicit -x in h)
     let mut dx = std::mem::take(&mut du);
     add_into(&mut dx, &dx_ln1);
+    workspace::give(dx_ln1);
     for (dv, gv) in dx.iter_mut().zip(g) {
         *dv -= *gv;
     }
+    cache.recycle();
 
     let (ln2_dbias, ln2_dscale) = ln2_bias_dscale;
     let grads = BlockGrads {
@@ -364,11 +405,14 @@ pub fn block_vjp(
 /// attn_fwd executable: attention over ln1-normalised input.
 pub fn attn_branch_fwd(w: &BlockW, x: &[f32], dims: BlockDims) -> Vec<f32> {
     let rows = dims.b * dims.t;
-    let (xn, _) = ln_fwd(w.ln1_scale, w.ln1_bias, x, rows, dims.d);
-    let (out, _) = attn_fwd(
+    let (xn, ln1) = ln_fwd(w.ln1_scale, w.ln1_bias, x, rows, dims.d);
+    let (out, cache) = attn_fwd(
         &w.attn, &xn, &xn, dims.b, dims.t, dims.t, dims.d, dims.heads,
         dims.causal,
     );
+    workspace::give(xn);
+    ln1.recycle();
+    cache.recycle();
     out
 }
 
@@ -389,9 +433,14 @@ pub fn attn_branch_vjp(
     );
     let (dxn_q, dxn_kv, attn_g) =
         attn_bwd(&w.attn, &xn, &xn, &cache, g, dims.b, dims.t, dims.t, d, dims.heads);
+    cache.recycle();
+    workspace::give(xn);
     let mut dxn = dxn_q;
     add_into(&mut dxn, &dxn_kv);
+    workspace::give(dxn_kv);
     let (dx, ln1_dscale, ln1_dbias) = ln_bwd(w.ln1_scale, &ln1, &dxn, rows, d);
+    workspace::give(dxn);
+    ln1.recycle();
     let grads = BlockGrads {
         attn: attn_g,
         ffn_b1: vec![0.0; dr],
@@ -411,9 +460,12 @@ pub fn attn_branch_vjp(
 pub fn ffn_branch_fwd(w: &BlockW, x: &[f32], dims: BlockDims) -> Vec<f32> {
     let rows = dims.b * dims.t;
     let dr = dims.d * dims.ratio;
-    let (zn, _) = ln_fwd(w.ln2_scale, w.ln2_bias, x, rows, dims.d);
-    let (out, _) =
+    let (zn, ln2) = ln_fwd(w.ln2_scale, w.ln2_bias, x, rows, dims.d);
+    let (out, ffn) =
         ffn_fwd(w.ffn_w1, w.ffn_b1, w.ffn_w2, w.ffn_b2, &zn, rows, dims.d, dr);
+    workspace::give(zn);
+    ln2.recycle();
+    ffn.recycle();
     out
 }
 
@@ -432,7 +484,11 @@ pub fn ffn_branch_vjp(
         ffn_fwd(w.ffn_w1, w.ffn_b1, w.ffn_w2, w.ffn_b2, &zn, rows, d, dr);
     let (dzn, dw1, db1, dw2, db2) =
         ffn_bwd(w.ffn_w1, w.ffn_w2, &zn, &cache, g, rows, d, dr);
+    cache.recycle();
+    workspace::give(zn);
     let (dx, ln2_dscale, ln2_dbias) = ln_bwd(w.ln2_scale, &ln2, &dzn, rows, d);
+    workspace::give(dzn);
+    ln2.recycle();
     let grads = BlockGrads {
         attn: AttnGrads {
             wq: vec![0.0; d * d],
@@ -458,187 +514,56 @@ pub fn ffn_branch_vjp(
 }
 
 // ---------------------------------------------------------------------------
-// embeddings
+// fused quantized BDIA stack inference (eqs. 18, 19, 21/22)
 // ---------------------------------------------------------------------------
 
-/// ViT patchify: (B, C, H, W) -> (B*np, p*p*C) rows, np = (H/p)*(W/p).
-/// Patch-vector element order matches the JAX transpose (b,gh,gw,py,px,c).
-fn patchify(images: &[f32], b: usize, c: usize, hw: usize, p: usize) -> Vec<f32> {
-    let gside = hw / p;
-    let np = gside * gside;
-    let pdim = p * p * c;
-    let mut out = vec![0.0f32; b * np * pdim];
-    for bi in 0..b {
-        for ghi in 0..gside {
-            for gwi in 0..gside {
-                let patch_row = (bi * np + ghi * gside + gwi) * pdim;
-                for py in 0..p {
-                    for px in 0..p {
-                        for ch in 0..c {
-                            let src = ((bi * c + ch) * hw + ghi * p + py) * hw
-                                + gwi * p
-                                + px;
-                            out[patch_row + (py * p + px) * c + ch] = images[src];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    out
-}
-
-/// ViT embed forward.  Leaves: [cls (1,1,d), pos (tokens,d), proj_b (d),
-/// proj_w (pdim,d)].
-pub fn embed_fwd_vit(
-    leaves: &[&Tensor],
-    images: &Tensor,
-    b: usize,
-    c: usize,
-    hw: usize,
-    p: usize,
-    d: usize,
+/// Quantized stack inference with constant gamma, shared by all families.
+pub fn stack_infer(
+    blocks: &[&[&Tensor]],
+    x0: Tensor,
+    gamma: f32,
+    bd: BlockDims,
+    cross: bool,
+    mem: Option<&Tensor>,
+    f: Fixed,
 ) -> Result<Tensor> {
-    ensure!(leaves.len() == 4, "vit embed expects 4 leaves");
-    let (cls, pos, proj_b, proj_w) =
-        (leaves[0].data(), leaves[1].data(), leaves[2].data(), leaves[3].data());
-    let gside = hw / p;
-    let np = gside * gside;
-    let tokens = np + 1;
-    let pdim = p * p * c;
-    let patches = patchify(images.data(), b, c, hw, p);
-    let z = linear(&patches, proj_w, proj_b, b * np, pdim, d);
-    let mut out = vec![0.0f32; b * tokens * d];
-    for bi in 0..b {
-        let row0 = bi * tokens * d;
-        for j in 0..d {
-            out[row0 + j] = cls[j] + pos[j];
-        }
-        for t in 0..np {
-            let dst = row0 + (t + 1) * d;
-            let src = (bi * np + t) * d;
-            let posr = &pos[(t + 1) * d..(t + 2) * d];
-            for j in 0..d {
-                out[dst + j] = z[src + j] + posr[j];
+    let shape = x0.shape().to_vec();
+    let mut x = x0;
+    quant::quantize_activation(&mut x, f); // eq. 18
+    let w0 = BlockW::from_leaves(blocks[0], cross)?;
+    let h0 = block_h(&w0, x.data(), mem.map(|m| m.data()), bd);
+    let h0t = Tensor::from_vec(&shape, h0)?;
+    let x1 = quant::first_step_quant(&x, &h0t, f)?; // eq. 19
+    let (mut x_prev, mut x_cur) = (x, x1);
+    for leaves in blocks.iter().skip(1) {
+        let wk = BlockW::from_leaves(leaves, cross)?;
+        let h = block_h(&wk, x_cur.data(), mem.map(|m| m.data()), bd);
+        // eq. 21 with constant gamma (gamma = 0 collapses to eq. 22)
+        let xp = x_prev.data();
+        let xc = x_cur.data();
+        let mut nxt = workspace::take(h.len());
+        // elementwise: each output element depends on one index only, so
+        // the row-partitioned pool applies (grain keeps tiny dims serial)
+        crate::kernels::pool::for_rows(&mut nxt, 1, 1 << 12, |i0, chunk| {
+            for (off, nv) in chunk.iter_mut().enumerate() {
+                let i = i0 + off;
+                // NOTE: t1 uses plain round-half-away quantization, matching
+                // the inference kernel (`kernels/bdia_update.py::_bdia_kernel`)
+                // — NOT the training combine's eq.-23 parity division, which
+                // needs the side bit that only exists during training.  At
+                // gamma = +/-0.5 the two can differ by one grid step on odd
+                // negative unit counts; this is the paper's intended
+                // inference semantics (eq. 22 at gamma = 0 is unaffected).
+                let t1 = f.quantize(gamma * xp[i]);
+                let t2 = f.quantize((1.0 - gamma) * xc[i] + (1.0 + gamma) * h[i]);
+                *nv = t1 + t2;
             }
-        }
+        });
+        workspace::give(h);
+        x_prev = x_cur;
+        x_cur = Tensor::from_vec(&shape, nxt)?;
     }
-    Tensor::from_vec(&[b, tokens, d], out)
-}
-
-/// ViT embed VJP (parameter grads only, matching the AOT executable).
-pub fn embed_vjp_vit(
-    leaves: &[&Tensor],
-    images: &Tensor,
-    g: &Tensor,
-    b: usize,
-    c: usize,
-    hw: usize,
-    p: usize,
-    d: usize,
-) -> Result<Vec<Tensor>> {
-    ensure!(leaves.len() == 4, "vit embed expects 4 leaves");
-    let gside = hw / p;
-    let np = gside * gside;
-    let tokens = np + 1;
-    let pdim = p * p * c;
-    let gd = g.data();
-
-    let mut dcls = vec![0.0f32; d];
-    let mut dpos = vec![0.0f32; tokens * d];
-    // dz rows (b*np, d) = g[:, 1:, :]
-    let mut dz = vec![0.0f32; b * np * d];
-    for bi in 0..b {
-        let row0 = bi * tokens * d;
-        for j in 0..d {
-            dcls[j] += gd[row0 + j];
-            dpos[j] += gd[row0 + j];
-        }
-        for t in 0..np {
-            let src = row0 + (t + 1) * d;
-            let dst = (bi * np + t) * d;
-            for j in 0..d {
-                let v = gd[src + j];
-                dpos[(t + 1) * d + j] += v;
-                dz[dst + j] = v;
-            }
-        }
-    }
-    let patches = patchify(images.data(), b, c, hw, p);
-    let dproj_w = matmul_tn(&patches, &dz, b * np, pdim, d);
-    let dproj_b = col_sum(&dz, b * np, d);
-    Ok(vec![
-        Tensor::from_vec(&[1, 1, d], dcls)?,
-        Tensor::from_vec(&[tokens, d], dpos)?,
-        Tensor::from_vec(&[d], dproj_b)?,
-        Tensor::from_vec(&[pdim, d], dproj_w)?,
-    ])
-}
-
-/// Token embed forward (gpt / encdec decoder / encoder).  Leaves:
-/// [wpe (t_max,d), wte (V,d)].
-pub fn embed_fwd_tok(
-    leaves: &[&Tensor],
-    tokens: &IntTensor,
-    b: usize,
-    t: usize,
-    d: usize,
-    vocab: usize,
-) -> Result<Tensor> {
-    ensure!(leaves.len() == 2, "token embed expects 2 leaves");
-    let (wpe, wte) = (leaves[0].data(), leaves[1].data());
-    ensure!(wpe.len() >= t * d, "wpe too small for sequence length {t}");
-    let ids = tokens.data();
-    let mut out = vec![0.0f32; b * t * d];
-    for bi in 0..b {
-        for ti in 0..t {
-            let id = ids[bi * t + ti];
-            ensure!(
-                (0..vocab as i32).contains(&id),
-                "token id {id} out of vocab range {vocab}"
-            );
-            let dst = (bi * t + ti) * d;
-            let te = &wte[id as usize * d..(id as usize + 1) * d];
-            let pe = &wpe[ti * d..(ti + 1) * d];
-            for j in 0..d {
-                out[dst + j] = te[j] + pe[j];
-            }
-        }
-    }
-    Tensor::from_vec(&[b, t, d], out)
-}
-
-/// Token embed VJP (parameter grads only).
-pub fn embed_vjp_tok(
-    leaves: &[&Tensor],
-    tokens: &IntTensor,
-    g: &Tensor,
-    b: usize,
-    t: usize,
-    d: usize,
-    vocab: usize,
-) -> Result<Vec<Tensor>> {
-    ensure!(leaves.len() == 2, "token embed expects 2 leaves");
-    let t_max = leaves[0].shape()[0];
-    let gd = g.data();
-    let ids = tokens.data();
-    let mut dwpe = vec![0.0f32; t_max * d];
-    let mut dwte = vec![0.0f32; vocab * d];
-    for bi in 0..b {
-        for ti in 0..t {
-            let src = (bi * t + ti) * d;
-            let id = ids[bi * t + ti] as usize;
-            for j in 0..d {
-                let v = gd[src + j];
-                dwpe[ti * d + j] += v;
-                dwte[id * d + j] += v;
-            }
-        }
-    }
-    Ok(vec![
-        Tensor::from_vec(&[t_max, d], dwpe)?,
-        Tensor::from_vec(&[vocab, d], dwte)?,
-    ])
+    Ok(x_cur)
 }
 
 // ---------------------------------------------------------------------------
@@ -692,21 +617,61 @@ fn ce_row(lr: &[f32], y: usize, probs: &mut [f32]) -> (f64, bool) {
 
 /// Softmax cross-entropy over logits rows; returns (loss, ncorrect,
 /// per-row softmax) — softmax retained for the VJP.
+///
+/// Rows score in parallel (each row's softmax is row-local); the loss and
+/// correct-count reductions then run serially in row order, so the
+/// scalars are bit-identical at any thread count.
 fn ce_rows(
     logits: &[f32],
     labels: &[i32],
     rows: usize,
     n_out: usize,
 ) -> (f32, f32, Vec<f32>) {
-    let mut probs = vec![0.0f32; rows * n_out];
+    use crate::kernels::pool;
+    let mut probs = workspace::take(rows * n_out);
+    let mut row_loss = vec![0.0f64; rows];
+    let mut row_hit = vec![false; rows];
+    let parts = pool::n_tasks(rows, crate::kernels::matmul::row_grain(4 * n_out));
+    if parts <= 1 {
+        for r in 0..rows {
+            let lr = &logits[r * n_out..(r + 1) * n_out];
+            let (l, hit) =
+                ce_row(lr, labels[r] as usize, &mut probs[r * n_out..(r + 1) * n_out]);
+            row_loss[r] = l;
+            row_hit[r] = hit;
+        }
+    } else {
+        let ps = pool::split_rows_mut(&mut probs, n_out, parts);
+        let ls = pool::split_rows_mut(&mut row_loss, 1, parts);
+        let hs = pool::split_rows_mut(&mut row_hit, 1, parts);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ps
+            .into_iter()
+            .zip(ls)
+            .zip(hs)
+            .map(|((mut cp, mut cl), mut ch)| {
+                Box::new(move || {
+                    for li in 0..cl.rows.len() {
+                        let r = cp.row0 + li;
+                        let lr = &logits[r * n_out..(r + 1) * n_out];
+                        let (l, hit) = ce_row(
+                            lr,
+                            labels[r] as usize,
+                            &mut cp.rows[li * n_out..(li + 1) * n_out],
+                        );
+                        cl.rows[li] = l;
+                        ch.rows[li] = hit;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_tasks(tasks);
+    }
+    // serial reductions, r ascending (bit contract)
     let mut loss = 0.0f64;
     let mut ncorrect = 0.0f32;
     for r in 0..rows {
-        let lr = &logits[r * n_out..(r + 1) * n_out];
-        let (l, hit) =
-            ce_row(lr, labels[r] as usize, &mut probs[r * n_out..(r + 1) * n_out]);
-        loss += l;
-        if hit {
+        loss += row_loss[r];
+        if row_hit[r] {
             ncorrect += 1.0;
         }
     }
@@ -726,19 +691,23 @@ fn head_logits(
     n_out: usize,
 ) -> (Vec<f32>, usize) {
     let rows_all = b * t;
-    let (z, _) = ln_fwd(w.ln_scale, w.ln_bias, x.data(), rows_all, d);
+    let (z, ln) = ln_fwd(w.ln_scale, w.ln_bias, x.data(), rows_all, d);
+    ln.recycle();
     let (zc, rows): (Vec<f32>, usize) = if family == Family::Vit {
         // cls token only
-        let mut out = vec![0.0f32; b * d];
+        let mut out = workspace::take(b * d);
         for bi in 0..b {
             out[bi * d..(bi + 1) * d]
                 .copy_from_slice(&z[bi * t * d..bi * t * d + d]);
         }
+        workspace::give(z);
         (out, b)
     } else {
         (z, rows_all)
     };
-    (linear(&zc, w.w, w.b, rows, d, n_out), rows)
+    let logits = linear(&zc, w.w, w.b, rows, d, n_out);
+    workspace::give(zc);
+    (logits, rows)
 }
 
 /// head_loss_fwd: (mean CE loss, #correct), both scalars.
@@ -754,7 +723,9 @@ pub fn head_loss_fwd(
 ) -> Result<Vec<Tensor>> {
     let w = head_view(leaves)?;
     let (logits, rows) = head_logits(&w, x, family, b, t, d, n_out);
-    let (loss, ncorrect, _) = ce_rows(&logits, labels.data(), rows, n_out);
+    let (loss, ncorrect, probs) = ce_rows(&logits, labels.data(), rows, n_out);
+    workspace::give(logits);
+    workspace::give(probs);
     Ok(vec![Tensor::scalar(loss), Tensor::scalar(ncorrect)])
 }
 
@@ -781,7 +752,7 @@ pub fn head_loss_fwd_ex(
     ensure!(lab.len() == rows, "labels/rows mismatch: {} vs {rows}", lab.len());
     let mut loss = vec![0.0f32; b];
     let mut correct = vec![0.0f32; b];
-    let mut probs_scratch = vec![0.0f32; n_out];
+    let mut probs_scratch = workspace::take(n_out);
     for bi in 0..b {
         let mut lsum = 0.0f64;
         let mut ncorrect = 0.0f32;
@@ -797,6 +768,8 @@ pub fn head_loss_fwd_ex(
         loss[bi] = (lsum / rows_per_ex as f64) as f32;
         correct[bi] = ncorrect;
     }
+    workspace::give(logits);
+    workspace::give(probs_scratch);
     Ok(vec![
         Tensor::from_vec(&[b], loss)?,
         Tensor::from_vec(&[b], correct)?,
@@ -818,17 +791,19 @@ pub fn head_loss_vjp(
     let rows_all = b * t;
     let (z, ln_cache) = ln_fwd(w.ln_scale, w.ln_bias, x.data(), rows_all, d);
     let (zc, rows): (Vec<f32>, usize) = if family == Family::Vit {
-        let mut out = vec![0.0f32; b * d];
+        let mut out = workspace::take(b * d);
         for bi in 0..b {
             out[bi * d..(bi + 1) * d]
                 .copy_from_slice(&z[bi * t * d..bi * t * d + d]);
         }
+        workspace::give(z);
         (out, b)
     } else {
         (z, rows_all)
     };
     let logits = linear(&zc, w.w, w.b, rows, d, n_out);
     let (_, _, probs) = ce_rows(&logits, labels.data(), rows, n_out);
+    workspace::give(logits);
 
     // dlogits = (softmax - onehot) / rows
     let mut dlogits = probs;
@@ -843,19 +818,24 @@ pub fn head_loss_vjp(
     let dw = matmul_tn(&zc, &dlogits, rows, d, n_out);
     let db = col_sum(&dlogits, rows, n_out);
     let dzc = matmul_nt(&dlogits, w.w, rows, n_out, d);
+    workspace::give(dlogits);
+    workspace::give(zc);
 
     // scatter back to full (b*t, d) rows for the ln_f backward
     let dz: Vec<f32> = if family == Family::Vit {
-        let mut out = vec![0.0f32; rows_all * d];
+        let mut out = workspace::take(rows_all * d);
         for bi in 0..b {
             out[bi * t * d..bi * t * d + d]
                 .copy_from_slice(&dzc[bi * d..(bi + 1) * d]);
         }
+        workspace::give(dzc);
         out
     } else {
         dzc
     };
     let (dx, dln_scale, dln_bias) = ln_bwd(w.ln_scale, &ln_cache, &dz, rows_all, d);
+    workspace::give(dz);
+    ln_cache.recycle();
 
     Ok(vec![
         Tensor::from_vec(x.shape(), dx)?,
@@ -870,19 +850,6 @@ pub fn head_loss_vjp(
 mod tests {
     use super::*;
     use crate::tensor::Rng;
-
-    #[test]
-    fn patchify_layout_matches_jax_transpose() {
-        // 1 image, 1 channel, 4x4, patch 2 -> 4 patches of 4 pixels
-        let images: Vec<f32> = (0..16).map(|v| v as f32).collect();
-        let p = patchify(&images, 1, 1, 4, 2);
-        // patch (0,0) = rows 0-1, cols 0-1 in row-major (py,px,c) order
-        assert_eq!(&p[0..4], &[0.0, 1.0, 4.0, 5.0]);
-        // patch (0,1) = rows 0-1, cols 2-3
-        assert_eq!(&p[4..8], &[2.0, 3.0, 6.0, 7.0]);
-        // patch (1,0) = rows 2-3, cols 0-1
-        assert_eq!(&p[8..12], &[8.0, 9.0, 12.0, 13.0]);
-    }
 
     #[test]
     fn ce_loss_uniform_logits_is_log_n() {
@@ -912,8 +879,10 @@ mod tests {
         let (dx, dw1, _, _, _) = ffn_bwd(&w1, &w2, &x, &cache, &g, rows, d, dr);
 
         let probe = |xs: &[f32], w1s: &[f32]| -> f64 {
-            let (y, _) = ffn_fwd(w1s, &b1, &w2, &b2, xs, rows, d, dr);
-            y.iter().zip(&g).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+            let (y, c) = ffn_fwd(w1s, &b1, &w2, &b2, xs, rows, d, dr);
+            let s = y.iter().zip(&g).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            c.recycle();
+            s
         };
         let eps = 1e-2f32;
         for idx in [0usize, 5, rows * d - 1] {

@@ -1,0 +1,52 @@
+//! Encoder-decoder family: fused quantized translation inference —
+//! source embed → encoder BDIA stack → target embed → cross-attending
+//! decoder BDIA stack → head — on top of [`super::blocks`], reusing the
+//! token embeddings from [`super::gpt`].
+
+use super::{blocks, gpt};
+use crate::quant::Fixed;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Fused quantized inference for the encoder-decoder family.
+pub(super) fn model_infer(
+    ex: &super::NativeExec,
+    params: &[&Tensor],
+    data: &[crate::runtime::ArgValue],
+    per_example: bool,
+) -> Result<Vec<Tensor>> {
+    let d = ex.dims.d_model;
+    let b = ex.dims.batch;
+    let f = Fixed::new(ex.dims.lbits);
+    let src = super::want_i32(data, 0, "src")?;
+    let tgt = super::want_i32(data, 1, "tgt")?;
+    let labels = super::want_i32(data, 2, "labels")?;
+    let gamma = super::want_scalar(data, 3, "gamma")?;
+
+    let nee = ex.group_leaves["enc_embed"];
+    let neb = ex.group_leaves["enc_block"];
+    let ne = ex.group_leaves["embed"];
+    let nb = ex.group_leaves["block"];
+    let nh = ex.group_leaves["head"];
+    let k_enc = ex.dims.n_enc_blocks;
+    let k_dec = ex.dims.n_blocks;
+
+    let mut cur = 0usize;
+    let ee = &params[cur..cur + nee];
+    cur += nee;
+    let enc_blocks = super::split_blocks(params, &mut cur, neb, k_enc);
+    let em = &params[cur..cur + ne];
+    cur += ne;
+    let dec_blocks = super::split_blocks(params, &mut cur, nb, k_dec);
+    let hd = &params[cur..cur + nh];
+
+    let xe = gpt::embed_fwd(ee, src, b, ex.dims.seq_src, d, ex.dims.vocab)?;
+    let mem = blocks::stack_infer(
+        &enc_blocks, xe, gamma, ex.enc_block_dims(), false, None, f,
+    )?;
+    let xd = gpt::embed_fwd(em, tgt, b, ex.dims.seq, d, ex.dims.vocab)?;
+    let xk = blocks::stack_infer(
+        &dec_blocks, xd, gamma, ex.main_block_dims(), true, Some(&mem), f,
+    )?;
+    ex.head_reduce(hd, &xk, labels, per_example)
+}

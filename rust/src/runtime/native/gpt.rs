@@ -1,0 +1,99 @@
+//! GPT family: token + position embedding (forward + VJP) and the fused
+//! quantized LM inference, on top of [`super::blocks`].
+//!
+//! The token-embedding pair is shared: the encoder-decoder family
+//! ([`super::encdec`]) embeds its source and target streams through the
+//! same functions.
+
+use super::blocks;
+use crate::quant::Fixed;
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{ensure, Result};
+
+/// Token embed forward (gpt / encdec decoder / encoder).  Leaves:
+/// [wpe (t_max,d), wte (V,d)].
+pub fn embed_fwd(
+    leaves: &[&Tensor],
+    tokens: &IntTensor,
+    b: usize,
+    t: usize,
+    d: usize,
+    vocab: usize,
+) -> Result<Tensor> {
+    ensure!(leaves.len() == 2, "token embed expects 2 leaves");
+    let (wpe, wte) = (leaves[0].data(), leaves[1].data());
+    ensure!(wpe.len() >= t * d, "wpe too small for sequence length {t}");
+    let ids = tokens.data();
+    let mut out = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let id = ids[bi * t + ti];
+            ensure!(
+                (0..vocab as i32).contains(&id),
+                "token id {id} out of vocab range {vocab}"
+            );
+            let dst = (bi * t + ti) * d;
+            let te = &wte[id as usize * d..(id as usize + 1) * d];
+            let pe = &wpe[ti * d..(ti + 1) * d];
+            for j in 0..d {
+                out[dst + j] = te[j] + pe[j];
+            }
+        }
+    }
+    Tensor::from_vec(&[b, t, d], out)
+}
+
+/// Token embed VJP (parameter grads only).
+pub fn embed_vjp(
+    leaves: &[&Tensor],
+    tokens: &IntTensor,
+    g: &Tensor,
+    b: usize,
+    t: usize,
+    d: usize,
+    vocab: usize,
+) -> Result<Vec<Tensor>> {
+    ensure!(leaves.len() == 2, "token embed expects 2 leaves");
+    let t_max = leaves[0].shape()[0];
+    let gd = g.data();
+    let ids = tokens.data();
+    let mut dwpe = vec![0.0f32; t_max * d];
+    let mut dwte = vec![0.0f32; vocab * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let src = (bi * t + ti) * d;
+            let id = ids[bi * t + ti] as usize;
+            for j in 0..d {
+                let v = gd[src + j];
+                dwpe[ti * d + j] += v;
+                dwte[id * d + j] += v;
+            }
+        }
+    }
+    Ok(vec![
+        Tensor::from_vec(&[t_max, d], dwpe)?,
+        Tensor::from_vec(&[vocab, d], dwte)?,
+    ])
+}
+
+/// Fused quantized inference for the GPT family: embed → BDIA stack →
+/// head reduction (scalar or per-example).
+pub(super) fn model_infer(
+    ex: &super::NativeExec,
+    params: &[&Tensor],
+    data: &[crate::runtime::ArgValue],
+    per_example: bool,
+) -> Result<Vec<Tensor>> {
+    let d = ex.dims.d_model;
+    let b = ex.dims.batch;
+    let f = Fixed::new(ex.dims.lbits);
+    let toks = super::want_i32(data, 0, "tokens")?;
+    let labels = super::want_i32(data, 1, "labels")?;
+    let gamma = super::want_scalar(data, 2, "gamma")?;
+    let (em, tower, hd) = ex.split_single_tower(params);
+    let x0 = embed_fwd(em, toks, b, ex.dims.seq, d, ex.dims.vocab)?;
+    let xk = blocks::stack_infer(
+        &tower, x0, gamma, ex.main_block_dims(), false, None, f,
+    )?;
+    ex.head_reduce(hd, &xk, labels, per_example)
+}

@@ -1,27 +1,35 @@
 //! Pure-Rust native execution backend.
 //!
 //! Implements every executable of the manifest ABI (embed / block / head /
-//! RevViT sub-branches / fused quantized inference, forward and VJP)
-//! directly on the host [`Tensor`] type — no XLA, no PJRT, no artifacts.
-//! Bundle manifests come from [`registry`] (mirroring
-//! `python/compile/aot.py::CONFIGS`) or from an on-disk `manifest.json`.
+//! RevViT sub-branches / fused quantized inference, forward and VJP) on top
+//! of the [`crate::kernels`] deterministic parallel compute core — no XLA,
+//! no PJRT, no artifacts.  Bundle manifests come from [`registry`]
+//! (mirroring `python/compile/aot.py::CONFIGS`) or from an on-disk
+//! `manifest.json`.
 //!
-//! Determinism: every op is straight-line f32 arithmetic with a fixed
-//! reduction order, so repeated calls are bit-identical — the property the
-//! BDIA reversibility contract (eq. 24 reconstruction) depends on.
+//! Layout: [`blocks`] holds the shared transformer-block, head and BDIA
+//! stack machinery; [`vit`], [`gpt`] and [`encdec`] hold the per-family
+//! embeddings and fused-inference drivers.
+//!
+//! Determinism: every kernel partitions work across output rows only and
+//! keeps each element's reduction order fixed, so repeated calls are
+//! bit-identical **at any thread count** — the property the BDIA
+//! reversibility contract (eq. 24 reconstruction) depends on
+//! (`tests/determinism.rs`).
 
-pub mod math;
-pub mod model;
+pub mod blocks;
+pub mod encdec;
+pub mod gpt;
 pub mod registry;
+pub mod vit;
 
-use anyhow::{bail, ensure, Context, Result};
+use self::blocks::{BlockDims, BlockW};
+use super::{ArgValue, Backend, BackendKind, CompiledExec};
 use crate::model::{Dims, ExecSpec, Family, Manifest};
-use crate::quant::{self, Fixed};
 use crate::tensor::{IntTensor, Tensor};
-use self::model::{BlockDims, BlockW};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
-use super::{ArgValue, Backend, BackendKind, CompiledExec};
 
 pub struct NativeBackend;
 
@@ -80,34 +88,58 @@ fn known_exec(name: &str) -> Result<()> {
     Ok(())
 }
 
-struct NativeExec {
+pub(super) struct NativeExec {
     name: String,
     family: Family,
-    dims: Dims,
+    pub(crate) dims: Dims,
     spec: ExecSpec,
-    group_leaves: BTreeMap<String, usize>,
+    pub(crate) group_leaves: BTreeMap<String, usize>,
 }
 
-fn want_f32<'a>(data: &'a [ArgValue], i: usize, what: &str) -> Result<&'a Tensor> {
+pub(crate) fn want_f32<'a>(
+    data: &'a [ArgValue],
+    i: usize,
+    what: &str,
+) -> Result<&'a Tensor> {
     match data.get(i) {
         Some(ArgValue::F32(t)) => Ok(*t),
         _ => bail!("expected f32 tensor for data input {i} ({what})"),
     }
 }
 
-fn want_i32<'a>(data: &'a [ArgValue], i: usize, what: &str) -> Result<&'a IntTensor> {
+pub(crate) fn want_i32<'a>(
+    data: &'a [ArgValue],
+    i: usize,
+    what: &str,
+) -> Result<&'a IntTensor> {
     match data.get(i) {
         Some(ArgValue::I32(t)) => Ok(*t),
         _ => bail!("expected i32 tensor for data input {i} ({what})"),
     }
 }
 
-fn want_scalar(data: &[ArgValue], i: usize, what: &str) -> Result<f32> {
+pub(crate) fn want_scalar(data: &[ArgValue], i: usize, what: &str) -> Result<f32> {
     match data.get(i) {
         Some(ArgValue::Scalar(v)) => Ok(*v),
         Some(ArgValue::F32(t)) if t.len() == 1 => t.scalar_value(),
         _ => bail!("expected f32 scalar for data input {i} ({what})"),
     }
+}
+
+/// Carve `k` consecutive per-block leaf slices of width `per` out of the
+/// flat parameter list, advancing `cur`.
+pub(crate) fn split_blocks<'b, 'a>(
+    params: &'b [&'a Tensor],
+    cur: &mut usize,
+    per: usize,
+    k: usize,
+) -> Vec<&'b [&'a Tensor]> {
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        out.push(&params[*cur..*cur + per]);
+        *cur += per;
+    }
+    out
 }
 
 impl NativeExec {
@@ -120,7 +152,7 @@ impl NativeExec {
     }
 
     /// Shape bundle for the decoder/self ("block") tower.
-    fn main_block_dims(&self) -> BlockDims {
+    pub(crate) fn main_block_dims(&self) -> BlockDims {
         BlockDims {
             b: self.dims.batch,
             t: self.dims.tokens(self.family),
@@ -133,7 +165,7 @@ impl NativeExec {
     }
 
     /// Shape bundle for the encoder ("enc_block") tower.
-    fn enc_block_dims(&self) -> BlockDims {
+    pub(crate) fn enc_block_dims(&self) -> BlockDims {
         BlockDims {
             b: self.dims.batch,
             t: self.dims.seq_src,
@@ -150,6 +182,58 @@ impl NativeExec {
             self.dims.n_classes
         } else {
             self.dims.vocab
+        }
+    }
+
+    /// Split the flat `model_infer` parameter list of a single-tower
+    /// family (vit/gpt) into (embed, blocks, head).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn split_single_tower<'b, 'a>(
+        &self,
+        params: &'b [&'a Tensor],
+    ) -> (&'b [&'a Tensor], Vec<&'b [&'a Tensor]>, &'b [&'a Tensor]) {
+        let ne = self.group_leaves["embed"];
+        let nb = self.group_leaves["block"];
+        let nh = self.group_leaves["head"];
+        let mut cur = 0usize;
+        let em = &params[cur..cur + ne];
+        cur += ne;
+        let tower = split_blocks(params, &mut cur, nb, self.dims.n_blocks);
+        let hd = &params[cur..cur + nh];
+        (em, tower, hd)
+    }
+
+    /// Shared head tail of the fused inference executables.
+    pub(crate) fn head_reduce(
+        &self,
+        head: &[&Tensor],
+        xk: &Tensor,
+        labels: &IntTensor,
+        per_example: bool,
+    ) -> Result<Vec<Tensor>> {
+        let (b, d) = (self.dims.batch, self.dims.d_model);
+        let t = self.dims.tokens(self.family);
+        if per_example {
+            blocks::head_loss_fwd_ex(
+                head, xk, labels, self.family, b, t, d, self.n_out(),
+            )
+        } else {
+            blocks::head_loss_fwd(
+                head, xk, labels, self.family, b, t, d, self.n_out(),
+            )
+        }
+    }
+
+    fn run_model_infer(
+        &self,
+        params: &[&Tensor],
+        data: &[ArgValue],
+        per_example: bool,
+    ) -> Result<Vec<Tensor>> {
+        match self.family {
+            Family::Vit => vit::model_infer(self, params, data, per_example),
+            Family::Gpt => gpt::model_infer(self, params, data, per_example),
+            Family::EncDec => encdec::model_infer(self, params, data, per_example),
         }
     }
 }
@@ -175,7 +259,7 @@ impl CompiledExec for NativeExec {
             "embed_fwd" => match self.family {
                 Family::Vit => {
                     let images = want_f32(data, 0, "images")?;
-                    let x = model::embed_fwd_vit(
+                    let x = vit::embed_fwd(
                         params, images, b, self.dims.channels, self.dims.image_size,
                         self.dims.patch, d,
                     )?;
@@ -183,7 +267,7 @@ impl CompiledExec for NativeExec {
                 }
                 _ => {
                     let toks = want_i32(data, 0, "tokens")?;
-                    let x = model::embed_fwd_tok(
+                    let x = gpt::embed_fwd(
                         params, toks, b, self.dims.seq, d, self.dims.vocab,
                     )?;
                     Ok(vec![x])
@@ -193,7 +277,7 @@ impl CompiledExec for NativeExec {
                 Family::Vit => {
                     let images = want_f32(data, 0, "images")?;
                     let g = want_f32(data, 1, "g")?;
-                    model::embed_vjp_vit(
+                    vit::embed_vjp(
                         params, images, g, b, self.dims.channels,
                         self.dims.image_size, self.dims.patch, d,
                     )
@@ -201,14 +285,14 @@ impl CompiledExec for NativeExec {
                 _ => {
                     let toks = want_i32(data, 0, "tokens")?;
                     let g = want_f32(data, 1, "g")?;
-                    model::embed_vjp_tok(
+                    gpt::embed_vjp(
                         params, toks, g, b, self.dims.seq, d, self.dims.vocab,
                     )
                 }
             },
             "enc_embed_fwd" => {
                 let toks = want_i32(data, 0, "src tokens")?;
-                let x = model::embed_fwd_tok(
+                let x = gpt::embed_fwd(
                     params, toks, b, self.dims.seq_src, d, self.dims.vocab,
                 )?;
                 Ok(vec![x])
@@ -216,7 +300,7 @@ impl CompiledExec for NativeExec {
             "enc_embed_vjp" => {
                 let toks = want_i32(data, 0, "src tokens")?;
                 let g = want_f32(data, 1, "g")?;
-                model::embed_vjp_tok(
+                gpt::embed_vjp(
                     params, toks, g, b, self.dims.seq_src, d, self.dims.vocab,
                 )
             }
@@ -231,7 +315,7 @@ impl CompiledExec for NativeExec {
                 } else {
                     None
                 };
-                let h = model::block_h(&w, x.data(), mem.map(|m| m.data()), bd);
+                let h = blocks::block_h(&w, x.data(), mem.map(|m| m.data()), bd);
                 Ok(vec![Tensor::from_vec(x.shape(), h)?])
             }
             "block_vjp" => {
@@ -243,8 +327,9 @@ impl CompiledExec for NativeExec {
                 } else {
                     (None, want_f32(data, 1, "g")?)
                 };
-                let (h, dx, dmem, grads) =
-                    model::block_vjp(&w, x.data(), mem.map(|m| m.data()), g.data(), bd)?;
+                let (h, dx, dmem, grads) = blocks::block_vjp(
+                    &w, x.data(), mem.map(|m| m.data()), g.data(), bd,
+                )?;
                 let mut outs = vec![
                     Tensor::from_vec(x.shape(), h)?,
                     Tensor::from_vec(x.shape(), dx)?,
@@ -260,7 +345,7 @@ impl CompiledExec for NativeExec {
                 let bd = self.enc_block_dims();
                 let w = BlockW::from_leaves(params, false)?;
                 let x = want_f32(data, 0, "x")?;
-                let h = model::block_h(&w, x.data(), None, bd);
+                let h = blocks::block_h(&w, x.data(), None, bd);
                 Ok(vec![Tensor::from_vec(x.shape(), h)?])
             }
             "enc_block_vjp" => {
@@ -269,7 +354,7 @@ impl CompiledExec for NativeExec {
                 let x = want_f32(data, 0, "x")?;
                 let g = want_f32(data, 1, "g")?;
                 let (h, dx, _, grads) =
-                    model::block_vjp(&w, x.data(), None, g.data(), bd)?;
+                    blocks::block_vjp(&w, x.data(), None, g.data(), bd)?;
                 let mut outs = vec![
                     Tensor::from_vec(x.shape(), h)?,
                     Tensor::from_vec(x.shape(), dx)?,
@@ -283,7 +368,7 @@ impl CompiledExec for NativeExec {
                 let bd = self.main_block_dims();
                 let w = BlockW::from_leaves(params, false)?;
                 let x = want_f32(data, 0, "x")?;
-                let out = model::attn_branch_fwd(&w, x.data(), bd);
+                let out = blocks::attn_branch_fwd(&w, x.data(), bd);
                 Ok(vec![Tensor::from_vec(x.shape(), out)?])
             }
             "attn_vjp" => {
@@ -292,7 +377,7 @@ impl CompiledExec for NativeExec {
                 let x = want_f32(data, 0, "x")?;
                 let g = want_f32(data, 1, "g")?;
                 let (out, dx, grads) =
-                    model::attn_branch_vjp(&w, x.data(), g.data(), bd)?;
+                    blocks::attn_branch_vjp(&w, x.data(), g.data(), bd)?;
                 let mut outs = vec![
                     Tensor::from_vec(x.shape(), out)?,
                     Tensor::from_vec(x.shape(), dx)?,
@@ -304,7 +389,7 @@ impl CompiledExec for NativeExec {
                 let bd = self.main_block_dims();
                 let w = BlockW::from_leaves(params, false)?;
                 let x = want_f32(data, 0, "x")?;
-                let out = model::ffn_branch_fwd(&w, x.data(), bd);
+                let out = blocks::ffn_branch_fwd(&w, x.data(), bd);
                 Ok(vec![Tensor::from_vec(x.shape(), out)?])
             }
             "ffn_vjp" => {
@@ -313,7 +398,7 @@ impl CompiledExec for NativeExec {
                 let x = want_f32(data, 0, "x")?;
                 let g = want_f32(data, 1, "g")?;
                 let (out, dx, grads) =
-                    model::ffn_branch_vjp(&w, x.data(), g.data(), bd)?;
+                    blocks::ffn_branch_vjp(&w, x.data(), g.data(), bd)?;
                 let mut outs = vec![
                     Tensor::from_vec(x.shape(), out)?,
                     Tensor::from_vec(x.shape(), dx)?,
@@ -326,7 +411,7 @@ impl CompiledExec for NativeExec {
             "head_loss_fwd" => {
                 let x = want_f32(data, 0, "x")?;
                 let labels = want_i32(data, 1, "labels")?;
-                model::head_loss_fwd(
+                blocks::head_loss_fwd(
                     params, x, labels, self.family, b,
                     self.dims.tokens(self.family), d, self.n_out(),
                 )
@@ -334,7 +419,7 @@ impl CompiledExec for NativeExec {
             "head_loss_vjp" => {
                 let x = want_f32(data, 0, "x")?;
                 let labels = want_i32(data, 1, "labels")?;
-                model::head_loss_vjp(
+                blocks::head_loss_vjp(
                     params, x, labels, self.family, b,
                     self.dims.tokens(self.family), d, self.n_out(),
                 )
@@ -345,160 +430,6 @@ impl CompiledExec for NativeExec {
             "model_infer_ex" => self.run_model_infer(params, data, true),
 
             other => bail!("native backend: unknown executable '{other}'"),
-        }
-    }
-}
-
-impl NativeExec {
-    /// Quantized stack inference (eqs. 18, 19, 21/22) with constant gamma.
-    #[allow(clippy::too_many_arguments)]
-    fn stack_infer(
-        &self,
-        blocks: &[&[&Tensor]],
-        x0: Tensor,
-        gamma: f32,
-        bd: BlockDims,
-        cross: bool,
-        mem: Option<&Tensor>,
-        f: Fixed,
-    ) -> Result<Tensor> {
-        let shape = x0.shape().to_vec();
-        let mut x = x0;
-        quant::quantize_activation(&mut x, f); // eq. 18
-        let w0 = BlockW::from_leaves(blocks[0], cross)?;
-        let h0 = model::block_h(&w0, x.data(), mem.map(|m| m.data()), bd);
-        let h0t = Tensor::from_vec(&shape, h0)?;
-        let x1 = quant::first_step_quant(&x, &h0t, f)?; // eq. 19
-        let (mut x_prev, mut x_cur) = (x, x1);
-        for leaves in blocks.iter().skip(1) {
-            let wk = BlockW::from_leaves(leaves, cross)?;
-            let h = model::block_h(&wk, x_cur.data(), mem.map(|m| m.data()), bd);
-            // eq. 21 with constant gamma (gamma = 0 collapses to eq. 22)
-            let xp = x_prev.data();
-            let xc = x_cur.data();
-            let mut nxt = vec![0.0f32; h.len()];
-            for i in 0..h.len() {
-                // NOTE: t1 uses plain round-half-away quantization, matching
-                // the inference kernel (`kernels/bdia_update.py::_bdia_kernel`)
-                // — NOT the training combine's eq.-23 parity division, which
-                // needs the side bit that only exists during training.  At
-                // gamma = +/-0.5 the two can differ by one grid step on odd
-                // negative unit counts; this is the paper's intended
-                // inference semantics (eq. 22 at gamma = 0 is unaffected).
-                let t1 = f.quantize(gamma * xp[i]);
-                let t2 = f.quantize((1.0 - gamma) * xc[i] + (1.0 + gamma) * h[i]);
-                nxt[i] = t1 + t2;
-            }
-            x_prev = x_cur;
-            x_cur = Tensor::from_vec(&shape, nxt)?;
-        }
-        Ok(x_cur)
-    }
-
-    /// `model_infer` (scalar mean loss / total correct) and its per-example
-    /// sibling `model_infer_ex` (loss/correct kept per batch slot) share one
-    /// forward; only the head reduction differs.
-    fn run_model_infer(
-        &self,
-        params: &[&Tensor],
-        data: &[ArgValue],
-        per_example: bool,
-    ) -> Result<Vec<Tensor>> {
-        let d = self.dims.d_model;
-        let b = self.dims.batch;
-        let f = Fixed::new(self.dims.lbits);
-        let nb = self.group_leaves["block"];
-        let ne = self.group_leaves["embed"];
-        let nh = self.group_leaves["head"];
-        let k_main = self.dims.n_blocks;
-
-        if self.is_cross() {
-            let nee = self.group_leaves["enc_embed"];
-            let neb = self.group_leaves["enc_block"];
-            let k_enc = self.dims.n_enc_blocks;
-            let src = want_i32(data, 0, "src")?;
-            let tgt = want_i32(data, 1, "tgt")?;
-            let labels = want_i32(data, 2, "labels")?;
-            let gamma = want_scalar(data, 3, "gamma")?;
-
-            let mut cur = 0usize;
-            let ee = &params[cur..cur + nee];
-            cur += nee;
-            let mut enc_blocks: Vec<&[&Tensor]> = Vec::with_capacity(k_enc);
-            for _ in 0..k_enc {
-                enc_blocks.push(&params[cur..cur + neb]);
-                cur += neb;
-            }
-            let em = &params[cur..cur + ne];
-            cur += ne;
-            let mut dec_blocks: Vec<&[&Tensor]> = Vec::with_capacity(k_main);
-            for _ in 0..k_main {
-                dec_blocks.push(&params[cur..cur + nb]);
-                cur += nb;
-            }
-            let hd = &params[cur..cur + nh];
-
-            let xe =
-                model::embed_fwd_tok(ee, src, b, self.dims.seq_src, d, self.dims.vocab)?;
-            let mem = self.stack_infer(
-                &enc_blocks, xe, gamma, self.enc_block_dims(), false, None, f,
-            )?;
-            let xd =
-                model::embed_fwd_tok(em, tgt, b, self.dims.seq, d, self.dims.vocab)?;
-            let xk = self.stack_infer(
-                &dec_blocks, xd, gamma, self.main_block_dims(), true, Some(&mem), f,
-            )?;
-            self.head_reduce(hd, &xk, labels, per_example)
-        } else {
-            let labels = want_i32(data, 1, "labels")?;
-            let gamma = want_scalar(data, 2, "gamma")?;
-            let mut cur = 0usize;
-            let em = &params[cur..cur + ne];
-            cur += ne;
-            let mut blocks: Vec<&[&Tensor]> = Vec::with_capacity(k_main);
-            for _ in 0..k_main {
-                blocks.push(&params[cur..cur + nb]);
-                cur += nb;
-            }
-            let hd = &params[cur..cur + nh];
-
-            let x0 = match self.family {
-                Family::Vit => {
-                    let images = want_f32(data, 0, "images")?;
-                    model::embed_fwd_vit(
-                        em, images, b, self.dims.channels, self.dims.image_size,
-                        self.dims.patch, d,
-                    )?
-                }
-                _ => {
-                    let toks = want_i32(data, 0, "tokens")?;
-                    model::embed_fwd_tok(em, toks, b, self.dims.seq, d, self.dims.vocab)?
-                }
-            };
-            let xk = self.stack_infer(
-                &blocks, x0, gamma, self.main_block_dims(), false, None, f,
-            )?;
-            self.head_reduce(hd, &xk, labels, per_example)
-        }
-    }
-
-    fn head_reduce(
-        &self,
-        head: &[&Tensor],
-        xk: &Tensor,
-        labels: &IntTensor,
-        per_example: bool,
-    ) -> Result<Vec<Tensor>> {
-        let (b, d) = (self.dims.batch, self.dims.d_model);
-        let t = self.dims.tokens(self.family);
-        if per_example {
-            model::head_loss_fwd_ex(
-                head, xk, labels, self.family, b, t, d, self.n_out(),
-            )
-        } else {
-            model::head_loss_fwd(
-                head, xk, labels, self.family, b, t, d, self.n_out(),
-            )
         }
     }
 }
@@ -546,7 +477,7 @@ mod tests {
         let outs = vjp
             .call(&refs, &[ArgValue::F32(&x), ArgValue::F32(&g)])
             .unwrap();
-        assert_eq!(outs.len(), 2 + model::BLOCK_LEAVES);
+        assert_eq!(outs.len(), 2 + blocks::BLOCK_LEAVES);
         assert_eq!(outs[0].data(), h.data(), "vjp primal == fwd");
         // grads come back with the leaf shapes of the manifest
         for (leaf, gt) in rt.manifest.param_groups["block"].iter().zip(&outs[2..]) {

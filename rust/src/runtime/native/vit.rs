@@ -1,0 +1,186 @@
+//! ViT family: patch embedding (forward + VJP) and the fused quantized
+//! image-classification inference, on top of [`super::blocks`].
+
+use super::blocks;
+use crate::kernels::{col_sum, linear, matmul_tn, workspace};
+use crate::quant::Fixed;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// ViT patchify: (B, C, H, W) -> (B*np, p*p*C) rows, np = (H/p)*(W/p).
+/// Patch-vector element order matches the JAX transpose (b,gh,gw,py,px,c).
+fn patchify(images: &[f32], b: usize, c: usize, hw: usize, p: usize) -> Vec<f32> {
+    let gside = hw / p;
+    let np = gside * gside;
+    let pdim = p * p * c;
+    let mut out = workspace::take(b * np * pdim);
+    for bi in 0..b {
+        for ghi in 0..gside {
+            for gwi in 0..gside {
+                let patch_row = (bi * np + ghi * gside + gwi) * pdim;
+                for py in 0..p {
+                    for px in 0..p {
+                        for ch in 0..c {
+                            let src = ((bi * c + ch) * hw + ghi * p + py) * hw
+                                + gwi * p
+                                + px;
+                            out[patch_row + (py * p + px) * c + ch] = images[src];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// ViT embed forward.  Leaves: [cls (1,1,d), pos (tokens,d), proj_b (d),
+/// proj_w (pdim,d)].
+#[allow(clippy::too_many_arguments)]
+pub fn embed_fwd(
+    leaves: &[&Tensor],
+    images: &Tensor,
+    b: usize,
+    c: usize,
+    hw: usize,
+    p: usize,
+    d: usize,
+) -> Result<Tensor> {
+    ensure!(leaves.len() == 4, "vit embed expects 4 leaves");
+    let (cls, pos, proj_b, proj_w) =
+        (leaves[0].data(), leaves[1].data(), leaves[2].data(), leaves[3].data());
+    let gside = hw / p;
+    let np = gside * gside;
+    let tokens = np + 1;
+    let pdim = p * p * c;
+    let patches = patchify(images.data(), b, c, hw, p);
+    let z = linear(&patches, proj_w, proj_b, b * np, pdim, d);
+    workspace::give(patches);
+    let mut out = vec![0.0f32; b * tokens * d];
+    for bi in 0..b {
+        let row0 = bi * tokens * d;
+        for j in 0..d {
+            out[row0 + j] = cls[j] + pos[j];
+        }
+        for t in 0..np {
+            let dst = row0 + (t + 1) * d;
+            let src = (bi * np + t) * d;
+            let posr = &pos[(t + 1) * d..(t + 2) * d];
+            for j in 0..d {
+                out[dst + j] = z[src + j] + posr[j];
+            }
+        }
+    }
+    workspace::give(z);
+    Tensor::from_vec(&[b, tokens, d], out)
+}
+
+/// ViT embed VJP (parameter grads only, matching the AOT executable).
+#[allow(clippy::too_many_arguments)]
+pub fn embed_vjp(
+    leaves: &[&Tensor],
+    images: &Tensor,
+    g: &Tensor,
+    b: usize,
+    c: usize,
+    hw: usize,
+    p: usize,
+    d: usize,
+) -> Result<Vec<Tensor>> {
+    ensure!(leaves.len() == 4, "vit embed expects 4 leaves");
+    let gside = hw / p;
+    let np = gside * gside;
+    let tokens = np + 1;
+    let pdim = p * p * c;
+    let gd = g.data();
+
+    let mut dcls = vec![0.0f32; d];
+    let mut dpos = vec![0.0f32; tokens * d];
+    // dz rows (b*np, d) = g[:, 1:, :]
+    let mut dz = workspace::take(b * np * d);
+    for bi in 0..b {
+        let row0 = bi * tokens * d;
+        for j in 0..d {
+            dcls[j] += gd[row0 + j];
+            dpos[j] += gd[row0 + j];
+        }
+        for t in 0..np {
+            let src = row0 + (t + 1) * d;
+            let dst = (bi * np + t) * d;
+            for j in 0..d {
+                let v = gd[src + j];
+                dpos[(t + 1) * d + j] += v;
+                dz[dst + j] = v;
+            }
+        }
+    }
+    let patches = patchify(images.data(), b, c, hw, p);
+    let dproj_w = matmul_tn(&patches, &dz, b * np, pdim, d);
+    let dproj_b = col_sum(&dz, b * np, d);
+    workspace::give(patches);
+    workspace::give(dz);
+    Ok(vec![
+        Tensor::from_vec(&[1, 1, d], dcls)?,
+        Tensor::from_vec(&[tokens, d], dpos)?,
+        Tensor::from_vec(&[d], dproj_b)?,
+        Tensor::from_vec(&[pdim, d], dproj_w)?,
+    ])
+}
+
+/// Fused quantized inference for the ViT family: embed → BDIA stack →
+/// head reduction (scalar or per-example).
+pub(super) fn model_infer(
+    ex: &super::NativeExec,
+    params: &[&Tensor],
+    data: &[crate::runtime::ArgValue],
+    per_example: bool,
+) -> Result<Vec<Tensor>> {
+    let d = ex.dims.d_model;
+    let b = ex.dims.batch;
+    let f = Fixed::new(ex.dims.lbits);
+    let images = super::want_f32(data, 0, "images")?;
+    let labels = super::want_i32(data, 1, "labels")?;
+    let gamma = super::want_scalar(data, 2, "gamma")?;
+    let (em, tower, hd) = ex.split_single_tower(params);
+    let x0 = embed_fwd(
+        em, images, b, ex.dims.channels, ex.dims.image_size, ex.dims.patch, d,
+    )?;
+    let xk = blocks::stack_infer(
+        &tower, x0, gamma, ex.main_block_dims(), false, None, f,
+    )?;
+    ex.head_reduce(hd, &xk, labels, per_example)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patchify_layout_matches_jax_transpose() {
+        // 1 image, 1 channel, 4x4, patch 2 -> 4 patches of 4 pixels
+        let images: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let p = patchify(&images, 1, 1, 4, 2);
+        // patch (0,0) = rows 0-1, cols 0-1 in row-major (py,px,c) order
+        assert_eq!(&p[0..4], &[0.0, 1.0, 4.0, 5.0]);
+        // patch (0,1) = rows 0-1, cols 2-3
+        assert_eq!(&p[4..8], &[2.0, 3.0, 6.0, 7.0]);
+        // patch (1,0) = rows 2-3, cols 0-1
+        assert_eq!(&p[8..12], &[8.0, 9.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn vit_labels_are_per_image() {
+        use crate::runtime::native::registry;
+        use crate::runtime::Runtime;
+        let rt = Runtime::from_native_manifest(
+            registry::manifest_for("smoke_vit").unwrap(),
+        )
+        .unwrap();
+        let spec = &rt.exec("model_infer").unwrap().spec;
+        // ViT: one label per image, not per token
+        assert_eq!(
+            spec.data_inputs[1].shape,
+            vec![rt.manifest.dims.batch]
+        );
+    }
+}

@@ -34,6 +34,8 @@ pub struct BenchOpts {
     pub concurrency: usize,
     pub gamma: f32,
     pub batch_window: Duration,
+    /// Kernel thread-pool size for the self-hosted server (0 = auto).
+    pub threads: usize,
     /// Compare responses against local inference (assumes the server runs
     /// the same params: same --ckpt, or both seed-initialized).
     pub verify: bool,
@@ -52,6 +54,7 @@ impl Default for BenchOpts {
             concurrency: 8,
             gamma: 0.0,
             batch_window: Duration::from_millis(2),
+            threads: 0,
             verify: true,
         }
     }
@@ -130,6 +133,7 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
                 port: 0,
                 workers: opts.workers,
                 batch_window: opts.batch_window,
+                threads: opts.threads,
             })?;
             let a = srv.addr();
             println!(

@@ -65,6 +65,10 @@ pub struct ServeConfig {
     pub workers: usize,
     /// How long an under-filled batch waits for stragglers.
     pub batch_window: Duration,
+    /// Kernel thread-pool parallelism shared by all workers (0 = leave
+    /// the process-wide pool configuration untouched / auto).  Responses
+    /// are bit-identical at any value.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +81,7 @@ impl Default for ServeConfig {
             port: 7878,
             workers: 4,
             batch_window: Duration::from_millis(2),
+            threads: 0,
         }
     }
 }
@@ -103,6 +108,11 @@ impl Server {
     /// Load the bundle (+ optional checkpoint), bind, and spawn the pool.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         ensure!(cfg.workers > 0, "need at least one worker");
+        if cfg.threads != 0 {
+            // the serving workers share the process-wide kernel pool with
+            // everything else; outputs are thread-count invariant
+            crate::kernels::pool::set_threads(cfg.threads);
+        }
         let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
             .with_context(|| format!("loading bundle '{}'", cfg.model))?;
         ensure!(

@@ -1,10 +1,11 @@
-//! Serving statistics: request/batch/error counters plus a fixed-capacity
-//! latency reservoir with percentile summaries.  Counters are relaxed
-//! atomics (the handlers and workers run on many threads); the reservoir is
-//! a small mutex-guarded ring.
+//! Serving statistics: request/batch/error counters, throughput since
+//! start, plus a fixed-capacity latency reservoir with percentile
+//! summaries.  Counters are relaxed atomics (the handlers and workers run
+//! on many threads); the reservoir is a small mutex-guarded ring.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 pub struct ServeStats {
     requests: AtomicU64,
@@ -12,6 +13,8 @@ pub struct ServeStats {
     batches: AtomicU64,
     batched_examples: AtomicU64,
     lat_us: Mutex<Ring>,
+    /// Server start time — the denominator of the throughput numbers.
+    started: Instant,
 }
 
 struct Ring {
@@ -50,7 +53,26 @@ impl ServeStats {
                 next: 0,
                 len: 0,
             }),
+            started: Instant::now(),
         }
+    }
+
+    /// Seconds since the server started.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Completed requests per second since start.
+    pub fn requests_per_sec(&self) -> f64 {
+        self.requests() as f64 / self.uptime_s().max(1e-9)
+    }
+
+    /// Examples pushed through the executable per second since start
+    /// (requests carry one example each, so this tracks `requests_per_sec`
+    /// minus in-flight work).
+    pub fn examples_per_sec(&self) -> f64 {
+        self.batched_examples.load(Ordering::Relaxed) as f64
+            / self.uptime_s().max(1e-9)
     }
 
     pub fn record_request(&self) {
@@ -130,14 +152,24 @@ impl ServeStats {
             .iter()
             .map(|(n, c)| format!("\"{n}\": {c}"))
             .collect();
+        let ws = crate::kernels::workspace::stats();
         format!(
             "{{\"requests\": {}, \"errors\": {}, \"batches\": {}, \
              \"mean_batch\": {:.4}, \"workers\": {workers}, \
+             \"uptime_s\": {:.3}, \"requests_per_sec\": {:.3}, \
+             \"examples_per_sec\": {:.3}, \"kernel_threads\": {}, \
+             \"workspace\": {{\"hits\": {}, \"misses\": {}}}, \
              \"latency_ms\": {}, \"exec_calls\": {{{}}}}}",
             self.requests(),
             self.errors(),
             self.batches(),
             self.mean_batch(),
+            self.uptime_s(),
+            self.requests_per_sec(),
+            self.examples_per_sec(),
+            crate::kernels::pool::threads(),
+            ws.hits,
+            ws.misses,
             fmt_lat(lat),
             calls.join(", ")
         )
@@ -185,6 +217,12 @@ mod tests {
         let j = s.to_json(&[("model_infer_ex".into(), 1)], 4);
         let parsed = Json::parse(&j).expect("valid json");
         assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 1);
+        // throughput + kernel-pool configuration surface in /stats
+        assert!(parsed.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(parsed.get("requests_per_sec").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(parsed.get("examples_per_sec").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(parsed.get("kernel_threads").unwrap().as_usize().unwrap() >= 1);
+        assert!(parsed.get("workspace").unwrap().get("hits").is_ok());
         assert_eq!(
             parsed
                 .get("exec_calls")

@@ -7,7 +7,7 @@
 //! `dims.batch` decoded examples into one executable invocation; unused
 //! slots are zero-filled (token id 0 and label 0 are always in range), which
 //! is sound because per-example outputs are slot- and neighbour-invariant
-//! (see `model::head_loss_fwd_ex`).
+//! (see `runtime::native::blocks::head_loss_fwd_ex`).
 
 use crate::data::Batch;
 use crate::model::{Dims, Family, ParamStore};

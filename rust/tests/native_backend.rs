@@ -104,6 +104,40 @@ fn prop_forward_quant_reconstructs_bit_identically_across_depths_and_seeds() {
 }
 
 #[test]
+fn reversibility_suite_bit_exact_under_thread_pool() {
+    // the multi-threaded kernels must not disturb eq. 24 reconstruction:
+    // re-run the core reversibility property with the pool engaged at
+    // several thread counts (results are thread-count invariant by
+    // construction, so the oracle needs computing only once)
+    use bdia::kernels::pool;
+    let n_blocks = 4usize;
+    let rt = gpt_runtime(n_blocks);
+    let dims = rt.manifest.dims.clone();
+    let stack = Stack::new(&rt, StackKind::Main).unwrap();
+    let params = ParamStore::init(&rt.manifest, 0xabcd);
+    let mut rng = Rng::new(0x5eed);
+    let x0 = Tensor::normal(&[dims.batch, dims.seq, dims.d_model], 1.0, &mut rng);
+    let plan = GammaPlan::draw(&mut rng, n_blocks, dims.batch, 0.5);
+
+    pool::set_threads(1);
+    let oracle = quant_forward_oracle(&stack, &params, &x0, &plan);
+    for threads in [2usize, 4, 7] {
+        pool::set_threads(threads);
+        let state = stack.forward_quant(&params, x0.clone(), None, &plan).unwrap();
+        let rec = stack.reconstruct_all(&params, &state, None, &plan).unwrap();
+        assert_eq!(oracle.len(), rec.len());
+        for (k, (a, b)) in oracle.iter().zip(&rec).enumerate() {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "x_{k} reconstruction drifted at {threads} threads"
+            );
+        }
+    }
+    pool::set_threads(0);
+}
+
+#[test]
 fn prop_online_backward_equals_store_all_across_depths() {
     use bdia::coordinator::StackState;
     for n_blocks in [2usize, 4, 6] {
