@@ -1,0 +1,199 @@
+//! The public error taxonomy: one structured enum instead of stringly
+//! `anyhow` chains.
+//!
+//! Everything that crosses the [`super::Session`] boundary is an
+//! [`ApiError`], so embedders can `match` on *what went wrong* (bad config
+//! vs unknown model vs damaged checkpoint vs backend trouble) instead of
+//! grepping error strings.  Every variant renders an actionable message —
+//! the unknown-model variant, for example, always carries the full list of
+//! known model names plus a "did you mean" suggestion.
+//!
+//! Internally the crate keeps using `anyhow` (the layers below the facade
+//! are not public API); [`ApiError`] wraps those chains at the boundary
+//! with `format!("{e:#}")` so no context is lost.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Result alias for every [`super::Session`] method.
+pub type ApiResult<T> = std::result::Result<T, ApiError>;
+
+/// A checkpoint-layer failure, tagged with the file it concerns.
+#[derive(Debug)]
+pub struct CkptError {
+    /// The checkpoint file involved (save target or load source).
+    pub path: PathBuf,
+    /// What went wrong (truncation, CRC mismatch, model mismatch, I/O …).
+    pub message: String,
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "checkpoint {}: {}", self.path.display(), self.message)
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+/// Structured error for every [`super::Session`] operation.
+#[derive(Debug)]
+pub enum ApiError {
+    /// Invalid or inconsistent configuration (bad key, bad value, or a
+    /// combination the engine rejects, e.g. `mode=bdia` with
+    /// `gamma_mag != 0.5`).
+    Config(String),
+    /// Model name not in the native registry and not an on-disk bundle.
+    /// Carries the full list of valid names so callers (and `--help`) can
+    /// render it without a second source of truth.
+    UnknownModel {
+        name: String,
+        known: Vec<&'static str>,
+    },
+    /// Saving or loading a checkpoint failed.
+    Checkpoint(CkptError),
+    /// Execution-backend construction or dispatch failed (e.g. `pjrt`
+    /// requested on a build without the cargo feature).
+    Backend(String),
+    /// The serving layer failed to start or run.
+    Serve(String),
+    /// Training / evaluation / inference failed inside the engine.
+    Train(String),
+    /// Filesystem failure outside the checkpoint format (CSV logs, bench
+    /// reports, config files).
+    Io { path: PathBuf, message: String },
+}
+
+impl ApiError {
+    /// Wrap an `anyhow` chain from the engine layers as a `Train` error.
+    pub(crate) fn train(e: anyhow::Error) -> Self {
+        ApiError::Train(format!("{e:#}"))
+    }
+
+    /// Wrap an `anyhow` chain from config plumbing as a `Config` error.
+    pub(crate) fn config(e: anyhow::Error) -> Self {
+        ApiError::Config(format!("{e:#}"))
+    }
+
+    /// Wrap an `anyhow` chain from the serving layer.
+    pub(crate) fn serve(e: anyhow::Error) -> Self {
+        ApiError::Serve(format!("{e:#}"))
+    }
+
+    /// Wrap an `anyhow` chain from checkpoint save/load, keeping the path.
+    pub(crate) fn ckpt(path: impl Into<PathBuf>, e: anyhow::Error) -> Self {
+        ApiError::Checkpoint(CkptError {
+            path: path.into(),
+            message: format!("{e:#}"),
+        })
+    }
+
+    /// Wrap a filesystem failure, keeping the path.
+    pub(crate) fn io(path: impl Into<PathBuf>, e: anyhow::Error) -> Self {
+        ApiError::Io {
+            path: path.into(),
+            message: format!("{e:#}"),
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::Config(m) => write!(f, "invalid configuration: {m}"),
+            ApiError::UnknownModel { name, known } => {
+                write!(f, "unknown model '{name}'")?;
+                if let Some(s) = suggest(name, known.iter().copied()) {
+                    write!(f, " (did you mean '{s}'?)")?;
+                }
+                write!(
+                    f,
+                    " — known models: {}; or point artifacts_dir at an \
+                     exported bundle",
+                    known.join(", ")
+                )
+            }
+            ApiError::Checkpoint(e) => write!(f, "{e}"),
+            ApiError::Backend(m) => write!(f, "backend error: {m}"),
+            ApiError::Serve(m) => write!(f, "serve error: {m}"),
+            ApiError::Train(m) => write!(f, "training error: {m}"),
+            ApiError::Io { path, message } => {
+                write!(f, "io error at {}: {message}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ApiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ApiError::Checkpoint(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Levenshtein distance, for "did you mean" hints (inputs are short flag /
+/// model names, so the O(nm) table is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate within an edit distance of 2 (typo range), if any.
+/// Shared by the unknown-model error and the CLI's unknown-flag hint.
+pub fn suggest<'a>(
+    input: &str,
+    candidates: impl IntoIterator<Item = &'a str>,
+) -> Option<&'a str> {
+    candidates
+        .into_iter()
+        .map(|c| (edit_distance(input, c), c))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suggest_finds_close_typos_only() {
+        let names = ["threads", "backend", "ckpt-dir"];
+        assert_eq!(suggest("thread", names), Some("threads"));
+        assert_eq!(suggest("backendd", names), Some("backend"));
+        assert_eq!(suggest("zzzzzz", names), None);
+    }
+
+    #[test]
+    fn unknown_model_message_lists_names_and_suggests() {
+        let e = ApiError::UnknownModel {
+            name: "vit_s1".into(),
+            known: vec!["vit_s10", "gpt_tiny"],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("vit_s10") && msg.contains("gpt_tiny"), "{msg}");
+        assert!(msg.contains("did you mean 'vit_s10'"), "{msg}");
+    }
+
+    #[test]
+    fn error_trait_and_source_chain() {
+        let e = ApiError::Checkpoint(CkptError {
+            path: PathBuf::from("x.ckpt"),
+            message: "CRC mismatch".into(),
+        });
+        let dynerr: &dyn std::error::Error = &e;
+        assert!(dynerr.source().unwrap().to_string().contains("CRC"));
+        assert!(e.to_string().contains("x.ckpt"));
+    }
+}

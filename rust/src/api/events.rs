@@ -1,0 +1,180 @@
+//! Typed lifecycle observation: the [`EventSink`] trait.
+//!
+//! The training loop, evaluation path and serving layer all report
+//! progress through one observer trait instead of ad-hoc `println!`s, so
+//! an embedder can collect metrics, drive a progress bar, or stream events
+//! to its own telemetry — and the CLI's human-readable progress is just
+//! one sink implementation ([`StdoutSink`]).
+//!
+//! Sinks must be `Send + Sync`: the serving layer calls
+//! [`EventSink::on_request`] from concurrent connection handlers.
+//! Callbacks fire on the hot loop, so implementations should be cheap
+//! (push to a channel / vec, not block on I/O).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// One completed optimization step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepEvent {
+    /// Step index (strictly increasing within a run; resumes continue from
+    /// the checkpointed counter).
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub grad_norm: f32,
+    /// Wall time of this step in milliseconds.
+    pub ms: f64,
+}
+
+/// One evaluation pass over held-out batches.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalEvent {
+    /// Steps completed when the evaluation ran.
+    pub step: usize,
+    /// The constant inference gamma used (0.0 is the paper's standard
+    /// inference; the RevViT baseline has no gamma and reports 0.0).
+    pub gamma: f32,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// One checkpoint written by the training loop or [`super::Session::save`].
+#[derive(Clone, Debug)]
+pub struct CheckpointEvent {
+    pub step: usize,
+    pub path: PathBuf,
+}
+
+/// One served inference request (terminal state: answered or failed).
+#[derive(Clone, Copy, Debug)]
+pub struct RequestEvent {
+    /// End-to-end latency observed by the server handler, microseconds.
+    pub latency_us: u64,
+    /// False when the request errored (bad body, engine failure).
+    pub ok: bool,
+}
+
+/// Observer for training / evaluation / serving progress.  All methods
+/// default to no-ops, so sinks implement only what they care about.
+pub trait EventSink: Send + Sync {
+    fn on_step(&self, _e: &StepEvent) {}
+    fn on_eval(&self, _e: &EvalEvent) {}
+    fn on_checkpoint(&self, _e: &CheckpointEvent) {}
+    fn on_request(&self, _e: &RequestEvent) {}
+}
+
+/// Discards everything (the default sink).
+pub struct NullSink;
+
+impl EventSink for NullSink {}
+
+/// Human-readable progress on stdout — the CLI's sink.
+pub struct StdoutSink {
+    /// Print a step line every `every` steps (0 prints nothing per-step;
+    /// eval and checkpoint lines always print).
+    pub every: usize,
+}
+
+impl EventSink for StdoutSink {
+    fn on_step(&self, e: &StepEvent) {
+        if self.every > 0 && e.step % self.every == 0 {
+            println!(
+                "step {:>6}  loss {:.4}  acc {:.3}  |g| {:.3e}  {:.0} ms",
+                e.step, e.loss, e.acc, e.grad_norm, e.ms
+            );
+        }
+    }
+
+    fn on_eval(&self, e: &EvalEvent) {
+        println!(
+            "eval @ step {:>4} (gamma {}): val_loss {:.4}  val_acc {:.3}",
+            e.step, e.gamma, e.loss, e.acc
+        );
+    }
+
+    fn on_checkpoint(&self, e: &CheckpointEvent) {
+        println!("checkpoint @ step {} -> {}", e.step, e.path.display());
+    }
+}
+
+/// Everything a sink can observe, as an owned value (what [`Collector`]
+/// records).
+#[derive(Clone, Debug)]
+pub enum Event {
+    Step(StepEvent),
+    Eval(EvalEvent),
+    Checkpoint(CheckpointEvent),
+    Request(RequestEvent),
+}
+
+/// Records every event in order — for tests and programmatic consumers.
+#[derive(Default)]
+pub struct Collector {
+    events: Mutex<Vec<Event>>,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of everything recorded so far, in arrival order.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Drain the recorded events.
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut self.events.lock().unwrap())
+    }
+
+    fn push(&self, e: Event) {
+        self.events.lock().unwrap().push(e);
+    }
+}
+
+impl EventSink for Collector {
+    fn on_step(&self, e: &StepEvent) {
+        self.push(Event::Step(*e));
+    }
+
+    fn on_eval(&self, e: &EvalEvent) {
+        self.push(Event::Eval(*e));
+    }
+
+    fn on_checkpoint(&self, e: &CheckpointEvent) {
+        self.push(Event::Checkpoint(e.clone()));
+    }
+
+    fn on_request(&self, e: &RequestEvent) {
+        self.push(Event::Request(*e));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_preserves_order_and_drains() {
+        let c = Collector::new();
+        c.on_step(&StepEvent { step: 0, loss: 1.0, acc: 0.1, grad_norm: 0.5, ms: 1.0 });
+        c.on_eval(&EvalEvent { step: 1, gamma: 0.25, loss: 0.9, acc: 0.2 });
+        c.on_request(&RequestEvent { latency_us: 42, ok: true });
+        let evs = c.take();
+        assert_eq!(evs.len(), 3);
+        assert!(matches!(evs[0], Event::Step(s) if s.step == 0));
+        assert!(matches!(evs[1], Event::Eval(e) if e.gamma == 0.25));
+        assert!(matches!(evs[2], Event::Request(r) if r.ok));
+        assert!(c.events().is_empty());
+    }
+
+    #[test]
+    fn sinks_are_object_safe_and_shareable() {
+        let sink: std::sync::Arc<dyn EventSink> = std::sync::Arc::new(NullSink);
+        sink.on_step(&StepEvent { step: 0, loss: 0.0, acc: 0.0, grad_norm: 0.0, ms: 0.0 });
+        let c: std::sync::Arc<dyn EventSink> = std::sync::Arc::new(Collector::new());
+        c.on_request(&RequestEvent { latency_us: 1, ok: false });
+    }
+}

@@ -1,0 +1,107 @@
+//! # `bdia::api` — the embeddable facade
+//!
+//! One typed entry point over the whole BDIA lifecycle.  The paper's
+//! pitch is that exact bit-level reversibility needs *no architecture
+//! change* — the value is the **workflow** around a standard transformer
+//! (train with random γ ∈ {±0.5} plus side info, infer at E\[γ\] = 0) —
+//! and this module packages that workflow as a library surface instead of
+//! five unrelated entry conventions.
+//!
+//! ## Facade over layers
+//!
+//! [`Session`] owns the runtime, parameters, optimizer and config, and
+//! exposes typed lifecycle methods; everything below it stays independent
+//! and directly usable:
+//!
+//! ```text
+//! Session (api)  ── train/evaluate/infer/save/resume/serve/bench
+//!   ├─ coordinator::Trainer / baseline::RevVitTrainer   (engines)
+//!   ├─ runtime::Runtime                                  (backends)
+//!   ├─ checkpoint                                        (persistence)
+//!   └─ serve::Server                                     (deployment)
+//! ```
+//!
+//! The CLI (`main.rs`), the experiment drivers (`experiments/*`) and the
+//! bench suite (`bench::suite`) are all thin clients of [`Session`] — no
+//! config/override/runtime plumbing is duplicated per entry point.
+//!
+//! ## Error taxonomy
+//!
+//! Every fallible method returns [`ApiResult`]: a structured
+//! [`ApiError`] (`Config`, `UnknownModel { name, known }`,
+//! `Checkpoint(CkptError)`, `Backend`, `Serve`, `Train`, `Io`) that
+//! implements `std::error::Error` with actionable messages.  Match on the
+//! variant programmatically; `Display` renders the human message,
+//! including the full model list and a "did you mean" hint for typos.
+//! Model names are typed too: [`ModelId`] enumerates the registry and is
+//! the single source of truth for `--help` and the unknown-model error.
+//!
+//! ## Observation
+//!
+//! Progress is reported through the [`EventSink`] observer (per-step,
+//! per-eval, per-checkpoint, per-request) instead of ad-hoc printing —
+//! the CLI's console output is just [`StdoutSink`]; tests and embedders
+//! use [`Collector`] or their own sink.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use bdia::api::{EvalOpts, ModelId, Session, TrainOpts};
+//!
+//! fn main() -> Result<(), bdia::api::ApiError> {
+//!     let mut session = Session::builder()
+//!         .model(ModelId::VitS10)
+//!         .threads(4)
+//!         .steps(200)
+//!         .build()?;
+//!     let report = session.train(&TrainOpts::default())?;
+//!     println!("trained {} steps", report.steps_completed);
+//!     let eval = session.evaluate(&EvalOpts { gamma: 0.0, batches: None })?;
+//!     println!("val_loss {:.4} val_acc {:.3}", eval.loss, eval.acc);
+//!     session.save(std::path::Path::new("vit.ckpt"))?;
+//!     Ok(())
+//! }
+//! ```
+
+pub mod error;
+pub mod events;
+pub mod model_id;
+pub mod session;
+
+pub use error::{suggest, ApiError, ApiResult, CkptError};
+pub use events::{
+    CheckpointEvent, Collector, EvalEvent, Event, EventSink, NullSink,
+    RequestEvent, StdoutSink, StepEvent,
+};
+pub use model_id::ModelId;
+// the inference payload type used by `Session::infer`/`infer_batch`
+pub use crate::serve::wire::Example;
+pub use session::{
+    EvalOpts, EvalReport, ModelInfo, ServeBenchOpts, ServeOpts, ServerHandle,
+    Session, SessionBuilder, SessionTimings, TrainOpts, TrainReport,
+};
+
+use crate::experiments::ExpOpts;
+
+/// Run a paper experiment driver (`fig1`..`fig5`, `table1`, `table2`,
+/// `exact`, `all`).  The drivers construct their training arms through
+/// [`Session`]; this is the CLI's `repro` entry point.
+///
+/// Drivers mix training, filesystem and plotting work, so failures are
+/// reported uniformly as [`ApiError::Train`] with the full underlying
+/// context preserved in the message (not classified per variant the way
+/// [`Session`] methods are).
+pub fn repro(id: &str, opts: &ExpOpts) -> ApiResult<()> {
+    crate::experiments::run_experiment(id, opts).map_err(ApiError::train)
+}
+
+/// Run the per-family performance suite (`bdia bench`): Session-reported
+/// hot-path timings at 1 and N threads, written to `BENCH_4.json`.
+///
+/// Like [`repro`], failures surface as [`ApiError::Train`] with full
+/// context in the message.
+pub fn bench_suite(
+    opts: &crate::bench::suite::SuiteOpts,
+) -> ApiResult<crate::bench::suite::SuiteReport> {
+    crate::bench::suite::run(opts).map_err(ApiError::train)
+}

@@ -1,0 +1,136 @@
+//! Typed model identifiers: kill raw model-name strings at the public
+//! boundary.
+//!
+//! [`ModelId`] enumerates every bundle the native registry can synthesize
+//! (`runtime::native::registry::config_names`), so `--help`, the
+//! unknown-model error and the builder all render the same list — a unit
+//! test keeps the two in lockstep.  On-disk AOT bundles with arbitrary
+//! names remain reachable through [`super::SessionBuilder::model_name`],
+//! which accepts any name for which `artifacts/<name>/manifest.json`
+//! exists.
+
+use super::error::ApiError;
+use crate::runtime::native::registry;
+use std::fmt;
+use std::str::FromStr;
+
+/// A bundle the native registry knows how to materialise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    /// Paper §5.1 ViT (CIFAR-10 stand-in), K = 6 blocks.
+    VitS10,
+    /// Paper §5.1 ViT with 100 classes (CIFAR-100 stand-in).
+    VitS100,
+    /// Paper §5.3 (nano)GPT2, 12 blocks, tiny-corpus overfitting.
+    GptTiny,
+    /// Paper §5.2 en→fr translation, 6+6 encoder/decoder blocks.
+    EncdecMt,
+    /// End-to-end GPT config.
+    GptE2e,
+    /// Tiny ViT shape for tests / CI smoke.
+    SmokeVit,
+    /// Tiny GPT shape for tests / CI smoke.
+    SmokeGpt,
+    /// Tiny encoder-decoder shape for tests / CI smoke.
+    SmokeEncdec,
+}
+
+impl ModelId {
+    /// Every registered model, in registry order (drives `--help` and the
+    /// unknown-model error).
+    pub const ALL: [ModelId; 8] = [
+        ModelId::VitS10,
+        ModelId::VitS100,
+        ModelId::GptTiny,
+        ModelId::EncdecMt,
+        ModelId::GptE2e,
+        ModelId::SmokeVit,
+        ModelId::SmokeGpt,
+        ModelId::SmokeEncdec,
+    ];
+
+    /// The registry / bundle-directory name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelId::VitS10 => "vit_s10",
+            ModelId::VitS100 => "vit_s100",
+            ModelId::GptTiny => "gpt_tiny",
+            ModelId::EncdecMt => "encdec_mt",
+            ModelId::GptE2e => "gpt_e2e",
+            ModelId::SmokeVit => "smoke_vit",
+            ModelId::SmokeGpt => "smoke_gpt",
+            ModelId::SmokeEncdec => "smoke_encdec",
+        }
+    }
+
+    /// All registered names (the `known` payload of
+    /// [`ApiError::UnknownModel`]).
+    pub fn known_names() -> Vec<&'static str> {
+        Self::ALL.iter().map(|m| m.name()).collect()
+    }
+
+    /// Parse a registry name; failure carries the valid names and a
+    /// closest-match suggestion.
+    pub fn parse(s: &str) -> Result<Self, ApiError> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|m| m.name() == s)
+            .ok_or_else(|| ApiError::UnknownModel {
+                name: s.to_string(),
+                known: Self::known_names(),
+            })
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ModelId {
+    type Err = ApiError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_is_in_lockstep_with_native_registry() {
+        // ModelId is the public face of the registry; if a config is added
+        // or renamed there, this test forces the enum (and with it --help,
+        // the unknown-model error and the docs) to follow.
+        let enum_names: Vec<&str> = ModelId::ALL.iter().map(|m| m.name()).collect();
+        assert_eq!(enum_names, registry::config_names().to_vec());
+        for id in ModelId::ALL {
+            registry::manifest_for(id.name())
+                .unwrap_or_else(|_| panic!("registry rejects {id}"));
+        }
+    }
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for id in ModelId::ALL {
+            assert_eq!(ModelId::parse(id.name()).unwrap(), id);
+            assert_eq!(id.to_string(), id.name());
+            assert_eq!(id.name().parse::<ModelId>().unwrap(), id);
+        }
+    }
+
+    #[test]
+    fn parse_failure_is_structured_and_suggests() {
+        let err = ModelId::parse("vit_s100x").unwrap_err();
+        let ApiError::UnknownModel { name, known } = &err else {
+            panic!("wrong variant: {err:?}")
+        };
+        assert_eq!(name, "vit_s100x");
+        assert_eq!(known, &ModelId::known_names());
+        assert!(err.to_string().contains("did you mean 'vit_s100'"));
+    }
+}

@@ -1,0 +1,856 @@
+//! The [`Session`] facade and its fluent [`SessionBuilder`].
+//!
+//! One object owns the whole lifecycle — runtime, parameters, optimizer,
+//! config — and exposes it as typed methods: `train`, `evaluate`,
+//! `infer`/`infer_batch`, `save`/`resume`, `serve`, `bench`.  The CLI,
+//! the experiment drivers and the bench suite are all thin clients of
+//! this type; embedders get exactly the same surface.
+
+use super::error::{ApiError, ApiResult};
+use super::events::{CheckpointEvent, EvalEvent, EventSink, NullSink};
+use super::model_id::ModelId;
+use crate::baseline::RevVitTrainer;
+use crate::config::{TrainConfig, TrainMode};
+use crate::coordinator::{StepStats, Trainer};
+use crate::data::{make_dataset, Batch, Dataset};
+use crate::metrics::memory::MemoryModel;
+use crate::metrics::TrainLog;
+use crate::model::{Dims, Family, ParamStore};
+use crate::runtime::{BackendKind, Runtime};
+use crate::serve::bench as serve_bench;
+use crate::serve::wire::{self, Example};
+use crate::serve::{ServeConfig, Server};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Options for [`Session::train`].
+#[derive(Clone, Debug, Default)]
+pub struct TrainOpts {
+    /// Run label for logs and checkpoint file names; defaults to
+    /// `<model>_<mode>`.
+    pub run_name: Option<String>,
+    /// Write the training log as CSV here after the run.
+    pub csv_out: Option<PathBuf>,
+}
+
+/// What a completed [`Session::train`] call reports.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub run_name: String,
+    /// Total optimization steps completed (includes pre-resume steps).
+    pub steps_completed: usize,
+    pub mean_ms_per_step: f64,
+    /// The full per-step/per-eval log (CSV-exportable).
+    pub log: TrainLog,
+}
+
+/// Options for [`Session::evaluate`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOpts {
+    /// Constant inference gamma (0.0 = the paper's standard inference).
+    pub gamma: f32,
+    /// Held-out batches to average over; defaults to the config's
+    /// `eval_batches`.
+    pub batches: Option<usize>,
+}
+
+/// What one evaluation pass reports.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub loss: f32,
+    pub acc: f32,
+    pub gamma: f32,
+    /// Steps completed by the evaluated parameters.
+    pub step: usize,
+    /// Human-readable weight provenance ("checkpoint …" or "untrained …").
+    pub provenance: String,
+}
+
+/// Options for [`Session::serve`].
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// 0 picks an ephemeral port (tests / self-hosting).
+    pub port: u16,
+    pub workers: usize,
+    /// How long an under-filled batch waits for stragglers.
+    pub batch_window: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { port: 7878, workers: 4, batch_window: Duration::from_millis(2) }
+    }
+}
+
+/// Options for [`Session::bench_serve`] (the serving load test).
+#[derive(Clone, Debug)]
+pub struct ServeBenchOpts {
+    pub requests: usize,
+    pub concurrency: usize,
+    /// Worker pool size for the self-hosted server.
+    pub workers: usize,
+    pub gamma: f32,
+    pub batch_window: Duration,
+    /// Target an already-running server; `None` self-hosts one.
+    pub addr: Option<SocketAddr>,
+    /// Verify every response is bit-identical to direct local inference.
+    pub verify: bool,
+}
+
+impl Default for ServeBenchOpts {
+    fn default() -> Self {
+        let d = serve_bench::BenchOpts::default();
+        ServeBenchOpts {
+            requests: d.requests,
+            concurrency: d.concurrency,
+            workers: d.workers,
+            gamma: d.gamma,
+            batch_window: d.batch_window,
+            addr: None,
+            verify: true,
+        }
+    }
+}
+
+/// Hot-path wall times measured by [`Session::bench`].
+#[derive(Clone, Debug)]
+pub struct SessionTimings {
+    pub bundle: String,
+    pub family: String,
+    /// Kernel-pool threads in effect during the measurement.
+    pub threads: usize,
+    /// Training forward pass, milliseconds (mean).
+    pub fwd_ms: f64,
+    /// Full train step (forward + online backward + optimizer), ms.
+    pub step_ms: f64,
+    /// Fused quantized inference over one batch, ms.
+    pub infer_ms: f64,
+}
+
+/// Bundle/runtime inventory reported by [`Session::describe`]
+/// (`bdia info`).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub family: String,
+    pub backend: &'static str,
+    pub dims: Dims,
+    pub n_params: usize,
+    /// Per-executable invocation counts (this process).
+    pub call_counts: Vec<(String, u64)>,
+    pub kernel_threads: usize,
+    pub kernel_auto_threads: usize,
+    pub kernel_spawned_workers: usize,
+    pub workspace_hits: u64,
+    pub workspace_misses: u64,
+    /// (mode name, analytic peak training bytes) per training mode.
+    pub peak_memory: Vec<(&'static str, usize)>,
+}
+
+/// A running server owned by the caller; see [`Session::serve`].
+pub struct ServerHandle {
+    inner: Server,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr()
+    }
+
+    /// Begin graceful shutdown (idempotent); [`ServerHandle::join`] waits
+    /// it out.
+    pub fn stop(&self) {
+        self.inner.stop();
+    }
+
+    /// Wait for the listener and all workers to exit.
+    pub fn join(self) -> ApiResult<()> {
+        self.inner.join().map_err(ApiError::serve)
+    }
+
+    /// `stop` + `join`.
+    pub fn shutdown(self) -> ApiResult<()> {
+        self.inner.shutdown().map_err(ApiError::serve)
+    }
+}
+
+/// The two training engines behind the facade.  BDIA/vanilla runs on the
+/// coordinator; the RevViT baseline has its own two-stream trainer and no
+/// persistence or fused-inference form (the paper's core criticism).
+enum Engine {
+    Bdia(Box<Trainer>),
+    RevVit(Box<RevVitTrainer>),
+}
+
+/// Fluent constructor for [`Session`].
+///
+/// Setters never fail; errors (bad config file, bad override, unknown
+/// model) are deferred and reported once by [`SessionBuilder::build`].
+pub struct SessionBuilder {
+    cfg: TrainConfig,
+    ckpt: Option<PathBuf>,
+    sink: Arc<dyn EventSink>,
+    dataset_auto: bool,
+    pending_err: Option<ApiError>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            cfg: TrainConfig::default(),
+            ckpt: None,
+            sink: Arc::new(NullSink),
+            dataset_auto: false,
+            pending_err: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Replace the whole config (call before field setters; they apply on
+    /// top).
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Load a JSON config file as the base config.
+    pub fn config_file(mut self, path: impl AsRef<Path>) -> Self {
+        match TrainConfig::load(path.as_ref()) {
+            Ok(cfg) => self.cfg = cfg,
+            Err(e) => self.set_err(ApiError::config(e)),
+        }
+        self
+    }
+
+    /// Select a registered model.
+    pub fn model(mut self, id: ModelId) -> Self {
+        self.cfg.model = id.name().to_string();
+        self
+    }
+
+    /// Select a model by name: a registry name, or the directory name of
+    /// an exported AOT bundle under `artifacts_dir`.  Validated at build
+    /// time ([`ApiError::UnknownModel`] lists the valid names).
+    pub fn model_name(mut self, name: impl Into<String>) -> Self {
+        self.cfg.model = name.into();
+        self
+    }
+
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.cfg.backend = kind;
+        self
+    }
+
+    pub fn mode(mut self, mode: TrainMode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    pub fn dataset(mut self, name: impl Into<String>) -> Self {
+        self.cfg.dataset = name.into();
+        self
+    }
+
+    /// Pick the family-default synthetic dataset for the chosen model at
+    /// build time (ViT → synth_cifar10, GPT → tiny_corpus, EncDec →
+    /// synth_translation).
+    pub fn dataset_auto(mut self) -> Self {
+        self.dataset_auto = true;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.cfg.steps = steps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Kernel-pool parallelism (0 = auto).  Purely a speed knob: results
+    /// are bit-identical at any value.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    pub fn gamma_mag(mut self, mag: f32) -> Self {
+        self.cfg.gamma_mag = mag;
+        self
+    }
+
+    pub fn save_every(mut self, every: usize) -> Self {
+        self.cfg.save_every = every;
+        self
+    }
+
+    pub fn ckpt_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.ckpt_dir = dir.into();
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.cfg.eval_every = every;
+        self
+    }
+
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.cfg.eval_batches = n;
+        self
+    }
+
+    /// Apply a `key=value` config override (same grammar as the CLI).
+    pub fn override_kv(mut self, kv: &str) -> Self {
+        if let Err(e) = self.cfg.override_kv(kv) {
+            self.set_err(ApiError::config(e));
+        }
+        self
+    }
+
+    /// Load this checkpoint into the session at build time (trained
+    /// weights + optimizer + step + gamma RNG).
+    pub fn checkpoint(mut self, path: impl Into<PathBuf>) -> Self {
+        self.ckpt = Some(path.into());
+        self
+    }
+
+    /// Observe training / evaluation / serving progress.
+    pub fn event_sink(mut self, sink: Arc<dyn EventSink>) -> Self {
+        self.sink = sink;
+        self
+    }
+
+    fn set_err(&mut self, e: ApiError) {
+        // keep the first error: it is the root cause
+        if self.pending_err.is_none() {
+            self.pending_err = Some(e);
+        }
+    }
+
+    /// Validate, load the runtime, construct the engine, and (optionally)
+    /// load the checkpoint.
+    pub fn build(mut self) -> ApiResult<Session> {
+        if let Some(e) = self.pending_err.take() {
+            return Err(e);
+        }
+        let mut cfg = self.cfg;
+
+        // unknown model names fail here with the full list of valid names;
+        // on-disk AOT bundles with arbitrary names stay reachable
+        let on_disk =
+            cfg.artifacts_dir.join(&cfg.model).join("manifest.json").exists();
+        if !on_disk {
+            ModelId::parse(&cfg.model)?;
+        }
+
+        #[cfg(not(feature = "pjrt"))]
+        if cfg.backend == BackendKind::Pjrt {
+            return Err(ApiError::Backend(
+                "this binary was built without the 'pjrt' cargo feature; \
+                 rebuild with `--features pjrt` (and the xla dependency \
+                 enabled in rust/Cargo.toml) or use the native backend"
+                    .into(),
+            ));
+        }
+
+        // size the deterministic kernel pool (0 = auto); bit-identical
+        // results at any value, so this is purely a speed knob
+        crate::kernels::pool::set_threads(cfg.threads);
+
+        let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
+            .map_err(|e| {
+                ApiError::Backend(format!(
+                    "loading bundle '{}' ({}): {e:#}",
+                    cfg.model,
+                    cfg.backend.name()
+                ))
+            })?;
+        if self.dataset_auto {
+            cfg.dataset = serve_bench::default_dataset(rt.manifest.family).into();
+        }
+        // engine construction validates the config/mode combination
+        let engine = if cfg.mode == TrainMode::RevVit {
+            Engine::RevVit(Box::new(
+                RevVitTrainer::with_runtime(cfg, rt).map_err(ApiError::config)?,
+            ))
+        } else {
+            Engine::Bdia(Box::new(
+                Trainer::with_runtime(cfg, rt).map_err(ApiError::config)?,
+            ))
+        };
+
+        let mut session = Session { engine, sink: self.sink, resumed_from: None };
+        if let Some(path) = self.ckpt {
+            session.resume(&path)?;
+        }
+        Ok(session)
+    }
+}
+
+/// One embeddable handle over the whole BDIA lifecycle: train, evaluate,
+/// infer, checkpoint, serve, bench.
+///
+/// Construct with [`Session::builder`]; see the module docs of
+/// [`crate::api`] for the design and the error taxonomy.
+pub struct Session {
+    engine: Engine,
+    sink: Arc<dyn EventSink>,
+    resumed_from: Option<PathBuf>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// The effective configuration (after file, overrides and setters).
+    pub fn config(&self) -> &TrainConfig {
+        match &self.engine {
+            Engine::Bdia(t) => &t.cfg,
+            Engine::RevVit(t) => &t.cfg,
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.config().model
+    }
+
+    pub fn family(&self) -> Family {
+        self.runtime().manifest.family
+    }
+
+    /// Completed optimization steps (nonzero after training or a resume).
+    pub fn step(&self) -> usize {
+        match &self.engine {
+            Engine::Bdia(t) => t.step(),
+            Engine::RevVit(t) => t.step(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match &self.engine {
+            Engine::Bdia(t) => t.n_params(),
+            Engine::RevVit(t) => t.n_params(),
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        match &self.engine {
+            Engine::Bdia(t) => &t.rt,
+            Engine::RevVit(t) => &t.rt,
+        }
+    }
+
+    /// The live parameters (trained in place by [`Session::train`]).
+    pub fn params(&self) -> &ParamStore {
+        match &self.engine {
+            Engine::Bdia(t) => &t.params,
+            Engine::RevVit(t) => &t.params,
+        }
+    }
+
+    /// Checkpoint the session was built from / last resumed from.
+    pub fn resumed_from(&self) -> Option<&Path> {
+        self.resumed_from.as_deref()
+    }
+
+    /// Human-readable weight provenance for reports and warnings.
+    pub fn provenance(&self) -> String {
+        match (&self.resumed_from, self.step()) {
+            (Some(p), step) => format!("checkpoint {}, step {step}", p.display()),
+            (None, 0) => format!("untrained seed {}", self.config().seed),
+            (None, step) => format!("trained in-session, step {step}"),
+        }
+    }
+
+    /// The dataset named by the config, shaped for this bundle.
+    pub fn dataset(&self) -> ApiResult<Box<dyn Dataset>> {
+        let rt = self.runtime();
+        make_dataset(self.config(), &rt.manifest.dims, rt.manifest.family)
+            .map_err(ApiError::config)
+    }
+
+    // ------------------------------------------------------------------
+    // training
+    // ------------------------------------------------------------------
+
+    /// Run the training loop to `config().steps`, emitting step / eval /
+    /// checkpoint events to the session's [`EventSink`].
+    pub fn train(&mut self, opts: &TrainOpts) -> ApiResult<TrainReport> {
+        let run_name = opts.run_name.clone().unwrap_or_else(|| {
+            format!("{}_{}", self.config().model, self.config().mode.name())
+        });
+        if matches!(self.engine, Engine::RevVit(_)) && self.config().save_every > 0 {
+            return Err(ApiError::Config(
+                "checkpointing is supported by the BDIA/vanilla trainer only \
+                 (RevViT baseline has no persistence); set save_every=0"
+                    .into(),
+            ));
+        }
+        let ds = self.dataset()?;
+        let sink = Arc::clone(&self.sink);
+        let log = match &mut self.engine {
+            Engine::Bdia(t) => t.run_observed(ds.as_ref(), &run_name, sink.as_ref()),
+            Engine::RevVit(t) => {
+                t.run_observed(ds.as_ref(), &run_name, sink.as_ref())
+            }
+        }
+        .map_err(ApiError::train)?;
+        if let Some(out) = &opts.csv_out {
+            log.write_csv(out).map_err(|e| ApiError::io(out.clone(), e))?;
+        }
+        Ok(TrainReport {
+            run_name,
+            steps_completed: self.step(),
+            mean_ms_per_step: log.mean_ms_per_step(),
+            log,
+        })
+    }
+
+    /// One optimization step on a caller-supplied batch (no events; the
+    /// loop in [`Session::train`] is the observed path).
+    pub fn train_step(&mut self, batch: &Batch) -> ApiResult<StepStats> {
+        match &mut self.engine {
+            Engine::Bdia(t) => t.train_step(batch),
+            Engine::RevVit(t) => t.train_step(batch),
+        }
+        .map_err(ApiError::train)
+    }
+
+    /// Training forward pass only; returns the batch loss (bench probe —
+    /// BDIA/vanilla engines only).
+    pub fn forward_loss(&mut self, batch: &Batch) -> ApiResult<f32> {
+        match &mut self.engine {
+            Engine::Bdia(t) => Ok(t.forward(batch).map_err(ApiError::train)?.loss),
+            Engine::RevVit(_) => Err(ApiError::Config(
+                "forward_loss probes the BDIA/vanilla coordinator; the RevViT \
+                 baseline exposes train_step only"
+                    .into(),
+            )),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // evaluation / inference
+    // ------------------------------------------------------------------
+
+    /// Mean (loss, acc) over held-out batches at a constant inference
+    /// gamma; emits one [`EvalEvent`] carrying the gamma used.
+    ///
+    /// Builds the config's dataset per call; sweeps evaluating many gammas
+    /// should build it once and use [`Session::evaluate_on`].
+    pub fn evaluate(&self, opts: &EvalOpts) -> ApiResult<EvalReport> {
+        let ds = self.dataset()?;
+        self.evaluate_on(ds.as_ref(), opts)
+    }
+
+    /// [`Session::evaluate`] on a caller-supplied dataset (built once via
+    /// [`Session::dataset`], or any custom [`Dataset`] shaped for this
+    /// bundle).
+    pub fn evaluate_on(
+        &self,
+        ds: &dyn Dataset,
+        opts: &EvalOpts,
+    ) -> ApiResult<EvalReport> {
+        let n = opts.batches.unwrap_or(self.config().eval_batches);
+        let (loss, acc) = match &self.engine {
+            Engine::Bdia(t) => {
+                t.evaluate(ds, n, opts.gamma).map_err(ApiError::train)?
+            }
+            Engine::RevVit(t) => {
+                if opts.gamma != 0.0 {
+                    return Err(ApiError::Config(
+                        "the RevViT baseline has no standard-transformer \
+                         inference form; inference gamma must be 0.0"
+                            .into(),
+                    ));
+                }
+                t.evaluate(ds, n).map_err(ApiError::train)?
+            }
+        };
+        self.sink.on_eval(&EvalEvent {
+            step: self.step(),
+            gamma: opts.gamma,
+            loss,
+            acc,
+        });
+        Ok(EvalReport {
+            loss,
+            acc,
+            gamma: opts.gamma,
+            step: self.step(),
+            provenance: self.provenance(),
+        })
+    }
+
+    /// Score one example exactly as the serving path would
+    /// (fused `model_infer_ex`); returns (loss, correct).
+    pub fn infer(&self, example: &Example, gamma: f32) -> ApiResult<(f32, f32)> {
+        Ok(self.infer_batch(std::slice::from_ref(example), gamma)?[0])
+    }
+
+    /// Score a batch of examples; per-example (loss, correct) pairs in
+    /// request order.  Accepts any length: inputs are chunked to the
+    /// manifest batch dimension, and per-example outputs are slot- and
+    /// neighbour-invariant, so results are bit-identical to
+    /// single-example calls regardless of chunking.
+    pub fn infer_batch(
+        &self,
+        examples: &[Example],
+        gamma: f32,
+    ) -> ApiResult<Vec<(f32, f32)>> {
+        let max = self.runtime().manifest.dims.batch.max(1);
+        let mut out = Vec::with_capacity(examples.len());
+        for chunk in examples.chunks(max) {
+            out.extend(
+                wire::infer_batch(self.runtime(), self.params(), chunk, gamma)
+                    .map_err(ApiError::train)?,
+            );
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // persistence
+    // ------------------------------------------------------------------
+
+    /// Write the full training state (params + optimizer + step + gamma
+    /// RNG) so a resumed session is bit-identical to an uninterrupted one.
+    pub fn save(&self, path: &Path) -> ApiResult<()> {
+        match &self.engine {
+            Engine::Bdia(t) => t
+                .save_checkpoint(path)
+                .map_err(|e| ApiError::ckpt(path, e))?,
+            Engine::RevVit(_) => {
+                return Err(ApiError::Config(
+                    "RevViT baseline has no persistence; use mode=bdia or \
+                     mode=vanilla"
+                        .into(),
+                ))
+            }
+        }
+        self.sink
+            .on_checkpoint(&CheckpointEvent { step: self.step(), path: path.into() });
+        Ok(())
+    }
+
+    /// Restore state written by [`Session::save`] (or `bdia train
+    /// save_every=K`).
+    pub fn resume(&mut self, path: &Path) -> ApiResult<()> {
+        match &mut self.engine {
+            Engine::Bdia(t) => t
+                .load_checkpoint(path)
+                .map_err(|e| ApiError::ckpt(path, e))?,
+            Engine::RevVit(_) => {
+                return Err(ApiError::Config(
+                    "RevViT baseline has no persistence; use mode=bdia or \
+                     mode=vanilla"
+                        .into(),
+                ))
+            }
+        }
+        self.resumed_from = Some(path.to_path_buf());
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // serving
+    // ------------------------------------------------------------------
+
+    /// Start an HTTP inference server on this session's model and
+    /// **current parameters** (trained weights serve without touching
+    /// disk).  Per-request events flow to the session's [`EventSink`].
+    pub fn serve(&self, opts: &ServeOpts) -> ApiResult<ServerHandle> {
+        let cfg = self.config();
+        let serve_cfg = ServeConfig {
+            model: cfg.model.clone(),
+            backend: cfg.backend,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            ckpt: None, // params come from the session, below
+            port: opts.port,
+            workers: opts.workers,
+            batch_window: opts.batch_window,
+            threads: cfg.threads,
+        };
+        // the server owns its runtime (compiled sets are not shareable by
+        // value); recompiling is cheap on the native backend
+        let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
+            .map_err(|e| ApiError::Backend(format!("{e:#}")))?;
+        let inner = Server::start_with_parts(
+            serve_cfg,
+            rt,
+            self.params().clone(),
+            Arc::clone(&self.sink),
+        )
+        .map_err(ApiError::serve)?;
+        Ok(ServerHandle { inner })
+    }
+
+    /// Load-test the serving path and verify responses are bit-identical
+    /// to direct local inference.  Self-hosts through [`Session::serve`]
+    /// (so the server runs this session's **current** parameters, exactly
+    /// like `serve` would) unless `opts.addr` targets a running server —
+    /// in that case the remote server must hold the same weights as this
+    /// session for verification to pass.
+    pub fn bench_serve(
+        &self,
+        opts: &ServeBenchOpts,
+    ) -> ApiResult<serve_bench::BenchSummary> {
+        let cfg = self.config();
+        // run_against reads only model / gamma / requests / concurrency /
+        // verify — the reference weights are this session's live params,
+        // and server configuration is handled by Session::serve below
+        let bench_opts = serve_bench::BenchOpts {
+            model: cfg.model.clone(),
+            requests: opts.requests,
+            concurrency: opts.concurrency,
+            gamma: opts.gamma,
+            verify: opts.verify,
+            ..serve_bench::BenchOpts::default()
+        };
+        let (server, addr) = match opts.addr {
+            Some(a) => (None, a),
+            None => {
+                let handle = self.serve(&ServeOpts {
+                    port: 0,
+                    workers: opts.workers,
+                    batch_window: opts.batch_window,
+                })?;
+                let a = handle.addr();
+                println!(
+                    "bench-serve: self-hosted {} on {a} ({} workers, window \
+                     {:?}, session params)",
+                    cfg.model, opts.workers, opts.batch_window
+                );
+                (Some(handle), a)
+            }
+        };
+        let summary = serve_bench::run_against(
+            &bench_opts,
+            self.runtime(),
+            self.params(),
+            addr,
+        );
+        if let Some(handle) = server {
+            handle.shutdown()?;
+        }
+        summary.map_err(ApiError::serve)
+    }
+
+    // ------------------------------------------------------------------
+    // benchmarking / inspection
+    // ------------------------------------------------------------------
+
+    /// Time the three hot paths (training forward, full train step, fused
+    /// quantized inference) at the current kernel-pool thread count.
+    /// `bdia bench` aggregates these rows into `BENCH_4.json`.
+    pub fn bench(
+        &mut self,
+        budget: Duration,
+        max_iters: usize,
+    ) -> ApiResult<SessionTimings> {
+        if matches!(self.engine, Engine::RevVit(_)) {
+            return Err(ApiError::Config(
+                "bench times the BDIA/vanilla hot paths; mode=revvit is not \
+                 benchable through the session facade"
+                    .into(),
+            ));
+        }
+        let ds = self.dataset()?;
+        let batch = ds.train_batch(0);
+        let bundle = self.model().to_string();
+        let family = format!("{:?}", self.family());
+        let threads = crate::kernels::pool::threads();
+        let ms = |r: &crate::bench::BenchResult| r.mean.as_secs_f64() * 1e3;
+
+        let Engine::Bdia(tr) = &mut self.engine else { unreachable!() };
+        // probe each path once so engine failures surface as ApiError;
+        // the .expect()s inside the timed closures then only guard
+        // against mid-benchmark state corruption
+        tr.forward(&batch).map_err(ApiError::train)?;
+        tr.train_step(&batch).map_err(ApiError::train)?;
+        tr.evaluate(ds.as_ref(), 1, 0.0).map_err(ApiError::train)?;
+        let fwd = crate::bench::bench(
+            &format!("{bundle} fwd t={threads}"),
+            1,
+            max_iters,
+            budget,
+            || {
+                tr.forward(&batch).expect("forward");
+            },
+        );
+        let step = crate::bench::bench(
+            &format!("{bundle} step t={threads}"),
+            1,
+            max_iters,
+            budget,
+            || {
+                tr.train_step(&batch).expect("train_step");
+            },
+        );
+        let infer = crate::bench::bench(
+            &format!("{bundle} infer t={threads}"),
+            1,
+            max_iters,
+            budget,
+            || {
+                tr.evaluate(ds.as_ref(), 1, 0.0).expect("model_infer");
+            },
+        );
+        println!("{}", fwd.row());
+        println!("{}", step.row());
+        println!("{}", infer.row());
+        Ok(SessionTimings {
+            bundle,
+            family,
+            threads,
+            fwd_ms: ms(&fwd),
+            step_ms: ms(&step),
+            infer_ms: ms(&infer),
+        })
+    }
+
+    /// Bundle + runtime inventory (dims, params, per-exec call counts,
+    /// kernel-pool and workspace state, analytic peak training memory).
+    pub fn describe(&self) -> ModelInfo {
+        let rt = self.runtime();
+        let m = &rt.manifest;
+        let ws = crate::kernels::workspace::stats();
+        let peak_memory = [
+            TrainMode::Vanilla,
+            TrainMode::BdiaReversible,
+            TrainMode::BdiaFloat,
+            TrainMode::RevVit,
+        ]
+        .iter()
+        .map(|&mode| {
+            let mm = MemoryModel::new(mode, m.family, &m.dims, m.n_params() * 4);
+            (mode.name(), mm.peak_total())
+        })
+        .collect();
+        ModelInfo {
+            name: m.name.clone(),
+            family: format!("{:?}", m.family),
+            backend: rt.backend.name(),
+            dims: m.dims.clone(),
+            n_params: m.n_params(),
+            call_counts: rt.call_counts(),
+            kernel_threads: crate::kernels::pool::threads(),
+            kernel_auto_threads: crate::kernels::pool::auto_threads(),
+            kernel_spawned_workers: crate::kernels::pool::spawned_workers(),
+            workspace_hits: ws.hits,
+            workspace_misses: ws.misses,
+            peak_memory,
+        }
+    }
+}

@@ -242,7 +242,26 @@ impl RevVitTrainer {
         Ok(((loss_sum / n as f64) as f32, (correct / total.max(1) as f64) as f32))
     }
 
+    /// Completed optimization steps.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
     pub fn run(&mut self, data: &dyn Dataset, run_name: &str) -> Result<TrainLog> {
+        self.run_observed(data, run_name, &crate::api::events::NullSink)
+    }
+
+    /// [`RevVitTrainer::run`] with progress reported through an
+    /// [`EventSink`](crate::api::events::EventSink).  RevViT evaluates
+    /// with its own reversible architecture (no inference gamma exists —
+    /// the paper's core criticism), so eval events report gamma 0.0.
+    pub fn run_observed(
+        &mut self,
+        data: &dyn Dataset,
+        run_name: &str,
+        sink: &dyn crate::api::events::EventSink,
+    ) -> Result<TrainLog> {
+        use crate::api::events::{EvalEvent, StepEvent};
         let mut log = TrainLog::new(run_name);
         let steps = self.cfg.steps;
         for step in 0..steps {
@@ -250,11 +269,24 @@ impl RevVitTrainer {
             let t0 = std::time::Instant::now();
             let stats = self.train_step(&batch)?;
             let ms = t0.elapsed().as_secs_f64() * 1e3;
+            sink.on_step(&StepEvent {
+                step,
+                loss: stats.loss,
+                acc: stats.acc,
+                grad_norm: stats.grad_norm,
+                ms,
+            });
             let eval_due = self.cfg.eval_every > 0
                 && (step % self.cfg.eval_every == self.cfg.eval_every - 1
                     || step + 1 == steps);
             let (val_loss, val_acc) = if eval_due {
                 let (l, a) = self.evaluate(data, self.cfg.eval_batches)?;
+                sink.on_eval(&EvalEvent {
+                    step: step + 1,
+                    gamma: 0.0,
+                    loss: l,
+                    acc: a,
+                });
                 (Some(l), Some(a))
             } else {
                 (None, None)

@@ -1,4 +1,4 @@
-//! `bdia bench`: the per-family performance suite behind BENCH_3.json.
+//! `bdia bench`: the per-family performance suite behind BENCH_4.json.
 //!
 //! Times the three hot paths — training forward (`fwd`), a full training
 //! step (`step` = forward + online backward + optimizer), and fused
@@ -7,18 +7,16 @@
 //! is the headline number for the deterministic parallel compute core:
 //! same bits, less wall time.
 //!
-//! The report prints as rows and lands in a JSON file (default
-//! `BENCH_3.json`) so successive PRs can track the perf trajectory.
+//! Every measurement goes through the [`Session`] facade
+//! ([`Session::bench`]), so the suite times exactly the path embedders and
+//! the CLI use.  The report prints as rows and lands in a JSON file
+//! (default `BENCH_4.json`) so successive PRs can track the perf
+//! trajectory.
 
-use super::{bench, BenchResult};
-use crate::config::TrainConfig;
-use crate::coordinator::Trainer;
-use crate::data::Dataset;
+use crate::api::{Session, SessionTimings};
 use crate::kernels::pool;
-use crate::runtime::Runtime;
-use crate::serve::bench::default_dataset;
 use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::time::Duration;
 
 #[derive(Clone, Debug)]
@@ -47,7 +45,7 @@ impl SuiteOpts {
                     "smoke_encdec".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_3.json"),
+                out: PathBuf::from("BENCH_4.json"),
                 quick,
                 budget: Duration::from_millis(250),
                 max_iters: 4,
@@ -60,7 +58,7 @@ impl SuiteOpts {
                     "encdec_mt".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_3.json"),
+                out: PathBuf::from("BENCH_4.json"),
                 quick,
                 budget: Duration::from_millis(1500),
                 max_iters: 10,
@@ -70,20 +68,11 @@ impl SuiteOpts {
 }
 
 #[derive(Clone, Debug)]
-pub struct FamilyTimings {
-    pub bundle: String,
-    pub family: String,
-    pub threads: usize,
-    pub fwd_ms: f64,
-    pub step_ms: f64,
-    pub infer_ms: f64,
-}
-
-#[derive(Clone, Debug)]
 pub struct SuiteReport {
     pub threads_baseline: usize,
     pub threads_parallel: usize,
-    pub rows: Vec<FamilyTimings>,
+    /// One [`SessionTimings`] row per (bundle, thread count).
+    pub rows: Vec<SessionTimings>,
 }
 
 impl SuiteReport {
@@ -122,7 +111,7 @@ impl SuiteReport {
             })
             .collect();
         format!(
-            "{{\n  \"bench\": \"BENCH_3\",\n  \"quick\": {},\n  \
+            "{{\n  \"bench\": \"BENCH_4\",\n  \"quick\": {},\n  \
              \"threads_baseline\": {},\n  \"threads_parallel\": {},\n  \
              \"results\": [\n{}\n  ]\n}}\n",
             quick,
@@ -131,10 +120,6 @@ impl SuiteReport {
             rows.join(",\n")
         )
     }
-}
-
-fn ms(r: &BenchResult) -> f64 {
-    r.mean.as_secs_f64() * 1e3
 }
 
 /// Run the suite and write the JSON report.
@@ -151,60 +136,17 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
 
     let mut rows = Vec::new();
     for bundle in &opts.families {
-        let rt = Runtime::load(Path::new("artifacts"), bundle)
+        // one Session per bundle: the suite times the same facade path the
+        // CLI and embedders use
+        let mut session = Session::builder()
+            .model_name(bundle.clone())
+            .dataset_auto()
+            .build()
             .with_context(|| format!("loading bundle '{bundle}'"))?;
-        let family = rt.manifest.family;
-        let cfg = TrainConfig {
-            model: bundle.clone(),
-            dataset: default_dataset(family).into(),
-            eval_every: 0,
-            log_every: usize::MAX,
-            ..TrainConfig::default()
-        };
-        let mut tr = Trainer::with_runtime(cfg.clone(), rt)?;
-        let ds = crate::experiments::dataset_for(&tr.rt, &cfg)?;
-        let batch = ds.train_batch(0);
-
         for &t in &counts {
             pool::set_threads(t);
-            let fwd = bench(
-                &format!("{bundle} fwd t={t}"),
-                1,
-                opts.max_iters,
-                opts.budget,
-                || {
-                    tr.forward(&batch).expect("forward");
-                },
-            );
-            let step = bench(
-                &format!("{bundle} step t={t}"),
-                1,
-                opts.max_iters,
-                opts.budget,
-                || {
-                    tr.train_step(&batch).expect("train_step");
-                },
-            );
-            let infer = bench(
-                &format!("{bundle} infer t={t}"),
-                1,
-                opts.max_iters,
-                opts.budget,
-                || {
-                    tr.evaluate(ds.as_ref(), 1, 0.0).expect("model_infer");
-                },
-            );
-            println!("{}", fwd.row());
-            println!("{}", step.row());
-            println!("{}", infer.row());
-            rows.push(FamilyTimings {
-                bundle: bundle.clone(),
-                family: format!("{family:?}"),
-                threads: t,
-                fwd_ms: ms(&fwd),
-                step_ms: ms(&step),
-                infer_ms: ms(&infer),
-            });
+            let timings = session.bench(opts.budget, opts.max_iters)?;
+            rows.push(timings);
         }
     }
     pool::set_threads(par);
@@ -239,7 +181,7 @@ mod tests {
             std::process::id()
         ));
         std::fs::create_dir_all(&dir).unwrap();
-        let out = dir.join("BENCH_3.json");
+        let out = dir.join("BENCH_4.json");
         let opts = SuiteOpts {
             families: vec!["smoke_gpt".into()],
             threads: 2,
@@ -257,7 +199,7 @@ mod tests {
         let parsed = crate::config::json::Json::parse(&text).unwrap();
         assert_eq!(
             parsed.get("bench").unwrap().as_str().unwrap(),
-            "BENCH_3"
+            "BENCH_4"
         );
         assert!(report.step_speedup("smoke_gpt").is_some());
         std::fs::remove_dir_all(&dir).ok();

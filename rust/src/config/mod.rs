@@ -65,7 +65,7 @@ impl OptimKind {
 }
 
 /// Complete specification of one training run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     /// Bundle name (a native-registry config, or an AOT bundle under
     /// `artifacts_dir`).

@@ -353,6 +353,21 @@ impl Trainer {
     /// `cfg.save_every > 0`, a step-stamped checkpoint plus a rolling
     /// `<run_name>-latest.ckpt` land in `cfg.ckpt_dir`.
     pub fn run(&mut self, data: &dyn Dataset, run_name: &str) -> Result<TrainLog> {
+        self.run_observed(data, run_name, &crate::api::events::NullSink)
+    }
+
+    /// [`Trainer::run`] with progress reported through an
+    /// [`EventSink`](crate::api::events::EventSink): one event per step,
+    /// per evaluation pass (carrying the inference gamma, always 0.0 on
+    /// this loop) and per checkpoint written.  The sink is the only
+    /// progress channel — the loop itself never prints.
+    pub fn run_observed(
+        &mut self,
+        data: &dyn Dataset,
+        run_name: &str,
+        sink: &dyn crate::api::events::EventSink,
+    ) -> Result<TrainLog> {
+        use crate::api::events::{CheckpointEvent, EvalEvent, StepEvent};
         let mut log = TrainLog::new(run_name);
         let steps = self.cfg.steps;
         while self.step < steps {
@@ -361,11 +376,24 @@ impl Trainer {
             let t0 = std::time::Instant::now();
             let stats = self.train_step(&batch)?;
             let ms = t0.elapsed().as_secs_f64() * 1e3;
+            sink.on_step(&StepEvent {
+                step,
+                loss: stats.loss,
+                acc: stats.acc,
+                grad_norm: stats.grad_norm,
+                ms,
+            });
             let eval_due = self.cfg.eval_every > 0
                 && (step % self.cfg.eval_every == self.cfg.eval_every - 1
                     || step + 1 == steps);
             let (val_loss, val_acc) = if eval_due {
                 let (l, a) = self.evaluate(data, self.cfg.eval_batches, 0.0)?;
+                sink.on_eval(&EvalEvent {
+                    step: self.step,
+                    gamma: 0.0,
+                    loss: l,
+                    acc: a,
+                });
                 (Some(l), Some(a))
             } else {
                 (None, None)
@@ -392,6 +420,10 @@ impl Trainer {
                 let latest =
                     self.cfg.ckpt_dir.join(format!("{run_name}-latest.ckpt"));
                 self.save_checkpoint(&latest)?;
+                sink.on_checkpoint(&CheckpointEvent {
+                    step: self.step,
+                    path: latest,
+                });
             }
         }
         Ok(log)

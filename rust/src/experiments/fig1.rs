@@ -4,9 +4,9 @@
 //! trained an *ensemble* of solvers); the vanilla model is peaked at
 //! gamma = 0 (it only ever saw one solver).
 
-use super::{arm_config, dataset_for, emit_summary, write_series_csv, ExpOpts};
+use super::{arm_config, emit_summary, write_series_csv, ExpOpts};
+use crate::api::{EvalOpts, Session, TrainOpts};
 use crate::config::TrainMode;
-use crate::coordinator::Trainer;
 use anyhow::Result;
 
 pub const GAMMAS: [f32; 11] = [
@@ -20,13 +20,19 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     for (label, mode) in [("ViT", TrainMode::Vanilla), ("BDIA-ViT", TrainMode::BdiaReversible)]
     {
         let cfg = arm_config(opts, "vit_s10", "synth_cifar10", mode, seed);
-        let mut tr = Trainer::new(cfg.clone())?;
-        let ds = dataset_for(&tr.rt, &cfg)?;
-        tr.run(ds.as_ref(), &format!("fig1_{label}"))?;
+        let mut session = Session::builder().config(cfg).build()?;
+        session.train(&TrainOpts {
+            run_name: Some(format!("fig1_{label}")),
+            csv_out: None,
+        })?;
+        let ds = session.dataset()?; // built once for the whole sweep
         let mut accs = Vec::with_capacity(GAMMAS.len());
         for &g in &GAMMAS {
-            let (_, acc) = tr.evaluate(ds.as_ref(), opts.eval_batches, g)?;
-            accs.push(acc);
+            let report = session.evaluate_on(
+                ds.as_ref(),
+                &EvalOpts { gamma: g, batches: Some(opts.eval_batches) },
+            )?;
+            accs.push(report.acc);
         }
         curves.push((label.to_string(), accs));
     }

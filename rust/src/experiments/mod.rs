@@ -20,9 +20,8 @@ pub mod fig4;
 pub mod fig5;
 pub mod table2;
 
-use crate::baseline::RevVitTrainer;
+use crate::api::{Session, TrainOpts};
 use crate::config::{TrainConfig, TrainMode};
-use crate::coordinator::Trainer;
 use crate::data::{make_dataset, Dataset};
 use crate::metrics::TrainLog;
 use anyhow::{Context, Result};
@@ -86,25 +85,19 @@ pub fn arm_config(
     }
 }
 
-/// Train one arm end to end; returns (log, final val acc, live stored bytes).
+/// Train one arm end to end through the [`Session`] facade (both the BDIA
+/// coordinator and the RevViT baseline engines); returns (log, final val
+/// acc, live stored bytes).
 pub fn run_arm(cfg: &TrainConfig, run_name: &str) -> Result<(TrainLog, f32, usize)> {
-    let stored;
-    let log;
-    if cfg.mode == TrainMode::RevVit {
-        let mut tr = RevVitTrainer::new(cfg.clone())?;
-        let ds = dataset_for(&tr.rt, cfg)?;
-        log = tr.run(ds.as_ref(), run_name)?;
-        let b = ds.train_batch(0);
-        stored = tr.train_step(&b)?.stored_activation_bytes;
-    } else {
-        let mut tr = Trainer::new(cfg.clone())?;
-        let ds = dataset_for(&tr.rt, cfg)?;
-        log = tr.run(ds.as_ref(), run_name)?;
-        let b = ds.train_batch(0);
-        stored = tr.train_step(&b)?.stored_activation_bytes;
-    }
-    let acc = log.last_eval().map(|(_, a)| a).unwrap_or(0.0);
-    Ok((log, acc, stored))
+    let mut session = Session::builder().config(cfg.clone()).build()?;
+    let report = session.train(&TrainOpts {
+        run_name: Some(run_name.to_string()),
+        csv_out: None,
+    })?;
+    let b = session.dataset()?.train_batch(0);
+    let stored = session.train_step(&b)?.stored_activation_bytes;
+    let acc = report.log.last_eval().map(|(_, a)| a).unwrap_or(0.0);
+    Ok((report.log, acc, stored))
 }
 
 pub fn dataset_for(

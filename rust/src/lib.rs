@@ -5,6 +5,11 @@
 //! for the layer map, backend selection and how to run the tier-1 suite.
 //!
 //! Layer map:
+//! - [`api`]: the embeddable facade — `Session`/`SessionBuilder` over the
+//!   whole lifecycle (train / evaluate / infer / save / resume / serve /
+//!   bench), typed `ModelId`, the structured `ApiError` taxonomy and the
+//!   `EventSink` observer; the CLI, experiments and bench suite are thin
+//!   clients of it
 //! - [`kernels`]: deterministic parallel compute core — cache-blocked,
 //!   multi-threaded matmul/layernorm/attention kernels (row-partitioned
 //!   parallelism only, bit-identical at any thread count), persistent
@@ -19,6 +24,7 @@
 //!   state (params + optimizer + step), bit-exact round trips
 //! - [`serve`]: concurrent inference serving over `std::net` — dynamic
 //!   micro-batching, worker pool, `/healthz` + `/stats`, load generator
+pub mod api;
 pub mod config;
 pub mod tensor;
 pub mod quant;
@@ -34,3 +40,9 @@ pub mod experiments;
 pub mod bench;
 pub mod checkpoint;
 pub mod serve;
+
+// Compile-check the README's Rust examples (the "Library use" section) as
+// doctests, so the documented API surface cannot rot.
+#[cfg(doctest)]
+#[doc = include_str!("../README.md")]
+struct ReadmeDoctests;

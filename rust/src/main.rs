@@ -10,31 +10,30 @@
 //! bdia bench-serve --model vit_s10 [--requests N] [--concurrency C]
 //!             [--workers N] [--addr host:port] [--ckpt path]
 //! bdia bench  [--families vit_s10,gpt_tiny,encdec_mt] [--threads N]
-//!             [--quick] [--out BENCH_3.json]
+//!             [--quick] [--out BENCH_4.json]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
 //!             [--steps N] [--seeds 0,1,2] [--quick]
 //! bdia info   --model vit_s10       # bundle inventory + call counts
 //! ```
 //!
-//! The default backend is the dependency-free pure-Rust `native`
-//! interpreter; `--backend pjrt` selects the AOT-HLO/XLA path (requires the
-//! `pjrt` cargo feature and `make artifacts`).  `--threads` sizes the
-//! deterministic kernel pool — results are bit-identical at any value.
+//! Every subcommand is a thin client of `bdia::api::Session` — the CLI
+//! owns flag parsing and printing, nothing else.  Flags accept both
+//! `--flag value` and `--flag=value`; unknown flags are rejected with a
+//! "did you mean" hint, and a value-taking flag followed by another flag
+//! is an error instead of silently reading as `true`.
 //!
 //! (Argument parsing is in-repo — no clap offline — see `parse_flags`.)
 
 use anyhow::{bail, ensure, Context, Result};
-use bdia::baseline::RevVitTrainer;
-use bdia::config::{TrainConfig, TrainMode};
-use bdia::coordinator::Trainer;
-use bdia::experiments::{run_experiment, ExpOpts};
+use bdia::api::{
+    suggest, EvalOpts, ModelId, ServeBenchOpts, ServeOpts, Session,
+    SessionBuilder, StdoutSink, TrainOpts,
+};
 use bdia::metrics::fmt_bytes;
-use bdia::metrics::memory::MemoryModel;
-use bdia::runtime::{BackendKind, Runtime};
-use bdia::serve::bench::BenchOpts;
-use bdia::serve::{ServeConfig, Server};
+use bdia::runtime::BackendKind;
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -44,33 +43,189 @@ fn main() {
     }
 }
 
-/// Split argv into (`--flag value` map, bare `key=value` overrides, rest).
-fn parse_flags(
-    args: &[String],
-) -> (BTreeMap<String, String>, Vec<String>, Vec<String>) {
-    let mut flags = BTreeMap::new();
-    let mut overrides = Vec::new();
-    let mut rest = Vec::new();
+/// One flag a subcommand accepts.
+#[derive(Clone, Copy)]
+struct Flag {
+    name: &'static str,
+    takes_value: bool,
+}
+
+/// Value-taking flag (`--name VALUE` or `--name=VALUE`).
+const fn v(name: &'static str) -> Flag {
+    Flag { name, takes_value: true }
+}
+
+/// Boolean flag (presence means `true`).
+const fn b(name: &'static str) -> Flag {
+    Flag { name, takes_value: false }
+}
+
+const TRAIN_FLAGS: &[Flag] = &[
+    v("config"),
+    v("model"),
+    v("backend"),
+    v("threads"),
+    v("save-every"),
+    v("ckpt-dir"),
+    v("resume"),
+    v("name"),
+];
+const EVAL_FLAGS: &[Flag] = &[
+    v("config"),
+    v("model"),
+    v("backend"),
+    v("threads"),
+    v("gamma"),
+    v("batches"),
+    v("ckpt"),
+];
+const SERVE_FLAGS: &[Flag] = &[
+    v("model"),
+    v("backend"),
+    v("artifacts"),
+    v("ckpt"),
+    v("port"),
+    v("workers"),
+    v("batch-window-us"),
+    v("threads"),
+];
+const BENCH_SERVE_FLAGS: &[Flag] = &[
+    v("model"),
+    v("backend"),
+    v("artifacts"),
+    v("ckpt"),
+    v("addr"),
+    v("workers"),
+    v("requests"),
+    v("concurrency"),
+    v("gamma"),
+    v("batch-window-us"),
+    v("threads"),
+    b("no-verify"),
+];
+const BENCH_FLAGS: &[Flag] =
+    &[v("families"), v("threads"), v("out"), b("quick")];
+const REPRO_FLAGS: &[Flag] =
+    &[v("steps"), v("seeds"), v("out"), v("artifacts"), b("quick")];
+const INFO_FLAGS: &[Flag] =
+    &[v("model"), v("artifacts"), v("backend"), v("threads")];
+
+struct Parsed {
+    flags: BTreeMap<String, String>,
+    overrides: Vec<String>,
+    rest: Vec<String>,
+}
+
+/// Split argv into recognized `--flag [value]` pairs, bare `key=value`
+/// config overrides, and positional arguments — validated against the
+/// subcommand's flag spec.
+///
+/// Rules that make typos loud instead of silent:
+/// * unknown `--flag` is an error with a closest-match hint;
+/// * a value-taking flag must get a value (`--ckpt-dir --resume x` is an
+///   error, not `ckpt-dir=true`); `--flag=value` always works;
+/// * a boolean flag given `=value` is an error.
+fn parse_flags(cmd: &str, args: &[String], spec: &[Flag]) -> Result<Parsed> {
+    let mut p = Parsed {
+        flags: BTreeMap::new(),
+        overrides: Vec::new(),
+        rest: Vec::new(),
+    };
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
-        if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), args[i + 1].clone());
-                i += 2;
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline) = match body.split_once('=') {
+                Some((n, val)) => (n, Some(val)),
+                None => (body, None),
+            };
+            let Some(f) = spec.iter().find(|f| f.name == name) else {
+                let mut msg = format!("unknown flag --{name} for `bdia {cmd}`");
+                if let Some(s) = suggest(name, spec.iter().map(|f| f.name)) {
+                    msg.push_str(&format!(" (did you mean --{s}?)"));
+                }
+                bail!("{msg}; see `bdia help`");
+            };
+            if f.takes_value {
+                let value = match inline {
+                    Some(val) => val.to_string(),
+                    None => {
+                        let next = args.get(i + 1);
+                        match next {
+                            Some(n) if !n.starts_with("--") => {
+                                i += 1;
+                                n.clone()
+                            }
+                            Some(n) => bail!(
+                                "flag --{name} requires a value, got flag \
+                                 '{n}' (use --{name}=VALUE if the value \
+                                 really starts with '--')"
+                            ),
+                            None => bail!("flag --{name} requires a value"),
+                        }
+                    }
+                };
+                p.flags.insert(name.to_string(), value);
             } else {
-                flags.insert(name.to_string(), "true".into());
-                i += 1;
+                ensure!(
+                    inline.is_none(),
+                    "flag --{name} takes no value (got --{name}={})",
+                    inline.unwrap_or_default()
+                );
+                p.flags.insert(name.to_string(), "true".into());
             }
         } else if a.contains('=') {
-            overrides.push(a.clone());
-            i += 1;
+            p.overrides.push(a.clone());
         } else {
-            rest.push(a.clone());
-            i += 1;
+            p.rest.push(a.clone());
         }
+        i += 1;
     }
-    (flags, overrides, rest)
+    Ok(p)
+}
+
+/// Parse an optional typed flag value with a uniform error message.
+fn flag_val<T>(flags: &BTreeMap<String, String>, name: &str) -> Result<Option<T>>
+where
+    T: std::str::FromStr,
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    flags
+        .get(name)
+        .map(|raw| raw.parse::<T>())
+        .transpose()
+        .with_context(|| {
+            format!("invalid value for --{name}: '{}'", flags[name])
+        })
+}
+
+/// What a subcommand accepts beyond its `--flag`s.
+#[derive(Clone, Copy, PartialEq)]
+enum Extras {
+    /// Flags only.
+    None,
+    /// Flags + bare `key=value` config overrides (train / eval).
+    Overrides,
+    /// Flags + positional arguments (repro's experiment id).
+    Positionals,
+}
+
+fn reject_extras(cmd: &str, p: &Parsed, extras: Extras) -> Result<()> {
+    if extras != Extras::Overrides {
+        ensure!(
+            p.overrides.is_empty(),
+            "`bdia {cmd}` takes no key=value overrides (got '{}')",
+            p.overrides[0]
+        );
+    }
+    if extras != Extras::Positionals {
+        ensure!(
+            p.rest.is_empty(),
+            "unexpected argument '{}' for `bdia {cmd}`",
+            p.rest[0]
+        );
+    }
+    Ok(())
 }
 
 fn run() -> Result<()> {
@@ -79,68 +234,98 @@ fn run() -> Result<()> {
         print_help();
         return Ok(());
     };
-    let (flags, overrides, rest) = parse_flags(&argv[1..]);
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        print_help();
+        return Ok(());
+    }
+    let args = &argv[1..];
 
     match cmd.as_str() {
-        "train" => cmd_train(&flags, &overrides),
-        "eval" => cmd_eval(&flags, &overrides),
-        "serve" => cmd_serve(&flags),
-        "bench-serve" => cmd_bench_serve(&flags),
-        "bench" => cmd_bench(&flags),
-        "repro" => cmd_repro(&flags, &rest),
-        "info" => cmd_info(&flags),
-        "help" | "--help" | "-h" => {
+        "train" => cmd_train(&parsed("train", args, TRAIN_FLAGS, Extras::Overrides)?),
+        "eval" => cmd_eval(&parsed("eval", args, EVAL_FLAGS, Extras::Overrides)?),
+        "serve" => cmd_serve(&parsed("serve", args, SERVE_FLAGS, Extras::None)?),
+        "bench-serve" => cmd_bench_serve(&parsed(
+            "bench-serve",
+            args,
+            BENCH_SERVE_FLAGS,
+            Extras::None,
+        )?),
+        "bench" => cmd_bench(&parsed("bench", args, BENCH_FLAGS, Extras::None)?),
+        "repro" => {
+            cmd_repro(&parsed("repro", args, REPRO_FLAGS, Extras::Positionals)?)
+        }
+        "info" => cmd_info(&parsed("info", args, INFO_FLAGS, Extras::None)?),
+        "help" => {
             print_help();
             Ok(())
         }
-        other => bail!("unknown command '{other}' (try `bdia help`)"),
+        other => {
+            let known =
+                ["train", "eval", "serve", "bench-serve", "bench", "repro", "info"];
+            match suggest(other, known) {
+                Some(s) => bail!("unknown command '{other}' (did you mean '{s}'?)"),
+                None => bail!("unknown command '{other}' (try `bdia help`)"),
+            }
+        }
     }
 }
 
-fn load_config(
-    flags: &BTreeMap<String, String>,
-    overrides: &[String],
-) -> Result<TrainConfig> {
-    let mut cfg = match flags.get("config") {
-        Some(path) => TrainConfig::load(std::path::Path::new(path))?,
-        None => TrainConfig::default(),
-    };
-    if let Some(m) = flags.get("model") {
-        cfg.model = m.clone();
-    }
-    if let Some(b) = flags.get("backend") {
-        cfg.backend = BackendKind::parse(b)?;
-    }
-    if let Some(k) = flags.get("save-every") {
-        cfg.save_every = k.parse().context("--save-every must be an integer")?;
-    }
-    if let Some(d) = flags.get("ckpt-dir") {
-        cfg.ckpt_dir = PathBuf::from(d);
-    }
-    if let Some(t) = flags.get("threads") {
-        cfg.threads = t.parse().context("--threads must be an integer")?;
-    }
-    for kv in overrides {
-        cfg.override_kv(kv)?;
-    }
-    // size the deterministic kernel pool (0 = auto); bit-identical results
-    // at any value, so this is purely a speed knob
-    bdia::kernels::pool::set_threads(cfg.threads);
-    Ok(cfg)
+fn parsed(
+    cmd: &str,
+    args: &[String],
+    spec: &[Flag],
+    extras: Extras,
+) -> Result<Parsed> {
+    let p = parse_flags(cmd, args, spec)?;
+    reject_extras(cmd, &p, extras)?;
+    Ok(p)
 }
 
-/// Parse a standalone `--threads` flag (commands without a TrainConfig).
-fn parse_threads(flags: &BTreeMap<String, String>) -> Result<usize> {
-    flags
-        .get("threads")
-        .map(|t| t.parse())
-        .transpose()
-        .context("--threads must be an integer")
-        .map(|t| t.unwrap_or(0))
+/// Shared builder plumbing: config file, model, backend, threads,
+/// artifacts dir, checkpoint, `key=value` overrides — everything else is
+/// per-subcommand.
+fn builder_from(p: &Parsed) -> Result<SessionBuilder> {
+    let mut b = Session::builder();
+    if let Some(path) = p.flags.get("config") {
+        b = b.config_file(path);
+    }
+    if let Some(m) = p.flags.get("model") {
+        b = b.model_name(m.as_str());
+    }
+    if let Some(be) = p.flags.get("backend") {
+        b = b.backend(BackendKind::parse(be)?);
+    }
+    if let Some(dir) = p.flags.get("artifacts") {
+        b = b.artifacts_dir(dir);
+    }
+    if let Some(t) = flag_val::<usize>(&p.flags, "threads")? {
+        b = b.threads(t);
+    }
+    if let Some(path) = p.flags.get("ckpt") {
+        b = b.checkpoint(path);
+    }
+    for kv in &p.overrides {
+        b = b.override_kv(kv);
+    }
+    Ok(b)
 }
 
-fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<()> {
-    let cfg = load_config(flags, overrides)?;
+fn cmd_train(p: &Parsed) -> Result<()> {
+    let mut b = builder_from(p)?
+        .event_sink(Arc::new(StdoutSink { every: 0 }));
+    if let Some(k) = flag_val::<usize>(&p.flags, "save-every")? {
+        b = b.save_every(k);
+    }
+    if let Some(d) = p.flags.get("ckpt-dir") {
+        b = b.ckpt_dir(d);
+    }
+    let mut session = b.build()?;
+    if let Some(path) = p.flags.get("resume") {
+        session.resume(Path::new(path))?;
+        println!("resumed from {} at step {}", path, session.step());
+    }
+
+    let cfg = session.config().clone();
     println!(
         "training {} | backend={} | mode={} | dataset={} | steps={} | seed={}",
         cfg.model,
@@ -150,10 +335,6 @@ fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<(
         cfg.steps,
         cfg.seed
     );
-    let run_name = flags
-        .get("name")
-        .cloned()
-        .unwrap_or_else(|| format!("{}_{}", cfg.model, cfg.mode.name()));
     if cfg.save_every > 0 {
         println!(
             "checkpoints: every {} steps into {}",
@@ -161,147 +342,91 @@ fn cmd_train(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<(
             cfg.ckpt_dir.display()
         );
     }
+    println!("params: {}", session.n_params());
+    let info = session.describe();
+    if let Some((_, bytes)) =
+        info.peak_memory.iter().find(|(m, _)| *m == cfg.mode.name())
+    {
+        println!("peak training memory (analytic): {}", fmt_bytes(*bytes));
+    }
 
-    let log = if cfg.mode == TrainMode::RevVit {
-        ensure!(
-            cfg.save_every == 0 && !flags.contains_key("resume"),
-            "checkpointing is supported by the BDIA/vanilla trainer only \
-             (RevViT baseline has no persistence)"
-        );
-        let mut tr = RevVitTrainer::new(cfg.clone())?;
-        println!("params: {}", tr.n_params());
-        let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
-        let log = tr.run(ds.as_ref(), &run_name)?;
-        report_live(&log);
-        log
-    } else {
-        let mut tr = Trainer::new(cfg.clone())?;
-        if let Some(path) = flags.get("resume") {
-            tr.load_checkpoint(std::path::Path::new(path))?;
-            println!("resumed from {} at step {}", path, tr.step());
-        }
-        println!("params: {}", tr.n_params());
-        let mm = MemoryModel::new(
-            cfg.mode,
-            tr.family,
-            &tr.rt.manifest.dims,
-            tr.n_params() * 4,
-        );
-        println!("peak training memory (analytic): {}", fmt_bytes(mm.peak_total()));
-        let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
-        let log = tr.run(ds.as_ref(), &run_name)?;
-        report_live(&log);
-        log
-    };
-    let out = PathBuf::from("results").join(format!("{run_name}.csv"));
-    log.write_csv(&out)?;
-    println!("log written to {}", out.display());
-    Ok(())
-}
-
-fn report_live(log: &bdia::metrics::TrainLog) {
-    if let Some(r) = log.last() {
+    let run_name = p
+        .flags
+        .get("name")
+        .cloned()
+        .unwrap_or_else(|| format!("{}_{}", cfg.model, cfg.mode.name()));
+    let csv_out = PathBuf::from("results").join(format!("{run_name}.csv"));
+    let report = session.train(&TrainOpts {
+        run_name: Some(run_name),
+        csv_out: Some(csv_out.clone()),
+    })?;
+    if let Some(r) = report.log.last() {
         println!(
             "final: step {} train_loss {:.4} val_loss {} val_acc {} ({:.0} ms/step)",
             r.step,
             r.train_loss,
-            r.val_loss.map_or("-".into(), |v| format!("{v:.4}")),
-            r.val_acc.map_or("-".into(), |v| format!("{v:.3}")),
-            log.mean_ms_per_step()
+            r.val_loss.map_or("-".into(), |x| format!("{x:.4}")),
+            r.val_acc.map_or("-".into(), |x| format!("{x:.3}")),
+            report.mean_ms_per_step
         );
     }
+    println!("log written to {}", csv_out.display());
+    Ok(())
 }
 
-fn cmd_eval(flags: &BTreeMap<String, String>, overrides: &[String]) -> Result<()> {
-    let cfg = load_config(flags, overrides)?;
-    let gamma: f32 = flags
-        .get("gamma")
-        .map(|g| g.parse())
-        .transpose()
-        .context("--gamma must be a float")?
-        .unwrap_or(0.0);
-    let n_batches: usize = flags
-        .get("batches")
-        .map(|b| b.parse())
-        .transpose()
-        .context("--batches must be an integer")?
-        .unwrap_or(cfg.eval_batches);
-    let mut tr = Trainer::new(cfg.clone())?;
-    let provenance = match flags.get("ckpt") {
-        Some(path) => {
-            tr.load_checkpoint(std::path::Path::new(path))?;
-            format!("checkpoint {path}, step {}", tr.step())
-        }
-        None => {
-            eprintln!(
-                "warning: no --ckpt given — scoring FRESHLY-SEEDED (untrained) \
-                 parameters.\nwarning: pass --ckpt <file> to evaluate weights \
-                 produced by `bdia train save_every=K`."
-            );
-            format!("untrained seed {}", cfg.seed)
-        }
-    };
-    let ds = bdia::experiments::dataset_for(&tr.rt, &cfg)?;
-    let (loss, acc) = tr.evaluate(ds.as_ref(), n_batches, gamma)?;
+fn cmd_eval(p: &Parsed) -> Result<()> {
+    if !p.flags.contains_key("ckpt") {
+        eprintln!(
+            "warning: no --ckpt given — scoring FRESHLY-SEEDED (untrained) \
+             parameters.\nwarning: pass --ckpt <file> to evaluate weights \
+             produced by `bdia train save_every=K`."
+        );
+    }
+    let session = builder_from(p)?.build()?;
+    let report = session.evaluate(&EvalOpts {
+        gamma: flag_val::<f32>(&p.flags, "gamma")?.unwrap_or(0.0),
+        batches: flag_val::<usize>(&p.flags, "batches")?,
+    })?;
     println!(
-        "{} @ gamma={gamma}: val_loss {loss:.4} val_acc {acc:.4} ({provenance})",
-        cfg.model
+        "{} @ gamma={}: val_loss {:.4} val_acc {:.4} ({})",
+        session.model(),
+        report.gamma,
+        report.loss,
+        report.acc,
+        report.provenance
     );
     Ok(())
 }
 
-fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
-    let cfg = ServeConfig {
-        model: flags.get("model").cloned().unwrap_or_else(|| "vit_s10".into()),
-        backend: flags
-            .get("backend")
-            .map(|b| BackendKind::parse(b))
-            .transpose()?
-            .unwrap_or_default(),
-        artifacts_dir: flags
-            .get("artifacts")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts")),
-        ckpt: flags.get("ckpt").map(PathBuf::from),
-        port: flags
-            .get("port")
-            .map(|p| p.parse())
-            .transpose()
-            .context("--port must be an integer")?
-            .unwrap_or(7878),
-        workers: flags
-            .get("workers")
-            .map(|w| w.parse())
-            .transpose()
-            .context("--workers must be an integer")?
-            .unwrap_or(4),
-        batch_window: Duration::from_micros(
-            flags
-                .get("batch-window-us")
-                .map(|w| w.parse())
-                .transpose()
-                .context("--batch-window-us must be an integer")?
-                .unwrap_or(2000),
-        ),
-        threads: parse_threads(flags)?,
-    };
-    if cfg.ckpt.is_none() {
+fn cmd_serve(p: &Parsed) -> Result<()> {
+    if !p.flags.contains_key("ckpt") {
         eprintln!(
             "warning: no --ckpt given — serving FRESHLY-SEEDED (untrained) \
              parameters."
         );
     }
-    let model = cfg.model.clone();
-    let workers = cfg.workers;
-    let window = cfg.batch_window;
-    let server = Server::start(cfg)?;
+    let session = builder_from(p)?.build()?;
+    let opts = ServeOpts {
+        port: flag_val::<u16>(&p.flags, "port")?.unwrap_or(7878),
+        workers: flag_val::<usize>(&p.flags, "workers")?.unwrap_or(4),
+        batch_window: Duration::from_micros(
+            flag_val::<u64>(&p.flags, "batch-window-us")?.unwrap_or(2000),
+        ),
+    };
+    let handle = session.serve(&opts)?;
     println!(
-        "bdia serve: {model} on http://{} ({workers} workers, batch window \
-         {window:?})",
-        server.addr()
+        "bdia serve: {} on http://{} ({} workers, batch window {:?})",
+        session.model(),
+        handle.addr(),
+        opts.workers,
+        opts.batch_window
     );
     println!("endpoints: POST /infer  GET /healthz  GET /stats  POST /shutdown");
-    server.join()
+    // the server owns its own runtime + a param clone; free the session's
+    // training state (grads, optimizer moments) for the serve lifetime
+    drop(session);
+    handle.join()?;
+    Ok(())
 }
 
 /// Resolve `host:port` (hostnames included, e.g. `localhost:7878`) to a
@@ -314,55 +439,23 @@ fn resolve_addr(s: &str) -> Result<std::net::SocketAddr> {
         .ok_or_else(|| anyhow::anyhow!("--addr '{s}' resolved to no address"))
 }
 
-fn cmd_bench_serve(flags: &BTreeMap<String, String>) -> Result<()> {
-    let defaults = BenchOpts::default();
-    let opts = BenchOpts {
-        model: flags.get("model").cloned().unwrap_or(defaults.model),
-        backend: flags
-            .get("backend")
-            .map(|b| BackendKind::parse(b))
-            .transpose()?
-            .unwrap_or_default(),
-        artifacts_dir: flags
-            .get("artifacts")
-            .map(PathBuf::from)
-            .unwrap_or(defaults.artifacts_dir),
-        ckpt: flags.get("ckpt").map(PathBuf::from),
-        addr: flags.get("addr").map(|a| resolve_addr(a)).transpose()?,
-        workers: flags
-            .get("workers")
-            .map(|w| w.parse())
-            .transpose()
-            .context("--workers")?
-            .unwrap_or(defaults.workers),
-        requests: flags
-            .get("requests")
-            .map(|r| r.parse())
-            .transpose()
-            .context("--requests")?
+fn cmd_bench_serve(p: &Parsed) -> Result<()> {
+    let session = builder_from(p)?.build()?;
+    let defaults = ServeBenchOpts::default();
+    let opts = ServeBenchOpts {
+        requests: flag_val::<usize>(&p.flags, "requests")?
             .unwrap_or(defaults.requests),
-        concurrency: flags
-            .get("concurrency")
-            .map(|c| c.parse())
-            .transpose()
-            .context("--concurrency")?
+        concurrency: flag_val::<usize>(&p.flags, "concurrency")?
             .unwrap_or(defaults.concurrency),
-        gamma: flags
-            .get("gamma")
-            .map(|g| g.parse())
-            .transpose()
-            .context("--gamma")?
-            .unwrap_or(defaults.gamma),
-        batch_window: flags
-            .get("batch-window-us")
-            .map(|w| w.parse().map(Duration::from_micros))
-            .transpose()
-            .context("--batch-window-us")?
+        workers: flag_val::<usize>(&p.flags, "workers")?.unwrap_or(defaults.workers),
+        gamma: flag_val::<f32>(&p.flags, "gamma")?.unwrap_or(defaults.gamma),
+        batch_window: flag_val::<u64>(&p.flags, "batch-window-us")?
+            .map(Duration::from_micros)
             .unwrap_or(defaults.batch_window),
-        threads: parse_threads(flags)?,
-        verify: !flags.contains_key("no-verify"),
+        addr: p.flags.get("addr").map(|a| resolve_addr(a)).transpose()?,
+        verify: !p.flags.contains_key("no-verify"),
     };
-    let summary = bdia::serve::bench::run(&opts)?;
+    let summary = session.bench_serve(&opts)?;
     ensure!(summary.errors == 0, "{} requests failed", summary.errors);
     ensure!(
         summary.mismatches == 0,
@@ -372,17 +465,19 @@ fn cmd_bench_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
-    let quick = flags.contains_key("quick");
+fn cmd_bench(p: &Parsed) -> Result<()> {
+    let quick = p.flags.contains_key("quick");
     let mut opts = bdia::bench::suite::SuiteOpts::new(quick);
-    if let Some(f) = flags.get("families") {
+    if let Some(f) = p.flags.get("families") {
         opts.families = f.split(',').map(str::to_string).collect();
     }
-    opts.threads = parse_threads(flags)?;
-    if let Some(o) = flags.get("out") {
+    if let Some(t) = flag_val::<usize>(&p.flags, "threads")? {
+        opts.threads = t;
+    }
+    if let Some(o) = p.flags.get("out") {
         opts.out = PathBuf::from(o);
     }
-    let report = bdia::bench::suite::run(&opts)?;
+    let report = bdia::api::bench_suite(&opts)?;
     ensure!(
         report.all_finite(),
         "bench produced non-finite timings — kernel regression?"
@@ -390,28 +485,28 @@ fn cmd_bench(flags: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_repro(flags: &BTreeMap<String, String>, rest: &[String]) -> Result<()> {
-    let Some(id) = rest.first() else {
+fn cmd_repro(p: &Parsed) -> Result<()> {
+    let Some(id) = p.rest.first() else {
         bail!("usage: bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>")
     };
-    let mut opts = if flags.contains_key("quick") {
-        ExpOpts::quick()
+    let mut opts = if p.flags.contains_key("quick") {
+        bdia::experiments::ExpOpts::quick()
     } else {
-        ExpOpts::default()
+        bdia::experiments::ExpOpts::default()
     };
-    if let Some(s) = flags.get("steps") {
-        opts.steps = s.parse().context("--steps")?;
+    if let Some(s) = flag_val::<usize>(&p.flags, "steps")? {
+        opts.steps = s;
     }
-    if let Some(s) = flags.get("seeds") {
+    if let Some(s) = p.flags.get("seeds") {
         opts.seeds = s
             .split(',')
             .map(|x| x.parse().context("--seeds"))
             .collect::<Result<_>>()?;
     }
-    if let Some(d) = flags.get("out") {
+    if let Some(d) = p.flags.get("out") {
         opts.out_dir = PathBuf::from(d);
     }
-    if let Some(d) = flags.get("artifacts") {
+    if let Some(d) = p.flags.get("artifacts") {
         opts.artifacts_dir = PathBuf::from(d);
     }
     println!(
@@ -420,68 +515,48 @@ fn cmd_repro(flags: &BTreeMap<String, String>, rest: &[String]) -> Result<()> {
         opts.seeds,
         opts.out_dir.display()
     );
-    run_experiment(id, &opts)
+    bdia::api::repro(id, &opts)?;
+    Ok(())
 }
 
-fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
-    let model = flags
-        .get("model")
-        .cloned()
-        .unwrap_or_else(|| "vit_s10".into());
-    let dir = flags
-        .get("artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"));
-    let backend = flags
-        .get("backend")
-        .map(|b| BackendKind::parse(b))
-        .transpose()?
-        .unwrap_or_default();
-    bdia::kernels::pool::set_threads(parse_threads(flags)?);
-    let rt = Runtime::load_with(&dir, &model, backend)?;
-    let m = &rt.manifest;
+fn cmd_info(p: &Parsed) -> Result<()> {
+    let session = builder_from(p)?.build()?;
+    let info = session.describe();
     println!(
-        "bundle {} (family {:?}, backend {})",
-        m.name,
-        m.family,
-        rt.backend.name()
+        "bundle {} (family {}, backend {})",
+        info.name, info.family, info.backend
     );
-    let ws = bdia::kernels::workspace::stats();
     println!(
         "  kernels: threads={} (auto={}, workers spawned={}), workspace \
          hits={} misses={}",
-        bdia::kernels::pool::threads(),
-        bdia::kernels::pool::auto_threads(),
-        bdia::kernels::pool::spawned_workers(),
-        ws.hits,
-        ws.misses
+        info.kernel_threads,
+        info.kernel_auto_threads,
+        info.kernel_spawned_workers,
+        info.workspace_hits,
+        info.workspace_misses
     );
     println!(
         "  dims: d_model={} heads={} K={} K_enc={} batch={} l={}",
-        m.dims.d_model, m.dims.n_heads, m.dims.n_blocks, m.dims.n_enc_blocks,
-        m.dims.batch, m.dims.lbits
+        info.dims.d_model,
+        info.dims.n_heads,
+        info.dims.n_blocks,
+        info.dims.n_enc_blocks,
+        info.dims.batch,
+        info.dims.lbits
     );
-    println!("  params: {}", m.n_params());
+    println!("  params: {}", info.n_params);
     println!("  executables (calls this process):");
-    for (name, calls) in rt.call_counts() {
+    for (name, calls) in &info.call_counts {
         println!("    {name}  calls={calls}");
     }
-    for mode in [
-        TrainMode::Vanilla,
-        TrainMode::BdiaReversible,
-        TrainMode::RevVit,
-    ] {
-        let mm = MemoryModel::new(mode, m.family, &m.dims, m.n_params() * 4);
-        println!(
-            "  peak training memory [{}]: {}",
-            mode.name(),
-            fmt_bytes(mm.peak_total())
-        );
+    for (mode, bytes) in &info.peak_memory {
+        println!("  peak training memory [{mode}]: {}", fmt_bytes(*bytes));
     }
     Ok(())
 }
 
 fn print_help() {
+    let models = ModelId::known_names().join(", ");
     println!(
         "bdia — exact bit-level reversible transformer training (BDIA)\n\n\
          USAGE:\n  bdia train --config configs/<f>.json \
@@ -494,10 +569,14 @@ fn print_help() {
          [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
          [--no-verify]\n  \
          bdia bench [--families a,b,c] [--threads N] [--quick] \
-         [--out BENCH_3.json]\n  \
+         [--out BENCH_4.json]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
          [--quick] [--steps N] [--seeds 0,1]\n  \
          bdia info  --model <bundle> [--backend native|pjrt]\n\n\
+         Models: {models}\n\
+         (any exported AOT bundle directory under artifacts/ also works)\n\n\
+         Flags accept --flag value and --flag=value; unknown flags error \
+         with a closest-match hint.\n\n\
          Config keys (key=value overrides): model, backend (native|pjrt), \
          mode (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, \
          lr, optimizer (adam|setadam), seed, eval_every, eval_batches, \
@@ -516,7 +595,9 @@ fn print_help() {
          is given) and verifies responses are bit-identical to direct \
          inference.\n\
          Benchmarks: `bench` times fwd/bwd/infer per model family at 1 and \
-         N threads and writes BENCH_3.json.\n\n\
+         N threads and writes BENCH_4.json.\n\n\
+         Library use: everything above is a thin client of \
+         bdia::api::Session — see rust/README.md \"Library use\".\n\
          The native backend is pure Rust and needs no artifacts; pjrt needs \
          the `pjrt` cargo feature plus `make artifacts`."
     );

@@ -81,11 +81,9 @@ pub fn default_dataset(family: Family) -> &'static str {
 }
 
 pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
-    ensure!(opts.requests > 0 && opts.concurrency > 0, "need requests > 0");
     // local reference runtime: payload generation + verification
     let rt =
         Runtime::load_with(&opts.artifacts_dir, &opts.model, opts.backend)?;
-    let family = rt.manifest.family;
     let params = match &opts.ckpt {
         Some(p) => {
             let ck = checkpoint::load(p)?;
@@ -100,26 +98,6 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
         }
         None => ParamStore::init(&rt.manifest, 0),
     };
-
-    // build a pool of distinct payloads from the held-out split
-    let cfg = TrainConfig {
-        model: opts.model.clone(),
-        dataset: default_dataset(family).into(),
-        ..TrainConfig::default()
-    };
-    let ds = make_dataset(&cfg, &rt.manifest.dims, family)?;
-    let pool_target = opts.requests.min(64);
-    let nvb = ds.n_val_batches().max(1);
-    let mut pool = Vec::new();
-    let mut bi = 0usize;
-    while pool.len() < pool_target {
-        pool.extend(wire::examples_from_batch(&ds.val_batch(bi % nvb)));
-        bi += 1;
-    }
-    pool.truncate(pool_target);
-    let bodies: Arc<Vec<Vec<u8>>> = Arc::new(
-        pool.iter().map(|e| wire::encode(e, opts.gamma)).collect(),
-    );
 
     // self-host unless pointed at an external server
     let (server, addr) = match opts.addr {
@@ -143,6 +121,49 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
             (Some(srv), a)
         }
     };
+
+    let summary = run_against(opts, &rt, &params, addr);
+    if let Some(srv) = server {
+        client::shutdown(addr).context("graceful shutdown")?;
+        srv.join()?;
+    }
+    summary
+}
+
+/// Fire the load at an already-running server and verify against the given
+/// reference runtime + parameters.  `api::Session::bench_serve` self-hosts
+/// through the session (its live, possibly just-trained weights) and calls
+/// this; [`run`] wraps it with checkpoint loading + self-hosting for the
+/// standalone path.  The server must stay up until this returns (it reads
+/// `/stats` at the end).
+pub fn run_against(
+    opts: &BenchOpts,
+    rt: &Runtime,
+    params: &ParamStore,
+    addr: SocketAddr,
+) -> Result<BenchSummary> {
+    ensure!(opts.requests > 0 && opts.concurrency > 0, "need requests > 0");
+    let family = rt.manifest.family;
+
+    // build a pool of distinct payloads from the held-out split
+    let cfg = TrainConfig {
+        model: opts.model.clone(),
+        dataset: default_dataset(family).into(),
+        ..TrainConfig::default()
+    };
+    let ds = make_dataset(&cfg, &rt.manifest.dims, family)?;
+    let pool_target = opts.requests.min(64);
+    let nvb = ds.n_val_batches().max(1);
+    let mut pool = Vec::new();
+    let mut bi = 0usize;
+    while pool.len() < pool_target {
+        pool.extend(wire::examples_from_batch(&ds.val_batch(bi % nvb)));
+        bi += 1;
+    }
+    pool.truncate(pool_target);
+    let bodies: Arc<Vec<Vec<u8>>> = Arc::new(
+        pool.iter().map(|e| wire::encode(e, opts.gamma)).collect(),
+    );
 
     // fire the load
     let t0 = Instant::now();
@@ -170,18 +191,13 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
-    // server-side stats (before shutdown)
+    // server-side stats (the caller shuts the server down after we return)
     let (_, stats_body) = client::get(addr, "/stats")?;
     let stats_json = String::from_utf8_lossy(&stats_body).to_string();
     let mean_batch = Json::parse(&stats_json)
         .ok()
         .and_then(|j| j.get("mean_batch").ok().and_then(|v| v.as_f64().ok()))
         .unwrap_or(0.0);
-
-    if let Some(srv) = server {
-        client::shutdown(addr).context("graceful shutdown")?;
-        srv.join()?;
-    }
 
     // client-side latency summary
     let mut lat: Vec<u64> = results.iter().map(|(_, us, _)| *us).collect();
@@ -196,7 +212,7 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
     if opts.verify {
         let expected: Vec<(f32, f32)> = pool
             .iter()
-            .map(|e| wire::infer_one(&rt, &params, e, opts.gamma))
+            .map(|e| wire::infer_one(rt, params, e, opts.gamma))
             .collect::<Result<_>>()?;
         for (i, _, r) in &results {
             if let Ok((loss, correct)) = r {

@@ -34,6 +34,7 @@ pub mod http;
 pub mod stats;
 pub mod wire;
 
+use crate::api::events::{EventSink, NullSink, RequestEvent};
 use crate::checkpoint;
 use crate::model::ParamStore;
 use crate::runtime::{BackendKind, Runtime};
@@ -95,6 +96,9 @@ struct Shared {
     addr: SocketAddr,
     workers: usize,
     batch_window: Duration,
+    /// Per-request observer ([`crate::api::events::EventSink`]); the
+    /// default server uses a no-op sink, sessions pass theirs through.
+    sink: Arc<dyn EventSink>,
 }
 
 /// A running server: worker pool + listener, shut down via [`Server::stop`]
@@ -107,20 +111,8 @@ pub struct Server {
 impl Server {
     /// Load the bundle (+ optional checkpoint), bind, and spawn the pool.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
-        ensure!(cfg.workers > 0, "need at least one worker");
-        if cfg.threads != 0 {
-            // the serving workers share the process-wide kernel pool with
-            // everything else; outputs are thread-count invariant
-            crate::kernels::pool::set_threads(cfg.threads);
-        }
         let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
             .with_context(|| format!("loading bundle '{}'", cfg.model))?;
-        ensure!(
-            rt.has_exec("model_infer_ex"),
-            "bundle '{}' has no model_infer_ex executable (re-export artifacts \
-             or use a native-registry bundle)",
-            cfg.model
-        );
         let params = match &cfg.ckpt {
             Some(path) => {
                 let ck = checkpoint::load(path)?;
@@ -142,6 +134,36 @@ impl Server {
             }
             None => ParamStore::init(&rt.manifest, 0),
         };
+        Self::start_with_parts(cfg, rt, params, Arc::new(NullSink))
+    }
+
+    /// Start with a pre-built runtime, in-memory parameters and an event
+    /// sink — the `api::Session` path: a session serves its **current**
+    /// (possibly just-trained) weights without a checkpoint round trip,
+    /// and request events flow to the session's sink.
+    pub fn start_with_parts(
+        cfg: ServeConfig,
+        rt: Runtime,
+        params: ParamStore,
+        sink: Arc<dyn EventSink>,
+    ) -> Result<Server> {
+        ensure!(cfg.workers > 0, "need at least one worker");
+        if cfg.threads != 0 {
+            // the serving workers share the process-wide kernel pool with
+            // everything else; outputs are thread-count invariant
+            crate::kernels::pool::set_threads(cfg.threads);
+        }
+        ensure!(
+            rt.has_exec("model_infer_ex"),
+            "bundle '{}' has no model_infer_ex executable (re-export artifacts \
+             or use a native-registry bundle)",
+            cfg.model
+        );
+        ensure!(
+            params.matches_manifest(&rt.manifest),
+            "parameter structure does not match bundle '{}'",
+            cfg.model
+        );
         let listener = TcpListener::bind(("127.0.0.1", cfg.port))
             .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
         let addr = listener.local_addr()?;
@@ -154,6 +176,7 @@ impl Server {
             addr,
             workers: cfg.workers,
             batch_window: cfg.batch_window,
+            sink,
         });
         let mut threads = Vec::with_capacity(cfg.workers + 1);
         for wi in 0..cfg.workers {
@@ -331,6 +354,10 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
         Ok(v) => v,
         Err(e) => {
             shared.stats.record_error();
+            shared.sink.on_request(&RequestEvent {
+                latency_us: t0.elapsed().as_micros() as u64,
+                ok: false,
+            });
             let _ = http::write_response(
                 stream,
                 400,
@@ -349,6 +376,10 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
         resp: tx,
     });
     if !accepted {
+        shared.sink.on_request(&RequestEvent {
+            latency_us: t0.elapsed().as_micros() as u64,
+            ok: false,
+        });
         let _ = http::write_response(
             stream,
             503,
@@ -358,15 +389,19 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
         );
         return;
     }
-    match rx.recv() {
+    let outcome = rx.recv();
+    let latency_us = t0.elapsed().as_micros() as u64;
+    shared.sink.on_request(&RequestEvent {
+        latency_us,
+        ok: matches!(outcome, Ok(Ok(_))),
+    });
+    match outcome {
         Ok(Ok((loss, correct))) => {
             let mut out = [0u8; 8];
             out[..4].copy_from_slice(&loss.to_le_bytes());
             out[4..].copy_from_slice(&correct.to_le_bytes());
             shared.stats.record_request();
-            shared
-                .stats
-                .record_latency_us(t0.elapsed().as_micros() as u64);
+            shared.stats.record_latency_us(latency_us);
             let _ = http::write_response(
                 stream,
                 200,

@@ -1,0 +1,346 @@
+//! The `bdia::api` facade surface: builder defaults match
+//! `TrainConfig::default()`, the Session path is bit-identical to the
+//! pre-facade `Trainer` path (train → save → resume), `infer_batch` is
+//! bit-identical to a raw `model_infer_ex` executable call, `ApiError`
+//! variants are structured and matchable, and the `EventSink` observer
+//! delivers ordered step events and gamma-tagged eval events.
+
+use bdia::api::{
+    ApiError, Collector, EvalOpts, Event, ModelId, ServeOpts, Session,
+    TrainOpts,
+};
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::Trainer;
+use bdia::experiments::dataset_for;
+use bdia::model::ParamStore;
+use bdia::serve::{client, wire};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn cfg_for(bundle: &str, steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: bundle.into(),
+        mode: TrainMode::BdiaReversible,
+        dataset: match bundle {
+            "smoke_vit" => "synth_cifar10".into(),
+            "smoke_gpt" => "tiny_corpus".into(),
+            "smoke_encdec" => "synth_translation".into(),
+            _ => unreachable!(),
+        },
+        steps,
+        eval_every: 0,
+        log_every: 1,
+        artifacts_dir: artifacts(),
+        train_examples: 64,
+        val_examples: 16,
+        lr: 1e-3,
+        ..TrainConfig::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("bdia_api_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Flatten every parameter to its raw bit pattern (exact comparison).
+fn store_bits(ps: &ParamStore) -> Vec<u32> {
+    let mut out = Vec::new();
+    for insts in ps.groups.values() {
+        for inst in insts {
+            for t in inst {
+                out.extend(t.data().iter().map(|v| v.to_bits()));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// builder defaults
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_defaults_match_train_config_default() {
+    let session = Session::builder().build().unwrap();
+    assert_eq!(session.config(), &TrainConfig::default());
+    assert_eq!(session.step(), 0);
+    assert!(session.resumed_from().is_none());
+    assert!(session.provenance().contains("untrained"));
+}
+
+#[test]
+fn builder_setters_land_in_config() {
+    let session = Session::builder()
+        .model(ModelId::SmokeGpt)
+        .dataset("tiny_corpus")
+        .steps(7)
+        .seed(3)
+        .threads(2)
+        .eval_every(5)
+        .eval_batches(2)
+        .override_kv("lr=0.01")
+        .build()
+        .unwrap();
+    let cfg = session.config();
+    assert_eq!(cfg.model, "smoke_gpt");
+    assert_eq!(cfg.steps, 7);
+    assert_eq!(cfg.seed, 3);
+    assert_eq!(cfg.threads, 2);
+    assert_eq!(cfg.lr, 0.01);
+    assert_eq!(session.model(), ModelId::SmokeGpt.name());
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity with the pre-facade paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_train_save_resume_bit_identical_to_trainer_path() {
+    let cfg = cfg_for("smoke_vit", 4);
+
+    // pre-facade reference: construct the Trainer directly
+    let mut tr = Trainer::new(cfg.clone()).unwrap();
+    let ds = dataset_for(&tr.rt, &cfg).unwrap();
+    tr.run(ds.as_ref(), "legacy").unwrap();
+
+    // facade path on the identical config
+    let mut session = Session::builder().config(cfg.clone()).build().unwrap();
+    let report = session.train(&TrainOpts::default()).unwrap();
+    assert_eq!(report.steps_completed, 4);
+    assert_eq!(report.log.records.len(), 4); // log_every = 1
+    assert_eq!(store_bits(session.params()), store_bits(&tr.params));
+
+    // save -> resume -> continue must equal an uninterrupted longer run
+    let dir = tmp_dir("resume");
+    let ckpt = dir.join("s4.ckpt");
+    session.save(&ckpt).unwrap();
+
+    let longer = TrainConfig { steps: 8, ..cfg.clone() };
+    let mut resumed = Session::builder()
+        .config(longer.clone())
+        .checkpoint(&ckpt)
+        .build()
+        .unwrap();
+    assert_eq!(resumed.step(), 4);
+    assert!(resumed.provenance().contains("s4.ckpt"));
+    resumed.train(&TrainOpts::default()).unwrap();
+
+    let mut full = Session::builder().config(longer).build().unwrap();
+    full.train(&TrainOpts::default()).unwrap();
+
+    assert_eq!(store_bits(resumed.params()), store_bits(full.params()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn infer_batch_bit_identical_to_raw_model_infer_ex() {
+    let mut session =
+        Session::builder().config(cfg_for("smoke_gpt", 2)).build().unwrap();
+    session.train(&TrainOpts::default()).unwrap(); // score trained weights
+    let ds = session.dataset().unwrap();
+    let examples = wire::examples_from_batch(&ds.val_batch(0));
+    let gamma = 0.25f32;
+
+    let got = session.infer_batch(&examples, gamma).unwrap();
+
+    // reference: the raw executable, bypassing the facade entirely
+    let rt = session.runtime();
+    let e = rt.exec("model_infer_ex").unwrap();
+    let refs = session.params().refs_for(&e.spec, 0).unwrap();
+    let packed =
+        wire::assemble(rt.manifest.family, &rt.manifest.dims, &examples).unwrap();
+    let outs = e.call(&refs, &packed.args(gamma)).unwrap();
+    let (loss, correct) = (outs[0].data(), outs[1].data());
+
+    assert_eq!(got.len(), examples.len());
+    for (i, (l, c)) in got.iter().enumerate() {
+        assert_eq!(l.to_bits(), loss[i].to_bits(), "loss slot {i}");
+        assert_eq!(c.to_bits(), correct[i].to_bits(), "correct slot {i}");
+    }
+
+    // single-example entry point hits the same path
+    let (l0, c0) = session.infer(&examples[0], gamma).unwrap();
+    assert_eq!(l0.to_bits(), got[0].0.to_bits());
+    assert_eq!(c0.to_bits(), got[0].1.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// error taxonomy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_model_error_is_structured_and_lists_names() {
+    let err = Session::builder()
+        .model_name("vit_s1O") // typo: O for 0
+        .artifacts_dir("/nonexistent/artifacts")
+        .build()
+        .unwrap_err();
+    let ApiError::UnknownModel { name, known } = &err else {
+        panic!("expected UnknownModel, got {err:?}")
+    };
+    assert_eq!(name, "vit_s1O");
+    assert_eq!(known, &ModelId::known_names());
+    let msg = err.to_string();
+    assert!(msg.contains("did you mean 'vit_s10'"), "{msg}");
+    assert!(msg.contains("smoke_encdec"), "{msg}");
+}
+
+#[test]
+fn config_errors_for_bad_override_and_bad_mode_combo() {
+    let err = Session::builder().override_kv("nonsense=1").build().unwrap_err();
+    assert!(matches!(err, ApiError::Config(_)), "{err:?}");
+
+    // |gamma| != 0.5 breaks exact bit-level reversibility in bdia mode
+    let err = Session::builder()
+        .config(cfg_for("smoke_vit", 1))
+        .gamma_mag(0.25)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ApiError::Config(_)), "{err:?}");
+    assert!(err.to_string().contains("0.5"), "{err}");
+}
+
+#[test]
+fn checkpoint_error_carries_the_path() {
+    let err = Session::builder()
+        .config(cfg_for("smoke_vit", 1))
+        .checkpoint("/nonexistent/dir/x.ckpt")
+        .build()
+        .unwrap_err();
+    let ApiError::Checkpoint(ck) = &err else {
+        panic!("expected Checkpoint, got {err:?}")
+    };
+    assert_eq!(ck.path, PathBuf::from("/nonexistent/dir/x.ckpt"));
+    // the std::error::Error chain exposes the checkpoint error as source
+    let source = std::error::Error::source(&err).expect("source");
+    assert!(source.to_string().contains("x.ckpt"));
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_without_feature_is_a_backend_error() {
+    let err = Session::builder()
+        .config(cfg_for("smoke_vit", 1))
+        .backend(bdia::runtime::BackendKind::Pjrt)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ApiError::Backend(_)), "{err:?}");
+    assert!(err.to_string().contains("feature"), "{err}");
+}
+
+#[test]
+fn revvit_engine_rejects_persistence_with_config_error() {
+    let mut cfg = cfg_for("smoke_vit", 1);
+    cfg.mode = TrainMode::RevVit;
+    let mut session = Session::builder().config(cfg).build().unwrap();
+    let err = session.resume(Path::new("/nonexistent/x.ckpt")).unwrap_err();
+    assert!(matches!(err, ApiError::Config(_)), "{err:?}");
+    let err = session.save(Path::new("/tmp/never.ckpt")).unwrap_err();
+    assert!(matches!(err, ApiError::Config(_)), "{err:?}");
+}
+
+// ---------------------------------------------------------------------------
+// event sink
+// ---------------------------------------------------------------------------
+
+#[test]
+fn event_sink_step_ordering_and_eval_gamma() {
+    let collector = Arc::new(Collector::new());
+    let cfg = TrainConfig {
+        eval_every: 2,
+        eval_batches: 1,
+        ..cfg_for("smoke_vit", 5)
+    };
+    let mut session = Session::builder()
+        .config(cfg)
+        .event_sink(collector.clone())
+        .build()
+        .unwrap();
+    session.train(&TrainOpts::default()).unwrap();
+    session
+        .evaluate(&EvalOpts { gamma: 0.25, batches: Some(1) })
+        .unwrap();
+
+    let events = collector.events();
+    let steps: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Step(s) => Some(s.step),
+            _ => None,
+        })
+        .collect();
+    // one event per optimization step, strictly increasing from 0
+    assert_eq!(steps, (0..5).collect::<Vec<_>>());
+    assert!(steps.windows(2).all(|w| w[0] < w[1]));
+
+    let evals: Vec<(usize, f32)> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Eval(e) => Some((e.step, e.gamma)),
+            _ => None,
+        })
+        .collect();
+    // loop evals at steps 2, 4, 5 carry the loop's gamma = 0.0; the manual
+    // evaluate carries the gamma it was asked for
+    assert_eq!(evals.len(), 4, "{evals:?}");
+    assert!(evals[..3].iter().all(|&(_, g)| g.to_bits() == 0.0f32.to_bits()));
+    assert_eq!(evals[3].1.to_bits(), 0.25f32.to_bits());
+
+    // saving emits a checkpoint event carrying the path
+    let dir = tmp_dir("events");
+    let ckpt = dir.join("ev.ckpt");
+    session.save(&ckpt).unwrap();
+    let last = collector.events().pop().unwrap();
+    let Event::Checkpoint(c) = last else { panic!("want checkpoint event") };
+    assert_eq!(c.step, 5);
+    assert_eq!(c.path, ckpt);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// serving through the facade
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_serve_uses_in_memory_params_and_emits_request_events() {
+    let collector = Arc::new(Collector::new());
+    let mut session = Session::builder()
+        .config(cfg_for("smoke_vit", 2))
+        .event_sink(collector.clone())
+        .build()
+        .unwrap();
+    // train in-session; the server must serve these weights with no
+    // checkpoint file involved
+    session.train(&TrainOpts::default()).unwrap();
+
+    let handle = session
+        .serve(&ServeOpts {
+            port: 0,
+            workers: 1,
+            batch_window: Duration::from_micros(100),
+        })
+        .unwrap();
+    let ds = session.dataset().unwrap();
+    let ex = &wire::examples_from_batch(&ds.val_batch(0))[0];
+    let served = client::infer(handle.addr(), &wire::encode(ex, 0.0)).unwrap();
+    let local = session.infer(ex, 0.0).unwrap();
+    handle.shutdown().unwrap();
+
+    assert_eq!(served.0.to_bits(), local.0.to_bits());
+    assert_eq!(served.1.to_bits(), local.1.to_bits());
+    assert!(
+        collector
+            .events()
+            .iter()
+            .any(|e| matches!(e, Event::Request(r) if r.ok)),
+        "serving must emit request events to the session sink"
+    );
+}
