@@ -58,6 +58,10 @@ pub enum ApiError {
     Serve(String),
     /// Training / evaluation / inference failed inside the engine.
     Train(String),
+    /// Distributed rendezvous, collective or world-config verification
+    /// failed (rank mismatch, unreachable rendezvous, config digest
+    /// disagreement between ranks, …).
+    Dist(String),
     /// Filesystem failure outside the checkpoint format (CSV logs, bench
     /// reports, config files).
     Io { path: PathBuf, message: String },
@@ -77,6 +81,11 @@ impl ApiError {
     /// Wrap an `anyhow` chain from the serving layer.
     pub(crate) fn serve(e: anyhow::Error) -> Self {
         ApiError::Serve(format!("{e:#}"))
+    }
+
+    /// Wrap an `anyhow` chain from the distributed layer.
+    pub(crate) fn dist(e: anyhow::Error) -> Self {
+        ApiError::Dist(format!("{e:#}"))
     }
 
     /// Wrap an `anyhow` chain from checkpoint save/load, keeping the path.
@@ -116,6 +125,7 @@ impl fmt::Display for ApiError {
             ApiError::Backend(m) => write!(f, "backend error: {m}"),
             ApiError::Serve(m) => write!(f, "serve error: {m}"),
             ApiError::Train(m) => write!(f, "training error: {m}"),
+            ApiError::Dist(m) => write!(f, "distributed training error: {m}"),
             ApiError::Io { path, message } => {
                 write!(f, "io error at {}: {message}", path.display())
             }

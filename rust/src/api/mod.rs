@@ -18,7 +18,9 @@
 //!   ├─ coordinator::Trainer / baseline::RevVitTrainer   (engines)
 //!   ├─ runtime::Runtime                                  (backends)
 //!   ├─ checkpoint                                        (persistence)
-//!   └─ serve::Server                                     (deployment)
+//!   ├─ serve::Server                                     (deployment)
+//!   └─ dist (ranks/rank/rendezvous builders,             (distribution)
+//!      attach_dist/connect_dist)
 //! ```
 //!
 //! The CLI (`main.rs`), the experiment drivers (`experiments/*`) and the
@@ -96,7 +98,7 @@ pub fn repro(id: &str, opts: &ExpOpts) -> ApiResult<()> {
 }
 
 /// Run the per-family performance suite (`bdia bench`): Session-reported
-/// hot-path timings at 1 and N threads, written to `BENCH_4.json`.
+/// hot-path timings at 1 and N threads, written to `BENCH_5.json`.
 ///
 /// Like [`repro`], failures surface as [`ApiError::Train`] with full
 /// context in the message.

@@ -13,6 +13,7 @@ use crate::baseline::RevVitTrainer;
 use crate::config::{TrainConfig, TrainMode};
 use crate::coordinator::{StepStats, Trainer};
 use crate::data::{make_dataset, Batch, Dataset};
+use crate::dist::{self, DistRole, Rendezvous};
 use crate::metrics::memory::MemoryModel;
 use crate::metrics::TrainLog;
 use crate::model::{Dims, Family, ParamStore};
@@ -193,6 +194,8 @@ pub struct SessionBuilder {
     ckpt: Option<PathBuf>,
     sink: Arc<dyn EventSink>,
     dataset_auto: bool,
+    dist_rank: Option<usize>,
+    rendezvous: Option<String>,
     pending_err: Option<ApiError>,
 }
 
@@ -203,6 +206,8 @@ impl Default for SessionBuilder {
             ckpt: None,
             sink: Arc::new(NullSink),
             dataset_auto: false,
+            dist_rank: None,
+            rendezvous: None,
             pending_err: None,
         }
     }
@@ -281,6 +286,35 @@ impl SessionBuilder {
 
     pub fn gamma_mag(mut self, mag: f32) -> Self {
         self.cfg.gamma_mag = mag;
+        self
+    }
+
+    /// Data-parallel world size (`ranks` config key).  Training is
+    /// bit-identical at any value; see [`crate::dist`].
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.cfg.ranks = n;
+        self
+    }
+
+    /// Micro-batches per global optimization step (`grad_accum` config
+    /// key; 0 = one per rank).  Must be a multiple of `ranks`.
+    pub fn grad_accum(mut self, n: usize) -> Self {
+        self.cfg.grad_accum = n;
+        self
+    }
+
+    /// This process's rank in a multi-process world (0 hosts the
+    /// rendezvous).  Unset + `ranks > 1` means rank 0.
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.dist_rank = Some(rank);
+        self
+    }
+
+    /// Rendezvous address (`host:port`) for a multi-process world; rank 0
+    /// binds it, workers connect to it.  Defaults to
+    /// [`dist::DEFAULT_RENDEZVOUS`].
+    pub fn rendezvous(mut self, addr: impl Into<String>) -> Self {
+        self.rendezvous = Some(addr.into());
         self
     }
 
@@ -380,6 +414,14 @@ impl SessionBuilder {
         }
         // engine construction validates the config/mode combination
         let engine = if cfg.mode == TrainMode::RevVit {
+            if cfg.ranks > 1 {
+                return Err(ApiError::Config(
+                    "distributed training drives the BDIA/vanilla trainer \
+                     only; the RevViT baseline has no collective integration \
+                     — set ranks=1"
+                        .into(),
+                ));
+            }
             Engine::RevVit(Box::new(
                 RevVitTrainer::with_runtime(cfg, rt).map_err(ApiError::config)?,
             ))
@@ -389,7 +431,13 @@ impl SessionBuilder {
             ))
         };
 
-        let mut session = Session { engine, sink: self.sink, resumed_from: None };
+        let mut session = Session {
+            engine,
+            sink: self.sink,
+            resumed_from: None,
+            dist_rank: self.dist_rank,
+            rendezvous: self.rendezvous,
+        };
         if let Some(path) = self.ckpt {
             session.resume(&path)?;
         }
@@ -406,6 +454,8 @@ pub struct Session {
     engine: Engine,
     sink: Arc<dyn EventSink>,
     resumed_from: Option<PathBuf>,
+    dist_rank: Option<usize>,
+    rendezvous: Option<String>,
 }
 
 impl Session {
@@ -481,12 +531,65 @@ impl Session {
     }
 
     // ------------------------------------------------------------------
+    // distribution
+    // ------------------------------------------------------------------
+
+    /// This session's rank (builder `.rank(..)`, default 0).
+    pub fn rank(&self) -> usize {
+        self.dist_rank.unwrap_or(0)
+    }
+
+    /// True once a data-parallel world is attached to the engine.
+    pub fn has_dist(&self) -> bool {
+        match &self.engine {
+            Engine::Bdia(t) => t.has_dist(),
+            Engine::RevVit(_) => false,
+        }
+    }
+
+    /// Attach an already-assembled world (the in-process harness path —
+    /// see [`dist::run_local_world`]).  Broadcasts rank 0's training state
+    /// so any resume done on rank 0 reaches every rank; call it *after*
+    /// [`Session::resume`].
+    pub fn attach_dist(&mut self, role: DistRole) -> ApiResult<()> {
+        match &mut self.engine {
+            Engine::Bdia(t) => t.attach_dist(role).map_err(ApiError::dist),
+            Engine::RevVit(_) => Err(ApiError::Config(
+                "distributed training drives the BDIA/vanilla trainer only"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Join the world described by the builder's `.ranks`/`.rank`/
+    /// `.rendezvous`: rank 0 binds and accepts (pass `prebound` if a
+    /// launcher already bound the listener to learn its port), workers
+    /// connect with retry.  Blocks until the full world assembles.
+    pub fn connect_dist(&mut self, prebound: Option<Rendezvous>) -> ApiResult<()> {
+        let role = dist::establish(
+            self.config(),
+            self.rank(),
+            self.rendezvous.as_deref(),
+            prebound,
+        )
+        .map_err(ApiError::dist)?;
+        self.attach_dist(role)
+    }
+
+    // ------------------------------------------------------------------
     // training
     // ------------------------------------------------------------------
 
     /// Run the training loop to `config().steps`, emitting step / eval /
     /// checkpoint events to the session's [`EventSink`].
+    ///
+    /// With `ranks > 1` configured and no world attached yet, this first
+    /// joins the rendezvous (blocking until all ranks arrive) — so `N`
+    /// processes each calling `train` *are* the distributed run.
     pub fn train(&mut self, opts: &TrainOpts) -> ApiResult<TrainReport> {
+        if self.config().ranks > 1 && !self.has_dist() {
+            self.connect_dist(None)?;
+        }
         let run_name = opts.run_name.clone().unwrap_or_else(|| {
             format!("{}_{}", self.config().model, self.config().mode.name())
         });
@@ -753,7 +856,7 @@ impl Session {
 
     /// Time the three hot paths (training forward, full train step, fused
     /// quantized inference) at the current kernel-pool thread count.
-    /// `bdia bench` aggregates these rows into `BENCH_4.json`.
+    /// `bdia bench` aggregates these rows into `BENCH_5.json`.
     pub fn bench(
         &mut self,
         budget: Duration,
@@ -826,18 +929,8 @@ impl Session {
         let rt = self.runtime();
         let m = &rt.manifest;
         let ws = crate::kernels::workspace::stats();
-        let peak_memory = [
-            TrainMode::Vanilla,
-            TrainMode::BdiaReversible,
-            TrainMode::BdiaFloat,
-            TrainMode::RevVit,
-        ]
-        .iter()
-        .map(|&mode| {
-            let mm = MemoryModel::new(mode, m.family, &m.dims, m.n_params() * 4);
-            (mode.name(), mm.peak_total())
-        })
-        .collect();
+        let peak_memory =
+            MemoryModel::peak_by_mode(m.family, &m.dims, m.n_params() * 4);
         ModelInfo {
             name: m.name.clone(),
             family: format!("{:?}", m.family),

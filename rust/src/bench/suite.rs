@@ -1,4 +1,4 @@
-//! `bdia bench`: the per-family performance suite behind BENCH_4.json.
+//! `bdia bench`: the per-family performance suite behind BENCH_5.json.
 //!
 //! Times the three hot paths — training forward (`fwd`), a full training
 //! step (`step` = forward + online backward + optimizer), and fused
@@ -7,17 +7,31 @@
 //! is the headline number for the deterministic parallel compute core:
 //! same bits, less wall time.
 //!
-//! Every measurement goes through the [`Session`] facade
+//! Two more blocks track the rest of the scaling story:
+//!
+//! * `dist` — per-family global-step wall time at world sizes 1 and 2
+//!   (full in-process ranks over loopback TCP, same `grad_accum`, so the
+//!   contrast isolates collective overhead vs compute split);
+//! * `memory` — the analytic Table-1 peak-training-memory per
+//!   family/mode ([`MemoryModel`]), so the perf trajectory tracks memory
+//!   alongside speed.
+//!
+//! Every hot-path measurement goes through the [`Session`] facade
 //! ([`Session::bench`]), so the suite times exactly the path embedders and
 //! the CLI use.  The report prints as rows and lands in a JSON file
-//! (default `BENCH_4.json`) so successive PRs can track the perf
-//! trajectory.
+//! (default `BENCH_5.json`) so successive PRs can track the trajectory.
 
 use crate::api::{Session, SessionTimings};
+use crate::config::{TrainConfig, TrainMode};
+use crate::coordinator::Trainer;
+use crate::data::make_dataset;
+use crate::dist::run_local_world;
 use crate::kernels::pool;
+use crate::metrics::memory::MemoryModel;
+use crate::serve::bench as serve_bench;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
 pub struct SuiteOpts {
@@ -45,7 +59,7 @@ impl SuiteOpts {
                     "smoke_encdec".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_4.json"),
+                out: PathBuf::from("BENCH_5.json"),
                 quick,
                 budget: Duration::from_millis(250),
                 max_iters: 4,
@@ -58,7 +72,7 @@ impl SuiteOpts {
                     "encdec_mt".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_4.json"),
+                out: PathBuf::from("BENCH_5.json"),
                 quick,
                 budget: Duration::from_millis(1500),
                 max_iters: 10,
@@ -67,19 +81,40 @@ impl SuiteOpts {
     }
 }
 
+/// One global-step timing at a given world size (dist scaling block).
+#[derive(Clone, Debug)]
+pub struct DistTimings {
+    pub bundle: String,
+    pub ranks: usize,
+    /// Mean wall time of one *global* optimization step, ms.
+    pub step_ms: f64,
+}
+
+/// One analytic Table-1 peak-memory number (memory block).
+#[derive(Clone, Debug)]
+pub struct MemoryRow {
+    pub bundle: String,
+    pub mode: &'static str,
+    pub peak_bytes: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct SuiteReport {
     pub threads_baseline: usize,
     pub threads_parallel: usize,
     /// One [`SessionTimings`] row per (bundle, thread count).
     pub rows: Vec<SessionTimings>,
+    /// Global-step time per (bundle, world size) — ranks 1 and 2.
+    pub dist: Vec<DistTimings>,
+    /// Analytic peak training memory per (bundle, mode).
+    pub memory: Vec<MemoryRow>,
 }
 
 impl SuiteReport {
     pub fn all_finite(&self) -> bool {
         self.rows.iter().all(|r| {
             r.fwd_ms.is_finite() && r.step_ms.is_finite() && r.infer_ms.is_finite()
-        })
+        }) && self.dist.iter().all(|d| d.step_ms.is_finite())
     }
 
     /// step-time speedup of the parallel run over the 1-thread run.
@@ -110,16 +145,77 @@ impl SuiteReport {
                 )
             })
             .collect();
+        let dist: Vec<String> = self
+            .dist
+            .iter()
+            .map(|d| {
+                format!(
+                    "    {{\"bundle\": \"{}\", \"ranks\": {}, \
+                     \"step_ms\": {:.3}}}",
+                    d.bundle, d.ranks, d.step_ms
+                )
+            })
+            .collect();
+        let memory: Vec<String> = self
+            .memory
+            .iter()
+            .map(|m| {
+                format!(
+                    "    {{\"bundle\": \"{}\", \"mode\": \"{}\", \
+                     \"peak_bytes\": {}}}",
+                    m.bundle, m.mode, m.peak_bytes
+                )
+            })
+            .collect();
         format!(
-            "{{\n  \"bench\": \"BENCH_4\",\n  \"quick\": {},\n  \
+            "{{\n  \"bench\": \"BENCH_5\",\n  \"quick\": {},\n  \
              \"threads_baseline\": {},\n  \"threads_parallel\": {},\n  \
-             \"results\": [\n{}\n  ]\n}}\n",
+             \"results\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \
+             \"memory\": [\n{}\n  ]\n}}\n",
             quick,
             self.threads_baseline,
             self.threads_parallel,
-            rows.join(",\n")
+            rows.join(",\n"),
+            dist.join(",\n"),
+            memory.join(",\n")
         )
     }
+}
+
+/// Mean global-step wall time of a full in-process `ranks`-sized world
+/// (loopback TCP, `grad_accum = 2` at every world size so the 1→2
+/// contrast isolates collective overhead vs compute split).
+fn dist_step_ms(
+    bundle: &str,
+    dataset: &str,
+    ranks: usize,
+    steps: usize,
+) -> Result<f64> {
+    let cfg = TrainConfig {
+        model: bundle.into(),
+        dataset: dataset.into(),
+        mode: TrainMode::BdiaReversible,
+        steps,
+        eval_every: 0,
+        log_every: 1,
+        train_examples: 64,
+        val_examples: 8,
+        ranks,
+        grad_accum: 2,
+        ..TrainConfig::default()
+    };
+    let per_rank = run_local_world(&cfg, |_rank, role| {
+        let mut tr = Trainer::new(cfg.clone())?;
+        tr.attach_dist(role)?;
+        let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family)?;
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            tr.train_step_global(ds.as_ref())?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1e3 / steps as f64)
+    })
+    .with_context(|| format!("dist bench {bundle} ranks={ranks}"))?;
+    Ok(per_rank[0])
 }
 
 /// Run the suite and write the JSON report.
@@ -135,6 +231,9 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
     );
 
     let mut rows = Vec::new();
+    let mut dist = Vec::new();
+    let mut memory = Vec::new();
+    let dist_steps = if opts.quick { 2 } else { 3 };
     for bundle in &opts.families {
         // one Session per bundle: the suite times the same facade path the
         // CLI and embedders use
@@ -148,6 +247,20 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
             let timings = session.bench(opts.budget, opts.max_iters)?;
             rows.push(timings);
         }
+        // analytic Table-1 peak memory rides along with every report
+        let m = &session.runtime().manifest;
+        for (mode, peak_bytes) in
+            MemoryModel::peak_by_mode(m.family, &m.dims, m.n_params() * 4)
+        {
+            memory.push(MemoryRow { bundle: bundle.clone(), mode, peak_bytes });
+        }
+        // dist scaling: the same global step at world sizes 1 and 2
+        let dataset = serve_bench::default_dataset(session.family());
+        drop(session);
+        for ranks in [1usize, 2] {
+            let step_ms = dist_step_ms(bundle, dataset, ranks, dist_steps)?;
+            dist.push(DistTimings { bundle: bundle.clone(), ranks, step_ms });
+        }
     }
     pool::set_threads(par);
 
@@ -155,12 +268,27 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
         threads_baseline: 1,
         threads_parallel: *counts.last().unwrap(),
         rows,
+        dist,
+        memory,
     };
     for bundle in &opts.families {
         if let Some(s) = report.step_speedup(bundle) {
             println!(
                 "{bundle}: step speedup x{s:.2} ({} -> {} threads)",
                 report.threads_baseline, report.threads_parallel
+            );
+        }
+        let at = |r: usize| {
+            report
+                .dist
+                .iter()
+                .find(|d| d.bundle == *bundle && d.ranks == r)
+                .map(|d| d.step_ms)
+        };
+        if let (Some(r1), Some(r2)) = (at(1), at(2)) {
+            println!(
+                "{bundle}: dist global step {r1:.2} ms @1 rank, {r2:.2} ms \
+                 @2 ranks (identical bits)"
             );
         }
     }
@@ -181,7 +309,7 @@ mod tests {
             std::process::id()
         ));
         std::fs::create_dir_all(&dir).unwrap();
-        let out = dir.join("BENCH_4.json");
+        let out = dir.join("BENCH_5.json");
         let opts = SuiteOpts {
             families: vec!["smoke_gpt".into()],
             threads: 2,
@@ -195,12 +323,28 @@ mod tests {
         assert_eq!(report.threads_parallel, 2);
         // one row per thread count
         assert_eq!(report.rows.len(), 2);
+        // dist scaling block: world sizes 1 and 2 for the one bundle
+        assert_eq!(report.dist.len(), 2);
+        assert_eq!(
+            report.dist.iter().map(|d| d.ranks).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert!(report.dist.iter().all(|d| d.step_ms > 0.0));
+        // memory block: one row per training mode
+        assert_eq!(report.memory.len(), 4);
+        assert!(report.memory.iter().all(|m| m.peak_bytes > 0));
         let text = std::fs::read_to_string(&out).unwrap();
         let parsed = crate::config::json::Json::parse(&text).unwrap();
         assert_eq!(
             parsed.get("bench").unwrap().as_str().unwrap(),
-            "BENCH_4"
+            "BENCH_5"
         );
+        let dist = parsed.get("dist").unwrap().as_arr().unwrap();
+        assert_eq!(dist.len(), 2);
+        assert_eq!(dist[1].get("ranks").unwrap().as_usize().unwrap(), 2);
+        let mem = parsed.get("memory").unwrap().as_arr().unwrap();
+        assert_eq!(mem.len(), 4);
+        assert!(mem[0].get("peak_bytes").unwrap().as_usize().unwrap() > 0);
         assert!(report.step_speedup("smoke_gpt").is_some());
         std::fs::remove_dir_all(&dir).ok();
     }

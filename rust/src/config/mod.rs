@@ -101,6 +101,15 @@ pub struct TrainConfig {
     /// kernel thread-pool parallelism (0 = auto-detect).  Results are
     /// bit-identical at any value; this is purely a speed knob.
     pub threads: usize,
+    /// data-parallel world size (number of ranks; 1 = single process).
+    /// Results are bit-identical at any value — see [`crate::dist`].
+    pub ranks: usize,
+    /// micro-batches per global optimization step (gradient accumulation).
+    /// 0 = auto: one micro-batch per rank (`max(ranks, 1)`).  Must be a
+    /// multiple of `ranks`; the global sample/γ sequence is a pure function
+    /// of this value, so runs at different rank counts (same `grad_accum`)
+    /// consume identical data and produce bit-identical training.
+    pub grad_accum: usize,
 }
 
 impl Default for TrainConfig {
@@ -129,6 +138,8 @@ impl Default for TrainConfig {
             save_every: 0,
             ckpt_dir: PathBuf::from("checkpoints"),
             threads: 0,
+            ranks: 1,
+            grad_accum: 0,
         }
     }
 }
@@ -178,9 +189,21 @@ impl TrainConfig {
             "save_every" => self.save_every = v.as_usize()?,
             "ckpt_dir" => self.ckpt_dir = PathBuf::from(v.as_str()?),
             "threads" => self.threads = v.as_usize()?,
+            "ranks" => self.ranks = v.as_usize()?,
+            "grad_accum" => self.grad_accum = v.as_usize()?,
             _ => bail!("unknown config key"),
         }
         Ok(())
+    }
+
+    /// Effective micro-batches per global optimization step (resolves the
+    /// `grad_accum = 0` auto default to one micro-batch per rank).
+    pub fn accum(&self) -> usize {
+        if self.grad_accum == 0 {
+            self.ranks.max(1)
+        } else {
+            self.grad_accum
+        }
     }
 
     /// Apply a `key=value` CLI override (values parsed as JSON when
@@ -259,6 +282,21 @@ mod tests {
         assert_eq!(c.threads, 4);
         let j = Json::parse(r#"{"threads": 2}"#).unwrap();
         assert_eq!(TrainConfig::from_json(&j).unwrap().threads, 2);
+    }
+
+    #[test]
+    fn dist_keys_parse_and_accum_resolves() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.ranks, 1);
+        assert_eq!(c.grad_accum, 0);
+        assert_eq!(c.accum(), 1); // auto: one micro-batch per rank
+        c.override_kv("ranks=4").unwrap();
+        assert_eq!(c.accum(), 4);
+        c.override_kv("grad_accum=8").unwrap();
+        assert_eq!(c.accum(), 8);
+        let j = Json::parse(r#"{"ranks": 2, "grad_accum": 6}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!((c.ranks, c.accum()), (2, 6));
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::stack::{GammaPlan, Stack, StackKind, StackState};
 use crate::checkpoint::{self, CheckpointRef, RngSnapshot};
 use crate::config::{TrainConfig, TrainMode};
 use crate::data::{Batch, Dataset};
+use crate::dist::{self, DistRole};
 use crate::metrics::{Record, TrainLog};
 use crate::model::{Family, ParamStore};
 use crate::optim::{clip_global_norm, Optimizer};
@@ -53,8 +54,19 @@ pub struct Trainer {
     pub opt: Optimizer,
     pub cfg: TrainConfig,
     pub family: Family,
+    /// Base of every per-micro-batch γ stream: micro `m` draws its gamma
+    /// plan from `rng_gamma.clone().fork(m)` — a *pure* function of the
+    /// (checkpointed) base state and the global micro index, so any rank
+    /// derives any micro's stream without replaying earlier draws.
     rng_gamma: Rng,
     step: usize,
+    /// Data-parallel wiring; `None` behaves exactly like rank 0 of 1.
+    dist: Option<DistRole>,
+    /// Reusable global-step buffers (gradient fold + per-micro
+    /// contribution, each ~n_params floats) — reallocating them every
+    /// optimization step would churn megabytes on real models.
+    fold_buf: Vec<f32>,
+    contrib_buf: Vec<f32>,
 }
 
 impl Trainer {
@@ -83,7 +95,19 @@ impl Trainer {
         let grads = params.zeros_like();
         let opt = Optimizer::new(&cfg, &params);
         let rng_gamma = Rng::new(cfg.seed ^ 0xbd1a_bd1a);
-        Ok(Trainer { rt, params, grads, opt, cfg, family, rng_gamma, step: 0 })
+        Ok(Trainer {
+            rt,
+            params,
+            grads,
+            opt,
+            cfg,
+            family,
+            rng_gamma,
+            step: 0,
+            dist: None,
+            fold_buf: Vec::new(),
+            contrib_buf: Vec::new(),
+        })
     }
 
     pub fn n_params(&self) -> usize {
@@ -152,9 +176,110 @@ impl Trainer {
         }
     }
 
-    fn draw_plan(&mut self, n_blocks: usize) -> GammaPlan {
-        let mag = self.effective_gamma();
-        GammaPlan::draw(&mut self.rng_gamma, n_blocks, self.rt.manifest.dims.batch, mag)
+    /// The γ stream of global micro-batch `m`: forked by value off the
+    /// checkpointed base, never advancing it.  Pure in `(base state, m)`,
+    /// which is what lets an N-rank world consume exactly the same γ
+    /// sequence as a single process ([`crate::dist`] module docs).
+    fn gamma_stream(&self, micro: u64) -> Rng {
+        self.rng_gamma.clone().fork(micro)
+    }
+
+    // ------------------------------------------------------------------
+    // distribution (data-parallel; None == rank 0 of a world of 1)
+    // ------------------------------------------------------------------
+
+    /// This rank's index and the world size.
+    pub fn dist_shape(&self) -> (usize, usize) {
+        self.dist.as_ref().map_or((0, 1), |d| (d.rank, d.world))
+    }
+
+    /// True on the rank that owns evaluation, logging and checkpoints.
+    pub fn is_rank0(&self) -> bool {
+        self.dist_shape().0 == 0
+    }
+
+    pub fn has_dist(&self) -> bool {
+        self.dist.is_some()
+    }
+
+    /// Join a data-parallel world: validate the shape against the config,
+    /// then broadcast rank 0's full training state (params, optimizer
+    /// moments, step, γ-RNG base) so a checkpoint resumed on rank 0 alone
+    /// reaches every worker bit-exactly before the first step.
+    pub fn attach_dist(&mut self, role: DistRole) -> Result<()> {
+        ensure!(role.rank < role.world, "rank {} out of world {}", role.rank, role.world);
+        ensure!(
+            self.cfg.ranks.max(1) == role.world,
+            "config says ranks={}, attached world has {} ranks",
+            self.cfg.ranks.max(1),
+            role.world
+        );
+        let a = self.cfg.accum();
+        ensure!(
+            a % role.world == 0,
+            "grad_accum {a} must be a multiple of the world size {} \
+             (round-robin micro-batch ownership)",
+            role.world
+        );
+        self.dist = Some(role);
+        self.dist_sync()
+    }
+
+    /// Broadcast rank 0's training state to the world and barrier.
+    fn dist_sync(&mut self) -> Result<()> {
+        let Some(mut d) = self.dist.take() else { return Ok(()) };
+        if d.world > 1 {
+            let blob =
+                if d.rank == 0 { self.encode_state() } else { Vec::new() };
+            let blob = d.coll.broadcast_blob(blob).context("dist state sync")?;
+            if d.rank != 0 {
+                self.decode_state(&blob)
+                    .context("applying rank 0's broadcast training state")?;
+            }
+            d.coll.barrier()?;
+        }
+        self.dist = Some(d);
+        Ok(())
+    }
+
+    /// Serialize the full training state for the world sync — the exact
+    /// checkpoint wire format ([`checkpoint::to_bytes`]), so there is one
+    /// serializer to keep in lockstep with the state set and the broadcast
+    /// arrives CRC-verified.
+    fn encode_state(&self) -> Vec<u8> {
+        let (state, spare) = self.rng_gamma.state();
+        let (t, m, v) = self.opt.state();
+        checkpoint::to_bytes(&CheckpointRef {
+            model: &self.cfg.model,
+            step: self.step as u64,
+            rng_gamma: RngSnapshot { state, spare },
+            params: &self.params,
+            opt: Some((t, m, v)),
+        })
+    }
+
+    fn decode_state(&mut self, blob: &[u8]) -> Result<()> {
+        let ck = checkpoint::from_bytes(blob)
+            .context("decoding rank 0's broadcast training state")?;
+        ensure!(
+            ck.model == self.cfg.model,
+            "rank 0 broadcast state for model '{}', this rank runs '{}'",
+            ck.model,
+            self.cfg.model
+        );
+        ensure!(
+            self.params.same_structure(&ck.params),
+            "broadcast parameter structure does not match bundle '{}'",
+            self.cfg.model
+        );
+        self.params = ck.params;
+        self.step = ck.step as usize;
+        self.rng_gamma = Rng::restore(ck.rng_gamma.state, ck.rng_gamma.spare);
+        let o = ck
+            .opt
+            .ok_or_else(|| anyhow::anyhow!("broadcast state lacks optimizer moments"))?;
+        self.opt.restore(o.t, o.m, o.v)?;
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -231,10 +356,31 @@ impl Trainer {
     // forward / backward / step
     // ------------------------------------------------------------------
 
+    /// Forward pass with the γ streams of this step's first micro-batch.
+    /// Single-batch callers (bench probes, tests) treat the batch as the
+    /// whole global step; the accumulation/distribution loop in
+    /// [`Trainer::train_step_global`] calls [`Trainer::forward_micro`]
+    /// with explicit global micro indices instead.
     pub fn forward(&mut self, batch: &Batch) -> Result<ForwardState> {
+        let micro = (self.step * self.cfg.accum()) as u64;
+        self.forward_micro(batch, micro)
+    }
+
+    /// Forward pass for global micro-batch `micro`: gamma plans come from
+    /// the stream forked by that index (encoder plan first, then the main
+    /// plan, from the same stream).
+    pub fn forward_micro(&mut self, batch: &Batch, micro: u64) -> Result<ForwardState> {
         let quantized = self.cfg.mode == TrainMode::BdiaReversible;
+        let mut stream = self.gamma_stream(micro);
+        let mag = self.effective_gamma();
+        let batch_dim = self.rt.manifest.dims.batch;
         let (enc, mem, enc_plan) = if self.family == Family::EncDec {
-            let plan = self.draw_plan(self.rt.manifest.dims.n_enc_blocks);
+            let plan = GammaPlan::draw(
+                &mut stream,
+                self.rt.manifest.dims.n_enc_blocks,
+                batch_dim,
+                mag,
+            );
             let enc_stack = Stack::new(&self.rt, StackKind::Encoder)?;
             let xe = self.enc_embed_forward(batch)?;
             let state = if quantized {
@@ -248,7 +394,12 @@ impl Trainer {
             (None, None, None)
         };
 
-        let plan = self.draw_plan(self.rt.manifest.dims.n_blocks);
+        let plan = GammaPlan::draw(
+            &mut stream,
+            self.rt.manifest.dims.n_blocks,
+            batch_dim,
+            mag,
+        );
         let stack = Stack::new(&self.rt, StackKind::Main)?;
         let x0 = self.embed_forward(batch)?;
         let state = if quantized {
@@ -311,7 +462,8 @@ impl Trainer {
         Ok(())
     }
 
-    /// One full optimization step. Returns the step's statistics.
+    /// One full optimization step on a caller-supplied batch, treated as
+    /// the entire global step (no accumulation, no collectives).
     pub fn train_step(&mut self, batch: &Batch) -> Result<StepStats> {
         self.grads.zero();
         let fs = self.forward(batch)?;
@@ -319,6 +471,91 @@ impl Trainer {
         let acc = fs.ncorrect / batch.n_predictions() as f32;
         let stored = fs.stored_bytes();
         self.backward(batch, fs)?;
+        self.finish_step(loss, acc, stored)
+    }
+
+    /// One *global* optimization step: consume `cfg.accum()` micro-batches
+    /// (this rank owns `micro = step·A + round·world + rank`), all-reduce
+    /// the micro-gradients in global micro order, and apply the identical
+    /// optimizer update on every rank.  With `accum() == 1` and no
+    /// attached world this is exactly [`Trainer::train_step`] on
+    /// `data.train_batch(step)`.
+    pub fn train_step_global(&mut self, data: &dyn Dataset) -> Result<StepStats> {
+        let a = self.cfg.accum();
+        let (rank, world) = self.dist_shape();
+        ensure!(
+            a % world == 0,
+            "grad_accum {a} must be a multiple of the world size {world}"
+        );
+        if a == 1 && world == 1 {
+            let batch = data.train_batch(self.step);
+            return self.train_step(&batch);
+        }
+        let rounds = a / world;
+        let n = self.params.n_params();
+        // rank 0 folds micro contributions serially in global micro order;
+        // slots n and n+1 carry (Σ loss, Σ ncorrect) through the same pipe
+        let mut fold = std::mem::take(&mut self.fold_buf);
+        fold.clear();
+        fold.resize(n + 2, 0.0);
+        let mut contrib = std::mem::take(&mut self.contrib_buf);
+        let mut stored = 0usize;
+        let mut n_pred = 1usize;
+        for round in 0..rounds {
+            let micro = self.step * a + round * world + rank;
+            let batch = data.train_batch(micro);
+            n_pred = batch.n_predictions();
+            self.grads.zero();
+            let fs = self.forward_micro(&batch, micro as u64)?;
+            let (loss_m, ncorrect_m) = (fs.loss, fs.ncorrect);
+            stored = stored.max(fs.stored_bytes());
+            self.backward(&batch, fs)?;
+            contrib.clear();
+            dist::flatten_into(&self.grads, &mut contrib);
+            contrib.push(loss_m);
+            contrib.push(ncorrect_m);
+            self.reduce_round(&mut fold, &contrib)?;
+        }
+        if rank == 0 {
+            // mean over the global step's micro-batches (grads and the
+            // loss/ncorrect slots alike); workers receive the bytes below
+            let inv = a as f32;
+            for x in fold.iter_mut() {
+                *x /= inv;
+            }
+        }
+        self.bcast(&mut fold)?;
+        let loss = fold[n];
+        let acc = fold[n + 1] / n_pred as f32;
+        dist::unflatten_from(&mut self.grads, &fold[..n])?;
+        self.fold_buf = fold;
+        self.contrib_buf = contrib;
+        self.finish_step(loss, acc, stored)
+    }
+
+    fn reduce_round(&mut self, fold: &mut [f32], contrib: &[f32]) -> Result<()> {
+        match self.dist.as_mut() {
+            Some(d) => d.coll.reduce_sum_rank_ordered(fold, contrib),
+            None => {
+                ensure!(fold.len() == contrib.len(), "reduce length mismatch");
+                for (f, c) in fold.iter_mut().zip(contrib) {
+                    *f += *c;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn bcast(&mut self, buf: &mut [f32]) -> Result<()> {
+        match self.dist.as_mut() {
+            Some(d) => d.coll.broadcast(buf),
+            None => Ok(()),
+        }
+    }
+
+    /// Shared step tail: clip/normalize gradients, guard divergence, apply
+    /// the optimizer, advance the step counter.
+    fn finish_step(&mut self, loss: f32, acc: f32, stored: usize) -> Result<StepStats> {
         let grad_norm = match self.cfg.grad_clip {
             Some(c) => clip_global_norm(&mut self.grads, c),
             None => self.grads.global_norm(),
@@ -372,9 +609,8 @@ impl Trainer {
         let steps = self.cfg.steps;
         while self.step < steps {
             let step = self.step;
-            let batch = data.train_batch(step);
             let t0 = std::time::Instant::now();
-            let stats = self.train_step(&batch)?;
+            let stats = self.train_step_global(data)?;
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             sink.on_step(&StepEvent {
                 step,
@@ -383,7 +619,10 @@ impl Trainer {
                 grad_norm: stats.grad_norm,
                 ms,
             });
-            let eval_due = self.cfg.eval_every > 0
+            // evaluation and checkpointing are rank 0's job; workers keep
+            // stepping (their next collective waits for rank 0 anyway)
+            let eval_due = self.is_rank0()
+                && self.cfg.eval_every > 0
                 && (step % self.cfg.eval_every == self.cfg.eval_every - 1
                     || step + 1 == steps);
             let (val_loss, val_acc) = if eval_due {
@@ -409,7 +648,8 @@ impl Trainer {
                     ms_per_step: ms,
                 });
             }
-            if self.cfg.save_every > 0
+            if self.is_rank0()
+                && self.cfg.save_every > 0
                 && (self.step % self.cfg.save_every == 0 || self.step == steps)
             {
                 let stamped = self
@@ -425,6 +665,10 @@ impl Trainer {
                     path: latest,
                 });
             }
+        }
+        if let Some(d) = self.dist.as_mut() {
+            // leave the world in lockstep before any rank drops its sockets
+            d.coll.barrier()?;
         }
         Ok(log)
     }

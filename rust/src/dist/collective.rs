@@ -1,0 +1,276 @@
+//! Deterministic collectives with a fixed, rank-ordered reduction order.
+//!
+//! The whole point of this layer is that float addition is not
+//! associative, so "sum the gradients across ranks" is only well defined
+//! once the association order is pinned.  Every reduction here folds
+//! contributions **serially in rank order** (rank 0's buffer, then rank 1,
+//! then rank 2, …) into rank 0's accumulator.  Combined with the trainer's
+//! round-robin micro-batch ownership (`micro = round·world + rank`), one
+//! [`Collective::reduce_sum_rank_ordered`] call per round reproduces the
+//! exact left-to-right serial sum over global micro-batch indices that a
+//! single process computes — which is what makes training bit-identical at
+//! every world size (`tests/dist_training.rs`).
+//!
+//! Topology is hub-and-spoke (rank 0 is the hub): `reduce` sends worker
+//! buffers to the hub, `broadcast` fans the hub's buffer out, `barrier`
+//! is a request/ack round trip.  TCP gives per-stream ordering; the hub
+//! reads streams in rank order, so arrival races cannot perturb the fold.
+
+use super::transport::{self, expect_frame, op, write_frame, Transport};
+use anyhow::{ensure, Context, Result};
+
+/// One rank's handle on the assembled world.
+pub struct Collective {
+    transport: Transport,
+    rank: usize,
+    world: usize,
+    /// Reusable wire buffer — gradient frames are ~4·n_params bytes and
+    /// move once per accumulation round, so they must not be reallocated.
+    frame: Vec<u8>,
+    /// Reusable decoded-f32 buffer (hub-side fold input).
+    scratch: Vec<f32>,
+}
+
+impl Collective {
+    pub fn new(transport: Transport, rank: usize, world: usize) -> Result<Self> {
+        match &transport {
+            Transport::Solo => ensure!(
+                world == 1 && rank == 0,
+                "solo transport is world 1 / rank 0 only"
+            ),
+            Transport::Hub { peers } => ensure!(
+                rank == 0 && peers.len() == world - 1,
+                "hub must be rank 0 with world-1 peers"
+            ),
+            Transport::Worker { .. } => {
+                ensure!(rank >= 1 && rank < world, "worker rank out of range")
+            }
+        }
+        Ok(Collective {
+            transport,
+            rank,
+            world,
+            frame: Vec::new(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// A world of one: collectives degenerate to local arithmetic.  This is
+    /// what a non-distributed trainer uses, so the single-process and
+    /// multi-rank code paths are literally the same code.
+    pub fn solo() -> Self {
+        Collective {
+            transport: Transport::Solo,
+            rank: 0,
+            world: 1,
+            frame: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Fold this round's per-rank contributions into `acc` **serially in
+    /// rank order**: `acc += contrib_0; acc += contrib_1; …`.  Only rank
+    /// 0's `acc` is meaningful afterwards (workers' accumulators are left
+    /// untouched); fan the final result out with [`Collective::broadcast`].
+    pub fn reduce_sum_rank_ordered(
+        &mut self,
+        acc: &mut [f32],
+        contrib: &[f32],
+    ) -> Result<()> {
+        ensure!(
+            acc.len() == contrib.len(),
+            "reduce: accumulator has {} elements, contribution {}",
+            acc.len(),
+            contrib.len()
+        );
+        match &mut self.transport {
+            Transport::Solo => {
+                for (a, c) in acc.iter_mut().zip(contrib) {
+                    *a += *c;
+                }
+                Ok(())
+            }
+            Transport::Hub { peers } => {
+                // rank 0 first, then each worker in rank order
+                for (a, c) in acc.iter_mut().zip(contrib) {
+                    *a += *c;
+                }
+                self.scratch.resize(contrib.len(), 0.0);
+                for (i, peer) in peers.iter_mut().enumerate() {
+                    let got = transport::read_frame_into(peer, &mut self.frame)
+                        .with_context(|| format!("reduce from rank {}", i + 1))?;
+                    ensure!(got == op::REDUCE, "expected reduce frame, got op {got}");
+                    let mut pos = 0;
+                    transport::get_f32s(
+                        &self.frame,
+                        &mut pos,
+                        contrib.len(),
+                        &mut self.scratch,
+                    )?;
+                    ensure!(pos == self.frame.len(), "reduce frame length mismatch");
+                    for (a, c) in acc.iter_mut().zip(&self.scratch) {
+                        *a += *c;
+                    }
+                }
+                Ok(())
+            }
+            Transport::Worker { hub } => {
+                self.frame.clear();
+                transport::put_f32s(&mut self.frame, contrib);
+                write_frame(hub, op::REDUCE, &self.frame).context("reduce send")
+            }
+        }
+    }
+
+    /// Rank 0's buffer overwrites everyone's, bit-for-bit (`f32` payloads
+    /// travel as raw LE bytes, so `-0.0` / NaN payloads survive).
+    pub fn broadcast(&mut self, buf: &mut [f32]) -> Result<()> {
+        match &mut self.transport {
+            Transport::Solo => Ok(()),
+            Transport::Hub { peers } => {
+                self.frame.clear();
+                transport::put_f32s(&mut self.frame, buf);
+                for peer in peers.iter_mut() {
+                    write_frame(peer, op::BCAST, &self.frame)
+                        .context("broadcast send")?;
+                }
+                Ok(())
+            }
+            Transport::Worker { hub } => {
+                let got = transport::read_frame_into(hub, &mut self.frame)
+                    .context("broadcast recv")?;
+                ensure!(got == op::BCAST, "expected broadcast frame, got op {got}");
+                let mut pos = 0;
+                transport::get_f32s(&self.frame, &mut pos, buf.len(), buf)?;
+                ensure!(pos == self.frame.len(), "broadcast frame length mismatch");
+                Ok(())
+            }
+        }
+    }
+
+    /// Opaque-byte broadcast (checkpoint-resume state sync): rank 0's blob
+    /// reaches every rank verbatim; rank 0 gets its own blob back.
+    pub fn broadcast_blob(&mut self, blob: Vec<u8>) -> Result<Vec<u8>> {
+        match &mut self.transport {
+            Transport::Solo => Ok(blob),
+            Transport::Hub { peers } => {
+                for peer in peers.iter_mut() {
+                    write_frame(peer, op::BCAST, &blob).context("blob send")?;
+                }
+                Ok(blob)
+            }
+            Transport::Worker { hub } => {
+                expect_frame(hub, op::BCAST).context("blob recv")
+            }
+        }
+    }
+
+    /// Everyone waits until everyone has arrived.
+    pub fn barrier(&mut self) -> Result<()> {
+        match &mut self.transport {
+            Transport::Solo => Ok(()),
+            Transport::Hub { peers } => {
+                for (i, peer) in peers.iter_mut().enumerate() {
+                    let p = expect_frame(peer, op::BARRIER_REQ)
+                        .with_context(|| format!("barrier from rank {}", i + 1))?;
+                    ensure!(p.is_empty(), "barrier request carries no payload");
+                }
+                for peer in peers.iter_mut() {
+                    write_frame(peer, op::BARRIER_ACK, &[])?;
+                }
+                Ok(())
+            }
+            Transport::Worker { hub } => {
+                write_frame(hub, op::BARRIER_REQ, &[])?;
+                let p = expect_frame(hub, op::BARRIER_ACK)?;
+                ensure!(p.is_empty(), "barrier ack carries no payload");
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::launch::run_local_world;
+    use crate::config::TrainConfig;
+
+    fn cfg(world: usize) -> TrainConfig {
+        TrainConfig { ranks: world, ..TrainConfig::default() }
+    }
+
+    /// The reduction-order contract, on floats chosen so association is
+    /// visible: serial rank order gives ((1e8 + 1) - 1e8) + 1 = 1.0 (the
+    /// +1 is absorbed while the partial sits at 1e8), while a pairwise
+    /// tree would give 2.0.  Every world size must reproduce the serial
+    /// answer bit-for-bit.
+    #[test]
+    fn reduce_is_serial_in_global_micro_order_at_any_world_size() {
+        let micros = [1.0e8f32, 1.0, -1.0e8, 1.0];
+        let mut answers = Vec::new();
+        for world in [1usize, 2, 4] {
+            let rounds = micros.len() / world;
+            let out = run_local_world(&cfg(world), |rank, mut role| {
+                let mut acc = vec![0f32];
+                for j in 0..rounds {
+                    let m = j * world + rank;
+                    role.coll.reduce_sum_rank_ordered(&mut acc, &[micros[m]])?;
+                }
+                role.coll.broadcast(&mut acc)?;
+                Ok(acc[0])
+            })
+            .unwrap();
+            // every rank observes the same folded value
+            for v in &out {
+                assert_eq!(v.to_bits(), out[0].to_bits(), "world {world}");
+            }
+            answers.push(out[0]);
+        }
+        for v in &answers {
+            assert_eq!(v.to_bits(), 1.0f32.to_bits(), "serial order violated");
+        }
+    }
+
+    #[test]
+    fn broadcast_is_bit_exact_for_special_values() {
+        let payload = [f32::NAN, -0.0, 1.5e-42, f32::INFINITY];
+        let out = run_local_world(&cfg(3), |rank, mut role| {
+            let mut buf = if rank == 0 { payload.to_vec() } else { vec![0.0; 4] };
+            role.coll.broadcast(&mut buf)?;
+            Ok(buf.iter().map(|x| x.to_bits()).collect::<Vec<_>>())
+        })
+        .unwrap();
+        let want: Vec<u32> = payload.iter().map(|x| x.to_bits()).collect();
+        for bits in out {
+            assert_eq!(bits, want);
+        }
+    }
+
+    #[test]
+    fn blob_broadcast_and_barrier() {
+        let out = run_local_world(&cfg(2), |rank, mut role| {
+            role.coll.barrier()?;
+            let blob = if rank == 0 { vec![7u8, 8, 9] } else { Vec::new() };
+            let got = role.coll.broadcast_blob(blob)?;
+            role.coll.barrier()?;
+            Ok(got)
+        })
+        .unwrap();
+        assert_eq!(out, vec![vec![7, 8, 9], vec![7, 8, 9]]);
+    }
+
+    #[test]
+    fn reduce_rejects_length_mismatch() {
+        let mut c = super::Collective::solo();
+        let mut acc = vec![0f32; 2];
+        assert!(c.reduce_sum_rank_ordered(&mut acc, &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! World assembly: in-process harness, per-process join, local spawn.
+//!
+//! Three ways to stand up an N-rank world, all ending in the same
+//! [`DistRole`]:
+//!
+//! * [`run_local_world`] — N threads in **this process**, rendezvousing
+//!   over an ephemeral loopback port.  This is how tier-1 tests and
+//!   `bdia bench` run full multi-rank worlds hermetically.
+//! * [`establish`] — one process = one rank, the multi-process /
+//!   multi-host path behind `bdia train --ranks N --rank k --rendezvous
+//!   host:port` (rank 0 binds and accepts, workers connect with retry).
+//! * [`spawn_worker_ranks`] — the single-command local mode: the CLI binds
+//!   the rendezvous itself, re-execs `current_exe` once per worker rank
+//!   with `--rank k --rendezvous <bound addr>` appended, then proceeds as
+//!   rank 0.
+
+use super::collective::Collective;
+use super::transport::{
+    Rendezvous, Transport, WorldSpec, ACCEPT_TIMEOUT, CONNECT_TIMEOUT,
+};
+use super::DistRole;
+use crate::config::TrainConfig;
+use anyhow::{ensure, Context, Result};
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::process::{Child, Command, Stdio};
+
+/// Default rendezvous for the two-terminal walkthrough (any free port
+/// works; this one just keeps the README copy-pasteable).
+pub const DEFAULT_RENDEZVOUS: &str = "127.0.0.1:29400";
+
+/// Run `f(rank, role)` on every rank of a `cfg.ranks`-sized world inside
+/// this process: worker threads connect to an ephemeral loopback
+/// rendezvous, the calling thread plays rank 0.  Returns the per-rank
+/// results indexed by rank.  Panics and errors from any rank propagate.
+pub fn run_local_world<R, F>(cfg: &TrainConfig, f: F) -> Result<Vec<R>>
+where
+    R: Send,
+    F: Fn(usize, DistRole) -> Result<R> + Send + Sync,
+{
+    let world = cfg.ranks.max(1);
+    let spec = WorldSpec::for_config(cfg);
+    if world == 1 {
+        return Ok(vec![f(0, DistRole::solo())?]);
+    }
+    let rdv = Rendezvous::bind("127.0.0.1:0", world)?;
+    let addr = rdv.addr();
+    std::thread::scope(|scope| -> Result<Vec<R>> {
+        let f = &f;
+        let mut handles = Vec::with_capacity(world - 1);
+        for rank in 1..world {
+            handles.push(scope.spawn(move || -> Result<R> {
+                let t = Transport::connect(addr, rank, &spec, CONNECT_TIMEOUT)
+                    .with_context(|| format!("rank {rank} failed to join"))?;
+                let coll = Collective::new(t, rank, world)?;
+                f(rank, DistRole { rank, world, coll })
+            }));
+        }
+        let hub = rdv.accept(&spec, ACCEPT_TIMEOUT)?;
+        let coll = Collective::new(hub, 0, world)?;
+        let r0 = f(0, DistRole { rank: 0, world, coll })?;
+        let mut out = vec![r0];
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("rank {} thread panicked", i + 1))?;
+            out.push(r.with_context(|| format!("rank {} failed", i + 1))?);
+        }
+        Ok(out)
+    })
+}
+
+/// Join a multi-process world as `rank`: rank 0 binds `rendezvous` (or
+/// [`DEFAULT_RENDEZVOUS`]) and accepts the workers; everyone else connects
+/// to it.  `prebound` lets a launcher that already bound the listener (to
+/// learn an ephemeral port before spawning workers) hand it over.
+pub fn establish(
+    cfg: &TrainConfig,
+    rank: usize,
+    rendezvous: Option<&str>,
+    prebound: Option<Rendezvous>,
+) -> Result<DistRole> {
+    let world = cfg.ranks.max(1);
+    ensure!(rank < world, "--rank {rank} out of range for --ranks {world}");
+    let spec = WorldSpec::for_config(cfg);
+    if world == 1 {
+        return Ok(DistRole::solo());
+    }
+    let addr_spec = rendezvous.unwrap_or(DEFAULT_RENDEZVOUS);
+    let coll = if rank == 0 {
+        let rdv = match prebound {
+            Some(r) => r,
+            None => Rendezvous::bind(addr_spec, world)?,
+        };
+        Collective::new(rdv.accept(&spec, ACCEPT_TIMEOUT)?, 0, world)?
+    } else {
+        let addr = resolve(addr_spec)?;
+        Collective::new(
+            Transport::connect(addr, rank, &spec, CONNECT_TIMEOUT)?,
+            rank,
+            world,
+        )?
+    };
+    Ok(DistRole { rank, world, coll })
+}
+
+fn resolve(s: &str) -> Result<SocketAddr> {
+    s.to_socket_addrs()
+        .with_context(|| format!("rendezvous '{s}' must be host:port"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("rendezvous '{s}' resolved to no address"))
+}
+
+/// Spawn ranks `1..world` of this same invocation as child processes:
+/// `current_exe` re-run with the caller's CLI arguments, minus any
+/// `--rank`/`--rendezvous` they already carried, plus `--rank k
+/// --rendezvous <addr>`.  The caller then joins the world as rank 0 and
+/// must [`wait`](std::process::Child::wait) on the children afterwards.
+pub fn spawn_worker_ranks(
+    addr: SocketAddr,
+    world: usize,
+    base_args: &[String],
+) -> Result<Vec<Child>> {
+    ensure!(world >= 2, "spawning workers needs --ranks >= 2");
+    let exe = std::env::current_exe().context("locating current executable")?;
+    let mut args: Vec<String> = Vec::with_capacity(base_args.len());
+    let mut skip_value = false;
+    for a in base_args {
+        if skip_value {
+            skip_value = false;
+            continue;
+        }
+        if a == "--rank" || a == "--rendezvous" {
+            skip_value = true;
+            continue;
+        }
+        if a.starts_with("--rank=") || a.starts_with("--rendezvous=") {
+            continue;
+        }
+        args.push(a.clone());
+    }
+    let mut children = Vec::with_capacity(world - 1);
+    for rank in 1..world {
+        let child = Command::new(&exe)
+            .args(&args)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--rendezvous")
+            .arg(addr.to_string())
+            // workers stay quiet on stdout (rank 0 narrates the run) but
+            // keep stderr attached so their failures are visible
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker rank {rank}"))?;
+        children.push(child);
+    }
+    Ok(children)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_local_world_returns_rank_indexed_results() {
+        let cfg = TrainConfig { ranks: 3, ..TrainConfig::default() };
+        let out = run_local_world(&cfg, |rank, role| {
+            assert_eq!(role.rank, rank);
+            assert_eq!(role.world, 3);
+            Ok(rank * 10)
+        })
+        .unwrap();
+        assert_eq!(out, vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn run_local_world_solo_short_circuits() {
+        let cfg = TrainConfig::default();
+        let out = run_local_world(&cfg, |rank, role| {
+            assert_eq!((rank, role.world), (0, 1));
+            Ok(42)
+        })
+        .unwrap();
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn rank_errors_propagate() {
+        let cfg = TrainConfig { ranks: 2, ..TrainConfig::default() };
+        let err = run_local_world(&cfg, |rank, _role| {
+            if rank == 1 {
+                anyhow::bail!("worker exploded")
+            }
+            Ok(())
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn establish_rejects_out_of_range_rank() {
+        let cfg = TrainConfig { ranks: 2, ..TrainConfig::default() };
+        assert!(establish(&cfg, 2, None, None).is_err());
+    }
+}

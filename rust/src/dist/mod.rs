@@ -1,0 +1,137 @@
+//! # `bdia::dist` — deterministic data-parallel training over pure-std TCP
+//!
+//! The paper's memory saving (§4: two boundary activations + 1-bit side
+//! info instead of K+1 stored activations) pays off at scale — when the
+//! global batch is spread across workers.  This subsystem adds that scale
+//! axis while preserving the repo's signature guarantee: **losses,
+//! gradients and parameters are bit-identical at every world size** (and,
+//! composed with the kernel layer, at every thread count).
+//!
+//! ## How bit-identity across world sizes works
+//!
+//! A global optimization step consumes `grad_accum` micro-batches (each
+//! one manifest batch, so executable shapes never change).  Micro-batch
+//! `m = step·A + j·world + rank` is owned round-robin, so rank order
+//! within a round *is* global micro order:
+//!
+//! * γ randomness: micro `m`'s gamma plan is drawn from a stream forked
+//!   **by value of `m`** off the checkpointed gamma RNG
+//!   ([`crate::tensor::Rng::fork`] is a pure function of the parent state,
+//!   so any rank derives any micro's stream without replaying draws).
+//! * gradients: each rank computes its micro-gradient into a zeroed
+//!   buffer; [`collective::Collective::reduce_sum_rank_ordered`] folds the
+//!   round's contributions serially in rank order into rank 0's
+//!   accumulator.  Across rounds this reproduces the exact left-to-right
+//!   serial sum over `m = 0..A` that a single process computes (`+0.0`
+//!   normalization of `-0.0` contributions is absorbed by IEEE-754
+//!   addition — asserted in `tests/dist_training.rs`).
+//! * the folded mean gradient (and summed loss/ncorrect, riding the same
+//!   buffer) is broadcast byte-exactly; every rank then runs the identical
+//!   serial optimizer step, keeping parameters in lockstep with no further
+//!   traffic.
+//!
+//! Checkpoints are written by rank 0 only; on attach/resume rank 0
+//! broadcasts its full training state (params, optimizer moments, step,
+//! gamma RNG) so `--resume` on rank 0 alone restores the whole world.
+//!
+//! Layer map: [`transport`] (rendezvous handshake + framed TCP),
+//! [`collective`] (rank-ordered reduce / broadcast / barrier),
+//! [`launch`] (in-process N-rank harness, per-process join, local spawn).
+
+pub mod collective;
+pub mod launch;
+pub mod transport;
+
+pub use collective::Collective;
+pub use launch::{establish, run_local_world, spawn_worker_ranks, DEFAULT_RENDEZVOUS};
+pub use transport::{Rendezvous, Transport, WorldSpec};
+
+use crate::model::ParamStore;
+use anyhow::{ensure, Result};
+
+/// One rank's identity + wiring, attached to a
+/// [`Trainer`](crate::coordinator::Trainer) for the duration of a run.
+pub struct DistRole {
+    pub rank: usize,
+    pub world: usize,
+    pub coll: Collective,
+}
+
+impl DistRole {
+    /// The single-process world: rank 0 of 1, no sockets.
+    pub fn solo() -> Self {
+        DistRole { rank: 0, world: 1, coll: Collective::solo() }
+    }
+}
+
+/// Append every leaf of `store` to `out` in the store's canonical order
+/// (group name order, then instance, then leaf — identical on every rank
+/// because it mirrors the shared manifest).
+pub fn flatten_into(store: &ParamStore, out: &mut Vec<f32>) {
+    for insts in store.groups.values() {
+        for inst in insts {
+            for t in inst {
+                out.extend_from_slice(t.data());
+            }
+        }
+    }
+}
+
+/// Overwrite `store`'s leaves from a flat buffer produced by
+/// [`flatten_into`] on a structurally identical store.
+pub fn unflatten_from(store: &mut ParamStore, data: &[f32]) -> Result<()> {
+    let mut pos = 0usize;
+    for insts in store.groups.values_mut() {
+        for inst in insts {
+            for t in inst {
+                let n = t.len();
+                ensure!(
+                    data.len() >= pos + n,
+                    "flat buffer too short: store wants > {} floats, got {}",
+                    pos + n,
+                    data.len()
+                );
+                t.data_mut().copy_from_slice(&data[pos..pos + n]);
+                pos += n;
+            }
+        }
+    }
+    ensure!(
+        pos == data.len(),
+        "flat buffer has {} floats, store holds {pos}",
+        data.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn flatten_roundtrip_is_bit_exact() {
+        let rt = Runtime::load_with(
+            std::path::Path::new("artifacts"),
+            "smoke_gpt",
+            crate::runtime::BackendKind::Native,
+        )
+        .unwrap();
+        let ps = ParamStore::init(&rt.manifest, 3);
+        let mut flat = Vec::new();
+        flatten_into(&ps, &mut flat);
+        assert_eq!(flat.len(), ps.n_params());
+        let mut other = ps.zeros_like();
+        unflatten_from(&mut other, &flat).unwrap();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        flatten_into(&ps, &mut a);
+        flatten_into(&other, &mut b);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // wrong-length buffers are rejected
+        assert!(unflatten_from(&mut other, &flat[..flat.len() - 1]).is_err());
+    }
+}

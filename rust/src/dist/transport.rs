@@ -1,0 +1,508 @@
+//! Rendezvous + framed point-to-point transport over `std::net` TCP.
+//!
+//! Topology is hub-and-spoke: rank 0 binds the rendezvous address and
+//! accepts one connection per worker rank; workers connect (with retry, so
+//! start order between terminals does not matter) and the two sides verify
+//! each other with a fixed-size `Hello` — magic, protocol version, rank,
+//! world size, a digest of the semantically load-bearing training config,
+//! the seed and the derived run id.  Any mismatch aborts the rendezvous
+//! with a message naming the field, because a world that disagrees on its
+//! config cannot be bit-deterministic and must not get to the point of
+//! exchanging gradients.
+//!
+//! After the handshake every message is a length-prefixed frame
+//! (`op: u8, len: u32 LE, payload`); the collectives in
+//! [`super::collective`] are built from nothing but these frames.
+
+use crate::config::TrainConfig;
+use anyhow::{ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Frame opcodes (one byte on the wire).
+pub mod op {
+    pub const HELLO: u8 = 1;
+    pub const WELCOME: u8 = 2;
+    pub const REDUCE: u8 = 3;
+    pub const BCAST: u8 = 4;
+    pub const BARRIER_REQ: u8 = 5;
+    pub const BARRIER_ACK: u8 = 6;
+}
+
+const MAGIC: u32 = 0x4244_4941; // "BDIA"
+const PROTO_VERSION: u32 = 1;
+/// Upper bound on a single frame payload (grad buffers are ~4·n_params
+/// bytes; anything past this is a corrupt length prefix, not a model).
+const MAX_FRAME: usize = 1 << 30;
+/// How long a worker keeps retrying its rendezvous connect.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long the hub waits for the full world to join.
+pub const ACCEPT_TIMEOUT: Duration = Duration::from_secs(60);
+
+// ---------------------------------------------------------------------
+// byte helpers (shared with the collective layer and the state sync)
+// ---------------------------------------------------------------------
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    ensure!(buf.len() >= *pos + 4, "truncated frame (u32 at {pos})");
+    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+pub fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    ensure!(buf.len() >= *pos + 8, "truncated frame (u64 at {pos})");
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+/// Encode an f32 slice as LE bytes (gradient / parameter payloads).
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Decode LE bytes into an f32 buffer of the expected element count.
+pub fn get_f32s(buf: &[u8], pos: &mut usize, n: usize, out: &mut [f32]) -> Result<()> {
+    ensure!(out.len() == n, "f32 payload target has wrong length");
+    ensure!(
+        buf.len() >= *pos + 4 * n,
+        "truncated frame (wanted {n} f32s at {pos}, have {} bytes)",
+        buf.len() - *pos
+    );
+    for slot in out.iter_mut() {
+        *slot = f32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+        *pos += 4;
+    }
+    Ok(())
+}
+
+/// FNV-1a, the digest behind config verification and run ids (no crypto
+/// needed — this guards against operator error, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// world spec + handshake
+// ---------------------------------------------------------------------
+
+/// Everything a joining rank must agree on before any data moves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorldSpec {
+    pub world: u32,
+    /// Digest of the semantically load-bearing [`TrainConfig`] fields.
+    pub digest: u64,
+    pub seed: u64,
+    /// Deterministic run identity derived from (digest, seed, world).
+    pub run_id: u64,
+}
+
+impl WorldSpec {
+    pub fn for_config(cfg: &TrainConfig) -> Self {
+        // per-host knobs (paths, threads, logging cadence) are excluded:
+        // they may legitimately differ across machines without breaking
+        // bit-determinism.  Everything that shapes the numbers is in.
+        let key = format!(
+            "{}|{}|{:?}|{}|{}|{:?}|{}|{}|{}|{}|{:?}|{}|{}|{}|{}|{}",
+            cfg.model,
+            cfg.backend.name(),
+            cfg.mode,
+            cfg.gamma_mag,
+            cfg.dataset,
+            cfg.optimizer,
+            cfg.lr,
+            cfg.beta1,
+            cfg.beta2,
+            cfg.eps,
+            cfg.grad_clip,
+            cfg.seed,
+            cfg.steps,
+            cfg.train_examples,
+            cfg.val_examples,
+            cfg.accum(),
+        );
+        let digest = fnv1a64(key.as_bytes());
+        let world = cfg.ranks.max(1) as u32;
+        let mut id = Vec::new();
+        put_u64(&mut id, digest);
+        put_u64(&mut id, cfg.seed);
+        put_u32(&mut id, world);
+        WorldSpec { world, digest, seed: cfg.seed, run_id: fnv1a64(&id) }
+    }
+}
+
+struct Hello {
+    rank: u32,
+    spec: WorldSpec,
+}
+
+impl Hello {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(40);
+        put_u32(&mut out, MAGIC);
+        put_u32(&mut out, PROTO_VERSION);
+        put_u32(&mut out, self.rank);
+        put_u32(&mut out, self.spec.world);
+        put_u64(&mut out, self.spec.digest);
+        put_u64(&mut out, self.spec.seed);
+        put_u64(&mut out, self.spec.run_id);
+        out
+    }
+
+    fn decode(buf: &[u8]) -> Result<Hello> {
+        let mut p = 0;
+        let magic = get_u32(buf, &mut p)?;
+        ensure!(magic == MAGIC, "peer is not a bdia rank (bad magic {magic:#x})");
+        let version = get_u32(buf, &mut p)?;
+        ensure!(
+            version == PROTO_VERSION,
+            "protocol version mismatch: peer {version}, ours {PROTO_VERSION}"
+        );
+        let rank = get_u32(buf, &mut p)?;
+        let world = get_u32(buf, &mut p)?;
+        let digest = get_u64(buf, &mut p)?;
+        let seed = get_u64(buf, &mut p)?;
+        let run_id = get_u64(buf, &mut p)?;
+        Ok(Hello { rank, spec: WorldSpec { world, digest, seed, run_id } })
+    }
+}
+
+fn check_spec(theirs: &WorldSpec, ours: &WorldSpec) -> Result<()> {
+    ensure!(
+        theirs.world == ours.world,
+        "world size mismatch: peer says {}, we say {} (--ranks must agree)",
+        theirs.world,
+        ours.world
+    );
+    ensure!(
+        theirs.seed == ours.seed,
+        "seed mismatch: peer {} vs ours {} (seed= must agree)",
+        theirs.seed,
+        ours.seed
+    );
+    ensure!(
+        theirs.digest == ours.digest,
+        "training config mismatch (digest {:#x} vs {:#x}): every rank must \
+         run the same model/mode/dataset/optimizer/steps/grad_accum",
+        theirs.digest,
+        ours.digest
+    );
+    ensure!(
+        theirs.run_id == ours.run_id,
+        "run id mismatch ({:#x} vs {:#x})",
+        theirs.run_id,
+        ours.run_id
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// frame I/O
+// ---------------------------------------------------------------------
+
+pub fn write_frame(stream: &mut TcpStream, opcode: u8, payload: &[u8]) -> Result<()> {
+    ensure!(payload.len() <= MAX_FRAME, "frame too large ({})", payload.len());
+    let mut header = [0u8; 5];
+    header[0] = opcode;
+    header[1..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame into a reusable buffer — the hot collective path, so
+/// multi-megabyte gradient payloads are not reallocated every round.
+pub fn read_frame_into(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<u8> {
+    let mut header = [0u8; 5];
+    stream.read_exact(&mut header).context("reading frame header")?;
+    let len = u32::from_le_bytes(header[1..].try_into().unwrap()) as usize;
+    ensure!(len <= MAX_FRAME, "oversized frame ({len} bytes) — corrupt stream?");
+    buf.clear();
+    buf.resize(len, 0);
+    stream.read_exact(buf).context("reading frame payload")?;
+    Ok(header[0])
+}
+
+pub fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
+    let mut payload = Vec::new();
+    let opcode = read_frame_into(stream, &mut payload)?;
+    Ok((opcode, payload))
+}
+
+/// [`read_frame`] that also asserts the expected opcode.
+pub(crate) fn expect_frame(stream: &mut TcpStream, opcode: u8) -> Result<Vec<u8>> {
+    let (got, payload) = read_frame(stream)?;
+    ensure!(got == opcode, "protocol error: expected op {opcode}, got {got}");
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------
+// rendezvous (hub side) + connect (worker side)
+// ---------------------------------------------------------------------
+
+/// A bound-but-not-yet-assembled world: the hub binds first (so a local
+/// launcher can learn the ephemeral port and spawn workers at it), then
+/// [`Rendezvous::accept`] collects and verifies the workers.
+pub struct Rendezvous {
+    listener: TcpListener,
+    world: usize,
+}
+
+impl Rendezvous {
+    pub fn bind(addr: &str, world: usize) -> Result<Rendezvous> {
+        ensure!(world >= 1, "world size must be >= 1");
+        let addr: SocketAddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("rendezvous address '{addr}' must be host:port"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("rendezvous '{addr}' resolved to nothing"))?;
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding rendezvous {addr}"))?;
+        Ok(Rendezvous { listener, world })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Accept and verify `world - 1` workers; returns the hub transport
+    /// with per-rank streams.  Fails (rather than hangs) if the world does
+    /// not assemble within `timeout`.
+    pub fn accept(self, spec: &WorldSpec, timeout: Duration) -> Result<Transport> {
+        ensure!(
+            spec.world as usize == self.world,
+            "rendezvous bound for world {}, spec says {}",
+            self.world,
+            spec.world
+        );
+        if self.world == 1 {
+            return Ok(Transport::Solo);
+        }
+        let deadline = Instant::now() + timeout;
+        self.listener.set_nonblocking(true)?;
+        let mut peers: Vec<Option<TcpStream>> = (1..self.world).map(|_| None).collect();
+        let mut joined = 0usize;
+        while joined < self.world - 1 {
+            ensure!(
+                Instant::now() < deadline,
+                "rendezvous timed out: {}/{} workers joined within {timeout:?}",
+                joined,
+                self.world - 1
+            );
+            let mut stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => return Err(e).context("rendezvous accept"),
+            };
+            stream.set_nonblocking(false)?;
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+            let hello = Hello::decode(&expect_frame(&mut stream, op::HELLO)?)?;
+            check_spec(&hello.spec, spec)?;
+            let r = hello.rank as usize;
+            ensure!(
+                (1..self.world).contains(&r),
+                "worker claims rank {r}, valid ranks are 1..{}",
+                self.world
+            );
+            ensure!(peers[r - 1].is_none(), "two workers both claim rank {r}");
+            write_frame(
+                &mut stream,
+                op::WELCOME,
+                &Hello { rank: 0, spec: *spec }.encode(),
+            )?;
+            stream.set_read_timeout(None).ok();
+            peers[r - 1] = Some(stream);
+            joined += 1;
+        }
+        let peers = peers.into_iter().map(|p| p.expect("all joined")).collect();
+        Ok(Transport::Hub { peers })
+    }
+}
+
+/// The post-handshake wiring of one rank.
+pub enum Transport {
+    /// world == 1: no sockets, collectives degenerate to local arithmetic.
+    Solo,
+    /// rank 0: one stream per worker, indexed `rank - 1`.
+    Hub { peers: Vec<TcpStream> },
+    /// rank > 0: the single stream to rank 0.
+    Worker { hub: TcpStream },
+}
+
+impl Transport {
+    /// Worker-side join: connect (retrying until `timeout`, so workers may
+    /// start before the hub binds), introduce ourselves, verify the hub's
+    /// welcome against our own spec.
+    pub fn connect(
+        addr: SocketAddr,
+        rank: usize,
+        spec: &WorldSpec,
+        timeout: Duration,
+    ) -> Result<Transport> {
+        ensure!(
+            rank >= 1 && (rank as u32) < spec.world,
+            "worker rank must be in 1..{}, got {rank}",
+            spec.world
+        );
+        let deadline = Instant::now() + timeout;
+        let mut stream = loop {
+            match TcpStream::connect_timeout(&addr, Duration::from_secs(2)) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| {
+                            format!("rank {rank}: rendezvous {addr} unreachable for {timeout:?}")
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        write_frame(
+            &mut stream,
+            op::HELLO,
+            &Hello { rank: rank as u32, spec: *spec }.encode(),
+        )?;
+        // bound the handshake read so pointing --rendezvous at some other
+        // TCP service fails with a diagnostic instead of hanging forever
+        stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+        let welcome = expect_frame(&mut stream, op::WELCOME).with_context(|| {
+            format!("no welcome from {addr} — is that really a bdia rendezvous?")
+        })?;
+        let welcome = Hello::decode(&welcome)?;
+        ensure!(welcome.rank == 0, "welcome did not come from rank 0");
+        check_spec(&welcome.spec, spec)?;
+        stream.set_read_timeout(None).ok();
+        Ok(Transport::Worker { hub: stream })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(world: u32) -> WorldSpec {
+        let cfg = TrainConfig { ranks: world as usize, ..TrainConfig::default() };
+        WorldSpec::for_config(&cfg)
+    }
+
+    #[test]
+    fn world_spec_tracks_semantic_fields_only() {
+        let a = WorldSpec::for_config(&TrainConfig::default());
+        let b = WorldSpec::for_config(&TrainConfig {
+            threads: 7,
+            ckpt_dir: "elsewhere".into(),
+            log_every: 999,
+            ..TrainConfig::default()
+        });
+        assert_eq!(a, b, "per-host knobs must not change the world digest");
+        let c = WorldSpec::for_config(&TrainConfig {
+            seed: 1,
+            ..TrainConfig::default()
+        });
+        assert_ne!(a.run_id, c.run_id);
+        let d = WorldSpec::for_config(&TrainConfig {
+            grad_accum: 8,
+            ..TrainConfig::default()
+        });
+        assert_ne!(a.digest, d.digest, "grad_accum shapes the numbers");
+    }
+
+    #[test]
+    fn handshake_accepts_matching_world() {
+        let s = spec(2);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+        let addr = rdv.addr();
+        let worker = std::thread::spawn(move || {
+            Transport::connect(addr, 1, &spec(2), CONNECT_TIMEOUT).unwrap()
+        });
+        let hub = rdv.accept(&s, ACCEPT_TIMEOUT).unwrap();
+        let Transport::Hub { peers } = &hub else {
+            panic!("rank 0 must end up with the hub transport")
+        };
+        assert_eq!(peers.len(), 1);
+        assert!(matches!(worker.join().unwrap(), Transport::Worker { .. }));
+    }
+
+    #[test]
+    fn handshake_rejects_config_mismatch() {
+        let s = spec(2);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+        let addr = rdv.addr();
+        let worker = std::thread::spawn(move || {
+            let bad = WorldSpec::for_config(&TrainConfig {
+                ranks: 2,
+                lr: 3e-4, // semantically load-bearing difference
+                ..TrainConfig::default()
+            });
+            Transport::connect(addr, 1, &bad, CONNECT_TIMEOUT)
+        });
+        let hub = rdv.accept(&s, Duration::from_secs(10));
+        assert!(hub.is_err(), "hub must reject a mismatched config digest");
+        assert!(worker.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn handshake_rejects_bad_rank() {
+        let s = spec(2);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+        let addr = rdv.addr();
+        // rank outside 1..world is rejected on the worker side already
+        let err = Transport::connect(addr, 5, &s, Duration::from_secs(2));
+        assert!(err.is_err());
+        drop(rdv);
+    }
+
+    #[test]
+    fn frame_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write_frame(&mut s, op::REDUCE, &[1, 2, 3]).unwrap();
+            let (o, p) = read_frame(&mut s).unwrap();
+            (o, p)
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let (o, p) = read_frame(&mut s).unwrap();
+        assert_eq!((o, p), (op::REDUCE, vec![1, 2, 3]));
+        write_frame(&mut s, op::BCAST, &[9]).unwrap();
+        assert_eq!(t.join().unwrap(), (op::BCAST, vec![9]));
+    }
+
+    #[test]
+    fn f32_payload_roundtrip_is_bit_exact() {
+        let xs = [1.5f32, -0.0, f32::NAN, f32::MIN_POSITIVE, 1e38];
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &xs);
+        let mut out = [0f32; 5];
+        let mut pos = 0;
+        get_f32s(&buf, &mut pos, 5, &mut out).unwrap();
+        for (a, b) in xs.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

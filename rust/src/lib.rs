@@ -24,6 +24,10 @@
 //!   state (params + optimizer + step), bit-exact round trips
 //! - [`serve`]: concurrent inference serving over `std::net` — dynamic
 //!   micro-batching, worker pool, `/healthz` + `/stats`, load generator
+//! - [`dist`]: deterministic data-parallel training over pure-std TCP —
+//!   rendezvous handshake, rank-ordered collectives (bit-identical summed
+//!   gradients at every world size), in-process multi-rank harness and
+//!   multi-process launcher
 pub mod api;
 pub mod config;
 pub mod tensor;
@@ -40,6 +44,7 @@ pub mod experiments;
 pub mod bench;
 pub mod checkpoint;
 pub mod serve;
+pub mod dist;
 
 // Compile-check the README's Rust examples (the "Library use" section) as
 // doctests, so the documented API surface cannot rot.

@@ -3,14 +3,15 @@
 //! ```text
 //! bdia train  --config configs/vit_s10_bdia.json [--backend native|pjrt]
 //!             [--threads N] [--save-every K] [--ckpt-dir D]
-//!             [--resume ckpt] [key=value ...]
+//!             [--resume ckpt] [--ranks N [--rank k --rendezvous host:port]]
+//!             [key=value ...]
 //! bdia eval   --model vit_s10 --gamma 0.0 [--ckpt path] [key=value ...]
 //! bdia serve  --model vit_s10 --ckpt path [--port P] [--workers N]
 //!             [--threads N] [--batch-window-us U]
 //! bdia bench-serve --model vit_s10 [--requests N] [--concurrency C]
 //!             [--workers N] [--addr host:port] [--ckpt path]
 //! bdia bench  [--families vit_s10,gpt_tiny,encdec_mt] [--threads N]
-//!             [--quick] [--out BENCH_4.json]
+//!             [--quick] [--out BENCH_5.json]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
 //!             [--steps N] [--seeds 0,1,2] [--quick]
 //! bdia info   --model vit_s10       # bundle inventory + call counts
@@ -69,6 +70,9 @@ const TRAIN_FLAGS: &[Flag] = &[
     v("ckpt-dir"),
     v("resume"),
     v("name"),
+    v("ranks"),
+    v("rank"),
+    v("rendezvous"),
 ];
 const EVAL_FLAGS: &[Flag] = &[
     v("config"),
@@ -311,43 +315,88 @@ fn builder_from(p: &Parsed) -> Result<SessionBuilder> {
 }
 
 fn cmd_train(p: &Parsed) -> Result<()> {
-    let mut b = builder_from(p)?
-        .event_sink(Arc::new(StdoutSink { every: 0 }));
+    let rank_flag = flag_val::<usize>(&p.flags, "rank")?;
+    let my_rank = rank_flag.unwrap_or(0);
+    let sink: Arc<dyn bdia::api::EventSink> = if my_rank == 0 {
+        Arc::new(StdoutSink { every: 0 })
+    } else {
+        // workers stay quiet; rank 0 narrates the run
+        Arc::new(bdia::api::NullSink)
+    };
+    let mut b = builder_from(p)?.event_sink(sink);
     if let Some(k) = flag_val::<usize>(&p.flags, "save-every")? {
         b = b.save_every(k);
     }
     if let Some(d) = p.flags.get("ckpt-dir") {
         b = b.ckpt_dir(d);
     }
+    if let Some(n) = flag_val::<usize>(&p.flags, "ranks")? {
+        b = b.ranks(n);
+    }
+    if let Some(k) = rank_flag {
+        b = b.rank(k);
+    }
+    if let Some(a) = p.flags.get("rendezvous") {
+        b = b.rendezvous(a);
+    }
     let mut session = b.build()?;
     if let Some(path) = p.flags.get("resume") {
-        session.resume(Path::new(path))?;
-        println!("resumed from {} at step {}", path, session.step());
+        // in a multi-rank world only rank 0 needs the file: its restored
+        // state is broadcast to every worker when the world attaches
+        if my_rank == 0 {
+            session.resume(Path::new(path))?;
+            println!("resumed from {} at step {}", path, session.step());
+        }
+    }
+
+    // single-command local mode: `--ranks N` without `--rank` binds the
+    // rendezvous here (ephemeral port unless --rendezvous pins one), then
+    // re-execs this invocation once per worker rank and proceeds as rank 0
+    let world = session.config().ranks;
+    let mut children = WorkerRanks::default();
+    if world > 1 && rank_flag.is_none() {
+        let bind = p.flags.get("rendezvous").map_or("127.0.0.1:0", String::as_str);
+        let rdv = bdia::dist::Rendezvous::bind(bind, world)?;
+        let addr = rdv.addr();
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        children.0 = bdia::dist::spawn_worker_ranks(addr, world, &argv)?;
+        println!("dist: world size {world}, rendezvous {addr}, spawned ranks 1..{world}");
+        session.connect_dist(Some(rdv))?;
     }
 
     let cfg = session.config().clone();
-    println!(
-        "training {} | backend={} | mode={} | dataset={} | steps={} | seed={}",
-        cfg.model,
-        cfg.backend.name(),
-        cfg.mode.name(),
-        cfg.dataset,
-        cfg.steps,
-        cfg.seed
-    );
-    if cfg.save_every > 0 {
+    if my_rank == 0 {
         println!(
-            "checkpoints: every {} steps into {}",
-            cfg.save_every,
-            cfg.ckpt_dir.display()
+            "training {} | backend={} | mode={} | dataset={} | steps={} | seed={}",
+            cfg.model,
+            cfg.backend.name(),
+            cfg.mode.name(),
+            cfg.dataset,
+            cfg.steps,
+            cfg.seed
         );
-    }
-    println!("params: {}", session.n_params());
-    let info = session.describe();
-    if let Some((_, bytes)) =
-        info.peak_memory.iter().find(|(m, _)| *m == cfg.mode.name())
-    {
-        println!("peak training memory (analytic): {}", fmt_bytes(*bytes));
+        if cfg.ranks > 1 {
+            println!(
+                "dist: {} ranks, {} micro-batch(es)/step, rank-ordered \
+                 all-reduce (bit-identical at any world size)",
+                cfg.ranks,
+                cfg.accum()
+            );
+        }
+        if cfg.save_every > 0 {
+            println!(
+                "checkpoints: every {} steps into {} (rank 0 writes)",
+                cfg.save_every,
+                cfg.ckpt_dir.display()
+            );
+        }
+        println!("params: {}", session.n_params());
+        let info = session.describe();
+        if let Some((_, bytes)) =
+            info.peak_memory.iter().find(|(m, _)| *m == cfg.mode.name())
+        {
+            println!("peak training memory (analytic): {}", fmt_bytes(*bytes));
+        }
     }
 
     let run_name = p
@@ -355,23 +404,58 @@ fn cmd_train(p: &Parsed) -> Result<()> {
         .get("name")
         .cloned()
         .unwrap_or_else(|| format!("{}_{}", cfg.model, cfg.mode.name()));
-    let csv_out = PathBuf::from("results").join(format!("{run_name}.csv"));
+    // the CSV log is rank 0's artifact (workers would race on the file)
+    let csv_out = (my_rank == 0)
+        .then(|| PathBuf::from("results").join(format!("{run_name}.csv")));
     let report = session.train(&TrainOpts {
         run_name: Some(run_name),
-        csv_out: Some(csv_out.clone()),
+        csv_out: csv_out.clone(),
     })?;
-    if let Some(r) = report.log.last() {
-        println!(
-            "final: step {} train_loss {:.4} val_loss {} val_acc {} ({:.0} ms/step)",
-            r.step,
-            r.train_loss,
-            r.val_loss.map_or("-".into(), |x| format!("{x:.4}")),
-            r.val_acc.map_or("-".into(), |x| format!("{x:.3}")),
-            report.mean_ms_per_step
-        );
+    if my_rank == 0 {
+        if let Some(r) = report.log.last() {
+            println!(
+                "final: step {} train_loss {:.4} val_loss {} val_acc {} ({:.0} ms/step)",
+                r.step,
+                r.train_loss,
+                r.val_loss.map_or("-".into(), |x| format!("{x:.4}")),
+                r.val_acc.map_or("-".into(), |x| format!("{x:.3}")),
+                report.mean_ms_per_step
+            );
+        }
+        if let Some(csv) = &csv_out {
+            println!("log written to {}", csv.display());
+        }
     }
-    println!("log written to {}", csv_out.display());
+    children.reap()?;
     Ok(())
+}
+
+/// Worker-rank child processes of the single-command local mode.  Reaped
+/// explicitly on success; the `Drop` kills any still-running workers so an
+/// error on rank 0's path (`?` anywhere above) cannot leak orphans that
+/// would sit in connect retries or blocked collectives.
+#[derive(Default)]
+struct WorkerRanks(Vec<std::process::Child>);
+
+impl WorkerRanks {
+    fn reap(mut self) -> Result<()> {
+        for (i, mut child) in self.0.drain(..).enumerate() {
+            let status = child
+                .wait()
+                .with_context(|| format!("waiting on worker rank {}", i + 1))?;
+            ensure!(status.success(), "worker rank {} exited with {status}", i + 1);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerRanks {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
 }
 
 fn cmd_eval(p: &Parsed) -> Result<()> {
@@ -561,7 +645,8 @@ fn print_help() {
         "bdia — exact bit-level reversible transformer training (BDIA)\n\n\
          USAGE:\n  bdia train --config configs/<f>.json \
          [--backend native|pjrt] [--threads N] [--save-every K] \
-         [--ckpt-dir D] [--resume <ckpt>] [key=value ...]\n  \
+         [--ckpt-dir D] [--resume <ckpt>] [--ranks N [--rank k \
+         --rendezvous host:port]] [key=value ...]\n  \
          bdia eval  --model <bundle> --gamma <g> [--ckpt <file>]\n  \
          bdia serve --model <bundle> --ckpt <file> [--port P] [--workers N] \
          [--threads N] [--batch-window-us U]\n  \
@@ -569,7 +654,7 @@ fn print_help() {
          [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
          [--no-verify]\n  \
          bdia bench [--families a,b,c] [--threads N] [--quick] \
-         [--out BENCH_4.json]\n  \
+         [--out BENCH_5.json]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
          [--quick] [--steps N] [--seeds 0,1]\n  \
          bdia info  --model <bundle> [--backend native|pjrt]\n\n\
@@ -581,10 +666,16 @@ fn print_help() {
          mode (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, \
          lr, optimizer (adam|setadam), seed, eval_every, eval_batches, \
          train_examples, val_examples, artifacts_dir, save_every, ckpt_dir, \
-         threads\n\n\
+         threads, ranks, grad_accum\n\n\
          Threads: the native backend runs on a deterministic kernel pool \
          (row-partitioned parallelism only) — losses, gradients and served \
          bytes are bit-identical at any --threads value; 0 = auto.\n\
+         Distributed: `train --ranks N` spawns N-1 local worker ranks and \
+         rendezvouses on an ephemeral loopback port; with --rank k \
+         --rendezvous host:port each rank is launched by hand (rank 0 \
+         binds, workers connect).  Gradients all-reduce in a fixed rank \
+         order, so losses/params are bit-identical at ANY world size \
+         (grad_accum fixed); rank 0 owns eval, logs and checkpoints.\n\
          Checkpoints: `train save_every=K` writes <run>-step<N>.ckpt + \
          <run>-latest.ckpt under ckpt_dir (versioned, CRC-checked, bit-exact \
          round trip); `eval --ckpt` / `serve --ckpt` load them.\n\
@@ -595,7 +686,7 @@ fn print_help() {
          is given) and verifies responses are bit-identical to direct \
          inference.\n\
          Benchmarks: `bench` times fwd/bwd/infer per model family at 1 and \
-         N threads and writes BENCH_4.json.\n\n\
+         N threads and writes BENCH_5.json.\n\n\
          Library use: everything above is a thin client of \
          bdia::api::Session — see rust/README.md \"Library use\".\n\
          The native backend is pure Rust and needs no artifacts; pjrt needs \

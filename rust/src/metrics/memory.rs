@@ -147,6 +147,28 @@ impl MemoryModel {
             + self.transient()
     }
 
+    /// Table-1 peak totals for every training mode of one bundle — the
+    /// shared source for `bdia info`, `Session::describe` and the
+    /// `memory` block of the bench report.
+    pub fn peak_by_mode(
+        family: Family,
+        dims: &Dims,
+        params_bytes: usize,
+    ) -> Vec<(&'static str, usize)> {
+        [
+            TrainMode::Vanilla,
+            TrainMode::BdiaReversible,
+            TrainMode::BdiaFloat,
+            TrainMode::RevVit,
+        ]
+        .iter()
+        .map(|&mode| {
+            let mm = MemoryModel::new(mode, family, dims, params_bytes);
+            (mode.name(), mm.peak_total())
+        })
+        .collect()
+    }
+
     pub fn breakdown_rows(&self) -> Vec<(String, usize)> {
         vec![
             ("params".into(), self.params_bytes),
@@ -222,6 +244,19 @@ mod tests {
         assert!(van.stored_activations_enc() > 0);
         let rev = MemoryModel::new(TrainMode::BdiaReversible, Family::EncDec, &d, 0);
         assert!(rev.stored_activations_enc() < van.stored_activations_enc());
+    }
+
+    #[test]
+    fn peak_by_mode_covers_all_modes_and_matches_direct() {
+        let d = dims();
+        let rows = MemoryModel::peak_by_mode(Family::Vit, &d, 400_000 * F32);
+        assert_eq!(rows.len(), 4);
+        for (mode, bytes) in &rows {
+            let m = TrainMode::parse(mode).unwrap();
+            let direct =
+                MemoryModel::new(m, Family::Vit, &d, 400_000 * F32).peak_total();
+            assert_eq!(*bytes, direct, "{mode}");
+        }
     }
 
     #[test]

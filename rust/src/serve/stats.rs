@@ -13,6 +13,12 @@ pub struct ServeStats {
     batches: AtomicU64,
     batched_examples: AtomicU64,
     lat_us: Mutex<Ring>,
+    /// All-time worst latency (µs) — tracked outside the reservoir so the
+    /// true maximum survives after the ring wraps.
+    max_us: AtomicU64,
+    /// Total latencies ever recorded (`> capacity` ⇒ the ring wrapped and
+    /// the percentiles describe a recent window, not the full history).
+    recorded: AtomicU64,
     /// Server start time — the denominator of the throughput numbers.
     started: Instant,
 }
@@ -23,13 +29,26 @@ struct Ring {
     len: usize,
 }
 
-/// Latency summary in milliseconds.
+/// Latency summary in milliseconds.  Mean/percentiles describe the
+/// reservoir window; `max_ms` is the all-time maximum since start.
 #[derive(Clone, Copy, Debug)]
 pub struct LatencySummary {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p90_ms: f64,
     pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+/// State of the fixed-capacity latency reservoir behind the percentiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReservoirInfo {
+    /// Samples currently held (≤ capacity).
+    pub samples: usize,
+    pub capacity: usize,
+    /// True once the ring has wrapped: percentiles describe only the most
+    /// recent `capacity` requests.
+    pub saturated: bool,
 }
 
 /// Nearest-rank percentile over a sorted sample, `q` in [0, 1].
@@ -53,6 +72,8 @@ impl ServeStats {
                 next: 0,
                 len: 0,
             }),
+            max_us: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -90,12 +111,25 @@ impl ServeStats {
     }
 
     pub fn record_latency_us(&self, us: u64) {
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
         let mut r = self.lat_us.lock().unwrap();
         let cap = r.buf.len();
         let slot = r.next;
         r.buf[slot] = us;
         r.next = (slot + 1) % cap;
         r.len = (r.len + 1).min(cap);
+    }
+
+    /// Reservoir occupancy + whether the ring has wrapped — surfaced in
+    /// `/stats` so a window-limited p99 cannot silently mislead.
+    pub fn reservoir(&self) -> ReservoirInfo {
+        let r = self.lat_us.lock().unwrap();
+        ReservoirInfo {
+            samples: r.len,
+            capacity: r.buf.len(),
+            saturated: self.recorded.load(Ordering::Relaxed) > r.buf.len() as u64,
+        }
     }
 
     pub fn requests(&self) -> u64 {
@@ -135,6 +169,7 @@ impl ServeStats {
             p50_ms: percentile_us(&xs, 0.50) as f64 / 1e3,
             p90_ms: percentile_us(&xs, 0.90) as f64 / 1e3,
             p99_ms: percentile_us(&xs, 0.99) as f64 / 1e3,
+            max_ms: self.max_us.load(Ordering::Relaxed) as f64 / 1e3,
         })
     }
 
@@ -143,11 +178,13 @@ impl ServeStats {
         let lat = self.latency();
         let fmt_lat = |l: Option<LatencySummary>| match l {
             Some(l) => format!(
-                "{{\"mean\": {:.3}, \"p50\": {:.3}, \"p90\": {:.3}, \"p99\": {:.3}}}",
-                l.mean_ms, l.p50_ms, l.p90_ms, l.p99_ms
+                "{{\"mean\": {:.3}, \"p50\": {:.3}, \"p90\": {:.3}, \
+                 \"p99\": {:.3}, \"max\": {:.3}}}",
+                l.mean_ms, l.p50_ms, l.p90_ms, l.p99_ms, l.max_ms
             ),
             None => "null".to_string(),
         };
+        let res = self.reservoir();
         let calls: Vec<String> = exec_calls
             .iter()
             .map(|(n, c)| format!("\"{n}\": {c}"))
@@ -159,7 +196,9 @@ impl ServeStats {
              \"uptime_s\": {:.3}, \"requests_per_sec\": {:.3}, \
              \"examples_per_sec\": {:.3}, \"kernel_threads\": {}, \
              \"workspace\": {{\"hits\": {}, \"misses\": {}}}, \
-             \"latency_ms\": {}, \"exec_calls\": {{{}}}}}",
+             \"latency_ms\": {}, \
+             \"latency_reservoir\": {{\"samples\": {}, \"capacity\": {}, \
+             \"saturated\": {}}}, \"exec_calls\": {{{}}}}}",
             self.requests(),
             self.errors(),
             self.batches(),
@@ -171,6 +210,9 @@ impl ServeStats {
             ws.hits,
             ws.misses,
             fmt_lat(lat),
+            res.samples,
+            res.capacity,
+            res.saturated,
             calls.join(", ")
         )
     }
@@ -199,6 +241,10 @@ mod tests {
     fn latency_percentiles_and_ring_wrap() {
         let s = ServeStats::new(8);
         assert!(s.latency().is_none());
+        assert_eq!(
+            s.reservoir(),
+            ReservoirInfo { samples: 0, capacity: 8, saturated: false }
+        );
         for us in 1..=100u64 {
             s.record_latency_us(us * 1000);
         }
@@ -206,6 +252,43 @@ mod tests {
         // ring keeps the last 8 samples: 93..=100 ms
         assert!(l.p50_ms >= 93.0 && l.p99_ms <= 100.0, "{l:?}");
         assert!(l.mean_ms >= 93.0 && l.mean_ms <= 100.0);
+        // the wrapped window cannot hide the all-time worst request
+        assert_eq!(l.max_ms, 100.0, "{l:?}");
+        assert_eq!(
+            s.reservoir(),
+            ReservoirInfo { samples: 8, capacity: 8, saturated: true }
+        );
+    }
+
+    #[test]
+    fn max_survives_wrap_even_when_window_is_faster() {
+        // one slow outlier, then enough fast requests to evict it from
+        // the ring: p99 describes the window, max still tells the truth
+        let s = ServeStats::new(4);
+        s.record_latency_us(500_000);
+        for _ in 0..10 {
+            s.record_latency_us(1_000);
+        }
+        let l = s.latency().unwrap();
+        assert!(l.p99_ms <= 1.0, "{l:?}");
+        assert_eq!(l.max_ms, 500.0, "{l:?}");
+        assert!(s.reservoir().saturated);
+    }
+
+    #[test]
+    fn reservoir_not_saturated_before_wrap() {
+        let s = ServeStats::new(8);
+        for _ in 0..8 {
+            s.record_latency_us(1_000);
+        }
+        // exactly full but never overwritten: percentiles still cover the
+        // entire history
+        assert_eq!(
+            s.reservoir(),
+            ReservoirInfo { samples: 8, capacity: 8, saturated: false }
+        );
+        s.record_latency_us(1_000);
+        assert!(s.reservoir().saturated);
     }
 
     #[test]
@@ -217,6 +300,14 @@ mod tests {
         let j = s.to_json(&[("model_infer_ex".into(), 1)], 4);
         let parsed = Json::parse(&j).expect("valid json");
         assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 1);
+        // max + reservoir state surface so a wrapped p99 can't mislead
+        assert!(
+            parsed.get("latency_ms").unwrap().get("max").unwrap().as_f64().unwrap()
+                >= 1.5
+        );
+        let res = parsed.get("latency_reservoir").unwrap();
+        assert_eq!(res.get("samples").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(res.get("capacity").unwrap().as_usize().unwrap(), 4);
         // throughput + kernel-pool configuration surface in /stats
         assert!(parsed.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
         assert!(parsed.get("requests_per_sec").unwrap().as_f64().unwrap() >= 0.0);

@@ -121,6 +121,71 @@ mod tests {
         }
     }
 
+    /// Snapshot taken *mid Box–Muller pair* (the cached spare is `Some`):
+    /// restore must resume bit-exactly, spare first.  Checkpoint resume
+    /// and per-rank γ-stream derivation both lean on this.
+    #[test]
+    fn snapshot_mid_box_muller_pair_resumes_bitwise() {
+        let mut a = Rng::new(3);
+        a.normal(); // one draw of the pair consumed, the spare is cached
+        let (state, spare) = a.state();
+        assert!(
+            spare.is_some(),
+            "after an odd number of normal() draws the spare must be cached"
+        );
+        let mut b = Rng::restore(state, spare);
+        // the very next draw is the cached spare itself, then the streams
+        // continue in lockstep through fresh pairs
+        for i in 0..64 {
+            assert_eq!(a.normal().to_bits(), b.normal().to_bits(), "draw {i}");
+        }
+        // restoring with the spare dropped would NOT resume the sequence
+        let mut a2 = Rng::new(3);
+        let first = a2.normal();
+        let (s2, sp2) = a2.state();
+        let spare_val = sp2.expect("spare cached");
+        let mut truncated = Rng::restore(s2, None);
+        assert_ne!(
+            truncated.normal().to_bits(),
+            spare_val.to_bits(),
+            "dropping the spare must be observable (first draw {first})"
+        );
+    }
+
+    /// `fork` is a pure function of the parent *state*: forking from a
+    /// snapshot-restored parent yields bit-identical child streams, and
+    /// deriving a fork from a clone leaves the parent untouched.  This is
+    /// what lets any rank derive any micro-batch's γ stream without
+    /// replaying draws (`coordinator::Trainer::gamma_stream`).
+    #[test]
+    fn fork_streams_stable_across_snapshots() {
+        let mut parent = Rng::new(9);
+        parent.normal(); // leave a spare cached: snapshots mid-pair too
+        let (state, spare) = parent.state();
+        for tag in [0u64, 1, 7, u64::MAX] {
+            let mut from_live = parent.clone().fork(tag);
+            let mut from_snapshot = Rng::restore(state, spare).fork(tag);
+            for i in 0..32 {
+                assert_eq!(
+                    from_live.next_u64(),
+                    from_snapshot.next_u64(),
+                    "tag {tag} draw {i}"
+                );
+                assert_eq!(
+                    from_live.normal().to_bits(),
+                    from_snapshot.normal().to_bits(),
+                    "tag {tag} normal {i}"
+                );
+            }
+        }
+        // clone-then-fork never advances the parent
+        assert_eq!(parent.state(), (state, spare));
+        // distinct tags give distinct streams off the same parent state
+        let mut f1 = parent.clone().fork(1);
+        let mut f2 = parent.clone().fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
     #[test]
     fn fork_diverges() {
         let mut a = Rng::new(7);

@@ -1,0 +1,319 @@
+//! Cross-world-size bit-determinism: the acceptance contract of
+//! `bdia::dist`.
+//!
+//! For every model family, in both reversible and float modes, a training
+//! run split across `ranks ∈ {1, 2, 4}` workers (full N-rank worlds
+//! assembled **in this process** over loopback TCP) must produce
+//! **bit-identical** losses, accuracies, gradient norms and final
+//! parameters — identical to each other, to the plain single-process
+//! [`Trainer`] consuming the same global batch (`grad_accum` fixed), and
+//! across kernel-pool thread counts.  This extends the repo's
+//! determinism-by-construction rule from threads (PR 3) to ranks: the
+//! collective folds micro-gradients serially in global micro order, and
+//! per-micro γ streams are pure functions of the micro index, so world
+//! size is — like thread count — purely a speed knob.
+
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::Trainer;
+use bdia::data::make_dataset;
+use bdia::dist::run_local_world;
+use bdia::kernels::pool;
+
+/// Everything observable from a short run, as bits.
+#[derive(Clone, PartialEq, Eq, Debug)]
+struct Signature {
+    losses: Vec<u32>,
+    accs: Vec<u32>,
+    grad_norms: Vec<u32>,
+    step: usize,
+    params: Vec<u32>,
+}
+
+fn bits_of_store(ps: &bdia::model::ParamStore) -> Vec<u32> {
+    let mut out = Vec::new();
+    for insts in ps.groups.values() {
+        for inst in insts {
+            for t in inst {
+                out.extend(t.data().iter().map(|v| v.to_bits()));
+            }
+        }
+    }
+    out
+}
+
+fn cfg_for(
+    model: &str,
+    dataset: &str,
+    mode: TrainMode,
+    ranks: usize,
+    grad_accum: usize,
+    steps: usize,
+) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        dataset: dataset.into(),
+        mode,
+        steps,
+        eval_every: 0,
+        log_every: 1,
+        train_examples: 64,
+        val_examples: 8,
+        seed: 7,
+        ranks,
+        grad_accum,
+        ..TrainConfig::default()
+    }
+}
+
+/// Drive `steps` global optimization steps and snapshot the run.
+fn drive(tr: &mut Trainer, steps: usize) -> Signature {
+    let cfg = tr.cfg.clone();
+    let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family)
+        .expect("dataset");
+    let mut sig = Signature {
+        losses: Vec::new(),
+        accs: Vec::new(),
+        grad_norms: Vec::new(),
+        step: 0,
+        params: Vec::new(),
+    };
+    for _ in 0..steps {
+        let s = tr.train_step_global(ds.as_ref()).expect("train_step_global");
+        sig.losses.push(s.loss.to_bits());
+        sig.accs.push(s.acc.to_bits());
+        sig.grad_norms.push(s.grad_norm.to_bits());
+    }
+    sig.step = tr.step();
+    sig.params = bits_of_store(&tr.params);
+    sig
+}
+
+/// The reference: a plain single-process [`Trainer`], no world attached,
+/// consuming the same global batch via the same `grad_accum`.
+fn plain_signature(cfg: &TrainConfig) -> Signature {
+    let cfg = TrainConfig { ranks: 1, ..cfg.clone() };
+    let mut tr = Trainer::new(cfg.clone()).expect("trainer");
+    drive(&mut tr, cfg.steps)
+}
+
+/// A full `cfg.ranks`-sized world in this process; returns one signature
+/// per rank (every rank tracks every stat, so lockstep is observable).
+fn world_signatures(cfg: &TrainConfig) -> Vec<Signature> {
+    run_local_world(cfg, |_rank, role| {
+        let mut tr = Trainer::new(cfg.clone())?;
+        tr.attach_dist(role)?;
+        Ok(drive(&mut tr, cfg.steps))
+    })
+    .expect("world run")
+}
+
+fn assert_sig_eq(a: &Signature, b: &Signature, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses diverged");
+    assert_eq!(a.accs, b.accs, "{what}: accuracies diverged");
+    assert_eq!(a.grad_norms, b.grad_norms, "{what}: grad norms diverged");
+    assert_eq!(a.step, b.step, "{what}: step counters diverged");
+    assert_eq!(a.params, b.params, "{what}: parameters diverged");
+}
+
+/// The headline claim: ranks ∈ {1, 2, 4} are bit-identical to each other
+/// and to the plain single-process trainer, for all three families, in
+/// both reversible and float modes.
+#[test]
+fn dist_training_bit_identical_across_world_sizes() {
+    const ACCUM: usize = 4;
+    const STEPS: usize = 2;
+    for (model, dataset) in [
+        ("smoke_vit", "synth_cifar10"),
+        ("smoke_gpt", "tiny_corpus"),
+        ("smoke_encdec", "synth_translation"),
+    ] {
+        for mode in [TrainMode::BdiaReversible, TrainMode::BdiaFloat] {
+            let base = plain_signature(&cfg_for(
+                model, dataset, mode, 1, ACCUM, STEPS,
+            ));
+            assert!(
+                base.losses.iter().all(|&b| f32::from_bits(b).is_finite()),
+                "{model}/{mode:?}: reference run must be finite"
+            );
+            for ranks in [1usize, 2, 4] {
+                let cfg = cfg_for(model, dataset, mode, ranks, ACCUM, STEPS);
+                let sigs = world_signatures(&cfg);
+                assert_eq!(sigs.len(), ranks);
+                for (r, sig) in sigs.iter().enumerate() {
+                    assert_sig_eq(
+                        sig,
+                        &base,
+                        &format!("{model}/{mode:?} rank {r}/{ranks} vs plain"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// World size composes with thread count: the same signature falls out at
+/// every (ranks, kernel threads) combination.
+#[test]
+fn dist_training_bit_identical_across_thread_counts() {
+    const ACCUM: usize = 4;
+    let mut sigs = Vec::new();
+    for threads in [1usize, 2, 5] {
+        pool::set_threads(threads);
+        let base = plain_signature(&cfg_for(
+            "smoke_gpt",
+            "tiny_corpus",
+            TrainMode::BdiaReversible,
+            1,
+            ACCUM,
+            2,
+        ));
+        let cfg = cfg_for(
+            "smoke_gpt",
+            "tiny_corpus",
+            TrainMode::BdiaReversible,
+            2,
+            ACCUM,
+            2,
+        );
+        let world = world_signatures(&cfg);
+        assert_sig_eq(
+            &world[0],
+            &base,
+            &format!("threads={threads}: 2-rank world vs plain"),
+        );
+        sigs.push(world[0].clone());
+    }
+    pool::set_threads(0);
+    for s in &sigs[1..] {
+        assert_sig_eq(s, &sigs[0], "across thread counts");
+    }
+}
+
+/// `ranks=1, grad_accum=1` through the attached-world path is exactly the
+/// legacy single-batch `train_step` — the dist layer costs nothing when
+/// it is not used.
+#[test]
+fn world_of_one_matches_legacy_single_batch_path() {
+    let cfg = cfg_for(
+        "smoke_vit",
+        "synth_cifar10",
+        TrainMode::BdiaReversible,
+        1,
+        1,
+        3,
+    );
+    // legacy loop: explicit per-step batches through train_step
+    let mut legacy_tr = Trainer::new(cfg.clone()).unwrap();
+    let ds = make_dataset(
+        &cfg,
+        &legacy_tr.rt.manifest.dims.clone(),
+        legacy_tr.family,
+    )
+    .unwrap();
+    let mut legacy = Signature {
+        losses: Vec::new(),
+        accs: Vec::new(),
+        grad_norms: Vec::new(),
+        step: 0,
+        params: Vec::new(),
+    };
+    for step in 0..cfg.steps {
+        let b = ds.train_batch(step);
+        let s = legacy_tr.train_step(&b).unwrap();
+        legacy.losses.push(s.loss.to_bits());
+        legacy.accs.push(s.acc.to_bits());
+        legacy.grad_norms.push(s.grad_norm.to_bits());
+    }
+    legacy.step = legacy_tr.step();
+    legacy.params = bits_of_store(&legacy_tr.params);
+
+    let world = world_signatures(&cfg);
+    assert_sig_eq(&world[0], &legacy, "solo world vs legacy train_step");
+}
+
+/// Checkpoints are rank 0's: a checkpoint written by a plain run, resumed
+/// on rank 0 alone, is broadcast at attach time and the whole world
+/// continues bit-identically to an uninterrupted single-process run.
+#[test]
+fn rank0_resume_broadcasts_state_to_the_world() {
+    let dir = std::env::temp_dir()
+        .join(format!("bdia_dist_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("mid.ckpt");
+
+    let mode = TrainMode::BdiaReversible;
+    // uninterrupted reference: 3 global steps, grad_accum 2
+    let full = plain_signature(&cfg_for(
+        "smoke_gpt",
+        "tiny_corpus",
+        mode,
+        1,
+        2,
+        3,
+    ));
+
+    // first 2 steps, checkpointed
+    let cfg2 = cfg_for("smoke_gpt", "tiny_corpus", mode, 1, 2, 2);
+    let mut tr = Trainer::new(cfg2.clone()).unwrap();
+    drive(&mut tr, 2);
+    tr.save_checkpoint(&ckpt).unwrap();
+
+    // a 2-rank world resumes from rank 0 only and runs the third step
+    let cfg_w = cfg_for("smoke_gpt", "tiny_corpus", mode, 2, 2, 3);
+    let sigs = run_local_world(&cfg_w, |rank, role| {
+        let mut tr = Trainer::new(cfg_w.clone())?;
+        if rank == 0 {
+            tr.load_checkpoint(&ckpt)?;
+        }
+        tr.attach_dist(role)?; // broadcasts params/opt/step/γ-RNG
+        anyhow::ensure!(tr.step() == 2, "rank {rank} did not receive step 2");
+        Ok(drive(&mut tr, 1))
+    })
+    .unwrap();
+    for (r, sig) in sigs.iter().enumerate() {
+        assert_eq!(sig.step, 3, "rank {r} step");
+        assert_eq!(sig.params, full.params, "rank {r}: resumed world diverged");
+        assert_eq!(sig.losses[0], full.losses[2], "rank {r}: step-3 loss");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A world whose config digests disagree must fail the rendezvous, not
+/// train quietly on diverged settings.
+#[test]
+fn mismatched_config_fails_rendezvous() {
+    use bdia::dist::{Rendezvous, Transport, WorldSpec};
+    let good = cfg_for("smoke_gpt", "tiny_corpus", TrainMode::BdiaReversible, 2, 2, 1);
+    let bad = TrainConfig { lr: 3e-4, ..good.clone() };
+    let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+    let addr = rdv.addr();
+    let worker = std::thread::spawn(move || {
+        Transport::connect(
+            addr,
+            1,
+            &WorldSpec::for_config(&bad),
+            std::time::Duration::from_secs(10),
+        )
+    });
+    let hub = rdv.accept(
+        &WorldSpec::for_config(&good),
+        std::time::Duration::from_secs(10),
+    );
+    assert!(hub.is_err(), "hub accepted a mismatched config");
+    assert!(worker.join().unwrap().is_err());
+}
+
+/// grad_accum not divisible by the world size is rejected at attach time.
+#[test]
+fn indivisible_grad_accum_rejected() {
+    let cfg = cfg_for("smoke_gpt", "tiny_corpus", TrainMode::BdiaReversible, 2, 3, 1);
+    let err = run_local_world(&cfg, |_rank, role| {
+        let mut tr = Trainer::new(cfg.clone())?;
+        match tr.attach_dist(role) {
+            Ok(()) => anyhow::bail!("accum 3 with world 2 must be rejected"),
+            Err(e) => Ok(e.to_string()),
+        }
+    });
+    let msgs = err.unwrap();
+    assert!(msgs[0].contains("multiple"), "{}", msgs[0]);
+}
