@@ -88,6 +88,19 @@ impl ApiError {
         ApiError::Dist(format!("{e:#}"))
     }
 
+    /// Route an engine-layer failure by cause: a chain carrying a
+    /// [`crate::dist::DistError`] (a lost rank, a deadline expiry, a
+    /// relayed world abort) becomes [`ApiError::Dist`] — so embedders and
+    /// the CLI's restart policy can react to rank loss — while everything
+    /// else stays [`ApiError::Train`].
+    pub(crate) fn engine(e: anyhow::Error) -> Self {
+        if e.downcast_ref::<crate::dist::DistError>().is_some() {
+            ApiError::dist(e)
+        } else {
+            ApiError::train(e)
+        }
+    }
+
     /// Wrap an `anyhow` chain from checkpoint save/load, keeping the path.
     pub(crate) fn ckpt(path: impl Into<PathBuf>, e: anyhow::Error) -> Self {
         ApiError::Checkpoint(CkptError {

@@ -31,10 +31,13 @@
 //!
 //! Every fallible method returns [`ApiResult`]: a structured
 //! [`ApiError`] (`Config`, `UnknownModel { name, known }`,
-//! `Checkpoint(CkptError)`, `Backend`, `Serve`, `Train`, `Io`) that
-//! implements `std::error::Error` with actionable messages.  Match on the
-//! variant programmatically; `Display` renders the human message,
+//! `Checkpoint(CkptError)`, `Backend`, `Serve`, `Train`, `Dist`, `Io`)
+//! that implements `std::error::Error` with actionable messages.  Match
+//! on the variant programmatically; `Display` renders the human message,
 //! including the full model list and a "did you mean" hint for typos.
+//! Engine failures caused by a lost rank (a
+//! [`crate::dist::DistError`] in the chain) are routed to
+//! `ApiError::Dist` so callers can drive a restart policy.
 //! Model names are typed too: [`ModelId`] enumerates the registry and is
 //! the single source of truth for `--help` and the unknown-model error.
 //!

@@ -10,7 +10,7 @@ use super::error::{ApiError, ApiResult};
 use super::events::{CheckpointEvent, EvalEvent, EventSink, NullSink};
 use super::model_id::ModelId;
 use crate::baseline::RevVitTrainer;
-use crate::config::{TrainConfig, TrainMode};
+use crate::config::{RankFailurePolicy, TrainConfig, TrainMode};
 use crate::coordinator::{StepStats, Trainer};
 use crate::data::{make_dataset, Batch, Dataset};
 use crate::dist::{self, DistRole, Rendezvous};
@@ -318,6 +318,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Deadline (seconds) on every steady-state collective read/write
+    /// (`dist_timeout_s` config key).  A rank silent this long is declared
+    /// dead and surfaces as [`ApiError::Dist`] instead of a hang.
+    pub fn dist_timeout_s(mut self, secs: f64) -> Self {
+        self.cfg.dist_timeout_s = secs;
+        self
+    }
+
+    /// What rank 0 does when the world loses a rank (`on_rank_failure`
+    /// config key): abort with the structured error, or rebuild the world
+    /// and resume bit-exactly from the last completed step.
+    pub fn on_rank_failure(mut self, policy: RankFailurePolicy) -> Self {
+        self.cfg.on_rank_failure = policy;
+        self
+    }
+
     pub fn save_every(mut self, every: usize) -> Self {
         self.cfg.save_every = every;
         self
@@ -561,6 +577,18 @@ impl Session {
         }
     }
 
+    /// Leave the attached world while keeping all local training state —
+    /// the first half of the restart policy.  On rank 0 that state is the
+    /// last completed step (a failed collective never commits), so a
+    /// subsequent [`Session::connect_dist`] / [`Session::train`] on a
+    /// rebuilt world re-broadcasts it and training resumes bit-exactly.
+    /// No-op when no world is attached.
+    pub fn detach_dist(&mut self) {
+        if let Engine::Bdia(t) = &mut self.engine {
+            t.detach_dist();
+        }
+    }
+
     /// Join the world described by the builder's `.ranks`/`.rank`/
     /// `.rendezvous`: rank 0 binds and accepts (pass `prebound` if a
     /// launcher already bound the listener to learn its port), workers
@@ -608,7 +636,7 @@ impl Session {
                 t.run_observed(ds.as_ref(), &run_name, sink.as_ref())
             }
         }
-        .map_err(ApiError::train)?;
+        .map_err(ApiError::engine)?;
         if let Some(out) = &opts.csv_out {
             log.write_csv(out).map_err(|e| ApiError::io(out.clone(), e))?;
         }
@@ -627,7 +655,7 @@ impl Session {
             Engine::Bdia(t) => t.train_step(batch),
             Engine::RevVit(t) => t.train_step(batch),
         }
-        .map_err(ApiError::train)
+        .map_err(ApiError::engine)
     }
 
     /// Training forward pass only; returns the batch loss (bench probe —

@@ -64,6 +64,35 @@ impl OptimKind {
     }
 }
 
+/// What the rank-0 driver does when the distributed world loses a rank
+/// (see the failure-semantics notes in [`crate::dist`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankFailurePolicy {
+    /// Tear the world down and exit with the structured error (default).
+    Abort,
+    /// Rebuild the world (re-rendezvous, respawn local workers) and
+    /// resume from rank 0's last completed step via the state broadcast.
+    /// Recovery is bit-identical to an uninterrupted run.
+    Restart,
+}
+
+impl RankFailurePolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "abort" => RankFailurePolicy::Abort,
+            "restart" => RankFailurePolicy::Restart,
+            _ => bail!("unknown rank-failure policy '{s}' (abort|restart)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RankFailurePolicy::Abort => "abort",
+            RankFailurePolicy::Restart => "restart",
+        }
+    }
+}
+
 /// Complete specification of one training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
@@ -110,6 +139,16 @@ pub struct TrainConfig {
     /// of this value, so runs at different rank counts (same `grad_accum`)
     /// consume identical data and produce bit-identical training.
     pub grad_accum: usize,
+    /// Deadline (seconds) on every steady-state distributed read/write: a
+    /// rank silent for this long is declared dead and the world aborts
+    /// with a structured error instead of hanging.  Heartbeats keep slow
+    /// ranks alive, so this bounds *silence*, not compute.  Operational
+    /// knob — excluded from the world-config digest.
+    pub dist_timeout_s: f64,
+    /// What rank 0 does when the world loses a rank: abort (default) or
+    /// rebuild + resume bit-exactly.  Operational knob — excluded from
+    /// the world-config digest.
+    pub on_rank_failure: RankFailurePolicy,
 }
 
 impl Default for TrainConfig {
@@ -140,6 +179,8 @@ impl Default for TrainConfig {
             threads: 0,
             ranks: 1,
             grad_accum: 0,
+            dist_timeout_s: 30.0,
+            on_rank_failure: RankFailurePolicy::Abort,
         }
     }
 }
@@ -191,6 +232,10 @@ impl TrainConfig {
             "threads" => self.threads = v.as_usize()?,
             "ranks" => self.ranks = v.as_usize()?,
             "grad_accum" => self.grad_accum = v.as_usize()?,
+            "dist_timeout_s" => self.dist_timeout_s = v.as_f64()?,
+            "on_rank_failure" => {
+                self.on_rank_failure = RankFailurePolicy::parse(v.as_str()?)?
+            }
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -204,6 +249,13 @@ impl TrainConfig {
         } else {
             self.grad_accum
         }
+    }
+
+    /// The collective deadline as a [`Duration`](std::time::Duration),
+    /// floored at 50ms so a typo'd tiny value cannot make every read an
+    /// instant failure.
+    pub fn dist_deadline(&self) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(self.dist_timeout_s.max(0.05))
     }
 
     /// Apply a `key=value` CLI override (values parsed as JSON when
@@ -297,6 +349,24 @@ mod tests {
         let j = Json::parse(r#"{"ranks": 2, "grad_accum": 6}"#).unwrap();
         let c = TrainConfig::from_json(&j).unwrap();
         assert_eq!((c.ranks, c.accum()), (2, 6));
+    }
+
+    #[test]
+    fn fault_keys_parse_and_deadline_is_floored() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.dist_timeout_s, 30.0);
+        assert_eq!(c.on_rank_failure, RankFailurePolicy::Abort);
+        c.override_kv("dist_timeout_s=0.5").unwrap();
+        assert_eq!(c.dist_deadline(), std::time::Duration::from_millis(500));
+        c.override_kv("on_rank_failure=restart").unwrap();
+        assert_eq!(c.on_rank_failure, RankFailurePolicy::Restart);
+        assert!(c.override_kv("on_rank_failure=retry").is_err());
+        // a typo'd tiny deadline is floored, not honored
+        c.override_kv("dist_timeout_s=0.000001").unwrap();
+        assert_eq!(c.dist_deadline(), std::time::Duration::from_millis(50));
+        for p in [RankFailurePolicy::Abort, RankFailurePolicy::Restart] {
+            assert_eq!(RankFailurePolicy::parse(p.name()).unwrap(), p);
+        }
     }
 
     #[test]

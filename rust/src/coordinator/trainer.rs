@@ -9,7 +9,7 @@ use super::stack::{GammaPlan, Stack, StackKind, StackState};
 use crate::checkpoint::{self, CheckpointRef, RngSnapshot};
 use crate::config::{TrainConfig, TrainMode};
 use crate::data::{Batch, Dataset};
-use crate::dist::{self, DistRole};
+use crate::dist::{self, Collective, DistRole};
 use crate::metrics::{Record, TrainLog};
 use crate::model::{Family, ParamStore};
 use crate::optim::{clip_global_norm, Optimizer};
@@ -200,6 +200,21 @@ impl Trainer {
 
     pub fn has_dist(&self) -> bool {
         self.dist.is_some()
+    }
+
+    /// Leave the world (dropping this rank's sockets and heartbeat) while
+    /// keeping all local training state.  On rank 0 that state is the last
+    /// *completed* step — a failed collective never commits — so a
+    /// subsequent [`Trainer::attach_dist`] on a rebuilt world re-broadcasts
+    /// it and training resumes bit-identically (the restart policy's path).
+    pub fn detach_dist(&mut self) {
+        self.dist = None;
+    }
+
+    /// Mutable access to the attached collective (fault-injection hooks
+    /// and liveness control); `None` when no world is attached.
+    pub fn collective_mut(&mut self) -> Option<&mut Collective> {
+        self.dist.as_mut().map(|d| &mut d.coll)
     }
 
     /// Join a data-parallel world: validate the shape against the config,

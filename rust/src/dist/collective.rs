@@ -15,9 +15,123 @@
 //! buffers to the hub, `broadcast` fans the hub's buffer out, `barrier`
 //! is a request/ack round trip.  TCP gives per-stream ordering; the hub
 //! reads streams in rank order, so arrival races cannot perturb the fold.
+//!
+//! ## Liveness and abort fan-out
+//!
+//! Every connection is deadline-armed (see
+//! [`super::transport::Link`]), and each non-solo collective owns a
+//! background [`Heartbeat`] thread that keeps its connections warm while
+//! this rank computes between collectives — so a *slow* rank never trips
+//! a peer's read deadline, while a *dead* rank's silence is indistinguish-
+//! able from a hang and fails the read within one deadline.  When the hub
+//! loses a peer mid-collective it relays an ABORT frame to every surviving
+//! worker before returning the error, so the whole world terminates with
+//! a [`super::transport::DistError`] naming the same dead rank instead of
+//! waiting out staggered timeouts.
 
-use super::transport::{self, expect_frame, op, write_frame, Transport};
-use anyhow::{ensure, Context, Result};
+use super::transport::{self, op, Link, Transport};
+use anyhow::{ensure, Result};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Background liveness thread: periodically writes empty HEARTBEAT frames
+/// on every connection this rank owns (hub → all peers, worker → hub).
+/// Beats are best-effort and skipped while the main thread holds a write
+/// lock — its own in-flight frame is better proof of life.  Dropping the
+/// handle stops and joins the thread.
+struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    fn spawn(transport: &Transport) -> Option<Heartbeat> {
+        let (writers, deadline): (Vec<Arc<Mutex<TcpStream>>>, Duration) =
+            match transport {
+                Transport::Solo => return None,
+                Transport::Hub { peers } => {
+                    let deadline = peers.first()?.deadline();
+                    (peers.iter().map(Link::writer).collect(), deadline)
+                }
+                Transport::Worker { hub } => (vec![hub.writer()], hub.deadline()),
+            };
+        // several beats per deadline, so one lost-to-lock-contention beat
+        // cannot look like death
+        let interval = (deadline / 4).max(Duration::from_millis(10));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("bdia-heartbeat".into())
+            .spawn(move || {
+                let slice = Duration::from_millis(5).min(interval);
+                let mut next = Instant::now() + interval;
+                while !thread_stop.load(Ordering::Relaxed) {
+                    if Instant::now() >= next {
+                        let mut any_alive = false;
+                        for w in &writers {
+                            any_alive |= transport::try_heartbeat(w);
+                        }
+                        if !any_alive {
+                            // every peer is unreachable; the main thread is
+                            // about to find out via its own reads
+                            return;
+                        }
+                        next = Instant::now() + interval;
+                    }
+                    std::thread::sleep(slice);
+                }
+            })
+            .ok()?; // no thread → no beats; deadlines still bound every read
+        Some(Heartbeat { stop, handle: Some(handle) })
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Tell every surviving peer that `dead` failed during `during` (best
+/// effort — the world is coming down either way).
+fn abort_world(peers: &[Link], dead: usize, during: &'static str) {
+    for p in peers {
+        if p.peer() != dead {
+            p.send_abort(dead, during);
+        }
+    }
+}
+
+/// Hub side of one peer's reduce contribution: receive, decode, fold.
+fn fold_peer(
+    link: &mut Link,
+    frame: &mut Vec<u8>,
+    scratch: &mut [f32],
+    acc: &mut [f32],
+) -> Result<()> {
+    let got = link.recv_into(frame, "reduce")?;
+    ensure!(got == op::REDUCE, "expected reduce frame, got op {got}");
+    let mut pos = 0;
+    transport::get_f32s(frame, &mut pos, scratch.len(), scratch)?;
+    ensure!(pos == frame.len(), "reduce frame length mismatch");
+    for (a, c) in acc.iter_mut().zip(scratch.iter()) {
+        *a += *c;
+    }
+    Ok(())
+}
+
+/// Hub side of one peer's barrier arrival.
+fn barrier_req(link: &mut Link, frame: &mut Vec<u8>) -> Result<()> {
+    let got = link.recv_into(frame, "barrier")?;
+    ensure!(got == op::BARRIER_REQ, "expected barrier request, got op {got}");
+    ensure!(frame.is_empty(), "barrier request carries no payload");
+    Ok(())
+}
 
 /// One rank's handle on the assembled world.
 pub struct Collective {
@@ -29,6 +143,10 @@ pub struct Collective {
     frame: Vec<u8>,
     /// Reusable decoded-f32 buffer (hub-side fold input).
     scratch: Vec<f32>,
+    /// Liveness thread; `None` for solo worlds (and after
+    /// [`Collective::halt_heartbeat`], which the fault harness uses to
+    /// simulate a wedged-but-running rank).
+    heartbeat: Option<Heartbeat>,
 }
 
 impl Collective {
@@ -46,12 +164,14 @@ impl Collective {
                 ensure!(rank >= 1 && rank < world, "worker rank out of range")
             }
         }
+        let heartbeat = Heartbeat::spawn(&transport);
         Ok(Collective {
             transport,
             rank,
             world,
             frame: Vec::new(),
             scratch: Vec::new(),
+            heartbeat,
         })
     }
 
@@ -65,6 +185,7 @@ impl Collective {
             world: 1,
             frame: Vec::new(),
             scratch: Vec::new(),
+            heartbeat: None,
         }
     }
 
@@ -74,6 +195,14 @@ impl Collective {
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// Stop sending liveness beats while staying connected.  Peers will
+    /// see this rank as dead one deadline after its last frame — exactly
+    /// how a livelocked or GC-stalled process looks from outside.  Exists
+    /// for the fault-injection harness; production code never calls it.
+    pub fn halt_heartbeat(&mut self) {
+        self.heartbeat = None;
     }
 
     /// Fold this round's per-rank contributions into `acc` **serially in
@@ -104,20 +233,12 @@ impl Collective {
                     *a += *c;
                 }
                 self.scratch.resize(contrib.len(), 0.0);
-                for (i, peer) in peers.iter_mut().enumerate() {
-                    let got = transport::read_frame_into(peer, &mut self.frame)
-                        .with_context(|| format!("reduce from rank {}", i + 1))?;
-                    ensure!(got == op::REDUCE, "expected reduce frame, got op {got}");
-                    let mut pos = 0;
-                    transport::get_f32s(
-                        &self.frame,
-                        &mut pos,
-                        contrib.len(),
-                        &mut self.scratch,
-                    )?;
-                    ensure!(pos == self.frame.len(), "reduce frame length mismatch");
-                    for (a, c) in acc.iter_mut().zip(&self.scratch) {
-                        *a += *c;
+                for i in 0..peers.len() {
+                    if let Err(e) =
+                        fold_peer(&mut peers[i], &mut self.frame, &mut self.scratch, acc)
+                    {
+                        abort_world(peers, peers[i].peer(), "reduce");
+                        return Err(e);
                     }
                 }
                 Ok(())
@@ -125,7 +246,7 @@ impl Collective {
             Transport::Worker { hub } => {
                 self.frame.clear();
                 transport::put_f32s(&mut self.frame, contrib);
-                write_frame(hub, op::REDUCE, &self.frame).context("reduce send")
+                hub.send(op::REDUCE, &self.frame, "reduce")
             }
         }
     }
@@ -138,15 +259,16 @@ impl Collective {
             Transport::Hub { peers } => {
                 self.frame.clear();
                 transport::put_f32s(&mut self.frame, buf);
-                for peer in peers.iter_mut() {
-                    write_frame(peer, op::BCAST, &self.frame)
-                        .context("broadcast send")?;
+                for i in 0..peers.len() {
+                    if let Err(e) = peers[i].send(op::BCAST, &self.frame, "broadcast") {
+                        abort_world(peers, peers[i].peer(), "broadcast");
+                        return Err(e);
+                    }
                 }
                 Ok(())
             }
             Transport::Worker { hub } => {
-                let got = transport::read_frame_into(hub, &mut self.frame)
-                    .context("broadcast recv")?;
+                let got = hub.recv_into(&mut self.frame, "broadcast")?;
                 ensure!(got == op::BCAST, "expected broadcast frame, got op {got}");
                 let mut pos = 0;
                 transport::get_f32s(&self.frame, &mut pos, buf.len(), buf)?;
@@ -162,13 +284,18 @@ impl Collective {
         match &mut self.transport {
             Transport::Solo => Ok(blob),
             Transport::Hub { peers } => {
-                for peer in peers.iter_mut() {
-                    write_frame(peer, op::BCAST, &blob).context("blob send")?;
+                for i in 0..peers.len() {
+                    if let Err(e) = peers[i].send(op::BCAST, &blob, "state-sync") {
+                        abort_world(peers, peers[i].peer(), "state-sync");
+                        return Err(e);
+                    }
                 }
                 Ok(blob)
             }
             Transport::Worker { hub } => {
-                expect_frame(hub, op::BCAST).context("blob recv")
+                let got = hub.recv_into(&mut self.frame, "state-sync")?;
+                ensure!(got == op::BCAST, "expected state frame, got op {got}");
+                Ok(std::mem::take(&mut self.frame))
             }
         }
     }
@@ -178,20 +305,25 @@ impl Collective {
         match &mut self.transport {
             Transport::Solo => Ok(()),
             Transport::Hub { peers } => {
-                for (i, peer) in peers.iter_mut().enumerate() {
-                    let p = expect_frame(peer, op::BARRIER_REQ)
-                        .with_context(|| format!("barrier from rank {}", i + 1))?;
-                    ensure!(p.is_empty(), "barrier request carries no payload");
+                for i in 0..peers.len() {
+                    if let Err(e) = barrier_req(&mut peers[i], &mut self.frame) {
+                        abort_world(peers, peers[i].peer(), "barrier");
+                        return Err(e);
+                    }
                 }
-                for peer in peers.iter_mut() {
-                    write_frame(peer, op::BARRIER_ACK, &[])?;
+                for i in 0..peers.len() {
+                    if let Err(e) = peers[i].send(op::BARRIER_ACK, &[], "barrier") {
+                        abort_world(peers, peers[i].peer(), "barrier");
+                        return Err(e);
+                    }
                 }
                 Ok(())
             }
             Transport::Worker { hub } => {
-                write_frame(hub, op::BARRIER_REQ, &[])?;
-                let p = expect_frame(hub, op::BARRIER_ACK)?;
-                ensure!(p.is_empty(), "barrier ack carries no payload");
+                hub.send(op::BARRIER_REQ, &[], "barrier")?;
+                let got = hub.recv_into(&mut self.frame, "barrier")?;
+                ensure!(got == op::BARRIER_ACK, "expected barrier ack, got op {got}");
+                ensure!(self.frame.is_empty(), "barrier ack carries no payload");
                 Ok(())
             }
         }
@@ -272,5 +404,25 @@ mod tests {
         let mut c = super::Collective::solo();
         let mut acc = vec![0f32; 2];
         assert!(c.reduce_sum_rank_ordered(&mut acc, &[1.0]).is_err());
+    }
+
+    /// Slow is not dead: a rank that computes for several deadlines keeps
+    /// beating in the background, so the world waits for it instead of
+    /// aborting — deadlines bound *silence*, not work.
+    #[test]
+    fn heartbeats_keep_a_slow_rank_from_tripping_the_deadline() {
+        let config = TrainConfig { dist_timeout_s: 0.2, ..cfg(2) };
+        let out = run_local_world(&config, |rank, mut role| {
+            if rank == 1 {
+                // 3× the deadline of pure compute before contributing
+                std::thread::sleep(std::time::Duration::from_millis(600));
+            }
+            let mut acc = vec![0f32];
+            role.coll.reduce_sum_rank_ordered(&mut acc, &[1.0])?;
+            role.coll.broadcast(&mut acc)?;
+            Ok(acc[0].to_bits())
+        })
+        .unwrap();
+        assert_eq!(out, vec![2.0f32.to_bits(); 2]);
     }
 }

@@ -1,4 +1,5 @@
-//! World assembly: in-process harness, per-process join, local spawn.
+//! World assembly: in-process harness, per-process join, local spawn —
+//! plus the fault-injection harness the no-hang tests are built on.
 //!
 //! Three ways to stand up an N-rank world, all ending in the same
 //! [`DistRole`]:
@@ -12,7 +13,14 @@
 //! * [`spawn_worker_ranks`] — the single-command local mode: the CLI binds
 //!   the rendezvous itself, re-execs `current_exe` once per worker rank
 //!   with `--rank k --rendezvous <bound addr>` appended, then proceeds as
-//!   rank 0.
+//!   rank 0.  The children ride in a [`WorkerRanks`] guard that reaps them
+//!   on every exit path.
+//!
+//! [`run_local_world_injected`] is the fault-tolerant variant: it hands
+//! each rank a [`FaultInjector`] (kill / delay / wedge a chosen rank at a
+//! chosen step) and returns **per-rank** results instead of failing fast,
+//! so tests can assert that every survivor of a staged death terminates
+//! with a structured error instead of hanging.
 
 use super::collective::Collective;
 use super::transport::{
@@ -20,13 +28,88 @@ use super::transport::{
 };
 use super::DistRole;
 use crate::config::TrainConfig;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::net::{SocketAddr, ToSocketAddrs};
 use std::process::{Child, Command, Stdio};
+use std::time::Duration;
 
 /// Default rendezvous for the two-terminal walkthrough (any free port
 /// works; this one just keeps the README copy-pasteable).
 pub const DEFAULT_RENDEZVOUS: &str = "127.0.0.1:29400";
+
+/// How many times `--on-rank-failure=restart` will rebuild the world
+/// before giving up and surfacing the failure (a rank that dies on every
+/// attempt is a bug, not bad luck).
+pub const MAX_RESTARTS: usize = 3;
+
+// ---------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------
+
+/// What happens to the chosen rank when its step comes up.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultKind {
+    /// The rank errors out instantly — the in-process analogue of a
+    /// killed process: its sockets close and peers see EOF.
+    Kill,
+    /// The rank stalls for the given duration but keeps heartbeating,
+    /// then continues normally.  A healthy world must absorb this with
+    /// no abort and an unchanged bit-exact result.
+    Delay(Duration),
+    /// The rank stops heartbeating, stalls, then dies — a livelocked
+    /// process as seen from outside: silence until the deadline trips.
+    Wedge(Duration),
+}
+
+/// One staged fault: `kind` happens on `rank` at the top of `at_step`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub rank: usize,
+    pub at_step: usize,
+    pub kind: FaultKind,
+}
+
+/// Per-rank handle on the (possibly absent) fault plan.  The training
+/// closure calls [`FaultInjector::before_step`] at the top of each global
+/// step; on every rank and step except the staged one it is a no-op.
+pub struct FaultInjector {
+    plan: Option<FaultPlan>,
+    rank: usize,
+}
+
+impl FaultInjector {
+    pub fn new(plan: Option<FaultPlan>, rank: usize) -> Self {
+        FaultInjector { plan, rank }
+    }
+
+    /// Fire the staged fault if `step` on this rank is the chosen moment.
+    /// `Kill`/`Wedge` return an error (the rank's death); `Delay` sleeps
+    /// and returns `Ok` so the run continues.
+    pub fn before_step(&self, step: usize, coll: &mut Collective) -> Result<()> {
+        let Some(p) = self.plan else { return Ok(()) };
+        if p.rank != self.rank || p.at_step != step {
+            return Ok(());
+        }
+        match p.kind {
+            FaultKind::Kill => {
+                bail!("fault injection: rank {} killed at step {step}", self.rank)
+            }
+            FaultKind::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            FaultKind::Wedge(d) => {
+                coll.halt_heartbeat();
+                std::thread::sleep(d);
+                bail!("fault injection: rank {} wedged at step {step}", self.rank)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// in-process worlds
+// ---------------------------------------------------------------------
 
 /// Run `f(rank, role)` on every rank of a `cfg.ranks`-sized world inside
 /// this process: worker threads connect to an ephemeral loopback
@@ -37,37 +120,80 @@ where
     R: Send,
     F: Fn(usize, DistRole) -> Result<R> + Send + Sync,
 {
+    let results = run_local_world_inner(cfg, None, |rank, role, _inject| f(rank, role))?;
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r?);
+    }
+    Ok(out)
+}
+
+/// [`run_local_world`] with a staged fault and **per-rank** results: the
+/// world assembles normally, the chosen rank suffers its fault, and every
+/// rank's individual outcome (including the survivors' structured errors)
+/// comes back for inspection instead of failing fast on the first one.
+pub fn run_local_world_injected<R, F>(
+    cfg: &TrainConfig,
+    plan: FaultPlan,
+    f: F,
+) -> Result<Vec<Result<R>>>
+where
+    R: Send,
+    F: Fn(usize, DistRole, FaultInjector) -> Result<R> + Send + Sync,
+{
+    run_local_world_inner(cfg, Some(plan), f)
+}
+
+fn run_local_world_inner<R, F>(
+    cfg: &TrainConfig,
+    plan: Option<FaultPlan>,
+    f: F,
+) -> Result<Vec<Result<R>>>
+where
+    R: Send,
+    F: Fn(usize, DistRole, FaultInjector) -> Result<R> + Send + Sync,
+{
     let world = cfg.ranks.max(1);
     let spec = WorldSpec::for_config(cfg);
+    let deadline = cfg.dist_deadline();
     if world == 1 {
-        return Ok(vec![f(0, DistRole::solo())?]);
+        return Ok(vec![f(0, DistRole::solo(), FaultInjector::new(plan, 0))]);
     }
     let rdv = Rendezvous::bind("127.0.0.1:0", world)?;
     let addr = rdv.addr();
-    std::thread::scope(|scope| -> Result<Vec<R>> {
+    std::thread::scope(|scope| -> Result<Vec<Result<R>>> {
         let f = &f;
         let mut handles = Vec::with_capacity(world - 1);
         for rank in 1..world {
             handles.push(scope.spawn(move || -> Result<R> {
-                let t = Transport::connect(addr, rank, &spec, CONNECT_TIMEOUT)
-                    .with_context(|| format!("rank {rank} failed to join"))?;
+                let t =
+                    Transport::connect(addr, rank, &spec, CONNECT_TIMEOUT, deadline)
+                        .with_context(|| format!("rank {rank} failed to join"))?;
                 let coll = Collective::new(t, rank, world)?;
-                f(rank, DistRole { rank, world, coll })
+                f(rank, DistRole { rank, world, coll }, FaultInjector::new(plan, rank))
             }));
         }
-        let hub = rdv.accept(&spec, ACCEPT_TIMEOUT)?;
-        let coll = Collective::new(hub, 0, world)?;
-        let r0 = f(0, DistRole { rank: 0, world, coll })?;
+        // rank 0 runs here; its error lands in slot 0 like everyone else's
+        // so the workers still get joined (no leaked threads on hub death)
+        let r0 = (|| -> Result<R> {
+            let hub = rdv.accept(&spec, ACCEPT_TIMEOUT, deadline)?;
+            let coll = Collective::new(hub, 0, world)?;
+            f(0, DistRole { rank: 0, world, coll }, FaultInjector::new(plan, 0))
+        })();
         let mut out = vec![r0];
         for (i, h) in handles.into_iter().enumerate() {
             let r = h
                 .join()
                 .map_err(|_| anyhow::anyhow!("rank {} thread panicked", i + 1))?;
-            out.push(r.with_context(|| format!("rank {} failed", i + 1))?);
+            out.push(r.with_context(|| format!("rank {} failed", i + 1)));
         }
         Ok(out)
     })
 }
+
+// ---------------------------------------------------------------------
+// per-process join + local spawn
+// ---------------------------------------------------------------------
 
 /// Join a multi-process world as `rank`: rank 0 binds `rendezvous` (or
 /// [`DEFAULT_RENDEZVOUS`]) and accepts the workers; everyone else connects
@@ -82,6 +208,7 @@ pub fn establish(
     let world = cfg.ranks.max(1);
     ensure!(rank < world, "--rank {rank} out of range for --ranks {world}");
     let spec = WorldSpec::for_config(cfg);
+    let deadline = cfg.dist_deadline();
     if world == 1 {
         return Ok(DistRole::solo());
     }
@@ -91,11 +218,11 @@ pub fn establish(
             Some(r) => r,
             None => Rendezvous::bind(addr_spec, world)?,
         };
-        Collective::new(rdv.accept(&spec, ACCEPT_TIMEOUT)?, 0, world)?
+        Collective::new(rdv.accept(&spec, ACCEPT_TIMEOUT, deadline)?, 0, world)?
     } else {
         let addr = resolve(addr_spec)?;
         Collective::new(
-            Transport::connect(addr, rank, &spec, CONNECT_TIMEOUT)?,
+            Transport::connect(addr, rank, &spec, CONNECT_TIMEOUT, deadline)?,
             rank,
             world,
         )?
@@ -113,8 +240,8 @@ fn resolve(s: &str) -> Result<SocketAddr> {
 /// Spawn ranks `1..world` of this same invocation as child processes:
 /// `current_exe` re-run with the caller's CLI arguments, minus any
 /// `--rank`/`--rendezvous` they already carried, plus `--rank k
-/// --rendezvous <addr>`.  The caller then joins the world as rank 0 and
-/// must [`wait`](std::process::Child::wait) on the children afterwards.
+/// --rendezvous <addr>`.  Wrap the result in a [`WorkerRanks`] guard and
+/// [`WorkerRanks::reap`] it when the run finishes.
 pub fn spawn_worker_ranks(
     addr: SocketAddr,
     world: usize,
@@ -155,6 +282,54 @@ pub fn spawn_worker_ranks(
         children.push(child);
     }
     Ok(children)
+}
+
+/// Drop guard over locally spawned worker processes (index `i` holds
+/// rank `i + 1`).  Every exit path reaps: [`WorkerRanks::reap`] waits on
+/// **all** children and reports every non-zero exit with its rank;
+/// [`WorkerRanks::discard`] (also the `Drop` behaviour) kills and waits,
+/// for error/restart paths where exit codes no longer matter.  Either
+/// way, repeated `bdia train --ranks N` runs cannot accumulate zombies.
+#[derive(Default)]
+pub struct WorkerRanks(pub Vec<Child>);
+
+impl WorkerRanks {
+    /// Wait for every child; error if any exited non-zero (naming each
+    /// failed worker's rank and exit status).  All children are waited
+    /// even when an early one failed — reporting must not leak zombies.
+    pub fn reap(&mut self) -> Result<()> {
+        let children = std::mem::take(&mut self.0);
+        let mut failures = Vec::new();
+        for (i, mut child) in children.into_iter().enumerate() {
+            let rank = i + 1;
+            match child.wait() {
+                Ok(status) if status.success() => {}
+                Ok(status) => {
+                    failures.push(format!("worker rank {rank} exited with {status}"))
+                }
+                Err(e) => {
+                    failures.push(format!("worker rank {rank} could not be reaped: {e}"))
+                }
+            }
+        }
+        ensure!(failures.is_empty(), "{}", failures.join("; "));
+        Ok(())
+    }
+
+    /// Kill and wait whatever is still running, ignoring exit codes — the
+    /// restart/error path, where the old world is torn down by design.
+    pub fn discard(&mut self) {
+        for mut child in std::mem::take(&mut self.0) {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Drop for WorkerRanks {
+    fn drop(&mut self) {
+        self.discard();
+    }
 }
 
 #[cfg(test)]
@@ -200,5 +375,33 @@ mod tests {
     fn establish_rejects_out_of_range_rank() {
         let cfg = TrainConfig { ranks: 2, ..TrainConfig::default() };
         assert!(establish(&cfg, 2, None, None).is_err());
+    }
+
+    #[test]
+    fn fault_injector_only_fires_on_its_rank_and_step() {
+        let plan = FaultPlan { rank: 1, at_step: 2, kind: FaultKind::Kill };
+        let mut coll = Collective::solo();
+        let other_rank = FaultInjector::new(Some(plan), 0);
+        assert!(other_rank.before_step(2, &mut coll).is_ok());
+        let target = FaultInjector::new(Some(plan), 1);
+        assert!(target.before_step(1, &mut coll).is_ok());
+        let err = target.before_step(2, &mut coll).unwrap_err();
+        assert!(err.to_string().contains("rank 1"), "{err:#}");
+        let unplanned = FaultInjector::new(None, 1);
+        assert!(unplanned.before_step(2, &mut coll).is_ok());
+    }
+
+    #[test]
+    fn injected_worlds_report_per_rank_outcomes() {
+        let cfg = TrainConfig { ranks: 2, ..TrainConfig::default() };
+        let plan = FaultPlan { rank: 1, at_step: 0, kind: FaultKind::Kill };
+        let out = run_local_world_injected(&cfg, plan, |_rank, mut role, inject| {
+            inject.before_step(0, &mut role.coll)?;
+            Ok("survived")
+        })
+        .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out[0].is_ok(), "rank 0 ran no collectives and must survive");
+        assert!(out[1].is_err(), "rank 1 was staged to die at step 0");
     }
 }

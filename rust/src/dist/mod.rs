@@ -34,17 +34,43 @@
 //! broadcasts its full training state (params, optimizer moments, step,
 //! gamma RNG) so `--resume` on rank 0 alone restores the whole world.
 //!
-//! Layer map: [`transport`] (rendezvous handshake + framed TCP),
-//! [`collective`] (rank-ordered reduce / broadcast / barrier),
-//! [`launch`] (in-process N-rank harness, per-process join, local spawn).
+//! ## Failure semantics
+//!
+//! A dead rank must not hang the world.  Every steady-state read and
+//! write is bounded by a configurable deadline (`dist_timeout_s` /
+//! `--dist-timeout-s`); a rank that is silent for a full deadline, or
+//! whose connection closes, surfaces as a structured
+//! [`DistError`] naming the rank, the collective op in flight and the
+//! elapsed wait.  Each rank's [`Collective`] runs a background heartbeat
+//! thread so *slow* is never mistaken for *dead*: beats keep idle
+//! connections warm while a rank computes, and stop flowing the instant
+//! its process dies.  When the hub (rank 0) loses a peer mid-collective
+//! it relays an ABORT frame to every surviving worker, so the whole world
+//! terminates within ~2 deadlines blaming the same rank.  Because a
+//! failed step never commits (gradients fold into scratch buffers;
+//! params/optimizer/step/γ-RNG advance only in `finish_step`), rank 0's
+//! surviving state is exactly the last completed step — rebuilding the
+//! world and re-broadcasting that state (`--on-rank-failure=restart`)
+//! resumes bit-identically to a run that never failed
+//! (`tests/dist_fault.rs`).
+//!
+//! Layer map: [`transport`] (rendezvous handshake, framed TCP,
+//! deadline-armed [`Link`]s, structured [`DistError`]),
+//! [`collective`] (rank-ordered reduce / broadcast / barrier, heartbeats,
+//! abort fan-out),
+//! [`launch`] (in-process N-rank harness, fault injection, per-process
+//! join, local spawn + [`WorkerRanks`] child reaping).
 
 pub mod collective;
 pub mod launch;
 pub mod transport;
 
 pub use collective::Collective;
-pub use launch::{establish, run_local_world, spawn_worker_ranks, DEFAULT_RENDEZVOUS};
-pub use transport::{Rendezvous, Transport, WorldSpec};
+pub use launch::{
+    establish, run_local_world, run_local_world_injected, spawn_worker_ranks,
+    FaultInjector, FaultKind, FaultPlan, WorkerRanks, DEFAULT_RENDEZVOUS, MAX_RESTARTS,
+};
+pub use transport::{DistError, Link, Rendezvous, Transport, WorldSpec};
 
 use crate::model::ParamStore;
 use anyhow::{ensure, Result};

@@ -13,11 +13,25 @@
 //! After the handshake every message is a length-prefixed frame
 //! (`op: u8, len: u32 LE, payload`); the collectives in
 //! [`super::collective`] are built from nothing but these frames.
+//!
+//! ## Failure semantics
+//!
+//! Steady-state traffic flows through [`Link`], which arms both socket
+//! timeouts with the configured deadline (`dist_timeout_s`).  A read that
+//! sees no frame for a full deadline, a closed connection, or a relayed
+//! ABORT all surface as a structured [`DistError`] naming the rank at
+//! fault, the collective op in flight and the elapsed wait — never an
+//! eternal hang.  [`op::HEARTBEAT`] frames (sent by the collective layer's
+//! beat thread, skipped transparently by [`Link::recv_into`]) keep a
+//! slow-but-alive peer from tripping the deadline; [`op::ABORT`] lets the
+//! hub fan a death notice out to every surviving worker within one
+//! deadline of detecting it.
 
 use crate::config::TrainConfig;
-use anyhow::{ensure, Context, Result};
-use std::io::{Read, Write};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Frame opcodes (one byte on the wire).
@@ -28,6 +42,11 @@ pub mod op {
     pub const BCAST: u8 = 4;
     pub const BARRIER_REQ: u8 = 5;
     pub const BARRIER_ACK: u8 = 6;
+    /// Empty liveness frame; invisible to collectives (skipped on read).
+    pub const HEARTBEAT: u8 = 7;
+    /// World-abort relay: payload names the dead rank and the op it
+    /// failed during; decoded into a [`super::DistError`] by the reader.
+    pub const ABORT: u8 = 8;
 }
 
 const MAGIC: u32 = 0x4244_4941; // "BDIA"
@@ -39,6 +58,56 @@ const MAX_FRAME: usize = 1 << 30;
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 /// How long the hub waits for the full world to join.
 pub const ACCEPT_TIMEOUT: Duration = Duration::from_secs(60);
+/// Handshake read bound: pointing `--rendezvous` at some other TCP
+/// service fails with a diagnostic instead of hanging forever.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+// ---------------------------------------------------------------------
+// structured failure
+// ---------------------------------------------------------------------
+
+/// A distributed-runtime fault: the world lost a rank (or a rank went
+/// silent past the deadline) during a collective.  This is the typed
+/// error every steady-state transport failure resolves to, so callers —
+/// the trainer, the session facade, the CLI's restart policy — can
+/// `downcast_ref::<DistError>()` through the `anyhow` context chain and
+/// react to *which rank* died rather than grepping strings.
+#[derive(Debug, Clone)]
+pub struct DistError {
+    /// The rank this failure is attributed to (the dead or silent peer;
+    /// for a relayed abort, the rank the hub reported dead).
+    pub rank: usize,
+    /// The collective op in flight ("reduce", "broadcast", "barrier",
+    /// "state-sync") when the failure surfaced.
+    pub op: &'static str,
+    /// How long this side waited before giving up.
+    pub elapsed: Duration,
+    /// Human-readable cause (deadline expiry, closed connection, relayed
+    /// world abort, …).
+    pub detail: String,
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "distributed world lost rank {} during '{}' after {:.2?}: {}",
+            self.rank, self.op, self.elapsed, self.detail
+        )
+    }
+}
+
+impl std::error::Error for DistError {}
+
+/// The root `io::ErrorKind` of an `anyhow` chain, if the cause is I/O.
+fn io_kind(e: &anyhow::Error) -> Option<ErrorKind> {
+    e.root_cause().downcast_ref::<std::io::Error>().map(std::io::Error::kind)
+}
+
+fn is_timeout(kind: ErrorKind) -> bool {
+    // SO_RCVTIMEO expiry is WouldBlock on unix, TimedOut on windows
+    matches!(kind, ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
 
 // ---------------------------------------------------------------------
 // byte helpers (shared with the collective layer and the state sync)
@@ -117,9 +186,11 @@ pub struct WorldSpec {
 
 impl WorldSpec {
     pub fn for_config(cfg: &TrainConfig) -> Self {
-        // per-host knobs (paths, threads, logging cadence) are excluded:
-        // they may legitimately differ across machines without breaking
-        // bit-determinism.  Everything that shapes the numbers is in.
+        // per-host knobs (paths, threads, logging cadence, and the
+        // operational fault knobs dist_timeout_s / on_rank_failure) are
+        // excluded: they may legitimately differ across machines without
+        // breaking bit-determinism.  Everything that shapes the numbers
+        // is in.
         let key = format!(
             "{}|{}|{:?}|{}|{}|{:?}|{}|{}|{}|{}|{:?}|{}|{}|{}|{}|{}",
             cfg.model,
@@ -254,6 +325,179 @@ pub(crate) fn expect_frame(stream: &mut TcpStream, opcode: u8) -> Result<Vec<u8>
     Ok(payload)
 }
 
+fn encode_abort(dead_rank: usize, during: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + during.len());
+    put_u32(&mut out, dead_rank as u32);
+    out.extend_from_slice(during.as_bytes());
+    out
+}
+
+fn decode_abort(payload: &[u8]) -> (usize, String) {
+    let mut pos = 0;
+    let rank = get_u32(payload, &mut pos).unwrap_or(0) as usize;
+    let during = String::from_utf8_lossy(&payload[pos.min(payload.len())..]);
+    (rank, during.into_owned())
+}
+
+// ---------------------------------------------------------------------
+// deadline-bounded steady-state link
+// ---------------------------------------------------------------------
+
+/// One post-handshake connection to a peer rank, with both socket
+/// timeouts armed to the configured deadline.  The write half is behind a
+/// mutex and shared with the collective layer's heartbeat thread (frames
+/// stay whole because every frame is written under the lock); the read
+/// half skips heartbeats, translates relayed ABORTs, and turns deadline
+/// expiry / closed connections into structured [`DistError`]s.
+pub struct Link {
+    reader: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    peer: usize,
+    deadline: Duration,
+}
+
+impl Link {
+    /// Arm `stream` with the steady-state deadline and split it into a
+    /// read half and a lockable write half.  A socket that cannot arm its
+    /// timeouts is refused outright — an unarmed read is the original
+    /// hang-forever bug.
+    pub fn new(stream: TcpStream, peer: usize, deadline: Duration) -> Result<Link> {
+        ensure!(
+            deadline > Duration::ZERO,
+            "collective deadline must be positive (dist_timeout_s)"
+        );
+        stream
+            .set_read_timeout(Some(deadline))
+            .with_context(|| format!("arming read deadline for rank {peer}"))?;
+        stream
+            .set_write_timeout(Some(deadline))
+            .with_context(|| format!("arming write deadline for rank {peer}"))?;
+        let writer = stream
+            .try_clone()
+            .with_context(|| format!("cloning stream to rank {peer} for writes"))?;
+        Ok(Link {
+            reader: stream,
+            writer: Arc::new(Mutex::new(writer)),
+            peer,
+            deadline,
+        })
+    }
+
+    /// The rank on the other end of this connection.
+    pub fn peer(&self) -> usize {
+        self.peer
+    }
+
+    /// The steady-state deadline both socket timeouts are armed with.
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+
+    /// Shared handle on the write half, for the heartbeat thread.
+    pub(crate) fn writer(&self) -> Arc<Mutex<TcpStream>> {
+        Arc::clone(&self.writer)
+    }
+
+    /// Write one frame, translating a stall past the deadline or a closed
+    /// connection into a [`DistError`] attributed to this peer.
+    pub fn send(&self, opcode: u8, payload: &[u8], during: &'static str) -> Result<()> {
+        let start = Instant::now();
+        let mut w = self
+            .writer
+            .lock()
+            .map_err(|_| anyhow::anyhow!("writer lock poisoned (rank {})", self.peer))?;
+        write_frame(&mut w, opcode, payload).map_err(|e| {
+            let detail = match io_kind(&e) {
+                Some(k) if is_timeout(k) => format!(
+                    "send stalled past the {:?} deadline (peer stopped \
+                     draining its socket)",
+                    self.deadline
+                ),
+                Some(
+                    ErrorKind::BrokenPipe
+                    | ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted,
+                ) => "connection closed (the rank's process is gone)".to_string(),
+                _ => format!("transport failure: {e:#}"),
+            };
+            anyhow::Error::new(DistError {
+                rank: self.peer,
+                op: during,
+                elapsed: start.elapsed(),
+                detail,
+            })
+        })
+    }
+
+    /// Read the next collective frame into `buf`, skipping heartbeats.
+    /// Deadline expiry, a closed connection, and a relayed ABORT all
+    /// resolve to a structured [`DistError`] — the caller can always name
+    /// the rank at fault and how long it waited.
+    pub fn recv_into(&mut self, buf: &mut Vec<u8>, during: &'static str) -> Result<u8> {
+        let start = Instant::now();
+        loop {
+            match read_frame_into(&mut self.reader, buf) {
+                // liveness only — each one restarts the kernel timeout, so
+                // a slow-but-alive peer never trips the deadline
+                Ok(op::HEARTBEAT) => continue,
+                Ok(op::ABORT) => {
+                    let (dead, what) = decode_abort(buf);
+                    return Err(anyhow::Error::new(DistError {
+                        rank: dead,
+                        op: during,
+                        elapsed: start.elapsed(),
+                        detail: format!(
+                            "world aborted: rank {dead} failed during '{what}'"
+                        ),
+                    }));
+                }
+                Ok(opcode) => return Ok(opcode),
+                Err(e) => {
+                    let detail = match io_kind(&e) {
+                        Some(k) if is_timeout(k) => format!(
+                            "no frame within the {:?} deadline (rank wedged or \
+                             network stalled; raise --dist-timeout-s if the \
+                             deadline is too tight)",
+                            self.deadline
+                        ),
+                        Some(ErrorKind::UnexpectedEof) => {
+                            "connection closed (the rank's process is gone)".to_string()
+                        }
+                        _ => format!("transport failure: {e:#}"),
+                    };
+                    return Err(anyhow::Error::new(DistError {
+                        rank: self.peer,
+                        op: during,
+                        elapsed: start.elapsed(),
+                        detail,
+                    }));
+                }
+            }
+        }
+    }
+
+    /// Best-effort abort relay: tell this peer that `dead_rank` failed
+    /// during `during`.  Errors are swallowed by design — the world is
+    /// already coming down and this peer may be gone too.
+    pub fn send_abort(&self, dead_rank: usize, during: &str) {
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = write_frame(&mut w, op::ABORT, &encode_abort(dead_rank, during));
+        }
+    }
+}
+
+/// Best-effort heartbeat on a shared write half.  Skipped (reported as
+/// alive) when the main thread holds the lock — its own in-flight frame
+/// proves liveness better than a heartbeat would.  Returns `false` once
+/// the peer is unreachable so the beat loop can stop early.
+pub(crate) fn try_heartbeat(writer: &Mutex<TcpStream>) -> bool {
+    match writer.try_lock() {
+        Ok(mut w) => write_frame(&mut w, op::HEARTBEAT, &[]).is_ok(),
+        Err(std::sync::TryLockError::WouldBlock) => true,
+        Err(std::sync::TryLockError::Poisoned(_)) => false,
+    }
+}
+
 // ---------------------------------------------------------------------
 // rendezvous (hub side) + connect (worker side)
 // ---------------------------------------------------------------------
@@ -284,9 +528,16 @@ impl Rendezvous {
     }
 
     /// Accept and verify `world - 1` workers; returns the hub transport
-    /// with per-rank streams.  Fails (rather than hangs) if the world does
-    /// not assemble within `timeout`.
-    pub fn accept(self, spec: &WorldSpec, timeout: Duration) -> Result<Transport> {
+    /// with one deadline-armed [`Link`] per rank.  Fails (rather than
+    /// hangs) if the world does not assemble within `timeout`, naming how
+    /// many ranks made it; a duplicate or out-of-range rank claim is a
+    /// structured error naming the offender, never a panic.
+    pub fn accept(
+        self,
+        spec: &WorldSpec,
+        timeout: Duration,
+        deadline: Duration,
+    ) -> Result<Transport> {
         ensure!(
             spec.world as usize == self.world,
             "rendezvous bound for world {}, spec says {}",
@@ -296,20 +547,20 @@ impl Rendezvous {
         if self.world == 1 {
             return Ok(Transport::Solo);
         }
-        let deadline = Instant::now() + timeout;
+        let give_up = Instant::now() + timeout;
         self.listener.set_nonblocking(true)?;
-        let mut peers: Vec<Option<TcpStream>> = (1..self.world).map(|_| None).collect();
+        let mut peers: Vec<Option<Link>> = (1..self.world).map(|_| None).collect();
         let mut joined = 0usize;
         while joined < self.world - 1 {
             ensure!(
-                Instant::now() < deadline,
+                Instant::now() < give_up,
                 "rendezvous timed out: {}/{} workers joined within {timeout:?}",
                 joined,
                 self.world - 1
             );
             let mut stream = match self.listener.accept() {
                 Ok((s, _)) => s,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(5));
                     continue;
                 }
@@ -317,7 +568,9 @@ impl Rendezvous {
             };
             stream.set_nonblocking(false)?;
             stream.set_nodelay(true).ok();
-            stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+            stream
+                .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+                .context("arming the handshake read timeout")?;
             let hello = Hello::decode(&expect_frame(&mut stream, op::HELLO)?)?;
             check_spec(&hello.spec, spec)?;
             let r = hello.rank as usize;
@@ -332,12 +585,17 @@ impl Rendezvous {
                 op::WELCOME,
                 &Hello { rank: 0, spec: *spec }.encode(),
             )?;
-            stream.set_read_timeout(None).ok();
-            peers[r - 1] = Some(stream);
+            peers[r - 1] = Some(Link::new(stream, r, deadline)?);
             joined += 1;
         }
-        let peers = peers.into_iter().map(|p| p.expect("all joined")).collect();
-        Ok(Transport::Hub { peers })
+        let mut links = Vec::with_capacity(self.world - 1);
+        for (i, p) in peers.into_iter().enumerate() {
+            match p {
+                Some(link) => links.push(link),
+                None => bail!("rendezvous bookkeeping lost rank {}", i + 1),
+            }
+        }
+        Ok(Transport::Hub { peers: links })
     }
 }
 
@@ -345,33 +603,34 @@ impl Rendezvous {
 pub enum Transport {
     /// world == 1: no sockets, collectives degenerate to local arithmetic.
     Solo,
-    /// rank 0: one stream per worker, indexed `rank - 1`.
-    Hub { peers: Vec<TcpStream> },
-    /// rank > 0: the single stream to rank 0.
-    Worker { hub: TcpStream },
+    /// rank 0: one deadline-armed link per worker, indexed `rank - 1`.
+    Hub { peers: Vec<Link> },
+    /// rank > 0: the single link to rank 0.
+    Worker { hub: Link },
 }
 
 impl Transport {
     /// Worker-side join: connect (retrying until `timeout`, so workers may
     /// start before the hub binds), introduce ourselves, verify the hub's
-    /// welcome against our own spec.
+    /// welcome against our own spec, then arm the steady-state `deadline`.
     pub fn connect(
         addr: SocketAddr,
         rank: usize,
         spec: &WorldSpec,
         timeout: Duration,
+        deadline: Duration,
     ) -> Result<Transport> {
         ensure!(
             rank >= 1 && (rank as u32) < spec.world,
             "worker rank must be in 1..{}, got {rank}",
             spec.world
         );
-        let deadline = Instant::now() + timeout;
+        let give_up = Instant::now() + timeout;
         let mut stream = loop {
             match TcpStream::connect_timeout(&addr, Duration::from_secs(2)) {
                 Ok(s) => break s,
                 Err(e) => {
-                    if Instant::now() >= deadline {
+                    if Instant::now() >= give_up {
                         return Err(e).with_context(|| {
                             format!("rank {rank}: rendezvous {addr} unreachable for {timeout:?}")
                         });
@@ -386,23 +645,24 @@ impl Transport {
             op::HELLO,
             &Hello { rank: rank as u32, spec: *spec }.encode(),
         )?;
-        // bound the handshake read so pointing --rendezvous at some other
-        // TCP service fails with a diagnostic instead of hanging forever
-        stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("arming the handshake read timeout")?;
         let welcome = expect_frame(&mut stream, op::WELCOME).with_context(|| {
             format!("no welcome from {addr} — is that really a bdia rendezvous?")
         })?;
         let welcome = Hello::decode(&welcome)?;
         ensure!(welcome.rank == 0, "welcome did not come from rank 0");
         check_spec(&welcome.spec, spec)?;
-        stream.set_read_timeout(None).ok();
-        Ok(Transport::Worker { hub: stream })
+        Ok(Transport::Worker { hub: Link::new(stream, 0, deadline)? })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const DL: Duration = Duration::from_secs(30);
 
     fn spec(world: u32) -> WorldSpec {
         let cfg = TrainConfig { ranks: world as usize, ..TrainConfig::default() };
@@ -416,6 +676,8 @@ mod tests {
             threads: 7,
             ckpt_dir: "elsewhere".into(),
             log_every: 999,
+            dist_timeout_s: 2.5,
+            on_rank_failure: crate::config::RankFailurePolicy::Restart,
             ..TrainConfig::default()
         });
         assert_eq!(a, b, "per-host knobs must not change the world digest");
@@ -437,13 +699,15 @@ mod tests {
         let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
         let addr = rdv.addr();
         let worker = std::thread::spawn(move || {
-            Transport::connect(addr, 1, &spec(2), CONNECT_TIMEOUT).unwrap()
+            Transport::connect(addr, 1, &spec(2), CONNECT_TIMEOUT, DL).unwrap()
         });
-        let hub = rdv.accept(&s, ACCEPT_TIMEOUT).unwrap();
+        let hub = rdv.accept(&s, ACCEPT_TIMEOUT, DL).unwrap();
         let Transport::Hub { peers } = &hub else {
             panic!("rank 0 must end up with the hub transport")
         };
         assert_eq!(peers.len(), 1);
+        assert_eq!(peers[0].peer(), 1);
+        assert_eq!(peers[0].deadline(), DL);
         assert!(matches!(worker.join().unwrap(), Transport::Worker { .. }));
     }
 
@@ -458,9 +722,9 @@ mod tests {
                 lr: 3e-4, // semantically load-bearing difference
                 ..TrainConfig::default()
             });
-            Transport::connect(addr, 1, &bad, CONNECT_TIMEOUT)
+            Transport::connect(addr, 1, &bad, CONNECT_TIMEOUT, DL)
         });
-        let hub = rdv.accept(&s, Duration::from_secs(10));
+        let hub = rdv.accept(&s, Duration::from_secs(10), DL);
         assert!(hub.is_err(), "hub must reject a mismatched config digest");
         assert!(worker.join().unwrap().is_err());
     }
@@ -471,9 +735,137 @@ mod tests {
         let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
         let addr = rdv.addr();
         // rank outside 1..world is rejected on the worker side already
-        let err = Transport::connect(addr, 5, &s, Duration::from_secs(2));
+        let err = Transport::connect(addr, 5, &s, Duration::from_secs(2), DL);
         assert!(err.is_err());
         drop(rdv);
+    }
+
+    #[test]
+    fn out_of_range_rank_claim_is_rejected_by_the_hub() {
+        let s = spec(2);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+        let addr = rdv.addr();
+        let rogue = std::thread::spawn(move || {
+            // a raw client lying about its rank in an otherwise valid hello
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let hello = Hello { rank: 9, spec: spec(2) }.encode();
+            write_frame(&mut stream, op::HELLO, &hello).unwrap();
+            read_frame(&mut stream)
+        });
+        let err = rdv.accept(&s, Duration::from_secs(10), DL).unwrap_err();
+        assert!(format!("{err:#}").contains("rank 9"), "{err:#}");
+        let _ = rogue.join().unwrap();
+    }
+
+    #[test]
+    fn duplicate_rank_is_a_structured_error_not_a_panic() {
+        let s = spec(3);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 3).unwrap();
+        let addr = rdv.addr();
+        let first = std::thread::spawn(move || {
+            Transport::connect(addr, 1, &spec(3), CONNECT_TIMEOUT, DL)
+        });
+        let second = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            Transport::connect(addr, 1, &spec(3), CONNECT_TIMEOUT, DL)
+        });
+        let err = rdv.accept(&s, Duration::from_secs(10), DL).unwrap_err();
+        assert!(format!("{err:#}").contains("rank 1"), "{err:#}");
+        // whichever worker handshook first holds a link to a dead hub; the
+        // other got an error — neither may hang
+        let _ = first.join().unwrap();
+        let _ = second.join().unwrap();
+    }
+
+    #[test]
+    fn silent_peer_times_out_with_a_structured_dist_error() {
+        let s = spec(2);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+        let addr = rdv.addr();
+        let deadline = Duration::from_millis(200);
+        let worker = std::thread::spawn(move || {
+            let t = Transport::connect(addr, 1, &spec(2), CONNECT_TIMEOUT, deadline)
+                .unwrap();
+            // joined, then silent (no heartbeat thread on a raw transport)
+            std::thread::sleep(Duration::from_millis(800));
+            drop(t);
+        });
+        let hub = rdv.accept(&s, ACCEPT_TIMEOUT, deadline).unwrap();
+        let Transport::Hub { mut peers } = hub else { panic!("expected hub") };
+        let mut buf = Vec::new();
+        let err = peers[0].recv_into(&mut buf, "reduce").unwrap_err();
+        let de = err.downcast_ref::<DistError>().expect("DistError in the chain");
+        assert_eq!((de.rank, de.op), (1, "reduce"));
+        assert!(de.elapsed >= deadline, "gave up early: {:?}", de.elapsed);
+        assert!(err.to_string().contains("rank 1"), "{err:#}");
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn dead_peer_is_detected_via_eof_before_the_deadline() {
+        let s = spec(2);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+        let addr = rdv.addr();
+        let worker = std::thread::spawn(move || {
+            // connect, then die immediately
+            drop(Transport::connect(addr, 1, &spec(2), CONNECT_TIMEOUT, DL).unwrap());
+        });
+        let hub = rdv.accept(&s, ACCEPT_TIMEOUT, DL).unwrap();
+        worker.join().unwrap();
+        let Transport::Hub { mut peers } = hub else { panic!("expected hub") };
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        let err = peers[0].recv_into(&mut buf, "broadcast").unwrap_err();
+        let de = err.downcast_ref::<DistError>().expect("DistError in the chain");
+        assert_eq!(de.rank, 1);
+        assert!(de.detail.contains("closed"), "{}", de.detail);
+        assert!(t0.elapsed() < DL, "EOF detection must not wait out the deadline");
+    }
+
+    #[test]
+    fn heartbeats_are_invisible_to_collective_reads() {
+        let s = spec(2);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+        let addr = rdv.addr();
+        let worker = std::thread::spawn(move || {
+            let t = Transport::connect(addr, 1, &spec(2), CONNECT_TIMEOUT, DL).unwrap();
+            let Transport::Worker { hub } = t else { panic!("expected worker") };
+            for _ in 0..3 {
+                hub.send(op::HEARTBEAT, &[], "beat").unwrap();
+            }
+            hub.send(op::REDUCE, &[1, 2, 3], "reduce").unwrap();
+        });
+        let hub = rdv.accept(&s, ACCEPT_TIMEOUT, DL).unwrap();
+        let Transport::Hub { mut peers } = hub else { panic!("expected hub") };
+        let mut buf = Vec::new();
+        let got = peers[0].recv_into(&mut buf, "reduce").unwrap();
+        assert_eq!((got, buf.as_slice()), (op::REDUCE, &[1u8, 2, 3][..]));
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn abort_relay_names_the_dead_rank_and_op() {
+        let s = spec(3);
+        let rdv = Rendezvous::bind("127.0.0.1:0", 3).unwrap();
+        let addr = rdv.addr();
+        let bystander = std::thread::spawn(move || {
+            let t = Transport::connect(addr, 2, &spec(3), CONNECT_TIMEOUT, DL).unwrap();
+            let Transport::Worker { mut hub } = t else { panic!("expected worker") };
+            let mut buf = Vec::new();
+            hub.recv_into(&mut buf, "broadcast").unwrap_err()
+        });
+        let victim = std::thread::spawn(move || {
+            Transport::connect(addr, 1, &spec(3), CONNECT_TIMEOUT, DL).unwrap()
+        });
+        let hub = rdv.accept(&s, ACCEPT_TIMEOUT, DL).unwrap();
+        let Transport::Hub { peers } = &hub else { panic!("expected hub") };
+        // the hub decided rank 1 is dead mid-reduce; rank 2 must learn it
+        peers[1].send_abort(1, "reduce");
+        let err = bystander.join().unwrap();
+        let de = err.downcast_ref::<DistError>().expect("DistError in the chain");
+        assert_eq!((de.rank, de.op), (1, "broadcast"));
+        assert!(de.detail.contains("'reduce'"), "{}", de.detail);
+        drop(victim.join().unwrap());
     }
 
     #[test]
@@ -504,5 +896,11 @@ mod tests {
         for (a, b) in xs.iter().zip(&out) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn abort_payload_roundtrip() {
+        let (rank, during) = decode_abort(&encode_abort(3, "state-sync"));
+        assert_eq!((rank, during.as_str()), (3, "state-sync"));
     }
 }

@@ -27,9 +27,11 @@
 
 use anyhow::{bail, ensure, Context, Result};
 use bdia::api::{
-    suggest, EvalOpts, ModelId, ServeBenchOpts, ServeOpts, Session,
+    suggest, ApiError, EvalOpts, ModelId, ServeBenchOpts, ServeOpts, Session,
     SessionBuilder, StdoutSink, TrainOpts,
 };
+use bdia::config::RankFailurePolicy;
+use bdia::dist::{Rendezvous, WorkerRanks, MAX_RESTARTS};
 use bdia::metrics::fmt_bytes;
 use bdia::runtime::BackendKind;
 use std::collections::BTreeMap;
@@ -73,6 +75,8 @@ const TRAIN_FLAGS: &[Flag] = &[
     v("ranks"),
     v("rank"),
     v("rendezvous"),
+    v("dist-timeout-s"),
+    v("on-rank-failure"),
 ];
 const EVAL_FLAGS: &[Flag] = &[
     v("config"),
@@ -339,6 +343,12 @@ fn cmd_train(p: &Parsed) -> Result<()> {
     if let Some(a) = p.flags.get("rendezvous") {
         b = b.rendezvous(a);
     }
+    if let Some(t) = flag_val::<f64>(&p.flags, "dist-timeout-s")? {
+        b = b.dist_timeout_s(t);
+    }
+    if let Some(pol) = p.flags.get("on-rank-failure") {
+        b = b.on_rank_failure(RankFailurePolicy::parse(pol)?);
+    }
     let mut session = b.build()?;
     if let Some(path) = p.flags.get("resume") {
         // in a multi-rank world only rank 0 needs the file: its restored
@@ -353,12 +363,13 @@ fn cmd_train(p: &Parsed) -> Result<()> {
     // rendezvous here (ephemeral port unless --rendezvous pins one), then
     // re-execs this invocation once per worker rank and proceeds as rank 0
     let world = session.config().ranks;
+    let spawn_mode = world > 1 && rank_flag.is_none();
+    let bind = p.flags.get("rendezvous").map_or("127.0.0.1:0", String::as_str);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut children = WorkerRanks::default();
-    if world > 1 && rank_flag.is_none() {
-        let bind = p.flags.get("rendezvous").map_or("127.0.0.1:0", String::as_str);
-        let rdv = bdia::dist::Rendezvous::bind(bind, world)?;
+    if spawn_mode {
+        let rdv = Rendezvous::bind(bind, world)?;
         let addr = rdv.addr();
-        let argv: Vec<String> = std::env::args().skip(1).collect();
         children.0 = bdia::dist::spawn_worker_ranks(addr, world, &argv)?;
         println!("dist: world size {world}, rendezvous {addr}, spawned ranks 1..{world}");
         session.connect_dist(Some(rdv))?;
@@ -407,10 +418,42 @@ fn cmd_train(p: &Parsed) -> Result<()> {
     // the CSV log is rank 0's artifact (workers would race on the file)
     let csv_out = (my_rank == 0)
         .then(|| PathBuf::from("results").join(format!("{run_name}.csv")));
-    let report = session.train(&TrainOpts {
-        run_name: Some(run_name),
-        csv_out: csv_out.clone(),
-    })?;
+    let opts = TrainOpts { run_name: Some(run_name), csv_out: csv_out.clone() };
+
+    // a lost rank surfaces as ApiError::Dist within ~2 deadlines (never a
+    // hang); under --on-rank-failure=restart the world is rebuilt and
+    // training resumes from the last completed step — bit-identically,
+    // because a failed step never commits and the fresh world re-receives
+    // rank 0's state at attach time
+    let policy = cfg.on_rank_failure;
+    let mut restarts = 0usize;
+    let report = loop {
+        match session.train(&opts) {
+            Ok(report) => break report,
+            Err(ApiError::Dist(m))
+                if policy == RankFailurePolicy::Restart && restarts < MAX_RESTARTS =>
+            {
+                restarts += 1;
+                eprintln!(
+                    "dist: {m}; restarting world ({restarts}/{MAX_RESTARTS}) \
+                     from step {}",
+                    session.step()
+                );
+                session.detach_dist();
+                if spawn_mode {
+                    children.discard();
+                    let rdv = Rendezvous::bind(bind, world)?;
+                    let addr = rdv.addr();
+                    children.0 = bdia::dist::spawn_worker_ranks(addr, world, &argv)?;
+                    eprintln!("dist: respawned ranks 1..{world} at {addr}");
+                    session.connect_dist(Some(rdv))?;
+                }
+                // manual mode: the next train() re-runs the rendezvous
+                // itself; restarted workers reconnect the same way
+            }
+            Err(e) => return Err(e.into()),
+        }
+    };
     if my_rank == 0 {
         if let Some(r) = report.log.last() {
             println!(
@@ -428,34 +471,6 @@ fn cmd_train(p: &Parsed) -> Result<()> {
     }
     children.reap()?;
     Ok(())
-}
-
-/// Worker-rank child processes of the single-command local mode.  Reaped
-/// explicitly on success; the `Drop` kills any still-running workers so an
-/// error on rank 0's path (`?` anywhere above) cannot leak orphans that
-/// would sit in connect retries or blocked collectives.
-#[derive(Default)]
-struct WorkerRanks(Vec<std::process::Child>);
-
-impl WorkerRanks {
-    fn reap(mut self) -> Result<()> {
-        for (i, mut child) in self.0.drain(..).enumerate() {
-            let status = child
-                .wait()
-                .with_context(|| format!("waiting on worker rank {}", i + 1))?;
-            ensure!(status.success(), "worker rank {} exited with {status}", i + 1);
-        }
-        Ok(())
-    }
-}
-
-impl Drop for WorkerRanks {
-    fn drop(&mut self) {
-        for child in &mut self.0 {
-            let _ = child.kill();
-            let _ = child.wait();
-        }
-    }
 }
 
 fn cmd_eval(p: &Parsed) -> Result<()> {
@@ -646,7 +661,8 @@ fn print_help() {
          USAGE:\n  bdia train --config configs/<f>.json \
          [--backend native|pjrt] [--threads N] [--save-every K] \
          [--ckpt-dir D] [--resume <ckpt>] [--ranks N [--rank k \
-         --rendezvous host:port]] [key=value ...]\n  \
+         --rendezvous host:port] [--dist-timeout-s S] \
+         [--on-rank-failure abort|restart]] [key=value ...]\n  \
          bdia eval  --model <bundle> --gamma <g> [--ckpt <file>]\n  \
          bdia serve --model <bundle> --ckpt <file> [--port P] [--workers N] \
          [--threads N] [--batch-window-us U]\n  \
@@ -666,7 +682,7 @@ fn print_help() {
          mode (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, \
          lr, optimizer (adam|setadam), seed, eval_every, eval_batches, \
          train_examples, val_examples, artifacts_dir, save_every, ckpt_dir, \
-         threads, ranks, grad_accum\n\n\
+         threads, ranks, grad_accum, dist_timeout_s, on_rank_failure\n\n\
          Threads: the native backend runs on a deterministic kernel pool \
          (row-partitioned parallelism only) — losses, gradients and served \
          bytes are bit-identical at any --threads value; 0 = auto.\n\
@@ -675,7 +691,11 @@ fn print_help() {
          --rendezvous host:port each rank is launched by hand (rank 0 \
          binds, workers connect).  Gradients all-reduce in a fixed rank \
          order, so losses/params are bit-identical at ANY world size \
-         (grad_accum fixed); rank 0 owns eval, logs and checkpoints.\n\
+         (grad_accum fixed); rank 0 owns eval, logs and checkpoints.  A \
+         rank silent past --dist-timeout-s (heartbeats cover slow-but-alive \
+         ranks) fails the world with an error naming it — no hang; \
+         --on-rank-failure=restart rebuilds the world and resumes \
+         bit-exactly from the last completed step.\n\
          Checkpoints: `train save_every=K` writes <run>-step<N>.ckpt + \
          <run>-latest.ckpt under ckpt_dir (versioned, CRC-checked, bit-exact \
          round trip); `eval --ckpt` / `serve --ckpt` load them.\n\

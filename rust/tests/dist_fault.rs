@@ -1,0 +1,420 @@
+//! Fault tolerance: a dead rank must not hang the world.
+//!
+//! These tests stage rank deaths inside full in-process worlds (via
+//! [`bdia::dist::run_local_world_injected`]) and assert the three-part
+//! contract of the failure semantics:
+//!
+//! 1. **No hang** — every survivor of a killed or wedged rank terminates
+//!    with a structured [`DistError`] naming the dead rank, within two
+//!    deadlines of the death (a watchdog thread enforces the bound; if the
+//!    old eternal-block behaviour regresses, the watchdog panics instead
+//!    of the test runner freezing).
+//! 2. **No false positives** — a rank that is merely *slow* keeps
+//!    heartbeating, so a delay much longer than the deadline aborts
+//!    nothing and changes no bits.
+//! 3. **Bit-exact recovery** — after a rank dies, rebuilding the world and
+//!    re-attaching (the `--on-rank-failure=restart` path) resumes from
+//!    rank 0's last completed step and finishes bit-identical to a run
+//!    that never failed, for all three model families.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use bdia::config::{TrainConfig, TrainMode};
+use bdia::coordinator::Trainer;
+use bdia::data::make_dataset;
+use bdia::dist::transport::{ACCEPT_TIMEOUT, CONNECT_TIMEOUT};
+use bdia::dist::{
+    run_local_world_injected, Collective, DistError, DistRole, FaultInjector,
+    FaultKind, FaultPlan, Rendezvous, Transport, WorldSpec,
+};
+
+// ---------------------------------------------------------------------
+// harness
+// ---------------------------------------------------------------------
+
+/// Run `f` on a helper thread and panic if it has not finished within
+/// `limit`.  This is the no-hang oracle: a regression back to unbounded
+/// blocking reads fails loudly here instead of freezing the test binary.
+fn with_watchdog<R>(limit: Duration, f: impl FnOnce() -> R + Send + 'static) -> R
+where
+    R: Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    let body = std::thread::spawn(move || {
+        let r = f();
+        let _ = tx.send(());
+        r
+    });
+    match rx.recv_timeout(limit) {
+        Ok(()) => body.join().expect("test body panicked"),
+        Err(mpsc::RecvTimeoutError::Disconnected) => match body.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        },
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("distributed world hung — watchdog fired after {limit:?}")
+        }
+    }
+}
+
+/// A config whose world runs raw collectives (no trainer): only the dist
+/// shape and the deadline matter.
+fn fault_cfg(ranks: usize, dist_timeout_s: f64) -> TrainConfig {
+    TrainConfig { ranks, dist_timeout_s, ..TrainConfig::default() }
+}
+
+/// Training config for the recovery tests.  `grad_accum` is pinned (the
+/// `0 = auto` default resolves to the world size, which would change the
+/// global batch between the reference and the world run).
+fn train_cfg(
+    model: &str,
+    dataset: &str,
+    ranks: usize,
+    steps: usize,
+    dist_timeout_s: f64,
+) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        dataset: dataset.into(),
+        mode: TrainMode::BdiaReversible,
+        steps,
+        eval_every: 0,
+        log_every: 1,
+        train_examples: 64,
+        val_examples: 8,
+        seed: 7,
+        ranks,
+        grad_accum: 2,
+        dist_timeout_s,
+        ..TrainConfig::default()
+    }
+}
+
+fn bits_of_store(ps: &bdia::model::ParamStore) -> Vec<u32> {
+    let mut out = Vec::new();
+    for insts in ps.groups.values() {
+        for inst in insts {
+            for t in inst {
+                out.extend(t.data().iter().map(|v| v.to_bits()));
+            }
+        }
+    }
+    out
+}
+
+/// Final parameter bits of a plain single-process run (the reference the
+/// recovery tests must hit exactly).
+fn plain_param_bits(cfg: &TrainConfig) -> Vec<u32> {
+    let cfg = TrainConfig { ranks: 1, ..cfg.clone() };
+    let mut tr = Trainer::new(cfg.clone()).expect("trainer");
+    let ds = make_dataset(&cfg, &tr.rt.manifest.dims.clone(), tr.family)
+        .expect("dataset");
+    while tr.step() < cfg.steps {
+        tr.train_step_global(ds.as_ref()).expect("train_step_global");
+    }
+    bits_of_store(&tr.params)
+}
+
+/// Drive a trainer inside a world, firing the injector at the top of each
+/// global step (the same shape the CLI's training loop has).
+fn drive_injected(
+    cfg: &TrainConfig,
+    role: DistRole,
+    inject: &FaultInjector,
+) -> anyhow::Result<Vec<u32>> {
+    let mut tr = Trainer::new(cfg.clone())?;
+    tr.attach_dist(role)?;
+    let ds = make_dataset(cfg, &tr.rt.manifest.dims.clone(), tr.family)?;
+    while tr.step() < cfg.steps {
+        let step = tr.step();
+        if let Some(coll) = tr.collective_mut() {
+            inject.before_step(step, coll)?;
+        }
+        tr.train_step_global(ds.as_ref())?;
+    }
+    Ok(bits_of_store(&tr.params))
+}
+
+fn dist_error_of(e: &anyhow::Error) -> &DistError {
+    e.downcast_ref::<DistError>()
+        .unwrap_or_else(|| panic!("expected a DistError, got: {e:#}"))
+}
+
+// ---------------------------------------------------------------------
+// no-hang: killed and wedged ranks
+// ---------------------------------------------------------------------
+
+/// Rank 1 of 3 dies mid-run.  Rank 0 must see the loss directly (EOF on
+/// the dead rank's link), rank 2 must learn it via the hub's ABORT relay,
+/// and both must error within two deadlines of the death — nobody hangs.
+#[test]
+fn killed_rank_fails_every_survivor_within_two_deadlines() {
+    let deadline = Duration::from_millis(800);
+    with_watchdog(Duration::from_secs(30), move || {
+        let cfg = fault_cfg(3, deadline.as_secs_f64());
+        let plan = FaultPlan { rank: 1, at_step: 1, kind: FaultKind::Kill };
+        let killed_at = Arc::new(Mutex::new(None::<Instant>));
+        let detected = Arc::new(Mutex::new(Vec::<(usize, Instant)>::new()));
+        let (ka, det) = (Arc::clone(&killed_at), Arc::clone(&detected));
+        let results = run_local_world_injected(&cfg, plan, move |rank, mut role, inject| {
+            let mut acc = vec![0f32; 4];
+            for step in 0..4 {
+                if let Err(e) = inject.before_step(step, &mut role.coll) {
+                    *ka.lock().unwrap() = Some(Instant::now());
+                    return Err(e);
+                }
+                let contrib = vec![rank as f32; 4];
+                let r = role
+                    .coll
+                    .reduce_sum_rank_ordered(&mut acc, &contrib)
+                    .and_then(|()| role.coll.broadcast(&mut acc));
+                if let Err(e) = r {
+                    det.lock().unwrap().push((rank, Instant::now()));
+                    return Err(e);
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+
+        assert_eq!(results.len(), 3);
+        assert!(results[1].is_err(), "rank 1 was staged to die");
+        for survivor in [0usize, 2] {
+            let err = results[survivor].as_ref().unwrap_err();
+            let de = dist_error_of(err);
+            assert_eq!(
+                de.rank, 1,
+                "rank {survivor} must blame rank 1, said: {de}"
+            );
+        }
+        let killed = killed_at.lock().unwrap().expect("rank 1 recorded its death");
+        let detected = detected.lock().unwrap();
+        assert_eq!(detected.len(), 2, "both survivors must detect the death");
+        for &(rank, when) in detected.iter() {
+            let lag = when.duration_since(killed);
+            assert!(
+                lag <= 2 * deadline,
+                "rank {rank} took {lag:?} to notice (bound: {:?})",
+                2 * deadline
+            );
+        }
+    });
+}
+
+/// A wedged rank — alive but silent, heartbeats halted — trips the
+/// deadline: the hub's wait is bounded and the error says so.
+#[test]
+fn wedged_rank_trips_the_deadline_with_a_structured_error() {
+    with_watchdog(Duration::from_secs(30), || {
+        let cfg = fault_cfg(2, 0.5);
+        let plan = FaultPlan {
+            rank: 1,
+            at_step: 0,
+            kind: FaultKind::Wedge(Duration::from_millis(1500)),
+        };
+        let results = run_local_world_injected(&cfg, plan, |_rank, mut role, inject| {
+            let mut acc = vec![0f32; 2];
+            inject.before_step(0, &mut role.coll)?;
+            role.coll.reduce_sum_rank_ordered(&mut acc, &[1.0, 2.0])?;
+            role.coll.broadcast(&mut acc)?;
+            Ok(())
+        })
+        .unwrap();
+
+        assert!(results[1].is_err(), "the wedged rank dies by design");
+        let de = dist_error_of(results[0].as_ref().unwrap_err());
+        assert_eq!(de.rank, 1, "{de}");
+        assert_eq!(de.op, "reduce", "{de}");
+        assert!(
+            de.elapsed >= Duration::from_millis(400),
+            "hub gave up before the deadline: {de}"
+        );
+        assert!(de.detail.contains("deadline"), "{de}");
+    });
+}
+
+/// Killing the hub itself must not strand the workers: their next
+/// collective sees the closed connection and blames rank 0.
+#[test]
+fn dead_hub_fails_the_workers_not_hangs_them() {
+    with_watchdog(Duration::from_secs(30), || {
+        let cfg = fault_cfg(2, 0.8);
+        let plan = FaultPlan { rank: 0, at_step: 1, kind: FaultKind::Kill };
+        let results = run_local_world_injected(&cfg, plan, |rank, mut role, inject| {
+            let mut acc = vec![0f32; 2];
+            for step in 0..3 {
+                inject.before_step(step, &mut role.coll)?;
+                acc.fill(0.0);
+                role.coll.reduce_sum_rank_ordered(&mut acc, &[rank as f32; 2])?;
+                role.coll.broadcast(&mut acc)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+
+        assert!(results[0].is_err(), "rank 0 was staged to die");
+        let de = dist_error_of(results[1].as_ref().unwrap_err());
+        assert_eq!(de.rank, 0, "the worker must blame the hub: {de}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// no false positives: slow is not dead
+// ---------------------------------------------------------------------
+
+/// A 1.2 s stall against a 0.4 s deadline: heartbeats keep flowing, so the
+/// world absorbs the delay with no abort and the run stays bit-identical
+/// to an undelayed single-process reference.
+#[test]
+fn delayed_rank_is_not_mistaken_for_dead_and_bits_are_unchanged() {
+    let bits = with_watchdog(Duration::from_secs(120), || {
+        let cfg = train_cfg("smoke_gpt", "tiny_corpus", 2, 3, 0.4);
+        let plan = FaultPlan {
+            rank: 1,
+            at_step: 1,
+            kind: FaultKind::Delay(Duration::from_millis(1200)),
+        };
+        let results = run_local_world_injected(&cfg, plan, |_rank, role, inject| {
+            drive_injected(&cfg, role, &inject)
+        })
+        .unwrap();
+        let per_rank: Vec<Vec<u32>> = results
+            .into_iter()
+            .map(|r| r.expect("a delayed rank must not abort the world"))
+            .collect();
+        assert_eq!(per_rank[0], per_rank[1], "world fell out of lockstep");
+        (cfg, per_rank.into_iter().next().unwrap())
+    });
+    let (cfg, world_bits) = bits;
+    assert_eq!(
+        world_bits,
+        plain_param_bits(&cfg),
+        "delay changed the numbers"
+    );
+}
+
+// ---------------------------------------------------------------------
+// rendezvous stragglers
+// ---------------------------------------------------------------------
+
+/// A world that never fully assembles fails the hub with a progress count
+/// instead of blocking in accept forever; the one worker that did join is
+/// released, not stranded.
+#[test]
+fn straggler_rendezvous_fails_cleanly_naming_progress() {
+    with_watchdog(Duration::from_secs(30), || {
+        let cfg = fault_cfg(3, 1.0);
+        let spec = WorldSpec::for_config(&cfg);
+        let deadline = cfg.dist_deadline();
+        let rdv = Rendezvous::bind("127.0.0.1:0", 3).unwrap();
+        let addr = rdv.addr();
+        // only rank 1 shows up; rank 2 never will
+        let worker = std::thread::spawn(move || {
+            Transport::connect(addr, 1, &spec, CONNECT_TIMEOUT, deadline)
+        });
+        let err = rdv
+            .accept(&spec, Duration::from_millis(600), deadline)
+            .map(|_| ())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1/2"), "no progress count in: {msg}");
+        assert!(msg.contains("timed out"), "{msg}");
+        // the joined worker got its WELCOME before the hub gave up; either
+        // way its connect attempt must have terminated
+        let _ = worker.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------
+// bit-exact recovery (the --on-rank-failure=restart path)
+// ---------------------------------------------------------------------
+
+/// The restart story end to end, for every model family: a 2-rank world
+/// loses rank 1 mid-run, rank 0 detaches (keeping the state of its last
+/// completed step), a fresh world assembles, `attach_dist` re-broadcasts
+/// rank 0's state, and the run finishes **bit-identical** to a plain
+/// single-process run that never saw a failure.
+#[test]
+fn restart_recovery_is_bit_exact_across_families() {
+    for (model, dataset) in [
+        ("smoke_vit", "synth_cifar10"),
+        ("smoke_gpt", "tiny_corpus"),
+        ("smoke_encdec", "synth_translation"),
+    ] {
+        let (generations, final_step, world_bits, want) =
+            with_watchdog(Duration::from_secs(180), move || {
+                let cfg = train_cfg(model, dataset, 2, 3, 1.0);
+                let want = plain_param_bits(&cfg);
+                let spec = WorldSpec::for_config(&cfg);
+                let mut tr0 = Trainer::new(cfg.clone()).unwrap();
+                let mut fault = Some(FaultPlan {
+                    rank: 1,
+                    at_step: 1,
+                    kind: FaultKind::Kill,
+                });
+                let mut generations = 0usize;
+                while tr0.step() < cfg.steps {
+                    generations += 1;
+                    assert!(generations <= 3, "{model}: world kept dying");
+                    let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
+                    let addr = rdv.addr();
+                    let plan = fault.take();
+                    let worker = std::thread::spawn({
+                        let cfg = cfg.clone();
+                        move || -> anyhow::Result<()> {
+                            let t = Transport::connect(
+                                addr,
+                                1,
+                                &spec,
+                                CONNECT_TIMEOUT,
+                                cfg.dist_deadline(),
+                            )?;
+                            let coll = Collective::new(t, 1, 2)?;
+                            let inject = FaultInjector::new(plan, 1);
+                            let role = DistRole { rank: 1, world: 2, coll };
+                            drive_injected(&cfg, role, &inject)?;
+                            Ok(())
+                        }
+                    });
+                    let run0 = (|| -> anyhow::Result<()> {
+                        let hub =
+                            rdv.accept(&spec, ACCEPT_TIMEOUT, cfg.dist_deadline())?;
+                        let coll = Collective::new(hub, 0, 2)?;
+                        tr0.attach_dist(DistRole { rank: 0, world: 2, coll })?;
+                        let ds = make_dataset(
+                            &cfg,
+                            &tr0.rt.manifest.dims.clone(),
+                            tr0.family,
+                        )?;
+                        while tr0.step() < cfg.steps {
+                            tr0.train_step_global(ds.as_ref())?;
+                        }
+                        Ok(())
+                    })();
+                    let _ = worker.join().unwrap();
+                    match run0 {
+                        Ok(()) => {}
+                        Err(e) => {
+                            let de = dist_error_of(&e);
+                            assert_eq!(de.rank, 1, "{model}: {de}");
+                            // rank 0 keeps the last *completed* step; the
+                            // next generation re-broadcasts it at attach
+                            tr0.detach_dist();
+                        }
+                    }
+                }
+                (generations, tr0.step(), bits_of_store(&tr0.params), want)
+            });
+        assert_eq!(
+            generations, 2,
+            "{model}: expected exactly one death + one clean restart"
+        );
+        assert_eq!(final_step, 3, "{model}: recovered run must reach step 3");
+        assert_eq!(
+            world_bits, want,
+            "{model}: recovery is not bit-exact vs the uninterrupted run"
+        );
+    }
+}

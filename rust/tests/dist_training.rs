@@ -287,17 +287,20 @@ fn mismatched_config_fails_rendezvous() {
     let bad = TrainConfig { lr: 3e-4, ..good.clone() };
     let rdv = Rendezvous::bind("127.0.0.1:0", 2).unwrap();
     let addr = rdv.addr();
+    let deadline = good.dist_deadline();
     let worker = std::thread::spawn(move || {
         Transport::connect(
             addr,
             1,
             &WorldSpec::for_config(&bad),
             std::time::Duration::from_secs(10),
+            deadline,
         )
     });
     let hub = rdv.accept(
         &WorldSpec::for_config(&good),
         std::time::Duration::from_secs(10),
+        deadline,
     );
     assert!(hub.is_err(), "hub accepted a mismatched config");
     assert!(worker.join().unwrap().is_err());
