@@ -19,6 +19,7 @@
 //!   ├─ runtime::Runtime                                  (backends)
 //!   ├─ checkpoint                                        (persistence)
 //!   ├─ serve::Server                                     (deployment)
+//!   ├─ fleet::Router (serve_fleet/FleetHandle)           (sharded serving)
 //!   └─ dist (ranks/rank/rendezvous builders,             (distribution)
 //!      attach_dist/connect_dist)
 //! ```
@@ -82,8 +83,9 @@ pub use model_id::ModelId;
 // the inference payload type used by `Session::infer`/`infer_batch`
 pub use crate::serve::wire::Example;
 pub use session::{
-    EvalOpts, EvalReport, ModelInfo, ServeBenchOpts, ServeOpts, ServerHandle,
-    Session, SessionBuilder, SessionTimings, TrainOpts, TrainReport,
+    EvalOpts, EvalReport, FleetHandle, FleetOpts, ModelInfo, ServeBenchOpts,
+    ServeOpts, ServerHandle, Session, SessionBuilder, SessionTimings,
+    TrainOpts, TrainReport,
 };
 
 use crate::experiments::ExpOpts;

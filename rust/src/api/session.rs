@@ -14,6 +14,7 @@ use crate::config::{RankFailurePolicy, TrainConfig, TrainMode};
 use crate::coordinator::{StepStats, Trainer};
 use crate::data::{make_dataset, Batch, Dataset};
 use crate::dist::{self, DistRole, Rendezvous};
+use crate::fleet::{FleetConfig, Router};
 use crate::metrics::memory::MemoryModel;
 use crate::metrics::TrainLog;
 use crate::model::{Dims, Family, ParamStore};
@@ -77,11 +78,47 @@ pub struct ServeOpts {
     pub workers: usize,
     /// How long an under-filled batch waits for stragglers.
     pub batch_window: Duration,
+    /// Admission cap on queued requests (0 = unbounded); overflow gets a
+    /// prompt `503 Retry-After`.
+    pub queue_cap: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        ServeOpts { port: 7878, workers: 4, batch_window: Duration::from_millis(2) }
+        ServeOpts {
+            port: 7878,
+            workers: 4,
+            batch_window: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Options for [`Session::serve_fleet`].
+#[derive(Clone, Debug)]
+pub struct FleetOpts {
+    /// Front-door HTTP port; 0 picks an ephemeral port.
+    pub port: u16,
+    /// Backplane bind address for replicas; `None` binds an ephemeral
+    /// loopback port (read it back via [`FleetHandle::backplane_addr`]).
+    pub backplane: Option<String>,
+    /// How long an under-filled batch waits for stragglers.
+    pub batch_window: Duration,
+    /// Admission cap on queued requests (0 = unbounded).
+    pub queue_cap: usize,
+    /// Backplane silence deadline before a replica is evicted.
+    pub deadline: Duration,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts {
+            port: 7878,
+            backplane: None,
+            batch_window: Duration::from_millis(2),
+            queue_cap: 1024,
+            deadline: Duration::from_secs(10),
+        }
     }
 }
 
@@ -167,6 +204,53 @@ impl ServerHandle {
     }
 
     /// Wait for the listener and all workers to exit.
+    pub fn join(self) -> ApiResult<()> {
+        self.inner.join().map_err(ApiError::serve)
+    }
+
+    /// `stop` + `join`.
+    pub fn shutdown(self) -> ApiResult<()> {
+        self.inner.shutdown().map_err(ApiError::serve)
+    }
+}
+
+/// A running fleet router owned by the caller; see
+/// [`Session::serve_fleet`].  Replicas join the backplane address on
+/// their own schedule — use [`FleetHandle::wait_ready`] before sending
+/// traffic that expects a given capacity.
+pub struct FleetHandle {
+    inner: Router,
+}
+
+impl FleetHandle {
+    /// Front-door HTTP address.
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr()
+    }
+
+    /// Backplane address replicas join (`bdia serve --replica
+    /// --rendezvous <this>`).
+    pub fn backplane_addr(&self) -> SocketAddr {
+        self.inner.backplane_addr()
+    }
+
+    /// Currently live replicas.
+    pub fn live_replicas(&self) -> usize {
+        self.inner.live_replicas()
+    }
+
+    /// Block until at least `n` replicas are live.
+    pub fn wait_ready(&self, n: usize, timeout: Duration) -> ApiResult<()> {
+        self.inner.wait_ready(n, timeout).map_err(ApiError::serve)
+    }
+
+    /// Begin graceful shutdown (idempotent); [`FleetHandle::join`] waits
+    /// it out.
+    pub fn stop(&self) {
+        self.inner.stop();
+    }
+
+    /// Wait for the router's threads to exit.
     pub fn join(self) -> ApiResult<()> {
         self.inner.join().map_err(ApiError::serve)
     }
@@ -812,6 +896,7 @@ impl Session {
             workers: opts.workers,
             batch_window: opts.batch_window,
             threads: cfg.threads,
+            queue_cap: opts.queue_cap,
         };
         // the server owns its runtime (compiled sets are not shareable by
         // value); recompiling is cheap on the native backend
@@ -825,6 +910,37 @@ impl Session {
         )
         .map_err(ApiError::serve)?;
         Ok(ServerHandle { inner })
+    }
+
+    /// Start a fleet router on this session's model and **current
+    /// parameters**: the router pushes the session's weights to every
+    /// replica that joins the backplane, so the whole fleet serves
+    /// bit-identically to [`Session::serve`].  Replicas are separate
+    /// processes (`bdia serve --replica --rendezvous <backplane>`) or
+    /// threads driving [`crate::fleet::replica::serve_connection`].
+    pub fn serve_fleet(&self, opts: &FleetOpts) -> ApiResult<FleetHandle> {
+        let cfg = self.config();
+        let fleet_cfg = FleetConfig {
+            model: cfg.model.clone(),
+            backend: cfg.backend,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            ckpt: None, // params come from the session, below
+            port: opts.port,
+            backplane: opts.backplane.clone(),
+            batch_window: opts.batch_window,
+            queue_cap: opts.queue_cap,
+            deadline: opts.deadline,
+        };
+        let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
+            .map_err(|e| ApiError::Backend(format!("{e:#}")))?;
+        let inner = Router::start_with_parts(
+            fleet_cfg,
+            rt,
+            self.params().clone(),
+            Arc::clone(&self.sink),
+        )
+        .map_err(ApiError::serve)?;
+        Ok(FleetHandle { inner })
     }
 
     /// Load-test the serving path and verify responses are bit-identical
@@ -856,6 +972,7 @@ impl Session {
                     port: 0,
                     workers: opts.workers,
                     batch_window: opts.batch_window,
+                    ..ServeOpts::default()
                 })?;
                 let a = handle.addr();
                 println!(

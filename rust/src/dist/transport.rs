@@ -47,10 +47,27 @@ pub mod op {
     /// World-abort relay: payload names the dead rank and the op it
     /// failed during; decoded into a [`super::DistError`] by the reader.
     pub const ABORT: u8 = 8;
+    /// Fleet backplane (`crate::fleet`): replica joins the router —
+    /// payload is magic, proto version and the model name it loaded.
+    pub const FLEET_HELLO: u8 = 9;
+    /// Router admits a replica: payload is the fleet's parameter blob
+    /// (count + canonical-order f32s) so every replica serves identical
+    /// weights.  During the handshake a [`FLEET_GOODBYE`] instead carries
+    /// a UTF-8 rejection reason.
+    pub const FLEET_WELCOME: u8 = 10;
+    /// One γ-pure micro-batch, router → replica: batch id, example count,
+    /// then `wire::encode` chunks (all carrying the same γ bits).
+    pub const FLEET_INFER: u8 = 11;
+    /// Per-slot results, replica → router: batch id, count, (loss,
+    /// correct) pairs, cumulative `model_infer_ex` call count.
+    pub const FLEET_RESULT: u8 = 12;
+    /// Clean shutdown notice, router → replica (the replica exits 0).
+    pub const FLEET_GOODBYE: u8 = 13;
 }
 
-const MAGIC: u32 = 0x4244_4941; // "BDIA"
-const PROTO_VERSION: u32 = 1;
+/// Handshake magic, shared by the rank protocol and the fleet backplane.
+pub(crate) const MAGIC: u32 = 0x4244_4941; // "BDIA"
+pub(crate) const PROTO_VERSION: u32 = 1;
 /// Upper bound on a single frame payload (grad buffers are ~4·n_params
 /// bytes; anything past this is a corrupt length prefix, not a model).
 const MAX_FRAME: usize = 1 << 30;

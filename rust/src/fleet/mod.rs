@@ -1,0 +1,42 @@
+//! # `bdia::fleet` — sharded serving: one front door, many replicas
+//!
+//! The paper's deployment pitch is that a BDIA-trained transformer is
+//! *architecturally standard* at inference (E\[γ\] = 0), so scaling it out
+//! is plain replica fan-out: this module puts a **router** in front of N
+//! **replica** processes, each holding a full copy of the model.
+//!
+//! * [`router::Router`] — accepts the existing `POST /infer` HTTP surface
+//!   unchanged, does sticky γ-keyed micro-batching *before* dispatch (a
+//!   batch never mixes γ keys and never splits across replicas), picks
+//!   the least-outstanding live replica, applies bounded admission
+//!   (`503 Retry-After` past the queue cap), and merges per-replica
+//!   latency/counters into one fleet `/stats` view.
+//! * [`replica::run`] — a weight-free worker: it receives the router's
+//!   exact parameter blob in the `FLEET_WELCOME` handshake frame, so
+//!   every replica bit-matches the router's weights by construction.
+//! * [`registry::Registry`] — membership: admission, heartbeat-based
+//!   eviction, re-admission on recovery.  A dead replica's un-acked
+//!   batches are re-queued at the queue *front* and re-dispatched, so
+//!   in-flight requests survive replica death.
+//!
+//! The backplane speaks `dist::transport` length-prefixed frames
+//! (`FLEET_*` opcodes) and reuses its heartbeat machinery in both
+//! directions: replicas beat while computing so the router's deadline
+//! never trips on a slow-but-alive worker; the router beats while idle so
+//! replicas can tell a quiet router from a dead one.
+//!
+//! Bit-exactness is the signature invariant: `wire::infer_batch` outputs
+//! are slot/neighbour-invariant, so a response computed by any replica in
+//! any coalesced batch is bit-identical to a direct single-example
+//! `model_infer_ex` call — `bdia bench-serve --replicas N` verifies every
+//! response against local inference, and `tests/fleet.rs` holds this
+//! through mid-load replica death.
+
+pub mod registry;
+pub mod replica;
+pub mod router;
+pub mod stats;
+
+pub use registry::Registry;
+pub use replica::{spawn_local_replicas, ReplicaConfig, ReplicaSpawnOpts};
+pub use router::{FleetConfig, Router};

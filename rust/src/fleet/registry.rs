@@ -1,0 +1,184 @@
+//! Replica membership: admission, health, eviction and least-outstanding
+//! selection.
+//!
+//! Each connected replica gets a [`ReplicaEntry`] holding its health
+//! state, in-flight request count, per-replica counters/latency reservoir
+//! and the channel its worker thread pulls [`Assignment`]s from.  Evicted
+//! entries are kept (dead) in the registry so `/stats` can report their
+//! history and `/healthz` can count them; a recovered replica re-joins as
+//! a *new* entry.
+
+use crate::serve::batcher::Job;
+use super::stats::ReplicaStats;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+/// One γ-pure micro-batch bound for a single replica.  The jobs keep
+/// their response channels: acknowledging the batch means answering every
+/// one of them.
+pub struct Assignment {
+    pub batch_id: u64,
+    pub jobs: Vec<Job>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Health {
+    Live,
+    Evicted { reason: String },
+}
+
+pub struct ReplicaEntry {
+    /// Stable id (admission order); re-admissions get fresh ids.
+    pub id: usize,
+    /// Peer address, for operators reading `/stats`.
+    pub peer: String,
+    health: Mutex<Health>,
+    /// Requests dispatched but not yet answered — the load-balancing key.
+    pub outstanding: AtomicUsize,
+    /// Dispatch channel; taken (set to `None`) on eviction or shutdown so
+    /// the dispatcher can never hand work to a dead replica.
+    tx: Mutex<Option<Sender<Assignment>>>,
+    pub stats: ReplicaStats,
+}
+
+impl ReplicaEntry {
+    pub fn is_live(&self) -> bool {
+        matches!(*self.health.lock().unwrap(), Health::Live)
+    }
+
+    pub fn health(&self) -> Health {
+        self.health.lock().unwrap().clone()
+    }
+
+    /// Try to hand this replica a batch; `Err` returns the assignment to
+    /// the caller when the entry was evicted between `pick` and `send`.
+    pub fn send(&self, a: Assignment) -> Result<(), Assignment> {
+        let g = self.tx.lock().unwrap();
+        match &*g {
+            Some(tx) => tx.send(a).map_err(|e| e.0),
+            None => Err(a),
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Arc<ReplicaEntry>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a freshly handshaken replica; returns its entry.
+    pub fn admit(&self, peer: String, tx: Sender<Assignment>) -> Arc<ReplicaEntry> {
+        let mut g = self.entries.lock().unwrap();
+        let entry = Arc::new(ReplicaEntry {
+            id: g.len(),
+            peer,
+            health: Mutex::new(Health::Live),
+            outstanding: AtomicUsize::new(0),
+            tx: Mutex::new(Some(tx)),
+            stats: ReplicaStats::new(),
+        });
+        g.push(Arc::clone(&entry));
+        entry
+    }
+
+    /// Mark a replica dead and close its dispatch channel.  Idempotent;
+    /// returns true on the first (effective) eviction.
+    pub fn evict(&self, entry: &ReplicaEntry, reason: &str) -> bool {
+        let mut h = entry.health.lock().unwrap();
+        let first = matches!(*h, Health::Live);
+        if first {
+            *h = Health::Evicted { reason: reason.to_string() };
+        }
+        drop(h);
+        entry.tx.lock().unwrap().take();
+        first
+    }
+
+    /// Least-outstanding-requests selection over live replicas (ties go
+    /// to the lowest id, keeping placement deterministic under equal
+    /// load).
+    pub fn pick(&self) -> Option<Arc<ReplicaEntry>> {
+        let g = self.entries.lock().unwrap();
+        g.iter()
+            .filter(|e| e.is_live())
+            .min_by_key(|e| (e.outstanding.load(Ordering::SeqCst), e.id))
+            .map(Arc::clone)
+    }
+
+    /// (live, evicted) counts, for `/healthz`.
+    pub fn counts(&self) -> (usize, usize) {
+        let g = self.entries.lock().unwrap();
+        let live = g.iter().filter(|e| e.is_live()).count();
+        (live, g.len() - live)
+    }
+
+    /// Snapshot of every entry ever admitted (live and evicted).
+    pub fn entries(&self) -> Vec<Arc<ReplicaEntry>> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// Close every dispatch channel (shutdown): worker threads observe
+    /// `Disconnected` after draining already-queued assignments.
+    pub fn close(&self) {
+        for e in self.entries.lock().unwrap().iter() {
+            e.tx.lock().unwrap().take();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn pick_prefers_least_outstanding_then_lowest_id() {
+        let reg = Registry::new();
+        let (tx0, _rx0) = mpsc::channel();
+        let (tx1, _rx1) = mpsc::channel();
+        let a = reg.admit("a".into(), tx0);
+        let b = reg.admit("b".into(), tx1);
+        assert_eq!(reg.pick().unwrap().id, a.id, "tie goes to lowest id");
+        a.outstanding.store(3, Ordering::SeqCst);
+        assert_eq!(reg.pick().unwrap().id, b.id);
+        b.outstanding.store(5, Ordering::SeqCst);
+        assert_eq!(reg.pick().unwrap().id, a.id);
+    }
+
+    #[test]
+    fn eviction_is_sticky_and_closes_the_channel() {
+        let reg = Registry::new();
+        let (tx, rx) = mpsc::channel();
+        let a = reg.admit("a".into(), tx);
+        assert_eq!(reg.counts(), (1, 0));
+        assert!(reg.evict(&a, "deadline"));
+        assert!(!reg.evict(&a, "again"), "second eviction is a no-op");
+        assert_eq!(reg.counts(), (0, 1));
+        assert!(reg.pick().is_none());
+        assert_eq!(a.health(), Health::Evicted { reason: "deadline".into() });
+        // the worker side observes the closed channel
+        assert!(rx.try_recv().is_err());
+        // sending to an evicted entry returns the assignment
+        let asg = Assignment { batch_id: 7, jobs: Vec::new() };
+        assert_eq!(a.send(asg).unwrap_err().batch_id, 7);
+    }
+
+    #[test]
+    fn readmission_is_a_new_entry() {
+        let reg = Registry::new();
+        let (tx0, _rx0) = mpsc::channel();
+        let a = reg.admit("host:1".into(), tx0);
+        reg.evict(&a, "killed");
+        let (tx1, _rx1) = mpsc::channel();
+        let b = reg.admit("host:1".into(), tx1);
+        assert_ne!(a.id, b.id);
+        assert_eq!(reg.counts(), (1, 1));
+        assert_eq!(reg.entries().len(), 2, "history is retained for /stats");
+    }
+}

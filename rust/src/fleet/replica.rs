@@ -1,0 +1,330 @@
+//! Replica worker: one process (or test thread) holding a full model
+//! replica, serving γ-pure micro-batches the router sends over the
+//! length-prefixed frame backplane.
+//!
+//! Replicas are weight-free at launch: the handshake's `FLEET_WELCOME`
+//! carries the router's canonical-order parameter blob, so every replica
+//! serves exactly the weights the router holds (the fleet's bit-exactness
+//! hinges on this — there is no checkpoint to drift).  Liveness uses the
+//! same heartbeat frames as `dist`: a beat thread keeps the router's read
+//! deadline from tripping while the replica computes.
+
+use crate::dist::transport::{
+    self, get_u32, get_u64, op, put_u32, put_u64, read_frame_into, try_heartbeat,
+    write_frame, Link,
+};
+use crate::dist::unflatten_from;
+use crate::model::ParamStore;
+use crate::runtime::{BackendKind, Runtime};
+use crate::serve::wire;
+use anyhow::{bail, ensure, Context, Result};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    pub model: String,
+    pub backend: BackendKind,
+    pub artifacts_dir: PathBuf,
+    /// Router backplane address (`host:port`).
+    pub rendezvous: String,
+    /// Kernel pool threads (0 = leave untouched).
+    pub threads: usize,
+    /// Frame deadline / heartbeat base, mirroring `dist`'s semantics.
+    pub deadline: Duration,
+    /// How long to keep retrying the initial connect.
+    pub connect_timeout: Duration,
+    /// Fault injection for tests: serve this many batches, then drop the
+    /// connection *without acknowledging* the next one.
+    pub die_after_batches: Option<usize>,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig {
+            model: "vit_s10".into(),
+            backend: BackendKind::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            rendezvous: String::new(),
+            threads: 0,
+            deadline: Duration::from_secs(10),
+            connect_timeout: transport::CONNECT_TIMEOUT,
+            die_after_batches: None,
+        }
+    }
+}
+
+/// Process entry point (`bdia serve --replica --rendezvous ...`): load the
+/// bundle, join the router, serve until `FLEET_GOODBYE` or router death.
+pub fn run(cfg: &ReplicaConfig) -> Result<()> {
+    let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
+        .with_context(|| format!("loading bundle '{}'", cfg.model))?;
+    ensure!(
+        rt.has_exec("model_infer_ex"),
+        "bundle '{}' has no model_infer_ex executable",
+        cfg.model
+    );
+    if cfg.threads != 0 {
+        crate::kernels::pool::set_threads(cfg.threads);
+    }
+    let stream = connect_with_retry(&cfg.rendezvous, cfg.connect_timeout)?;
+    serve_connection(stream, &rt, cfg.deadline, cfg.die_after_batches)
+}
+
+/// Connect to the router backplane, retrying until `give_up` (the router
+/// may still be binding when a locally spawned replica starts).
+pub fn connect_with_retry(rendezvous: &str, give_up: Duration) -> Result<TcpStream> {
+    let addr: SocketAddr = rendezvous
+        .to_socket_addrs()
+        .with_context(|| format!("resolving rendezvous '{rendezvous}'"))?
+        .next()
+        .with_context(|| format!("rendezvous '{rendezvous}' resolved to nothing"))?;
+    let deadline = Instant::now() + give_up;
+    loop {
+        match TcpStream::connect_timeout(&addr, Duration::from_secs(2)) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| {
+                        format!("connecting to fleet router at {addr} (gave up)")
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Handshake + serve loop over an already-connected backplane stream.
+/// Public so `tests/fleet.rs` can run replicas as in-process threads
+/// against a router without spawning child processes.
+pub fn serve_connection(
+    stream: TcpStream,
+    rt: &Runtime,
+    deadline: Duration,
+    die_after_batches: Option<usize>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let params = handshake(&stream, rt)?;
+    let mut link = Link::new(stream, 0, deadline)?;
+
+    // beat thread: keeps the router's read deadline alive while this
+    // replica is busy inside model_infer_ex
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = link.writer();
+    let beat = (deadline / 4).max(Duration::from_millis(10));
+    let stop2 = Arc::clone(&stop);
+    let beat_thread = std::thread::Builder::new()
+        .name("bdia-replica-beat".into())
+        .spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                std::thread::sleep(beat);
+                if !try_heartbeat(&writer) {
+                    break;
+                }
+            }
+        })?;
+    let result = serve_loop(&mut link, rt, &params, die_after_batches);
+    stop.store(true, Ordering::SeqCst);
+    let _ = beat_thread.join();
+    result
+}
+
+/// Send `FLEET_HELLO`, receive the parameter blob, build the store.
+fn handshake(stream: &TcpStream, rt: &Runtime) -> Result<ParamStore> {
+    // bounded handshake reads: a bad peer fails fast instead of hanging
+    stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    let mut hello = Vec::new();
+    put_u32(&mut hello, transport::MAGIC);
+    put_u32(&mut hello, transport::PROTO_VERSION);
+    let name = rt.manifest.name.as_bytes();
+    put_u32(&mut hello, name.len() as u32);
+    hello.extend_from_slice(name);
+    let mut w = stream.try_clone().context("cloning backplane stream")?;
+    write_frame(&mut w, op::FLEET_HELLO, &hello).context("sending FLEET_HELLO")?;
+
+    let mut payload = Vec::new();
+    let mut r = stream.try_clone().context("cloning backplane stream")?;
+    let opcode = loop {
+        let opcode =
+            read_frame_into(&mut r, &mut payload).context("awaiting FLEET_WELCOME")?;
+        if opcode != op::HEARTBEAT {
+            break opcode;
+        }
+    };
+    if opcode == op::FLEET_GOODBYE {
+        bail!(
+            "router refused this replica: {}",
+            String::from_utf8_lossy(&payload)
+        );
+    }
+    ensure!(
+        opcode == op::FLEET_WELCOME,
+        "expected FLEET_WELCOME, got opcode {opcode}"
+    );
+    let mut pos = 0;
+    let n = get_u64(&payload, &mut pos)? as usize;
+    ensure!(
+        payload.len() == 8 + n * 4,
+        "FLEET_WELCOME length mismatch: header says {n} params, payload \
+         holds {} bytes",
+        payload.len()
+    );
+    let mut flat = vec![0f32; n];
+    transport::get_f32s(&payload, &mut pos, n, &mut flat)?;
+    let mut store = ParamStore::init(&rt.manifest, 0);
+    unflatten_from(&mut store, &flat)
+        .context("router parameter blob does not fit this bundle")?;
+    Ok(store)
+}
+
+fn serve_loop(
+    link: &mut Link,
+    rt: &Runtime,
+    params: &ParamStore,
+    die_after_batches: Option<usize>,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    let mut answered = 0usize;
+    loop {
+        let opcode = match link.recv_into(&mut buf, "fleet serve") {
+            Ok(opc) => opc,
+            Err(e) => {
+                // router gone (shutdown without GOODBYE, or crash): exit
+                // quietly — the replica holds no state worth saving
+                if e.downcast_ref::<crate::dist::DistError>().is_some() {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+        };
+        match opcode {
+            op::FLEET_GOODBYE => return Ok(()),
+            op::FLEET_INFER => {
+                if die_after_batches == Some(answered) {
+                    // fault injection: drop the connection with this batch
+                    // un-acked — the router must re-dispatch it
+                    return Ok(());
+                }
+                let (batch_id, examples, gamma) = decode_infer(rt, &buf)?;
+                let per_ex = wire::infer_batch(rt, params, &examples, gamma)?;
+                let mut out = Vec::with_capacity(12 + per_ex.len() * 8 + 8);
+                put_u64(&mut out, batch_id);
+                put_u32(&mut out, per_ex.len() as u32);
+                for (loss, correct) in &per_ex {
+                    out.extend_from_slice(&loss.to_le_bytes());
+                    out.extend_from_slice(&correct.to_le_bytes());
+                }
+                put_u64(&mut out, infer_calls(rt));
+                link.send(op::FLEET_RESULT, &out, "fleet result")?;
+                answered += 1;
+            }
+            other => bail!("unexpected opcode {other} on fleet backplane"),
+        }
+    }
+}
+
+/// Parse + validate one `FLEET_INFER` payload: `batch_id, n, n ×
+/// wire-encoded examples` — every example must carry the same γ bits (the
+/// router's sticky batching is re-checked at the protocol boundary) and
+/// `n` must fit the manifest batch dimension.
+pub fn decode_infer(rt: &Runtime, payload: &[u8]) -> Result<(u64, Vec<wire::Example>, f32)> {
+    let m = &rt.manifest;
+    let chunk = wire::body_len(m.family, &m.dims);
+    let mut pos = 0;
+    let batch_id = get_u64(payload, &mut pos)?;
+    let n = get_u32(payload, &mut pos)? as usize;
+    ensure!(n >= 1, "empty FLEET_INFER batch");
+    ensure!(
+        n <= m.dims.batch,
+        "FLEET_INFER batch of {n} exceeds manifest batch dim {}",
+        m.dims.batch
+    );
+    ensure!(
+        payload.len() == 12 + n * chunk,
+        "FLEET_INFER length mismatch: {n} examples of {chunk} bytes, got \
+         {} payload bytes",
+        payload.len()
+    );
+    let mut examples = Vec::with_capacity(n);
+    let mut gamma_bits: Option<u32> = None;
+    for i in 0..n {
+        let body = &payload[12 + i * chunk..12 + (i + 1) * chunk];
+        let (ex, gamma) = wire::decode(m.family, &m.dims, body)?;
+        match gamma_bits {
+            None => gamma_bits = Some(gamma.to_bits()),
+            Some(bits) => ensure!(
+                bits == gamma.to_bits(),
+                "FLEET_INFER mixes gamma keys ({} vs {})",
+                f32::from_bits(bits),
+                gamma
+            ),
+        }
+        examples.push(ex);
+    }
+    let gamma = f32::from_bits(gamma_bits.unwrap());
+    Ok((batch_id, examples, gamma))
+}
+
+fn infer_calls(rt: &Runtime) -> u64 {
+    rt.call_counts()
+        .iter()
+        .find(|(name, _)| name == "model_infer_ex")
+        .map(|(_, c)| *c)
+        .unwrap_or(0)
+}
+
+/// Options for spawning local replica child processes.
+#[derive(Clone, Debug)]
+pub struct ReplicaSpawnOpts {
+    pub model: String,
+    pub backend: String,
+    pub artifacts: PathBuf,
+    pub threads: usize,
+    pub fleet_timeout_s: f64,
+}
+
+/// Re-exec `current_exe` as `n` replica processes pointed at the router's
+/// backplane — the `bdia serve --replicas N` single-command path.  The
+/// caller wraps the children in a `dist::WorkerRanks`-style guard; unlike
+/// rank workers these carry no `--rank` (replicas are interchangeable).
+pub fn spawn_local_replicas(
+    backplane: SocketAddr,
+    n: usize,
+    opts: &ReplicaSpawnOpts,
+) -> Result<Vec<Child>> {
+    ensure!(n >= 1, "a fleet needs at least one replica");
+    let exe = std::env::current_exe().context("locating current executable")?;
+    let mut children = Vec::with_capacity(n);
+    for i in 0..n {
+        let child = Command::new(&exe)
+            // `--replica --model` leads the argv so process greps (CI's
+            // kill-one-replica step) can target replicas unambiguously
+            .arg("serve")
+            .arg("--replica")
+            .arg("--model")
+            .arg(&opts.model)
+            .arg("--rendezvous")
+            .arg(backplane.to_string())
+            .arg("--backend")
+            .arg(&opts.backend)
+            .arg("--artifacts")
+            .arg(&opts.artifacts)
+            .arg("--threads")
+            .arg(opts.threads.to_string())
+            .arg("--fleet-timeout-s")
+            .arg(opts.fleet_timeout_s.to_string())
+            // replicas stay quiet on stdout (the router narrates) but keep
+            // stderr attached so their failures are visible
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning replica {i}"))?;
+        children.push(child);
+    }
+    Ok(children)
+}

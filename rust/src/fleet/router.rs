@@ -1,0 +1,793 @@
+//! The fleet front door: one HTTP process, N model replicas behind it.
+//!
+//! ```text
+//! clients ──POST /infer──► router handler threads
+//!                               │ decode → Job{example, gamma, resp}
+//!                               ▼
+//!                         [BatchQueue]  (bounded; overflow → 503)
+//!                               │ γ-sticky micro-batches
+//!                               ▼
+//!                          dispatcher ──pick least-outstanding──┐
+//!                               │                               │
+//!                     per-replica worker threads (backplane links)
+//!                        FLEET_INFER ──► replica ──► FLEET_RESULT
+//! ```
+//!
+//! Invariants: a dispatched batch never mixes γ keys and never splits
+//! across replicas (it rides the queue's sticky coalescing, and the
+//! replica re-validates at the protocol boundary); results return to the
+//! exact requests that sent them (each [`Job`] keeps its own response
+//! channel through dispatch).  A replica death mid-batch does not lose
+//! the batch: un-acked assignments are re-queued at the *front* of the
+//! queue and re-dispatched to a surviving replica, so every successful
+//! response stays bit-exact and clients see added latency, not errors.
+
+use crate::api::events::{EventSink, NullSink, RequestEvent};
+use crate::checkpoint;
+use crate::dist::flatten_into;
+use crate::dist::transport::{
+    self, get_u32, get_u64, op, put_u32, put_u64, read_frame_into, try_heartbeat,
+    write_frame, Link,
+};
+use crate::model::ParamStore;
+use crate::runtime::{BackendKind, Runtime};
+use crate::serve::batcher::{BatchQueue, Job, PushOutcome};
+use crate::serve::stats::ServeStats;
+use crate::serve::{http, wire, write_503};
+use super::registry::{Assignment, Registry, ReplicaEntry};
+use super::stats::{fleet_stats_json, RouterCounters};
+use anyhow::{ensure, Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a handler holds an idle client connection before giving up.
+const CONN_READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Latency reservoir size for the router's end-to-end `/stats` view.
+const LATENCY_RESERVOIR: usize = 8192;
+/// Dispatcher back-off while no replica is live (a joining replica is
+/// picked up within one tick).
+const NO_REPLICA_RETRY: Duration = Duration::from_millis(25);
+
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub model: String,
+    pub backend: BackendKind,
+    pub artifacts_dir: PathBuf,
+    /// Checkpoint with trained weights; `None` serves seed-initialized
+    /// params (the CLI warns loudly).
+    pub ckpt: Option<PathBuf>,
+    /// Front-door HTTP port; 0 picks an ephemeral port.
+    pub port: u16,
+    /// Backplane bind address for replicas; `None` binds an ephemeral
+    /// loopback port (single-command local fleets).
+    pub backplane: Option<String>,
+    /// How long an under-filled batch waits for stragglers.
+    pub batch_window: Duration,
+    /// Admission cap (0 = unbounded); overflow gets `503 Retry-After`.
+    pub queue_cap: usize,
+    /// Backplane frame deadline; a replica silent for this long (no
+    /// result, no heartbeat) is evicted.
+    pub deadline: Duration,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            model: "vit_s10".into(),
+            backend: BackendKind::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            ckpt: None,
+            port: 7878,
+            backplane: None,
+            batch_window: Duration::from_millis(2),
+            queue_cap: 1024,
+            deadline: Duration::from_secs(10),
+        }
+    }
+}
+
+struct FleetShared {
+    rt: Runtime,
+    /// Prebuilt `FLEET_WELCOME` payload: every admitted replica receives
+    /// the router's exact weights, the root of fleet bit-exactness.
+    params_blob: Vec<u8>,
+    queue: BatchQueue,
+    stats: ServeStats,
+    counters: RouterCounters,
+    registry: Registry,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    backplane_addr: SocketAddr,
+    batch_window: Duration,
+    deadline: Duration,
+    max_body: usize,
+    batch_seq: AtomicU64,
+    sink: Arc<dyn EventSink>,
+    /// Per-replica worker threads, joined on shutdown.
+    replica_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running fleet router; stop with [`Router::stop`] (or `POST
+/// /shutdown`), then reap with [`Router::join`].
+pub struct Router {
+    shared: Arc<FleetShared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Load the bundle (+ optional checkpoint), bind both doors, start.
+    pub fn start(cfg: FleetConfig) -> Result<Router> {
+        let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
+            .with_context(|| format!("loading bundle '{}'", cfg.model))?;
+        let params = match &cfg.ckpt {
+            Some(path) => {
+                let ck = checkpoint::load(path)?;
+                ensure!(
+                    ck.model == cfg.model,
+                    "checkpoint {} was written for model '{}', serving '{}'",
+                    path.display(),
+                    ck.model,
+                    cfg.model
+                );
+                ensure!(
+                    ck.params.matches_manifest(&rt.manifest),
+                    "checkpoint {} parameter structure does not match bundle \
+                     '{}'",
+                    path.display(),
+                    cfg.model
+                );
+                ck.params
+            }
+            None => ParamStore::init(&rt.manifest, 0),
+        };
+        Self::start_with_parts(cfg, rt, params, Arc::new(NullSink))
+    }
+
+    /// Start with a pre-built runtime, in-memory parameters and an event
+    /// sink — the `api::Session::serve_fleet` path: the fleet serves the
+    /// session's **current** weights, which the handshake pushes to every
+    /// replica.
+    pub fn start_with_parts(
+        cfg: FleetConfig,
+        rt: Runtime,
+        params: ParamStore,
+        sink: Arc<dyn EventSink>,
+    ) -> Result<Router> {
+        ensure!(
+            rt.has_exec("model_infer_ex"),
+            "bundle '{}' has no model_infer_ex executable",
+            cfg.model
+        );
+        ensure!(
+            params.matches_manifest(&rt.manifest),
+            "parameter structure does not match bundle '{}'",
+            cfg.model
+        );
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding front door 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr()?;
+        let backplane_bind = cfg.backplane.as_deref().unwrap_or("127.0.0.1:0");
+        let backplane = TcpListener::bind(backplane_bind)
+            .with_context(|| format!("binding backplane {backplane_bind}"))?;
+        let backplane_addr = backplane.local_addr()?;
+
+        let mut flat = Vec::new();
+        flatten_into(&params, &mut flat);
+        let mut params_blob = Vec::with_capacity(8 + flat.len() * 4);
+        put_u64(&mut params_blob, flat.len() as u64);
+        transport::put_f32s(&mut params_blob, &flat);
+
+        let max_body =
+            wire::body_len(rt.manifest.family, &rt.manifest.dims).max(512);
+        let shared = Arc::new(FleetShared {
+            rt,
+            params_blob,
+            queue: BatchQueue::bounded(cfg.queue_cap),
+            stats: ServeStats::new(LATENCY_RESERVOIR),
+            counters: RouterCounters::default(),
+            registry: Registry::new(),
+            shutdown: AtomicBool::new(false),
+            addr,
+            backplane_addr,
+            batch_window: cfg.batch_window,
+            deadline: cfg.deadline,
+            max_body,
+            batch_seq: AtomicU64::new(0),
+            sink,
+            replica_threads: Mutex::new(Vec::new()),
+        });
+        let mut threads = Vec::with_capacity(3);
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("bdia-fleet-dispatch".into())
+                .spawn(move || dispatcher_loop(&sh))?,
+        );
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("bdia-fleet-accept".into())
+                .spawn(move || backplane_loop(backplane, &sh))?,
+        );
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("bdia-fleet-listener".into())
+                .spawn(move || listener_loop(listener, &sh))?,
+        );
+        Ok(Router { shared, threads })
+    }
+
+    /// Front-door HTTP address.
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Backplane address replicas join (`--rendezvous` target).
+    pub fn backplane_addr(&self) -> SocketAddr {
+        self.shared.backplane_addr
+    }
+
+    /// Currently live replicas.
+    pub fn live_replicas(&self) -> usize {
+        self.shared.registry.counts().0
+    }
+
+    /// Block until at least `n` replicas are live (admission is
+    /// asynchronous — locally spawned replicas take a moment to load
+    /// their bundle and join).
+    pub fn wait_ready(&self, n: usize, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let live = self.live_replicas();
+            if live >= n {
+                return Ok(());
+            }
+            ensure!(
+                Instant::now() < deadline,
+                "fleet not ready: {live}/{n} replicas live after {timeout:?}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Begin graceful shutdown: stop accepting, drain the queue through
+    /// the surviving replicas, dismiss them with `FLEET_GOODBYE`.
+    pub fn stop(&self) {
+        initiate_shutdown(&self.shared);
+    }
+
+    /// Wait for every router thread (listener, acceptor, dispatcher,
+    /// per-replica workers) to exit.
+    pub fn join(self) -> Result<()> {
+        for t in self.threads {
+            t.join().map_err(|_| anyhow::anyhow!("router thread panicked"))?;
+        }
+        // dispatcher is done: nothing will be handed to replicas anymore,
+        // so closing the registry lets every worker drain and exit
+        self.shared.registry.close();
+        let workers: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.shared.replica_threads.lock().unwrap());
+        for t in workers {
+            t.join()
+                .map_err(|_| anyhow::anyhow!("replica worker thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// `stop` + `join`.
+    pub fn shutdown(self) -> Result<()> {
+        self.stop();
+        self.join()
+    }
+}
+
+fn initiate_shutdown(shared: &FleetShared) {
+    if shared.shutdown.swap(true, Ordering::SeqCst) {
+        return; // already shutting down
+    }
+    shared.queue.shutdown();
+    // poke both blocking accept()s so the loops observe the flag
+    let _ = TcpStream::connect(shared.addr);
+    let _ = TcpStream::connect(shared.backplane_addr);
+}
+
+// ---------------------------------------------------------------------
+// dispatch: queue → least-outstanding live replica
+// ---------------------------------------------------------------------
+
+fn dispatcher_loop(shared: &Arc<FleetShared>) {
+    let max_batch = shared.rt.manifest.dims.batch;
+    'batches: while let Some(jobs) =
+        shared.queue.next_batch(max_batch, shared.batch_window)
+    {
+        let mut jobs = jobs;
+        loop {
+            let Some(entry) = shared.registry.pick() else {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    fail_jobs(&jobs, "shutting down with no live replicas");
+                    continue 'batches; // drain remaining queue the same way
+                }
+                std::thread::sleep(NO_REPLICA_RETRY);
+                continue;
+            };
+            entry.outstanding.fetch_add(jobs.len(), Ordering::SeqCst);
+            let batch_id = shared.batch_seq.fetch_add(1, Ordering::SeqCst);
+            match entry.send(Assignment { batch_id, jobs }) {
+                Ok(()) => break,
+                Err(a) => {
+                    // evicted between pick and send: undo and re-pick
+                    entry.outstanding.fetch_sub(a.jobs.len(), Ordering::SeqCst);
+                    jobs = a.jobs;
+                }
+            }
+        }
+    }
+}
+
+fn fail_jobs(jobs: &[Job], msg: &str) {
+    for j in jobs {
+        let _ = j.resp.send(Err(msg.to_string()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// backplane: replica admission + per-replica workers
+// ---------------------------------------------------------------------
+
+fn backplane_loop(listener: TcpListener, shared: &Arc<FleetShared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let sh = Arc::clone(shared);
+                let handle = std::thread::Builder::new()
+                    .name("bdia-fleet-replica".into())
+                    .spawn(move || replica_session(s, &sh));
+                if let Ok(h) = handle {
+                    shared.replica_threads.lock().unwrap().push(h);
+                }
+            }
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One replica's lifetime on the router side: handshake, admission,
+/// dispatch/ack loop, eviction or goodbye.
+fn replica_session(stream: TcpStream, shared: &Arc<FleetShared>) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "unknown".into());
+    let link = match admit_replica(&stream, shared, &peer) {
+        Ok(link) => link,
+        Err(e) => {
+            eprintln!("fleet: rejected replica {peer}: {e:#}");
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::channel();
+    let entry = shared.registry.admit(peer, tx);
+    replica_worker(shared, &entry, link, &rx);
+}
+
+/// Validate `FLEET_HELLO` and push the parameter blob.  A mismatched
+/// peer gets a `FLEET_GOODBYE` naming the reason instead of silence.
+fn admit_replica(
+    stream: &TcpStream,
+    shared: &Arc<FleetShared>,
+    peer: &str,
+) -> Result<Link> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    let mut r = stream.try_clone().context("cloning backplane stream")?;
+    let mut payload = Vec::new();
+    let opcode = read_frame_into(&mut r, &mut payload)
+        .with_context(|| format!("reading FLEET_HELLO from {peer}"))?;
+    let reject = |reason: String| -> Result<Link> {
+        let mut w = stream.try_clone().context("cloning backplane stream")?;
+        let _ = write_frame(&mut w, op::FLEET_GOODBYE, reason.as_bytes());
+        anyhow::bail!(reason)
+    };
+    if opcode != op::FLEET_HELLO {
+        return reject(format!("expected FLEET_HELLO, got opcode {opcode}"));
+    }
+    let mut pos = 0;
+    let magic = get_u32(&payload, &mut pos)?;
+    if magic != transport::MAGIC {
+        return reject(format!("not a bdia replica (bad magic {magic:#x})"));
+    }
+    let version = get_u32(&payload, &mut pos)?;
+    if version != transport::PROTO_VERSION {
+        return reject(format!(
+            "protocol version mismatch: replica {version}, router {}",
+            transport::PROTO_VERSION
+        ));
+    }
+    let name_len = get_u32(&payload, &mut pos)? as usize;
+    ensure!(payload.len() == pos + name_len, "malformed FLEET_HELLO");
+    let model = String::from_utf8_lossy(&payload[pos..]).into_owned();
+    if model != shared.rt.manifest.name {
+        return reject(format!(
+            "model mismatch: replica loaded '{model}', fleet serves '{}'",
+            shared.rt.manifest.name
+        ));
+    }
+    let mut w = stream.try_clone().context("cloning backplane stream")?;
+    write_frame(&mut w, op::FLEET_WELCOME, &shared.params_blob)
+        .with_context(|| format!("sending FLEET_WELCOME to {peer}"))?;
+    Link::new(
+        stream.try_clone().context("cloning backplane stream")?,
+        0,
+        shared.deadline,
+    )
+}
+
+fn replica_worker(
+    shared: &Arc<FleetShared>,
+    entry: &Arc<ReplicaEntry>,
+    mut link: Link,
+    rx: &Receiver<Assignment>,
+) {
+    let writer = link.writer();
+    let beat = (shared.deadline / 4).max(Duration::from_millis(10));
+    let mut buf = Vec::new();
+    loop {
+        match rx.recv_timeout(beat) {
+            Ok(assign) => {
+                if !process_assignment(shared, entry, &mut link, &mut buf, assign)
+                {
+                    drain_and_requeue(shared, entry, rx);
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // idle tick: prove the router is alive to the replica, and
+                // notice a silently dead replica before dispatching to it
+                if !try_heartbeat(&writer) {
+                    evict(shared, entry, "connection closed while idle");
+                    drain_and_requeue(shared, entry, rx);
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // registry closed at shutdown; queued assignments were
+                // drained by recv before the channel reported disconnect
+                let _ = link.send(op::FLEET_GOODBYE, &[], "fleet goodbye");
+                return;
+            }
+        }
+    }
+}
+
+/// Ship one assignment and wait for its ack.  `false` means the replica
+/// is gone: the caller re-queues and exits.  The assignment's jobs are
+/// answered (success path) or pushed back to the queue front (failure
+/// path) — never dropped.
+fn process_assignment(
+    shared: &Arc<FleetShared>,
+    entry: &Arc<ReplicaEntry>,
+    link: &mut Link,
+    buf: &mut Vec<u8>,
+    assign: Assignment,
+) -> bool {
+    let Assignment { batch_id, jobs } = assign;
+    let gamma = jobs[0].gamma;
+    let mut payload = Vec::with_capacity(12 + jobs.len() * shared.max_body);
+    put_u64(&mut payload, batch_id);
+    put_u32(&mut payload, jobs.len() as u32);
+    for j in &jobs {
+        payload.extend_from_slice(&wire::encode(&j.example, gamma));
+    }
+    let t0 = Instant::now();
+    if let Err(e) = link.send(op::FLEET_INFER, &payload, "fleet infer") {
+        evict(shared, entry, &format!("dispatch failed: {e:#}"));
+        requeue(shared, entry, jobs);
+        return false;
+    }
+    // the replica's beat thread keeps this read alive during compute;
+    // recv_into skips those heartbeats transparently
+    let per_ex = loop {
+        match link.recv_into(buf, "fleet result") {
+            Ok(op::FLEET_RESULT) => match parse_result(buf, batch_id, jobs.len()) {
+                Ok(v) => break v,
+                Err(e) => {
+                    evict(shared, entry, &format!("bad FLEET_RESULT: {e:#}"));
+                    requeue(shared, entry, jobs);
+                    return false;
+                }
+            },
+            Ok(other) => {
+                evict(shared, entry, &format!("unexpected opcode {other}"));
+                requeue(shared, entry, jobs);
+                return false;
+            }
+            Err(e) => {
+                evict(shared, entry, &format!("no result: {e:#}"));
+                requeue(shared, entry, jobs);
+                return false;
+            }
+        }
+    };
+    let (pairs, infer_calls) = per_ex;
+    entry.stats.rtt_us.push(t0.elapsed().as_micros() as u64);
+    entry.stats.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+    entry.stats.batches.fetch_add(1, Ordering::Relaxed);
+    entry.stats.infer_calls.store(infer_calls, Ordering::Relaxed);
+    for (job, r) in jobs.iter().zip(pairs) {
+        let _ = job.resp.send(Ok(r));
+    }
+    entry.outstanding.fetch_sub(jobs.len(), Ordering::SeqCst);
+    true
+}
+
+/// Parse one `FLEET_RESULT`: batch id + per-slot pairs + the replica's
+/// cumulative `model_infer_ex` count.
+fn parse_result(
+    buf: &[u8],
+    want_id: u64,
+    want_n: usize,
+) -> Result<(Vec<(f32, f32)>, u64)> {
+    let mut pos = 0;
+    let got_id = get_u64(buf, &mut pos)?;
+    ensure!(got_id == want_id, "batch id mismatch: sent {want_id}, got {got_id}");
+    let n = get_u32(buf, &mut pos)? as usize;
+    ensure!(n == want_n, "result count mismatch: sent {want_n}, got {n}");
+    ensure!(buf.len() == 12 + n * 8 + 8, "FLEET_RESULT length mismatch");
+    let mut pairs = Vec::with_capacity(n);
+    for i in 0..n {
+        let at = 12 + i * 8;
+        let loss = f32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+        let correct = f32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap());
+        pairs.push((loss, correct));
+    }
+    let mut tail = 12 + n * 8;
+    let infer_calls = get_u64(buf, &mut tail)?;
+    Ok((pairs, infer_calls))
+}
+
+fn evict(shared: &Arc<FleetShared>, entry: &Arc<ReplicaEntry>, reason: &str) {
+    if shared.registry.evict(entry, reason) {
+        shared.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "fleet: evicted replica {} ({}): {reason}",
+            entry.id, entry.peer
+        );
+    }
+}
+
+/// Return a dead replica's un-acked jobs to the head of the queue and
+/// account for them — in-flight requests survive the death, they just
+/// run again elsewhere.
+fn requeue(shared: &Arc<FleetShared>, entry: &Arc<ReplicaEntry>, jobs: Vec<Job>) {
+    let n = jobs.len();
+    entry.outstanding.fetch_sub(n, Ordering::SeqCst);
+    entry.stats.redispatched.fetch_add(n as u64, Ordering::Relaxed);
+    shared.counters.redispatched.fetch_add(n as u64, Ordering::Relaxed);
+    shared.queue.push_front_all(jobs);
+}
+
+/// After eviction, drain assignments the dispatcher managed to enqueue
+/// before the channel closed — those must be re-dispatched too.
+fn drain_and_requeue(
+    shared: &Arc<FleetShared>,
+    entry: &Arc<ReplicaEntry>,
+    rx: &Receiver<Assignment>,
+) {
+    while let Ok(a) = rx.try_recv() {
+        requeue(shared, entry, a.jobs);
+    }
+}
+
+// ---------------------------------------------------------------------
+// front door
+// ---------------------------------------------------------------------
+
+fn listener_loop(listener: TcpListener, shared: &Arc<FleetShared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let sh = Arc::clone(shared);
+                let _ = std::thread::Builder::new()
+                    .name("bdia-fleet-conn".into())
+                    .spawn(move || handle_conn(&s, &sh));
+            }
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: &TcpStream, shared: &Arc<FleetShared>) {
+    stream.set_read_timeout(Some(CONN_READ_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let req = match http::read_request_capped(stream, shared.max_body) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = http::write_response(
+                stream,
+                e.status,
+                e.reason,
+                "text/plain",
+                format!("{e}\n").as_bytes(),
+            );
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/infer") => handle_infer(stream, shared, &req.body),
+        ("GET", "/healthz") => {
+            let (live, evicted) = shared.registry.counts();
+            let body = format!(
+                "{{\"status\": \"{}\", \"model\": \"{}\", \"backend\": \
+                 \"{}\", \"replicas_live\": {live}, \"replicas_evicted\": \
+                 {evicted}}}",
+                if live > 0 { "ok" } else { "no-replicas" },
+                shared.rt.manifest.name,
+                shared.rt.backend.name()
+            );
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "application/json",
+                body.as_bytes(),
+            );
+        }
+        ("GET", "/stats") => {
+            let body = fleet_stats_json(
+                &shared.stats,
+                &shared.counters,
+                &shared.registry.entries(),
+                shared.queue.len(),
+                shared.queue.cap(),
+            );
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "application/json",
+                body.as_bytes(),
+            );
+        }
+        ("POST", "/shutdown") => {
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "text/plain",
+                b"shutting down\n",
+            );
+            initiate_shutdown(shared);
+        }
+        (_, path) => {
+            let _ = http::write_response(
+                stream,
+                404,
+                "Not Found",
+                "text/plain",
+                format!("no such endpoint: {path}\n").as_bytes(),
+            );
+        }
+    }
+}
+
+fn handle_infer(stream: &TcpStream, shared: &Arc<FleetShared>, body: &[u8]) {
+    let t0 = Instant::now();
+    let m = &shared.rt.manifest;
+    let (example, gamma) = match wire::decode(m.family, &m.dims, body) {
+        Ok(v) => v,
+        Err(e) => {
+            shared.stats.record_error();
+            shared.sink.on_request(&RequestEvent {
+                latency_us: t0.elapsed().as_micros() as u64,
+                ok: false,
+            });
+            let _ = http::write_response(
+                stream,
+                400,
+                "Bad Request",
+                "text/plain",
+                format!("{e:#}\n").as_bytes(),
+            );
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::channel();
+    let outcome = shared.queue.push(Job {
+        example,
+        gamma,
+        enqueued: t0,
+        resp: tx,
+    });
+    match outcome {
+        PushOutcome::Accepted => {}
+        PushOutcome::Saturated { depth, cap } => {
+            shared.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+            shared.stats.record_error();
+            shared.sink.on_request(&RequestEvent {
+                latency_us: t0.elapsed().as_micros() as u64,
+                ok: false,
+            });
+            let _ = write_503(stream, "queue full", depth, Some(cap));
+            return;
+        }
+        PushOutcome::ShuttingDown => {
+            shared.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+            shared.sink.on_request(&RequestEvent {
+                latency_us: t0.elapsed().as_micros() as u64,
+                ok: false,
+            });
+            let _ = write_503(
+                stream,
+                "server is shutting down",
+                shared.queue.len(),
+                shared.queue.cap(),
+            );
+            return;
+        }
+    }
+    // bounded wait: if every replica is dead and none re-joins, the
+    // client gets a 503 instead of a hang
+    let request_timeout = (shared.deadline * 6).max(Duration::from_secs(60));
+    let outcome = rx.recv_timeout(request_timeout);
+    let latency_us = t0.elapsed().as_micros() as u64;
+    shared.sink.on_request(&RequestEvent {
+        latency_us,
+        ok: matches!(outcome, Ok(Ok(_))),
+    });
+    match outcome {
+        Ok(Ok((loss, correct))) => {
+            let mut out = [0u8; 8];
+            out[..4].copy_from_slice(&loss.to_le_bytes());
+            out[4..].copy_from_slice(&correct.to_le_bytes());
+            shared.stats.record_request();
+            shared.stats.record_latency_us(latency_us);
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "application/octet-stream",
+                &out,
+            );
+        }
+        Ok(Err(msg)) => {
+            shared.stats.record_error();
+            let _ = http::write_response(
+                stream,
+                500,
+                "Internal Server Error",
+                "text/plain",
+                format!("{msg}\n").as_bytes(),
+            );
+        }
+        Err(_) => {
+            shared.stats.record_error();
+            shared.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+            let _ = write_503(
+                stream,
+                "no replica answered in time",
+                shared.queue.len(),
+                shared.queue.cap(),
+            );
+        }
+    }
+}

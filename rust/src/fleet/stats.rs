@@ -1,0 +1,240 @@
+//! Fleet-wide observability: per-replica counters + RTT reservoirs,
+//! merged into the router's single `/stats` document.
+//!
+//! The invariant the acceptance tests pin: the top-level `requests` and
+//! `batches` totals are *computed as* the sum over the per-replica
+//! breakdown, so the merged view can never disagree with its parts.
+
+use crate::serve::stats::{percentile_us, LatencySummary, ServeStats};
+use super::registry::{Health, ReplicaEntry};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-replica RTT reservoir capacity.
+const RTT_RESERVOIR: usize = 2048;
+
+/// Small fixed-capacity sample ring (the `ServeStats` reservoir is
+/// private to its own percentile pipeline; replicas need one each).
+pub struct Reservoir {
+    ring: Mutex<(Vec<u64>, usize, usize)>, // (buf, next, len)
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Self::new(RTT_RESERVOIR)
+    }
+}
+
+impl Reservoir {
+    pub fn new(capacity: usize) -> Self {
+        Reservoir { ring: Mutex::new((vec![0; capacity.max(1)], 0, 0)) }
+    }
+
+    pub fn push(&self, us: u64) {
+        let mut g = self.ring.lock().unwrap();
+        let cap = g.0.len();
+        let slot = g.1;
+        g.0[slot] = us;
+        g.1 = (slot + 1) % cap;
+        g.2 = (g.2 + 1).min(cap);
+    }
+
+    /// Current samples (unordered).
+    pub fn samples(&self) -> Vec<u64> {
+        let g = self.ring.lock().unwrap();
+        g.0[..g.2].to_vec()
+    }
+}
+
+/// Counters one replica accumulates over its lifetime (survive eviction —
+/// `/stats` reports dead replicas' history too).
+#[derive(Default)]
+pub struct ReplicaStats {
+    /// Requests answered (batch sizes summed).
+    pub requests: AtomicU64,
+    /// Batches answered.
+    pub batches: AtomicU64,
+    /// Cumulative `model_infer_ex` calls the replica reported.
+    pub infer_calls: AtomicU64,
+    /// Requests this replica left un-acked that were re-dispatched.
+    pub redispatched: AtomicU64,
+    /// Backplane round-trip times (dispatch → result), µs.
+    pub rtt_us: Reservoir,
+}
+
+impl ReplicaStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+fn fmt_latency(l: Option<LatencySummary>) -> String {
+    match l {
+        Some(l) => format!(
+            "{{\"mean\": {:.3}, \"p50\": {:.3}, \"p90\": {:.3}, \
+             \"p99\": {:.3}, \"max\": {:.3}}}",
+            l.mean_ms, l.p50_ms, l.p90_ms, l.p99_ms, l.max_ms
+        ),
+        None => "null".to_string(),
+    }
+}
+
+fn fmt_rtt(samples: &mut [u64]) -> String {
+    if samples.is_empty() {
+        return "null".to_string();
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+    format!(
+        "{{\"mean\": {:.3}, \"p50\": {:.3}, \"p99\": {:.3}}}",
+        mean / 1e3,
+        percentile_us(samples, 0.50) as f64 / 1e3,
+        percentile_us(samples, 0.99) as f64 / 1e3
+    )
+}
+
+/// Counters the router itself owns (not attributable to one replica).
+#[derive(Default)]
+pub struct RouterCounters {
+    /// Requests bounced with `503` (saturation or shutdown).
+    pub rejected_503: AtomicU64,
+    /// Requests re-queued after their replica died un-acked.
+    pub redispatched: AtomicU64,
+    /// Replicas evicted since start.
+    pub evictions: AtomicU64,
+}
+
+/// Render the fleet `/stats` document.  `router` carries the end-to-end
+/// request view (client-observed latency, error count); per-replica rows
+/// come from the registry snapshot.  Top-level `requests`/`batches` are
+/// sums over the per-replica rows by construction.
+pub fn fleet_stats_json(
+    router: &ServeStats,
+    counters: &RouterCounters,
+    entries: &[std::sync::Arc<ReplicaEntry>],
+    queue_depth: usize,
+    queue_cap: Option<usize>,
+) -> String {
+    let mut total_requests = 0u64;
+    let mut total_batches = 0u64;
+    let mut pooled: Vec<u64> = Vec::new();
+    let mut live = 0usize;
+    let mut rows: Vec<String> = Vec::with_capacity(entries.len());
+    for e in entries {
+        let requests = e.stats.requests.load(Ordering::Relaxed);
+        let batches = e.stats.batches.load(Ordering::Relaxed);
+        total_requests += requests;
+        total_batches += batches;
+        let mut rtt = e.stats.rtt_us.samples();
+        pooled.extend_from_slice(&rtt);
+        let (state, reason) = match e.health() {
+            Health::Live => {
+                live += 1;
+                ("live".to_string(), "null".to_string())
+            }
+            Health::Evicted { reason } => {
+                ("evicted".to_string(), format!("\"{}\"", reason.escape_default()))
+            }
+        };
+        rows.push(format!(
+            "{{\"id\": {}, \"peer\": \"{}\", \"state\": \"{state}\", \
+             \"evict_reason\": {reason}, \"outstanding\": {}, \
+             \"requests\": {requests}, \"batches\": {batches}, \
+             \"infer_calls\": {}, \"redispatched\": {}, \"rtt_ms\": {}}}",
+            e.id,
+            e.peer.escape_default(),
+            e.outstanding.load(Ordering::SeqCst),
+            e.stats.infer_calls.load(Ordering::Relaxed),
+            e.stats.redispatched.load(Ordering::Relaxed),
+            fmt_rtt(&mut rtt)
+        ));
+    }
+    let mean_batch = if total_batches == 0 {
+        0.0
+    } else {
+        total_requests as f64 / total_batches as f64
+    };
+    format!(
+        "{{\"requests\": {total_requests}, \"errors\": {}, \
+         \"batches\": {total_batches}, \"mean_batch\": {mean_batch:.4}, \
+         \"rejected_503\": {}, \"redispatched\": {}, \"evictions\": {}, \
+         \"queue\": {{\"depth\": {queue_depth}, \"cap\": {}}}, \
+         \"uptime_s\": {:.3}, \"requests_per_sec\": {:.3}, \
+         \"latency_ms\": {}, \"fleet_rtt_ms\": {}, \
+         \"replicas\": {{\"live\": {live}, \"evicted\": {}, \
+         \"per_replica\": [{}]}}}}",
+        router.errors(),
+        counters.rejected_503.load(Ordering::Relaxed),
+        counters.redispatched.load(Ordering::Relaxed),
+        counters.evictions.load(Ordering::Relaxed),
+        queue_cap.unwrap_or(0),
+        router.uptime_s(),
+        router.requests_per_sec(),
+        fmt_latency(router.latency()),
+        fmt_rtt(&mut pooled),
+        entries.len() - live,
+        rows.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::Json;
+    use super::super::registry::{Assignment, Registry};
+    use std::sync::mpsc;
+
+    #[test]
+    fn reservoir_wraps_and_reports_window() {
+        let r = Reservoir::new(4);
+        assert!(r.samples().is_empty());
+        for us in 1..=10u64 {
+            r.push(us);
+        }
+        let mut s = r.samples();
+        s.sort_unstable();
+        assert_eq!(s, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn totals_equal_sum_of_per_replica_counts() {
+        let reg = Registry::new();
+        let (tx0, _rx0) = mpsc::channel::<Assignment>();
+        let (tx1, _rx1) = mpsc::channel::<Assignment>();
+        let a = reg.admit("a".into(), tx0);
+        let b = reg.admit("b".into(), tx1);
+        a.stats.requests.store(5, Ordering::Relaxed);
+        a.stats.batches.store(2, Ordering::Relaxed);
+        a.stats.rtt_us.push(1500);
+        b.stats.requests.store(3, Ordering::Relaxed);
+        b.stats.batches.store(3, Ordering::Relaxed);
+        reg.evict(&b, "test \"eviction\"");
+        let router = ServeStats::new(8);
+        let counters = RouterCounters::default();
+        counters.rejected_503.store(4, Ordering::Relaxed);
+        let j = fleet_stats_json(&router, &counters, &reg.entries(), 1, Some(64));
+        let parsed = Json::parse(&j).expect("valid json");
+        assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(parsed.get("batches").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(parsed.get("rejected_503").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(
+            parsed.get("queue").unwrap().get("cap").unwrap().as_usize().unwrap(),
+            64
+        );
+        let reps = parsed.get("replicas").unwrap();
+        assert_eq!(reps.get("live").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(reps.get("evicted").unwrap().as_usize().unwrap(), 1);
+        let rows = reps.get("per_replica").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        // the invariant the acceptance criteria pin: top-level totals are
+        // the sum over this array
+        let sum: usize = rows
+            .iter()
+            .map(|r| r.get("requests").unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(sum, 8);
+        assert!(
+            (parsed.get("mean_batch").unwrap().as_f64().unwrap() - 1.6).abs() < 1e-9
+        );
+    }
+}

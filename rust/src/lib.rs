@@ -28,6 +28,10 @@
 //!   rendezvous handshake, rank-ordered collectives (bit-identical summed
 //!   gradients at every world size), in-process multi-rank harness and
 //!   multi-process launcher
+//! - [`fleet`]: sharded serving — one HTTP router fanning γ-keyed
+//!   micro-batches over N full model replicas (weights pushed at
+//!   handshake), with heartbeat eviction, un-acked batch re-dispatch,
+//!   bounded admission and a merged fleet `/stats` view
 pub mod api;
 pub mod config;
 pub mod tensor;
@@ -45,6 +49,7 @@ pub mod bench;
 pub mod checkpoint;
 pub mod serve;
 pub mod dist;
+pub mod fleet;
 
 // Compile-check the README's Rust examples (the "Library use" section) as
 // doctests, so the documented API surface cannot rot.

@@ -7,9 +7,12 @@
 //!             [key=value ...]
 //! bdia eval   --model vit_s10 --gamma 0.0 [--ckpt path] [key=value ...]
 //! bdia serve  --model vit_s10 --ckpt path [--port P] [--workers N]
-//!             [--threads N] [--batch-window-us U]
+//!             [--threads N] [--batch-window-us U] [--queue-cap Q]
+//!             [--replicas N [--rendezvous host:port]]
+//! bdia serve  --replica --model vit_s10 --rendezvous host:port
 //! bdia bench-serve --model vit_s10 [--requests N] [--concurrency C]
 //!             [--workers N] [--addr host:port] [--ckpt path]
+//!             [--replicas N]
 //! bdia bench  [--families vit_s10,gpt_tiny,encdec_mt] [--threads N]
 //!             [--quick] [--out BENCH_5.json]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
@@ -27,8 +30,8 @@
 
 use anyhow::{bail, ensure, Context, Result};
 use bdia::api::{
-    suggest, ApiError, EvalOpts, ModelId, ServeBenchOpts, ServeOpts, Session,
-    SessionBuilder, StdoutSink, TrainOpts,
+    suggest, ApiError, EvalOpts, FleetOpts, ModelId, ServeBenchOpts, ServeOpts,
+    Session, SessionBuilder, StdoutSink, TrainOpts,
 };
 use bdia::config::RankFailurePolicy;
 use bdia::dist::{Rendezvous, WorkerRanks, MAX_RESTARTS};
@@ -96,6 +99,11 @@ const SERVE_FLAGS: &[Flag] = &[
     v("workers"),
     v("batch-window-us"),
     v("threads"),
+    v("queue-cap"),
+    v("replicas"),
+    b("replica"),
+    v("rendezvous"),
+    v("fleet-timeout-s"),
 ];
 const BENCH_SERVE_FLAGS: &[Flag] = &[
     v("model"),
@@ -109,6 +117,9 @@ const BENCH_SERVE_FLAGS: &[Flag] = &[
     v("gamma"),
     v("batch-window-us"),
     v("threads"),
+    v("queue-cap"),
+    v("replicas"),
+    v("fleet-timeout-s"),
     b("no-verify"),
 ];
 const BENCH_FLAGS: &[Flag] =
@@ -498,6 +509,12 @@ fn cmd_eval(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_serve(p: &Parsed) -> Result<()> {
+    if p.flags.contains_key("replica") {
+        return cmd_serve_replica(p);
+    }
+    if let Some(n) = flag_val::<usize>(&p.flags, "replicas")? {
+        return cmd_serve_fleet(p, n);
+    }
     if !p.flags.contains_key("ckpt") {
         eprintln!(
             "warning: no --ckpt given — serving FRESHLY-SEEDED (untrained) \
@@ -511,6 +528,7 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         batch_window: Duration::from_micros(
             flag_val::<u64>(&p.flags, "batch-window-us")?.unwrap_or(2000),
         ),
+        queue_cap: flag_val::<usize>(&p.flags, "queue-cap")?.unwrap_or(1024),
     };
     let handle = session.serve(&opts)?;
     println!(
@@ -528,6 +546,131 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+/// Eviction deadline / heartbeat base for the fleet backplane.
+fn fleet_deadline(p: &Parsed) -> Result<Duration> {
+    Ok(Duration::from_secs_f64(
+        flag_val::<f64>(&p.flags, "fleet-timeout-s")?.unwrap_or(10.0),
+    ))
+}
+
+/// `bdia serve --replica`: run one fleet replica that joins a router's
+/// backplane.  This is the process `spawn_local_replicas` re-execs, and
+/// the multi-host entry point (point --rendezvous at a remote router's
+/// backplane).  Weights arrive over the wire, so no --ckpt here.
+fn cmd_serve_replica(p: &Parsed) -> Result<()> {
+    ensure!(
+        !p.flags.contains_key("replicas"),
+        "--replica (join a fleet) and --replicas (run a fleet) are \
+         mutually exclusive"
+    );
+    let model = p
+        .flags
+        .get("model")
+        .context("--replica requires --model <bundle>")?
+        .clone();
+    let rendezvous = p
+        .flags
+        .get("rendezvous")
+        .context("--replica requires --rendezvous <router backplane host:port>")?
+        .clone();
+    let cfg = bdia::fleet::ReplicaConfig {
+        model,
+        backend: match p.flags.get("backend") {
+            Some(s) => BackendKind::parse(s)?,
+            None => BackendKind::default(),
+        },
+        artifacts_dir: p
+            .flags
+            .get("artifacts")
+            .map_or_else(|| PathBuf::from("artifacts"), PathBuf::from),
+        rendezvous,
+        threads: flag_val::<usize>(&p.flags, "threads")?.unwrap_or(0),
+        deadline: fleet_deadline(p)?,
+        ..bdia::fleet::ReplicaConfig::default()
+    };
+    bdia::fleet::replica::run(&cfg)
+}
+
+/// `bdia serve --replicas N`: run the fleet router and, unless
+/// --rendezvous pins a backplane for externally launched replicas, spawn
+/// N local replica processes against it.
+fn cmd_serve_fleet(p: &Parsed, n: usize) -> Result<()> {
+    ensure!(n >= 1, "--replicas must be >= 1");
+    if !p.flags.contains_key("ckpt") {
+        eprintln!(
+            "warning: no --ckpt given — serving FRESHLY-SEEDED (untrained) \
+             parameters."
+        );
+    }
+    let session = builder_from(p)?.build()?;
+    let opts = FleetOpts {
+        port: flag_val::<u16>(&p.flags, "port")?.unwrap_or(7878),
+        backplane: p.flags.get("rendezvous").cloned(),
+        batch_window: Duration::from_micros(
+            flag_val::<u64>(&p.flags, "batch-window-us")?.unwrap_or(2000),
+        ),
+        queue_cap: flag_val::<usize>(&p.flags, "queue-cap")?.unwrap_or(1024),
+        deadline: fleet_deadline(p)?,
+    };
+    let handle = session.serve_fleet(&opts)?;
+    let mut children = WorkerRanks::default();
+    if p.flags.contains_key("rendezvous") {
+        println!(
+            "fleet: waiting for {n} external replicas to join backplane {} \
+             (`bdia serve --replica --model {} --rendezvous {}`)",
+            handle.backplane_addr(),
+            session.model(),
+            handle.backplane_addr()
+        );
+    } else {
+        let cfg = session.config();
+        let spawn = bdia::fleet::ReplicaSpawnOpts {
+            model: cfg.model.clone(),
+            backend: cfg.backend.name().to_string(),
+            artifacts: cfg.artifacts_dir.clone(),
+            threads: cfg.threads,
+            fleet_timeout_s: opts.deadline.as_secs_f64(),
+        };
+        children.0 =
+            bdia::fleet::spawn_local_replicas(handle.backplane_addr(), n, &spawn)?;
+        println!(
+            "fleet: spawned {n} local replicas against backplane {}",
+            handle.backplane_addr()
+        );
+    }
+    handle.wait_ready(n, Duration::from_secs(120))?;
+    println!(
+        "fleet ready: {} on http://{} ({n} replicas live, window {:?}, \
+         queue cap {})",
+        session.model(),
+        handle.addr(),
+        opts.batch_window,
+        opts.queue_cap
+    );
+    println!("endpoints: POST /infer  GET /healthz  GET /stats  POST /shutdown");
+    drop(session);
+    handle.join()?;
+    reap_replicas(&mut children);
+    Ok(())
+}
+
+/// Reap replica children tolerantly: after a graceful fleet shutdown every
+/// replica exits on `FLEET_GOODBYE`, but a replica killed mid-run is the
+/// failure mode the router absorbs by design — routine, not worth a
+/// non-zero exit from the router process.
+fn reap_replicas(children: &mut WorkerRanks) {
+    for (i, mut child) in std::mem::take(&mut children.0).into_iter().enumerate()
+    {
+        match child.wait() {
+            Ok(status) if !status.success() => {
+                eprintln!("warning: replica {i} exited with {status}");
+            }
+            Err(e) => eprintln!("warning: reaping replica {i}: {e}"),
+            Ok(_) => {}
+        }
+    }
+}
+
 /// Resolve `host:port` (hostnames included, e.g. `localhost:7878`) to a
 /// socket address.
 fn resolve_addr(s: &str) -> Result<std::net::SocketAddr> {
@@ -541,7 +684,7 @@ fn resolve_addr(s: &str) -> Result<std::net::SocketAddr> {
 fn cmd_bench_serve(p: &Parsed) -> Result<()> {
     let session = builder_from(p)?.build()?;
     let defaults = ServeBenchOpts::default();
-    let opts = ServeBenchOpts {
+    let mut opts = ServeBenchOpts {
         requests: flag_val::<usize>(&p.flags, "requests")?
             .unwrap_or(defaults.requests),
         concurrency: flag_val::<usize>(&p.flags, "concurrency")?
@@ -554,7 +697,59 @@ fn cmd_bench_serve(p: &Parsed) -> Result<()> {
         addr: p.flags.get("addr").map(|a| resolve_addr(a)).transpose()?,
         verify: !p.flags.contains_key("no-verify"),
     };
-    let summary = session.bench_serve(&opts)?;
+
+    // --replicas N: self-host a fleet (router + N local replica processes)
+    // and aim the load at its front door; responses must still be
+    // bit-identical to direct local inference on the session's params
+    let fleet = match flag_val::<usize>(&p.flags, "replicas")? {
+        Some(n) => {
+            ensure!(
+                opts.addr.is_none(),
+                "--replicas self-hosts a fleet; drop --addr"
+            );
+            let fopts = FleetOpts {
+                port: 0,
+                backplane: None,
+                batch_window: opts.batch_window,
+                queue_cap: flag_val::<usize>(&p.flags, "queue-cap")?
+                    .unwrap_or(1024),
+                deadline: fleet_deadline(p)?,
+            };
+            let handle = session.serve_fleet(&fopts)?;
+            let cfg = session.config();
+            let spawn = bdia::fleet::ReplicaSpawnOpts {
+                model: cfg.model.clone(),
+                backend: cfg.backend.name().to_string(),
+                artifacts: cfg.artifacts_dir.clone(),
+                threads: cfg.threads,
+                fleet_timeout_s: fopts.deadline.as_secs_f64(),
+            };
+            let mut children = WorkerRanks::default();
+            children.0 = bdia::fleet::spawn_local_replicas(
+                handle.backplane_addr(),
+                n,
+                &spawn,
+            )?;
+            handle.wait_ready(n, Duration::from_secs(120))?;
+            println!(
+                "bench-serve: fleet of {n} replicas behind http://{}",
+                handle.addr()
+            );
+            opts.addr = Some(handle.addr());
+            Some((handle, children))
+        }
+        None => None,
+    };
+
+    let summary = session.bench_serve(&opts);
+    if let Some((handle, mut children)) = fleet {
+        handle.stop();
+        if let Err(e) = handle.join() {
+            eprintln!("warning: fleet shutdown: {e}");
+        }
+        reap_replicas(&mut children);
+    }
+    let summary = summary?;
     ensure!(summary.errors == 0, "{} requests failed", summary.errors);
     ensure!(
         summary.mismatches == 0,
@@ -665,10 +860,13 @@ fn print_help() {
          [--on-rank-failure abort|restart]] [key=value ...]\n  \
          bdia eval  --model <bundle> --gamma <g> [--ckpt <file>]\n  \
          bdia serve --model <bundle> --ckpt <file> [--port P] [--workers N] \
-         [--threads N] [--batch-window-us U]\n  \
+         [--threads N] [--batch-window-us U] [--queue-cap Q] \
+         [--replicas N [--rendezvous host:port] [--fleet-timeout-s S]]\n  \
+         bdia serve --replica --model <bundle> --rendezvous host:port \
+         [--backend native|pjrt] [--threads N]\n  \
          bdia bench-serve --model <bundle> [--requests N] [--concurrency C] \
          [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
-         [--no-verify]\n  \
+         [--replicas N] [--no-verify]\n  \
          bdia bench [--families a,b,c] [--threads N] [--quick] \
          [--out BENCH_5.json]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
@@ -704,7 +902,16 @@ fn print_help() {
          dynamic micro-batching across concurrent requests; `bench-serve` \
          load-tests a server (self-hosted on an ephemeral port unless --addr \
          is given) and verifies responses are bit-identical to direct \
-         inference.\n\
+         inference.  Saturated queues answer 503 + Retry-After instead of \
+         queueing unboundedly (--queue-cap, 0 = unbounded).\n\
+         Fleet serving: `serve --replicas N` runs a router that fans \
+         sticky γ-keyed micro-batches over N model replicas (spawned \
+         locally, or joining from other hosts via `serve --replica \
+         --rendezvous <backplane>`); replicas receive the router's exact \
+         weights at join, a silent replica is evicted after \
+         --fleet-timeout-s and its un-acked batches re-dispatched, and \
+         responses stay bit-identical to single-process serving.  \
+         `bench-serve --replicas N` proves that under load.\n\
          Benchmarks: `bench` times fwd/bwd/infer per model family at 1 and \
          N threads and writes BENCH_5.json.\n\n\
          Library use: everything above is a thin client of \

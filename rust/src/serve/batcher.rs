@@ -7,6 +7,11 @@
 //! concurrent load the queue is rarely empty and batches fill immediately;
 //! an idle server degenerates to latency-optimal singleton batches after
 //! one window.
+//!
+//! Admission is bounded: [`BatchQueue::bounded`] caps the backlog, and
+//! [`BatchQueue::push`] reports [`PushOutcome::Saturated`] instead of
+//! buffering without limit — the server turns that into a prompt `503`
+//! with `Retry-After` so clients back off instead of piling on.
 
 use super::wire::Example;
 use std::collections::VecDeque;
@@ -22,9 +27,20 @@ pub struct Job {
     pub resp: Sender<Result<(f32, f32), String>>,
 }
 
+/// What happened to a [`BatchQueue::push`]: admitted, bounced off the cap
+/// (with the depth/cap pair the `503` body reports), or refused because
+/// the queue is shutting down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    Accepted,
+    Saturated { depth: usize, cap: usize },
+    ShuttingDown,
+}
+
 pub struct BatchQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
+    cap: usize,
 }
 
 struct Inner {
@@ -39,23 +55,62 @@ impl Default for BatchQueue {
 }
 
 impl BatchQueue {
+    /// Unbounded queue (admission control off).
     pub fn new() -> Self {
+        Self::bounded(0)
+    }
+
+    /// Queue admitting at most `cap` waiting jobs; `cap == 0` means
+    /// unbounded.
+    pub fn bounded(cap: usize) -> Self {
         BatchQueue {
             inner: Mutex::new(Inner { q: VecDeque::new(), shutdown: false }),
             cv: Condvar::new(),
+            cap: if cap == 0 { usize::MAX } else { cap },
         }
     }
 
-    /// Enqueue a job; returns false (job dropped) after shutdown.
-    pub fn push(&self, job: Job) -> bool {
+    /// The admission cap, or `None` if unbounded.
+    pub fn cap(&self) -> Option<usize> {
+        if self.cap == usize::MAX {
+            None
+        } else {
+            Some(self.cap)
+        }
+    }
+
+    /// Try to enqueue a job; saturation and shutdown both leave the job
+    /// with the caller (its response channel is untouched).
+    pub fn push(&self, job: Job) -> PushOutcome {
         let mut g = self.inner.lock().unwrap();
         if g.shutdown {
-            return false;
+            return PushOutcome::ShuttingDown;
+        }
+        if g.q.len() >= self.cap {
+            return PushOutcome::Saturated { depth: g.q.len(), cap: self.cap };
         }
         g.q.push_back(job);
         drop(g);
         self.cv.notify_all();
-        true
+        PushOutcome::Accepted
+    }
+
+    /// Return already-admitted jobs to the *front* of the queue, in their
+    /// original order (the router uses this to re-dispatch batches a dead
+    /// replica never acknowledged).  Bypasses the admission cap and the
+    /// shutdown gate — these jobs were accepted once and still hold live
+    /// response channels; re-queueing contiguously also keeps them
+    /// γ-coalescible as a unit.
+    pub fn push_front_all(&self, jobs: Vec<Job>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for job in jobs.into_iter().rev() {
+            g.q.push_front(job);
+        }
+        drop(g);
+        self.cv.notify_all();
     }
 
     pub fn len(&self) -> usize {
@@ -143,7 +198,7 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..3 {
             let (j, rx) = job(0.0);
-            assert!(q.push(j));
+            assert_eq!(q.push(j), PushOutcome::Accepted);
             rxs.push(rx);
         }
         let batch = q.next_batch(8, Duration::from_millis(1)).unwrap();
@@ -154,11 +209,13 @@ mod tests {
     #[test]
     fn respects_max_batch() {
         let q = BatchQueue::new();
-        let rxs: Vec<_> = (0..5).map(|_| {
-            let (j, rx) = job(0.5);
-            q.push(j);
-            rx
-        }).collect();
+        let rxs: Vec<_> = (0..5)
+            .map(|_| {
+                let (j, rx) = job(0.5);
+                q.push(j);
+                rx
+            })
+            .collect();
         assert_eq!(q.next_batch(2, Duration::ZERO).unwrap().len(), 2);
         assert_eq!(q.next_batch(2, Duration::ZERO).unwrap().len(), 2);
         assert_eq!(q.next_batch(2, Duration::ZERO).unwrap().len(), 1);
@@ -207,7 +264,11 @@ mod tests {
         q.push(j);
         q.shutdown();
         let (j2, _r2) = job(0.0);
-        assert!(!q.push(j2), "push after shutdown must be rejected");
+        assert_eq!(
+            q.push(j2),
+            PushOutcome::ShuttingDown,
+            "push after shutdown must be rejected"
+        );
         // drain without waiting out any window
         let t0 = Instant::now();
         assert_eq!(q.next_batch(4, Duration::from_secs(5)).unwrap().len(), 1);
@@ -228,5 +289,97 @@ mod tests {
         let batch = q.next_batch(4, Duration::ZERO).unwrap();
         assert_eq!(batch.len(), 1);
         feeder.join().unwrap();
+    }
+
+    #[test]
+    fn saturation_bounces_with_depth_and_cap() {
+        let q = BatchQueue::bounded(2);
+        assert_eq!(q.cap(), Some(2));
+        let (j1, _r1) = job(0.0);
+        let (j2, _r2) = job(0.0);
+        assert_eq!(q.push(j1), PushOutcome::Accepted);
+        assert_eq!(q.push(j2), PushOutcome::Accepted);
+        let (j3, _r3) = job(0.0);
+        assert_eq!(q.push(j3), PushOutcome::Saturated { depth: 2, cap: 2 });
+        // draining makes room again
+        assert_eq!(q.next_batch(8, Duration::ZERO).unwrap().len(), 2);
+        let (j4, _r4) = job(0.0);
+        assert_eq!(q.push(j4), PushOutcome::Accepted);
+    }
+
+    #[test]
+    fn zero_cap_means_unbounded() {
+        let q = BatchQueue::bounded(0);
+        assert_eq!(q.cap(), None);
+        let mut rxs = Vec::new();
+        for _ in 0..10_000 {
+            let (j, rx) = job(0.0);
+            assert_eq!(q.push(j), PushOutcome::Accepted);
+            rxs.push(rx);
+        }
+        assert_eq!(q.len(), 10_000);
+    }
+
+    #[test]
+    fn push_front_all_requeues_in_order_and_past_the_cap() {
+        let q = BatchQueue::bounded(1);
+        let (j1, _r1) = job(0.5);
+        assert_eq!(q.push(j1), PushOutcome::Accepted);
+        let batch = q.next_batch(1, Duration::ZERO).unwrap();
+        // another job sneaks in behind the re-dispatch
+        let (j2, _r2) = job(0.25);
+        assert_eq!(q.push(j2), PushOutcome::Accepted);
+        // re-queue jumps the line (and ignores the cap of 1)
+        q.push_front_all(batch);
+        assert_eq!(q.len(), 2);
+        let b1 = q.next_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b1.len(), 1);
+        assert_eq!(b1[0].gamma.to_bits(), 0.5f32.to_bits(), "requeued job first");
+        let b2 = q.next_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b2[0].gamma.to_bits(), 0.25f32.to_bits());
+    }
+
+    /// Satellite property test: under a deterministic pseudo-random
+    /// workload, no dispatched micro-batch ever mixes γ keys or exceeds
+    /// the batch dimension, and every admitted job is dispatched exactly
+    /// once.
+    #[test]
+    fn random_workload_never_mixes_gammas_or_overfills() {
+        let gammas = [-0.5f32, 0.0, 0.5];
+        let mut state: u64 = 0x5eed_cafe_f00d_beef;
+        let mut next = || {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        let q = BatchQueue::new();
+        let max = 4usize;
+        let total = 257usize;
+        let mut rxs = Vec::new();
+        let mut pushed = 0usize;
+        let mut dispatched = 0usize;
+        while dispatched < total {
+            // interleave bursts of pushes with drains
+            let burst = (next() % 5).min(total - pushed);
+            for _ in 0..burst {
+                let (j, rx) = job(gammas[next() % gammas.len()]);
+                assert_eq!(q.push(j), PushOutcome::Accepted);
+                rxs.push(rx);
+                pushed += 1;
+            }
+            if pushed == dispatched {
+                continue; // nothing queued yet
+            }
+            let batch = q.next_batch(max, Duration::ZERO).unwrap();
+            assert!(!batch.is_empty() && batch.len() <= max, "len {}", batch.len());
+            let gkey = batch[0].gamma.to_bits();
+            for j in &batch {
+                assert_eq!(j.gamma.to_bits(), gkey, "mixed gammas in one batch");
+            }
+            dispatched += batch.len();
+        }
+        assert_eq!(dispatched, total);
+        assert!(q.is_empty());
     }
 }

@@ -112,6 +112,7 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
                 workers: opts.workers,
                 batch_window: opts.batch_window,
                 threads: opts.threads,
+                ..ServeConfig::default()
             })?;
             let a = srv.addr();
             println!(

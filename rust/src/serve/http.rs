@@ -2,18 +2,30 @@
 //! inference server and its load generator: one request per connection
 //! (`Connection: close`), `Content-Length` bodies, no chunked encoding, no
 //! keep-alive.  No external crates, by construction.
+//!
+//! The request reader is hardened against hostile inputs: header lines,
+//! header counts and body sizes are all bounded, and the body buffer grows
+//! incrementally as bytes actually arrive — a lying `Content-Length` can
+//! never reserve memory up front.  Failures carry a typed [`HttpError`]
+//! with the status the server should answer (`400`/`413`/`431`), so the
+//! single-process server and the fleet router front door share one
+//! rejection contract.
 
 use anyhow::{ensure, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
-/// Upper bound on accepted bodies — a full ViT image is ~12KB, so 16MB is
-/// generous headroom for any registered bundle.
-const MAX_BODY: usize = 16 << 20;
+/// Default upper bound on accepted bodies — a full ViT image is ~12KB, so
+/// 16MB is generous headroom for any registered bundle.  Servers that know
+/// their exact wire format pass a tighter cap to [`read_request_capped`].
+pub const MAX_BODY: usize = 16 << 20;
 /// Start line / header line length cap (bounds per-connection memory).
 const MAX_LINE: u64 = 8 << 10;
 /// Header count cap.
 const MAX_HEADERS: usize = 64;
+/// Body copy granularity: memory is committed per chunk received, never
+/// from the declared Content-Length.
+const BODY_CHUNK: usize = 8 << 10;
 
 pub struct Request {
     pub method: String,
@@ -21,38 +33,128 @@ pub struct Request {
     pub body: Vec<u8>,
 }
 
+/// A typed request-read failure: the status line the server should answer
+/// with plus a human-readable detail for the response body.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub reason: &'static str,
+    pub detail: String,
+}
+
+impl HttpError {
+    fn bad(detail: impl Into<String>) -> Self {
+        HttpError { status: 400, reason: "Bad Request", detail: detail.into() }
+    }
+
+    fn too_large(declared: usize, cap: usize) -> Self {
+        HttpError {
+            status: 413,
+            reason: "Payload Too Large",
+            detail: format!(
+                "declared body of {declared} bytes exceeds this endpoint's \
+                 limit of {cap} bytes"
+            ),
+        }
+    }
+
+    fn header_overflow(detail: impl Into<String>) -> Self {
+        HttpError {
+            status: 431,
+            reason: "Request Header Fields Too Large",
+            detail: detail.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}: {}", self.status, self.reason, self.detail)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
 /// Read one `\n`-terminated line of at most `MAX_LINE` bytes — a client
 /// streaming an endless unterminated line gets an error, not an OOM.
-fn read_line_capped(r: &mut impl BufRead) -> Result<String> {
+fn read_line_capped(r: &mut impl BufRead) -> std::result::Result<String, HttpError> {
     let mut line = String::new();
     let n = r
         .take(MAX_LINE)
         .read_line(&mut line)
-        .context("reading protocol line")?;
-    ensure!(n > 0, "connection closed mid-request");
-    ensure!(
-        line.ends_with('\n') || (n as u64) < MAX_LINE,
-        "protocol line exceeds {MAX_LINE} bytes"
-    );
+        .map_err(|e| HttpError::bad(format!("reading protocol line: {e}")))?;
+    if n == 0 {
+        return Err(HttpError::bad("connection closed mid-request"));
+    }
+    if !line.ends_with('\n') && (n as u64) >= MAX_LINE {
+        return Err(HttpError::header_overflow(format!(
+            "protocol line exceeds {MAX_LINE} bytes"
+        )));
+    }
     Ok(line)
 }
 
-/// Read one request (start line + headers + `Content-Length` body).
+/// Read one request with the default [`MAX_BODY`] cap, as a plain `anyhow`
+/// error (the status classification is flattened into the message).
 pub fn read_request(stream: &TcpStream) -> Result<Request> {
+    read_request_capped(stream, MAX_BODY).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Read one request (start line + headers + `Content-Length` body),
+/// rejecting bodies over `max_body` with a typed `413` **before** any
+/// allocation happens — the declared length is checked first, and the
+/// bytes that do arrive are committed chunk by chunk.
+pub fn read_request_capped(
+    stream: &TcpStream,
+    max_body: usize,
+) -> std::result::Result<Request, HttpError> {
     let mut r = BufReader::new(stream);
     let line = read_line_capped(&mut r)?;
     let mut parts = line.split_whitespace();
-    let method = parts.next().context("empty request line")?.to_string();
-    let path = parts.next().context("request line missing path")?.to_string();
+    let method = parts
+        .next()
+        .ok_or_else(|| HttpError::bad("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| HttpError::bad("request line missing path"))?
+        .to_string();
     let content_len = read_headers(&mut r)?;
-    ensure!(content_len <= MAX_BODY, "request body too large ({content_len})");
-    let mut body = vec![0u8; content_len];
-    r.read_exact(&mut body).context("reading request body")?;
+    if content_len > max_body {
+        return Err(HttpError::too_large(content_len, max_body));
+    }
+    let body = read_body(&mut r, content_len)?;
     Ok(Request { method, path, body })
 }
 
+/// Incremental body read: the buffer grows with received bytes only, and a
+/// connection that closes short of its declared length is a `400`, not a
+/// hang or a partial success.
+fn read_body(
+    r: &mut impl BufRead,
+    content_len: usize,
+) -> std::result::Result<Vec<u8>, HttpError> {
+    let mut body = Vec::with_capacity(content_len.min(BODY_CHUNK));
+    let mut chunk = [0u8; BODY_CHUNK];
+    while body.len() < content_len {
+        let want = (content_len - body.len()).min(BODY_CHUNK);
+        let n = r
+            .read(&mut chunk[..want])
+            .map_err(|e| HttpError::bad(format!("reading request body: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::bad(format!(
+                "connection closed after {} of {} declared body bytes",
+                body.len(),
+                content_len
+            )));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    Ok(body)
+}
+
 /// Consume header lines until the blank separator; returns Content-Length.
-fn read_headers(r: &mut impl BufRead) -> Result<usize> {
+fn read_headers(r: &mut impl BufRead) -> std::result::Result<usize, HttpError> {
     let mut content_len = 0usize;
     for _ in 0..MAX_HEADERS {
         let h = read_line_capped(r)?;
@@ -62,11 +164,14 @@ fn read_headers(r: &mut impl BufRead) -> Result<usize> {
         }
         if let Some((k, v)) = h.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
-                content_len = v.trim().parse().context("bad Content-Length")?;
+                content_len = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| HttpError::bad("bad Content-Length"))?;
             }
         }
     }
-    anyhow::bail!("too many headers (> {MAX_HEADERS})")
+    Err(HttpError::header_overflow(format!("too many headers (> {MAX_HEADERS})")))
 }
 
 /// Write a response with status, content type and body.
@@ -77,13 +182,32 @@ pub fn write_response(
     content_type: &str,
     body: &[u8],
 ) -> Result<()> {
+    write_response_with(stream, status, reason, content_type, &[], body)
+}
+
+/// [`write_response`] plus extra headers (e.g. `Retry-After` on a `503`).
+pub fn write_response_with(
+    stream: &TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
     let mut s = stream;
-    write!(
-        s,
+    let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: close\r\n",
         body.len()
-    )?;
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    s.write_all(head.as_bytes())?;
     s.write_all(body)?;
     s.flush()?;
     Ok(())
@@ -119,7 +243,7 @@ pub fn read_response(stream: &TcpStream) -> Result<(u16, Vec<u8>)> {
         .context("malformed status line")?
         .parse()
         .context("non-numeric status")?;
-    let content_len = read_headers(&mut r)?;
+    let content_len = read_headers(&mut r).map_err(|e| anyhow::anyhow!("{e}"))?;
     ensure!(content_len <= MAX_BODY, "response body too large");
     let mut body = vec![0u8; content_len];
     r.read_exact(&mut body).context("reading response body")?;
@@ -129,7 +253,7 @@ pub fn read_response(stream: &TcpStream) -> Result<(u16, Vec<u8>)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::net::TcpListener;
+    use std::net::{Shutdown, TcpListener};
 
     #[test]
     fn request_response_roundtrip_over_loopback() {
@@ -148,6 +272,110 @@ mod tests {
         let (status, body) = read_response(&stream).unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, b"\x01\x02\x03");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn extra_headers_survive_the_wire() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = read_request(&stream).unwrap();
+            write_response_with(
+                &stream,
+                503,
+                "Service Unavailable",
+                "application/json",
+                &[("Retry-After", "1".to_string())],
+                b"{}",
+            )
+            .unwrap();
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        write_request(&stream, "GET", "/", b"").unwrap();
+        // read the raw response so the header itself is visible
+        let mut raw = Vec::new();
+        (&stream).read_to_end(&mut raw).unwrap();
+        let text = String::from_utf8_lossy(&raw);
+        assert!(text.starts_with("HTTP/1.1 503"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_declared_body_is_rejected_as_413() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            // the rejection must come from the declared length alone — no
+            // body bytes were ever sent, so a reader that allocated or
+            // waited for them would hang here instead of erroring
+            let err = read_request_capped(&stream, 1024).unwrap_err();
+            assert_eq!(err.status, 413);
+            assert!(err.detail.contains("1024"), "{err}");
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut s = &stream;
+        write!(s, "POST /infer HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n")
+            .unwrap();
+        s.flush().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn header_flood_is_rejected_as_431() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let err = read_request_capped(&stream, MAX_BODY).unwrap_err();
+            assert_eq!(err.status, 431);
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut s = &stream;
+        write!(s, "GET / HTTP/1.1\r\n").unwrap();
+        for i in 0..100 {
+            write!(s, "X-Flood-{i}: y\r\n").unwrap();
+        }
+        write!(s, "\r\n").unwrap();
+        s.flush().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn endless_header_line_is_rejected_as_431() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let err = read_request_capped(&stream, MAX_BODY).unwrap_err();
+            assert_eq!(err.status, 431);
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut s = &stream;
+        let long = "a".repeat(3 * (MAX_LINE as usize));
+        write!(s, "GET /{long} HTTP/1.1\r\n\r\n").unwrap();
+        s.flush().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn truncated_body_is_a_400_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let err = read_request_capped(&stream, MAX_BODY).unwrap_err();
+            assert_eq!(err.status, 400);
+            assert!(err.detail.contains("3 of 10"), "{err}");
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut s = &stream;
+        write!(s, "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap();
+        s.flush().unwrap();
+        stream.shutdown(Shutdown::Write).unwrap();
         server.join().unwrap();
     }
 }

@@ -70,6 +70,10 @@ pub struct ServeConfig {
     /// the process-wide pool configuration untouched / auto).  Responses
     /// are bit-identical at any value.
     pub threads: usize,
+    /// Admission cap on queued requests; pushes past it get a prompt
+    /// `503` + `Retry-After` instead of unbounded buffering (0 =
+    /// unbounded).
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +87,7 @@ impl Default for ServeConfig {
             workers: 4,
             batch_window: Duration::from_millis(2),
             threads: 0,
+            queue_cap: 1024,
         }
     }
 }
@@ -96,6 +101,9 @@ struct Shared {
     addr: SocketAddr,
     workers: usize,
     batch_window: Duration,
+    /// Request-body cap for this bundle's exact wire format — anything
+    /// larger is rejected `413` before allocation.
+    max_body: usize,
     /// Per-request observer ([`crate::api::events::EventSink`]); the
     /// default server uses a no-op sink, sessions pass theirs through.
     sink: Arc<dyn EventSink>,
@@ -167,15 +175,18 @@ impl Server {
         let listener = TcpListener::bind(("127.0.0.1", cfg.port))
             .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
         let addr = listener.local_addr()?;
+        let max_body =
+            wire::body_len(rt.manifest.family, &rt.manifest.dims).max(512);
         let shared = Arc::new(Shared {
             rt,
             params,
-            queue: BatchQueue::new(),
+            queue: BatchQueue::bounded(cfg.queue_cap),
             stats: ServeStats::new(LATENCY_RESERVOIR),
             shutdown: AtomicBool::new(false),
             addr,
             workers: cfg.workers,
             batch_window: cfg.batch_window,
+            max_body,
             sink,
         });
         let mut threads = Vec::with_capacity(cfg.workers + 1);
@@ -219,6 +230,31 @@ impl Server {
         self.stop();
         self.join()
     }
+}
+
+/// The shared `503` contract (single-process server and fleet router):
+/// `Retry-After` header plus a JSON body naming the queue depth and cap so
+/// clients can implement informed backoff.  `cap = None` renders as 0
+/// (unbounded).
+pub(crate) fn write_503(
+    stream: &TcpStream,
+    error: &str,
+    depth: usize,
+    cap: Option<usize>,
+) -> Result<()> {
+    let body = format!(
+        "{{\"error\": \"{error}\", \"queue_depth\": {depth}, \
+         \"queue_cap\": {}, \"retry_after_s\": 1}}",
+        cap.unwrap_or(0)
+    );
+    http::write_response_with(
+        stream,
+        503,
+        "Service Unavailable",
+        "application/json",
+        &[("Retry-After", "1".to_string())],
+        body.as_bytes(),
+    )
 }
 
 fn initiate_shutdown(shared: &Shared) {
@@ -284,15 +320,15 @@ fn worker_loop(shared: &Arc<Shared>) {
 fn handle_conn(stream: &TcpStream, shared: &Arc<Shared>) {
     stream.set_read_timeout(Some(CONN_READ_TIMEOUT)).ok();
     stream.set_nodelay(true).ok();
-    let req = match http::read_request(stream) {
+    let req = match http::read_request_capped(stream, shared.max_body) {
         Ok(r) => r,
         Err(e) => {
             let _ = http::write_response(
                 stream,
-                400,
-                "Bad Request",
+                e.status,
+                e.reason,
                 "text/plain",
-                format!("{e:#}\n").as_bytes(),
+                format!("{e}\n").as_bytes(),
             );
             return;
         }
@@ -314,9 +350,12 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<Shared>) {
             );
         }
         ("GET", "/stats") => {
-            let body = shared
-                .stats
-                .to_json(&shared.rt.call_counts(), shared.workers);
+            let body = shared.stats.to_json(
+                &shared.rt.call_counts(),
+                shared.workers,
+                shared.queue.len(),
+                shared.queue.cap(),
+            );
             let _ = http::write_response(
                 stream,
                 200,
@@ -369,25 +408,35 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
         }
     };
     let (tx, rx) = mpsc::channel();
-    let accepted = shared.queue.push(Job {
+    let outcome = shared.queue.push(Job {
         example,
         gamma,
         enqueued: t0,
         resp: tx,
     });
-    if !accepted {
-        shared.sink.on_request(&RequestEvent {
-            latency_us: t0.elapsed().as_micros() as u64,
-            ok: false,
-        });
-        let _ = http::write_response(
-            stream,
-            503,
-            "Service Unavailable",
-            "text/plain",
-            b"server is shutting down\n",
-        );
-        return;
+    match outcome {
+        batcher::PushOutcome::Accepted => {}
+        batcher::PushOutcome::Saturated { depth, cap } => {
+            shared.sink.on_request(&RequestEvent {
+                latency_us: t0.elapsed().as_micros() as u64,
+                ok: false,
+            });
+            let _ = write_503(stream, "queue full", depth, Some(cap));
+            return;
+        }
+        batcher::PushOutcome::ShuttingDown => {
+            shared.sink.on_request(&RequestEvent {
+                latency_us: t0.elapsed().as_micros() as u64,
+                ok: false,
+            });
+            let _ = write_503(
+                stream,
+                "server is shutting down",
+                shared.queue.len(),
+                shared.queue.cap(),
+            );
+            return;
+        }
     }
     let outcome = rx.recv();
     let latency_us = t0.elapsed().as_micros() as u64;

@@ -174,7 +174,15 @@ impl ServeStats {
     }
 
     /// Render the `/stats` JSON document (hand-rolled — no serde offline).
-    pub fn to_json(&self, exec_calls: &[(String, u64)], workers: usize) -> String {
+    /// `queue_depth`/`queue_cap` describe the admission queue at render
+    /// time (`None` cap = unbounded, rendered as 0).
+    pub fn to_json(
+        &self,
+        exec_calls: &[(String, u64)],
+        workers: usize,
+        queue_depth: usize,
+        queue_cap: Option<usize>,
+    ) -> String {
         let lat = self.latency();
         let fmt_lat = |l: Option<LatencySummary>| match l {
             Some(l) => format!(
@@ -193,6 +201,7 @@ impl ServeStats {
         format!(
             "{{\"requests\": {}, \"errors\": {}, \"batches\": {}, \
              \"mean_batch\": {:.4}, \"workers\": {workers}, \
+             \"queue\": {{\"depth\": {queue_depth}, \"cap\": {}}}, \
              \"uptime_s\": {:.3}, \"requests_per_sec\": {:.3}, \
              \"examples_per_sec\": {:.3}, \"kernel_threads\": {}, \
              \"workspace\": {{\"hits\": {}, \"misses\": {}}}, \
@@ -203,6 +212,7 @@ impl ServeStats {
             self.errors(),
             self.batches(),
             self.mean_batch(),
+            queue_cap.unwrap_or(0),
             self.uptime_s(),
             self.requests_per_sec(),
             self.examples_per_sec(),
@@ -297,9 +307,13 @@ mod tests {
         s.record_request();
         s.record_batch(2);
         s.record_latency_us(1500);
-        let j = s.to_json(&[("model_infer_ex".into(), 1)], 4);
+        let j = s.to_json(&[("model_infer_ex".into(), 1)], 4, 3, Some(1024));
         let parsed = Json::parse(&j).expect("valid json");
         assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 1);
+        // admission queue state surfaces for backpressure diagnosis
+        let queue = parsed.get("queue").unwrap();
+        assert_eq!(queue.get("depth").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(queue.get("cap").unwrap().as_usize().unwrap(), 1024);
         // max + reservoir state surface so a wrapped p99 can't mislead
         assert!(
             parsed.get("latency_ms").unwrap().get("max").unwrap().as_f64().unwrap()

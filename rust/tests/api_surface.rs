@@ -326,6 +326,7 @@ fn session_serve_uses_in_memory_params_and_emits_request_events() {
             port: 0,
             workers: 1,
             batch_window: Duration::from_micros(100),
+            ..ServeOpts::default()
         })
         .unwrap();
     let ds = session.dataset().unwrap();

@@ -1,0 +1,270 @@
+//! Fleet integration over real sockets: a router fanning requests across
+//! in-process replica threads must answer bit-identically to direct
+//! inference, survive a replica dying mid-load (evict + re-dispatch the
+//! un-acked batch, then re-admit a newcomer), and bounce requests with a
+//! prompt `503 Retry-After` once the admission queue saturates.
+
+use bdia::config::json::Json;
+use bdia::fleet::replica::serve_connection;
+use bdia::fleet::{FleetConfig, Router};
+use bdia::model::ParamStore;
+use bdia::runtime::Runtime;
+use bdia::serve::wire::Example;
+use bdia::serve::{client, http, wire};
+use std::io::Read;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Local reference runtime + the same seed-0 params the ckpt-less router
+/// initializes (and pushes to every replica in `FLEET_WELCOME`).
+fn reference(model: &str) -> (Runtime, ParamStore) {
+    let rt = Runtime::load(&artifacts(), model).unwrap();
+    let params = ParamStore::init(&rt.manifest, 0);
+    (rt, params)
+}
+
+fn start_router(model: &str, queue_cap: usize) -> Router {
+    let (rt, params) = reference(model);
+    Router::start_with_parts(
+        FleetConfig {
+            model: model.into(),
+            artifacts_dir: artifacts(),
+            port: 0,
+            batch_window: Duration::from_millis(5),
+            queue_cap,
+            deadline: Duration::from_secs(2),
+            ..FleetConfig::default()
+        },
+        rt,
+        params,
+        std::sync::Arc::new(bdia::api::NullSink),
+    )
+    .expect("router start")
+}
+
+/// Run one replica as an in-process thread (no child process needed):
+/// its own runtime, a real TCP connection to the router's backplane.
+fn spawn_replica(
+    router: &Router,
+    model: &'static str,
+    die_after_batches: Option<usize>,
+) -> JoinHandle<()> {
+    let backplane = router.backplane_addr();
+    std::thread::spawn(move || {
+        let rt = Runtime::load(&artifacts(), model).unwrap();
+        let stream = TcpStream::connect(backplane).unwrap();
+        serve_connection(stream, &rt, Duration::from_secs(2), die_after_batches)
+            .unwrap();
+    })
+}
+
+fn gpt_example(i: usize, seq: usize, vocab: usize) -> Example {
+    let tokens: Vec<i32> =
+        (0..seq).map(|j| ((i * 7 + j * 3 + 1) % vocab) as i32).collect();
+    let labels: Vec<i32> =
+        (0..seq).map(|j| ((i * 5 + j * 2 + 2) % vocab) as i32).collect();
+    Example::Tok { tokens, labels }
+}
+
+#[test]
+fn fleet_round_trip_bit_exact_across_replicas() {
+    let (rt, params) = reference("smoke_gpt");
+    let dims = rt.manifest.dims.clone();
+    let router = start_router("smoke_gpt", 0);
+    let addr = router.addr();
+    let replicas: Vec<_> =
+        (0..2).map(|_| spawn_replica(&router, "smoke_gpt", None)).collect();
+    router.wait_ready(2, Duration::from_secs(30)).unwrap();
+
+    // concurrent mixed-γ load: sticky batching must keep γ keys apart,
+    // and every response must land on the request that sent it
+    let n = 16usize;
+    let examples: Vec<Example> =
+        (0..n).map(|i| gpt_example(i, dims.seq, dims.vocab)).collect();
+    let gammas: Vec<f32> =
+        (0..n).map(|i| if i % 2 == 0 { 0.0 } else { 0.5 }).collect();
+    let expected: Vec<(f32, f32)> = examples
+        .iter()
+        .zip(&gammas)
+        .map(|(e, g)| wire::infer_one(&rt, &params, e, *g).unwrap())
+        .collect();
+    let handles: Vec<_> = examples
+        .iter()
+        .zip(&gammas)
+        .map(|(e, g)| {
+            let body = wire::encode(e, *g);
+            std::thread::spawn(move || client::infer(addr, &body).unwrap())
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&expected) {
+        let (loss, correct) = h.join().unwrap();
+        assert_eq!(
+            loss.to_bits(),
+            want.0.to_bits(),
+            "fleet-served loss differs from direct model_infer_ex"
+        );
+        assert_eq!(correct.to_bits(), want.1.to_bits());
+    }
+
+    let (status, body) = client::get(addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    let health = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(
+        health.get("replicas_live").unwrap().as_usize().unwrap(),
+        2
+    );
+
+    // fleet /stats totals must equal the sum of per-replica counts
+    let (status, body) = client::get(addr, "/stats").unwrap();
+    assert_eq!(status, 200);
+    let stats = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), n);
+    assert_eq!(stats.get("errors").unwrap().as_usize().unwrap(), 0);
+    let per_replica = stats
+        .get("replicas")
+        .unwrap()
+        .get("per_replica")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(per_replica.len(), 2);
+    let summed: usize = per_replica
+        .iter()
+        .map(|r| r.get("requests").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(summed, n, "router total != sum of per-replica requests");
+
+    client::shutdown(addr).unwrap();
+    router.join().unwrap();
+    for r in replicas {
+        r.join().unwrap(); // replicas exit cleanly on FLEET_GOODBYE
+    }
+}
+
+#[test]
+fn replica_death_mid_load_evicts_and_redispatches() {
+    let (rt, params) = reference("smoke_gpt");
+    let dims = rt.manifest.dims.clone();
+    let router = start_router("smoke_gpt", 0);
+    let addr = router.addr();
+
+    // replica 0 drops its connection on the FIRST batch without acking;
+    // admit it first so the least-outstanding tie-break (lowest id) is
+    // guaranteed to hand it that batch
+    let doomed = spawn_replica(&router, "smoke_gpt", Some(0));
+    router.wait_ready(1, Duration::from_secs(30)).unwrap();
+    let healthy = spawn_replica(&router, "smoke_gpt", None);
+    router.wait_ready(2, Duration::from_secs(30)).unwrap();
+
+    let n = 8usize;
+    let examples: Vec<Example> =
+        (0..n).map(|i| gpt_example(i, dims.seq, dims.vocab)).collect();
+    let expected: Vec<(f32, f32)> = examples
+        .iter()
+        .map(|e| wire::infer_one(&rt, &params, e, 0.0).unwrap())
+        .collect();
+    let handles: Vec<_> = examples
+        .iter()
+        .map(|e| {
+            let body = wire::encode(e, 0.0);
+            std::thread::spawn(move || client::infer(addr, &body).unwrap())
+        })
+        .collect();
+    // every request succeeds — the un-acked batch was re-dispatched to
+    // the survivor, and the re-run answer is bit-identical
+    for (h, want) in handles.into_iter().zip(&expected) {
+        let (loss, correct) = h.join().unwrap();
+        assert_eq!(loss.to_bits(), want.0.to_bits());
+        assert_eq!(correct.to_bits(), want.1.to_bits());
+    }
+    doomed.join().unwrap();
+
+    let (_, body) = client::get(addr, "/healthz").unwrap();
+    let health = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(health.get("replicas_live").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        health.get("replicas_evicted").unwrap().as_usize().unwrap(),
+        1
+    );
+
+    let (_, body) = client::get(addr, "/stats").unwrap();
+    let stats = Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), n);
+    assert_eq!(stats.get("evictions").unwrap().as_usize().unwrap(), 1);
+    assert!(
+        stats.get("redispatched").unwrap().as_usize().unwrap() >= 1,
+        "the dead replica's batch must be re-dispatched, not dropped"
+    );
+
+    // re-admission: a fresh replica joins the running fleet
+    let late = spawn_replica(&router, "smoke_gpt", None);
+    router.wait_ready(2, Duration::from_secs(30)).unwrap();
+
+    client::shutdown(addr).unwrap();
+    router.join().unwrap();
+    healthy.join().unwrap();
+    late.join().unwrap();
+}
+
+#[test]
+fn saturation_gets_prompt_503_with_retry_after() {
+    // tiny admission cap, ZERO replicas: the dispatcher parks the first
+    // micro-batch waiting for a replica, the queue fills behind it, and
+    // further requests must bounce immediately instead of queueing
+    let (rt, _) = reference("smoke_gpt");
+    let dims = rt.manifest.dims.clone();
+    let router = start_router("smoke_gpt", 2);
+    let addr = router.addr();
+
+    // background requests that will sit in (and overflow) the queue;
+    // detached on purpose — they resolve as 500s at shutdown
+    for i in 0..6usize {
+        let body = wire::encode(&gpt_example(i, dims.seq, dims.vocab), 0.0);
+        std::thread::spawn(move || {
+            let _ = client::infer(addr, &body);
+        });
+    }
+    std::thread::sleep(Duration::from_millis(300));
+
+    // probe with a raw stream so the Retry-After HEADER is visible
+    let body = wire::encode(&gpt_example(99, dims.seq, dims.vocab), 0.0);
+    let mut saw_503 = false;
+    for _ in 0..40 {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+        http::write_request(&stream, "POST", "/infer", &body).unwrap();
+        let mut bytes = Vec::new();
+        // a probe that slipped into the queue times out here and is
+        // abandoned (its slot keeps the queue full for the next probe)
+        let _ = (&stream).read_to_end(&mut bytes);
+        let raw = String::from_utf8_lossy(&bytes);
+        if raw.contains("503") {
+            assert!(
+                raw.contains("Retry-After:"),
+                "503 without Retry-After header:\n{raw}"
+            );
+            assert!(
+                raw.contains("queue_cap"),
+                "503 body must name the cap:\n{raw}"
+            );
+            assert!(
+                raw.contains("queue_depth"),
+                "503 body must name the depth:\n{raw}"
+            );
+            saw_503 = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(saw_503, "saturated queue never produced a 503");
+
+    // shutdown drains the parked jobs as errors — no hang
+    router.shutdown().unwrap();
+}
