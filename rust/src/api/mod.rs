@@ -85,7 +85,7 @@ pub use crate::serve::wire::Example;
 pub use session::{
     EvalOpts, EvalReport, FleetHandle, FleetOpts, ModelInfo, ServeBenchOpts,
     ServeOpts, ServerHandle, Session, SessionBuilder, SessionTimings,
-    TrainOpts, TrainReport,
+    TrainOpts, TrainReport, TuneOpts, TuneReport,
 };
 
 use crate::experiments::ExpOpts;
@@ -103,7 +103,8 @@ pub fn repro(id: &str, opts: &ExpOpts) -> ApiResult<()> {
 }
 
 /// Run the per-family performance suite (`bdia bench`): Session-reported
-/// hot-path timings at 1 and N threads, written to `BENCH_5.json`.
+/// hot-path timings at 1 and N threads — plus a tuned-profile row per
+/// family — written to `BENCH_8.json`.
 ///
 /// Like [`repro`], failures surface as [`ApiError::Train`] with full
 /// context in the message.

@@ -152,6 +152,34 @@ impl Default for ServeBenchOpts {
     }
 }
 
+/// Options for [`Session::tune`] (`bdia tune`).
+#[derive(Clone, Debug, Default)]
+pub struct TuneOpts {
+    /// Smaller candidate grid and shape cap (CI smoke).
+    pub quick: bool,
+    /// Persist the winning profile here (atomic write), typically next to
+    /// the checkpoint.
+    pub out: Option<PathBuf>,
+}
+
+/// What a completed [`Session::tune`] call reports.
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub model: String,
+    /// Kernel-pool threads the search ran at (profiles are per-thread-count).
+    pub threads: usize,
+    /// The composed winning profile (also saved to `path` when set).
+    pub profile: crate::kernels::KernelProfile,
+    pub path: Option<PathBuf>,
+    pub shapes_tuned: usize,
+    /// Recorded shapes skipped (wrong thread count or past the cap).
+    pub shapes_dropped: usize,
+    /// Sum of per-shape min times under the default profile, ms.
+    pub default_ms: f64,
+    /// Sum of per-shape min times under the winning parameters, ms.
+    pub tuned_ms: f64,
+}
+
 /// Hot-path wall times measured by [`Session::bench`].
 #[derive(Clone, Debug)]
 pub struct SessionTimings {
@@ -159,6 +187,9 @@ pub struct SessionTimings {
     pub family: String,
     /// Kernel-pool threads in effect during the measurement.
     pub threads: usize,
+    /// Id of the kernel tuning profile active during the measurement
+    /// (`"default"` unless one was installed).
+    pub profile: String,
     /// Training forward pass, milliseconds (mean).
     pub fwd_ms: f64,
     /// Full train step (forward + online backward + optimizer), ms.
@@ -181,8 +212,15 @@ pub struct ModelInfo {
     pub kernel_threads: usize,
     pub kernel_auto_threads: usize,
     pub kernel_spawned_workers: usize,
+    /// Active kernel tuning profile id (`"default"` when none installed).
+    pub tune_profile: String,
+    /// File the active profile was loaded from, if any.
+    pub tune_profile_source: Option<PathBuf>,
     pub workspace_hits: u64,
     pub workspace_misses: u64,
+    /// Cached static-weight transposes served / built (`matmul_nt_w`).
+    pub workspace_keyed_hits: u64,
+    pub workspace_keyed_builds: u64,
     /// (mode name, analytic peak training bytes) per training mode.
     pub peak_memory: Vec<(&'static str, usize)>,
 }
@@ -276,6 +314,7 @@ enum Engine {
 pub struct SessionBuilder {
     cfg: TrainConfig,
     ckpt: Option<PathBuf>,
+    tune_profile: Option<PathBuf>,
     sink: Arc<dyn EventSink>,
     dataset_auto: bool,
     dist_rank: Option<usize>,
@@ -288,6 +327,7 @@ impl Default for SessionBuilder {
         SessionBuilder {
             cfg: TrainConfig::default(),
             ckpt: None,
+            tune_profile: None,
             sink: Arc::new(NullSink),
             dataset_auto: false,
             dist_rank: None,
@@ -458,6 +498,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Install a kernel tuning profile (written by `bdia tune` /
+    /// [`Session::tune`]) at build time.  Purely a speed knob: any legal
+    /// profile yields bit-identical results.  A corrupt or wrong-version
+    /// file is reported with a warning and the default profile is used.
+    pub fn tune_profile(mut self, path: impl Into<PathBuf>) -> Self {
+        self.tune_profile = Some(path.into());
+        self
+    }
+
     /// Observe training / evaluation / serving progress.
     pub fn event_sink(mut self, sink: Arc<dyn EventSink>) -> Self {
         self.sink = sink;
@@ -500,6 +549,22 @@ impl SessionBuilder {
         // size the deterministic kernel pool (0 = auto); bit-identical
         // results at any value, so this is purely a speed knob
         crate::kernels::pool::set_threads(cfg.threads);
+
+        // install the kernel tuning profile before any kernel runs.  Also
+        // purely a speed knob: any legal profile is bit-exact by
+        // construction, so a bad file can safely fall back to the default.
+        if let Some(path) = &self.tune_profile {
+            match crate::kernels::KernelProfile::load(path) {
+                Ok(p) => crate::kernels::profile::set_active(p, Some(path.clone())),
+                Err(e) => {
+                    eprintln!(
+                        "warning: ignoring tune profile: {e:#}; \
+                         continuing with the default profile"
+                    );
+                    crate::kernels::profile::reset_active();
+                }
+            }
+        }
 
         let rt = Runtime::load_with(&cfg.artifacts_dir, &cfg.model, cfg.backend)
             .map_err(|e| {
@@ -999,9 +1064,69 @@ impl Session {
     // benchmarking / inspection
     // ------------------------------------------------------------------
 
+    /// Tune the kernel profile for this model at the current kernel-pool
+    /// thread count (`bdia tune`): capture the shapes the three hot paths
+    /// actually run, benchmark candidate parameters for each on the live
+    /// pool, and compose the winners into a [`crate::kernels::KernelProfile`]
+    /// (persisted atomically to `opts.out` when set).
+    ///
+    /// Tuning never changes results — any legal profile is bit-exact by
+    /// construction — so the only outputs are the profile and timings.
+    /// Note the shape capture runs one real optimization step.
+    pub fn tune(&mut self, opts: &TuneOpts) -> ApiResult<TuneReport> {
+        if matches!(self.engine, Engine::RevVit(_)) {
+            return Err(ApiError::Config(
+                "tune profiles the BDIA/vanilla hot paths; mode=revvit is \
+                 not tunable through the session facade"
+                    .into(),
+            ));
+        }
+        let ds = self.dataset()?;
+        let batch = ds.train_batch(0);
+        let threads = crate::kernels::pool::threads();
+        let id = format!("{}-t{}", self.model(), threads);
+
+        // capture every (op, dims, threads) key the hot paths look up
+        crate::kernels::profile::record_shapes(true);
+        {
+            let Engine::Bdia(tr) = &mut self.engine else { unreachable!() };
+            let probe = (|| -> anyhow::Result<()> {
+                tr.forward(&batch)?;
+                tr.train_step(&batch)?;
+                tr.evaluate(ds.as_ref(), 1, 0.0)?;
+                Ok(())
+            })();
+            crate::kernels::profile::record_shapes(false);
+            probe.map_err(ApiError::train)?;
+        }
+        let shapes = crate::kernels::profile::take_recorded();
+
+        let rep = crate::kernels::tune::search(&id, &shapes, opts.quick);
+        let (mut default_ms, mut tuned_ms) = (0.0f64, 0.0f64);
+        for s in &rep.shapes {
+            default_ms += s.default_ms;
+            tuned_ms += s.best_ms;
+        }
+        if let Some(path) = &opts.out {
+            rep.profile
+                .save(path)
+                .map_err(|e| ApiError::io(path.clone(), e))?;
+        }
+        Ok(TuneReport {
+            model: self.model().to_string(),
+            threads,
+            profile: rep.profile,
+            path: opts.out.clone(),
+            shapes_tuned: rep.shapes.len(),
+            shapes_dropped: rep.dropped,
+            default_ms,
+            tuned_ms,
+        })
+    }
+
     /// Time the three hot paths (training forward, full train step, fused
     /// quantized inference) at the current kernel-pool thread count.
-    /// `bdia bench` aggregates these rows into `BENCH_5.json`.
+    /// `bdia bench` aggregates these rows into `BENCH_8.json`.
     pub fn bench(
         &mut self,
         budget: Duration,
@@ -1062,6 +1187,7 @@ impl Session {
             bundle,
             family,
             threads,
+            profile: crate::kernels::profile::active_id(),
             fwd_ms: ms(&fwd),
             step_ms: ms(&step),
             infer_ms: ms(&infer),
@@ -1086,8 +1212,12 @@ impl Session {
             kernel_threads: crate::kernels::pool::threads(),
             kernel_auto_threads: crate::kernels::pool::auto_threads(),
             kernel_spawned_workers: crate::kernels::pool::spawned_workers(),
+            tune_profile: crate::kernels::profile::active_id(),
+            tune_profile_source: crate::kernels::profile::active_source(),
             workspace_hits: ws.hits,
             workspace_misses: ws.misses,
+            workspace_keyed_hits: ws.keyed_hits,
+            workspace_keyed_builds: ws.keyed_builds,
             peak_memory,
         }
     }

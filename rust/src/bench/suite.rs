@@ -1,4 +1,4 @@
-//! `bdia bench`: the per-family performance suite behind BENCH_5.json.
+//! `bdia bench`: the per-family performance suite behind BENCH_8.json.
 //!
 //! Times the three hot paths — training forward (`fwd`), a full training
 //! step (`step` = forward + online backward + optimizer), and fused
@@ -6,6 +6,13 @@
 //! at the configured thread count, on the native backend.  The contrast
 //! is the headline number for the deterministic parallel compute core:
 //! same bits, less wall time.
+//!
+//! Each bundle also gets a **tuned** row: the parallel-thread measurement
+//! repeated under a tuned kernel profile (loaded from
+//! [`SuiteOpts::tune_profile`], or found by a quick in-process `bdia tune`
+//! search when none is given), so every report carries a
+//! default-vs-tuned contrast per family.  Any legal profile is bit-exact
+//! by construction, so the tuned row differs in wall time only.
 //!
 //! Two more blocks track the rest of the scaling story:
 //!
@@ -19,14 +26,14 @@
 //! Every hot-path measurement goes through the [`Session`] facade
 //! ([`Session::bench`]), so the suite times exactly the path embedders and
 //! the CLI use.  The report prints as rows and lands in a JSON file
-//! (default `BENCH_5.json`) so successive PRs can track the trajectory.
+//! (default `BENCH_8.json`) so successive PRs can track the trajectory.
 
-use crate::api::{Session, SessionTimings};
+use crate::api::{Session, SessionTimings, TuneOpts};
 use crate::config::{TrainConfig, TrainMode};
 use crate::coordinator::Trainer;
 use crate::data::make_dataset;
 use crate::dist::run_local_world;
-use crate::kernels::pool;
+use crate::kernels::{pool, profile, KernelProfile};
 use crate::metrics::memory::MemoryModel;
 use crate::serve::bench as serve_bench;
 use anyhow::{Context, Result};
@@ -47,6 +54,9 @@ pub struct SuiteOpts {
     pub budget: Duration,
     /// Iteration cap per measurement.
     pub max_iters: usize,
+    /// Persisted kernel profile for the tuned row (`--tune-profile`).
+    /// `None` runs a quick in-process tune search per bundle instead.
+    pub tune_profile: Option<PathBuf>,
 }
 
 impl SuiteOpts {
@@ -59,10 +69,11 @@ impl SuiteOpts {
                     "smoke_encdec".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_5.json"),
+                out: PathBuf::from("BENCH_8.json"),
                 quick,
                 budget: Duration::from_millis(250),
                 max_iters: 4,
+                tune_profile: None,
             }
         } else {
             SuiteOpts {
@@ -72,10 +83,11 @@ impl SuiteOpts {
                     "encdec_mt".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_5.json"),
+                out: PathBuf::from("BENCH_8.json"),
                 quick,
                 budget: Duration::from_millis(1500),
                 max_iters: 10,
+                tune_profile: None,
             }
         }
     }
@@ -102,7 +114,9 @@ pub struct MemoryRow {
 pub struct SuiteReport {
     pub threads_baseline: usize,
     pub threads_parallel: usize,
-    /// One [`SessionTimings`] row per (bundle, thread count).
+    /// One [`SessionTimings`] row per (bundle, thread count), plus one
+    /// tuned-profile row per bundle at the parallel thread count
+    /// (`row.profile` names the kernel profile each row ran under).
     pub rows: Vec<SessionTimings>,
     /// Global-step time per (bundle, world size) — ranks 1 and 2.
     pub dist: Vec<DistTimings>,
@@ -117,12 +131,16 @@ impl SuiteReport {
         }) && self.dist.iter().all(|d| d.step_ms.is_finite())
     }
 
-    /// step-time speedup of the parallel run over the 1-thread run.
+    /// step-time speedup of the parallel run over the 1-thread run
+    /// (default-profile rows only — the tuned row shares the parallel
+    /// thread count and must not shadow it).
     pub fn step_speedup(&self, bundle: &str) -> Option<f64> {
         let at = |t: usize| {
             self.rows
                 .iter()
-                .find(|r| r.bundle == bundle && r.threads == t)
+                .find(|r| {
+                    r.bundle == bundle && r.threads == t && r.profile == "default"
+                })
                 .map(|r| r.step_ms)
         };
         match (at(self.threads_baseline), at(self.threads_parallel)) {
@@ -138,10 +156,11 @@ impl SuiteReport {
             .map(|r| {
                 format!(
                     "    {{\"bundle\": \"{}\", \"family\": \"{}\", \
-                     \"threads\": {}, \"fwd_ms\": {:.3}, \"step_ms\": {:.3}, \
+                     \"threads\": {}, \"profile\": \"{}\", \
+                     \"fwd_ms\": {:.3}, \"step_ms\": {:.3}, \
                      \"infer_ms\": {:.3}}}",
-                    r.bundle, r.family, r.threads, r.fwd_ms, r.step_ms,
-                    r.infer_ms
+                    r.bundle, r.family, r.threads, r.profile, r.fwd_ms,
+                    r.step_ms, r.infer_ms
                 )
             })
             .collect();
@@ -168,7 +187,7 @@ impl SuiteReport {
             })
             .collect();
         format!(
-            "{{\n  \"bench\": \"BENCH_5\",\n  \"quick\": {},\n  \
+            "{{\n  \"bench\": \"BENCH_8\",\n  \"quick\": {},\n  \
              \"threads_baseline\": {},\n  \"threads_parallel\": {},\n  \
              \"results\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \
              \"memory\": [\n{}\n  ]\n}}\n",
@@ -247,6 +266,31 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
             let timings = session.bench(opts.budget, opts.max_iters)?;
             rows.push(timings);
         }
+        // tuned row: the parallel measurement again under a tuned kernel
+        // profile — persisted one if given, else a quick in-process search
+        pool::set_threads(par);
+        let (tuned, src) = match &opts.tune_profile {
+            Some(path) => {
+                let p = KernelProfile::load(path).with_context(|| {
+                    format!("loading tune profile {}", path.display())
+                })?;
+                (p, Some(path.clone()))
+            }
+            None => {
+                let rep =
+                    session.tune(&TuneOpts { quick: true, out: None })?;
+                (rep.profile, None)
+            }
+        };
+        let prev = profile::active();
+        let prev_src = profile::active_source();
+        profile::set_active(tuned, src);
+        let timings = session.bench(opts.budget, opts.max_iters);
+        match prev {
+            Some(p) => profile::set_active((*p).clone(), prev_src),
+            None => profile::reset_active(),
+        }
+        rows.push(timings?);
         // analytic Table-1 peak memory rides along with every report
         let m = &session.runtime().manifest;
         for (mode, peak_bytes) in
@@ -278,6 +322,22 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
                 report.threads_baseline, report.threads_parallel
             );
         }
+        let tuned = report
+            .rows
+            .iter()
+            .find(|r| r.bundle == *bundle && r.profile != "default");
+        let def_par = report.rows.iter().find(|r| {
+            r.bundle == *bundle
+                && r.threads == report.threads_parallel
+                && r.profile == "default"
+        });
+        if let (Some(t), Some(d)) = (tuned, def_par) {
+            println!(
+                "{bundle}: tuned profile '{}' step {:.2} ms vs default \
+                 {:.2} ms @{} threads (identical bits)",
+                t.profile, t.step_ms, d.step_ms, report.threads_parallel
+            );
+        }
         let at = |r: usize| {
             report
                 .dist
@@ -304,12 +364,15 @@ mod tests {
 
     #[test]
     fn quick_suite_runs_and_writes_report() {
+        // run() installs/resets the process-wide kernel profile for the
+        // tuned row: serialize with the other profile-state tests
+        let _guard = crate::kernels::profile::test_lock();
         let dir = std::env::temp_dir().join(format!(
             "bdia_bench_suite_{}",
             std::process::id()
         ));
         std::fs::create_dir_all(&dir).unwrap();
-        let out = dir.join("BENCH_5.json");
+        let out = dir.join("BENCH_8.json");
         let opts = SuiteOpts {
             families: vec!["smoke_gpt".into()],
             threads: 2,
@@ -321,8 +384,20 @@ mod tests {
         let report = run(&opts).unwrap();
         assert!(report.all_finite());
         assert_eq!(report.threads_parallel, 2);
-        // one row per thread count
-        assert_eq!(report.rows.len(), 2);
+        // one row per thread count, plus the tuned row
+        assert_eq!(report.rows.len(), 3);
+        assert_eq!(
+            report.rows.iter().filter(|r| r.profile == "default").count(),
+            2
+        );
+        let tuned = report
+            .rows
+            .iter()
+            .find(|r| r.profile != "default")
+            .expect("tuned row");
+        assert_eq!(tuned.threads, 2);
+        // the suite restores the ambient (default) profile afterwards
+        assert_eq!(crate::kernels::profile::active_id(), "default");
         // dist scaling block: world sizes 1 and 2 for the one bundle
         assert_eq!(report.dist.len(), 2);
         assert_eq!(
@@ -337,8 +412,13 @@ mod tests {
         let parsed = crate::config::json::Json::parse(&text).unwrap();
         assert_eq!(
             parsed.get("bench").unwrap().as_str().unwrap(),
-            "BENCH_5"
+            "BENCH_8"
         );
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results
+            .iter()
+            .any(|r| r.get("profile").unwrap().as_str().unwrap() != "default"));
         let dist = parsed.get("dist").unwrap().as_arr().unwrap();
         assert_eq!(dist.len(), 2);
         assert_eq!(dist[1].get("ranks").unwrap().as_usize().unwrap(), 2);

@@ -309,6 +309,9 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         other => bail!("bad optimizer-state flag {other} in checkpoint"),
     };
     ensure!(r.pos == body.len(), "trailing garbage after checkpoint body");
+    // a decoded store is a brand-new parameter set: any cached weight
+    // transposes (matmul_nt_w) keyed on reused allocations must not match
+    crate::kernels::workspace::bump_weight_generation();
     Ok(Checkpoint { model, step, rng_gamma, params, opt })
 }
 

@@ -161,6 +161,7 @@ impl Trainer {
             self.cfg.model
         );
         self.params = ck.params;
+        crate::kernels::workspace::bump_weight_generation();
         self.step = ck.step as usize;
         self.rng_gamma = Rng::restore(ck.rng_gamma.state, ck.rng_gamma.spare);
         if let Some(o) = ck.opt {
@@ -288,6 +289,7 @@ impl Trainer {
             self.cfg.model
         );
         self.params = ck.params;
+        crate::kernels::workspace::bump_weight_generation();
         self.step = ck.step as usize;
         self.rng_gamma = Rng::restore(ck.rng_gamma.state, ck.rng_gamma.spare);
         let o = ck

@@ -38,6 +38,10 @@ pub struct ReplicaConfig {
     pub deadline: Duration,
     /// How long to keep retrying the initial connect.
     pub connect_timeout: Duration,
+    /// Persisted kernel profile (`bdia tune`) to serve under.  Results are
+    /// bit-identical under any profile; a bad file warns and falls back to
+    /// the default profile.
+    pub tune_profile: Option<PathBuf>,
     /// Fault injection for tests: serve this many batches, then drop the
     /// connection *without acknowledging* the next one.
     pub die_after_batches: Option<usize>,
@@ -53,6 +57,7 @@ impl Default for ReplicaConfig {
             threads: 0,
             deadline: Duration::from_secs(10),
             connect_timeout: transport::CONNECT_TIMEOUT,
+            tune_profile: None,
             die_after_batches: None,
         }
     }
@@ -70,6 +75,18 @@ pub fn run(cfg: &ReplicaConfig) -> Result<()> {
     );
     if cfg.threads != 0 {
         crate::kernels::pool::set_threads(cfg.threads);
+    }
+    if let Some(path) = &cfg.tune_profile {
+        match crate::kernels::KernelProfile::load(path) {
+            Ok(p) => crate::kernels::profile::set_active(p, Some(path.clone())),
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring tune profile: {e:#}; continuing with \
+                     the default profile"
+                );
+                crate::kernels::profile::reset_active();
+            }
+        }
     }
     let stream = connect_with_retry(&cfg.rendezvous, cfg.connect_timeout)?;
     serve_connection(stream, &rt, cfg.deadline, cfg.die_after_batches)
@@ -110,6 +127,9 @@ pub fn serve_connection(
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let params = handshake(&stream, rt)?;
+    // fresh parameter set for this connection: invalidate cached weight
+    // transposes keyed on prior allocations
+    crate::kernels::workspace::bump_weight_generation();
     let mut link = Link::new(stream, 0, deadline)?;
 
     // beat thread: keeps the router's read deadline alive while this
@@ -286,6 +306,8 @@ pub struct ReplicaSpawnOpts {
     pub artifacts: PathBuf,
     pub threads: usize,
     pub fleet_timeout_s: f64,
+    /// Kernel profile path to forward to every replica (`--tune-profile`).
+    pub tune_profile: Option<PathBuf>,
 }
 
 /// Re-exec `current_exe` as `n` replica processes pointed at the router's
@@ -301,10 +323,10 @@ pub fn spawn_local_replicas(
     let exe = std::env::current_exe().context("locating current executable")?;
     let mut children = Vec::with_capacity(n);
     for i in 0..n {
-        let child = Command::new(&exe)
-            // `--replica --model` leads the argv so process greps (CI's
-            // kill-one-replica step) can target replicas unambiguously
-            .arg("serve")
+        let mut cmd = Command::new(&exe);
+        // `--replica --model` leads the argv so process greps (CI's
+        // kill-one-replica step) can target replicas unambiguously
+        cmd.arg("serve")
             .arg("--replica")
             .arg("--model")
             .arg(&opts.model)
@@ -317,7 +339,11 @@ pub fn spawn_local_replicas(
             .arg("--threads")
             .arg(opts.threads.to_string())
             .arg("--fleet-timeout-s")
-            .arg(opts.fleet_timeout_s.to_string())
+            .arg(opts.fleet_timeout_s.to_string());
+        if let Some(p) = &opts.tune_profile {
+            cmd.arg("--tune-profile").arg(p);
+        }
+        let child = cmd
             // replicas stay quiet on stdout (the router narrates) but keep
             // stderr attached so their failures are visible
             .stdout(Stdio::null())

@@ -160,6 +160,7 @@ pub fn fleet_stats_json(
          \"rejected_503\": {}, \"redispatched\": {}, \"evictions\": {}, \
          \"queue\": {{\"depth\": {queue_depth}, \"cap\": {}}}, \
          \"uptime_s\": {:.3}, \"requests_per_sec\": {:.3}, \
+         \"tune_profile\": \"{}\", \
          \"latency_ms\": {}, \"fleet_rtt_ms\": {}, \
          \"replicas\": {{\"live\": {live}, \"evicted\": {}, \
          \"per_replica\": [{}]}}}}",
@@ -170,6 +171,7 @@ pub fn fleet_stats_json(
         queue_cap.unwrap_or(0),
         router.uptime_s(),
         router.requests_per_sec(),
+        crate::kernels::profile::active_id(),
         fmt_latency(router.latency()),
         fmt_rtt(&mut pooled),
         entries.len() - live,
@@ -221,6 +223,8 @@ mod tests {
             parsed.get("queue").unwrap().get("cap").unwrap().as_usize().unwrap(),
             64
         );
+        // the router's active kernel profile id surfaces fleet-wide
+        assert!(!parsed.get("tune_profile").unwrap().as_str().unwrap().is_empty());
         let reps = parsed.get("replicas").unwrap();
         assert_eq!(reps.get("live").unwrap().as_usize().unwrap(), 1);
         assert_eq!(reps.get("evicted").unwrap().as_usize().unwrap(), 1);

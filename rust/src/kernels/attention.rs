@@ -17,9 +17,10 @@
 //! arena, so steady-state calls allocate only the buffers that escape
 //! into the cache.
 
-use super::elementwise::{add_into, col_sum};
-use super::matmul::{linear, matmul_nt, matmul_tn, row_grain};
+use super::elementwise::{add_into, axpy, col_sum};
+use super::matmul::{linear, matmul_nt_w, matmul_tn};
 use super::pool;
+use super::profile::{self, OpKind};
 use super::workspace;
 
 pub const NEG_INF: f32 = -1e30;
@@ -105,10 +106,19 @@ fn scatter_head_add(
     }
 }
 
-/// Task count over `b * heads` independent pairs, sized so each task
-/// amortizes the fan-out cost.
-fn head_tasks(b: usize, heads: usize, tq: usize, tk: usize, dh: usize) -> usize {
-    pool::n_tasks(b * heads, row_grain(2 * tq * tk * dh))
+/// Profile lookup for the head loops: task count over `b * heads`
+/// independent pairs (sized so each task amortizes the fan-out cost) plus
+/// the inner-loop chunk width.
+fn head_params(
+    b: usize,
+    heads: usize,
+    tq: usize,
+    tk: usize,
+    dh: usize,
+) -> (usize, usize) {
+    let prm = profile::params_for(OpKind::Attention, b * heads, tq * tk, dh);
+    let grain = profile::grain_of(prm.grain_flop, 2 * tq * tk * dh);
+    (pool::n_tasks(b * heads, grain), prm.unroll)
 }
 
 /// One (batch, head) pair of the forward: scores, masked softmax, and the
@@ -125,6 +135,7 @@ fn attn_fwd_head(
     dh: usize,
     scale: f32,
     causal: bool,
+    unroll: usize,
 ) {
     for i in 0..tq {
         let qr = &qh[i * dh..(i + 1) * dh];
@@ -154,10 +165,11 @@ fn attn_fwd_head(
         for (jj, a) in arow.iter_mut().enumerate() {
             let p = *a / denom;
             *a = p;
+            // context accumulation over independent output elements —
+            // chunkable; the score dots above stay a single sequential
+            // accumulator (they are reductions, never unrolled)
             let vr = &vh[jj * dh..(jj + 1) * dh];
-            for (ov, vv) in or.iter_mut().zip(vr) {
-                *ov += p * *vv;
-            }
+            axpy(or, p, vr, unroll);
         }
     }
 }
@@ -193,7 +205,7 @@ pub fn attn_fwd(
     let mut att = workspace::take(bh * tq * tk);
     let mut oh_all = workspace::take(bh * tq * dh);
 
-    let parts = head_tasks(b, heads, tq, tk, dh);
+    let (parts, unroll) = head_params(b, heads, tq, tk, dh);
     {
         let atts = pool::split_rows_mut(&mut att, tq * tk, parts);
         let ohs = pool::split_rows_mut(&mut oh_all, tq * dh, parts);
@@ -224,6 +236,7 @@ pub fn attn_fwd(
                             dh,
                             scale,
                             causal,
+                            unroll,
                         );
                     }
                     workspace::give(qh);
@@ -272,6 +285,7 @@ fn attn_bwd_head(
     tk: usize,
     dh: usize,
     scale: f32,
+    unroll: usize,
 ) {
     for i in 0..tq {
         let arow = &att[i * tk..(i + 1) * tk];
@@ -281,31 +295,28 @@ fn attn_bwd_head(
         for jj in 0..tk {
             let p = arow[jj];
             let vr = &vh[jj * dh..(jj + 1) * dh];
+            // score-gradient dot: a reduction, stays a single sequential
+            // accumulator regardless of the profile's unroll width
             let mut s = 0.0f32;
             for (dov, vv) in dor.iter().zip(vr) {
                 s += *dov * *vv;
             }
             datt[jj] = s;
             rowdot += s * p;
-            // dv accumulation: dv[jj] += p * do[i]
+            // dv accumulation: dv[jj] += p * do[i] — independent output
+            // elements, chunkable
             let dvr = &mut dvh[jj * dh..(jj + 1) * dh];
-            for (dvv, dov) in dvr.iter_mut().zip(dor) {
-                *dvv += p * *dov;
-            }
+            axpy(dvr, p, dor, unroll);
         }
         let dqr = &mut dqh[i * dh..(i + 1) * dh];
         for jj in 0..tk {
             let p = arow[jj];
             let ds = p * (datt[jj] - rowdot) * scale;
             let kr = &kh[jj * dh..(jj + 1) * dh];
-            for (dqv, kvv) in dqr.iter_mut().zip(kr) {
-                *dqv += ds * *kvv;
-            }
+            axpy(dqr, ds, kr, unroll);
             let qr = &qh[i * dh..(i + 1) * dh];
             let dkr = &mut dkh[jj * dh..(jj + 1) * dh];
-            for (dkv_, qv) in dkr.iter_mut().zip(qr) {
-                *dkv_ += ds * *qv;
-            }
+            axpy(dkr, ds, qr, unroll);
         }
     }
 }
@@ -333,14 +344,14 @@ pub fn attn_bwd(
     // output projection
     let dbo = col_sum(dout, nq, d);
     let dwo = matmul_tn(&cache.o, dout, nq, d, d);
-    let do_ = matmul_nt(dout, w.wo, nq, d, d);
+    let do_ = matmul_nt_w(dout, w.wo, nq, d, d);
 
     let bh = b * heads;
     let mut dqh_all = workspace::take(bh * tq * dh);
     let mut dkh_all = workspace::take(bh * tk * dh);
     let mut dvh_all = workspace::take(bh * tk * dh);
 
-    let parts = head_tasks(b, heads, tq, tk, dh);
+    let (parts, unroll) = head_params(b, heads, tq, tk, dh);
     {
         let dqs = pool::split_rows_mut(&mut dqh_all, tq * dh, parts);
         let dks = pool::split_rows_mut(&mut dkh_all, tk * dh, parts);
@@ -381,6 +392,7 @@ pub fn attn_bwd(
                             tk,
                             dh,
                             scale,
+                            unroll,
                         );
                     }
                     workspace::give(qh);
@@ -434,15 +446,15 @@ pub fn attn_bwd(
     // input projections
     let dwq = matmul_tn(x, &dq, nq, d, d);
     let dbq = col_sum(&dq, nq, d);
-    let dx = matmul_nt(&dq, w.wq, nq, d, d);
+    let dx = matmul_nt_w(&dq, w.wq, nq, d, d);
 
     let dwk = matmul_tn(kv, &dk, nk, d, d);
     let dbk = col_sum(&dk, nk, d);
-    let mut dkv = matmul_nt(&dk, w.wk, nk, d, d);
+    let mut dkv = matmul_nt_w(&dk, w.wk, nk, d, d);
 
     let dwv = matmul_tn(kv, &dv, nk, d, d);
     let dbv = col_sum(&dv, nk, d);
-    let dkv_v = matmul_nt(&dv, w.wv, nk, d, d);
+    let dkv_v = matmul_nt_w(&dv, w.wv, nk, d, d);
     add_into(&mut dkv, &dkv_v);
     workspace::give(dq);
     workspace::give(dk);
@@ -561,7 +573,7 @@ mod tests {
     #[test]
     fn attention_bit_identical_across_thread_counts() {
         let mut rng = Rng::new(7);
-        // big enough that head_tasks() exceeds 1 at multi-thread counts
+        // big enough that head_params() yields >1 task at multi-thread counts
         let (b, t, d, heads) = (4usize, 24usize, 32usize, 4usize);
         let mk = |rng: &mut Rng| randv(rng, d * d, 0.2);
         let (wq, wk, wv, wo) =

@@ -8,14 +8,56 @@
 use super::pool;
 use super::workspace;
 
-/// Elements per task for cheap memory-bound maps.
-const MAP_GRAIN: usize = 1 << 12;
+/// Elements per task for cheap memory-bound maps: the unified grain
+/// heuristic at a per-element cost weight of 4 flops (reproduces the old
+/// `MAP_GRAIN = 1 << 12` under the default profile).
+fn map_grain() -> usize {
+    super::grain(4)
+}
 
 /// a += b
 pub fn add_into(a: &mut [f32], b: &[f32]) {
     debug_assert_eq!(a.len(), b.len());
     for (x, y) in a.iter_mut().zip(b) {
         *x += *y;
+    }
+}
+
+/// `c[j] += a * b[j]` chunked at compile-time width `W` with a scalar
+/// tail.  Every `c[j]` is an independent output element receiving exactly
+/// one fused update, so the result is bit-identical to the scalar loop at
+/// any width — the fixed-width chunks exist purely to hand the compiler
+/// bounds-check-free, vectorizable bodies.
+fn axpy_w<const W: usize>(c: &mut [f32], a: f32, b: &[f32]) {
+    let n = c.len();
+    debug_assert_eq!(n, b.len());
+    let split = n - n % W;
+    for (cc, bc) in
+        c[..split].chunks_exact_mut(W).zip(b[..split].chunks_exact(W))
+    {
+        for (cv, bv) in cc.iter_mut().zip(bc) {
+            *cv += a * *bv;
+        }
+    }
+    for (cv, bv) in c[split..].iter_mut().zip(&b[split..]) {
+        *cv += a * *bv;
+    }
+}
+
+/// `c += a * b`, the profile-driven microkernel behind every matmul and
+/// attention inner loop.  `unroll` selects the chunk width (1 = plain
+/// scalar loop); all widths produce identical bits.
+pub fn axpy(c: &mut [f32], a: f32, b: &[f32], unroll: usize) {
+    match unroll {
+        2 => axpy_w::<2>(c, a, b),
+        4 => axpy_w::<4>(c, a, b),
+        8 => axpy_w::<8>(c, a, b),
+        16 => axpy_w::<16>(c, a, b),
+        _ => {
+            for (cv, bv) in c.iter_mut().zip(b) {
+                *cv += a * *bv;
+            }
+        }
     }
 }
 
@@ -66,7 +108,7 @@ pub fn gelu_grad(u: f32) -> f32 {
 /// out\[i\] = gelu(u\[i\]), row-parallel.
 pub fn map_gelu(u: &[f32]) -> Vec<f32> {
     let mut out = workspace::take(u.len());
-    pool::for_rows(&mut out, 1, MAP_GRAIN, |i0, chunk| {
+    pool::for_rows(&mut out, 1, map_grain(), |i0, chunk| {
         for (o, v) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
             *o = gelu(*v);
         }
@@ -77,7 +119,7 @@ pub fn map_gelu(u: &[f32]) -> Vec<f32> {
 /// du\[i\] *= gelu'(u\[i\]), row-parallel (the FFN backward chain).
 pub fn scale_by_gelu_grad(du: &mut [f32], u: &[f32]) {
     debug_assert_eq!(du.len(), u.len());
-    pool::for_rows(du, 1, MAP_GRAIN, |i0, chunk| {
+    pool::for_rows(du, 1, map_grain(), |i0, chunk| {
         for (d, v) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
             *d *= gelu_grad(*v);
         }
@@ -124,5 +166,38 @@ mod tests {
         let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
         assert_eq!(col_sum(&a, 3, 2), vec![9.0, 12.0]);
         assert_eq!(add(&[1.0, 2.0], &[3.0, 4.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn axpy_is_bit_identical_at_every_unroll_width() {
+        // lengths straddle every chunk boundary; values include the IEEE
+        // specials the scalar loop would produce (NaN, inf, -0.0)
+        for len in [0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 33, 100] {
+            let b: Vec<f32> = (0..len)
+                .map(|i| match i % 7 {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    2 => -0.0,
+                    _ => (i as f32 - 3.5) * 0.37,
+                })
+                .collect();
+            let base: Vec<f32> =
+                (0..len).map(|i| (i as f32) * 0.11 - 1.0).collect();
+            let mut want = base.clone();
+            for (cv, bv) in want.iter_mut().zip(&b) {
+                *cv += 1.7 * *bv;
+            }
+            for unroll in [1usize, 2, 4, 8, 16] {
+                let mut c = base.clone();
+                axpy(&mut c, 1.7, &b, unroll);
+                for (got, exp) in c.iter().zip(&want) {
+                    assert_eq!(
+                        got.to_bits(),
+                        exp.to_bits(),
+                        "unroll={unroll} len={len}"
+                    );
+                }
+            }
+        }
     }
 }

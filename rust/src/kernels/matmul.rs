@@ -6,31 +6,30 @@
 //! reference loop, so results are bit-identical for any thread count and
 //! any block size.
 //!
+//! The block size `kc`, the rows-per-task grain and the inner-loop chunk
+//! width come from the active [`profile`](super::profile) (`bdia tune`);
+//! the default profile reproduces the historical constants bit-for-bit,
+//! and any legal profile yields identical bits by construction — the knobs
+//! regroup loops and move task boundaries, never the per-element
+//! reduction order.
+//!
 //! IEEE faithfulness: the seed interpreter skipped `a == 0.0` terms, which
 //! silently dropped `0.0 * inf = NaN` and signed-zero contributions.  The
 //! kernels here have **no value-dependent control flow** — every term is
 //! accumulated — so they are bit-faithful to the plain summation (and
 //! branch-predictable, which is also what the auto-vectorizer wants).
 
+use super::elementwise::axpy;
 use super::pool;
+use super::profile::{self, OpKind, OpParams};
 use super::workspace;
-
-/// k-dimension panel height: one panel of `b` (`KC x n`) stays hot in L2
-/// while it is swept over all rows of a task's chunk.  Tiling only groups
-/// iterations — the per-element accumulation order stays `0..k` ascending.
-const KC: usize = 64;
-
-/// Target work (multiply-adds) per parallel task; below this, fan-out
-/// overhead beats the win and the kernels run inline.
-const GRAIN_FLOP: usize = 1 << 14;
-
-/// Minimum rows per task so each task amortizes `GRAIN_FLOP`.
-pub(crate) fn row_grain(work_per_row: usize) -> usize {
-    (GRAIN_FLOP / work_per_row.max(1)).max(1)
-}
 
 /// Shared core: `c(m,n) = a(m,k) @ b(k,n) [+ bias]`, bias added per row
 /// after the full k-reduction (same per-element order as matmul-then-add).
+///
+/// One k-panel of `b` (`kc x n`) stays hot in L2 while it is swept over
+/// all rows of a task's chunk.  Tiling only groups iterations — the
+/// per-element accumulation order stays `0..k` ascending for any `kc`.
 fn mm_bias(
     a: &[f32],
     b: &[f32],
@@ -41,18 +40,17 @@ fn mm_bias(
 ) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
+    let prm = profile::params_for(OpKind::Matmul, m, k, n);
+    let kc = prm.kc.max(1);
     let mut c = workspace::take(m * n);
-    pool::for_rows(&mut c, n, row_grain(k * n), |i0, rows| {
-        for kb in (0..k).step_by(KC) {
-            let kend = (kb + KC).min(k);
+    pool::for_rows(&mut c, n, profile::grain_of(prm.grain_flop, k * n), |i0, rows| {
+        for kb in (0..k).step_by(kc) {
+            let kend = (kb + kc).min(k);
             for (ri, crow) in rows.chunks_exact_mut(n).enumerate() {
                 let arow = &a[(i0 + ri) * k..(i0 + ri) * k + k];
                 for p in kb..kend {
-                    let av = arow[p];
                     let brow = &b[p * n..(p + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += av * *bv;
-                    }
+                    axpy(crow, arow[p], brow, prm.unroll);
                 }
             }
         }
@@ -88,21 +86,62 @@ pub fn linear(
 /// c(k,n) = a(m,k)^T @ b(m,n)
 ///
 /// The reduction runs over m; each task owns a contiguous band of output
-/// rows and performs its own full `i = 0..m` sweep, so per-element order
-/// is `i` ascending regardless of the thread count.
+/// rows and performs its own full `i = 0..m` sweep (grouped into `kc`
+/// panels that keep order `i` ascending), so per-element order never
+/// depends on the thread count or the profile.
 pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
+    let prm = profile::params_for(OpKind::MatmulTn, m, k, n);
+    let kc = prm.kc.max(1);
     let mut c = workspace::take(k * n);
-    pool::for_rows(&mut c, n, row_grain(m * n), |p0, rows| {
+    pool::for_rows(&mut c, n, profile::grain_of(prm.grain_flop, m * n), |p0, rows| {
         debug_assert!(p0 + rows.len() / n <= k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let brow = &b[i * n..(i + 1) * n];
-            for (pr, crow) in rows.chunks_exact_mut(n).enumerate() {
-                let av = arow[p0 + pr];
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * *bv;
+        for ib in (0..m).step_by(kc) {
+            let iend = (ib + kc).min(m);
+            for i in ib..iend {
+                let arow = &a[i * k..(i + 1) * k];
+                let brow = &b[i * n..(i + 1) * n];
+                for (pr, crow) in rows.chunks_exact_mut(n).enumerate() {
+                    axpy(crow, arow[p0 + pr], brow, prm.unroll);
+                }
+            }
+        }
+    });
+    c
+}
+
+/// Scatter `b(k,n)` into `bt(n,k)` so the nt inner loop reads rows.
+fn transpose_into(bt: &mut [f32], b: &[f32], k: usize, n: usize) {
+    for p in 0..k {
+        let brow = &b[p * n..(p + 1) * n];
+        for (jj, bv) in brow.iter().enumerate() {
+            bt[jj * k + p] = *bv;
+        }
+    }
+}
+
+/// The nt compute core over an already-transposed `bt(n,k)`: per-element
+/// reduction order is `jj = 0..n` ascending (panels regroup, never
+/// reorder), identical to the dot-product form.
+fn nt_core(
+    a: &[f32],
+    bt: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    prm: OpParams,
+) -> Vec<f32> {
+    let kc = prm.kc.max(1);
+    let mut c = workspace::take(m * k);
+    pool::for_rows(&mut c, k, profile::grain_of(prm.grain_flop, n * k), |i0, rows| {
+        for jb in (0..n).step_by(kc) {
+            let jend = (jb + kc).min(n);
+            for (ri, crow) in rows.chunks_exact_mut(k).enumerate() {
+                let arow = &a[(i0 + ri) * n..(i0 + ri) * n + n];
+                for jj in jb..jend {
+                    let btrow = &bt[jj * k..(jj + 1) * k];
+                    axpy(crow, arow[jj], btrow, prm.unroll);
                 }
             }
         }
@@ -112,39 +151,56 @@ pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 
 /// c(m,k) = a(m,n) @ b(k,n)^T
 ///
-/// `b` is transposed once into a workspace buffer (the "cached weight
-/// transpose"), turning the inner loop into a vectorizable axpy while
-/// keeping the per-element reduction order identical to the dot-product
-/// form: `jj = 0..n` ascending.
+/// `b` is transposed once into a workspace buffer, turning the inner loop
+/// into a vectorizable axpy while keeping the per-element reduction order
+/// identical to the dot-product form: `jj = 0..n` ascending.  The
+/// transpose is rebuilt every call — `b` may be any caller buffer.  For
+/// long-lived weight matrices use [`matmul_nt_w`], which can reuse a
+/// cached transpose under a tuned profile.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
+    let prm = profile::params_for(OpKind::MatmulNt, m, n, k);
     let mut bt = workspace::take(n * k);
-    for p in 0..k {
-        let brow = &b[p * n..(p + 1) * n];
-        for (jj, bv) in brow.iter().enumerate() {
-            bt[jj * k + p] = *bv;
-        }
-    }
-    let mut c = workspace::take(m * k);
-    pool::for_rows(&mut c, k, row_grain(n * k), |i0, rows| {
-        for (ri, crow) in rows.chunks_exact_mut(k).enumerate() {
-            let arow = &a[(i0 + ri) * n..(i0 + ri) * n + n];
-            for (jj, av) in arow.iter().enumerate() {
-                let btrow = &bt[jj * k..(jj + 1) * k];
-                for (cv, bv) in crow.iter_mut().zip(btrow) {
-                    *cv += *av * *bv;
-                }
-            }
-        }
-    });
+    transpose_into(&mut bt, b, k, n);
+    let c = nt_core(a, &bt, m, n, k, prm);
     workspace::give(bt);
     c
+}
+
+/// c(m,k) = a(m,n) @ b(k,n)^T where `b` is a **long-lived weight matrix**.
+///
+/// Bit-identical to [`matmul_nt`] always.  When the active profile enables
+/// `nt_cache`, the transpose of `b` is served from the thread-local keyed
+/// workspace cache instead of being rebuilt per call — a pure re-read of
+/// previously computed bits, so results cannot change.
+///
+/// Contract: `b` must be a buffer that outlives the cache entry and whose
+/// every mutation/replacement path bumps
+/// [`workspace::bump_weight_generation`] (the optimizer step, parameter
+/// (re)initialization and checkpoint-restore paths in-tree all do).  Do
+/// NOT call this with transient buffers — use [`matmul_nt`] for those.
+pub fn matmul_nt_w(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let prm = profile::params_for(OpKind::MatmulNt, m, n, k);
+    if !prm.nt_cache {
+        let mut bt = workspace::take(n * k);
+        transpose_into(&mut bt, b, k, n);
+        let c = nt_core(a, &bt, m, n, k, prm);
+        workspace::give(bt);
+        return c;
+    }
+    let bt = workspace::take_keyed(b, n * k, |bt| transpose_into(bt, b, k, n));
+    nt_core(a, &bt, m, n, k, prm)
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::pool::set_threads;
+    use super::super::profile::{
+        reset_active, set_active, KernelProfile, OpParams,
+    };
     use super::*;
     use crate::tensor::Rng;
 
@@ -254,5 +310,54 @@ mod tests {
             );
         }
         set_threads(0);
+    }
+
+    #[test]
+    fn matmul_nt_w_cached_transpose_is_bit_identical_and_hits() {
+        let _guard = super::super::profile::test_lock();
+        let mut rng = Rng::new(7);
+        let (m, n, k) = (9usize, 37usize, 21usize);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        // the "weight": long-lived for the whole test, as the contract asks
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        reset_active();
+        let want = matmul_nt(&a, &w, m, n, k);
+
+        // uncached under the default profile (nt_cache = false)
+        let got = matmul_nt_w(&a, &w, m, n, k);
+        assert_eq!(want, got, "nt_w (uncached) differs from nt");
+
+        // enable the cache and prove bit-identity plus an actual hit
+        let profile = KernelProfile {
+            default_params: OpParams { nt_cache: true, ..OpParams::DEFAULT },
+            id: "nt-cache-test".into(),
+            ..KernelProfile::default()
+        };
+        set_active(profile, None);
+        crate::kernels::workspace::bump_weight_generation();
+        let before = crate::kernels::workspace::stats();
+        // concurrent tests bump the weight generation (optimizer steps,
+        // checkpoint decodes), which legitimately invalidates the cache;
+        // retry until both calls land inside one generation
+        let (first, second) = loop {
+            let gen = crate::kernels::workspace::weight_generation();
+            let f = matmul_nt_w(&a, &w, m, n, k); // builds the transpose
+            let s = matmul_nt_w(&a, &w, m, n, k); // must hit the cache
+            if crate::kernels::workspace::weight_generation() == gen {
+                break (f, s);
+            }
+        };
+        reset_active();
+        let after = crate::kernels::workspace::stats();
+        assert_eq!(want, first, "nt_w (cache build) differs from nt");
+        assert_eq!(want, second, "nt_w (cache hit) differs from nt");
+        assert!(
+            after.keyed_builds >= before.keyed_builds + 1,
+            "expected a transpose build"
+        );
+        assert!(
+            after.keyed_hits >= before.keyed_hits + 1,
+            "expected a transpose cache hit"
+        );
     }
 }

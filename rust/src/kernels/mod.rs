@@ -24,15 +24,30 @@
 //! interpreter's `a != 0.0` skip dropped `0.0 * inf = NaN` contributions
 //! and is gone — kernels are IEEE-faithful to the plain summation.
 //!
+//! ## Tuning
+//!
+//! Loop-shape knobs (k-panel size, row grain, inner-loop chunk width,
+//! cached NT transpose) live in a [`profile::KernelProfile`].  Because
+//! every knob only regroups or re-chunks iterations — never a reduction
+//! order — **any legal profile is bit-exact by construction**: the same
+//! results as the default profile, at every thread count.  `bdia tune`
+//! ([`tune`]) benchmarks candidate profiles on the live pool and persists
+//! the winner as JSON next to the checkpoint.
+//!
 //! ## Layout
 //!
 //! * [`pool`] — persistent `std::thread` worker pool; the `threads`
 //!   config/CLI knob; row-partitioning helpers
 //! * [`workspace`] — thread-local buffer arena: steady-state calls reuse
-//!   scratch and output buffers instead of allocating
+//!   scratch and output buffers instead of allocating; keyed cache for
+//!   static-weight transposes
+//! * [`profile`] — versioned per-shape kernel parameter profiles, the
+//!   process-wide active profile, JSON persistence
+//! * [`tune`] — candidate search that produces a [`profile::KernelProfile`]
 //! * [`matmul`] — blocked matmul / linear / transposed variants
 //! * [`norm`] — layer norm forward/backward
-//! * [`elementwise`] — add / column sums / GELU maps
+//! * [`elementwise`] — add / column sums / GELU maps / the `axpy`
+//!   microkernel behind every inner loop
 //! * [`attention`] — multi-head attention forward/backward, parallel
 //!   across (batch, head) pairs
 
@@ -41,11 +56,24 @@ pub mod elementwise;
 pub mod matmul;
 pub mod norm;
 pub mod pool;
+pub mod profile;
+pub mod tune;
 pub mod workspace;
 
 pub use attention::{attn_bwd, attn_fwd, AttnCache, AttnGrads, AttnW, NEG_INF};
 pub use elementwise::{
-    add, add_into, col_sum, gelu, gelu_grad, map_gelu, scale_by_gelu_grad,
+    add, add_into, axpy, col_sum, gelu, gelu_grad, map_gelu,
+    scale_by_gelu_grad,
 };
-pub use matmul::{linear, matmul, matmul_nt, matmul_tn};
+pub use matmul::{linear, matmul, matmul_nt, matmul_nt_w, matmul_tn};
 pub use norm::{ln_bwd, ln_fwd, LnCache};
+pub use profile::{KernelProfile, OpKind, OpParams};
+
+/// Rows per task for a row-parallel loop whose per-row cost is roughly
+/// `work_per_row` flops, driven by the active profile's grain budget.
+/// The unified heuristic behind matmul, norm and elementwise splits:
+/// under the default profile it reproduces the historical constants
+/// (`GRAIN_FLOP = 1 << 14`, `MAP_GRAIN = 1 << 12`, ...) bit-for-bit.
+pub fn grain(work_per_row: usize) -> usize {
+    profile::grain_of(profile::grain_flop(), work_per_row)
+}

@@ -11,9 +11,10 @@ use super::workspace;
 
 const LN_EPS: f32 = 1e-5;
 
-/// Approximate flops per row for the grain calculation (several sweeps).
+/// Approximate flops per row for the grain calculation (several sweeps),
+/// fed to the unified profile-driven grain heuristic.
 fn ln_grain(d: usize) -> usize {
-    super::matmul::row_grain(6 * d)
+    super::grain(6 * d)
 }
 
 pub struct LnCache {

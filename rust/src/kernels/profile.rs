@@ -1,0 +1,545 @@
+//! Kernel tuning profiles: versioned, persisted per-shape parameter tables
+//! that drive the blocked kernels in this layer (`bdia tune`).
+//!
+//! A [`KernelProfile`] maps an operation key — op kind + problem dims +
+//! thread count — to the tunable knobs of the corresponding kernel: k-panel
+//! size `kc`, row-grain flop budget `grain_flop`, inner-loop chunk width
+//! `unroll`, and whether `matmul_nt_w` may reuse a cached weight transpose
+//! (`nt_cache`).
+//!
+//! **Any legal profile is bit-exact by construction.**  The knobs can only
+//! move task-split boundaries (`grain_flop`), regroup the k loop into
+//! panels without reordering it (`kc`), chunk *independent output elements*
+//! at a fixed width (`unroll`), or reuse a bitwise-identical transpose
+//! (`nt_cache`).  None of them can change the per-element reduction order,
+//! so every output bit matches the default profile at every thread count —
+//! `tests/profile_tuning.rs` proves this over randomized profiles.
+//!
+//! Profiles persist as versioned JSON (`{"bdia_profile": 1, ...}`) written
+//! atomically (tmp file + rename) next to the checkpoint by `bdia tune`,
+//! and load at session startup via `--tune-profile` /
+//! `SessionBuilder::tune_profile`.  A corrupt or wrong-version file is
+//! rejected with a clear error and the caller falls back to the default
+//! profile, which reproduces today's constants bit-for-bit.
+
+use crate::config::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Profile format version this build reads and writes.
+pub const PROFILE_VERSION: usize = 1;
+
+/// Which kernel an entry tunes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpKind {
+    /// `matmul` / `linear` (`mm_bias`): key is (m, k, n).
+    Matmul,
+    /// `matmul_tn`: key is (m, k, n) as passed to the kernel.
+    MatmulTn,
+    /// `matmul_nt` / `matmul_nt_w`: key is (m, k, n) with `a` m×k, `b` n×k.
+    MatmulNt,
+    /// Per-head attention loops: key is (b·heads, tq·tk, dh).
+    Attention,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 4] =
+        [OpKind::Matmul, OpKind::MatmulTn, OpKind::MatmulNt, OpKind::Attention];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Matmul => "matmul",
+            OpKind::MatmulTn => "matmul_tn",
+            OpKind::MatmulNt => "matmul_nt",
+            OpKind::Attention => "attention",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<OpKind> {
+        OpKind::ALL
+            .into_iter()
+            .find(|o| o.name() == s)
+            .with_context(|| format!("unknown profile op kind '{s}'"))
+    }
+}
+
+/// The tunable knobs of one kernel invocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpParams {
+    /// k-panel size for blocked reductions.  Panels regroup the k loop but
+    /// never reorder it, so any `kc >= 1` yields identical bits.
+    pub kc: usize,
+    /// Row-grain flop budget: a pool task owns
+    /// `(grain_flop / work_per_row).max(1)` rows.  Only moves task-split
+    /// boundaries — row-partitioned kernels are split-independent.
+    pub grain_flop: usize,
+    /// Chunk width for inner loops over *independent output elements*
+    /// (1, 2, 4, 8 or 16).  Never applied across a reduction, so each
+    /// output element still receives exactly one update per k step.
+    pub unroll: usize,
+    /// Allow `matmul_nt_w` to reuse a cached transpose of a static weight
+    /// (bitwise-identical to a fresh transpose).
+    pub nt_cache: bool,
+}
+
+impl OpParams {
+    /// Today's hard-coded constants, bit-for-bit: `KC = 64`,
+    /// `GRAIN_FLOP = 1 << 14`, scalar inner loops, no transpose cache.
+    pub const DEFAULT: OpParams =
+        OpParams { kc: 64, grain_flop: 1 << 14, unroll: 1, nt_cache: false };
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.kc >= 1, "profile kc must be >= 1 (got {})", self.kc);
+        ensure!(
+            self.grain_flop >= 1,
+            "profile grain_flop must be >= 1 (got {})",
+            self.grain_flop
+        );
+        ensure!(
+            matches!(self.unroll, 1 | 2 | 4 | 8 | 16),
+            "profile unroll must be one of 1/2/4/8/16 (got {})",
+            self.unroll
+        );
+        Ok(())
+    }
+}
+
+impl Default for OpParams {
+    fn default() -> Self {
+        OpParams::DEFAULT
+    }
+}
+
+/// What one profile entry is keyed by: op kind, problem dims, thread count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct OpKey {
+    pub op: OpKind,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// `pool::threads()` at lookup time — a profile tuned at 2 threads says
+    /// nothing about 8, so entries only match their own thread count.
+    pub threads: usize,
+}
+
+impl OpKey {
+    /// Rough flop count, used to rank shapes by how much they matter.
+    pub fn work(&self) -> usize {
+        self.m.saturating_mul(self.k).saturating_mul(self.n)
+    }
+}
+
+/// A versioned, serializable set of kernel parameters: per-shape entries
+/// over a fallback [`OpParams`] for everything unlisted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelProfile {
+    pub version: usize,
+    /// Human-readable identity (surfaced by `bdia info` and `/stats`).
+    pub id: String,
+    /// Parameters for shapes without an entry.
+    pub default_params: OpParams,
+    pub entries: BTreeMap<OpKey, OpParams>,
+}
+
+impl Default for KernelProfile {
+    /// Reproduces today's constants bit-for-bit for every op and shape.
+    fn default() -> Self {
+        KernelProfile {
+            version: PROFILE_VERSION,
+            id: "default".into(),
+            default_params: OpParams::DEFAULT,
+            entries: BTreeMap::new(),
+        }
+    }
+}
+
+impl KernelProfile {
+    /// Parameters for one kernel invocation.
+    pub fn params(&self, key: &OpKey) -> OpParams {
+        self.entries.get(key).copied().unwrap_or(self.default_params)
+    }
+
+    /// True when every lookup would return [`OpParams::DEFAULT`] — the
+    /// lock-free fast path in [`params_for`] keys off this.
+    pub fn is_default(&self) -> bool {
+        self.default_params == OpParams::DEFAULT && self.entries.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.version == PROFILE_VERSION,
+            "unsupported profile version {} (this build reads version \
+             {PROFILE_VERSION})",
+            self.version
+        );
+        self.default_params.validate()?;
+        for (key, p) in &self.entries {
+            p.validate().with_context(|| {
+                format!(
+                    "entry {} m={} k={} n={} threads={}",
+                    key.op.name(),
+                    key.m,
+                    key.k,
+                    key.n,
+                    key.threads
+                )
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Canonical JSON rendering.  Entries iterate in `BTreeMap` order and
+    /// every field prints in a fixed order, so save → load → save is
+    /// byte-identical.
+    pub fn to_json_string(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"bdia_profile\": {}, \"id\": \"{}\", \"default\": {}, \
+             \"entries\": [",
+            self.version,
+            self.id.escape_default(),
+            fmt_params(&self.default_params)
+        );
+        for (i, (key, p)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(
+                s,
+                "{{\"op\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+                 \"threads\": {}, \"params\": {}}}",
+                key.op.name(),
+                key.m,
+                key.k,
+                key.n,
+                key.threads,
+                fmt_params(p)
+            );
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Parse + validate a profile document.  Corrupt JSON, a wrong
+    /// `bdia_profile` version, missing fields, and illegal parameter
+    /// values are all rejected with a clear error.
+    pub fn from_json(s: &str) -> Result<Self> {
+        let j = Json::parse(s).context("profile is not valid JSON")?;
+        let version = j
+            .get("bdia_profile")
+            .context("no \"bdia_profile\" version field")?
+            .as_usize()
+            .context("\"bdia_profile\" must be an integer")?;
+        ensure!(
+            version == PROFILE_VERSION,
+            "unsupported profile version {version} (this build reads \
+             version {PROFILE_VERSION})"
+        );
+        let id = j.get("id")?.as_str().context("\"id\"")?.to_string();
+        let default_params =
+            parse_params(j.get("default")?).context("in \"default\"")?;
+        let mut entries = BTreeMap::new();
+        for (i, e) in j.get("entries")?.as_arr()?.iter().enumerate() {
+            let parsed = parse_entry(e).with_context(|| format!("entry {i}"))?;
+            entries.insert(parsed.0, parsed.1);
+        }
+        let profile = KernelProfile { version, id, default_params, entries };
+        profile.validate()?;
+        Ok(profile)
+    }
+
+    /// Atomically persist as canonical JSON: write a tmp sibling, fsync,
+    /// rename over `path`, fsync the directory — a crash leaves either the
+    /// old file or the new one, never a torn profile.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        let json = self.to_json_string();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        {
+            let mut f = fs::File::create(&tmp).with_context(|| {
+                format!("creating profile tmp file {}", tmp.display())
+            })?;
+            f.write_all(json.as_bytes())
+                .and_then(|()| f.sync_all())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} -> {}", tmp.display(), path.display())
+        })?;
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let s = fs::read_to_string(path).with_context(|| {
+            format!("reading tune profile {}", path.display())
+        })?;
+        Self::from_json(&s)
+            .with_context(|| format!("tune profile {}", path.display()))
+    }
+}
+
+fn fmt_params(p: &OpParams) -> String {
+    format!(
+        "{{\"kc\": {}, \"grain_flop\": {}, \"unroll\": {}, \"nt_cache\": {}}}",
+        p.kc, p.grain_flop, p.unroll, p.nt_cache
+    )
+}
+
+fn usize_field(j: &Json, name: &str) -> Result<usize> {
+    j.get(name)?.as_usize().with_context(|| format!("\"{name}\""))
+}
+
+fn parse_params(j: &Json) -> Result<OpParams> {
+    Ok(OpParams {
+        kc: usize_field(j, "kc")?,
+        grain_flop: usize_field(j, "grain_flop")?,
+        unroll: usize_field(j, "unroll")?,
+        nt_cache: j.get("nt_cache")?.as_bool().context("\"nt_cache\"")?,
+    })
+}
+
+fn parse_entry(j: &Json) -> Result<(OpKey, OpParams)> {
+    let op = OpKind::parse(j.get("op")?.as_str().context("\"op\"")?)?;
+    let key = OpKey {
+        op,
+        m: usize_field(j, "m")?,
+        k: usize_field(j, "k")?,
+        n: usize_field(j, "n")?,
+        threads: usize_field(j, "threads")?,
+    };
+    let params = parse_params(j.get("params")?)?;
+    Ok((key, params))
+}
+
+// ---------------------------------------------------------------------------
+// Process-global active profile
+// ---------------------------------------------------------------------------
+
+struct Active {
+    profile: Arc<KernelProfile>,
+    source: Option<PathBuf>,
+}
+
+static ACTIVE: RwLock<Option<Active>> = RwLock::new(None);
+/// Lock-free fast path: false means every lookup returns
+/// [`OpParams::DEFAULT`], so the hot kernels skip the `RwLock` entirely.
+static NON_DEFAULT: AtomicBool = AtomicBool::new(false);
+
+/// Install `profile` as the process-wide active profile.  `source` is the
+/// file it came from, if any (surfaced by `bdia info` / `/stats`).
+pub fn set_active(profile: KernelProfile, source: Option<PathBuf>) {
+    let non_default = !profile.is_default();
+    *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) =
+        Some(Active { profile: Arc::new(profile), source });
+    NON_DEFAULT.store(non_default, Ordering::Release);
+}
+
+/// Drop back to the built-in default profile (today's constants).
+pub fn reset_active() {
+    NON_DEFAULT.store(false, Ordering::Release);
+    *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// The active profile, if one was installed.
+pub fn active() -> Option<Arc<KernelProfile>> {
+    ACTIVE
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .map(|a| Arc::clone(&a.profile))
+}
+
+/// Identity of the active profile (`"default"` when none installed).
+pub fn active_id() -> String {
+    ACTIVE
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .map_or_else(|| "default".to_string(), |a| a.profile.id.clone())
+}
+
+/// File the active profile was loaded from, if any.
+pub fn active_source() -> Option<PathBuf> {
+    ACTIVE
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .and_then(|a| a.source.clone())
+}
+
+/// Parameters for one kernel invocation at the current pool width.  Also
+/// notes the shape when recording is on (see [`record_shapes`]).
+pub fn params_for(op: OpKind, m: usize, k: usize, n: usize) -> OpParams {
+    let key = OpKey { op, m, k, n, threads: super::pool::threads() };
+    if RECORD.load(Ordering::Relaxed) {
+        RECORDED.lock().unwrap_or_else(|e| e.into_inner()).insert(key);
+    }
+    if !NON_DEFAULT.load(Ordering::Acquire) {
+        return OpParams::DEFAULT;
+    }
+    match &*ACTIVE.read().unwrap_or_else(|e| e.into_inner()) {
+        Some(a) => a.profile.params(&key),
+        None => OpParams::DEFAULT,
+    }
+}
+
+/// The active profile's fallback `grain_flop` — the single knob behind
+/// `kernels::grain` that drives every row-parallel map (layernorm, GELU
+/// maps, ...).
+pub fn grain_flop() -> usize {
+    if !NON_DEFAULT.load(Ordering::Acquire) {
+        return OpParams::DEFAULT.grain_flop;
+    }
+    match &*ACTIVE.read().unwrap_or_else(|e| e.into_inner()) {
+        Some(a) => a.profile.default_params.grain_flop,
+        None => OpParams::DEFAULT.grain_flop,
+    }
+}
+
+/// Rows per pool task for a given flop budget: tasks only get *larger*
+/// or *smaller* — row partitioning itself never changes results.
+pub fn grain_of(grain_flop: usize, work_per_row: usize) -> usize {
+    (grain_flop / work_per_row.max(1)).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// Shape recording (used by `bdia tune` to learn what a model actually runs)
+// ---------------------------------------------------------------------------
+
+static RECORD: AtomicBool = AtomicBool::new(false);
+static RECORDED: Mutex<BTreeSet<OpKey>> = Mutex::new(BTreeSet::new());
+
+/// Start (clearing any previous set) or stop recording every
+/// (op, dims, threads) key the kernels look up.
+pub fn record_shapes(on: bool) {
+    if on {
+        RECORDED.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+    RECORD.store(on, Ordering::Relaxed);
+}
+
+/// Drain the recorded keys, sorted.
+pub fn take_recorded() -> Vec<OpKey> {
+    let mut g = RECORDED.lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::take(&mut *g).into_iter().collect()
+}
+
+/// Serializes unit tests that assert on the process-global active profile
+/// or the keyed-cache counters (libtest runs tests concurrently).
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> KernelProfile {
+        let mut p = KernelProfile {
+            id: "vit_s10-t2".into(),
+            ..KernelProfile::default()
+        };
+        p.entries.insert(
+            OpKey { op: OpKind::Matmul, m: 128, k: 192, n: 192, threads: 2 },
+            OpParams { kc: 128, grain_flop: 1 << 12, unroll: 8, nt_cache: false },
+        );
+        p.entries.insert(
+            OpKey { op: OpKind::MatmulNt, m: 128, k: 192, n: 192, threads: 2 },
+            OpParams { kc: 32, grain_flop: 1 << 16, unroll: 4, nt_cache: true },
+        );
+        p
+    }
+
+    #[test]
+    fn default_profile_reproduces_todays_constants() {
+        let d = KernelProfile::default();
+        assert!(d.is_default());
+        assert_eq!(d.version, PROFILE_VERSION);
+        let p = d.params(&OpKey {
+            op: OpKind::Matmul,
+            m: 7,
+            k: 9,
+            n: 11,
+            threads: 3,
+        });
+        assert_eq!(p, OpParams { kc: 64, grain_flop: 1 << 14, unroll: 1, nt_cache: false });
+        // the one grain heuristic behind every row-parallel kernel
+        assert_eq!(grain_of(OpParams::DEFAULT.grain_flop, 4), 1 << 12);
+        assert_eq!(grain_of(OpParams::DEFAULT.grain_flop, 0), 1 << 14);
+        assert_eq!(grain_of(OpParams::DEFAULT.grain_flop, usize::MAX), 1);
+    }
+
+    #[test]
+    fn json_round_trip_is_byte_identical_and_lossless() {
+        let p = sample();
+        let s1 = p.to_json_string();
+        let back = KernelProfile::from_json(&s1).expect("round trip");
+        assert_eq!(back, p);
+        assert_eq!(back.to_json_string(), s1);
+        // entries shadow the fallback exactly where keyed
+        let key = *p.entries.keys().next().unwrap();
+        assert_eq!(back.params(&key), p.entries[&key]);
+        let mut other = key;
+        other.threads += 1;
+        assert_eq!(back.params(&other), p.default_params);
+    }
+
+    #[test]
+    fn corrupt_wrong_version_and_illegal_profiles_are_rejected() {
+        assert!(KernelProfile::from_json("not json").is_err());
+        assert!(KernelProfile::from_json("{\"id\": \"x\"}")
+            .unwrap_err()
+            .to_string()
+            .contains("bdia_profile"));
+        let wrong = sample().to_json_string().replacen(
+            "\"bdia_profile\": 1",
+            "\"bdia_profile\": 99",
+            1,
+        );
+        let err = format!("{:#}", KernelProfile::from_json(&wrong).unwrap_err());
+        assert!(err.contains("version 99"), "unhelpful error: {err}");
+        // illegal unroll width
+        let bad = sample().to_json_string().replacen(
+            "\"unroll\": 1,",
+            "\"unroll\": 3,",
+            1,
+        );
+        let err = format!("{:#}", KernelProfile::from_json(&bad).unwrap_err());
+        assert!(err.contains("unroll"), "unhelpful error: {err}");
+        // kc = 0 is illegal
+        assert!(OpParams { kc: 0, ..OpParams::DEFAULT }.validate().is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_and_loads_back_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("bdia_profile_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prof.json");
+        let p = sample();
+        p.save(&path).expect("save");
+        // no tmp sibling left behind
+        assert!(!dir.join("prof.json.tmp").exists());
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes, p.to_json_string().as_bytes());
+        let back = KernelProfile::load(&path).expect("load");
+        assert_eq!(back, p);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

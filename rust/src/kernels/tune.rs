@@ -1,0 +1,329 @@
+//! Candidate search for kernel tuning profiles (`bdia tune`).
+//!
+//! [`search`] takes the shapes a model actually runs (captured via
+//! [`profile::record_shapes`]), benchmarks a grid of candidate
+//! [`OpParams`] for each shape **on the live pool at the current thread
+//! count**, and composes the per-shape winners into a
+//! [`KernelProfile`].  Every candidate is a legal profile, and legal
+//! profiles are bit-exact by construction, so the search can only change
+//! speed — never results.
+//!
+//! Probing installs each candidate as the process-wide active profile's
+//! fallback parameters (entries would not engage for the attention proxy
+//! shapes below), times a warmup plus min-of-iterations run on synthetic
+//! data, and restores whatever profile was active before returning.
+
+use super::attention::{attn_fwd, AttnW};
+use super::matmul::{matmul, matmul_nt_w, matmul_tn};
+use super::pool;
+use super::profile::{self, KernelProfile, OpKey, OpKind, OpParams};
+use super::workspace;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Most shapes tuned per run (largest by flop count first).
+pub const MAX_SHAPES: usize = 24;
+/// Shape cap under `--quick` (CI smoke).
+pub const MAX_SHAPES_QUICK: usize = 12;
+
+/// Timing result for one tuned shape.
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeTiming {
+    pub key: OpKey,
+    /// min-of-iterations time under [`OpParams::DEFAULT`].
+    pub default_ms: f64,
+    /// min-of-iterations time under the winning candidate.
+    pub best_ms: f64,
+    pub best: OpParams,
+}
+
+/// What [`search`] produced: the composed profile plus per-shape timings.
+pub struct SearchReport {
+    pub profile: KernelProfile,
+    pub shapes: Vec<ShapeTiming>,
+    /// Recorded shapes not tuned: wrong thread count, zero work, or past
+    /// the per-run cap.
+    pub dropped: usize,
+}
+
+/// Deterministic synthetic operand data (xorshift32 in [-0.5, 0.5)).
+fn synth(n: usize, seed: u32) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 17;
+            s ^= s << 5;
+            (s as f32 / u32::MAX as f32) - 0.5
+        })
+        .collect()
+}
+
+fn isqrt(v: usize) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    let mut r = (v as f64).sqrt() as usize;
+    while r.saturating_mul(r) > v {
+        r -= 1;
+    }
+    while (r + 1).saturating_mul(r + 1) <= v {
+        r += 1;
+    }
+    r
+}
+
+/// The candidate grid for one op kind.  Always contains
+/// [`OpParams::DEFAULT`], so `default_ms` is measured for free.
+fn candidates(op: OpKind, quick: bool) -> Vec<OpParams> {
+    let (kcs, grains, unrolls): (&[usize], &[usize], &[usize]) = if quick {
+        (&[64, 128], &[1 << 12, 1 << 14], &[1, 8])
+    } else {
+        (&[32, 64, 128, 256], &[1 << 12, 1 << 14, 1 << 16], &[1, 4, 8, 16])
+    };
+    let mut out = Vec::new();
+    match op {
+        // the attention head loops have no k-panel; only grain and the
+        // axpy chunk width matter
+        OpKind::Attention => {
+            for &g in grains {
+                for &u in unrolls {
+                    out.push(OpParams {
+                        kc: OpParams::DEFAULT.kc,
+                        grain_flop: g,
+                        unroll: u,
+                        nt_cache: false,
+                    });
+                }
+            }
+        }
+        OpKind::MatmulNt => {
+            for &kc in kcs {
+                for &g in grains {
+                    for &u in unrolls {
+                        for nt in [false, true] {
+                            out.push(OpParams {
+                                kc,
+                                grain_flop: g,
+                                unroll: u,
+                                nt_cache: nt,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        OpKind::Matmul | OpKind::MatmulTn => {
+            for &kc in kcs {
+                for &g in grains {
+                    for &u in unrolls {
+                        out.push(OpParams {
+                            kc,
+                            grain_flop: g,
+                            unroll: u,
+                            nt_cache: false,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    debug_assert!(out.contains(&OpParams::DEFAULT));
+    out
+}
+
+/// Warmup once, then min over `iters` timed runs.
+fn time_ms(iters: usize, f: &mut dyn FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        if dt < best {
+            best = dt;
+        }
+    }
+    best
+}
+
+/// Benchmark every candidate for one shape and return the winner.
+fn bench_shape(key: &OpKey, quick: bool) -> ShapeTiming {
+    let iters = if quick { 2 } else { 3 };
+    // one kernel invocation on synthetic operands matching the recorded
+    // dims; buffers go back to the arena so steady-state runs don't
+    // allocate
+    let mut run: Box<dyn FnMut()> = match key.op {
+        OpKind::Matmul => {
+            let (m, k, n) = (key.m, key.k, key.n);
+            let a = synth(m * k, 1);
+            let b = synth(k * n, 2);
+            Box::new(move || {
+                workspace::give(matmul(&a, &b, m, k, n));
+            })
+        }
+        OpKind::MatmulTn => {
+            let (m, k, n) = (key.m, key.k, key.n);
+            let a = synth(m * k, 1);
+            let b = synth(m * n, 2);
+            Box::new(move || {
+                workspace::give(matmul_tn(&a, &b, m, k, n));
+            })
+        }
+        OpKind::MatmulNt => {
+            // key is (m, reduction, output cols); `b` plays the static
+            // weight so nt_cache candidates exercise the keyed cache
+            let (m, red, cols) = (key.m, key.k, key.n);
+            let a = synth(m * red, 1);
+            let b = synth(cols * red, 2);
+            Box::new(move || {
+                workspace::give(matmul_nt_w(&a, &b, m, red, cols));
+            })
+        }
+        OpKind::Attention => {
+            // proxy the (b·heads, tq·tk, dh) key with heads = 1 and a
+            // square tq = tk = isqrt(tq·tk); candidates install as the
+            // probe's fallback params, so an inexact proxy shape still
+            // engages them
+            let b = key.m.max(1);
+            let t = isqrt(key.k).max(1);
+            let d = key.n.max(1);
+            let wq = synth(d * d, 3);
+            let wk = synth(d * d, 4);
+            let wv = synth(d * d, 5);
+            let wo = synth(d * d, 6);
+            let bias = synth(d, 7);
+            let x = synth(b * t * d, 8);
+            Box::new(move || {
+                let w = AttnW {
+                    wq: &wq,
+                    bq: &bias,
+                    wk: &wk,
+                    bk: &bias,
+                    wv: &wv,
+                    bv: &bias,
+                    wo: &wo,
+                    bo: &bias,
+                };
+                let (y, cache) = attn_fwd(&w, &x, &x, b, t, t, d, 1, true);
+                workspace::give(y);
+                cache.recycle();
+            })
+        }
+    };
+    let mut default_ms = f64::INFINITY;
+    let mut best_ms = f64::INFINITY;
+    let mut best = OpParams::DEFAULT;
+    for cand in candidates(key.op, quick) {
+        profile::set_active(
+            KernelProfile {
+                id: "probe".into(),
+                default_params: cand,
+                ..KernelProfile::default()
+            },
+            None,
+        );
+        let ms = time_ms(iters, &mut run);
+        if cand == OpParams::DEFAULT {
+            default_ms = ms;
+        }
+        if ms < best_ms {
+            best_ms = ms;
+            best = cand;
+        }
+    }
+    ShapeTiming { key: *key, default_ms, best_ms, best }
+}
+
+/// Benchmark candidate parameters for `shapes` at the current pool width
+/// and compose the winners into a profile named `id`.
+///
+/// Shapes recorded at a different thread count are skipped (a profile
+/// tuned at 2 threads says nothing about 8); the rest are ranked by flop
+/// count and capped at [`MAX_SHAPES`] ([`MAX_SHAPES_QUICK`] under
+/// `quick`).  The previously active profile is restored before returning.
+pub fn search(id: &str, shapes: &[OpKey], quick: bool) -> SearchReport {
+    let threads = pool::threads();
+    profile::record_shapes(false);
+    let prev = profile::active();
+    let prev_src = profile::active_source();
+
+    let mut keys: Vec<OpKey> = shapes
+        .iter()
+        .copied()
+        .filter(|s| s.threads == threads && s.work() > 0)
+        .collect();
+    keys.sort_by(|a, b| b.work().cmp(&a.work()).then(a.cmp(b)));
+    keys.dedup();
+    let cap = if quick { MAX_SHAPES_QUICK } else { MAX_SHAPES };
+    keys.truncate(cap);
+    let dropped = shapes.len().saturating_sub(keys.len());
+
+    let mut timings = Vec::with_capacity(keys.len());
+    let mut entries = BTreeMap::new();
+    for key in &keys {
+        let t = bench_shape(key, quick);
+        entries.insert(*key, t.best);
+        timings.push(t);
+    }
+
+    // roll back the probe installs and drop probe-era transpose cache
+    // entries (pruned on the next keyed insert)
+    match prev {
+        Some(p) => profile::set_active((*p).clone(), prev_src),
+        None => profile::reset_active(),
+    }
+    workspace::bump_weight_generation();
+
+    let profile = KernelProfile {
+        id: id.to_string(),
+        default_params: OpParams::DEFAULT,
+        entries,
+        ..KernelProfile::default()
+    };
+    SearchReport { profile, shapes: timings, dropped }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_search_produces_a_valid_profile_and_restores_active() {
+        let _guard = profile::test_lock();
+        profile::reset_active();
+        pool::set_threads(2);
+        let t = pool::threads();
+        let shapes = vec![
+            OpKey { op: OpKind::Matmul, m: 48, k: 32, n: 24, threads: t },
+            OpKey { op: OpKind::MatmulNt, m: 16, k: 24, n: 32, threads: t },
+            OpKey { op: OpKind::Attention, m: 4, k: 36, n: 8, threads: t },
+            // wrong thread count: must be skipped, not mis-tuned
+            OpKey { op: OpKind::Matmul, m: 8, k: 8, n: 8, threads: t + 13 },
+        ];
+        let rep = search("test-quick", &shapes, true);
+        assert_eq!(rep.profile.id, "test-quick");
+        rep.profile.validate().expect("searched profile must be legal");
+        assert_eq!(rep.shapes.len(), 3);
+        assert_eq!(rep.profile.entries.len(), 3);
+        assert_eq!(rep.dropped, 1);
+        for s in &rep.shapes {
+            assert!(s.default_ms.is_finite(), "default never timed");
+            assert!(
+                s.best_ms <= s.default_ms,
+                "winner slower than the default it competed against"
+            );
+        }
+        // the probe installs were rolled back
+        assert_eq!(profile::active_id(), "default");
+        pool::set_threads(0);
+    }
+
+    #[test]
+    fn isqrt_is_exact_floor() {
+        for v in [0usize, 1, 2, 3, 4, 8, 9, 35, 36, 37, 1 << 20] {
+            let r = isqrt(v);
+            assert!(r * r <= v && (r + 1) * (r + 1) > v, "isqrt({v}) = {r}");
+        }
+    }
+}

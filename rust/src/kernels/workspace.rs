@@ -12,19 +12,95 @@
 //! indistinguishable from `vec![0.0; len]` — reuse can never change
 //! results.  Buffers that escape into caches or tensors simply drop
 //! normally; recycling is an optimization, never a requirement.
+//!
+//! A second, *keyed* cache ([`take_keyed`]) memoizes derived buffers —
+//! today the `matmul_nt_w` weight transpose — keyed by the source slice's
+//! pointer + length + the process-wide **weight generation**.  Any code
+//! path that mutates or replaces long-lived weight buffers bumps
+//! [`bump_weight_generation`], which invalidates every memoized derivation
+//! at once; the optimizer step, parameter (re)initialization and
+//! checkpoint-restore paths in-tree all do.
 
 use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Per-thread free-list bound — beyond this, [`give`] lets buffers drop.
 const MAX_CACHED: usize = 48;
 
+/// Per-thread keyed-cache bound.  Must comfortably exceed the number of
+/// distinct weight matrices a model's backward pass touches per step
+/// (K blocks × several weights each), or cyclic access would evict every
+/// entry before its next use.
+const MAX_KEYED: usize = 64;
+
 thread_local! {
     static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static KEYED: RefCell<Vec<KeyedEntry>> = const { RefCell::new(Vec::new()) };
 }
 
 static HITS: AtomicU64 = AtomicU64::new(0);
 static MISSES: AtomicU64 = AtomicU64::new(0);
+static KEYED_HITS: AtomicU64 = AtomicU64::new(0);
+static KEYED_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Bumped whenever long-lived weight buffers may have been mutated,
+/// dropped or replaced; stale keyed entries can then never match.
+static WEIGHT_GEN: AtomicU64 = AtomicU64::new(0);
+
+struct KeyedEntry {
+    /// (source pointer, source length, weight generation at build time).
+    key: (usize, usize, u64),
+    buf: Rc<Vec<f32>>,
+}
+
+/// Invalidate every keyed (derived-from-weights) cache entry process-wide.
+pub fn bump_weight_generation() {
+    WEIGHT_GEN.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Current weight generation (keyed-cache entries are pinned to one).
+pub fn weight_generation() -> u64 {
+    WEIGHT_GEN.load(Ordering::Relaxed)
+}
+
+/// A buffer derived from the long-lived slice `src`, memoized per thread.
+///
+/// On a hit the previously built buffer is returned as-is; on a miss a
+/// zeroed buffer of `out_len` is passed to `build` and the result cached
+/// under `(src.as_ptr(), src.len(), weight_generation())`.  Callers must
+/// guarantee `src` is a long-lived buffer whose every mutation path bumps
+/// [`bump_weight_generation`] — that is what makes pointer identity a
+/// sound cache key (a freed-and-reallocated buffer can reuse an address,
+/// but never within the same generation, because dropping a weight store
+/// bumps the generation first).
+pub fn take_keyed(
+    src: &[f32],
+    out_len: usize,
+    build: impl FnOnce(&mut [f32]),
+) -> Rc<Vec<f32>> {
+    let key = (src.as_ptr() as usize, src.len(), weight_generation());
+    KEYED.with(|cell| {
+        let mut cache = cell.borrow_mut();
+        if let Some(e) =
+            cache.iter().find(|e| e.key == key && e.buf.len() == out_len)
+        {
+            KEYED_HITS.fetch_add(1, Ordering::Relaxed);
+            return Rc::clone(&e.buf);
+        }
+        let mut v = vec![0.0f32; out_len];
+        build(&mut v);
+        let buf = Rc::new(v);
+        // drop entries from dead generations, then bound the cache FIFO
+        cache.retain(|e| e.key.2 == key.2);
+        if cache.len() >= MAX_KEYED {
+            cache.remove(0);
+        }
+        cache.push(KeyedEntry { key, buf: Rc::clone(&buf) });
+        KEYED_BUILDS.fetch_add(1, Ordering::Relaxed);
+        buf
+    })
+}
 
 /// A zeroed `Vec<f32>` of length `len`, recycled when possible.
 pub fn take(len: usize) -> Vec<f32> {
@@ -75,12 +151,18 @@ pub struct WorkspaceStats {
     pub hits: u64,
     /// take() calls that had to allocate
     pub misses: u64,
+    /// take_keyed() calls served from a memoized buffer (nt-cache hits)
+    pub keyed_hits: u64,
+    /// take_keyed() calls that had to build (nt-cache misses)
+    pub keyed_builds: u64,
 }
 
 pub fn stats() -> WorkspaceStats {
     WorkspaceStats {
         hits: HITS.load(Ordering::Relaxed),
         misses: MISSES.load(Ordering::Relaxed),
+        keyed_hits: KEYED_HITS.load(Ordering::Relaxed),
+        keyed_builds: KEYED_BUILDS.load(Ordering::Relaxed),
     }
 }
 
@@ -113,5 +195,36 @@ mod tests {
         assert!(big.iter().all(|&x| x == 0.0));
         let s = stats();
         assert!(s.hits + s.misses > 0);
+    }
+
+    #[test]
+    fn keyed_cache_hits_on_same_source_and_invalidates_on_generation_bump() {
+        let src: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        fn fill(out: &mut [f32]) {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = i as f32 * 2.0;
+            }
+        }
+        // concurrent tests bump the weight generation (optimizer steps,
+        // checkpoint decodes), which legitimately invalidates this cache;
+        // retry until both calls land inside one generation
+        let (first, second) = loop {
+            let gen = weight_generation();
+            let a = take_keyed(&src, 64, fill);
+            let b = take_keyed(&src, 64, fill);
+            if weight_generation() == gen {
+                break (a, b);
+            }
+        };
+        // the second call must have been a hit: same Rc allocation
+        assert!(Rc::ptr_eq(&first, &second), "expected a keyed-cache hit");
+        assert_eq!(first.as_slice(), second.as_slice());
+        // a generation bump invalidates: a fresh buffer is built
+        bump_weight_generation();
+        let third = take_keyed(&src, 64, fill);
+        assert!(!Rc::ptr_eq(&first, &third));
+        assert_eq!(first.as_slice(), third.as_slice());
+        let s = stats();
+        assert!(s.keyed_hits >= 1 && s.keyed_builds >= 2);
     }
 }

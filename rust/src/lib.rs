@@ -13,7 +13,9 @@
 //! - [`kernels`]: deterministic parallel compute core — cache-blocked,
 //!   multi-threaded matmul/layernorm/attention kernels (row-partitioned
 //!   parallelism only, bit-identical at any thread count), persistent
-//!   thread pool and thread-local workspace arena
+//!   thread pool, thread-local workspace arena, and the autotuning layer:
+//!   per-shape `KernelProfile`s searched by `bdia tune`, persisted as
+//!   versioned JSON, bit-exact by construction for every legal setting
 //! - [`runtime`]: pluggable execution backends behind one ABI — the default
 //!   pure-Rust `native` interpreter (no deps, no artifacts) and the
 //!   feature-gated `pjrt` PJRT/XLA executor for AOT HLO bundles

@@ -14,11 +14,17 @@
 //!             [--workers N] [--addr host:port] [--ckpt path]
 //!             [--replicas N]
 //! bdia bench  [--families vit_s10,gpt_tiny,encdec_mt] [--threads N]
-//!             [--quick] [--out BENCH_5.json]
+//!             [--quick] [--out BENCH_8.json] [--tune-profile p.json]
+//! bdia tune   --model vit_s10 [--threads N] [--quick]
+//!             [--out profile.json] [key=value ...]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
 //!             [--steps N] [--seeds 0,1,2] [--quick]
 //! bdia info   --model vit_s10       # bundle inventory + call counts
 //! ```
+//!
+//! `train`, `eval`, `serve`, `bench-serve`, `bench` and `info` all accept
+//! `--tune-profile <json>` to run under a persisted kernel profile from
+//! `bdia tune` (bit-identical results, different wall time).
 //!
 //! Every subcommand is a thin client of `bdia::api::Session` — the CLI
 //! owns flag parsing and printing, nothing else.  Flags accept both
@@ -80,6 +86,7 @@ const TRAIN_FLAGS: &[Flag] = &[
     v("rendezvous"),
     v("dist-timeout-s"),
     v("on-rank-failure"),
+    v("tune-profile"),
 ];
 const EVAL_FLAGS: &[Flag] = &[
     v("config"),
@@ -89,6 +96,7 @@ const EVAL_FLAGS: &[Flag] = &[
     v("gamma"),
     v("batches"),
     v("ckpt"),
+    v("tune-profile"),
 ];
 const SERVE_FLAGS: &[Flag] = &[
     v("model"),
@@ -104,6 +112,7 @@ const SERVE_FLAGS: &[Flag] = &[
     b("replica"),
     v("rendezvous"),
     v("fleet-timeout-s"),
+    v("tune-profile"),
 ];
 const BENCH_SERVE_FLAGS: &[Flag] = &[
     v("model"),
@@ -121,13 +130,29 @@ const BENCH_SERVE_FLAGS: &[Flag] = &[
     v("replicas"),
     v("fleet-timeout-s"),
     b("no-verify"),
+    v("tune-profile"),
 ];
 const BENCH_FLAGS: &[Flag] =
-    &[v("families"), v("threads"), v("out"), b("quick")];
+    &[v("families"), v("threads"), v("out"), b("quick"), v("tune-profile")];
+const TUNE_FLAGS: &[Flag] = &[
+    v("config"),
+    v("model"),
+    v("backend"),
+    v("threads"),
+    v("artifacts"),
+    v("ckpt"),
+    v("out"),
+    b("quick"),
+];
 const REPRO_FLAGS: &[Flag] =
     &[v("steps"), v("seeds"), v("out"), v("artifacts"), b("quick")];
-const INFO_FLAGS: &[Flag] =
-    &[v("model"), v("artifacts"), v("backend"), v("threads")];
+const INFO_FLAGS: &[Flag] = &[
+    v("model"),
+    v("artifacts"),
+    v("backend"),
+    v("threads"),
+    v("tune-profile"),
+];
 
 struct Parsed {
     flags: BTreeMap<String, String>,
@@ -270,6 +295,9 @@ fn run() -> Result<()> {
             Extras::None,
         )?),
         "bench" => cmd_bench(&parsed("bench", args, BENCH_FLAGS, Extras::None)?),
+        "tune" => {
+            cmd_tune(&parsed("tune", args, TUNE_FLAGS, Extras::Overrides)?)
+        }
         "repro" => {
             cmd_repro(&parsed("repro", args, REPRO_FLAGS, Extras::Positionals)?)
         }
@@ -279,8 +307,16 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => {
-            let known =
-                ["train", "eval", "serve", "bench-serve", "bench", "repro", "info"];
+            let known = [
+                "train",
+                "eval",
+                "serve",
+                "bench-serve",
+                "bench",
+                "tune",
+                "repro",
+                "info",
+            ];
             match suggest(other, known) {
                 Some(s) => bail!("unknown command '{other}' (did you mean '{s}'?)"),
                 None => bail!("unknown command '{other}' (try `bdia help`)"),
@@ -322,6 +358,9 @@ fn builder_from(p: &Parsed) -> Result<SessionBuilder> {
     }
     if let Some(path) = p.flags.get("ckpt") {
         b = b.checkpoint(path);
+    }
+    if let Some(path) = p.flags.get("tune-profile") {
+        b = b.tune_profile(path);
     }
     for kv in &p.overrides {
         b = b.override_kv(kv);
@@ -586,6 +625,7 @@ fn cmd_serve_replica(p: &Parsed) -> Result<()> {
         rendezvous,
         threads: flag_val::<usize>(&p.flags, "threads")?.unwrap_or(0),
         deadline: fleet_deadline(p)?,
+        tune_profile: p.flags.get("tune-profile").map(PathBuf::from),
         ..bdia::fleet::ReplicaConfig::default()
     };
     bdia::fleet::replica::run(&cfg)
@@ -630,6 +670,7 @@ fn cmd_serve_fleet(p: &Parsed, n: usize) -> Result<()> {
             artifacts: cfg.artifacts_dir.clone(),
             threads: cfg.threads,
             fleet_timeout_s: opts.deadline.as_secs_f64(),
+            tune_profile: p.flags.get("tune-profile").map(PathBuf::from),
         };
         children.0 =
             bdia::fleet::spawn_local_replicas(handle.backplane_addr(), n, &spawn)?;
@@ -723,6 +764,7 @@ fn cmd_bench_serve(p: &Parsed) -> Result<()> {
                 artifacts: cfg.artifacts_dir.clone(),
                 threads: cfg.threads,
                 fleet_timeout_s: fopts.deadline.as_secs_f64(),
+                tune_profile: p.flags.get("tune-profile").map(PathBuf::from),
             };
             let mut children = WorkerRanks::default();
             children.0 = bdia::fleet::spawn_local_replicas(
@@ -771,11 +813,39 @@ fn cmd_bench(p: &Parsed) -> Result<()> {
     if let Some(o) = p.flags.get("out") {
         opts.out = PathBuf::from(o);
     }
+    opts.tune_profile = p.flags.get("tune-profile").map(PathBuf::from);
     let report = bdia::api::bench_suite(&opts)?;
     ensure!(
         report.all_finite(),
         "bench produced non-finite timings — kernel regression?"
     );
+    Ok(())
+}
+
+/// `bdia tune`: benchmark candidate kernel profiles on the live pool for
+/// one bundle's hot-path shapes and persist the winner as JSON.  Any
+/// profile is bit-exact by construction — tuning changes wall time only.
+fn cmd_tune(p: &Parsed) -> Result<()> {
+    let mut session = builder_from(p)?.build()?;
+    let out = p.flags.get("out").map_or_else(
+        || PathBuf::from(format!("{}_profile.json", session.model())),
+        PathBuf::from,
+    );
+    let opts = bdia::api::TuneOpts { quick: p.flags.contains_key("quick"), out: Some(out) };
+    let report = session.tune(&opts)?;
+    println!(
+        "tuned {} at {} threads: {} shapes ({} beyond the cap kept default \
+         params)",
+        report.model, report.threads, report.shapes_tuned, report.shapes_dropped
+    );
+    println!(
+        "candidate sweep total: default {:.2} ms -> tuned {:.2} ms",
+        report.default_ms, report.tuned_ms
+    );
+    if let Some(path) = &report.path {
+        println!("profile '{}' written to {}", report.profile.id, path.display());
+        println!("use it: bdia serve --model {} --tune-profile {}", report.model, path.display());
+    }
     Ok(())
 }
 
@@ -822,13 +892,19 @@ fn cmd_info(p: &Parsed) -> Result<()> {
     );
     println!(
         "  kernels: threads={} (auto={}, workers spawned={}), workspace \
-         hits={} misses={}",
+         hits={} misses={} keyed_hits={} keyed_builds={}",
         info.kernel_threads,
         info.kernel_auto_threads,
         info.kernel_spawned_workers,
         info.workspace_hits,
-        info.workspace_misses
+        info.workspace_misses,
+        info.workspace_keyed_hits,
+        info.workspace_keyed_builds
     );
+    match &info.tune_profile_source {
+        Some(s) => println!("  kernel profile: {} (from {})", info.tune_profile, s.display()),
+        None => println!("  kernel profile: {}", info.tune_profile),
+    }
     println!(
         "  dims: d_model={} heads={} K={} K_enc={} batch={} l={}",
         info.dims.d_model,
@@ -868,7 +944,9 @@ fn print_help() {
          [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
          [--replicas N] [--no-verify]\n  \
          bdia bench [--families a,b,c] [--threads N] [--quick] \
-         [--out BENCH_5.json]\n  \
+         [--out BENCH_8.json] [--tune-profile p.json]\n  \
+         bdia tune  --model <bundle> [--threads N] [--quick] \
+         [--out profile.json] [key=value ...]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
          [--quick] [--steps N] [--seeds 0,1]\n  \
          bdia info  --model <bundle> [--backend native|pjrt]\n\n\
@@ -913,7 +991,15 @@ fn print_help() {
          responses stay bit-identical to single-process serving.  \
          `bench-serve --replicas N` proves that under load.\n\
          Benchmarks: `bench` times fwd/bwd/infer per model family at 1 and \
-         N threads and writes BENCH_5.json.\n\n\
+         N threads — plus a tuned-profile row per family — and writes \
+         BENCH_8.json.\n\
+         Tuning: `tune` benchmarks candidate kernel parameters (k-panel \
+         size, task grain, inner-loop unroll, cached weight transpose) on \
+         the live pool for one bundle's hot-path shapes and persists the \
+         winner as a versioned JSON profile; train/eval/serve/bench-serve/\
+         bench/info load it via --tune-profile.  ANY legal profile is \
+         bit-exact by construction — tuning changes wall time, never \
+         bytes.\n\n\
          Library use: everything above is a thin client of \
          bdia::api::Session — see rust/README.md \"Library use\".\n\
          The native backend is pure Rust and needs no artifacts; pjrt needs \

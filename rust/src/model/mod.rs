@@ -238,6 +238,9 @@ pub struct ParamStore {
 impl ParamStore {
     /// Initialise from the manifest's init specs with a coordinator seed.
     pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        // a new parameter set may reuse freed allocations: invalidate any
+        // cached weight transposes keyed on old pointers
+        crate::kernels::workspace::bump_weight_generation();
         let mut rng = Rng::new(seed);
         let mut groups = BTreeMap::new();
         for (g, leaves) in &manifest.param_groups {

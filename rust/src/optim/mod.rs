@@ -75,6 +75,9 @@ impl Optimizer {
 
     /// One update: `params -= stepsize(mhat, vhat)` with grads in `grads`.
     pub fn step(&mut self, params: &mut ParamStore, grads: &ParamStore) -> Result<()> {
+        // params are about to change in place: stale cached weight
+        // transposes (matmul_nt_w) must stop matching
+        crate::kernels::workspace::bump_weight_generation();
         self.t += 1;
         let t = self.t as f32;
         let bc1 = 1.0 - self.beta1.powf(t);

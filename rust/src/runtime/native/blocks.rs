@@ -14,7 +14,7 @@
 
 use crate::kernels::{
     add, add_into, attn_bwd, attn_fwd, col_sum, linear, ln_bwd, ln_fwd,
-    map_gelu, matmul_nt, matmul_tn, scale_by_gelu_grad, workspace, AttnCache,
+    map_gelu, matmul_nt_w, matmul_tn, scale_by_gelu_grad, workspace, AttnCache,
     AttnGrads, AttnW, LnCache,
 };
 use crate::model::Family;
@@ -159,11 +159,11 @@ fn ffn_bwd(
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     let dw2 = matmul_tn(&cache.a, dy, rows, dr, d);
     let db2 = col_sum(dy, rows, d);
-    let mut du1 = matmul_nt(dy, w2, rows, d, dr);
+    let mut du1 = matmul_nt_w(dy, w2, rows, d, dr);
     scale_by_gelu_grad(&mut du1, &cache.u1);
     let dw1 = matmul_tn(x, &du1, rows, d, dr);
     let db1 = col_sum(&du1, rows, dr);
-    let dx = matmul_nt(&du1, w1, rows, dr, d);
+    let dx = matmul_nt_w(&du1, w1, rows, dr, d);
     workspace::give(du1);
     (dx, dw1, db1, dw2, db2)
 }
@@ -817,7 +817,7 @@ pub fn head_loss_vjp(
     }
     let dw = matmul_tn(&zc, &dlogits, rows, d, n_out);
     let db = col_sum(&dlogits, rows, n_out);
-    let dzc = matmul_nt(&dlogits, w.w, rows, n_out, d);
+    let dzc = matmul_nt_w(&dlogits, w.w, rows, n_out, d);
     workspace::give(dlogits);
     workspace::give(zc);
 

@@ -204,7 +204,9 @@ impl ServeStats {
              \"queue\": {{\"depth\": {queue_depth}, \"cap\": {}}}, \
              \"uptime_s\": {:.3}, \"requests_per_sec\": {:.3}, \
              \"examples_per_sec\": {:.3}, \"kernel_threads\": {}, \
-             \"workspace\": {{\"hits\": {}, \"misses\": {}}}, \
+             \"tune_profile\": \"{}\", \
+             \"workspace\": {{\"hits\": {}, \"misses\": {}, \
+             \"keyed_hits\": {}, \"keyed_builds\": {}}}, \
              \"latency_ms\": {}, \
              \"latency_reservoir\": {{\"samples\": {}, \"capacity\": {}, \
              \"saturated\": {}}}, \"exec_calls\": {{{}}}}}",
@@ -217,8 +219,11 @@ impl ServeStats {
             self.requests_per_sec(),
             self.examples_per_sec(),
             crate::kernels::pool::threads(),
+            crate::kernels::profile::active_id(),
             ws.hits,
             ws.misses,
+            ws.keyed_hits,
+            ws.keyed_builds,
             fmt_lat(lat),
             res.samples,
             res.capacity,
@@ -327,7 +332,10 @@ mod tests {
         assert!(parsed.get("requests_per_sec").unwrap().as_f64().unwrap() >= 0.0);
         assert!(parsed.get("examples_per_sec").unwrap().as_f64().unwrap() >= 0.0);
         assert!(parsed.get("kernel_threads").unwrap().as_usize().unwrap() >= 1);
+        // the active kernel profile id surfaces alongside the pool config
+        assert!(!parsed.get("tune_profile").unwrap().as_str().unwrap().is_empty());
         assert!(parsed.get("workspace").unwrap().get("hits").is_ok());
+        assert!(parsed.get("workspace").unwrap().get("keyed_hits").is_ok());
         assert_eq!(
             parsed
                 .get("exec_calls")

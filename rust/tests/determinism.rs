@@ -164,6 +164,39 @@ fn encdec_training_and_inference_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn tuned_profile_training_and_inference_bit_identical_across_thread_counts() {
+    use bdia::kernels::profile::{reset_active, set_active};
+    use bdia::kernels::{KernelProfile, OpParams};
+    // a deliberately non-default profile — every knob moved off its default
+    // value, nt transpose caching on.  The determinism contract says tuning
+    // may only change wall time, never bytes: the full training + inference
+    // signature must equal the default-profile single-thread baseline.
+    let tuned = KernelProfile {
+        id: "determinism-tuned".into(),
+        default_params: OpParams { kc: 48, grain_flop: 1 << 12, unroll: 8, nt_cache: true },
+        ..KernelProfile::default()
+    };
+    for (model, dataset) in [
+        ("smoke_vit", "synth_cifar10"),
+        ("smoke_gpt", "tiny_corpus"),
+        ("smoke_encdec", "synth_translation"),
+    ] {
+        reset_active();
+        let base = signature(model, dataset, 1);
+        for threads in [1usize, 2, 4, 7] {
+            set_active(tuned.clone(), None);
+            let sig = signature(model, dataset, threads);
+            reset_active();
+            assert!(
+                base == sig,
+                "{model}: tuned kernel profile changed bits at {threads} threads"
+            );
+        }
+    }
+    pool::set_threads(0);
+}
+
+#[test]
 fn larger_shapes_engage_the_pool_and_stay_bit_identical() {
     // the smoke bundles are small enough that some kernels stay serial;
     // vit_s10 (batch 64, 65 tokens, d 64) actually fans out.  One forward +

@@ -1,0 +1,271 @@
+//! Tuning-profile acceptance suite: ANY legal kernel profile is bit-exact
+//! by construction.
+//!
+//! The profile knobs (`kc`, `grain_flop`, `unroll`, `nt_cache`) can only
+//! regroup loops, move task-split boundaries, chunk independent output
+//! elements, or reuse a bitwise-identical cached transpose — never change
+//! a per-element reduction order.  This suite drives that claim over
+//! pseudo-random legal profiles × thread counts for every kernel entry
+//! point, and pins the persistence contract: `bdia tune` output survives
+//! save → load byte-identically, while corrupt or wrong-version files are
+//! rejected with clear errors and fall back to the default profile.
+
+use bdia::api::{Session, TuneOpts};
+use bdia::kernels::profile::{self, reset_active, set_active, OpKey};
+use bdia::kernels::{
+    attn_bwd, attn_fwd, linear, matmul, matmul_nt, matmul_nt_w, matmul_tn,
+    pool, workspace, AttnW, KernelProfile, OpKind, OpParams,
+};
+use std::sync::{Mutex, MutexGuard};
+
+/// Every test here mutates the process-global active profile; libtest runs
+/// tests concurrently, so they serialize on one lock.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Deterministic pseudo-random data (xorshift32), same bits every call.
+fn synth(n: usize, seed: u32) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9e37_79b9) | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 17;
+            s ^= s << 5;
+            (s as f64 / u32::MAX as f64) as f32 - 0.5
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One pass over every tunable kernel entry point, output as bits.  The
+/// shapes straddle k-panel and grain boundaries; the inputs carry
+/// 0·inf and -0.0 so IEEE faithfulness is stressed too.
+fn run_all(threads: usize) -> Vec<u32> {
+    pool::set_threads(threads);
+    // the nt weight below is reallocated per call: invalidate any keyed
+    // transpose from a previous run, as every in-tree replacement path does
+    workspace::bump_weight_generation();
+    let (m, k, n) = (23usize, 65usize, 33usize);
+    let mut a = synth(m * k, 1);
+    let mut b = synth(k * n, 2);
+    a[0] = f32::INFINITY;
+    a[1] = -0.0;
+    b[0] = 0.0;
+    let mut out = Vec::new();
+    out.extend(bits(&matmul(&a, &b, m, k, n)));
+    let bias = synth(n, 3);
+    out.extend(bits(&linear(&a, &b, &bias, m, k, n)));
+    // matmul_tn: a (m,k), b2 (m,n) -> (k,n), reduction over m
+    let b2 = synth(m * n, 4);
+    out.extend(bits(&matmul_tn(&a, &b2, m, k, n)));
+    // matmul_nt: a2 (m,n), w (k,n) -> (m,k), reduction over n
+    let a2 = synth(m * n, 5);
+    let w = synth(k * n, 6);
+    out.extend(bits(&matmul_nt(&a2, &w, m, n, k)));
+    out.extend(bits(&matmul_nt_w(&a2, &w, m, n, k)));
+    // attention fwd + bwd, parallel across (batch, head) pairs
+    let (ab, t, d, heads) = (3usize, 12usize, 16usize, 4usize);
+    let x = synth(ab * t * d, 7);
+    let wq = synth(d * d, 8);
+    let wk = synth(d * d, 9);
+    let wv = synth(d * d, 10);
+    let wo = synth(d * d, 11);
+    let bq = synth(d, 12);
+    let bk = synth(d, 13);
+    let bv = synth(d, 14);
+    let bo = synth(d, 15);
+    let aw = AttnW {
+        wq: &wq,
+        bq: &bq,
+        wk: &wk,
+        bk: &bk,
+        wv: &wv,
+        bv: &bv,
+        wo: &wo,
+        bo: &bo,
+    };
+    let (y, cache) = attn_fwd(&aw, &x, &x, ab, t, t, d, heads, true);
+    let dout = synth(ab * t * d, 16);
+    let (dx, dkv, grads) = attn_bwd(&aw, &x, &x, &cache, &dout, ab, t, t, d, heads);
+    cache.recycle();
+    out.extend(bits(&y));
+    out.extend(bits(&dx));
+    out.extend(bits(&dkv));
+    out.extend(bits(&grads.wq));
+    out.extend(bits(&grads.bo));
+    out
+}
+
+/// A pseudo-random legal profile: every knob drawn from its legal range.
+fn rnd_profile(seed: u32) -> KernelProfile {
+    let mut s = seed.wrapping_mul(0x6c07_8965).wrapping_add(1) | 1;
+    let mut next = move || {
+        s ^= s << 13;
+        s ^= s >> 17;
+        s ^= s << 5;
+        s as usize
+    };
+    const KCS: [usize; 10] = [1, 3, 16, 32, 48, 64, 100, 128, 256, 511];
+    const GRAINS: [usize; 7] = [1, 64, 1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 20];
+    const UNROLLS: [usize; 5] = [1, 2, 4, 8, 16];
+    KernelProfile {
+        id: format!("rnd-{seed}"),
+        default_params: OpParams {
+            kc: KCS[next() % KCS.len()],
+            grain_flop: GRAINS[next() % GRAINS.len()],
+            unroll: UNROLLS[next() % UNROLLS.len()],
+            nt_cache: next() % 2 == 0,
+        },
+        ..KernelProfile::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("bdia_profile_tuning_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn randomized_legal_profiles_are_bit_identical_across_ops_and_threads() {
+    let _g = guard();
+    reset_active();
+    let base = run_all(1);
+    assert!(!base.is_empty());
+    for seed in 0..20u32 {
+        let p = rnd_profile(seed);
+        p.validate().expect("generated profile must be legal");
+        for threads in [1usize, 2, 4, 7] {
+            set_active(p.clone(), None);
+            let got = run_all(threads);
+            reset_active();
+            assert!(
+                base == got,
+                "profile {} (kc={} grain_flop={} unroll={} nt_cache={}) \
+                 drifted at {threads} threads",
+                p.id,
+                p.default_params.kc,
+                p.default_params.grain_flop,
+                p.default_params.unroll,
+                p.default_params.nt_cache
+            );
+        }
+    }
+    pool::set_threads(0);
+}
+
+#[test]
+fn per_shape_entries_shadow_the_fallback_and_stay_bit_identical() {
+    let _g = guard();
+    reset_active();
+    pool::set_threads(2);
+    let (m, k, n) = (23usize, 65usize, 33usize);
+    let a = synth(m * k, 21);
+    let b = synth(k * n, 22);
+    let want = matmul(&a, &b, m, k, n);
+    // an entry keyed to exactly this shape at exactly this thread count
+    let mut p = KernelProfile {
+        id: "entries-test".into(),
+        ..KernelProfile::default()
+    };
+    p.entries.insert(
+        OpKey { op: OpKind::Matmul, m, k, n, threads: 2 },
+        OpParams { kc: 5, grain_flop: 256, unroll: 16, nt_cache: false },
+    );
+    p.validate().expect("legal profile");
+    set_active(p, None);
+    let got = matmul(&a, &b, m, k, n);
+    reset_active();
+    assert!(
+        bits(&want) == bits(&got),
+        "a per-shape entry changed matmul bits"
+    );
+    pool::set_threads(0);
+}
+
+#[test]
+fn session_tune_persists_and_reloads_byte_identically() {
+    let _g = guard();
+    reset_active();
+    let dir = tmp_dir("tune");
+    let path = dir.join("tuned.json");
+    let mut session = Session::builder()
+        .model_name("smoke_vit")
+        .dataset_auto()
+        .threads(2)
+        .build()
+        .expect("session");
+    let report =
+        session.tune(&TuneOpts { quick: true, out: Some(path.clone()) }).expect("tune");
+    assert!(report.shapes_tuned > 0, "tuning found no shapes");
+    assert_eq!(report.threads, 2);
+    assert_eq!(report.profile.entries.len(), report.shapes_tuned);
+    // the search must restore the ambient (default) profile afterwards
+    assert_eq!(profile::active_id(), "default");
+    // persisted as versioned JSON, loads back equal, re-saves identically
+    let text = std::fs::read_to_string(&path).expect("profile file");
+    assert!(text.contains("\"bdia_profile\": 1"), "unversioned: {text}");
+    let back = KernelProfile::load(&path).expect("load");
+    assert_eq!(back, report.profile);
+    let path2 = dir.join("tuned2.json");
+    back.save(&path2).expect("re-save");
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        std::fs::read(&path2).unwrap(),
+        "save -> load -> save is not byte-identical"
+    );
+    // a fresh session picks the persisted profile up via the builder hook
+    let s2 = Session::builder()
+        .model_name("smoke_vit")
+        .dataset_auto()
+        .tune_profile(&path)
+        .build()
+        .expect("session under tuned profile");
+    assert_eq!(profile::active_id(), back.id);
+    assert_eq!(profile::active_source().as_deref(), Some(path.as_path()));
+    drop(s2);
+    reset_active();
+    pool::set_threads(0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_or_wrong_version_profiles_are_rejected_and_fall_back() {
+    let _g = guard();
+    reset_active();
+    let dir = tmp_dir("reject");
+    // corrupt JSON: load fails with an error naming the file
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{ this is not json").unwrap();
+    let err = format!("{:#}", KernelProfile::load(&bad).unwrap_err());
+    assert!(err.contains("bad.json"), "error must name the file: {err}");
+    assert!(err.contains("not valid JSON"), "unhelpful error: {err}");
+    // wrong version: rejected with both versions in the message
+    let wrong = dir.join("wrong.json");
+    let doc = KernelProfile::default()
+        .to_json_string()
+        .replacen("\"bdia_profile\": 1", "\"bdia_profile\": 2", 1);
+    std::fs::write(&wrong, doc).unwrap();
+    let err = format!("{:#}", KernelProfile::load(&wrong).unwrap_err());
+    assert!(err.contains("version 2"), "unhelpful error: {err}");
+    // the session builder warns and falls back to the default profile
+    // instead of refusing to start
+    let s = Session::builder()
+        .model_name("smoke_vit")
+        .dataset_auto()
+        .tune_profile(&bad)
+        .build()
+        .expect("build must fall back, not fail");
+    assert_eq!(profile::active_id(), "default");
+    drop(s);
+    reset_active();
+    pool::set_threads(0);
+    std::fs::remove_dir_all(&dir).ok();
+}
