@@ -55,6 +55,17 @@ pub struct RequestEvent {
     pub ok: bool,
 }
 
+/// One token emitted by an autoregressive generation
+/// ([`super::Session::generate`] / the streaming `/generate` endpoint).
+#[derive(Clone, Copy, Debug)]
+pub struct TokenEvent {
+    /// 0-based index among the *generated* tokens (prompt excluded).
+    pub index: usize,
+    pub token: i32,
+    /// Wall time of the decode step that produced it, microseconds.
+    pub latency_us: u64,
+}
+
 /// Observer for training / evaluation / serving progress.  All methods
 /// default to no-ops, so sinks implement only what they care about.
 pub trait EventSink: Send + Sync {
@@ -62,6 +73,7 @@ pub trait EventSink: Send + Sync {
     fn on_eval(&self, _e: &EvalEvent) {}
     fn on_checkpoint(&self, _e: &CheckpointEvent) {}
     fn on_request(&self, _e: &RequestEvent) {}
+    fn on_token(&self, _e: &TokenEvent) {}
 }
 
 /// Discards everything (the default sink).
@@ -106,6 +118,7 @@ pub enum Event {
     Eval(EvalEvent),
     Checkpoint(CheckpointEvent),
     Request(RequestEvent),
+    Token(TokenEvent),
 }
 
 /// Records every event in order — for tests and programmatic consumers.
@@ -150,6 +163,10 @@ impl EventSink for Collector {
     fn on_request(&self, e: &RequestEvent) {
         self.push(Event::Request(*e));
     }
+
+    fn on_token(&self, e: &TokenEvent) {
+        self.push(Event::Token(*e));
+    }
 }
 
 #[cfg(test)]
@@ -162,11 +179,13 @@ mod tests {
         c.on_step(&StepEvent { step: 0, loss: 1.0, acc: 0.1, grad_norm: 0.5, ms: 1.0 });
         c.on_eval(&EvalEvent { step: 1, gamma: 0.25, loss: 0.9, acc: 0.2 });
         c.on_request(&RequestEvent { latency_us: 42, ok: true });
+        c.on_token(&TokenEvent { index: 0, token: 5, latency_us: 9 });
         let evs = c.take();
-        assert_eq!(evs.len(), 3);
+        assert_eq!(evs.len(), 4);
         assert!(matches!(evs[0], Event::Step(s) if s.step == 0));
         assert!(matches!(evs[1], Event::Eval(e) if e.gamma == 0.25));
         assert!(matches!(evs[2], Event::Request(r) if r.ok));
+        assert!(matches!(evs[3], Event::Token(t) if t.token == 5));
         assert!(c.events().is_empty());
     }
 

@@ -14,9 +14,10 @@
 //! and directly usable:
 //!
 //! ```text
-//! Session (api)  ── train/evaluate/infer/save/resume/serve/bench
+//! Session (api)  ── train/evaluate/infer/generate/save/resume/serve/bench
 //!   ├─ coordinator::Trainer / baseline::RevVitTrainer   (engines)
 //!   ├─ runtime::Runtime                                  (backends)
+//!   ├─ generate::GenSession (generate/generate_stream)   (decoding)
 //!   ├─ checkpoint                                        (persistence)
 //!   ├─ serve::Server                                     (deployment)
 //!   ├─ fleet::Router (serve_fleet/FleetHandle)           (sharded serving)
@@ -77,9 +78,11 @@ pub mod session;
 pub use error::{suggest, ApiError, ApiResult, CkptError};
 pub use events::{
     CheckpointEvent, Collector, EvalEvent, Event, EventSink, NullSink,
-    RequestEvent, StdoutSink, StepEvent,
+    RequestEvent, StdoutSink, StepEvent, TokenEvent,
 };
 pub use model_id::ModelId;
+// the generation types used by `Session::generate`/`generate_stream`
+pub use crate::generate::{GenOpts, GenReport, GenStop};
 // the inference payload type used by `Session::infer`/`infer_batch`
 pub use crate::serve::wire::Example;
 pub use session::{
@@ -104,7 +107,8 @@ pub fn repro(id: &str, opts: &ExpOpts) -> ApiResult<()> {
 
 /// Run the per-family performance suite (`bdia bench`): Session-reported
 /// hot-path timings at 1 and N threads — plus a tuned-profile row per
-/// family — written to `BENCH_8.json`.
+/// family and decode tokens/sec rows for GPT bundles — written to
+/// `BENCH_9.json`.
 ///
 /// Like [`repro`], failures surface as [`ApiError::Train`] with full
 /// context in the message.

@@ -7,7 +7,7 @@
 //! this type; embedders get exactly the same surface.
 
 use super::error::{ApiError, ApiResult};
-use super::events::{CheckpointEvent, EvalEvent, EventSink, NullSink};
+use super::events::{CheckpointEvent, EvalEvent, EventSink, NullSink, TokenEvent};
 use super::model_id::ModelId;
 use crate::baseline::RevVitTrainer;
 use crate::config::{RankFailurePolicy, TrainConfig, TrainMode};
@@ -498,6 +498,23 @@ impl SessionBuilder {
         self
     }
 
+    /// Fine-tune from this checkpoint (`init_from` config key):
+    /// mechanically identical to [`SessionBuilder::checkpoint`], but
+    /// carried in the config so every rank of a spawned world applies it.
+    pub fn init_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.init_from = Some(path.into());
+        self
+    }
+
+    /// Freeze the embedding group(s) during training (`freeze_embed`
+    /// config key): their gradients are zeroed, they are excluded from the
+    /// all-reduce payload, and the optimizer skips them — embeddings stay
+    /// bit-identical to the loaded checkpoint.
+    pub fn freeze_embed(mut self, freeze: bool) -> Self {
+        self.cfg.freeze_embed = freeze;
+        self
+    }
+
     /// Install a kernel tuning profile (written by `bdia tune` /
     /// [`Session::tune`]) at build time.  Purely a speed knob: any legal
     /// profile yields bit-identical results.  A corrupt or wrong-version
@@ -578,7 +595,16 @@ impl SessionBuilder {
             cfg.dataset = serve_bench::default_dataset(rt.manifest.family).into();
         }
         // engine construction validates the config/mode combination
+        let init_from = cfg.init_from.clone();
         let engine = if cfg.mode == TrainMode::RevVit {
+            if init_from.is_some() || cfg.freeze_embed {
+                return Err(ApiError::Config(
+                    "fine-tuning (init_from / freeze_embed) drives the \
+                     BDIA/vanilla trainer; the RevViT baseline has no \
+                     persistence"
+                        .into(),
+                ));
+            }
             if cfg.ranks > 1 {
                 return Err(ApiError::Config(
                     "distributed training drives the BDIA/vanilla trainer \
@@ -598,8 +624,10 @@ impl SessionBuilder {
 
         let mut session = Session {
             engine,
+            // the engine applied `init_from` itself (every rank of a
+            // spawned world does); reflect it in the session's provenance
+            resumed_from: init_from,
             sink: self.sink,
-            resumed_from: None,
             dist_rank: self.dist_rank,
             rendezvous: self.rendezvous,
         };
@@ -685,6 +713,17 @@ impl Session {
             (Some(p), step) => format!("checkpoint {}, step {step}", p.display()),
             (None, 0) => format!("untrained seed {}", self.config().seed),
             (None, step) => format!("trained in-session, step {step}"),
+        }
+    }
+
+    /// The γ-RNG base state `(state, box-muller spare)` driving this
+    /// session's gamma streams — restored from the checkpoint on a resume,
+    /// so `bdia info` / `bdia eval --ckpt` can surface what training would
+    /// continue from.  `None` for the RevViT baseline (no γ-RNG).
+    pub fn gamma_rng_state(&self) -> Option<(u64, Option<f32>)> {
+        match &self.engine {
+            Engine::Bdia(t) => Some(t.rng_gamma_state()),
+            Engine::RevVit(_) => None,
         }
     }
 
@@ -898,6 +937,54 @@ impl Session {
             );
         }
         Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // generation
+    // ------------------------------------------------------------------
+
+    /// Autoregressively generate tokens after `prompt` with this session's
+    /// **current parameters** (GPT-family models only).  Decoding is
+    /// incremental against a per-call KV-cache workspace and bit-identical
+    /// to re-forwarding the whole prefix at every step — at any thread
+    /// count and under any kernel tuning profile.  Each generated token is
+    /// reported to the session's [`EventSink`] via
+    /// [`EventSink::on_token`].
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        opts: &crate::generate::GenOpts,
+    ) -> ApiResult<crate::generate::GenReport> {
+        self.generate_stream(prompt, opts, |_| {})
+    }
+
+    /// [`Session::generate`] with a per-token callback — fires in decode
+    /// order, before the report is assembled, so callers can stream.
+    pub fn generate_stream(
+        &self,
+        prompt: &[i32],
+        opts: &crate::generate::GenOpts,
+        mut on_token: impl FnMut(&TokenEvent),
+    ) -> ApiResult<crate::generate::GenReport> {
+        let mut session =
+            crate::generate::GenSession::new(self.runtime(), prompt, opts.clone())
+                .map_err(ApiError::config)?;
+        let sink = Arc::clone(&self.sink);
+        crate::generate::run_session(
+            self.runtime(),
+            self.params(),
+            &mut session,
+            |index, token, ms| {
+                let e = TokenEvent {
+                    index,
+                    token,
+                    latency_us: (ms * 1e3) as u64,
+                };
+                sink.on_token(&e);
+                on_token(&e);
+            },
+        )
+        .map_err(ApiError::train)
     }
 
     // ------------------------------------------------------------------
@@ -1126,7 +1213,7 @@ impl Session {
 
     /// Time the three hot paths (training forward, full train step, fused
     /// quantized inference) at the current kernel-pool thread count.
-    /// `bdia bench` aggregates these rows into `BENCH_8.json`.
+    /// `bdia bench` aggregates these rows into `BENCH_9.json`.
     pub fn bench(
         &mut self,
         budget: Duration,

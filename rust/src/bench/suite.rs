@@ -1,4 +1,4 @@
-//! `bdia bench`: the per-family performance suite behind BENCH_8.json.
+//! `bdia bench`: the per-family performance suite behind BENCH_9.json.
 //!
 //! Times the three hot paths — training forward (`fwd`), a full training
 //! step (`step` = forward + online backward + optimizer), and fused
@@ -6,6 +6,12 @@
 //! at the configured thread count, on the native backend.  The contrast
 //! is the headline number for the deterministic parallel compute core:
 //! same bits, less wall time.
+//!
+//! Families with a `model_decode_step` executable (GPT) additionally get
+//! **decode** rows: autoregressive tokens/sec through
+//! [`Session::generate`] at 1 thread and at the parallel thread count,
+//! plus a tuned-profile row — the same 1-vs-N / default-vs-tuned
+//! contrasts as the training paths, but for the KV-cache decode loop.
 //!
 //! Each bundle also gets a **tuned** row: the parallel-thread measurement
 //! repeated under a tuned kernel profile (loaded from
@@ -26,7 +32,7 @@
 //! Every hot-path measurement goes through the [`Session`] facade
 //! ([`Session::bench`]), so the suite times exactly the path embedders and
 //! the CLI use.  The report prints as rows and lands in a JSON file
-//! (default `BENCH_8.json`) so successive PRs can track the trajectory.
+//! (default `BENCH_9.json`) so successive PRs can track the trajectory.
 
 use crate::api::{Session, SessionTimings, TuneOpts};
 use crate::config::{TrainConfig, TrainMode};
@@ -69,7 +75,7 @@ impl SuiteOpts {
                     "smoke_encdec".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_8.json"),
+                out: PathBuf::from("BENCH_9.json"),
                 quick,
                 budget: Duration::from_millis(250),
                 max_iters: 4,
@@ -83,7 +89,7 @@ impl SuiteOpts {
                     "encdec_mt".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_8.json"),
+                out: PathBuf::from("BENCH_9.json"),
                 quick,
                 budget: Duration::from_millis(1500),
                 max_iters: 10,
@@ -100,6 +106,17 @@ pub struct DistTimings {
     pub ranks: usize,
     /// Mean wall time of one *global* optimization step, ms.
     pub step_ms: f64,
+}
+
+/// One autoregressive-decode timing (decode block; GPT bundles only).
+#[derive(Clone, Debug)]
+pub struct DecodeTimings {
+    pub bundle: String,
+    pub threads: usize,
+    /// Kernel profile the row ran under (`"default"` or the tuned id).
+    pub profile: String,
+    /// Greedy decode throughput until the context window fills.
+    pub tokens_per_s: f64,
 }
 
 /// One analytic Table-1 peak-memory number (memory block).
@@ -120,6 +137,8 @@ pub struct SuiteReport {
     pub rows: Vec<SessionTimings>,
     /// Global-step time per (bundle, world size) — ranks 1 and 2.
     pub dist: Vec<DistTimings>,
+    /// Decode tokens/sec per (bundle, threads, profile) — GPT bundles only.
+    pub decode: Vec<DecodeTimings>,
     /// Analytic peak training memory per (bundle, mode).
     pub memory: Vec<MemoryRow>,
 }
@@ -129,6 +148,7 @@ impl SuiteReport {
         self.rows.iter().all(|r| {
             r.fwd_ms.is_finite() && r.step_ms.is_finite() && r.infer_ms.is_finite()
         }) && self.dist.iter().all(|d| d.step_ms.is_finite())
+            && self.decode.iter().all(|d| d.tokens_per_s.is_finite())
     }
 
     /// step-time speedup of the parallel run over the 1-thread run
@@ -175,6 +195,17 @@ impl SuiteReport {
                 )
             })
             .collect();
+        let decode: Vec<String> = self
+            .decode
+            .iter()
+            .map(|d| {
+                format!(
+                    "    {{\"bundle\": \"{}\", \"threads\": {}, \
+                     \"profile\": \"{}\", \"tokens_per_s\": {:.3}}}",
+                    d.bundle, d.threads, d.profile, d.tokens_per_s
+                )
+            })
+            .collect();
         let memory: Vec<String> = self
             .memory
             .iter()
@@ -187,15 +218,16 @@ impl SuiteReport {
             })
             .collect();
         format!(
-            "{{\n  \"bench\": \"BENCH_8\",\n  \"quick\": {},\n  \
+            "{{\n  \"bench\": \"BENCH_9\",\n  \"quick\": {},\n  \
              \"threads_baseline\": {},\n  \"threads_parallel\": {},\n  \
              \"results\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \
-             \"memory\": [\n{}\n  ]\n}}\n",
+             \"decode\": [\n{}\n  ],\n  \"memory\": [\n{}\n  ]\n}}\n",
             quick,
             self.threads_baseline,
             self.threads_parallel,
             rows.join(",\n"),
             dist.join(",\n"),
+            decode.join(",\n"),
             memory.join(",\n")
         )
     }
@@ -237,6 +269,19 @@ fn dist_step_ms(
     Ok(per_rank[0])
 }
 
+/// Greedy decode throughput of one [`Session::generate`] run until the
+/// bundle's context window fills — the decode-loop analogue of the
+/// hot-path rows.  Only called for bundles with `model_decode_step`.
+fn decode_tokens_per_s(session: &Session) -> Result<f64> {
+    let seq = session.runtime().manifest.dims.seq;
+    let gen_opts = crate::generate::GenOpts {
+        max_tokens: seq,
+        ..Default::default()
+    };
+    let report = session.generate(&[0], &gen_opts)?;
+    Ok(report.tokens_per_s())
+}
+
 /// Run the suite and write the JSON report.
 pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
     let par = if opts.threads == 0 { pool::auto_threads() } else { opts.threads };
@@ -251,6 +296,7 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
 
     let mut rows = Vec::new();
     let mut dist = Vec::new();
+    let mut decode = Vec::new();
     let mut memory = Vec::new();
     let dist_steps = if opts.quick { 2 } else { 3 };
     for bundle in &opts.families {
@@ -261,10 +307,19 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
             .dataset_auto()
             .build()
             .with_context(|| format!("loading bundle '{bundle}'"))?;
+        let has_decode = session.runtime().has_exec("model_decode_step");
         for &t in &counts {
             pool::set_threads(t);
             let timings = session.bench(opts.budget, opts.max_iters)?;
             rows.push(timings);
+            if has_decode {
+                decode.push(DecodeTimings {
+                    bundle: bundle.clone(),
+                    threads: t,
+                    profile: "default".into(),
+                    tokens_per_s: decode_tokens_per_s(&session)?,
+                });
+            }
         }
         // tuned row: the parallel measurement again under a tuned kernel
         // profile — persisted one if given, else a quick in-process search
@@ -285,12 +340,25 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
         let prev = profile::active();
         let prev_src = profile::active_source();
         profile::set_active(tuned, src);
+        let tuned_id = profile::active_id();
         let timings = session.bench(opts.budget, opts.max_iters);
+        // tuned decode row rides the same active-profile window; errors
+        // are deferred until after the ambient profile is restored
+        let tuned_decode =
+            if has_decode { Some(decode_tokens_per_s(&session)) } else { None };
         match prev {
             Some(p) => profile::set_active((*p).clone(), prev_src),
             None => profile::reset_active(),
         }
         rows.push(timings?);
+        if let Some(tps) = tuned_decode {
+            decode.push(DecodeTimings {
+                bundle: bundle.clone(),
+                threads: par,
+                profile: tuned_id,
+                tokens_per_s: tps?,
+            });
+        }
         // analytic Table-1 peak memory rides along with every report
         let m = &session.runtime().manifest;
         for (mode, peak_bytes) in
@@ -313,6 +381,7 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
         threads_parallel: *counts.last().unwrap(),
         rows,
         dist,
+        decode,
         memory,
     };
     for bundle in &opts.families {
@@ -351,6 +420,35 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
                  @2 ranks (identical bits)"
             );
         }
+        let dec_at = |t: usize| {
+            report
+                .decode
+                .iter()
+                .find(|d| {
+                    d.bundle == *bundle && d.threads == t && d.profile == "default"
+                })
+                .map(|d| d.tokens_per_s)
+        };
+        if let (Some(d1), Some(dp)) =
+            (dec_at(report.threads_baseline), dec_at(report.threads_parallel))
+        {
+            println!(
+                "{bundle}: decode {d1:.1} tok/s @1 thread, {dp:.1} tok/s \
+                 @{} threads (identical bits)",
+                report.threads_parallel
+            );
+        }
+        if let Some(t) = report
+            .decode
+            .iter()
+            .find(|d| d.bundle == *bundle && d.profile != "default")
+        {
+            println!(
+                "{bundle}: decode tuned profile '{}' {:.1} tok/s (identical \
+                 bits)",
+                t.profile, t.tokens_per_s
+            );
+        }
     }
     std::fs::write(&opts.out, report.to_json(opts.quick))
         .with_context(|| format!("writing {}", opts.out.display()))?;
@@ -372,7 +470,7 @@ mod tests {
             std::process::id()
         ));
         std::fs::create_dir_all(&dir).unwrap();
-        let out = dir.join("BENCH_8.json");
+        let out = dir.join("BENCH_9.json");
         let opts = SuiteOpts {
             families: vec!["smoke_gpt".into()],
             threads: 2,
@@ -405,6 +503,23 @@ mod tests {
             vec![1, 2]
         );
         assert!(report.dist.iter().all(|d| d.step_ms > 0.0));
+        // decode block (smoke_gpt has model_decode_step): one row per
+        // thread count plus the tuned row, all with positive throughput
+        assert_eq!(report.decode.len(), 3);
+        assert_eq!(
+            report
+                .decode
+                .iter()
+                .filter(|d| d.profile == "default")
+                .map(|d| d.threads)
+                .collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert!(report
+            .decode
+            .iter()
+            .any(|d| d.profile != "default" && d.threads == 2));
+        assert!(report.decode.iter().all(|d| d.tokens_per_s > 0.0));
         // memory block: one row per training mode
         assert_eq!(report.memory.len(), 4);
         assert!(report.memory.iter().all(|m| m.peak_bytes > 0));
@@ -412,7 +527,7 @@ mod tests {
         let parsed = crate::config::json::Json::parse(&text).unwrap();
         assert_eq!(
             parsed.get("bench").unwrap().as_str().unwrap(),
-            "BENCH_8"
+            "BENCH_9"
         );
         let results = parsed.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 3);
@@ -422,6 +537,11 @@ mod tests {
         let dist = parsed.get("dist").unwrap().as_arr().unwrap();
         assert_eq!(dist.len(), 2);
         assert_eq!(dist[1].get("ranks").unwrap().as_usize().unwrap(), 2);
+        let decode = parsed.get("decode").unwrap().as_arr().unwrap();
+        assert_eq!(decode.len(), 3);
+        assert!(decode
+            .iter()
+            .any(|d| d.get("profile").unwrap().as_str().unwrap() != "default"));
         let mem = parsed.get("memory").unwrap().as_arr().unwrap();
         assert_eq!(mem.len(), 4);
         assert!(mem[0].get("peak_bytes").unwrap().as_usize().unwrap() > 0);

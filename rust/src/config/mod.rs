@@ -149,6 +149,16 @@ pub struct TrainConfig {
     /// rebuild + resume bit-exactly.  Operational knob — excluded from
     /// the world-config digest.
     pub on_rank_failure: RankFailurePolicy,
+    /// Fine-tuning: load this checkpoint (params + optimizer + step +
+    /// gamma RNG) before training starts.  Mechanically identical to
+    /// `--resume`, but carried in the config so every rank of a spawned
+    /// world applies it; pair with a new `seed` for a fresh corpus split.
+    pub init_from: Option<PathBuf>,
+    /// Fine-tuning: freeze the embedding group(s) — their gradients are
+    /// zeroed before clipping, they are excluded from the all-reduce
+    /// payload, and the optimizer skips them (moments untouched), so
+    /// embeddings stay bit-identical to the loaded checkpoint.
+    pub freeze_embed: bool,
 }
 
 impl Default for TrainConfig {
@@ -181,6 +191,8 @@ impl Default for TrainConfig {
             grad_accum: 0,
             dist_timeout_s: 30.0,
             on_rank_failure: RankFailurePolicy::Abort,
+            init_from: None,
+            freeze_embed: false,
         }
     }
 }
@@ -236,6 +248,13 @@ impl TrainConfig {
             "on_rank_failure" => {
                 self.on_rank_failure = RankFailurePolicy::parse(v.as_str()?)?
             }
+            "init_from" => {
+                self.init_from = match v {
+                    Json::Null => None,
+                    _ => Some(PathBuf::from(v.as_str()?)),
+                }
+            }
+            "freeze_embed" => self.freeze_embed = v.as_bool()?,
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -367,6 +386,27 @@ mod tests {
         for p in [RankFailurePolicy::Abort, RankFailurePolicy::Restart] {
             assert_eq!(RankFailurePolicy::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn finetune_keys_parse() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.init_from, None);
+        assert!(!c.freeze_embed);
+        c.override_kv("init_from=ckpts/run1-latest.ckpt").unwrap();
+        assert_eq!(c.init_from, Some(PathBuf::from("ckpts/run1-latest.ckpt")));
+        c.override_kv("freeze_embed=true").unwrap();
+        assert!(c.freeze_embed);
+        c.override_kv("init_from=null").unwrap();
+        assert_eq!(c.init_from, None);
+        assert!(c.override_kv("freeze_embed=maybe").is_err());
+        let j = Json::parse(
+            r#"{"init_from": "a.ckpt", "freeze_embed": true}"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.init_from, Some(PathBuf::from("a.ckpt")));
+        assert!(c.freeze_embed);
     }
 
     #[test]

@@ -39,6 +39,10 @@ impl ForwardState {
     }
 }
 
+/// Parameter groups pinned by `freeze_embed` (names that exist vary by
+/// family; missing ones are no-ops everywhere they are consulted).
+const FROZEN_EMBED: &[&str] = &["embed", "enc_embed"];
+
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepStats {
     pub loss: f32,
@@ -93,9 +97,12 @@ impl Trainer {
         let family = rt.manifest.family;
         let params = ParamStore::init(&rt.manifest, cfg.seed);
         let grads = params.zeros_like();
-        let opt = Optimizer::new(&cfg, &params);
+        let mut opt = Optimizer::new(&cfg, &params);
+        if cfg.freeze_embed {
+            opt.set_frozen(FROZEN_EMBED.iter().map(|s| s.to_string()).collect());
+        }
         let rng_gamma = Rng::new(cfg.seed ^ 0xbd1a_bd1a);
-        Ok(Trainer {
+        let mut trainer = Trainer {
             rt,
             params,
             grads,
@@ -107,7 +114,17 @@ impl Trainer {
             dist: None,
             fold_buf: Vec::new(),
             contrib_buf: Vec::new(),
-        })
+        };
+        // fine-tuning: load the full checkpoint (params + optimizer + step
+        // + gamma RNG) exactly like --resume would.  Carried in the config
+        // so every rank of a spawned world applies it before attach (rank
+        // 0's broadcast then re-confirms the same bytes).
+        if let Some(path) = trainer.cfg.init_from.clone() {
+            trainer.load_checkpoint(&path).with_context(|| {
+                format!("init_from checkpoint {}", path.display())
+            })?;
+        }
+        Ok(trainer)
     }
 
     pub fn n_params(&self) -> usize {
@@ -168,6 +185,52 @@ impl Trainer {
             self.opt.restore(o.t, o.m, o.v)?;
         }
         Ok(())
+    }
+
+    /// The γ-RNG base state `(state, box-muller spare)` — checkpoint
+    /// provenance for `bdia info` / `bdia eval --ckpt`.
+    pub fn rng_gamma_state(&self) -> (u64, Option<f32>) {
+        self.rng_gamma.state()
+    }
+
+    /// Groups excluded from the optimizer update and the all-reduce
+    /// payload under `freeze_embed` (empty otherwise).
+    fn frozen_groups(&self) -> &'static [&'static str] {
+        if self.cfg.freeze_embed {
+            FROZEN_EMBED
+        } else {
+            &[]
+        }
+    }
+
+    /// Zero the gradients of frozen groups in place, so the clip norm —
+    /// and therefore the update applied to every trainable weight — is a
+    /// pure function of trainable gradients, identical on every rank and
+    /// at every world size.
+    fn zero_frozen_grads(&mut self) {
+        for g in self.frozen_groups() {
+            if let Some(insts) = self.grads.groups.get_mut(*g) {
+                for inst in insts {
+                    for t in inst {
+                        t.data_mut().fill(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Floats in the distributed gradient payload (frozen groups ride
+    /// neither the reduce nor the broadcast).
+    fn payload_len(&self) -> usize {
+        let skip = self.frozen_groups();
+        self.params
+            .groups
+            .iter()
+            .filter(|(k, _)| !skip.contains(&k.as_str()))
+            .map(|(_, insts)| {
+                insts.iter().flatten().map(|t| t.len()).sum::<usize>()
+            })
+            .sum()
     }
 
     fn effective_gamma(&self) -> f32 {
@@ -509,7 +572,7 @@ impl Trainer {
             return self.train_step(&batch);
         }
         let rounds = a / world;
-        let n = self.params.n_params();
+        let n = self.payload_len();
         // rank 0 folds micro contributions serially in global micro order;
         // slots n and n+1 carry (Σ loss, Σ ncorrect) through the same pipe
         let mut fold = std::mem::take(&mut self.fold_buf);
@@ -528,7 +591,11 @@ impl Trainer {
             stored = stored.max(fs.stored_bytes());
             self.backward(&batch, fs)?;
             contrib.clear();
-            dist::flatten_into(&self.grads, &mut contrib);
+            dist::flatten_into_except(
+                &self.grads,
+                self.frozen_groups(),
+                &mut contrib,
+            );
             contrib.push(loss_m);
             contrib.push(ncorrect_m);
             self.reduce_round(&mut fold, &contrib)?;
@@ -544,7 +611,11 @@ impl Trainer {
         self.bcast(&mut fold)?;
         let loss = fold[n];
         let acc = fold[n + 1] / n_pred as f32;
-        dist::unflatten_from(&mut self.grads, &fold[..n])?;
+        dist::unflatten_from_except(
+            &mut self.grads,
+            self.frozen_groups(),
+            &fold[..n],
+        )?;
         self.fold_buf = fold;
         self.contrib_buf = contrib;
         self.finish_step(loss, acc, stored)
@@ -573,6 +644,10 @@ impl Trainer {
     /// Shared step tail: clip/normalize gradients, guard divergence, apply
     /// the optimizer, advance the step counter.
     fn finish_step(&mut self, loss: f32, acc: f32, stored: usize) -> Result<StepStats> {
+        // frozen groups contribute exactly nothing to the clip norm (their
+        // local grads may hold a stale micro contribution after the
+        // payload-excluded all-reduce)
+        self.zero_frozen_grads();
         let grad_norm = match self.cfg.grad_clip {
             Some(c) => clip_global_norm(&mut self.grads, c),
             None => self.grads.global_norm(),

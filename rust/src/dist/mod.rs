@@ -94,7 +94,17 @@ impl DistRole {
 /// (group name order, then instance, then leaf — identical on every rank
 /// because it mirrors the shared manifest).
 pub fn flatten_into(store: &ParamStore, out: &mut Vec<f32>) {
-    for insts in store.groups.values() {
+    flatten_into_except(store, &[], out)
+}
+
+/// [`flatten_into`] minus the groups named in `skip` — the all-reduce
+/// payload for a run with frozen parameter groups (`freeze_embed`), whose
+/// gradients are pinned to zero locally and need not travel.
+pub fn flatten_into_except(store: &ParamStore, skip: &[&str], out: &mut Vec<f32>) {
+    for (name, insts) in &store.groups {
+        if skip.contains(&name.as_str()) {
+            continue;
+        }
         for inst in insts {
             for t in inst {
                 out.extend_from_slice(t.data());
@@ -106,8 +116,21 @@ pub fn flatten_into(store: &ParamStore, out: &mut Vec<f32>) {
 /// Overwrite `store`'s leaves from a flat buffer produced by
 /// [`flatten_into`] on a structurally identical store.
 pub fn unflatten_from(store: &mut ParamStore, data: &[f32]) -> Result<()> {
+    unflatten_from_except(store, &[], data)
+}
+
+/// [`unflatten_from`] for a buffer produced by [`flatten_into_except`]
+/// with the same `skip` list: skipped groups are left untouched.
+pub fn unflatten_from_except(
+    store: &mut ParamStore,
+    skip: &[&str],
+    data: &[f32],
+) -> Result<()> {
     let mut pos = 0usize;
-    for insts in store.groups.values_mut() {
+    for (name, insts) in store.groups.iter_mut() {
+        if skip.contains(&name.as_str()) {
+            continue;
+        }
         for inst in insts {
             for t in inst {
                 let n = t.len();
@@ -159,5 +182,47 @@ mod tests {
         );
         // wrong-length buffers are rejected
         assert!(unflatten_from(&mut other, &flat[..flat.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn flatten_except_skips_group_and_roundtrips() {
+        let rt = Runtime::load_with(
+            std::path::Path::new("artifacts"),
+            "smoke_gpt",
+            crate::runtime::BackendKind::Native,
+        )
+        .unwrap();
+        let ps = ParamStore::init(&rt.manifest, 3);
+        let embed_n: usize = ps.groups["embed"]
+            .iter()
+            .flatten()
+            .map(|t| t.len())
+            .sum();
+        assert!(embed_n > 0);
+        let mut flat = Vec::new();
+        flatten_into_except(&ps, &["embed"], &mut flat);
+        assert_eq!(flat.len(), ps.n_params() - embed_n);
+
+        // skipped group is untouched by the unflatten; the rest lands
+        let mut other = ps.zeros_like();
+        other.groups.get_mut("embed").unwrap()[0]
+            .iter_mut()
+            .for_each(|t| t.data_mut().fill(7.0));
+        unflatten_from_except(&mut other, &["embed"], &flat).unwrap();
+        assert!(other.groups["embed"][0]
+            .iter()
+            .all(|t| t.data().iter().all(|x| *x == 7.0)));
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        flatten_into_except(&ps, &["embed"], &mut a);
+        flatten_into_except(&other, &["embed"], &mut b);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // a full-store buffer no longer matches the except layout
+        let mut full = Vec::new();
+        flatten_into(&ps, &mut full);
+        assert!(unflatten_from_except(&mut other, &["embed"], &full).is_err());
     }
 }

@@ -634,6 +634,19 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<FleetShared>) {
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/infer") => handle_infer(stream, shared, &req.body),
+        ("POST", "/generate") => {
+            // decode batching is per-position state the router does not
+            // shard yet; answer with a clear contract instead of a
+            // connection-level failure
+            let _ = http::write_response(
+                stream,
+                501,
+                "Not Implemented",
+                "application/json",
+                b"{\"error\": \"generation is single-process in this PR; \
+                   use `bdia serve` without `--replicas`\"}\n",
+            );
+        }
         ("GET", "/healthz") => {
             let (live, evicted) = shared.registry.counts();
             let body = format!(

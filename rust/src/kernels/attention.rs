@@ -268,6 +268,136 @@ pub fn attn_fwd(
     (out, AttnCache { q, k, v, o, att })
 }
 
+/// Copy one head's cached rows (layout `(b, t_max, d)`) plus the freshly
+/// projected row `pos` into a contiguous `(pos+1, dh)` buffer.
+#[allow(clippy::too_many_arguments)]
+fn gather_cache_head(
+    cache: &[f32],
+    new_row: &[f32],
+    bi: usize,
+    hi: usize,
+    pos: usize,
+    t_max: usize,
+    d: usize,
+    dh: usize,
+    out: &mut [f32],
+) {
+    for t in 0..pos {
+        let base = (bi * t_max + t) * d + hi * dh;
+        out[t * dh..(t + 1) * dh].copy_from_slice(&cache[base..base + dh]);
+    }
+    let base = bi * d + hi * dh;
+    out[pos * dh..(pos + 1) * dh].copy_from_slice(&new_row[base..base + dh]);
+}
+
+/// Single-position decode attention against per-session K/V caches.
+///
+/// `x` is the `(b, d)` ln1-normalised row at position `pos` (one lane per
+/// batch slot); `kcache`/`vcache` are `(b, t_max, d)` buffers whose rows
+/// `0..pos` hold the post-projection keys/values of the prefix.  Projects
+/// q/k/v for the new row, attends over the `pos+1` keys (no mask needed:
+/// every key is at or before the query), and returns
+/// `(out (b,d), knew (b,d), vnew (b,d))` — the caller appends knew/vnew to
+/// the caches.
+///
+/// Bit contract: the output rows are bit-identical to row `pos` of
+/// [`attn_fwd`] with `causal = true` over the full prefix, at every thread
+/// count and kernel profile.  Three facts compose into that guarantee:
+/// (1) `linear` reduces each output element over `k` in a fixed ascending
+/// order regardless of row count, so a 1-row projection equals the same
+/// row of the full projection; (2) the full forward's masked scores sit at
+/// `NEG_INF` *after* the unmasked ones (`jj > i`), contribute
+/// `exp(NEG_INF - m) = 0.0` exactly, and adding `±0.0` to the softmax
+/// denominator / context accumulator (which starts at `+0.0` and can never
+/// become `-0.0`: `a + b == -0.0` only when both operands are `-0.0`) is a
+/// bit-exact no-op; (3) each (batch, head) pair runs the identical serial
+/// instruction stream whatever the task partition.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_decode(
+    w: &AttnW,
+    x: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    b: usize,
+    pos: usize,
+    t_max: usize,
+    d: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(d % heads, 0);
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let tk = pos + 1;
+
+    let q = linear(x, w.wq, w.bq, b, d, d);
+    let knew = linear(x, w.wk, w.bk, b, d, d);
+    let vnew = linear(x, w.wv, w.bv, b, d, d);
+
+    let bh = b * heads;
+    let mut att = workspace::take(bh * tk);
+    let mut oh_all = workspace::take(bh * dh);
+
+    let (parts, unroll) = head_params(b, heads, 1, tk, dh);
+    {
+        let atts = pool::split_rows_mut(&mut att, tk, parts);
+        let ohs = pool::split_rows_mut(&mut oh_all, dh, parts);
+        let (q, knew, vnew) = (&q, &knew, &vnew);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = atts
+            .into_iter()
+            .zip(ohs)
+            .map(|(mut ca, mut co)| {
+                Box::new(move || {
+                    let mut qh = workspace::take(dh);
+                    let mut kh = workspace::take(tk * dh);
+                    let mut vh = workspace::take(tk * dh);
+                    let n_pairs = ca.rows.len() / tk;
+                    for li in 0..n_pairs {
+                        let bhi = ca.row0 + li;
+                        let (bi, hi) = (bhi / heads, bhi % heads);
+                        gather_head(q, bi, hi, 1, d, dh, &mut qh);
+                        gather_cache_head(
+                            kcache, knew, bi, hi, pos, t_max, d, dh, &mut kh,
+                        );
+                        gather_cache_head(
+                            vcache, vnew, bi, hi, pos, t_max, d, dh, &mut vh,
+                        );
+                        attn_fwd_head(
+                            &qh,
+                            &kh,
+                            &vh,
+                            &mut ca.rows[li * tk..(li + 1) * tk],
+                            &mut co.rows[li * dh..(li + 1) * dh],
+                            1,
+                            tk,
+                            dh,
+                            scale,
+                            false,
+                            unroll,
+                        );
+                    }
+                    workspace::give(qh);
+                    workspace::give(kh);
+                    workspace::give(vh);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_tasks(tasks);
+    }
+    workspace::give(att);
+
+    let mut o = workspace::take(b * d);
+    for bhi in 0..bh {
+        let (bi, hi) = (bhi / heads, bhi % heads);
+        scatter_head_add(&mut o, &oh_all[bhi * dh..(bhi + 1) * dh], bi, hi, 1, d, dh);
+    }
+    workspace::give(oh_all);
+
+    let out = linear(&o, w.wo, w.bo, b, d, d);
+    workspace::give(o);
+    workspace::give(q);
+    (out, knew, vnew)
+}
+
 /// One (batch, head) pair of the backward: softmax jacobian and the
 /// dq/dk/dv head gradients, written into this pair's disjoint rows.
 #[allow(clippy::too_many_arguments)]
@@ -568,6 +698,64 @@ mod tests {
                 "d/dx[{idx}]: fd {fd} vs analytic {an}"
             );
         }
+    }
+
+    #[test]
+    fn decode_attention_matches_full_causal_rows_bitwise() {
+        let mut rng = Rng::new(11);
+        let (b, t, d, heads) = (3usize, 12usize, 16usize, 4usize);
+        let mk = |rng: &mut Rng| randv(rng, d * d, 0.2);
+        let (wq, wk, wv, wo) =
+            (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let (bq, bk, bv, bo) = (
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+            randv(&mut rng, d, 0.1),
+        );
+        let w = AttnW {
+            wq: &wq,
+            bq: &bq,
+            wk: &wk,
+            bk: &bk,
+            wv: &wv,
+            bv: &bv,
+            wo: &wo,
+            bo: &bo,
+        };
+        let x = randv(&mut rng, b * t * d, 1.0);
+        let (y_full, cache) = attn_fwd(&w, &x, &x, b, t, t, d, heads, true);
+        cache.recycle();
+        for threads in [1usize, 2, 4, 7] {
+            set_threads(threads);
+            let mut kc = vec![0.0f32; b * t * d];
+            let mut vc = vec![0.0f32; b * t * d];
+            for pos in 0..t {
+                let mut row = vec![0.0f32; b * d];
+                for bi in 0..b {
+                    let src = (bi * t + pos) * d;
+                    row[bi * d..(bi + 1) * d].copy_from_slice(&x[src..src + d]);
+                }
+                let (out, knew, vnew) =
+                    attn_decode(&w, &row, &kc, &vc, b, pos, t, d, heads);
+                for bi in 0..b {
+                    let dst = (bi * t + pos) * d;
+                    kc[dst..dst + d].copy_from_slice(&knew[bi * d..(bi + 1) * d]);
+                    vc[dst..dst + d].copy_from_slice(&vnew[bi * d..(bi + 1) * d]);
+                    let want: Vec<u32> =
+                        y_full[dst..dst + d].iter().map(|v| v.to_bits()).collect();
+                    let got: Vec<u32> = out[bi * d..(bi + 1) * d]
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    assert_eq!(
+                        want, got,
+                        "decode row {pos} lane {bi} at {threads} threads"
+                    );
+                }
+            }
+        }
+        set_threads(0);
     }
 
     #[test]

@@ -60,7 +60,7 @@ pub mod profile;
 pub mod tune;
 pub mod workspace;
 
-pub use attention::{attn_bwd, attn_fwd, AttnCache, AttnGrads, AttnW, NEG_INF};
+pub use attention::{attn_bwd, attn_decode, attn_fwd, AttnCache, AttnGrads, AttnW, NEG_INF};
 pub use elementwise::{
     add, add_into, axpy, col_sum, gelu, gelu_grad, map_gelu,
     scale_by_gelu_grad,

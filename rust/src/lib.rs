@@ -24,8 +24,13 @@
 //! - [`baseline`]: vanilla + RevViT comparators
 //! - [`checkpoint`]: versioned, checksummed binary persistence of trained
 //!   state (params + optimizer + step), bit-exact round trips
+//! - [`generate`]: autoregressive decoding — per-session KV-cache
+//!   workspace, deterministic greedy/temperature/top-k sampling, and a
+//!   lane-packed `decode_tick` whose incremental logits are bit-identical
+//!   to a full re-forward of the prefix at any thread count or profile
 //! - [`serve`]: concurrent inference serving over `std::net` — dynamic
-//!   micro-batching, worker pool, `/healthz` + `/stats`, load generator
+//!   micro-batching, worker pool, streaming `/generate`, `/healthz` +
+//!   `/stats`, load generator
 //! - [`dist`]: deterministic data-parallel training over pure-std TCP —
 //!   rendezvous handshake, rank-ordered collectives (bit-identical summed
 //!   gradients at every world size), in-process multi-rank harness and
@@ -49,6 +54,7 @@ pub mod metrics;
 pub mod experiments;
 pub mod bench;
 pub mod checkpoint;
+pub mod generate;
 pub mod serve;
 pub mod dist;
 pub mod fleet;

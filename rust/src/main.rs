@@ -3,9 +3,13 @@
 //! ```text
 //! bdia train  --config configs/vit_s10_bdia.json [--backend native|pjrt]
 //!             [--threads N] [--save-every K] [--ckpt-dir D]
-//!             [--resume ckpt] [--ranks N [--rank k --rendezvous host:port]]
+//!             [--resume ckpt] [--init-from ckpt [--freeze-embed]]
+//!             [--ranks N [--rank k --rendezvous host:port]]
 //!             [key=value ...]
 //! bdia eval   --model vit_s10 --gamma 0.0 [--ckpt path] [key=value ...]
+//! bdia generate --model gpt_tiny [--ckpt path] [--prompt 1,2,3]
+//!             [--max-tokens N] [--temperature T] [--top-k K] [--seed S]
+//!             [--eos E] [key=value ...]
 //! bdia serve  --model vit_s10 --ckpt path [--port P] [--workers N]
 //!             [--threads N] [--batch-window-us U] [--queue-cap Q]
 //!             [--replicas N [--rendezvous host:port]]
@@ -14,7 +18,7 @@
 //!             [--workers N] [--addr host:port] [--ckpt path]
 //!             [--replicas N]
 //! bdia bench  [--families vit_s10,gpt_tiny,encdec_mt] [--threads N]
-//!             [--quick] [--out BENCH_8.json] [--tune-profile p.json]
+//!             [--quick] [--out BENCH_9.json] [--tune-profile p.json]
 //! bdia tune   --model vit_s10 [--threads N] [--quick]
 //!             [--out profile.json] [key=value ...]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
@@ -80,6 +84,8 @@ const TRAIN_FLAGS: &[Flag] = &[
     v("save-every"),
     v("ckpt-dir"),
     v("resume"),
+    v("init-from"),
+    b("freeze-embed"),
     v("name"),
     v("ranks"),
     v("rank"),
@@ -151,7 +157,23 @@ const INFO_FLAGS: &[Flag] = &[
     v("artifacts"),
     v("backend"),
     v("threads"),
+    v("ckpt"),
     v("tune-profile"),
+];
+const GENERATE_FLAGS: &[Flag] = &[
+    v("config"),
+    v("model"),
+    v("backend"),
+    v("artifacts"),
+    v("threads"),
+    v("ckpt"),
+    v("tune-profile"),
+    v("prompt"),
+    v("max-tokens"),
+    v("temperature"),
+    v("top-k"),
+    v("seed"),
+    v("eos"),
 ];
 
 struct Parsed {
@@ -287,6 +309,12 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&parsed("train", args, TRAIN_FLAGS, Extras::Overrides)?),
         "eval" => cmd_eval(&parsed("eval", args, EVAL_FLAGS, Extras::Overrides)?),
+        "generate" => cmd_generate(&parsed(
+            "generate",
+            args,
+            GENERATE_FLAGS,
+            Extras::Overrides,
+        )?),
         "serve" => cmd_serve(&parsed("serve", args, SERVE_FLAGS, Extras::None)?),
         "bench-serve" => cmd_bench_serve(&parsed(
             "bench-serve",
@@ -310,6 +338,7 @@ fn run() -> Result<()> {
             let known = [
                 "train",
                 "eval",
+                "generate",
                 "serve",
                 "bench-serve",
                 "bench",
@@ -399,7 +428,27 @@ fn cmd_train(p: &Parsed) -> Result<()> {
     if let Some(pol) = p.flags.get("on-rank-failure") {
         b = b.on_rank_failure(RankFailurePolicy::parse(pol)?);
     }
+    if let Some(path) = p.flags.get("init-from") {
+        b = b.init_from(path);
+    }
+    if p.flags.contains_key("freeze-embed") {
+        b = b.freeze_embed(true);
+    }
     let mut session = b.build()?;
+    if my_rank == 0 {
+        if let Some(path) = session.config().init_from.clone() {
+            println!(
+                "fine-tune: initialized from {} ({}{})",
+                path.display(),
+                provenance_line(&session),
+                if session.config().freeze_embed {
+                    "; embedding frozen"
+                } else {
+                    ""
+                }
+            );
+        }
+    }
     if let Some(path) = p.flags.get("resume") {
         // in a multi-rank world only rank 0 needs the file: its restored
         // state is broadcast to every worker when the world attaches
@@ -523,15 +572,43 @@ fn cmd_train(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(p: &Parsed) -> Result<()> {
-    if !p.flags.contains_key("ckpt") {
+/// "step N, gamma-rng 0x…" — the checkpoint provenance a resumed trainer
+/// would continue from (the state is decoded on every load; print it so
+/// fine-tune users can see it).
+fn provenance_line(session: &Session) -> String {
+    match session.gamma_rng_state() {
+        Some((state, spare)) => format!(
+            "step {}, gamma-rng 0x{state:016x}{}",
+            session.step(),
+            spare.map_or(String::new(), |s| format!(" (spare {s})"))
+        ),
+        None => format!("step {}", session.step()),
+    }
+}
+
+/// Warn when a subcommand is about to score freshly-seeded weights.
+/// Checked *after* build so any loading path — `--ckpt`, an `init_from`
+/// config key, or a config file — suppresses it.
+fn warn_if_untrained(session: &Session, verb: &str) {
+    if session.resumed_from().is_none() && session.step() == 0 {
         eprintln!(
-            "warning: no --ckpt given — scoring FRESHLY-SEEDED (untrained) \
-             parameters.\nwarning: pass --ckpt <file> to evaluate weights \
+            "warning: no --ckpt given — {verb} FRESHLY-SEEDED (untrained) \
+             parameters.\nwarning: pass --ckpt <file> to use weights \
              produced by `bdia train save_every=K`."
         );
     }
+}
+
+fn cmd_eval(p: &Parsed) -> Result<()> {
     let session = builder_from(p)?.build()?;
+    warn_if_untrained(&session, "scoring");
+    if let Some(path) = session.resumed_from() {
+        println!(
+            "checkpoint: {} ({})",
+            path.display(),
+            provenance_line(&session)
+        );
+    }
     let report = session.evaluate(&EvalOpts {
         gamma: flag_val::<f32>(&p.flags, "gamma")?.unwrap_or(0.0),
         batches: flag_val::<usize>(&p.flags, "batches")?,
@@ -543,6 +620,51 @@ fn cmd_eval(p: &Parsed) -> Result<()> {
         report.loss,
         report.acc,
         report.provenance
+    );
+    Ok(())
+}
+
+/// `bdia generate`: autoregressive decoding on a GPT-family bundle —
+/// tokens print as they land (same incremental KV-cache path `serve`'s
+/// `/generate` endpoint batches).
+fn cmd_generate(p: &Parsed) -> Result<()> {
+    use std::io::Write;
+    let session = builder_from(p)?.build()?;
+    warn_if_untrained(&session, "generating with");
+    let prompt: Vec<i32> = match p.flags.get("prompt") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<i32>()
+                    .with_context(|| format!("--prompt token '{}'", x.trim()))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![0],
+    };
+    let opts = bdia::api::GenOpts {
+        max_tokens: flag_val::<usize>(&p.flags, "max-tokens")?.unwrap_or(32),
+        temperature: flag_val::<f32>(&p.flags, "temperature")?.unwrap_or(0.0),
+        top_k: flag_val::<usize>(&p.flags, "top-k")?.unwrap_or(0),
+        seed: flag_val::<u64>(&p.flags, "seed")?.unwrap_or(0),
+        eos: flag_val::<i32>(&p.flags, "eos")?,
+        ..bdia::api::GenOpts::default()
+    };
+    print!("{} |", prompt.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" "));
+    let _ = std::io::stdout().flush();
+    let report = session.generate_stream(&prompt, &opts, |e| {
+        print!(" {}", e.token);
+        let _ = std::io::stdout().flush();
+    })?;
+    println!();
+    println!(
+        "generated {} token(s) in {:.1} ms prefill + {:.1} ms decode \
+         ({:.1} tok/s, stop: {})",
+        report.tokens.len(),
+        report.prefill_ms,
+        report.token_ms.iter().sum::<f64>(),
+        report.tokens_per_s(),
+        report.stop.name()
     );
     Ok(())
 }
@@ -577,7 +699,10 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         opts.workers,
         opts.batch_window
     );
-    println!("endpoints: POST /infer  GET /healthz  GET /stats  POST /shutdown");
+    println!(
+        "endpoints: POST /infer  POST /generate (GPT, chunked streaming)  \
+         GET /healthz  GET /stats  POST /shutdown"
+    );
     // the server owns its own runtime + a param clone; free the session's
     // training state (grads, optimizer moments) for the serve lifetime
     drop(session);
@@ -890,6 +1015,13 @@ fn cmd_info(p: &Parsed) -> Result<()> {
         "bundle {} (family {}, backend {})",
         info.name, info.family, info.backend
     );
+    // weight provenance incl. the γ-RNG base a resumed trainer would
+    // continue from (pass --ckpt to inspect a checkpoint)
+    println!(
+        "  weights: {}; {}",
+        session.provenance(),
+        provenance_line(&session)
+    );
     println!(
         "  kernels: threads={} (auto={}, workers spawned={}), workspace \
          hits={} misses={} keyed_hits={} keyed_builds={}",
@@ -931,10 +1063,14 @@ fn print_help() {
         "bdia — exact bit-level reversible transformer training (BDIA)\n\n\
          USAGE:\n  bdia train --config configs/<f>.json \
          [--backend native|pjrt] [--threads N] [--save-every K] \
-         [--ckpt-dir D] [--resume <ckpt>] [--ranks N [--rank k \
+         [--ckpt-dir D] [--resume <ckpt>] [--init-from <ckpt> \
+         [--freeze-embed]] [--ranks N [--rank k \
          --rendezvous host:port] [--dist-timeout-s S] \
          [--on-rank-failure abort|restart]] [key=value ...]\n  \
          bdia eval  --model <bundle> --gamma <g> [--ckpt <file>]\n  \
+         bdia generate --model <bundle> [--ckpt <file>] [--prompt 1,2,3] \
+         [--max-tokens N] [--temperature T] [--top-k K] [--seed S] \
+         [--eos E]\n  \
          bdia serve --model <bundle> --ckpt <file> [--port P] [--workers N] \
          [--threads N] [--batch-window-us U] [--queue-cap Q] \
          [--replicas N [--rendezvous host:port] [--fleet-timeout-s S]]\n  \
@@ -944,7 +1080,7 @@ fn print_help() {
          [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
          [--replicas N] [--no-verify]\n  \
          bdia bench [--families a,b,c] [--threads N] [--quick] \
-         [--out BENCH_8.json] [--tune-profile p.json]\n  \
+         [--out BENCH_9.json] [--tune-profile p.json]\n  \
          bdia tune  --model <bundle> [--threads N] [--quick] \
          [--out profile.json] [key=value ...]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
@@ -958,7 +1094,8 @@ fn print_help() {
          mode (bdia|bdia_float|vanilla|revvit), gamma_mag, dataset, steps, \
          lr, optimizer (adam|setadam), seed, eval_every, eval_batches, \
          train_examples, val_examples, artifacts_dir, save_every, ckpt_dir, \
-         threads, ranks, grad_accum, dist_timeout_s, on_rank_failure\n\n\
+         threads, ranks, grad_accum, dist_timeout_s, on_rank_failure, \
+         init_from, freeze_embed\n\n\
          Threads: the native backend runs on a deterministic kernel pool \
          (row-partitioned parallelism only) — losses, gradients and served \
          bytes are bit-identical at any --threads value; 0 = auto.\n\
@@ -975,6 +1112,18 @@ fn print_help() {
          Checkpoints: `train save_every=K` writes <run>-step<N>.ckpt + \
          <run>-latest.ckpt under ckpt_dir (versioned, CRC-checked, bit-exact \
          round trip); `eval --ckpt` / `serve --ckpt` load them.\n\
+         Fine-tuning: `train --init-from <ckpt>` continues training from a \
+         checkpoint (bit-identical to --resume; pair with a new seed= for a \
+         fresh corpus split); --freeze-embed pins the embedding — zero \
+         grads, skipped by the optimizer, excluded from the all-reduce \
+         payload — still bit-exact at any --ranks.\n\
+         Generation: `generate` decodes autoregressively on GPT bundles \
+         with an incremental KV cache that is bit-identical to \
+         re-forwarding the full prefix at any --threads and under any \
+         --tune-profile; greedy by default, --temperature/--top-k/--seed \
+         for seeded sampling (replays bit-exactly).  `serve` exposes the \
+         same path as streaming POST /generate (chunked JSON lines), \
+         batching concurrent sessions per decode step.\n\
          Serving: `serve` exposes POST /infer (binary example -> 8-byte \
          loss/correct), GET /healthz, GET /stats, POST /shutdown, with \
          dynamic micro-batching across concurrent requests; `bench-serve` \
@@ -991,8 +1140,8 @@ fn print_help() {
          responses stay bit-identical to single-process serving.  \
          `bench-serve --replicas N` proves that under load.\n\
          Benchmarks: `bench` times fwd/bwd/infer per model family at 1 and \
-         N threads — plus a tuned-profile row per family — and writes \
-         BENCH_8.json.\n\
+         N threads — plus a tuned-profile row per family and decode \
+         tokens/sec rows for GPT bundles — and writes BENCH_9.json.\n\
          Tuning: `tune` benchmarks candidate kernel parameters (k-panel \
          size, task grain, inner-loop unroll, cached weight transpose) on \
          the live pool for one bundle's hot-path shapes and persists the \

@@ -29,6 +29,11 @@ pub struct Optimizer {
     t: u64,
     m: ParamStore,
     v: ParamStore,
+    /// Parameter groups excluded from updates (fine-tuning freezes).  A
+    /// frozen group's params *and* moments are left untouched — zeroed
+    /// gradients alone would not freeze, because checkpoint-restored first
+    /// moments keep decaying into parameter motion.
+    frozen: Vec<String>,
 }
 
 impl Optimizer {
@@ -43,7 +48,20 @@ impl Optimizer {
             t: 0,
             m: params.zeros_like(),
             v: params.zeros_like(),
+            frozen: Vec::new(),
         }
+    }
+
+    /// Freeze parameter groups by name: [`Optimizer::step`] skips them
+    /// entirely (no param update, no moment update).  Unknown names are
+    /// ignored — `enc_embed` only exists on encoder-decoder models.
+    pub fn set_frozen(&mut self, groups: Vec<String>) {
+        self.frozen = groups;
+    }
+
+    /// Groups currently excluded from updates.
+    pub fn frozen(&self) -> &[String] {
+        &self.frozen
     }
 
     pub fn step_count(&self) -> u64 {
@@ -86,12 +104,19 @@ impl Optimizer {
         let kind = self.kind;
         let kappa = self.kappa;
 
-        // walk (param, grad, m, v) tensors in lockstep (identical structure)
+        // walk (param, grad, m, v) tensors in lockstep (identical structure);
+        // keyed so frozen groups can be skipped while the iterators stay
+        // aligned
+        let frozen = &self.frozen;
         let mut mg = self.m.groups.values_mut();
         let mut vg = self.v.groups.values_mut();
-        for (pg, gg) in params.groups.values_mut().zip(grads.groups.values()) {
+        for ((name, pg), gg) in params.groups.iter_mut().zip(grads.groups.values())
+        {
             let minsts = mg.next().expect("m structure");
             let vinsts = vg.next().expect("v structure");
+            if frozen.iter().any(|f| f == name) {
+                continue;
+            }
             for (((pinst, ginst), minst), vinst) in
                 pg.iter_mut().zip(gg).zip(minsts.iter_mut()).zip(vinsts.iter_mut())
             {
@@ -234,6 +259,50 @@ mod tests {
             diff = diff.max(ia.max_abs_diff(is_).unwrap());
         }
         assert!(diff > 1e-5, "SET-Adam should suppress the outlier stepsize");
+    }
+
+    #[test]
+    fn frozen_group_is_bitwise_pinned() {
+        // two groups so one can freeze while the other trains
+        let text = r#"{
+          "name": "toy2", "family": "gpt",
+          "dims": {"d_model": 4, "n_heads": 2, "n_blocks": 2,
+                   "n_enc_blocks": 0, "mlp_ratio": 2, "batch": 2, "lbits": 9,
+                   "image_size": 32, "patch": 4, "channels": 3,
+                   "n_classes": 10, "seq": 8, "seq_src": 0, "vocab": 16},
+          "param_groups": {
+            "embed": [{"name": "e", "shape": [8], "init": "normal:1.0"}],
+            "w": [{"name": "a", "shape": [8], "init": "normal:1.0"}]
+          },
+          "executables": {}, "source_hash": "x"
+        }"#;
+        let m = Manifest::from_json(&Json::parse(text).unwrap()).unwrap();
+        let mut ps = ParamStore::init(&m, 3);
+        let before = clone_store(&ps);
+        let mut opt = Optimizer::new(&cfg(OptimKind::Adam), &ps);
+        // non-zero restored moments would move params even under zero
+        // grads — the group skip is what actually freezes
+        opt.m.for_each_mut(|t| t.data_mut().fill(0.5));
+        opt.set_frozen(vec!["embed".into(), "enc_embed".into()]);
+        for _ in 0..5 {
+            let mut g = clone_store(&ps);
+            g.groups.get_mut("embed").unwrap()[0]
+                .iter_mut()
+                .for_each(|t| t.data_mut().fill(0.0));
+            opt.step(&mut ps, &g).unwrap();
+        }
+        let bits = |s: &ParamStore, g: &str| {
+            s.groups[g][0][0]
+                .data()
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&ps, "embed"), bits(&before, "embed"));
+        assert_ne!(bits(&ps, "w"), bits(&before, "w"));
+        // frozen moments are untouched too
+        assert!(opt.m.groups["embed"][0][0].data().iter().all(|x| *x == 0.5));
+        assert!(opt.m.groups["w"][0][0].data().iter().any(|x| *x != 0.5));
     }
 
     #[test]

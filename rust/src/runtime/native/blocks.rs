@@ -258,6 +258,53 @@ pub fn block_h(w: &BlockW, x: &[f32], mem: Option<&[f32]>, dims: BlockDims) -> V
     h
 }
 
+/// Single-position decode forward of one (non-cross) block against this
+/// block's K/V caches: `x` is the `(b, d)` activation row at position
+/// `pos`, `kcache`/`vcache` are `(b, t_max, d)` with rows `0..pos` filled.
+/// Returns `(h (b,d), knew (b,d), vnew (b,d))`.
+///
+/// Every sub-step (LayerNorm, the attention row, FFN, the residual
+/// combine) is row-local, so `h` is bit-identical to row `pos` of
+/// [`block_h`] with `causal = true` over the full prefix — the decode
+/// invariant `tests/generate.rs` enforces.
+#[allow(clippy::too_many_arguments)]
+pub fn block_decode_row(
+    w: &BlockW,
+    x: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    b: usize,
+    pos: usize,
+    t_max: usize,
+    d: usize,
+    heads: usize,
+    ratio: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = b;
+    let dr = d * ratio;
+    let (xn, ln1) = ln_fwd(w.ln1_scale, w.ln1_bias, x, rows, d);
+    let (a, knew, vnew) = crate::kernels::attn_decode(
+        &w.attn, &xn, kcache, vcache, b, pos, t_max, d, heads,
+    );
+    workspace::give(xn);
+    ln1.recycle();
+    let u = add(x, &a);
+    workspace::give(a);
+    let (zn, ln2) = ln_fwd(w.ln2_scale, w.ln2_bias, &u, rows, d);
+    let (f, ffn) = ffn_fwd(w.ffn_w1, w.ffn_b1, w.ffn_w2, w.ffn_b2, &zn, rows, d, dr);
+    workspace::give(zn);
+    ln2.recycle();
+    ffn.recycle();
+    // h = u + f - x (same element-order as block_fwd_cached)
+    let mut h = u;
+    add_into(&mut h, &f);
+    workspace::give(f);
+    for (hv, xv) in h.iter_mut().zip(x) {
+        *hv -= *xv;
+    }
+    (h, knew, vnew)
+}
+
 /// Per-leaf parameter gradients of one block, emitted in flatten order.
 pub struct BlockGrads {
     attn: AttnGrads,
@@ -708,6 +755,24 @@ fn head_logits(
     let logits = linear(&zc, w.w, w.b, rows, d, n_out);
     workspace::give(zc);
     (logits, rows)
+}
+
+/// Raw head logits over all rows, no loss reduction: LN → (ViT: cls
+/// select) → projection, shape `(rows, n_out)`.  The decode step and the
+/// full-prefix reference forward both score through this function, so
+/// their logits agree bit-for-bit by construction.
+pub fn head_logits_rows(
+    leaves: &[&Tensor],
+    x: &Tensor,
+    family: Family,
+    b: usize,
+    t: usize,
+    d: usize,
+    n_out: usize,
+) -> Result<Tensor> {
+    let w = head_view(leaves)?;
+    let (logits, rows) = head_logits(&w, x, family, b, t, d, n_out);
+    Tensor::from_vec(&[rows, n_out], logits)
 }
 
 /// head_loss_fwd: (mean CE loss, #correct), both scalars.

@@ -6,7 +6,8 @@
 //! same functions.
 
 use super::blocks;
-use crate::quant::Fixed;
+use crate::model::Family;
+use crate::quant::{self, Fixed};
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{ensure, Result};
 
@@ -96,4 +97,201 @@ pub(super) fn model_infer(
         &tower, x0, gamma, ex.main_block_dims(), false, None, f,
     )?;
     ex.head_reduce(hd, &xk, labels, per_example)
+}
+
+/// Read an exact-integer runtime scalar in `1..=max` (prefix lengths, lane
+/// counts).
+fn want_count(
+    data: &[crate::runtime::ArgValue],
+    i: usize,
+    what: &str,
+    max: usize,
+) -> Result<usize> {
+    let v = super::want_scalar(data, i, what)?;
+    ensure!(
+        v >= 1.0 && v.fract() == 0.0 && v <= max as f32,
+        "{what} must be an integer in 1..={max}, got {v}"
+    );
+    Ok(v as usize)
+}
+
+/// Full-prefix quantized forward returning raw logits `(batch, seq,
+/// vocab)` — the reference side of the decode bit-identity invariant, and
+/// the prompt-scoring path.  Only the first `len` positions of each lane
+/// are forwarded (the declared tokens shape is the maximum); logits rows
+/// at `t >= len` stay zero.
+pub(super) fn model_logits(
+    ex: &super::NativeExec,
+    params: &[&Tensor],
+    data: &[crate::runtime::ArgValue],
+) -> Result<Vec<Tensor>> {
+    let d = ex.dims.d_model;
+    let b = ex.dims.batch;
+    let seq = ex.dims.seq;
+    let vocab = ex.dims.vocab;
+    let f = Fixed::new(ex.dims.lbits);
+    let toks = super::want_i32(data, 0, "tokens")?;
+    let t = want_count(data, 1, "len", seq)?;
+    let gamma = super::want_scalar(data, 2, "gamma")?;
+    // gather the (b, t) prefix out of the (b, seq) tokens buffer
+    let ids = toks.data();
+    let mut prefix = Vec::with_capacity(b * t);
+    for bi in 0..b {
+        prefix.extend_from_slice(&ids[bi * seq..bi * seq + t]);
+    }
+    let ptoks = IntTensor::from_vec(&[b, t], prefix)?;
+    let (em, tower, hd) = ex.split_single_tower(params);
+    let x0 = embed_fwd(em, &ptoks, b, t, d, ex.dims.vocab)?;
+    let bd = blocks::BlockDims {
+        b,
+        t,
+        t_src: 0,
+        d,
+        heads: ex.dims.n_heads,
+        ratio: ex.dims.mlp_ratio,
+        causal: true,
+    };
+    let xk = blocks::stack_infer(&tower, x0, gamma, bd, false, None, f)?;
+    let logits = blocks::head_logits_rows(hd, &xk, Family::Gpt, b, t, d, vocab)?;
+    // scatter the (b*t, vocab) rows into the full (b, seq, vocab) output
+    let mut out = vec![0.0f32; b * seq * vocab];
+    for bi in 0..b {
+        let src = bi * t * vocab;
+        let dst = bi * seq * vocab;
+        out[dst..dst + t * vocab]
+            .copy_from_slice(&logits.data()[src..src + t * vocab]);
+    }
+    Ok(vec![Tensor::from_vec(&[b, seq, vocab], out)?])
+}
+
+/// One autoregressive decode position: embed the new token per lane at
+/// `pos`, run the quantized BDIA stack (eqs. 18, 19, 21) against
+/// caller-owned K/V caches, and score head logits for the new row only.
+///
+/// Data: `[tokens (batch,), kcache (n_blocks,batch,seq,d), vcache (same),
+/// pos scalar, lanes scalar, gamma scalar]`; outputs `[logits
+/// (batch,vocab), knew (n_blocks,batch,d), vnew (n_blocks,batch,d)]`.
+/// Only the first `lanes` lanes are computed (outputs for the rest stay
+/// zero); the caller appends knew/vnew at cache row `pos` before the next
+/// step.  Every sub-step is row-local (see [`blocks::block_decode_row`]),
+/// so per-lane logits are bit-identical to the last row of
+/// [`model_logits`] over the same prefix at any thread count, kernel
+/// profile and lane packing.
+pub(super) fn decode_step(
+    ex: &super::NativeExec,
+    params: &[&Tensor],
+    data: &[crate::runtime::ArgValue],
+) -> Result<Vec<Tensor>> {
+    let d = ex.dims.d_model;
+    let t_max = ex.dims.seq;
+    let batch = ex.dims.batch;
+    let heads = ex.dims.n_heads;
+    let ratio = ex.dims.mlp_ratio;
+    let n_blocks = ex.dims.n_blocks;
+    let vocab = ex.dims.vocab;
+    let f = Fixed::new(ex.dims.lbits);
+
+    let toks = super::want_i32(data, 0, "tokens")?;
+    let kcache = super::want_f32(data, 1, "kcache")?;
+    let vcache = super::want_f32(data, 2, "vcache")?;
+    let pos_f = super::want_scalar(data, 3, "pos")?;
+    let b = want_count(data, 4, "lanes", batch)?;
+    let gamma = super::want_scalar(data, 5, "gamma")?;
+    ensure!(
+        pos_f >= 0.0 && pos_f.fract() == 0.0,
+        "pos must be a non-negative integer, got {pos_f}"
+    );
+    let pos = pos_f as usize;
+    ensure!(pos < t_max, "pos {pos} out of range (seq {t_max})");
+
+    let (em, tower, hd) = ex.split_single_tower(params);
+    ensure!(em.len() == 2, "token embed expects 2 leaves");
+    let (wpe, wte) = (em[0].data(), em[1].data());
+    let ids = toks.data();
+    // embed the single new row per lane: wte[id] + wpe[pos] — the same fp
+    // adds as row (bi, pos) of embed_fwd over the full prefix
+    let mut x0 = vec![0.0f32; b * d];
+    for bi in 0..b {
+        let id = ids[bi];
+        ensure!(
+            (0..vocab as i32).contains(&id),
+            "token id {id} out of vocab range {vocab}"
+        );
+        let te = &wte[id as usize * d..(id as usize + 1) * d];
+        let pe = &wpe[pos * d..(pos + 1) * d];
+        for j in 0..d {
+            x0[bi * d + j] = te[j] + pe[j];
+        }
+    }
+    f.quantize_slice(&mut x0); // eq. 18
+
+    // lanes are outermost within each block's cache slab, so the first
+    // `b` active lanes of block k form the contiguous prefix of its slab
+    let blk = batch * t_max * d;
+    let active = b * t_max * d;
+    let lane = b * d;
+    let mut knew_all = vec![0.0f32; n_blocks * batch * d];
+    let mut vnew_all = vec![0.0f32; n_blocks * batch * d];
+
+    let x0_t = Tensor::from_vec(&[b, d], x0)?;
+    let w0 = blocks::BlockW::from_leaves(tower[0], false)?;
+    let (h0, kn, vn) = blocks::block_decode_row(
+        &w0,
+        x0_t.data(),
+        &kcache.data()[..active],
+        &vcache.data()[..active],
+        b,
+        pos,
+        t_max,
+        d,
+        heads,
+        ratio,
+    );
+    knew_all[..lane].copy_from_slice(&kn);
+    vnew_all[..lane].copy_from_slice(&vn);
+    crate::kernels::workspace::give(kn);
+    crate::kernels::workspace::give(vn);
+    let h0_t = Tensor::from_vec(&[b, d], h0)?;
+    let x1 = quant::first_step_quant(&x0_t, &h0_t, f)?; // eq. 19
+    let (mut x_prev, mut x_cur) = (x0_t, x1);
+    for (k, leaves) in tower.iter().enumerate().skip(1) {
+        let wk = blocks::BlockW::from_leaves(leaves, false)?;
+        let (h, kn, vn) = blocks::block_decode_row(
+            &wk,
+            x_cur.data(),
+            &kcache.data()[k * blk..k * blk + active],
+            &vcache.data()[k * blk..k * blk + active],
+            b,
+            pos,
+            t_max,
+            d,
+            heads,
+            ratio,
+        );
+        knew_all[k * batch * d..k * batch * d + lane].copy_from_slice(&kn);
+        vnew_all[k * batch * d..k * batch * d + lane].copy_from_slice(&vn);
+        crate::kernels::workspace::give(kn);
+        crate::kernels::workspace::give(vn);
+        // eq. 21 at constant gamma — the identical per-element expression
+        // as stack_infer, so decode bits match the full re-forward
+        let xp = x_prev.data();
+        let xc = x_cur.data();
+        let mut nxt = vec![0.0f32; lane];
+        for (i, nv) in nxt.iter_mut().enumerate() {
+            let t1 = f.quantize(gamma * xp[i]);
+            let t2 = f.quantize((1.0 - gamma) * xc[i] + (1.0 + gamma) * h[i]);
+            *nv = t1 + t2;
+        }
+        crate::kernels::workspace::give(h);
+        x_prev = x_cur;
+        x_cur = Tensor::from_vec(&[b, d], nxt)?;
+    }
+    let logits = blocks::head_logits_rows(hd, &x_cur, Family::Gpt, b, 1, d, vocab)?;
+    let mut logits_all = vec![0.0f32; batch * vocab];
+    logits_all[..b * vocab].copy_from_slice(logits.data());
+    Ok(vec![
+        Tensor::from_vec(&[batch, vocab], logits_all)?,
+        Tensor::from_vec(&[n_blocks, batch, d], knew_all)?,
+        Tensor::from_vec(&[n_blocks, batch, d], vnew_all)?,
+    ])
 }

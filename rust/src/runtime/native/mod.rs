@@ -80,6 +80,8 @@ fn known_exec(name: &str) -> Result<()> {
         "enc_block_vjp",
         "model_infer",
         "model_infer_ex",
+        "model_logits",
+        "model_decode_step",
     ];
     ensure!(
         KNOWN.contains(&name),
@@ -429,6 +431,16 @@ impl CompiledExec for NativeExec {
             "model_infer" => self.run_model_infer(params, data, false),
             "model_infer_ex" => self.run_model_infer(params, data, true),
 
+            // ---- autoregressive decode (gpt only) ----
+            "model_logits" => match self.family {
+                Family::Gpt => gpt::model_logits(self, params, data),
+                _ => bail!("model_logits is only available for the GPT family"),
+            },
+            "model_decode_step" => match self.family {
+                Family::Gpt => gpt::decode_step(self, params, data),
+                _ => bail!("model_decode_step is only available for the GPT family"),
+            },
+
             other => bail!("native backend: unknown executable '{other}'"),
         }
     }
@@ -574,6 +586,96 @@ mod tests {
             );
             let correct_sum = o1[1].data()[0] + o1[1].data()[1];
             assert_eq!(so[1].scalar_value().unwrap(), correct_sum);
+        }
+    }
+
+    #[test]
+    fn decode_step_matches_full_prefix_logits_bitwise() {
+        let rt = native("smoke_gpt");
+        let dims = rt.manifest.dims.clone();
+        let (b, d, t_max, nb, vocab) =
+            (dims.batch, dims.d_model, dims.seq, dims.n_blocks, dims.vocab);
+        let ps = ParamStore::init(&rt.manifest, 12);
+        let mut rng = Rng::new(4);
+        let toks: Vec<i32> =
+            (0..b * t_max).map(|_| rng.below(vocab) as i32).collect();
+        let dec = rt.exec("model_decode_step").unwrap();
+        let full = rt.exec("model_logits").unwrap();
+        let drefs = ps.refs_for(&dec.spec, 0).unwrap();
+        let frefs = ps.refs_for(&full.spec, 0).unwrap();
+        let all_toks = IntTensor::from_vec(&[b, t_max], toks.clone()).unwrap();
+        let mut kc = Tensor::zeros(&[nb, b, t_max, d]);
+        let mut vc = Tensor::zeros(&[nb, b, t_max, d]);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for pos in 0..t_max {
+            let step: Vec<i32> =
+                (0..b).map(|bi| toks[bi * t_max + pos]).collect();
+            let st = IntTensor::from_vec(&[b], step).unwrap();
+            // lane-packing invariance: a lanes=1 call on the same caches
+            // must produce bit-identical lane-0 outputs
+            let solo = dec
+                .call(
+                    &drefs,
+                    &[
+                        ArgValue::I32(&st),
+                        ArgValue::F32(&kc),
+                        ArgValue::F32(&vc),
+                        ArgValue::Scalar(pos as f32),
+                        ArgValue::Scalar(1.0),
+                        ArgValue::Scalar(0.0),
+                    ],
+                )
+                .unwrap();
+            let outs = dec
+                .call(
+                    &drefs,
+                    &[
+                        ArgValue::I32(&st),
+                        ArgValue::F32(&kc),
+                        ArgValue::F32(&vc),
+                        ArgValue::Scalar(pos as f32),
+                        ArgValue::Scalar(b as f32),
+                        ArgValue::Scalar(0.0),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(
+                bits(&solo[0].data()[..vocab]),
+                bits(&outs[0].data()[..vocab]),
+                "lane-0 logits depend on lane packing at pos {pos}"
+            );
+            for k in 0..nb {
+                for bi in 0..b {
+                    let src = (k * b + bi) * d;
+                    let dst = ((k * b + bi) * t_max + pos) * d;
+                    kc.data_mut()[dst..dst + d]
+                        .copy_from_slice(&outs[1].data()[src..src + d]);
+                    vc.data_mut()[dst..dst + d]
+                        .copy_from_slice(&outs[2].data()[src..src + d]);
+                }
+            }
+            let t = pos + 1;
+            let fl = full
+                .call(
+                    &frefs,
+                    &[
+                        ArgValue::I32(&all_toks),
+                        ArgValue::Scalar(t as f32),
+                        ArgValue::Scalar(0.0),
+                    ],
+                )
+                .unwrap()
+                .remove(0);
+            for bi in 0..b {
+                let inc = &outs[0].data()[bi * vocab..(bi + 1) * vocab];
+                let base = (bi * t_max + pos) * vocab;
+                let refrow = &fl.data()[base..base + vocab];
+                assert_eq!(
+                    bits(inc),
+                    bits(refrow),
+                    "decode logits diverge at pos {pos} lane {bi}"
+                );
+            }
         }
     }
 

@@ -482,6 +482,52 @@ pub fn manifest_from_dims(name: &str, family: Family, dims: Dims) -> Manifest {
         ),
     );
 
+    // ---- autoregressive decode (gpt only) ----
+    // model_logits: full-prefix quantized forward returning raw logits —
+    // the reference side of the decode bit-identity invariant.  `len` is a
+    // runtime scalar (prefix length ≤ seq); logits rows at t ≥ len are
+    // zero.  model_decode_step: one token position per lane against
+    // caller-owned K/V caches (rows 0..pos filled); `lanes` ≤ batch lanes
+    // are active (outputs for the rest stay zero), which is what lets the
+    // /generate scheduler batch sessions by shape without padding cost.
+    // Every per-lane output depends only on that lane's tokens and cache
+    // rows, so batched and solo calls are bit-identical per lane.
+    if family == Family::Gpt {
+        let tower = layout(&[("embed", 1), ("block", dims.n_blocks), ("head", 1)]);
+        executables.insert(
+            "model_logits".to_string(),
+            exec(
+                tower.clone(),
+                vec![
+                    i32_arg("tokens", vec![dims.batch, dims.seq]),
+                    f32_arg("len", vec![]),
+                    f32_arg("gamma", vec![]),
+                ],
+                vec![f32_arg("logits", vec![dims.batch, dims.seq, dims.vocab])],
+            ),
+        );
+        let cache = vec![dims.n_blocks, dims.batch, dims.seq, d];
+        executables.insert(
+            "model_decode_step".to_string(),
+            exec(
+                tower,
+                vec![
+                    i32_arg("tokens", vec![dims.batch]),
+                    f32_arg("kcache", cache.clone()),
+                    f32_arg("vcache", cache),
+                    f32_arg("pos", vec![]),
+                    f32_arg("lanes", vec![]),
+                    f32_arg("gamma", vec![]),
+                ],
+                vec![
+                    f32_arg("logits", vec![dims.batch, dims.vocab]),
+                    f32_arg("knew", vec![dims.n_blocks, dims.batch, d]),
+                    f32_arg("vnew", vec![dims.n_blocks, dims.batch, d]),
+                ],
+            ),
+        );
+    }
+
     Manifest {
         name: name.to_string(),
         family,
@@ -532,6 +578,27 @@ mod tests {
         let embed: Vec<&str> =
             m.param_groups["embed"].iter().map(|l| l.name.as_str()).collect();
         assert_eq!(embed, vec!["wpe", "wte"]);
+    }
+
+    #[test]
+    fn gpt_manifests_expose_decode_executables() {
+        for name in ["smoke_gpt", "gpt_tiny", "gpt_e2e"] {
+            let m = manifest_for(name).unwrap();
+            let spec = &m.executables["model_decode_step"];
+            assert_eq!(spec.data_inputs.len(), 6, "{name}");
+            assert_eq!(spec.outputs.len(), 3, "{name}");
+            assert_eq!(
+                spec.data_inputs[1].shape,
+                vec![m.dims.n_blocks, m.dims.batch, m.dims.seq, m.dims.d_model],
+                "{name} kcache shape"
+            );
+            assert!(m.executables.contains_key("model_logits"), "{name}");
+        }
+        for name in ["smoke_vit", "smoke_encdec"] {
+            let m = manifest_for(name).unwrap();
+            assert!(!m.executables.contains_key("model_decode_step"), "{name}");
+            assert!(!m.executables.contains_key("model_logits"), "{name}");
+        }
     }
 
     #[test]

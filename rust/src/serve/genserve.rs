@@ -1,0 +1,359 @@
+//! The streaming `/generate` endpoint behind the single-process server:
+//! request parsing, the per-tick decode scheduler, and the chunked
+//! response writer.
+//!
+//! ## Scheduling model
+//!
+//! One dedicated scheduler thread owns every in-flight [`GenSession`] and
+//! advances each by **one position per tick** through
+//! [`crate::generate::decode_tick`].  Sessions join and leave only
+//! *between* ticks (the handler pushes onto [`GenQueue`]; the scheduler
+//! drains it at the top of each tick), and within a tick sessions are
+//! grouped by position — `model_decode_step` takes one `pos` scalar, so
+//! batching is **by shape only**.  Gamma never mixes because the server
+//! pins every session to the paper's standard inference γ = 0.0.
+//!
+//! Because per-lane decode outputs are packing-invariant, a token
+//! streamed from a busy server is bit-identical to the same request run
+//! through `Session::generate` alone — `tests/generate.rs` asserts this
+//! over real sockets.
+//!
+//! Prompt prefill is tick-batched too: a joining session simply sits at
+//! position 0 and emits nothing until its prompt is consumed, so long
+//! prompts never stall other sessions' token cadence by more than one
+//! decode step.
+
+use super::http;
+use super::Shared;
+use crate::api::events::{RequestEvent, TokenEvent};
+use crate::config::json::Json;
+use crate::generate::{decode_tick, GenOpts, GenSession, GenStop};
+use anyhow::{bail, Result};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// What the scheduler reports back to a waiting connection handler.
+pub(super) enum GenEvent {
+    /// One generated token (`us` = wall time of the decode tick that
+    /// produced it).
+    Token { index: usize, token: i32, us: u64 },
+    /// Generation finished; the full generated sequence rides along so the
+    /// terminal chunk can echo it.
+    Done { stop: GenStop, prompt_len: usize, tokens: Vec<i32> },
+    /// The decode step failed (engine error) — the session is dropped.
+    Failed { msg: String },
+}
+
+/// One in-flight generation owned by the scheduler.
+pub(super) struct GenJob {
+    session: GenSession,
+    events: mpsc::Sender<GenEvent>,
+    /// Tokens emitted so far (the event index).
+    emitted: usize,
+    /// Set when the client hung up or the engine failed; retired at the
+    /// end of the tick.
+    dead: bool,
+}
+
+struct QueueState {
+    jobs: Vec<GenJob>,
+    shutdown: bool,
+}
+
+/// Join point between connection handlers and the scheduler thread.
+pub(super) struct GenQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl GenQueue {
+    pub(super) fn new() -> Self {
+        GenQueue {
+            state: Mutex::new(QueueState { jobs: Vec::new(), shutdown: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Hand a session to the scheduler; `false` once shutdown began.
+    fn push(&self, job: GenJob) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return false;
+        }
+        st.jobs.push(job);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Take every queued join.  Blocks while the scheduler is otherwise
+    /// idle (`block`), returning immediately when it has live sessions to
+    /// advance.  Second return is the shutdown flag.
+    fn drain(&self, block: bool) -> (Vec<GenJob>, bool) {
+        let mut st = self.state.lock().unwrap();
+        if block {
+            while st.jobs.is_empty() && !st.shutdown {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+        (std::mem::take(&mut st.jobs), st.shutdown)
+    }
+
+    /// Begin shutdown: refuse new joins and wake the scheduler.
+    pub(super) fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Parse a `/generate` request body: `{"prompt": [..], "max_tokens": N,
+/// "temperature": T, "top_k": K, "seed": S, "eos": E}` — everything but
+/// `prompt` optional.  Gamma is **not** a request field: the server pins
+/// γ = 0.0 so ticks batch by shape alone.
+pub(super) fn parse_request(body: &[u8]) -> Result<(Vec<i32>, GenOpts)> {
+    let text = std::str::from_utf8(body)?;
+    let j = Json::parse(text)?;
+    let prompt = match j.get("prompt")? {
+        Json::Arr(a) => a
+            .iter()
+            .map(|v| v.as_i64().map(|x| x as i32))
+            .collect::<Result<Vec<i32>>>()?,
+        other => bail!("prompt must be an array of token ids, got {other}"),
+    };
+    let mut opts = GenOpts::default();
+    if let Some(v) = j.opt("max_tokens") {
+        opts.max_tokens = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("temperature") {
+        opts.temperature = v.as_f64()? as f32;
+    }
+    if let Some(v) = j.opt("top_k") {
+        opts.top_k = v.as_usize()?;
+    }
+    if let Some(v) = j.opt("seed") {
+        opts.seed = v.as_i64()? as u64;
+    }
+    if let Some(v) = j.opt("eos") {
+        if !matches!(v, Json::Null) {
+            opts.eos = Some(v.as_i64()? as i32);
+        }
+    }
+    Ok((prompt, opts))
+}
+
+/// The scheduler thread body: drain joins, advance every live session one
+/// position, stream tokens, retire finished sessions; exit on shutdown
+/// (failing whatever is still queued or in flight).
+pub(super) fn scheduler_loop(shared: &Arc<Shared>) {
+    let batch = shared.rt.manifest.dims.batch.max(1);
+    let mut active: Vec<GenJob> = Vec::new();
+    loop {
+        let (joined, shutdown) = shared.gen_queue.drain(active.is_empty());
+        if shutdown {
+            for j in joined.into_iter().chain(active.drain(..)) {
+                let _ = j.events.send(GenEvent::Failed {
+                    msg: "server is shutting down".into(),
+                });
+                shared.stats.gen_session_left();
+            }
+            return;
+        }
+        active.extend(joined);
+
+        // group by position (one pos scalar per call), then advance each
+        // group in lane-sized slices; per-lane outputs are
+        // packing-invariant so the grouping never changes results
+        active.sort_by_key(|j| j.session.pos());
+        let mut i = 0;
+        while i < active.len() {
+            let pos = active[i].session.pos();
+            let mut end = i + 1;
+            while end < active.len() && active[end].session.pos() == pos {
+                end += 1;
+            }
+            for start in (i..end).step_by(batch) {
+                let jobs = &mut active[start..(start + batch).min(end)];
+                tick_slice(shared, jobs);
+            }
+            i = end;
+        }
+        for j in &mut active {
+            if j.dead {
+                continue;
+            }
+            if let Some(stop) = j.session.stop() {
+                j.dead = true;
+                let _ = j.events.send(GenEvent::Done {
+                    stop,
+                    prompt_len: j.session.tokens().len()
+                        - j.session.generated().len(),
+                    tokens: j.session.generated().to_vec(),
+                });
+            }
+        }
+        let before = active.len();
+        active.retain(|j| !j.dead);
+        for _ in active.len()..before {
+            shared.stats.gen_session_left();
+        }
+    }
+}
+
+/// One `model_decode_step` call over a same-position slice of sessions.
+fn tick_slice(shared: &Arc<Shared>, jobs: &mut [GenJob]) {
+    let t0 = Instant::now();
+    let mut sessions: Vec<&mut GenSession> =
+        jobs.iter_mut().map(|j| &mut j.session).collect();
+    let emitted = decode_tick(&shared.rt, &shared.params, &mut sessions);
+    drop(sessions);
+    match emitted {
+        Ok(toks) => {
+            let us = t0.elapsed().as_micros() as u64;
+            for (j, tok) in jobs.iter_mut().zip(toks) {
+                if let Some(token) = tok {
+                    shared.stats.record_tokens(1);
+                    let index = j.emitted;
+                    j.emitted += 1;
+                    if j.events.send(GenEvent::Token { index, token, us }).is_err()
+                    {
+                        // client hung up mid-stream: abandon the session
+                        j.dead = true;
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for j in jobs.iter_mut() {
+                let _ = j.events.send(GenEvent::Failed { msg: msg.clone() });
+                j.dead = true;
+            }
+        }
+    }
+}
+
+/// The `POST /generate` connection handler: parse, join the scheduler,
+/// stream one JSON line per token as a chunk, close with a terminal
+/// summary chunk.
+pub(super) fn handle_generate(
+    stream: &TcpStream,
+    shared: &Arc<Shared>,
+    body: &[u8],
+) {
+    let t0 = Instant::now();
+    if !shared.rt.has_exec("model_decode_step") {
+        let body = format!(
+            "{{\"error\": \"generation requires a GPT-family model; '{}' is \
+             {:?}\"}}",
+            shared.rt.manifest.name, shared.rt.manifest.family
+        );
+        let _ = http::write_response(
+            stream,
+            501,
+            "Not Implemented",
+            "application/json",
+            body.as_bytes(),
+        );
+        return;
+    }
+    let fail = |status: u16, reason: &str, msg: &str| {
+        shared.stats.record_error();
+        shared.sink.on_request(&RequestEvent {
+            latency_us: t0.elapsed().as_micros() as u64,
+            ok: false,
+        });
+        let _ = http::write_response(
+            stream,
+            status,
+            reason,
+            "application/json",
+            format!("{{\"error\": \"{}\"}}\n", msg.replace('"', "'")).as_bytes(),
+        );
+    };
+    let (prompt, opts) = match parse_request(body) {
+        Ok(v) => v,
+        Err(e) => return fail(400, "Bad Request", &format!("{e:#}")),
+    };
+    let session = match GenSession::new(&shared.rt, &prompt, opts) {
+        Ok(s) => s,
+        Err(e) => return fail(400, "Bad Request", &format!("{e:#}")),
+    };
+    let (tx, rx) = mpsc::channel();
+    shared.stats.gen_session_joined();
+    let accepted = shared.gen_queue.push(GenJob {
+        session,
+        events: tx,
+        emitted: 0,
+        dead: false,
+    });
+    if !accepted {
+        shared.stats.gen_session_left();
+        return fail(503, "Service Unavailable", "server is shutting down");
+    }
+    if http::write_chunked_head(stream, 200, "OK", "application/json").is_err() {
+        return; // scheduler notices the dropped receiver on next token
+    }
+    loop {
+        match rx.recv() {
+            Ok(GenEvent::Token { index, token, us }) => {
+                shared.sink.on_token(&TokenEvent {
+                    index,
+                    token,
+                    latency_us: us,
+                });
+                let line = format!("{{\"index\": {index}, \"token\": {token}}}\n");
+                if http::write_chunk(stream, line.as_bytes()).is_err() {
+                    // dropping rx makes the scheduler abandon the session
+                    return;
+                }
+            }
+            Ok(GenEvent::Done { stop, prompt_len, tokens }) => {
+                let toks: Vec<String> =
+                    tokens.iter().map(|t| t.to_string()).collect();
+                let line = format!(
+                    "{{\"done\": true, \"stop\": \"{}\", \"prompt_len\": \
+                     {prompt_len}, \"tokens\": [{}]}}\n",
+                    stop.name(),
+                    toks.join(", ")
+                );
+                let _ = http::write_chunk(stream, line.as_bytes());
+                let _ = http::finish_chunked(stream);
+                let latency_us = t0.elapsed().as_micros() as u64;
+                shared.stats.record_request();
+                shared.stats.record_latency_us(latency_us);
+                shared.sink.on_request(&RequestEvent { latency_us, ok: true });
+                return;
+            }
+            Ok(GenEvent::Failed { msg }) => {
+                let line = format!(
+                    "{{\"error\": \"{}\"}}\n",
+                    msg.replace('"', "'").replace('\n', " ")
+                );
+                let _ = http::write_chunk(stream, line.as_bytes());
+                let _ = http::finish_chunked(stream);
+                shared.stats.record_error();
+                shared.sink.on_request(&RequestEvent {
+                    latency_us: t0.elapsed().as_micros() as u64,
+                    ok: false,
+                });
+                return;
+            }
+            Err(_) => {
+                // scheduler dropped the sender without a terminal event
+                let _ = http::write_chunk(
+                    stream,
+                    b"{\"error\": \"generation scheduler exited\"}\n",
+                );
+                let _ = http::finish_chunked(stream);
+                shared.stats.record_error();
+                shared.sink.on_request(&RequestEvent {
+                    latency_us: t0.elapsed().as_micros() as u64,
+                    ok: false,
+                });
+                return;
+            }
+        }
+    }
+}

@@ -1,7 +1,9 @@
 //! Minimal HTTP/1.1 framing over `std::net` — just enough protocol for the
 //! inference server and its load generator: one request per connection
-//! (`Connection: close`), `Content-Length` bodies, no chunked encoding, no
-//! keep-alive.  No external crates, by construction.
+//! (`Connection: close`), `Content-Length` bodies, plus chunked
+//! transfer-encoding on the *response* side only (the streaming
+//! `/generate` endpoint emits one chunk per token).  No keep-alive.  No
+//! external crates, by construction.
 //!
 //! The request reader is hardened against hostile inputs: header lines,
 //! header counts and body sizes are all bounded, and the body buffer grows
@@ -213,6 +215,102 @@ pub fn write_response_with(
     Ok(())
 }
 
+/// Start a chunked (streaming) response: status line + headers, no body
+/// yet.  Follow with any number of [`write_chunk`] calls and one
+/// [`finish_chunked`].
+pub fn write_chunked_head(
+    stream: &TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+) -> Result<()> {
+    let mut s = stream;
+    write!(
+        s,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    s.flush()?;
+    Ok(())
+}
+
+/// Write one chunk and flush it — the flush is the point: each token of a
+/// streaming generation reaches the client as soon as it is decoded.
+/// Empty payloads are skipped (a zero-length chunk would terminate the
+/// stream).
+pub fn write_chunk(stream: &TcpStream, data: &[u8]) -> Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    let mut s = stream;
+    write!(s, "{:x}\r\n", data.len())?;
+    s.write_all(data)?;
+    s.write_all(b"\r\n")?;
+    s.flush()?;
+    Ok(())
+}
+
+/// Terminate a chunked response (the zero-length chunk, no trailers).
+pub fn finish_chunked(stream: &TcpStream) -> Result<()> {
+    let mut s = stream;
+    s.write_all(b"0\r\n\r\n")?;
+    s.flush()?;
+    Ok(())
+}
+
+/// Client side: read a chunked response; returns (status, chunks) with
+/// every chunk's payload kept separate — the streaming tests assert on
+/// chunk boundaries, not just the concatenated body.
+pub fn read_chunked_response(stream: &TcpStream) -> Result<(u16, Vec<Vec<u8>>)> {
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line).context("reading status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .context("malformed status line")?
+        .parse()
+        .context("non-numeric status")?;
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        let n = r.read_line(&mut h).context("reading response header")?;
+        ensure!(n > 0, "connection closed inside response headers");
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("transfer-encoding")
+                && v.trim().eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+    ensure!(chunked, "response is not chunked (status {status})");
+    let mut chunks = Vec::new();
+    let mut total = 0usize;
+    loop {
+        let mut size_line = String::new();
+        let n = r.read_line(&mut size_line).context("reading chunk size")?;
+        ensure!(n > 0, "connection closed before the terminal chunk");
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .with_context(|| format!("bad chunk size line {size_line:?}"))?;
+        total += size;
+        ensure!(total <= MAX_BODY, "chunked response exceeds {MAX_BODY} bytes");
+        let mut data = vec![0u8; size];
+        r.read_exact(&mut data).context("reading chunk payload")?;
+        let mut crlf = [0u8; 2];
+        r.read_exact(&mut crlf).context("reading chunk terminator")?;
+        ensure!(&crlf == b"\r\n", "chunk payload not CRLF-terminated");
+        if size == 0 {
+            return Ok((status, chunks));
+        }
+        chunks.push(data);
+    }
+}
+
 /// Client side: write one request.
 pub fn write_request(
     stream: &TcpStream,
@@ -272,6 +370,44 @@ mod tests {
         let (status, body) = read_response(&stream).unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, b"\x01\x02\x03");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_response_roundtrip_preserves_chunk_boundaries() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = read_request(&stream).unwrap();
+            write_chunked_head(&stream, 200, "OK", "application/json").unwrap();
+            write_chunk(&stream, b"{\"token\": 3}\n").unwrap();
+            write_chunk(&stream, b"").unwrap(); // skipped, not a terminator
+            write_chunk(&stream, b"{\"token\": 9}\n").unwrap();
+            finish_chunked(&stream).unwrap();
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        write_request(&stream, "POST", "/generate", b"{}").unwrap();
+        let (status, chunks) = read_chunked_response(&stream).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0], b"{\"token\": 3}\n");
+        assert_eq!(chunks[1], b"{\"token\": 9}\n");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn non_chunked_response_rejected_by_chunked_reader() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = read_request(&stream).unwrap();
+            write_response(&stream, 200, "OK", "text/plain", b"plain").unwrap();
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        write_request(&stream, "GET", "/", b"").unwrap();
+        assert!(read_chunked_response(&stream).is_err());
         server.join().unwrap();
     }
 

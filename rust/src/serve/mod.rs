@@ -18,9 +18,13 @@
 //!                        resp channels ──► handler writes 8-byte response
 //! ```
 //!
-//! Endpoints: `POST /infer` (binary example → 8-byte result), `GET /healthz`,
-//! `GET /stats` (JSON counters + per-exec call counts + latency
-//! percentiles), `POST /shutdown` (graceful drain).
+//! Endpoints: `POST /infer` (binary example → 8-byte result),
+//! `POST /generate` (JSON prompt → chunked stream, one JSON line per
+//! token — GPT bundles only; a dedicated scheduler thread batches the
+//! decode step across concurrent sessions by position, see [`genserve`]),
+//! `GET /healthz`, `GET /stats` (JSON counters + per-exec call counts +
+//! latency percentiles + generation gauges), `POST /shutdown` (graceful
+//! drain).
 //!
 //! Bit-exactness: per-example outputs are slot/neighbour-invariant in the
 //! native backend, so a response from a coalesced batch is bit-identical to
@@ -30,6 +34,7 @@
 pub mod batcher;
 pub mod bench;
 pub mod client;
+mod genserve;
 pub mod http;
 pub mod stats;
 pub mod wire;
@@ -107,6 +112,9 @@ struct Shared {
     /// Per-request observer ([`crate::api::events::EventSink`]); the
     /// default server uses a no-op sink, sessions pass theirs through.
     sink: Arc<dyn EventSink>,
+    /// Join point for the `/generate` scheduler thread (present even on
+    /// non-GPT bundles, where the endpoint answers `501` instead).
+    gen_queue: genserve::GenQueue,
 }
 
 /// A running server: worker pool + listener, shut down via [`Server::stop`]
@@ -175,8 +183,14 @@ impl Server {
         let listener = TcpListener::bind(("127.0.0.1", cfg.port))
             .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
         let addr = listener.local_addr()?;
-        let max_body =
-            wire::body_len(rt.manifest.family, &rt.manifest.dims).max(512);
+        // /infer bodies are the exact binary wire format; /generate bodies
+        // are JSON, so leave digits-and-commas headroom for a full-context
+        // prompt
+        let gen_body = 128 + 12 * rt.manifest.dims.seq;
+        let max_body = wire::body_len(rt.manifest.family, &rt.manifest.dims)
+            .max(512)
+            .max(gen_body);
+        let has_decode = rt.has_exec("model_decode_step");
         let shared = Arc::new(Shared {
             rt,
             params,
@@ -188,8 +202,17 @@ impl Server {
             batch_window: cfg.batch_window,
             max_body,
             sink,
+            gen_queue: genserve::GenQueue::new(),
         });
-        let mut threads = Vec::with_capacity(cfg.workers + 1);
+        let mut threads = Vec::with_capacity(cfg.workers + 2);
+        if has_decode {
+            let sh = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("bdia-genscheduler".into())
+                    .spawn(move || genserve::scheduler_loop(&sh))?,
+            );
+        }
         for wi in 0..cfg.workers {
             let sh = Arc::clone(&shared);
             threads.push(
@@ -262,6 +285,7 @@ fn initiate_shutdown(shared: &Shared) {
         return; // already shutting down
     }
     shared.queue.shutdown();
+    shared.gen_queue.shutdown();
     // poke the blocking accept() so the listener observes the flag
     let _ = TcpStream::connect(shared.addr);
 }
@@ -335,6 +359,9 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<Shared>) {
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/infer") => handle_infer(stream, shared, &req.body),
+        ("POST", "/generate") => {
+            genserve::handle_generate(stream, shared, &req.body)
+        }
         ("GET", "/healthz") => {
             let body = format!(
                 "{{\"status\": \"ok\", \"model\": \"{}\", \"backend\": \"{}\"}}",
