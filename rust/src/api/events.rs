@@ -25,6 +25,11 @@ pub struct StepEvent {
     pub grad_norm: f32,
     /// Wall time of this step in milliseconds.
     pub ms: f64,
+    /// Monotonic time since process start when the event fired,
+    /// microseconds ([`crate::obs::now_us`]) — one clock orders events
+    /// from every layer and thread, and it is non-decreasing within a
+    /// sink by construction.
+    pub elapsed_us: u64,
 }
 
 /// One evaluation pass over held-out batches.
@@ -37,6 +42,8 @@ pub struct EvalEvent {
     pub gamma: f32,
     pub loss: f32,
     pub acc: f32,
+    /// Monotonic time since process start, microseconds.
+    pub elapsed_us: u64,
 }
 
 /// One checkpoint written by the training loop or [`super::Session::save`].
@@ -51,6 +58,8 @@ pub struct CheckpointEvent {
 pub struct RequestEvent {
     /// End-to-end latency observed by the server handler, microseconds.
     pub latency_us: u64,
+    /// Monotonic time since process start, microseconds.
+    pub elapsed_us: u64,
     /// False when the request errored (bad body, engine failure).
     pub ok: bool,
 }
@@ -64,6 +73,8 @@ pub struct TokenEvent {
     pub token: i32,
     /// Wall time of the decode step that produced it, microseconds.
     pub latency_us: u64,
+    /// Monotonic time since process start, microseconds.
+    pub elapsed_us: u64,
 }
 
 /// Observer for training / evaluation / serving progress.  All methods
@@ -92,16 +103,25 @@ impl EventSink for StdoutSink {
     fn on_step(&self, e: &StepEvent) {
         if self.every > 0 && e.step % self.every == 0 {
             println!(
-                "step {:>6}  loss {:.4}  acc {:.3}  |g| {:.3e}  {:.0} ms",
-                e.step, e.loss, e.acc, e.grad_norm, e.ms
+                "[t+{:.1}s] step {:>6}  loss {:.4}  acc {:.3}  |g| {:.3e}  {:.0} ms",
+                e.elapsed_us as f64 / 1e6,
+                e.step,
+                e.loss,
+                e.acc,
+                e.grad_norm,
+                e.ms
             );
         }
     }
 
     fn on_eval(&self, e: &EvalEvent) {
         println!(
-            "eval @ step {:>4} (gamma {}): val_loss {:.4}  val_acc {:.3}",
-            e.step, e.gamma, e.loss, e.acc
+            "[t+{:.1}s] eval @ step {:>4} (gamma {}): val_loss {:.4}  val_acc {:.3}",
+            e.elapsed_us as f64 / 1e6,
+            e.step,
+            e.gamma,
+            e.loss,
+            e.acc
         );
     }
 
@@ -176,10 +196,18 @@ mod tests {
     #[test]
     fn collector_preserves_order_and_drains() {
         let c = Collector::new();
-        c.on_step(&StepEvent { step: 0, loss: 1.0, acc: 0.1, grad_norm: 0.5, ms: 1.0 });
-        c.on_eval(&EvalEvent { step: 1, gamma: 0.25, loss: 0.9, acc: 0.2 });
-        c.on_request(&RequestEvent { latency_us: 42, ok: true });
-        c.on_token(&TokenEvent { index: 0, token: 5, latency_us: 9 });
+        let step = StepEvent {
+            step: 0,
+            loss: 1.0,
+            acc: 0.1,
+            grad_norm: 0.5,
+            ms: 1.0,
+            elapsed_us: 1,
+        };
+        c.on_step(&step);
+        c.on_eval(&EvalEvent { step: 1, gamma: 0.25, loss: 0.9, acc: 0.2, elapsed_us: 2 });
+        c.on_request(&RequestEvent { latency_us: 42, elapsed_us: 3, ok: true });
+        c.on_token(&TokenEvent { index: 0, token: 5, latency_us: 9, elapsed_us: 4 });
         let evs = c.take();
         assert_eq!(evs.len(), 4);
         assert!(matches!(evs[0], Event::Step(s) if s.step == 0));
@@ -192,8 +220,16 @@ mod tests {
     #[test]
     fn sinks_are_object_safe_and_shareable() {
         let sink: std::sync::Arc<dyn EventSink> = std::sync::Arc::new(NullSink);
-        sink.on_step(&StepEvent { step: 0, loss: 0.0, acc: 0.0, grad_norm: 0.0, ms: 0.0 });
+        let step = StepEvent {
+            step: 0,
+            loss: 0.0,
+            acc: 0.0,
+            grad_norm: 0.0,
+            ms: 0.0,
+            elapsed_us: 0,
+        };
+        sink.on_step(&step);
         let c: std::sync::Arc<dyn EventSink> = std::sync::Arc::new(Collector::new());
-        c.on_request(&RequestEvent { latency_us: 1, ok: false });
+        c.on_request(&RequestEvent { latency_us: 1, elapsed_us: 1, ok: false });
     }
 }

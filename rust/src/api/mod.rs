@@ -21,8 +21,10 @@
 //!   ├─ checkpoint                                        (persistence)
 //!   ├─ serve::Server                                     (deployment)
 //!   ├─ fleet::Router (serve_fleet/FleetHandle)           (sharded serving)
-//!   └─ dist (ranks/rank/rendezvous builders,             (distribution)
-//!      attach_dist/connect_dist)
+//!   ├─ dist (ranks/rank/rendezvous builders,             (distribution)
+//!   │  attach_dist/connect_dist)
+//!   └─ obs (metrics registry, span tracing,              (observability)
+//!      /metrics + Chrome-trace export)
 //! ```
 //!
 //! The CLI (`main.rs`), the experiment drivers (`experiments/*`) and the
@@ -107,8 +109,9 @@ pub fn repro(id: &str, opts: &ExpOpts) -> ApiResult<()> {
 
 /// Run the per-family performance suite (`bdia bench`): Session-reported
 /// hot-path timings at 1 and N threads — plus a tuned-profile row per
-/// family and decode tokens/sec rows for GPT bundles — written to
-/// `BENCH_9.json`.
+/// family, decode tokens/sec rows for GPT bundles and an observability
+/// overhead block (step time with tracing off / metrics / full spans) —
+/// written to `BENCH_10.json`.
 ///
 /// Like [`repro`], failures surface as [`ApiError::Train`] with full
 /// context in the message.

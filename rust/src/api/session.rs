@@ -902,6 +902,7 @@ impl Session {
             gamma: opts.gamma,
             loss,
             acc,
+            elapsed_us: crate::obs::now_us(),
         });
         Ok(EvalReport {
             loss,
@@ -979,6 +980,7 @@ impl Session {
                     index,
                     token,
                     latency_us: (ms * 1e3) as u64,
+                    elapsed_us: crate::obs::now_us(),
                 };
                 sink.on_token(&e);
                 on_token(&e);
@@ -1213,7 +1215,7 @@ impl Session {
 
     /// Time the three hot paths (training forward, full train step, fused
     /// quantized inference) at the current kernel-pool thread count.
-    /// `bdia bench` aggregates these rows into `BENCH_9.json`.
+    /// `bdia bench` aggregates these rows into `BENCH_10.json`.
     pub fn bench(
         &mut self,
         budget: Duration,

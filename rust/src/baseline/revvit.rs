@@ -275,6 +275,7 @@ impl RevVitTrainer {
                 acc: stats.acc,
                 grad_norm: stats.grad_norm,
                 ms,
+                elapsed_us: crate::obs::now_us(),
             });
             let eval_due = self.cfg.eval_every > 0
                 && (step % self.cfg.eval_every == self.cfg.eval_every - 1
@@ -286,6 +287,7 @@ impl RevVitTrainer {
                     gamma: 0.0,
                     loss: l,
                     acc: a,
+                    elapsed_us: crate::obs::now_us(),
                 });
                 (Some(l), Some(a))
             } else {

@@ -3,7 +3,7 @@
 //! Warms up, runs timed iterations until a wall budget or count is hit, and
 //! reports mean / p50 / p95 like a criterion one-liner.  Bench binaries in
 //! `rust/benches/` use this and print one row per paper table they back.
-//! [`suite`] builds the `bdia bench` per-family report (BENCH_9.json) on
+//! [`suite`] builds the `bdia bench` per-family report (BENCH_10.json) on
 //! top of it, timing the hot paths through the `api::Session` facade.
 
 pub mod suite;

@@ -1,4 +1,4 @@
-//! `bdia bench`: the per-family performance suite behind BENCH_9.json.
+//! `bdia bench`: the per-family performance suite behind BENCH_10.json.
 //!
 //! Times the three hot paths — training forward (`fwd`), a full training
 //! step (`step` = forward + online backward + optimizer), and fused
@@ -20,19 +20,23 @@
 //! default-vs-tuned contrast per family.  Any legal profile is bit-exact
 //! by construction, so the tuned row differs in wall time only.
 //!
-//! Two more blocks track the rest of the scaling story:
+//! Three more blocks track the rest of the scaling story:
 //!
 //! * `dist` — per-family global-step wall time at world sizes 1 and 2
 //!   (full in-process ranks over loopback TCP, same `grad_accum`, so the
 //!   contrast isolates collective overhead vs compute split);
 //! * `memory` — the analytic Table-1 peak-training-memory per
 //!   family/mode ([`MemoryModel`]), so the perf trajectory tracks memory
-//!   alongside speed.
+//!   alongside speed;
+//! * `obs_overhead` — the same step measurement at the three
+//!   [`crate::obs`] tracing levels (off / metrics-only / full spans), the
+//!   evidence behind the "observability costs ≤1%" claim.  Levels change
+//!   wall time only; the bits are identical by construction.
 //!
 //! Every hot-path measurement goes through the [`Session`] facade
 //! ([`Session::bench`]), so the suite times exactly the path embedders and
 //! the CLI use.  The report prints as rows and lands in a JSON file
-//! (default `BENCH_9.json`) so successive PRs can track the trajectory.
+//! (default `BENCH_10.json`) so successive PRs can track the trajectory.
 
 use crate::api::{Session, SessionTimings, TuneOpts};
 use crate::config::{TrainConfig, TrainMode};
@@ -75,7 +79,7 @@ impl SuiteOpts {
                     "smoke_encdec".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_9.json"),
+                out: PathBuf::from("BENCH_10.json"),
                 quick,
                 budget: Duration::from_millis(250),
                 max_iters: 4,
@@ -89,7 +93,7 @@ impl SuiteOpts {
                     "encdec_mt".into(),
                 ],
                 threads: 0,
-                out: PathBuf::from("BENCH_9.json"),
+                out: PathBuf::from("BENCH_10.json"),
                 quick,
                 budget: Duration::from_millis(1500),
                 max_iters: 10,
@@ -127,6 +131,18 @@ pub struct MemoryRow {
     pub peak_bytes: usize,
 }
 
+/// Step time under each [`crate::obs`] tracing level (obs_overhead block).
+#[derive(Clone, Debug)]
+pub struct ObsOverheadRow {
+    pub bundle: String,
+    /// Tracing fully disabled (the baseline).
+    pub step_ms_off: f64,
+    /// Span durations feed histograms; no ring events.
+    pub step_ms_metrics: f64,
+    /// Full span events recorded for trace export.
+    pub step_ms_spans: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct SuiteReport {
     pub threads_baseline: usize,
@@ -141,6 +157,8 @@ pub struct SuiteReport {
     pub decode: Vec<DecodeTimings>,
     /// Analytic peak training memory per (bundle, mode).
     pub memory: Vec<MemoryRow>,
+    /// Step time at the three tracing levels, one row per bundle.
+    pub obs: Vec<ObsOverheadRow>,
 }
 
 impl SuiteReport {
@@ -149,6 +167,11 @@ impl SuiteReport {
             r.fwd_ms.is_finite() && r.step_ms.is_finite() && r.infer_ms.is_finite()
         }) && self.dist.iter().all(|d| d.step_ms.is_finite())
             && self.decode.iter().all(|d| d.tokens_per_s.is_finite())
+            && self.obs.iter().all(|o| {
+                o.step_ms_off.is_finite()
+                    && o.step_ms_metrics.is_finite()
+                    && o.step_ms_spans.is_finite()
+            })
     }
 
     /// step-time speedup of the parallel run over the 1-thread run
@@ -217,18 +240,31 @@ impl SuiteReport {
                 )
             })
             .collect();
+        let obs: Vec<String> = self
+            .obs
+            .iter()
+            .map(|o| {
+                format!(
+                    "    {{\"bundle\": \"{}\", \"step_ms_off\": {:.3}, \
+                     \"step_ms_metrics\": {:.3}, \"step_ms_spans\": {:.3}}}",
+                    o.bundle, o.step_ms_off, o.step_ms_metrics, o.step_ms_spans
+                )
+            })
+            .collect();
         format!(
-            "{{\n  \"bench\": \"BENCH_9\",\n  \"quick\": {},\n  \
+            "{{\n  \"bench\": \"BENCH_10\",\n  \"quick\": {},\n  \
              \"threads_baseline\": {},\n  \"threads_parallel\": {},\n  \
              \"results\": [\n{}\n  ],\n  \"dist\": [\n{}\n  ],\n  \
-             \"decode\": [\n{}\n  ],\n  \"memory\": [\n{}\n  ]\n}}\n",
+             \"decode\": [\n{}\n  ],\n  \"memory\": [\n{}\n  ],\n  \
+             \"obs_overhead\": [\n{}\n  ]\n}}\n",
             quick,
             self.threads_baseline,
             self.threads_parallel,
             rows.join(",\n"),
             dist.join(",\n"),
             decode.join(",\n"),
-            memory.join(",\n")
+            memory.join(",\n"),
+            obs.join(",\n")
         )
     }
 }
@@ -298,6 +334,7 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
     let mut dist = Vec::new();
     let mut decode = Vec::new();
     let mut memory = Vec::new();
+    let mut obs = Vec::new();
     let dist_steps = if opts.quick { 2 } else { 3 };
     for bundle in &opts.families {
         // one Session per bundle: the suite times the same facade path the
@@ -366,6 +403,23 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
         {
             memory.push(MemoryRow { bundle: bundle.clone(), mode, peak_bytes });
         }
+        // observability overhead: the same step timing at the three
+        // tracing levels.  Levels gate clock reads and ring pushes only —
+        // timestamps never enter compute — so only wall time may move.
+        let prev_level = crate::obs::level();
+        crate::obs::set_level(crate::obs::OFF);
+        let r_off = session.bench(opts.budget, opts.max_iters);
+        crate::obs::set_level(crate::obs::METRICS);
+        let r_metrics = session.bench(opts.budget, opts.max_iters);
+        crate::obs::set_level(crate::obs::SPANS);
+        let r_spans = session.bench(opts.budget, opts.max_iters);
+        crate::obs::set_level(prev_level);
+        obs.push(ObsOverheadRow {
+            bundle: bundle.clone(),
+            step_ms_off: r_off?.step_ms,
+            step_ms_metrics: r_metrics?.step_ms,
+            step_ms_spans: r_spans?.step_ms,
+        });
         // dist scaling: the same global step at world sizes 1 and 2
         let dataset = serve_bench::default_dataset(session.family());
         drop(session);
@@ -383,6 +437,7 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
         dist,
         decode,
         memory,
+        obs,
     };
     for bundle in &opts.families {
         if let Some(s) = report.step_speedup(bundle) {
@@ -449,6 +504,13 @@ pub fn run(opts: &SuiteOpts) -> Result<SuiteReport> {
                 t.profile, t.tokens_per_s
             );
         }
+        if let Some(o) = report.obs.iter().find(|o| o.bundle == *bundle) {
+            println!(
+                "{bundle}: obs overhead step {:.2} ms off, {:.2} ms \
+                 metrics, {:.2} ms full spans (identical bits)",
+                o.step_ms_off, o.step_ms_metrics, o.step_ms_spans
+            );
+        }
     }
     std::fs::write(&opts.out, report.to_json(opts.quick))
         .with_context(|| format!("writing {}", opts.out.display()))?;
@@ -465,12 +527,14 @@ mod tests {
         // run() installs/resets the process-wide kernel profile for the
         // tuned row: serialize with the other profile-state tests
         let _guard = crate::kernels::profile::test_lock();
+        // run() also toggles the global tracing level for the obs block
+        let _obs_guard = crate::obs::span::test_lock();
         let dir = std::env::temp_dir().join(format!(
             "bdia_bench_suite_{}",
             std::process::id()
         ));
         std::fs::create_dir_all(&dir).unwrap();
-        let out = dir.join("BENCH_9.json");
+        let out = dir.join("BENCH_10.json");
         let opts = SuiteOpts {
             families: vec!["smoke_gpt".into()],
             threads: 2,
@@ -523,11 +587,18 @@ mod tests {
         // memory block: one row per training mode
         assert_eq!(report.memory.len(), 4);
         assert!(report.memory.iter().all(|m| m.peak_bytes > 0));
+        // obs overhead block: one row per bundle, all three levels timed
+        assert_eq!(report.obs.len(), 1);
+        assert!(report.obs.iter().all(|o| {
+            o.step_ms_off > 0.0
+                && o.step_ms_metrics > 0.0
+                && o.step_ms_spans > 0.0
+        }));
         let text = std::fs::read_to_string(&out).unwrap();
         let parsed = crate::config::json::Json::parse(&text).unwrap();
         assert_eq!(
             parsed.get("bench").unwrap().as_str().unwrap(),
-            "BENCH_9"
+            "BENCH_10"
         );
         let results = parsed.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 3);
@@ -545,6 +616,12 @@ mod tests {
         let mem = parsed.get("memory").unwrap().as_arr().unwrap();
         assert_eq!(mem.len(), 4);
         assert!(mem[0].get("peak_bytes").unwrap().as_usize().unwrap() > 0);
+        let obs = parsed.get("obs_overhead").unwrap().as_arr().unwrap();
+        assert_eq!(obs.len(), 1);
+        assert_eq!(
+            obs[0].get("bundle").unwrap().as_str().unwrap(),
+            "smoke_gpt"
+        );
         assert!(report.step_speedup("smoke_gpt").is_some());
         std::fs::remove_dir_all(&dir).ok();
     }

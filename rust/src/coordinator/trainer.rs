@@ -144,6 +144,7 @@ impl Trainer {
     /// counter and the gamma RNG — so a resumed run is bit-identical to an
     /// uninterrupted one.
     pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let _span = crate::span!("checkpoint", step = self.step);
         let (state, spare) = self.rng_gamma.state();
         let (t, m, v) = self.opt.state();
         checkpoint::save(
@@ -316,6 +317,11 @@ impl Trainer {
                     .context("applying rank 0's broadcast training state")?;
             }
             d.coll.barrier()?;
+            // observability only: tag spans with this rank and estimate the
+            // hub-relative clock offset so `bdia trace` can merge per-rank
+            // trace files onto one timeline
+            crate::obs::set_rank(d.rank as u64);
+            d.coll.clock_sync().context("clock sync for trace merge")?;
         }
         self.dist = Some(d);
         Ok(())
@@ -450,6 +456,7 @@ impl Trainer {
     /// the stream forked by that index (encoder plan first, then the main
     /// plan, from the same stream).
     pub fn forward_micro(&mut self, batch: &Batch, micro: u64) -> Result<ForwardState> {
+        let _span = crate::span!("fwd", micro = micro);
         let quantized = self.cfg.mode == TrainMode::BdiaReversible;
         let mut stream = self.gamma_stream(micro);
         let mag = self.effective_gamma();
@@ -501,6 +508,7 @@ impl Trainer {
 
     /// Backward + gradient accumulation into `self.grads`.
     pub fn backward(&mut self, batch: &Batch, fs: ForwardState) -> Result<()> {
+        let _span = crate::span!("bwd", step = self.step);
         // head
         let (gx_last, dhead) = self.head_vjp(fs.main.output(), batch)?;
         accumulate_leaves(&mut self.grads, "head", 0, &dhead)?;
@@ -622,6 +630,8 @@ impl Trainer {
     }
 
     fn reduce_round(&mut self, fold: &mut [f32], contrib: &[f32]) -> Result<()> {
+        let _span =
+            crate::span!("all_reduce", step = self.step, rank = self.dist_shape().0);
         match self.dist.as_mut() {
             Some(d) => d.coll.reduce_sum_rank_ordered(fold, contrib),
             None => {
@@ -653,7 +663,10 @@ impl Trainer {
             None => self.grads.global_norm(),
         };
         ensure!(grad_norm.is_finite(), "gradient norm diverged at step {}", self.step);
-        self.opt.step(&mut self.params, &self.grads)?;
+        {
+            let _span = crate::span!("optimizer", step = self.step);
+            self.opt.step(&mut self.params, &self.grads)?;
+        }
         self.step += 1;
         Ok(StepStats { loss, acc, grad_norm, stored_activation_bytes: stored })
     }
@@ -702,7 +715,10 @@ impl Trainer {
         while self.step < steps {
             let step = self.step;
             let t0 = std::time::Instant::now();
-            let stats = self.train_step_global(data)?;
+            let stats = {
+                let _span = crate::span!("train_step", step = step);
+                self.train_step_global(data)?
+            };
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             sink.on_step(&StepEvent {
                 step,
@@ -710,6 +726,7 @@ impl Trainer {
                 acc: stats.acc,
                 grad_norm: stats.grad_norm,
                 ms,
+                elapsed_us: crate::obs::now_us(),
             });
             // evaluation and checkpointing are rank 0's job; workers keep
             // stepping (their next collective waits for rank 0 anyway)
@@ -724,6 +741,7 @@ impl Trainer {
                     gamma: 0.0,
                     loss: l,
                     acc: a,
+                    elapsed_us: crate::obs::now_us(),
                 });
                 (Some(l), Some(a))
             } else {

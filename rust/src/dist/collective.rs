@@ -220,6 +220,7 @@ impl Collective {
             acc.len(),
             contrib.len()
         );
+        let _span = crate::span!("dist_reduce", rank = self.rank, n = contrib.len());
         match &mut self.transport {
             Transport::Solo => {
                 for (a, c) in acc.iter_mut().zip(contrib) {
@@ -254,6 +255,7 @@ impl Collective {
     /// Rank 0's buffer overwrites everyone's, bit-for-bit (`f32` payloads
     /// travel as raw LE bytes, so `-0.0` / NaN payloads survive).
     pub fn broadcast(&mut self, buf: &mut [f32]) -> Result<()> {
+        let _span = crate::span!("dist_broadcast", rank = self.rank, n = buf.len());
         match &mut self.transport {
             Transport::Solo => Ok(()),
             Transport::Hub { peers } => {
@@ -302,6 +304,7 @@ impl Collective {
 
     /// Everyone waits until everyone has arrived.
     pub fn barrier(&mut self) -> Result<()> {
+        let _span = crate::span!("dist_barrier", rank = self.rank);
         match &mut self.transport {
             Transport::Solo => Ok(()),
             Transport::Hub { peers } => {
@@ -324,6 +327,48 @@ impl Collective {
                 let got = hub.recv_into(&mut self.frame, "barrier")?;
                 ensure!(got == op::BARRIER_ACK, "expected barrier ack, got op {got}");
                 ensure!(self.frame.is_empty(), "barrier ack carries no payload");
+                Ok(())
+            }
+        }
+    }
+
+    /// Estimate each worker's monotonic-clock offset relative to rank 0,
+    /// so per-rank Chrome traces merge onto one timeline (`bdia trace`).
+    /// NTP-style: the worker timestamps the send (`t0`) and receive
+    /// (`t1`) of a round trip that returns the hub's clock, assumes
+    /// symmetric latency, and stores `hub_now + rtt/2 - t1` in
+    /// [`crate::obs::set_clock_offset_us`].  Rank 0's offset is zero by
+    /// definition.  Timestamps never touch training state, so
+    /// bit-determinism is unaffected.
+    pub fn clock_sync(&mut self) -> Result<()> {
+        match &mut self.transport {
+            Transport::Solo => {
+                crate::obs::set_clock_offset_us(0);
+                Ok(())
+            }
+            Transport::Hub { peers } => {
+                crate::obs::set_clock_offset_us(0);
+                for i in 0..peers.len() {
+                    let got = peers[i].recv_into(&mut self.frame, "clock-sync")?;
+                    ensure!(got == op::CLOCK, "expected clock frame, got op {got}");
+                    let mut reply = Vec::with_capacity(8);
+                    transport::put_u64(&mut reply, crate::obs::now_us());
+                    peers[i].send(op::CLOCK, &reply, "clock-sync")?;
+                }
+                Ok(())
+            }
+            Transport::Worker { hub } => {
+                let t0 = crate::obs::now_us();
+                let mut ping = Vec::with_capacity(8);
+                transport::put_u64(&mut ping, t0);
+                hub.send(op::CLOCK, &ping, "clock-sync")?;
+                let got = hub.recv_into(&mut self.frame, "clock-sync")?;
+                ensure!(got == op::CLOCK, "expected clock frame, got op {got}");
+                let t1 = crate::obs::now_us();
+                let mut pos = 0;
+                let hub_now = transport::get_u64(&self.frame, &mut pos)?;
+                let offset = hub_now as i64 + ((t1 - t0) / 2) as i64 - t1 as i64;
+                crate::obs::set_clock_offset_us(offset);
                 Ok(())
             }
         }
@@ -397,6 +442,21 @@ mod tests {
         })
         .unwrap();
         assert_eq!(out, vec![vec![7, 8, 9], vec![7, 8, 9]]);
+    }
+
+    /// The CLOCK round trip completes at every rank and never perturbs
+    /// the collectives that follow it (it is pure observability).
+    #[test]
+    fn clock_sync_is_transparent_to_later_collectives() {
+        let out = run_local_world(&cfg(2), |_rank, mut role| {
+            role.coll.clock_sync()?;
+            let mut acc = vec![0f32];
+            role.coll.reduce_sum_rank_ordered(&mut acc, &[1.0])?;
+            role.coll.broadcast(&mut acc)?;
+            Ok(acc[0].to_bits())
+        })
+        .unwrap();
+        assert_eq!(out, vec![2.0f32.to_bits(); 2]);
     }
 
     #[test]

@@ -63,11 +63,16 @@ pub mod op {
     pub const FLEET_RESULT: u8 = 12;
     /// Clean shutdown notice, router → replica (the replica exits 0).
     pub const FLEET_GOODBYE: u8 = 13;
+    /// Clock-offset exchange for trace merging (`bdia trace`): a worker
+    /// sends its monotonic `now_us` and the hub echoes its own, letting
+    /// the worker estimate the hub-relative offset NTP-style.  Purely
+    /// observability — no training state ever flows through this frame.
+    pub const CLOCK: u8 = 14;
 }
 
 /// Handshake magic, shared by the rank protocol and the fleet backplane.
 pub(crate) const MAGIC: u32 = 0x4244_4941; // "BDIA"
-pub(crate) const PROTO_VERSION: u32 = 1;
+pub(crate) const PROTO_VERSION: u32 = 2;
 /// Upper bound on a single frame payload (grad buffers are ~4·n_params
 /// bytes; anything past this is a corrupt length prefix, not a model).
 const MAX_FRAME: usize = 1 << 30;

@@ -230,8 +230,16 @@ fn serve_loop(
                     // un-acked — the router must re-dispatch it
                     return Ok(());
                 }
-                let (batch_id, examples, gamma) = decode_infer(rt, &buf)?;
-                let per_ex = wire::infer_batch(rt, params, &examples, gamma)?;
+                let (batch_id, examples, gamma, ids) = decode_infer(rt, &buf)?;
+                let per_ex = {
+                    let _span = crate::span!(
+                        "replica_infer",
+                        batch_id = batch_id,
+                        n = examples.len(),
+                        request_id = ids.join(",")
+                    );
+                    wire::infer_batch(rt, params, &examples, gamma)?
+                };
                 let mut out = Vec::with_capacity(12 + per_ex.len() * 8 + 8);
                 put_u64(&mut out, batch_id);
                 put_u32(&mut out, per_ex.len() as u32);
@@ -249,10 +257,15 @@ fn serve_loop(
 }
 
 /// Parse + validate one `FLEET_INFER` payload: `batch_id, n, n ×
-/// wire-encoded examples` — every example must carry the same γ bits (the
-/// router's sticky batching is re-checked at the protocol boundary) and
-/// `n` must fit the manifest batch dimension.
-pub fn decode_infer(rt: &Runtime, payload: &[u8]) -> Result<(u64, Vec<wire::Example>, f32)> {
+/// wire-encoded examples, n × (len, request_id)` — every example must
+/// carry the same γ bits (the router's sticky batching is re-checked at
+/// the protocol boundary) and `n` must fit the manifest batch dimension.
+/// The trailing correlation ids let replica-side spans share the
+/// `request_id` the router's front door minted.
+pub fn decode_infer(
+    rt: &Runtime,
+    payload: &[u8],
+) -> Result<(u64, Vec<wire::Example>, f32, Vec<String>)> {
     let m = &rt.manifest;
     let chunk = wire::body_len(m.family, &m.dims);
     let mut pos = 0;
@@ -265,7 +278,7 @@ pub fn decode_infer(rt: &Runtime, payload: &[u8]) -> Result<(u64, Vec<wire::Exam
         m.dims.batch
     );
     ensure!(
-        payload.len() == 12 + n * chunk,
+        payload.len() >= 12 + n * chunk,
         "FLEET_INFER length mismatch: {n} examples of {chunk} bytes, got \
          {} payload bytes",
         payload.len()
@@ -287,7 +300,19 @@ pub fn decode_infer(rt: &Runtime, payload: &[u8]) -> Result<(u64, Vec<wire::Exam
         examples.push(ex);
     }
     let gamma = f32::from_bits(gamma_bits.unwrap());
-    Ok((batch_id, examples, gamma))
+    pos = 12 + n * chunk;
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = get_u32(payload, &mut pos)? as usize;
+        ensure!(
+            payload.len() >= pos + len,
+            "FLEET_INFER request id overruns the payload"
+        );
+        ids.push(String::from_utf8_lossy(&payload[pos..pos + len]).into_owned());
+        pos += len;
+    }
+    ensure!(pos == payload.len(), "FLEET_INFER has trailing bytes");
+    Ok((batch_id, examples, gamma, ids))
 }
 
 fn infer_calls(rt: &Runtime) -> u64 {

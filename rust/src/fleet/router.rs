@@ -33,9 +33,9 @@ use crate::model::ParamStore;
 use crate::runtime::{BackendKind, Runtime};
 use crate::serve::batcher::{BatchQueue, Job, PushOutcome};
 use crate::serve::stats::ServeStats;
-use crate::serve::{http, wire, write_503};
+use crate::serve::{error_body, http, wire, write_503};
 use super::registry::{Assignment, Registry, ReplicaEntry};
-use super::stats::{fleet_stats_json, RouterCounters};
+use super::stats::{fleet_metrics_text, fleet_stats_json, RouterCounters};
 use anyhow::{ensure, Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -184,12 +184,14 @@ impl Router {
 
         let max_body =
             wire::body_len(rt.manifest.family, &rt.manifest.dims).max(512);
+        let stats = ServeStats::new(LATENCY_RESERVOIR);
+        let counters = RouterCounters::new(stats.registry());
         let shared = Arc::new(FleetShared {
             rt,
             params_blob,
             queue: BatchQueue::bounded(cfg.queue_cap),
-            stats: ServeStats::new(LATENCY_RESERVOIR),
-            counters: RouterCounters::default(),
+            stats,
+            counters,
             registry: Registry::new(),
             shutdown: AtomicBool::new(false),
             addr,
@@ -484,12 +486,19 @@ fn process_assignment(
     assign: Assignment,
 ) -> bool {
     let Assignment { batch_id, jobs } = assign;
+    let _span = crate::span!("fleet_dispatch", batch_id = batch_id, n = jobs.len());
     let gamma = jobs[0].gamma;
     let mut payload = Vec::with_capacity(12 + jobs.len() * shared.max_body);
     put_u64(&mut payload, batch_id);
     put_u32(&mut payload, jobs.len() as u32);
     for j in &jobs {
         payload.extend_from_slice(&wire::encode(&j.example, gamma));
+    }
+    // correlation ids ride the frame so replica spans share the request_id
+    // a client saw in its `X-Request-Id` response header
+    for j in &jobs {
+        put_u32(&mut payload, j.request_id.len() as u32);
+        payload.extend_from_slice(j.request_id.as_bytes());
     }
     let t0 = Instant::now();
     if let Err(e) = link.send(op::FLEET_INFER, &payload, "fleet infer") {
@@ -560,7 +569,7 @@ fn parse_result(
 
 fn evict(shared: &Arc<FleetShared>, entry: &Arc<ReplicaEntry>, reason: &str) {
     if shared.registry.evict(entry, reason) {
-        shared.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        shared.counters.evictions.inc();
         eprintln!(
             "fleet: evicted replica {} ({}): {reason}",
             entry.id, entry.peer
@@ -575,7 +584,7 @@ fn requeue(shared: &Arc<FleetShared>, entry: &Arc<ReplicaEntry>, jobs: Vec<Job>)
     let n = jobs.len();
     entry.outstanding.fetch_sub(n, Ordering::SeqCst);
     entry.stats.redispatched.fetch_add(n as u64, Ordering::Relaxed);
-    shared.counters.redispatched.fetch_add(n as u64, Ordering::Relaxed);
+    shared.counters.redispatched.add(n as u64);
     shared.queue.push_front_all(jobs);
 }
 
@@ -622,29 +631,37 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<FleetShared>) {
     let req = match http::read_request_capped(stream, shared.max_body) {
         Ok(r) => r,
         Err(e) => {
-            let _ = http::write_response(
+            let rid = crate::obs::fresh_request_id();
+            let _ = http::write_response_with(
                 stream,
                 e.status,
                 e.reason,
-                "text/plain",
-                format!("{e}\n").as_bytes(),
+                "application/json",
+                &[("X-Request-Id", rid.clone())],
+                error_body(&e.to_string(), &rid).as_bytes(),
             );
             return;
         }
     };
+    let rid = req.request_id.clone().unwrap_or_else(crate::obs::fresh_request_id);
     match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/infer") => handle_infer(stream, shared, &req.body),
+        ("POST", "/infer") => handle_infer(stream, shared, &req.body, &rid),
         ("POST", "/generate") => {
             // decode batching is per-position state the router does not
             // shard yet; answer with a clear contract instead of a
             // connection-level failure
-            let _ = http::write_response(
+            let body = format!(
+                "{{\"error\": \"generation is single-process in this PR; \
+                 use `bdia serve` without `--replicas`\", \"request_id\": \
+                 \"{rid}\"}}\n"
+            );
+            let _ = http::write_response_with(
                 stream,
                 501,
                 "Not Implemented",
                 "application/json",
-                b"{\"error\": \"generation is single-process in this PR; \
-                   use `bdia serve` without `--replicas`\"}\n",
+                &[("X-Request-Id", rid.clone())],
+                body.as_bytes(),
             );
         }
         ("GET", "/healthz") => {
@@ -681,6 +698,20 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<FleetShared>) {
                 body.as_bytes(),
             );
         }
+        ("GET", "/metrics") => {
+            let body = fleet_metrics_text(
+                &shared.stats,
+                &shared.rt.call_counts(),
+                &shared.registry.entries(),
+            );
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                body.as_bytes(),
+            );
+        }
         ("POST", "/shutdown") => {
             let _ = http::write_response(
                 stream,
@@ -703,8 +734,14 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<FleetShared>) {
     }
 }
 
-fn handle_infer(stream: &TcpStream, shared: &Arc<FleetShared>, body: &[u8]) {
+fn handle_infer(
+    stream: &TcpStream,
+    shared: &Arc<FleetShared>,
+    body: &[u8],
+    rid: &str,
+) {
     let t0 = Instant::now();
+    let _span = crate::span!("fleet_request", request_id = rid);
     let m = &shared.rt.manifest;
     let (example, gamma) = match wire::decode(m.family, &m.dims, body) {
         Ok(v) => v,
@@ -712,14 +749,16 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<FleetShared>, body: &[u8]) {
             shared.stats.record_error();
             shared.sink.on_request(&RequestEvent {
                 latency_us: t0.elapsed().as_micros() as u64,
+                elapsed_us: crate::obs::now_us(),
                 ok: false,
             });
-            let _ = http::write_response(
+            let _ = http::write_response_with(
                 stream,
                 400,
                 "Bad Request",
-                "text/plain",
-                format!("{e:#}\n").as_bytes(),
+                "application/json",
+                &[("X-Request-Id", rid.to_string())],
+                error_body(&format!("{e:#}"), rid).as_bytes(),
             );
             return;
         }
@@ -730,23 +769,26 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<FleetShared>, body: &[u8]) {
         gamma,
         enqueued: t0,
         resp: tx,
+        request_id: rid.to_string(),
     });
     match outcome {
         PushOutcome::Accepted => {}
         PushOutcome::Saturated { depth, cap } => {
-            shared.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+            shared.counters.rejected_503.inc();
             shared.stats.record_error();
             shared.sink.on_request(&RequestEvent {
                 latency_us: t0.elapsed().as_micros() as u64,
+                elapsed_us: crate::obs::now_us(),
                 ok: false,
             });
-            let _ = write_503(stream, "queue full", depth, Some(cap));
+            let _ = write_503(stream, "queue full", depth, Some(cap), rid);
             return;
         }
         PushOutcome::ShuttingDown => {
-            shared.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+            shared.counters.rejected_503.inc();
             shared.sink.on_request(&RequestEvent {
                 latency_us: t0.elapsed().as_micros() as u64,
+                elapsed_us: crate::obs::now_us(),
                 ok: false,
             });
             let _ = write_503(
@@ -754,6 +796,7 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<FleetShared>, body: &[u8]) {
                 "server is shutting down",
                 shared.queue.len(),
                 shared.queue.cap(),
+                rid,
             );
             return;
         }
@@ -765,6 +808,7 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<FleetShared>, body: &[u8]) {
     let latency_us = t0.elapsed().as_micros() as u64;
     shared.sink.on_request(&RequestEvent {
         latency_us,
+        elapsed_us: crate::obs::now_us(),
         ok: matches!(outcome, Ok(Ok(_))),
     });
     match outcome {
@@ -774,32 +818,35 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<FleetShared>, body: &[u8]) {
             out[4..].copy_from_slice(&correct.to_le_bytes());
             shared.stats.record_request();
             shared.stats.record_latency_us(latency_us);
-            let _ = http::write_response(
+            let _ = http::write_response_with(
                 stream,
                 200,
                 "OK",
                 "application/octet-stream",
+                &[("X-Request-Id", rid.to_string())],
                 &out,
             );
         }
         Ok(Err(msg)) => {
             shared.stats.record_error();
-            let _ = http::write_response(
+            let _ = http::write_response_with(
                 stream,
                 500,
                 "Internal Server Error",
-                "text/plain",
-                format!("{msg}\n").as_bytes(),
+                "application/json",
+                &[("X-Request-Id", rid.to_string())],
+                error_body(&msg, rid).as_bytes(),
             );
         }
         Err(_) => {
             shared.stats.record_error();
-            shared.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+            shared.counters.rejected_503.inc();
             let _ = write_503(
                 stream,
                 "no replica answered in time",
                 shared.queue.len(),
                 shared.queue.cap(),
+                rid,
             );
         }
     }

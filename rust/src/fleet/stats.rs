@@ -5,8 +5,10 @@
 //! `batches` totals are *computed as* the sum over the per-replica
 //! breakdown, so the merged view can never disagree with its parts.
 
+use crate::obs::Counter;
 use crate::serve::stats::{percentile_us, LatencySummary, ServeStats};
 use super::registry::{Health, ReplicaEntry};
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -94,14 +96,24 @@ fn fmt_rtt(samples: &mut [u64]) -> String {
 }
 
 /// Counters the router itself owns (not attributable to one replica).
-#[derive(Default)]
+/// Registered in the router's [`crate::obs::Registry`] so they surface on
+/// the fleet `GET /metrics` exposition alongside the admission counters.
 pub struct RouterCounters {
     /// Requests bounced with `503` (saturation or shutdown).
-    pub rejected_503: AtomicU64,
+    pub rejected_503: Counter,
     /// Requests re-queued after their replica died un-acked.
-    pub redispatched: AtomicU64,
+    pub redispatched: Counter,
     /// Replicas evicted since start.
-    pub evictions: AtomicU64,
+    pub evictions: Counter,
+}
+
+impl RouterCounters {
+    pub fn new(registry: &crate::obs::Registry) -> Self {
+        let rejected_503 = registry.counter("bdia_router_rejected_503_total", "503 rejections");
+        let redispatched = registry.counter("bdia_router_redispatched_total", "un-acked requeues");
+        let evictions = registry.counter("bdia_router_evictions_total", "replicas evicted");
+        RouterCounters { rejected_503, redispatched, evictions }
+    }
 }
 
 /// Render the fleet `/stats` document.  `router` carries the end-to-end
@@ -165,9 +177,9 @@ pub fn fleet_stats_json(
          \"replicas\": {{\"live\": {live}, \"evicted\": {}, \
          \"per_replica\": [{}]}}}}",
         router.errors(),
-        counters.rejected_503.load(Ordering::Relaxed),
-        counters.redispatched.load(Ordering::Relaxed),
-        counters.evictions.load(Ordering::Relaxed),
+        counters.rejected_503.get(),
+        counters.redispatched.get(),
+        counters.evictions.get(),
         queue_cap.unwrap_or(0),
         router.uptime_s(),
         router.requests_per_sec(),
@@ -177,6 +189,41 @@ pub fn fleet_stats_json(
         entries.len() - live,
         rows.join(", ")
     )
+}
+
+/// Render the fleet `GET /metrics` exposition: the router's own registry
+/// (admission counters, client-observed latency, router counters, the
+/// process-wide registry) plus labeled per-replica request/batch families
+/// and a live-replica gauge.
+pub fn fleet_metrics_text(
+    router: &ServeStats,
+    exec_calls: &[(String, u64)],
+    entries: &[std::sync::Arc<ReplicaEntry>],
+) -> String {
+    let mut out = router.metrics_text(exec_calls);
+    let mut live = 0u64;
+    let mut reqs = String::new();
+    let mut batches = String::new();
+    for e in entries {
+        if matches!(e.health(), Health::Live) {
+            live += 1;
+        }
+        let id = e.id;
+        let r = e.stats.requests.load(Ordering::Relaxed);
+        let b = e.stats.batches.load(Ordering::Relaxed);
+        let _ = writeln!(reqs, "bdia_replica_requests_total{{replica=\"{id}\"}} {r}");
+        let _ = writeln!(batches, "bdia_replica_batches_total{{replica=\"{id}\"}} {b}");
+    }
+    out.push_str("# HELP bdia_replica_requests_total requests answered per replica\n");
+    out.push_str("# TYPE bdia_replica_requests_total counter\n");
+    out.push_str(&reqs);
+    out.push_str("# HELP bdia_replica_batches_total batches answered per replica\n");
+    out.push_str("# TYPE bdia_replica_batches_total counter\n");
+    out.push_str(&batches);
+    out.push_str("# HELP bdia_replicas_live replicas currently live\n");
+    out.push_str("# TYPE bdia_replicas_live gauge\n");
+    let _ = writeln!(out, "bdia_replicas_live {live}");
+    out
 }
 
 #[cfg(test)]
@@ -212,8 +259,8 @@ mod tests {
         b.stats.batches.store(3, Ordering::Relaxed);
         reg.evict(&b, "test \"eviction\"");
         let router = ServeStats::new(8);
-        let counters = RouterCounters::default();
-        counters.rejected_503.store(4, Ordering::Relaxed);
+        let counters = RouterCounters::new(router.registry());
+        counters.rejected_503.add(4);
         let j = fleet_stats_json(&router, &counters, &reg.entries(), 1, Some(64));
         let parsed = Json::parse(&j).expect("valid json");
         assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 8);
@@ -240,5 +287,23 @@ mod tests {
         assert!(
             (parsed.get("mean_batch").unwrap().as_f64().unwrap() - 1.6).abs() < 1e-9
         );
+    }
+
+    #[test]
+    fn fleet_metrics_exposition_passes_the_checker() {
+        let reg = Registry::new();
+        let (tx, _rx) = mpsc::channel::<Assignment>();
+        let a = reg.admit("a".into(), tx);
+        a.stats.requests.store(5, Ordering::Relaxed);
+        a.stats.batches.store(2, Ordering::Relaxed);
+        let router = ServeStats::new(8);
+        let counters = RouterCounters::new(router.registry());
+        counters.evictions.inc();
+        let execs = [("model_infer_ex".to_string(), 2u64)];
+        let text = fleet_metrics_text(&router, &execs, &reg.entries());
+        crate::obs::prom::check(&text).expect("valid exposition");
+        assert!(text.contains("bdia_router_evictions_total 1"), "{text}");
+        assert!(text.contains("bdia_replica_requests_total{replica="), "{text}");
+        assert!(text.contains("bdia_replicas_live 1"), "{text}");
     }
 }

@@ -400,6 +400,7 @@ pub fn decode_tick(
     sessions: &mut [&mut GenSession],
 ) -> Result<Vec<Option<i32>>> {
     ensure!(!sessions.is_empty(), "decode_tick needs at least one session");
+    let _span = crate::span!("decode_tick", n = sessions.len(), pos = sessions[0].pos);
     let e = rt.exec("model_decode_step")?;
     let dims = &rt.manifest.dims;
     let (nb, batch, t_max, d) = (dims.n_blocks, dims.batch, dims.seq, dims.d_model);

@@ -21,9 +21,11 @@
 //! at once; the optimizer step, parameter (re)initialization and
 //! checkpoint-restore paths in-tree all do.
 
+use crate::obs::Counter;
 use std::cell::RefCell;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 /// Per-thread free-list bound — beyond this, [`give`] lets buffers drop.
 const MAX_CACHED: usize = 48;
@@ -39,10 +41,27 @@ thread_local! {
     static KEYED: RefCell<Vec<KeyedEntry>> = const { RefCell::new(Vec::new()) };
 }
 
-static HITS: AtomicU64 = AtomicU64::new(0);
-static MISSES: AtomicU64 = AtomicU64::new(0);
-static KEYED_HITS: AtomicU64 = AtomicU64::new(0);
-static KEYED_BUILDS: AtomicU64 = AtomicU64::new(0);
+/// Arena counters, registered in the process-wide metric registry so the
+/// same cells feed [`stats`], `/stats` and the `/metrics` exposition.
+struct ArenaCounters {
+    hits: Counter,
+    misses: Counter,
+    keyed_hits: Counter,
+    keyed_builds: Counter,
+}
+
+fn counters() -> &'static ArenaCounters {
+    static CELL: OnceLock<ArenaCounters> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let reg = crate::obs::metrics::global();
+        ArenaCounters {
+            hits: reg.counter("bdia_workspace_hits_total", "arena take() recycles"),
+            misses: reg.counter("bdia_workspace_misses_total", "arena take() allocations"),
+            keyed_hits: reg.counter("bdia_workspace_keyed_hits_total", "keyed-cache hits"),
+            keyed_builds: reg.counter("bdia_workspace_keyed_builds_total", "keyed-cache builds"),
+        }
+    })
+}
 
 /// Bumped whenever long-lived weight buffers may have been mutated,
 /// dropped or replaced; stale keyed entries can then never match.
@@ -85,7 +104,7 @@ pub fn take_keyed(
         if let Some(e) =
             cache.iter().find(|e| e.key == key && e.buf.len() == out_len)
         {
-            KEYED_HITS.fetch_add(1, Ordering::Relaxed);
+            counters().keyed_hits.inc();
             return Rc::clone(&e.buf);
         }
         let mut v = vec![0.0f32; out_len];
@@ -97,7 +116,7 @@ pub fn take_keyed(
             cache.remove(0);
         }
         cache.push(KeyedEntry { key, buf: Rc::clone(&buf) });
-        KEYED_BUILDS.fetch_add(1, Ordering::Relaxed);
+        counters().keyed_builds.inc();
         buf
     })
 }
@@ -119,13 +138,13 @@ pub fn take(len: usize) -> Vec<f32> {
     });
     match reused {
         Some(mut v) => {
-            HITS.fetch_add(1, Ordering::Relaxed);
+            counters().hits.inc();
             v.clear();
             v.resize(len, 0.0);
             v
         }
         None => {
-            MISSES.fetch_add(1, Ordering::Relaxed);
+            counters().misses.inc();
             vec![0.0f32; len]
         }
     }
@@ -158,11 +177,12 @@ pub struct WorkspaceStats {
 }
 
 pub fn stats() -> WorkspaceStats {
+    let c = counters();
     WorkspaceStats {
-        hits: HITS.load(Ordering::Relaxed),
-        misses: MISSES.load(Ordering::Relaxed),
-        keyed_hits: KEYED_HITS.load(Ordering::Relaxed),
-        keyed_builds: KEYED_BUILDS.load(Ordering::Relaxed),
+        hits: c.hits.get(),
+        misses: c.misses.get(),
+        keyed_hits: c.keyed_hits.get(),
+        keyed_builds: c.keyed_builds.get(),
     }
 }
 

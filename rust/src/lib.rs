@@ -39,6 +39,12 @@
 //!   micro-batches over N full model replicas (weights pushed at
 //!   handshake), with heartbeat eviction, un-acked batch re-dispatch,
 //!   bounded admission and a merged fleet `/stats` view
+//! - [`obs`]: observability substrate — lock-light metric registry
+//!   (counters/gauges/power-of-two histograms) behind `/stats` and the
+//!   Prometheus `/metrics` endpoints, `obs::span!` tracing with Chrome
+//!   trace export and cross-rank timeline merge (`bdia trace`), and
+//!   request-id correlation through serve and fleet; non-interfering by
+//!   construction (timestamps never enter compute)
 pub mod api;
 pub mod config;
 pub mod tensor;
@@ -58,6 +64,7 @@ pub mod generate;
 pub mod serve;
 pub mod dist;
 pub mod fleet;
+pub mod obs;
 
 // Compile-check the README's Rust examples (the "Library use" section) as
 // doctests, so the documented API surface cannot rot.

@@ -18,17 +18,24 @@
 //!             [--workers N] [--addr host:port] [--ckpt path]
 //!             [--replicas N]
 //! bdia bench  [--families vit_s10,gpt_tiny,encdec_mt] [--threads N]
-//!             [--quick] [--out BENCH_9.json] [--tune-profile p.json]
+//!             [--quick] [--out BENCH_10.json] [--tune-profile p.json]
 //! bdia tune   --model vit_s10 [--threads N] [--quick]
 //!             [--out profile.json] [key=value ...]
 //! bdia repro  <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all>
 //!             [--steps N] [--seeds 0,1,2] [--quick]
 //! bdia info   --model vit_s10       # bundle inventory + call counts
+//! bdia trace  [--out merged.json] [--require fwd,bwd,...] <rank traces>
+//! bdia metrics-check [file]         # validate a /metrics exposition
 //! ```
 //!
 //! `train`, `eval`, `serve`, `bench-serve`, `bench` and `info` all accept
 //! `--tune-profile <json>` to run under a persisted kernel profile from
 //! `bdia tune` (bit-identical results, different wall time).
+//!
+//! `train`, `serve` and `generate` accept `--trace-out <file>` to record
+//! spans and export Chrome trace-event JSON on exit (one file per rank
+//! under `--ranks`; align them with `bdia trace`).  Tracing never touches
+//! compute — results are bit-identical with it on or off.
 //!
 //! Every subcommand is a thin client of `bdia::api::Session` — the CLI
 //! owns flag parsing and printing, nothing else.  Flags accept both
@@ -93,6 +100,7 @@ const TRAIN_FLAGS: &[Flag] = &[
     v("dist-timeout-s"),
     v("on-rank-failure"),
     v("tune-profile"),
+    v("trace-out"),
 ];
 const EVAL_FLAGS: &[Flag] = &[
     v("config"),
@@ -119,6 +127,7 @@ const SERVE_FLAGS: &[Flag] = &[
     v("rendezvous"),
     v("fleet-timeout-s"),
     v("tune-profile"),
+    v("trace-out"),
 ];
 const BENCH_SERVE_FLAGS: &[Flag] = &[
     v("model"),
@@ -174,7 +183,10 @@ const GENERATE_FLAGS: &[Flag] = &[
     v("top-k"),
     v("seed"),
     v("eos"),
+    v("trace-out"),
 ];
+const TRACE_FLAGS: &[Flag] = &[v("out"), v("require")];
+const METRICS_CHECK_FLAGS: &[Flag] = &[];
 
 struct Parsed {
     flags: BTreeMap<String, String>,
@@ -330,6 +342,15 @@ fn run() -> Result<()> {
             cmd_repro(&parsed("repro", args, REPRO_FLAGS, Extras::Positionals)?)
         }
         "info" => cmd_info(&parsed("info", args, INFO_FLAGS, Extras::None)?),
+        "trace" => {
+            cmd_trace(&parsed("trace", args, TRACE_FLAGS, Extras::Positionals)?)
+        }
+        "metrics-check" => cmd_metrics_check(&parsed(
+            "metrics-check",
+            args,
+            METRICS_CHECK_FLAGS,
+            Extras::Positionals,
+        )?),
         "help" => {
             print_help();
             Ok(())
@@ -345,6 +366,8 @@ fn run() -> Result<()> {
                 "tune",
                 "repro",
                 "info",
+                "trace",
+                "metrics-check",
             ];
             match suggest(other, known) {
                 Some(s) => bail!("unknown command '{other}' (did you mean '{s}'?)"),
@@ -397,7 +420,38 @@ fn builder_from(p: &Parsed) -> Result<SessionBuilder> {
     Ok(b)
 }
 
+/// `--trace-out`: enable full span tracing for the process lifetime and
+/// return the export path.  Tracing never feeds timestamps into compute,
+/// so the run's bytes are identical with or without this flag.
+fn trace_out(p: &Parsed) -> Option<PathBuf> {
+    let path = p.flags.get("trace-out").map(PathBuf::from)?;
+    bdia::obs::set_level(bdia::obs::SPANS);
+    Some(path)
+}
+
+/// Export the span ring as Chrome trace-event JSON, if requested.
+fn export_trace(path: Option<&Path>) -> Result<()> {
+    if let Some(path) = path {
+        bdia::obs::export_chrome_trace(path)?;
+        println!("trace written to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Per-rank trace file name: `trace.json` stays as-is in a 1-rank world
+/// and becomes `trace.rank<k>.json` when several ranks export side by
+/// side (feed the set to `bdia trace` to align them on rank 0's clock).
+fn rank_trace_path(base: &Path, world: usize, rank: usize) -> PathBuf {
+    if world <= 1 {
+        return base.to_path_buf();
+    }
+    let s = base.to_string_lossy();
+    let stem = s.strip_suffix(".json").unwrap_or(&s);
+    PathBuf::from(format!("{stem}.rank{rank}.json"))
+}
+
 fn cmd_train(p: &Parsed) -> Result<()> {
+    let trace = trace_out(p);
     let rank_flag = flag_val::<usize>(&p.flags, "rank")?;
     let my_rank = rank_flag.unwrap_or(0);
     let sink: Arc<dyn bdia::api::EventSink> = if my_rank == 0 {
@@ -568,6 +622,16 @@ fn cmd_train(p: &Parsed) -> Result<()> {
             println!("log written to {}", csv.display());
         }
     }
+    if let Some(base) = &trace {
+        let path = rank_trace_path(base, world, my_rank);
+        bdia::obs::export_chrome_trace(&path)?;
+        if my_rank == 0 {
+            println!(
+                "trace written to {} (align ranks with `bdia trace`)",
+                path.display()
+            );
+        }
+    }
     children.reap()?;
     Ok(())
 }
@@ -629,6 +693,7 @@ fn cmd_eval(p: &Parsed) -> Result<()> {
 /// `/generate` endpoint batches).
 fn cmd_generate(p: &Parsed) -> Result<()> {
     use std::io::Write;
+    let trace = trace_out(p);
     let session = builder_from(p)?.build()?;
     warn_if_untrained(&session, "generating with");
     let prompt: Vec<i32> = match p.flags.get("prompt") {
@@ -666,15 +731,18 @@ fn cmd_generate(p: &Parsed) -> Result<()> {
         report.tokens_per_s(),
         report.stop.name()
     );
-    Ok(())
+    export_trace(trace.as_deref())
 }
 
 fn cmd_serve(p: &Parsed) -> Result<()> {
+    let trace = trace_out(p);
     if p.flags.contains_key("replica") {
-        return cmd_serve_replica(p);
+        cmd_serve_replica(p)?;
+        return export_trace(trace.as_deref());
     }
     if let Some(n) = flag_val::<usize>(&p.flags, "replicas")? {
-        return cmd_serve_fleet(p, n);
+        cmd_serve_fleet(p, n)?;
+        return export_trace(trace.as_deref());
     }
     if !p.flags.contains_key("ckpt") {
         eprintln!(
@@ -701,13 +769,13 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     );
     println!(
         "endpoints: POST /infer  POST /generate (GPT, chunked streaming)  \
-         GET /healthz  GET /stats  POST /shutdown"
+         GET /healthz  GET /stats  GET /metrics  POST /shutdown"
     );
     // the server owns its own runtime + a param clone; free the session's
     // training state (grads, optimizer moments) for the serve lifetime
     drop(session);
     handle.join()?;
-    Ok(())
+    export_trace(trace.as_deref())
 }
 
 /// Eviction deadline / heartbeat base for the fleet backplane.
@@ -813,7 +881,10 @@ fn cmd_serve_fleet(p: &Parsed, n: usize) -> Result<()> {
         opts.batch_window,
         opts.queue_cap
     );
-    println!("endpoints: POST /infer  GET /healthz  GET /stats  POST /shutdown");
+    println!(
+        "endpoints: POST /infer  GET /healthz  GET /stats  GET /metrics  \
+         POST /shutdown"
+    );
     drop(session);
     handle.join()?;
     reap_replicas(&mut children);
@@ -1057,6 +1128,64 @@ fn cmd_info(p: &Parsed) -> Result<()> {
     Ok(())
 }
 
+/// `bdia trace`: merge per-rank `--trace-out` files onto rank 0's clock
+/// (using each file's recorded clock offset) and optionally gate on
+/// required span names — the CI check for "every rank traced every
+/// phase".
+fn cmd_trace(p: &Parsed) -> Result<()> {
+    ensure!(
+        !p.rest.is_empty(),
+        "usage: bdia trace [--out merged.json] [--require fwd,bwd] \
+         <trace.rank0.json> <trace.rank1.json> ..."
+    );
+    let mut texts = Vec::with_capacity(p.rest.len());
+    for path in &p.rest {
+        texts.push(
+            std::fs::read_to_string(path)
+                .with_context(|| format!("reading trace file {path}"))?,
+        );
+    }
+    let merged = bdia::obs::trace::merge(&texts)?;
+    if let Some(req) = p.flags.get("require") {
+        let required: Vec<String> =
+            req.split(',').map(|s| s.trim().to_string()).collect();
+        bdia::obs::trace::require_spans(&merged, &required)?;
+        println!(
+            "required spans present on every rank: {}",
+            required.join(", ")
+        );
+    }
+    let out = p.flags.get("out").map_or("trace.merged.json", String::as_str);
+    std::fs::write(out, &merged).with_context(|| format!("writing {out}"))?;
+    println!("merged {} trace file(s) into {out}", p.rest.len());
+    Ok(())
+}
+
+/// `bdia metrics-check`: validate a Prometheus text exposition (a file,
+/// or stdin when no path is given) with the in-repo checker — no scraper
+/// is available offline, so this is what CI points `curl /metrics` at.
+fn cmd_metrics_check(p: &Parsed) -> Result<()> {
+    ensure!(
+        p.rest.len() <= 1,
+        "metrics-check takes at most one exposition file"
+    );
+    let text = match p.rest.first() {
+        Some(path) => std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?,
+        None => {
+            use std::io::Read as _;
+            let mut s = String::new();
+            std::io::stdin()
+                .read_to_string(&mut s)
+                .context("reading exposition from stdin")?;
+            s
+        }
+    };
+    let e = bdia::obs::prom::check(&text)?;
+    println!("exposition OK: {} families, {} samples", e.families, e.samples);
+    Ok(())
+}
+
 fn print_help() {
     let models = ModelId::known_names().join(", ");
     println!(
@@ -1080,12 +1209,15 @@ fn print_help() {
          [--workers N] [--gamma g] [--addr host:port] [--ckpt <file>] \
          [--replicas N] [--no-verify]\n  \
          bdia bench [--families a,b,c] [--threads N] [--quick] \
-         [--out BENCH_9.json] [--tune-profile p.json]\n  \
+         [--out BENCH_10.json] [--tune-profile p.json]\n  \
          bdia tune  --model <bundle> [--threads N] [--quick] \
          [--out profile.json] [key=value ...]\n  \
          bdia repro <fig1|fig2|fig3|table1|table2|fig4|fig5|exact|all> \
          [--quick] [--steps N] [--seeds 0,1]\n  \
-         bdia info  --model <bundle> [--backend native|pjrt]\n\n\
+         bdia info  --model <bundle> [--backend native|pjrt]\n  \
+         bdia trace [--out merged.json] [--require fwd,bwd,...] \
+         <trace.rank0.json> <trace.rank1.json> ...\n  \
+         bdia metrics-check [exposition.txt]\n\n\
          Models: {models}\n\
          (any exported AOT bundle directory under artifacts/ also works)\n\n\
          Flags accept --flag value and --flag=value; unknown flags error \
@@ -1140,8 +1272,20 @@ fn print_help() {
          responses stay bit-identical to single-process serving.  \
          `bench-serve --replicas N` proves that under load.\n\
          Benchmarks: `bench` times fwd/bwd/infer per model family at 1 and \
-         N threads — plus a tuned-profile row per family and decode \
-         tokens/sec rows for GPT bundles — and writes BENCH_9.json.\n\
+         N threads — plus a tuned-profile row per family, decode \
+         tokens/sec rows for GPT bundles and an observability-overhead \
+         block (step time with tracing off / metrics / full spans) — and \
+         writes BENCH_10.json.\n\
+         Observability: every server answers GET /metrics with Prometheus \
+         text (validate offline with `bdia metrics-check`); train/serve/\
+         generate take --trace-out <file> to export Chrome trace-event \
+         JSON (open in a trace viewer); `bdia trace` merges per-rank files \
+         onto rank 0's clock using offsets measured at rendezvous, and \
+         --require fwd,bwd,... gates CI on span coverage.  Requests carry \
+         an X-Request-Id (client-supplied or minted) echoed in responses, \
+         error bodies and fleet replica spans.  Tracing and metrics never \
+         feed timestamps into compute — bytes stay bit-identical with \
+         observability fully enabled.\n\
          Tuning: `tune` benchmarks candidate kernel parameters (k-panel \
          size, task grain, inner-loop unroll, cached weight transpose) on \
          the live pool for one bundle's hot-path shapes and persists the \

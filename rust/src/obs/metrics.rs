@@ -1,0 +1,333 @@
+//! Lock-light metrics core: counters, gauges and fixed-bucket histograms.
+//!
+//! Every cell is a relaxed `AtomicU64` behind an `Arc`, so recording on the
+//! hot path is one `fetch_add` — no locks, no allocation.  A [`Registry`]
+//! owns the name → metric table (a mutex-guarded map touched only at
+//! registration and render time) and renders everything in Prometheus text
+//! exposition format for `GET /metrics`.
+//!
+//! Histograms use fixed power-of-two bucket bounds (1 µs, 2 µs, …,
+//! 2^27 µs ≈ 134 s, plus `+Inf`), so bucket boundaries are identical
+//! across runs and processes by construction — merged dashboards can never
+//! see skewed buckets.  Rendering computes the cumulative `le` series and
+//! the `_count` line from the same cells, so `+Inf == count` holds even
+//! while other threads are recording.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of finite histogram buckets; bucket `i` counts observations
+/// `<= 2^i` (microseconds for the latency/span histograms in-tree).
+pub const HISTOGRAM_BUCKETS: usize = 28;
+
+/// Upper bound of finite bucket `i`: `2^i`.
+pub fn bucket_bound(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Smallest bucket whose bound covers `v` (the overflow cell for values
+/// beyond the last finite bound).
+fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        return 0;
+    }
+    let i = 64 - (v - 1).leading_zeros() as usize;
+    i.min(HISTOGRAM_BUCKETS)
+}
+
+/// Monotonic counter handle; clones share the same cell.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge handle: a value that can move both ways; clones share the cell.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Wrapping decrement (mirrors the `fetch_sub` the bespoke counters
+    /// used before the registry).
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramCells {
+    /// One cell per finite bucket plus a final overflow (`+Inf`) cell.
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS + 1],
+    sum: AtomicU64,
+}
+
+/// Fixed-bucket histogram handle; clones share the cells.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCells>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(HistogramCells {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total observations (summed over the bucket cells).
+    pub fn count(&self) -> u64 {
+        self.0.buckets.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts (not cumulative): finite buckets then overflow.
+    pub fn cells(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Entry {
+    help: &'static str,
+    metric: Metric,
+}
+
+/// A named collection of metrics rendered together.  Registration is
+/// get-or-create: asking for an existing name returns a handle to the same
+/// cells, so independent call sites can share a metric safely.
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get or register a counter.  Panics if `name` is already registered
+    /// as a different metric kind (a programming error, not input).
+    pub fn counter(&self, name: &str, help: &'static str) -> Counter {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help,
+            metric: Metric::Counter(Counter::default()),
+        });
+        match &e.metric {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Get or register a gauge (same sharing/panic rules as [`counter`]).
+    ///
+    /// [`counter`]: Registry::counter
+    pub fn gauge(&self, name: &str, help: &'static str) -> Gauge {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help,
+            metric: Metric::Gauge(Gauge::default()),
+        });
+        match &e.metric {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Get or register a histogram (same sharing/panic rules as
+    /// [`counter`]).
+    ///
+    /// [`counter`]: Registry::counter
+    pub fn histogram(&self, name: &str, help: &'static str) -> Histogram {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help,
+            metric: Metric::Histogram(Histogram::default()),
+        });
+        match &e.metric {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Render every metric in Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    /// Append the exposition to `out` (lets `/metrics` concatenate the
+    /// server registry with the process-wide one).
+    pub fn render_into(&self, out: &mut String) {
+        let m = self.inner.lock().unwrap();
+        for (name, e) in m.iter() {
+            let kind = match &e.metric {
+                Metric::Counter(_) => "counter",
+                Metric::Gauge(_) => "gauge",
+                Metric::Histogram(_) => "histogram",
+            };
+            let _ = writeln!(out, "# HELP {name} {}", e.help);
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            match &e.metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let cells = h.cells();
+                    let mut acc = 0u64;
+                    for (i, c) in cells.iter().take(HISTOGRAM_BUCKETS).enumerate() {
+                        acc += c;
+                        let _ = writeln!(
+                            out,
+                            "{name}_bucket{{le=\"{}\"}} {acc}",
+                            bucket_bound(i)
+                        );
+                    }
+                    acc += cells[HISTOGRAM_BUCKETS];
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {acc}");
+                    let _ = writeln!(out, "{name}_sum {}", h.sum());
+                    let _ = writeln!(out, "{name}_count {acc}");
+                }
+            }
+        }
+    }
+}
+
+/// The process-wide registry (workspace counters, span histograms, …).
+/// Per-server registries exist separately so concurrent servers in one
+/// process never share request counters.
+pub fn global() -> &'static Registry {
+    static G: OnceLock<Registry> = OnceLock::new();
+    G.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 27), HISTOGRAM_BUCKETS - 1);
+        assert_eq!(bucket_index((1 << 27) + 1), HISTOGRAM_BUCKETS);
+        assert_eq!(bucket_index(u64::MAX), HISTOGRAM_BUCKETS);
+    }
+
+    #[test]
+    fn histogram_render_satisfies_exposition_invariants() {
+        let r = Registry::new();
+        let h = r.histogram("t_us", "test histogram");
+        for v in [0u64, 1, 2, 3, 100, 1 << 30] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 106 + (1 << 30));
+        let text = r.render();
+        crate::obs::prom::check(&text).expect("valid exposition");
+        // cumulative +Inf bucket equals the _count line by construction
+        assert!(text.contains("t_us_bucket{le=\"+Inf\"} 6"), "{text}");
+        assert!(text.contains("t_us_count 6"), "{text}");
+    }
+
+    #[test]
+    fn get_or_create_shares_the_cell() {
+        let r = Registry::new();
+        let a = r.counter("c_total", "test counter");
+        let b = r.counter("c_total", "test counter");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = r.gauge("g", "test gauge");
+        g.set(5);
+        g.inc();
+        g.dec();
+        assert_eq!(r.gauge("g", "test gauge").get(), 5);
+    }
+
+    #[test]
+    fn bucket_bounds_stable_across_instances() {
+        // fixed power-of-two bounds: two independently built histograms
+        // render identical `le` label sequences regardless of the data
+        let r1 = Registry::new();
+        let r2 = Registry::new();
+        r1.histogram("h_us", "test").observe(7);
+        r2.histogram("h_us", "test").observe(9_000_000);
+        let les = |t: &str| -> Vec<String> {
+            t.lines()
+                .filter(|l| l.starts_with("h_us_bucket"))
+                .map(|l| l.split('"').nth(1).unwrap().to_string())
+                .collect()
+        };
+        assert_eq!(les(&r1.render()), les(&r2.render()));
+    }
+
+    #[test]
+    fn counters_and_gauges_render_as_single_samples() {
+        let r = Registry::new();
+        r.counter("reqs_total", "requests").add(7);
+        r.gauge("active", "active sessions").set(2);
+        let text = r.render();
+        let e = crate::obs::prom::check(&text).expect("valid exposition");
+        assert_eq!(e.families, 2);
+        assert!(text.contains("# TYPE reqs_total counter"), "{text}");
+        assert!(text.contains("reqs_total 7"), "{text}");
+        assert!(text.contains("# TYPE active gauge"), "{text}");
+        assert!(text.contains("active 2"), "{text}");
+    }
+}

@@ -1,0 +1,123 @@
+//! # `bdia::obs` — metrics registry, span tracing, request correlation
+//!
+//! One observability substrate for every layer, provably non-interfering
+//! with the bit-exact numerics:
+//!
+//! * [`metrics`] — lock-light counters/gauges/fixed-bucket histograms
+//!   (atomic u64 cells).  [`serve`](crate::serve) and
+//!   [`fleet`](crate::fleet) stats render both their legacy `/stats` JSON
+//!   and the new `GET /metrics` Prometheus exposition *from* registries;
+//!   the workspace-arena counters live in the process-wide
+//!   [`metrics::global`] registry.
+//! * [`mod@span`] — `obs::span!("train_step", step = s)` RAII scopes behind a
+//!   single atomic level flag: off (default, near-zero cost), metrics-only
+//!   (per-name duration histograms), or full spans (bounded ring +
+//!   Chrome trace-event export via `--trace-out`).
+//! * [`trace`] — merges per-rank trace files onto rank 0's clock using
+//!   offsets exchanged over the rendezvous link (`bdia trace`).
+//! * [`prom`] — the in-repo Prometheus text checker behind
+//!   `bdia metrics-check` and the exposition tests.
+//!
+//! Correlation: [`fresh_request_id`] mints ids at the serving front door;
+//! they are echoed in responses/error bodies and carried over the fleet
+//! backplane so router and replica spans join up in a merged trace.
+//!
+//! Timestamps flow only into histogram cells and the span ring — never
+//! into any compute path — so `tests/determinism.rs` and
+//! `tests/dist_training.rs` run bit-exact with tracing fully enabled.
+
+pub mod metrics;
+pub mod prom;
+pub mod span;
+pub mod trace;
+
+pub use metrics::{global, Counter, Gauge, Histogram, Registry};
+pub use span::{
+    chrome_trace_json, clock_offset_us, export_chrome_trace, level, now_us, rank,
+    reset_trace, set_clock_offset_us, set_level, set_rank, snapshot, Span, SpanEvent,
+    METRICS, OFF, SPANS,
+};
+// `obs::span!(…)` — the macro is exported at the crate root by
+// `#[macro_export]`; re-export it under its natural path too.
+pub use crate::span;
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Open a named span over the enclosing scope:
+///
+/// ```
+/// let _span = bdia::obs::span!("train_step", step = 7, phase = "fwd");
+/// ```
+///
+/// Values render through `Display`; numeric values stay JSON numbers,
+/// everything else becomes a JSON string.  Key/value arguments are only
+/// evaluated at the full-tracing level.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::Span::enter($name, String::new)
+    };
+    ($name:expr, $($key:ident = $val:expr),+ $(,)?) => {
+        $crate::obs::Span::enter($name, || {
+            let mut args = String::new();
+            $(
+                if !args.is_empty() {
+                    args.push_str(", ");
+                }
+                args.push('"');
+                args.push_str(stringify!($key));
+                args.push_str("\": ");
+                args.push_str(&$crate::obs::json_scalar(&format!("{}", $val)));
+            )+
+            args
+        })
+    };
+}
+
+/// Mint a process-unique request id (used when the client did not supply
+/// an `X-Request-Id` header).
+pub fn fresh_request_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("r{:x}-{seq:x}", now_us())
+}
+
+/// Render one span-macro argument as a JSON scalar: plain numbers pass
+/// through, everything else is quoted with JSON string escaping.
+pub fn json_scalar(s: &str) -> String {
+    let numeric = s.parse::<f64>().map(f64::is_finite).unwrap_or(false)
+        && s.bytes().next().is_some_and(|b| b == b'-' || b.is_ascii_digit());
+    if numeric {
+        return s.to_string();
+    }
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_ids_are_unique_and_url_safe() {
+        let a = fresh_request_id();
+        let b = fresh_request_id();
+        assert_ne!(a, b);
+        for id in [&a, &b] {
+            assert!(id.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'), "{id}");
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Tiny Prometheus text-exposition checker.
+//!
+//! No scraper is available offline, so tests and CI validate `/metrics`
+//! output with this in-repo checker (`bdia metrics-check`): every sample
+//! needs a preceding `# TYPE`, every typed family a `# HELP`, and
+//! histograms must render a non-decreasing cumulative bucket series whose
+//! final `+Inf` bucket equals the `_count` line.
+
+use anyhow::{bail, ensure, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Summary returned by [`check`].
+#[derive(Clone, Copy, Debug)]
+pub struct Exposition {
+    /// `# TYPE`-declared metric families.
+    pub families: usize,
+    /// Sample lines.
+    pub samples: usize,
+}
+
+fn valid_name(s: &str) -> bool {
+    let head = s.bytes().next().is_some_and(|b| b.is_ascii_alphabetic() || b == b'_');
+    head && s.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b':')
+}
+
+#[derive(Default)]
+struct HistAcc {
+    /// `(le, cumulative count)` in order of appearance.
+    buckets: Vec<(String, f64)>,
+    sum: bool,
+    count: Option<f64>,
+}
+
+/// Validate a Prometheus text exposition document.
+pub fn check(text: &str) -> Result<Exposition> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut helps: BTreeSet<String> = BTreeSet::new();
+    let mut hists: BTreeMap<String, HistAcc> = BTreeMap::new();
+    let mut samples = 0usize;
+    for (i, raw) in text.lines().enumerate() {
+        let n = i + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = match rest.split_once(' ') {
+                Some(p) => p,
+                None => bail!("line {n}: HELP without text"),
+            };
+            ensure!(valid_name(name), "line {n}: bad metric name '{name}'");
+            ensure!(!help.is_empty(), "line {n}: empty HELP text");
+            helps.insert(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = match rest.split_once(' ') {
+                Some(p) => p,
+                None => bail!("line {n}: TYPE without kind"),
+            };
+            ensure!(valid_name(name), "line {n}: bad metric name '{name}'");
+            ensure!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "line {n}: unknown metric type '{kind}'"
+            );
+            let prev = types.insert(name.to_string(), kind.to_string());
+            ensure!(prev.is_none(), "line {n}: duplicate # TYPE for '{name}'");
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // other comments are legal
+        }
+        // sample line: `name value` or `name{labels} value`
+        let (series, rest) = match line.find('{') {
+            Some(b) => {
+                let close = match line[b..].find('}') {
+                    Some(c) => b + c,
+                    None => bail!("line {n}: unclosed label set"),
+                };
+                (&line[..close + 1], &line[close + 1..])
+            }
+            None => match line.find(' ') {
+                Some(sp) => (&line[..sp], &line[sp..]),
+                None => bail!("line {n}: sample without value"),
+            },
+        };
+        let value_str = match rest.split_whitespace().next() {
+            Some(v) => v,
+            None => bail!("line {n}: sample without value"),
+        };
+        let value: f64 = match value_str.parse() {
+            Ok(v) => v,
+            Err(_) => bail!("line {n}: bad sample value '{value_str}'"),
+        };
+        let (name, labels) = match series.split_once('{') {
+            Some((nm, rest)) => (nm, Some(rest.trim_end_matches('}'))),
+            None => (series, None),
+        };
+        ensure!(valid_name(name), "line {n}: bad metric name '{name}'");
+        samples += 1;
+        let family = if types.contains_key(name) {
+            name.to_string()
+        } else {
+            let mut found = None;
+            for suffix in ["_bucket", "_sum", "_count"] {
+                if let Some(base) = name.strip_suffix(suffix) {
+                    if types.get(base).map(String::as_str) == Some("histogram") {
+                        found = Some(base.to_string());
+                        break;
+                    }
+                }
+            }
+            match found {
+                Some(f) => f,
+                None => bail!("line {n}: sample '{name}' has no preceding # TYPE"),
+            }
+        };
+        if types.get(&family).map(String::as_str) == Some("histogram") {
+            let acc = hists.entry(family.clone()).or_default();
+            if name.ends_with("_bucket") {
+                let le = labels
+                    .and_then(|l| l.split("le=\"").nth(1))
+                    .and_then(|r| r.split('"').next());
+                match le {
+                    Some(le) => acc.buckets.push((le.to_string(), value)),
+                    None => bail!("line {n}: histogram bucket without le label"),
+                }
+            } else if name.ends_with("_sum") {
+                acc.sum = true;
+            } else if name.ends_with("_count") {
+                acc.count = Some(value);
+            } else {
+                bail!("line {n}: bare sample for histogram family '{family}'");
+            }
+        }
+    }
+    for (name, kind) in &types {
+        ensure!(helps.contains(name), "metric '{name}' has # TYPE but no # HELP");
+        if kind != "histogram" {
+            continue;
+        }
+        let acc = match hists.get(name) {
+            Some(a) => a,
+            None => bail!("histogram '{name}' has no samples"),
+        };
+        ensure!(!acc.buckets.is_empty(), "histogram '{name}' has no buckets");
+        let mut prev = -1.0f64;
+        for (le, v) in &acc.buckets {
+            ensure!(
+                *v >= prev,
+                "histogram '{name}': cumulative bucket le=\"{le}\" decreases"
+            );
+            prev = *v;
+        }
+        let (last_le, last_v) = acc.buckets.last().unwrap();
+        ensure!(
+            last_le == "+Inf",
+            "histogram '{name}': last bucket is le=\"{last_le}\", not +Inf"
+        );
+        let count = match acc.count {
+            Some(c) => c,
+            None => bail!("histogram '{name}' missing _count"),
+        };
+        ensure!(
+            (*last_v - count).abs() < 0.5,
+            "histogram '{name}': +Inf bucket {last_v} != count {count}"
+        );
+        ensure!(acc.sum, "histogram '{name}' missing _sum");
+    }
+    ensure!(samples > 0, "exposition has no samples");
+    Ok(Exposition { families: types.len(), samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_well_formed_exposition() {
+        let text = "# HELP reqs_total requests\n# TYPE reqs_total counter\n\
+                    reqs_total 5\n\
+                    # HELP lat_us latency\n# TYPE lat_us histogram\n\
+                    lat_us_bucket{le=\"1\"} 1\nlat_us_bucket{le=\"2\"} 3\n\
+                    lat_us_bucket{le=\"+Inf\"} 4\nlat_us_sum 9\nlat_us_count 4\n\
+                    # HELP calls_total calls\n# TYPE calls_total counter\n\
+                    calls_total{exec=\"block_fwd\"} 2\n";
+        let e = check(text).unwrap();
+        assert_eq!(e.families, 3);
+        assert_eq!(e.samples, 7);
+    }
+
+    #[test]
+    fn rejects_sample_without_type() {
+        assert!(check("orphan 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_type_without_help() {
+        assert!(check("# TYPE x counter\nx 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_decreasing_buckets() {
+        let text = "# HELP h x\n# TYPE h histogram\n\
+                    h_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\n\
+                    h_bucket{le=\"+Inf\"} 5\nh_sum 1\nh_count 5\n";
+        assert!(check(text).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_inf_and_count_mismatch() {
+        let no_inf = "# HELP h x\n# TYPE h histogram\n\
+                      h_bucket{le=\"1\"} 1\nh_sum 1\nh_count 1\n";
+        assert!(check(no_inf).is_err());
+        let mismatch = "# HELP h x\n# TYPE h histogram\n\
+                        h_bucket{le=\"1\"} 1\nh_bucket{le=\"+Inf\"} 1\n\
+                        h_sum 1\nh_count 2\n";
+        assert!(check(mismatch).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_names_and_values() {
+        assert!(check("# HELP 9bad x\n# TYPE 9bad counter\n9bad 1\n").is_err());
+        assert!(check("# HELP x y\n# TYPE x counter\nx one\n").is_err());
+        assert!(check("# HELP x y\n# TYPE x pie\nx 1\n").is_err());
+        assert!(check("").is_err());
+    }
+}

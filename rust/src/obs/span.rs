@@ -1,0 +1,316 @@
+//! Span tracing: RAII scopes with monotonic timestamps, a bounded ring of
+//! completed spans, and Chrome trace-event JSON export.
+//!
+//! The whole machinery sits behind one atomic level flag:
+//!
+//! * [`OFF`] (default) — `span!` is a single relaxed load; the clock is
+//!   never read.
+//! * [`METRICS`] — span durations feed per-name histograms
+//!   (`bdia_span_us_<name>`) in the process-wide registry; nothing is
+//!   retained per event.
+//! * [`SPANS`] — durations plus full span events (name, timestamps,
+//!   thread, args) land in a bounded ring for `--trace-out` export.
+//!
+//! Non-interference is by construction: timestamps flow only into
+//! histogram cells and the ring — never into any compute path — so the
+//! determinism suites pass bit-exact with tracing fully enabled.
+//!
+//! Span guards nest lexically per thread (the thread-local span stack is
+//! the call stack itself); each thread gets a stable small `tid` so the
+//! exported trace groups rows per thread, and the process's dist rank
+//! becomes the Chrome `pid`, letting `bdia trace` merge per-rank files
+//! onto one timeline.
+
+use super::metrics::{global, Histogram};
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Tracing disabled: `span!` costs one relaxed load, no clock reads.
+pub const OFF: u8 = 0;
+/// Span durations feed per-name histograms in the global registry.
+pub const METRICS: u8 = 1;
+/// Durations plus full span events in the bounded ring (trace export).
+pub const SPANS: u8 = 2;
+
+/// Ring capacity; the oldest events are dropped (and counted) beyond it.
+const RING_CAP: usize = 1 << 16;
+
+static LEVEL: AtomicU8 = AtomicU8::new(OFF);
+static RANK: AtomicU64 = AtomicU64::new(0);
+static CLOCK_OFFSET_US: AtomicI64 = AtomicI64::new(0);
+
+/// Set the process-wide tracing level ([`OFF`]/[`METRICS`]/[`SPANS`]).
+pub fn set_level(level: u8) {
+    LEVEL.store(level.min(SPANS), Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the process-wide monotonic epoch (first use).
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Tag exported traces with this process's dist rank (the Chrome `pid`).
+pub fn set_rank(rank: u64) {
+    RANK.store(rank, Ordering::Relaxed);
+}
+
+pub fn rank() -> u64 {
+    RANK.load(Ordering::Relaxed)
+}
+
+/// Offset (µs) to add to local timestamps to land on rank 0's clock,
+/// measured over the rendezvous link (`Collective::clock_sync`).
+pub fn set_clock_offset_us(off: i64) {
+    CLOCK_OFFSET_US.store(off, Ordering::Relaxed);
+}
+
+pub fn clock_offset_us() -> i64 {
+    CLOCK_OFFSET_US.load(Ordering::Relaxed)
+}
+
+/// Stable small id for the current thread (trace row grouping).
+fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// One completed span, as stored in the ring.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Start, µs on the local monotonic clock.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Thread id (stable small integer per OS thread).
+    pub tid: u64,
+    /// Extra `"key": value` pairs, pre-rendered as a JSON fragment.
+    pub args: Option<String>,
+}
+
+struct TraceState {
+    ring: VecDeque<SpanEvent>,
+    dropped: u64,
+    /// Cached histogram handles so span end is one map lookup, not a
+    /// registry registration.
+    hists: BTreeMap<&'static str, Histogram>,
+}
+
+fn state() -> &'static Mutex<TraceState> {
+    static S: OnceLock<Mutex<TraceState>> = OnceLock::new();
+    S.get_or_init(|| {
+        Mutex::new(TraceState {
+            ring: VecDeque::new(),
+            dropped: 0,
+            hists: BTreeMap::new(),
+        })
+    })
+}
+
+/// RAII span guard: records its duration (and, at [`SPANS`], a ring
+/// event) when dropped.  Construct through the [`crate::span!`] macro.
+#[must_use = "a span measures the scope it lives in"]
+pub struct Span {
+    name: &'static str,
+    t0: u64,
+    args: Option<String>,
+    level: u8,
+}
+
+impl Span {
+    /// `args` renders lazily — and only at [`SPANS`] level — to a
+    /// `"key": value, …` JSON-object fragment (possibly empty).
+    pub fn enter(name: &'static str, args: impl FnOnce() -> String) -> Span {
+        let level = level();
+        if level == OFF {
+            return Span { name, t0: 0, args: None, level };
+        }
+        let args = if level >= SPANS {
+            let a = args();
+            if a.is_empty() { None } else { Some(a) }
+        } else {
+            None
+        };
+        Span { name, t0: now_us(), args, level }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.level == OFF {
+            return;
+        }
+        let dur = now_us().saturating_sub(self.t0);
+        let mut st = state().lock().unwrap();
+        let h = st.hists.entry(self.name).or_insert_with(|| {
+            global().histogram(
+                &format!("bdia_span_us_{}", self.name),
+                "span duration in microseconds",
+            )
+        });
+        h.observe(dur);
+        if self.level >= SPANS {
+            if st.ring.len() >= RING_CAP {
+                st.ring.pop_front();
+                st.dropped += 1;
+            }
+            st.ring.push_back(SpanEvent {
+                name: self.name,
+                ts_us: self.t0,
+                dur_us: dur,
+                tid: tid(),
+                args: self.args.take(),
+            });
+        }
+    }
+}
+
+/// Completed spans currently in the ring (oldest first) plus how many
+/// events the bounded ring has dropped.
+pub fn snapshot() -> (Vec<SpanEvent>, u64) {
+    let st = state().lock().unwrap();
+    (st.ring.iter().cloned().collect(), st.dropped)
+}
+
+/// Clear the ring (span histograms persist — they are registry metrics).
+pub fn reset_trace() {
+    let mut st = state().lock().unwrap();
+    st.ring.clear();
+    st.dropped = 0;
+}
+
+/// Render the ring as Chrome trace-event JSON (open in `chrome://tracing`
+/// or Perfetto).  `metadata` carries the rank and the measured clock
+/// offset so `bdia trace` can merge per-rank files onto one timeline.
+pub fn chrome_trace_json() -> String {
+    let (events, dropped) = snapshot();
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"metadata\": {{\"rank\": {}, \"clock_offset_us\": {}, \
+         \"dropped\": {dropped}}}, \"traceEvents\": [",
+        rank(),
+        clock_offset_us()
+    );
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(
+            out,
+            "{{\"name\": \"{}\", \"cat\": \"bdia\", \"ph\": \"X\", \
+             \"ts\": {}, \"dur\": {}, \"pid\": {}, \"tid\": {}, \
+             \"args\": {{{}}}}}",
+            e.name,
+            e.ts_us,
+            e.dur_us,
+            rank(),
+            e.tid,
+            e.args.as_deref().unwrap_or("")
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write the Chrome trace to `path` (the CLI's `--trace-out`).
+pub fn export_chrome_trace(path: &Path) -> Result<()> {
+    std::fs::write(path, chrome_trace_json())
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+/// Serialize tests that mutate the process-global tracing level.
+#[cfg(test)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::Json;
+
+    #[test]
+    fn off_level_records_nothing() {
+        let _l = test_lock();
+        let prev = level();
+        set_level(OFF);
+        reset_trace();
+        {
+            let _s = crate::span!("obs_test_off");
+        }
+        let (events, _) = snapshot();
+        assert!(events.iter().all(|e| e.name != "obs_test_off"));
+        set_level(prev);
+    }
+
+    #[test]
+    fn full_level_records_args_and_exports_valid_chrome_json() {
+        let _l = test_lock();
+        let prev = level();
+        set_level(SPANS);
+        {
+            let _s = crate::span!("obs_test_span", step = 7, tag = "x y");
+        }
+        let (events, _) = snapshot();
+        let ev = events.iter().rev().find(|e| e.name == "obs_test_span").expect("recorded");
+        assert!(ev.tid >= 1);
+        let args = ev.args.as_deref().unwrap();
+        assert!(args.contains("\"step\": 7"), "{args}");
+        assert!(args.contains("\"tag\": \"x y\""), "{args}");
+        let doc = Json::parse(&chrome_trace_json()).expect("valid trace json");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            evs.iter().map(|e| e.get("name").unwrap().as_str().unwrap()).collect();
+        assert!(names.contains(&"obs_test_span"), "{names:?}");
+        let meta = doc.get("metadata").unwrap();
+        assert!(meta.get("clock_offset_us").is_ok());
+        set_level(prev);
+    }
+
+    #[test]
+    fn metrics_level_feeds_histogram_without_ring_events() {
+        let _l = test_lock();
+        let prev = level();
+        set_level(METRICS);
+        reset_trace();
+        {
+            let _s = crate::span!("obs_test_metrics_only", n = 1);
+        }
+        let (events, _) = snapshot();
+        assert!(events.iter().all(|e| e.name != "obs_test_metrics_only"));
+        let name = "bdia_span_us_obs_test_metrics_only";
+        let h = global().histogram(name, "span duration in microseconds");
+        assert!(h.count() >= 1);
+        set_level(prev);
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn json_scalar_quotes_non_numbers() {
+        assert_eq!(crate::obs::json_scalar("42"), "42");
+        assert_eq!(crate::obs::json_scalar("-1.5e3"), "-1.5e3");
+        assert_eq!(crate::obs::json_scalar("+5"), "\"+5\"");
+        assert_eq!(crate::obs::json_scalar("nan"), "\"nan\"");
+        assert_eq!(crate::obs::json_scalar("a\"b\\c"), "\"a\\\"b\\\\c\"");
+    }
+}

@@ -1,0 +1,127 @@
+//! Merge per-rank Chrome trace files onto one timeline (`bdia trace`).
+//!
+//! Each `--trace-out` file carries `metadata.clock_offset_us`, the offset
+//! measured over the rendezvous link that maps this rank's monotonic
+//! clock onto rank 0's ([`crate::dist::Collective::clock_sync`]).  Merging
+//! shifts every event by its file's offset, so spans that truly overlapped
+//! in wall time (both ranks inside the same all-reduce) overlap in the
+//! merged view.
+
+use crate::config::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Merge per-rank Chrome trace JSON documents (as produced by
+/// `--trace-out`) into one document whose timestamps are aligned to rank
+/// 0's clock via each file's `metadata.clock_offset_us`.
+pub fn merge(texts: &[String]) -> Result<String> {
+    ensure!(!texts.is_empty(), "no trace files to merge");
+    let mut events: Vec<(f64, Json)> = Vec::new();
+    let mut ranks = BTreeSet::new();
+    for (i, text) in texts.iter().enumerate() {
+        let doc = Json::parse(text).with_context(|| format!("parsing trace file #{i}"))?;
+        let meta = doc.get("metadata")?;
+        let rank = meta.get("rank")?.as_usize()?;
+        ensure!(ranks.insert(rank), "duplicate trace for rank {rank}");
+        let offset = meta.get("clock_offset_us")?.as_i64()? as f64;
+        for ev in doc.get("traceEvents")?.as_arr()? {
+            let mut m = ev.as_obj()?.clone();
+            let ts = ev.get("ts")?.as_f64()? + offset;
+            m.insert("ts".to_string(), Json::Num(ts));
+            events.push((ts, Json::Obj(m)));
+        }
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let meta = BTreeMap::from([("ranks".to_string(), Json::Num(ranks.len() as f64))]);
+    let doc = Json::Obj(BTreeMap::from([
+        ("metadata".to_string(), Json::Obj(meta)),
+        (
+            "traceEvents".to_string(),
+            Json::Arr(events.into_iter().map(|(_, e)| e).collect()),
+        ),
+    ]));
+    Ok(doc.to_string())
+}
+
+/// Assert the merged trace has at least one span with each required name
+/// for every `pid` (rank) present — the CI gate behind
+/// `bdia trace --require fwd,bwd,…`.
+pub fn require_spans(merged: &str, required: &[String]) -> Result<()> {
+    let doc = Json::parse(merged).context("parsing merged trace")?;
+    let events = doc.get("traceEvents")?.as_arr()?;
+    ensure!(!events.is_empty(), "merged trace has no events");
+    let mut seen: BTreeMap<usize, BTreeSet<&str>> = BTreeMap::new();
+    for ev in events {
+        let pid = ev.get("pid")?.as_usize()?;
+        let name = ev.get("name")?.as_str()?;
+        seen.entry(pid).or_default().insert(name);
+    }
+    for (pid, names) in &seen {
+        for want in required {
+            if !names.contains(want.as_str()) {
+                bail!("rank {pid}: no '{want}' span in the merged trace");
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rank_file(rank: usize, offset_us: i64, name: &str, ts: u64, dur: u64) -> String {
+        format!(
+            "{{\"metadata\": {{\"rank\": {rank}, \"clock_offset_us\": {offset_us}, \
+             \"dropped\": 0}}, \"traceEvents\": [{{\"name\": \"{name}\", \
+             \"cat\": \"bdia\", \"ph\": \"X\", \"ts\": {ts}, \"dur\": {dur}, \
+             \"pid\": {rank}, \"tid\": 1, \"args\": {{\"step\": 0}}}}]}}"
+        )
+    }
+
+    #[test]
+    fn merge_aligns_timestamps_so_true_overlaps_survive() {
+        // rank 1's clock started 1000 µs *after* rank 0's: a span at local
+        // ts 200 on rank 1 really began at 1200 on rank 0's clock.  Both
+        // ranks sat in the same all-reduce over [1200, 1500] wall time.
+        let r0 = rank_file(0, 0, "all_reduce", 1150, 400);
+        let r1 = rank_file(1, 1000, "all_reduce", 200, 300);
+        let merged = merge(&[r0, r1]).unwrap();
+        let doc = Json::parse(&merged).unwrap();
+        assert_eq!(doc.get("metadata").unwrap().get("ranks").unwrap().as_usize().unwrap(), 2);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        // events come out sorted by aligned start time
+        let (s0, d0) = span_of(&evs[0]);
+        let (s1, d1) = span_of(&evs[1]);
+        assert!(s0 <= s1);
+        // aligned intervals [1150, 1550] and [1200, 1500] overlap
+        assert!(s1 < s0 + d0 && s0 < s1 + d1, "spans must overlap after alignment");
+    }
+
+    fn span_of(ev: &Json) -> (f64, f64) {
+        (ev.get("ts").unwrap().as_f64().unwrap(), ev.get("dur").unwrap().as_f64().unwrap())
+    }
+
+    #[test]
+    fn require_spans_checks_every_rank() {
+        let r0 = rank_file(0, 0, "fwd", 10, 5);
+        let r1 = rank_file(1, 0, "bwd", 10, 5);
+        let merged = merge(&[r0, r1]).unwrap();
+        assert!(require_spans(&merged, &["fwd".to_string()]).is_err());
+        assert!(require_spans(&merged, &[]).is_ok());
+        let a = rank_file(0, 0, "fwd", 10, 5);
+        let b = rank_file(1, -3, "fwd", 20, 5);
+        let both = merge(&[a, b]).unwrap();
+        assert!(require_spans(&both, &["fwd".to_string()]).is_ok());
+        assert!(require_spans(&both, &["nope".to_string()]).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_duplicate_ranks_and_garbage() {
+        let r0 = rank_file(0, 0, "fwd", 10, 5);
+        assert!(merge(&[r0.clone(), r0]).is_err());
+        assert!(merge(&["not json".to_string()]).is_err());
+        assert!(merge(&[]).is_err());
+    }
+}

@@ -107,6 +107,29 @@ pub trait Backend {
     ) -> Result<Box<dyn CompiledExec>>;
 }
 
+/// Map an executable name to the `&'static str` a [`crate::obs`] span
+/// requires (span names are interned constants so the hot path never
+/// allocates).  Unknown names — custom bundles — fold into `exec_other`.
+fn static_op_name(name: &str) -> &'static str {
+    match name {
+        "embed_fwd" => "embed_fwd",
+        "enc_embed_fwd" => "enc_embed_fwd",
+        "block_fwd" => "block_fwd",
+        "enc_block_fwd" => "enc_block_fwd",
+        "block_vjp" => "block_vjp",
+        "enc_block_vjp" => "enc_block_vjp",
+        "head_loss_fwd" => "head_loss_fwd",
+        "head_loss_vjp" => "head_loss_vjp",
+        "embed_vjp" => "embed_vjp",
+        "enc_embed_vjp" => "enc_embed_vjp",
+        "model_infer" => "model_infer",
+        "model_infer_ex" => "model_infer_ex",
+        "model_decode_step" => "model_decode_step",
+        "model_logits" => "model_logits",
+        _ => "exec_other",
+    }
+}
+
 /// One compiled executable plus its ABI spec.
 pub struct Exec {
     pub name: String,
@@ -139,6 +162,7 @@ impl Exec {
             );
         }
         self.calls.fetch_add(1, Ordering::Relaxed);
+        let _span = crate::span!(static_op_name(&self.name));
         let outs = self
             .imp
             .execute(params, data)

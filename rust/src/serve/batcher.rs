@@ -24,6 +24,9 @@ pub struct Job {
     pub example: Example,
     pub gamma: f32,
     pub enqueued: Instant,
+    /// Correlation id minted (or echoed) at the front door; carried into
+    /// spans, response headers and — in the fleet — the backplane frames.
+    pub request_id: String,
     pub resp: Sender<Result<(f32, f32), String>>,
 }
 
@@ -186,6 +189,7 @@ mod tests {
                 example: Example::Tok { tokens: vec![0; 4], labels: vec![0; 4] },
                 gamma,
                 enqueued: Instant::now(),
+                request_id: crate::obs::fresh_request_id(),
                 resp: tx,
             },
             rx,

@@ -203,6 +203,7 @@ pub(super) fn scheduler_loop(shared: &Arc<Shared>) {
 
 /// One `model_decode_step` call over a same-position slice of sessions.
 fn tick_slice(shared: &Arc<Shared>, jobs: &mut [GenJob]) {
+    let _span = crate::span!("generate_tick", n = jobs.len(), pos = jobs[0].session.pos());
     let t0 = Instant::now();
     let mut sessions: Vec<&mut GenSession> =
         jobs.iter_mut().map(|j| &mut j.session).collect();
@@ -241,19 +242,22 @@ pub(super) fn handle_generate(
     stream: &TcpStream,
     shared: &Arc<Shared>,
     body: &[u8],
+    rid: &str,
 ) {
     let t0 = Instant::now();
+    let _span = crate::span!("serve_request", request_id = rid, endpoint = "generate");
     if !shared.rt.has_exec("model_decode_step") {
         let body = format!(
             "{{\"error\": \"generation requires a GPT-family model; '{}' is \
-             {:?}\"}}",
+             {:?}\", \"request_id\": \"{rid}\"}}",
             shared.rt.manifest.name, shared.rt.manifest.family
         );
-        let _ = http::write_response(
+        let _ = http::write_response_with(
             stream,
             501,
             "Not Implemented",
             "application/json",
+            &[("X-Request-Id", rid.to_string())],
             body.as_bytes(),
         );
         return;
@@ -262,14 +266,20 @@ pub(super) fn handle_generate(
         shared.stats.record_error();
         shared.sink.on_request(&RequestEvent {
             latency_us: t0.elapsed().as_micros() as u64,
+            elapsed_us: crate::obs::now_us(),
             ok: false,
         });
-        let _ = http::write_response(
+        let body = format!(
+            "{{\"error\": \"{}\", \"request_id\": \"{rid}\"}}\n",
+            msg.replace('"', "'")
+        );
+        let _ = http::write_response_with(
             stream,
             status,
             reason,
             "application/json",
-            format!("{{\"error\": \"{}\"}}\n", msg.replace('"', "'")).as_bytes(),
+            &[("X-Request-Id", rid.to_string())],
+            body.as_bytes(),
         );
     };
     let (prompt, opts) = match parse_request(body) {
@@ -292,7 +302,14 @@ pub(super) fn handle_generate(
         shared.stats.gen_session_left();
         return fail(503, "Service Unavailable", "server is shutting down");
     }
-    if http::write_chunked_head(stream, 200, "OK", "application/json").is_err() {
+    let head = http::write_chunked_head_with(
+        stream,
+        200,
+        "OK",
+        "application/json",
+        &[("X-Request-Id", rid.to_string())],
+    );
+    if head.is_err() {
         return; // scheduler notices the dropped receiver on next token
     }
     loop {
@@ -302,6 +319,7 @@ pub(super) fn handle_generate(
                     index,
                     token,
                     latency_us: us,
+                    elapsed_us: crate::obs::now_us(),
                 });
                 let line = format!("{{\"index\": {index}, \"token\": {token}}}\n");
                 if http::write_chunk(stream, line.as_bytes()).is_err() {
@@ -323,7 +341,11 @@ pub(super) fn handle_generate(
                 let latency_us = t0.elapsed().as_micros() as u64;
                 shared.stats.record_request();
                 shared.stats.record_latency_us(latency_us);
-                shared.sink.on_request(&RequestEvent { latency_us, ok: true });
+                shared.sink.on_request(&RequestEvent {
+                    latency_us,
+                    elapsed_us: crate::obs::now_us(),
+                    ok: true,
+                });
                 return;
             }
             Ok(GenEvent::Failed { msg }) => {
@@ -336,6 +358,7 @@ pub(super) fn handle_generate(
                 shared.stats.record_error();
                 shared.sink.on_request(&RequestEvent {
                     latency_us: t0.elapsed().as_micros() as u64,
+                    elapsed_us: crate::obs::now_us(),
                     ok: false,
                 });
                 return;
@@ -350,6 +373,7 @@ pub(super) fn handle_generate(
                 shared.stats.record_error();
                 shared.sink.on_request(&RequestEvent {
                     latency_us: t0.elapsed().as_micros() as u64,
+                    elapsed_us: crate::obs::now_us(),
                     ok: false,
                 });
                 return;

@@ -33,6 +33,10 @@ pub struct Request {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// Client-supplied `X-Request-Id` (sanitized), if any.  Handlers echo
+    /// it instead of minting a fresh id so callers can correlate retries,
+    /// logs and spans across the router/replica split.
+    pub request_id: Option<String>,
 }
 
 /// A typed request-read failure: the status line the server should answer
@@ -121,12 +125,12 @@ pub fn read_request_capped(
         .next()
         .ok_or_else(|| HttpError::bad("request line missing path"))?
         .to_string();
-    let content_len = read_headers(&mut r)?;
+    let (content_len, request_id) = read_headers(&mut r)?;
     if content_len > max_body {
         return Err(HttpError::too_large(content_len, max_body));
     }
     let body = read_body(&mut r, content_len)?;
-    Ok(Request { method, path, body })
+    Ok(Request { method, path, body, request_id })
 }
 
 /// Incremental body read: the buffer grows with received bytes only, and a
@@ -155,25 +159,41 @@ fn read_body(
     Ok(body)
 }
 
-/// Consume header lines until the blank separator; returns Content-Length.
-fn read_headers(r: &mut impl BufRead) -> std::result::Result<usize, HttpError> {
+/// Consume header lines until the blank separator; returns
+/// `(Content-Length, sanitized X-Request-Id)`.
+fn read_headers(
+    r: &mut impl BufRead,
+) -> std::result::Result<(usize, Option<String>), HttpError> {
     let mut content_len = 0usize;
+    let mut request_id = None;
     for _ in 0..MAX_HEADERS {
         let h = read_line_capped(r)?;
         let h = h.trim();
         if h.is_empty() {
-            return Ok(content_len);
+            return Ok((content_len, request_id));
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
                 content_len = v
                     .trim()
                     .parse()
                     .map_err(|_| HttpError::bad("bad Content-Length"))?;
+            } else if k.eq_ignore_ascii_case("x-request-id") {
+                request_id = sanitize_request_id(v.trim());
             }
         }
     }
     Err(HttpError::header_overflow(format!("too many headers (> {MAX_HEADERS})")))
+}
+
+/// Accept a client-supplied request id only if it is short and URL/JSON
+/// safe; anything else is ignored and a fresh id gets minted instead.
+fn sanitize_request_id(v: &str) -> Option<String> {
+    let ok = !v.is_empty()
+        && v.len() <= 64
+        && v.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_');
+    if ok { Some(v.to_string()) } else { None }
 }
 
 /// Write a response with status, content type and body.
@@ -224,12 +244,31 @@ pub fn write_chunked_head(
     reason: &str,
     content_type: &str,
 ) -> Result<()> {
+    write_chunked_head_with(stream, status, reason, content_type, &[])
+}
+
+/// [`write_chunked_head`] with extra response headers (e.g. the
+/// `X-Request-Id` echo on the streaming `/generate` endpoint).
+pub fn write_chunked_head_with(
+    stream: &TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+) -> Result<()> {
     let mut s = stream;
-    write!(
-        s,
+    let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
-    )?;
+         Transfer-Encoding: chunked\r\nConnection: close\r\n"
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    s.write_all(head.as_bytes())?;
     s.flush()?;
     Ok(())
 }
@@ -318,13 +357,31 @@ pub fn write_request(
     path: &str,
     body: &[u8],
 ) -> Result<()> {
+    write_request_with(stream, method, path, &[], body)
+}
+
+/// [`write_request`] plus extra headers (e.g. `X-Request-Id`).
+pub fn write_request_with(
+    stream: &TcpStream,
+    method: &str,
+    path: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
     let mut s = stream;
-    write!(
-        s,
+    let mut head = format!(
         "{method} {path} HTTP/1.1\r\nHost: bdia\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n",
+         Connection: close\r\n",
         body.len()
-    )?;
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    s.write_all(head.as_bytes())?;
     s.write_all(body)?;
     s.flush()?;
     Ok(())
@@ -341,7 +398,7 @@ pub fn read_response(stream: &TcpStream) -> Result<(u16, Vec<u8>)> {
         .context("malformed status line")?
         .parse()
         .context("non-numeric status")?;
-    let content_len = read_headers(&mut r).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (content_len, _) = read_headers(&mut r).map_err(|e| anyhow::anyhow!("{e}"))?;
     ensure!(content_len <= MAX_BODY, "response body too large");
     let mut body = vec![0u8; content_len];
     r.read_exact(&mut body).context("reading response body")?;
@@ -436,6 +493,28 @@ mod tests {
         let text = String::from_utf8_lossy(&raw);
         assert!(text.starts_with("HTTP/1.1 503"), "{text}");
         assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn client_request_id_is_captured_and_sanitized() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            for expect in [Some("abc-123_X".to_string()), None, None] {
+                let (stream, _) = listener.accept().unwrap();
+                let req = read_request(&stream).unwrap();
+                assert_eq!(req.request_id, expect);
+                write_response(&stream, 200, "OK", "text/plain", b"ok").unwrap();
+            }
+        });
+        let ids = ["abc-123_X".to_string(), "no spaces".to_string(), "a".repeat(65)];
+        for id in ids {
+            let stream = TcpStream::connect(addr).unwrap();
+            let hdr = [("X-Request-Id", id)];
+            write_request_with(&stream, "POST", "/x", &hdr, b"").unwrap();
+            read_response(&stream).unwrap();
+        }
         server.join().unwrap();
     }
 

@@ -23,8 +23,10 @@
 //! token — GPT bundles only; a dedicated scheduler thread batches the
 //! decode step across concurrent sessions by position, see [`genserve`]),
 //! `GET /healthz`, `GET /stats` (JSON counters + per-exec call counts +
-//! latency percentiles + generation gauges), `POST /shutdown` (graceful
-//! drain).
+//! latency percentiles + generation gauges), `GET /metrics` (the same
+//! counters as a Prometheus text exposition), `POST /shutdown` (graceful
+//! drain).  Every response echoes an `X-Request-Id` (client-supplied or
+//! minted) and error JSON bodies carry it too.
 //!
 //! Bit-exactness: per-example outputs are slot/neighbour-invariant in the
 //! native backend, so a response from a coalesced batch is bit-identical to
@@ -256,18 +258,19 @@ impl Server {
 }
 
 /// The shared `503` contract (single-process server and fleet router):
-/// `Retry-After` header plus a JSON body naming the queue depth and cap so
-/// clients can implement informed backoff.  `cap = None` renders as 0
-/// (unbounded).
+/// `Retry-After` header plus a JSON body naming the queue depth, the cap
+/// and the request id, so clients can implement informed backoff and
+/// correlate the rejection.  `cap = None` renders as 0 (unbounded).
 pub(crate) fn write_503(
     stream: &TcpStream,
     error: &str,
     depth: usize,
     cap: Option<usize>,
+    request_id: &str,
 ) -> Result<()> {
     let body = format!(
-        "{{\"error\": \"{error}\", \"queue_depth\": {depth}, \
-         \"queue_cap\": {}, \"retry_after_s\": 1}}",
+        "{{\"error\": \"{error}\", \"request_id\": \"{request_id}\", \
+         \"queue_depth\": {depth}, \"queue_cap\": {}, \"retry_after_s\": 1}}",
         cap.unwrap_or(0)
     );
     http::write_response_with(
@@ -275,8 +278,19 @@ pub(crate) fn write_503(
         503,
         "Service Unavailable",
         "application/json",
-        &[("Retry-After", "1".to_string())],
+        &[
+            ("Retry-After", "1".to_string()),
+            ("X-Request-Id", request_id.to_string()),
+        ],
         body.as_bytes(),
+    )
+}
+
+/// JSON error body carrying the correlation id every error response echoes.
+pub(crate) fn error_body(error: &str, request_id: &str) -> String {
+    format!(
+        "{{\"error\": \"{}\", \"request_id\": \"{request_id}\"}}",
+        error.escape_default()
     )
 }
 
@@ -319,6 +333,7 @@ fn worker_loop(shared: &Arc<Shared>) {
     while let Some(batch) =
         shared.queue.next_batch(max_batch, shared.batch_window)
     {
+        let _span = crate::span!("serve_batch", n = batch.len(), gamma = batch[0].gamma);
         let gamma = batch[0].gamma;
         let examples: Vec<wire::Example> =
             batch.iter().map(|j| j.example.clone()).collect();
@@ -347,20 +362,25 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<Shared>) {
     let req = match http::read_request_capped(stream, shared.max_body) {
         Ok(r) => r,
         Err(e) => {
-            let _ = http::write_response(
+            // the request never yielded a client id (bad framing / 413):
+            // mint one so even this rejection is correlatable
+            let rid = crate::obs::fresh_request_id();
+            let _ = http::write_response_with(
                 stream,
                 e.status,
                 e.reason,
-                "text/plain",
-                format!("{e}\n").as_bytes(),
+                "application/json",
+                &[("X-Request-Id", rid.clone())],
+                error_body(&format!("{e}"), &rid).as_bytes(),
             );
             return;
         }
     };
+    let rid = req.request_id.clone().unwrap_or_else(crate::obs::fresh_request_id);
     match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/infer") => handle_infer(stream, shared, &req.body),
+        ("POST", "/infer") => handle_infer(stream, shared, &req.body, &rid),
         ("POST", "/generate") => {
-            genserve::handle_generate(stream, shared, &req.body)
+            genserve::handle_generate(stream, shared, &req.body, &rid)
         }
         ("GET", "/healthz") => {
             let body = format!(
@@ -391,6 +411,16 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<Shared>) {
                 body.as_bytes(),
             );
         }
+        ("GET", "/metrics") => {
+            let body = shared.stats.metrics_text(&shared.rt.call_counts());
+            let _ = http::write_response(
+                stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                body.as_bytes(),
+            );
+        }
         ("POST", "/shutdown") => {
             let _ = http::write_response(
                 stream,
@@ -413,8 +443,9 @@ fn handle_conn(stream: &TcpStream, shared: &Arc<Shared>) {
     }
 }
 
-fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
+fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8], rid: &str) {
     let t0 = Instant::now();
+    let _span = crate::span!("serve_request", request_id = rid);
     let m = &shared.rt.manifest;
     let (example, gamma) = match wire::decode(m.family, &m.dims, body) {
         Ok(v) => v,
@@ -422,14 +453,16 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
             shared.stats.record_error();
             shared.sink.on_request(&RequestEvent {
                 latency_us: t0.elapsed().as_micros() as u64,
+                elapsed_us: crate::obs::now_us(),
                 ok: false,
             });
-            let _ = http::write_response(
+            let _ = http::write_response_with(
                 stream,
                 400,
                 "Bad Request",
-                "text/plain",
-                format!("{e:#}\n").as_bytes(),
+                "application/json",
+                &[("X-Request-Id", rid.to_string())],
+                error_body(&format!("{e:#}"), rid).as_bytes(),
             );
             return;
         }
@@ -439,6 +472,7 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
         example,
         gamma,
         enqueued: t0,
+        request_id: rid.to_string(),
         resp: tx,
     });
     match outcome {
@@ -446,14 +480,16 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
         batcher::PushOutcome::Saturated { depth, cap } => {
             shared.sink.on_request(&RequestEvent {
                 latency_us: t0.elapsed().as_micros() as u64,
+                elapsed_us: crate::obs::now_us(),
                 ok: false,
             });
-            let _ = write_503(stream, "queue full", depth, Some(cap));
+            let _ = write_503(stream, "queue full", depth, Some(cap), rid);
             return;
         }
         batcher::PushOutcome::ShuttingDown => {
             shared.sink.on_request(&RequestEvent {
                 latency_us: t0.elapsed().as_micros() as u64,
+                elapsed_us: crate::obs::now_us(),
                 ok: false,
             });
             let _ = write_503(
@@ -461,6 +497,7 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
                 "server is shutting down",
                 shared.queue.len(),
                 shared.queue.cap(),
+                rid,
             );
             return;
         }
@@ -469,6 +506,7 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
     let latency_us = t0.elapsed().as_micros() as u64;
     shared.sink.on_request(&RequestEvent {
         latency_us,
+        elapsed_us: crate::obs::now_us(),
         ok: matches!(outcome, Ok(Ok(_))),
     });
     match outcome {
@@ -478,32 +516,35 @@ fn handle_infer(stream: &TcpStream, shared: &Arc<Shared>, body: &[u8]) {
             out[4..].copy_from_slice(&correct.to_le_bytes());
             shared.stats.record_request();
             shared.stats.record_latency_us(latency_us);
-            let _ = http::write_response(
+            let _ = http::write_response_with(
                 stream,
                 200,
                 "OK",
                 "application/octet-stream",
+                &[("X-Request-Id", rid.to_string())],
                 &out,
             );
         }
         Ok(Err(msg)) => {
             shared.stats.record_error();
-            let _ = http::write_response(
+            let _ = http::write_response_with(
                 stream,
                 500,
                 "Internal Server Error",
-                "text/plain",
-                format!("{msg}\n").as_bytes(),
+                "application/json",
+                &[("X-Request-Id", rid.to_string())],
+                error_body(&msg, rid).as_bytes(),
             );
         }
         Err(_) => {
             shared.stats.record_error();
-            let _ = http::write_response(
+            let _ = http::write_response_with(
                 stream,
                 500,
                 "Internal Server Error",
-                "text/plain",
-                b"worker pool unavailable\n",
+                "application/json",
+                &[("X-Request-Id", rid.to_string())],
+                error_body("worker pool unavailable", rid).as_bytes(),
             );
         }
     }

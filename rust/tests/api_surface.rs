@@ -294,6 +294,24 @@ fn event_sink_step_ordering_and_eval_gamma() {
     assert!(evals[..3].iter().all(|&(_, g)| g.to_bits() == 0.0f32.to_bits()));
     assert_eq!(evals[3].1.to_bits(), 0.25f32.to_bits());
 
+    // every timed event carries a monotonic elapsed_us stamp: the stream
+    // is orderable without consulting any wall clock
+    let elapsed: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Step(s) => Some(s.elapsed_us),
+            Event::Eval(ev) => Some(ev.elapsed_us),
+            Event::Request(r) => Some(r.elapsed_us),
+            Event::Token(t) => Some(t.elapsed_us),
+            Event::Checkpoint(_) => None,
+        })
+        .collect();
+    assert!(elapsed.len() >= steps.len() + evals.len());
+    assert!(
+        elapsed.windows(2).all(|w| w[0] <= w[1]),
+        "elapsed_us must be non-decreasing: {elapsed:?}"
+    );
+
     // saving emits a checkpoint event carrying the path
     let dir = tmp_dir("events");
     let ckpt = dir.join("ev.ckpt");

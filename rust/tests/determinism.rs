@@ -197,6 +197,26 @@ fn tuned_profile_training_and_inference_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn full_tracing_and_metrics_change_no_bytes() {
+    // observability is non-interfering by construction — timestamps flow
+    // into histograms and the span ring, never into compute.  Prove it:
+    // the full training + inference signature with span tracing and
+    // metrics fully enabled must bit-match the tracing-off baseline.
+    bdia::obs::set_level(bdia::obs::OFF);
+    let base = signature("smoke_gpt", "tiny_corpus", 2);
+    bdia::obs::set_level(bdia::obs::SPANS);
+    let traced = signature("smoke_gpt", "tiny_corpus", 2);
+    let (events, _dropped) = bdia::obs::snapshot();
+    bdia::obs::set_level(bdia::obs::OFF);
+    assert!(!events.is_empty(), "SPANS level recorded no spans");
+    assert!(
+        base == traced,
+        "smoke_gpt: enabling tracing+metrics changed bytes"
+    );
+    pool::set_threads(0);
+}
+
+#[test]
 fn larger_shapes_engage_the_pool_and_stay_bit_identical() {
     // the smoke bundles are small enough that some kernels stay serial;
     // vit_s10 (batch 64, 65 tokens, d 64) actually fans out.  One forward +

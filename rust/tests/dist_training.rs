@@ -189,6 +189,40 @@ fn dist_training_bit_identical_across_thread_counts() {
     }
 }
 
+/// Observability is non-interfering across the dist stack too: a 2-rank
+/// world with span tracing and metrics fully enabled — collective spans
+/// live, clock-sync frames on the wire at attach — bit-matches the plain
+/// single-process trainer, and the trainer/collective phases all left
+/// spans in the ring.
+#[test]
+fn dist_training_bit_identical_with_tracing_enabled() {
+    const ACCUM: usize = 4;
+    let mode = TrainMode::BdiaReversible;
+    bdia::obs::set_level(bdia::obs::OFF);
+    let base = plain_signature(&cfg_for(
+        "smoke_gpt",
+        "tiny_corpus",
+        mode,
+        1,
+        ACCUM,
+        2,
+    ));
+    bdia::obs::set_level(bdia::obs::SPANS);
+    let cfg = cfg_for("smoke_gpt", "tiny_corpus", mode, 2, ACCUM, 2);
+    let sigs = world_signatures(&cfg);
+    let (events, _dropped) = bdia::obs::snapshot();
+    bdia::obs::set_level(bdia::obs::OFF);
+    for (r, sig) in sigs.iter().enumerate() {
+        assert_sig_eq(sig, &base, &format!("traced rank {r}/2 vs plain"));
+    }
+    for want in ["fwd", "bwd", "all_reduce", "optimizer", "dist_reduce"] {
+        assert!(
+            events.iter().any(|e| e.name == want),
+            "no '{want}' span recorded by the traced world"
+        );
+    }
+}
+
 /// `ranks=1, grad_accum=1` through the attached-world path is exactly the
 /// legacy single-batch `train_step` — the dist layer costs nothing when
 /// it is not used.

@@ -1,0 +1,167 @@
+//! Observability integration over real sockets and real files: a live
+//! server answers `GET /metrics` with a Prometheus exposition the in-repo
+//! checker accepts (and that agrees with the legacy `/stats` JSON),
+//! request ids round-trip through response headers and error bodies, and
+//! per-rank Chrome trace files export + merge onto one clock.
+
+use bdia::config::json::Json;
+use bdia::obs::{prom, trace};
+use bdia::runtime::Runtime;
+use bdia::serve::wire::Example;
+use bdia::serve::{client, http, wire, ServeConfig, Server};
+use std::io::Read;
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn start(model: &str, workers: usize, window: Duration) -> Server {
+    Server::start(ServeConfig {
+        model: model.into(),
+        artifacts_dir: artifacts(),
+        port: 0,
+        workers,
+        batch_window: window,
+        ..ServeConfig::default()
+    })
+    .expect("server start")
+}
+
+fn gpt_example(i: usize, seq: usize, vocab: usize) -> Example {
+    let tokens: Vec<i32> =
+        (0..seq).map(|j| ((i * 7 + j * 3 + 1) % vocab) as i32).collect();
+    let labels: Vec<i32> =
+        (0..seq).map(|j| ((i * 5 + j * 2 + 2) % vocab) as i32).collect();
+    Example::Tok { tokens, labels }
+}
+
+#[test]
+fn metrics_endpoint_is_valid_prometheus_and_agrees_with_stats() {
+    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let d = rt.manifest.dims.clone();
+    let server = start("smoke_gpt", 2, Duration::from_millis(5));
+    let addr = server.addr();
+
+    // drive a few requests so every counter family has moved
+    let n = 5usize;
+    for i in 0..n {
+        let body = wire::encode(&gpt_example(i, d.seq, d.vocab), 0.0);
+        client::infer(addr, &body).unwrap();
+    }
+
+    let (status, body) = client::get(addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let e = prom::check(&text).expect("exposition must pass the checker");
+    assert!(e.families >= 5, "only {} families", e.families);
+    assert!(text.contains("bdia_requests_total"), "{text}");
+    assert!(text.contains("bdia_request_latency_us_bucket"), "{text}");
+    assert!(
+        text.contains("bdia_exec_calls_total{exec=\"model_infer_ex\"}"),
+        "{text}"
+    );
+
+    // the legacy JSON and the exposition render from the same registry
+    let (_, sbody) = client::get(addr, "/stats").unwrap();
+    let stats = Json::parse(&String::from_utf8(sbody).unwrap()).unwrap();
+    let requests = stats.get("requests").unwrap().as_usize().unwrap();
+    assert_eq!(requests, n);
+    assert!(
+        text.contains(&format!("bdia_requests_total {requests}")),
+        "/metrics and /stats disagree on requests: {text}"
+    );
+
+    client::shutdown(addr).unwrap();
+    server.join().unwrap();
+}
+
+/// One raw request/response round trip so response *headers* are visible
+/// (the library client discards them).
+fn roundtrip(addr: SocketAddr, rid: &str, body: &[u8]) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let hdr = [("X-Request-Id", rid.to_string())];
+    http::write_request_with(&stream, "POST", "/infer", &hdr, body).unwrap();
+    let mut raw = Vec::new();
+    (&stream).read_to_end(&mut raw).ok();
+    String::from_utf8_lossy(&raw).to_string()
+}
+
+#[test]
+fn request_ids_echo_through_headers_and_error_bodies() {
+    let rt = Runtime::load(&artifacts(), "smoke_gpt").unwrap();
+    let d = rt.manifest.dims.clone();
+    let server = start("smoke_gpt", 1, Duration::from_millis(1));
+    let addr = server.addr();
+
+    // happy path: the client-supplied id comes back as a response header
+    let ok_body = wire::encode(&gpt_example(0, d.seq, d.vocab), 0.0);
+    let raw = roundtrip(addr, "rid-echo-42", &ok_body);
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    assert!(raw.contains("X-Request-Id: rid-echo-42"), "{raw}");
+
+    // error path: a malformed body gets a 400 whose JSON carries the id
+    let raw = roundtrip(addr, "rid-err-7", b"\x00\x01");
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("X-Request-Id: rid-err-7"), "{raw}");
+    assert!(raw.contains("\"request_id\": \"rid-err-7\""), "{raw}");
+
+    // no id supplied: the server mints one and still echoes it
+    let stream = TcpStream::connect(addr).unwrap();
+    http::write_request(&stream, "POST", "/infer", b"\x00").unwrap();
+    let mut raw = Vec::new();
+    (&stream).read_to_end(&mut raw).ok();
+    let raw = String::from_utf8_lossy(&raw);
+    assert!(raw.contains("X-Request-Id: "), "{raw}");
+
+    client::shutdown(addr).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn per_rank_traces_export_and_merge_onto_one_clock() {
+    let dir = std::env::temp_dir()
+        .join(format!("bdia_obs_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // simulate two ranks in turn: same span name, different clock offsets
+    bdia::obs::set_level(bdia::obs::SPANS);
+    bdia::obs::reset_trace();
+    bdia::obs::set_rank(0);
+    bdia::obs::set_clock_offset_us(0);
+    {
+        let _s = bdia::span!("demo_phase", step = 1);
+    }
+    let p0 = dir.join("t.rank0.json");
+    bdia::obs::export_chrome_trace(&p0).unwrap();
+
+    bdia::obs::reset_trace();
+    bdia::obs::set_rank(1);
+    bdia::obs::set_clock_offset_us(1234);
+    {
+        let _s = bdia::span!("demo_phase", step = 1);
+    }
+    let p1 = dir.join("t.rank1.json");
+    bdia::obs::export_chrome_trace(&p1).unwrap();
+
+    bdia::obs::set_level(bdia::obs::OFF);
+    bdia::obs::set_rank(0);
+    bdia::obs::set_clock_offset_us(0);
+
+    let texts = vec![
+        std::fs::read_to_string(&p0).unwrap(),
+        std::fs::read_to_string(&p1).unwrap(),
+    ];
+    let merged = trace::merge(&texts).unwrap();
+    let doc = Json::parse(&merged).unwrap();
+    assert_eq!(
+        doc.get("metadata").unwrap().get("ranks").unwrap().as_usize().unwrap(),
+        2
+    );
+    // the CI gate accepts spans that exist on every rank, rejects others
+    trace::require_spans(&merged, &["demo_phase".to_string()]).unwrap();
+    assert!(trace::require_spans(&merged, &["missing".to_string()]).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
